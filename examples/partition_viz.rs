@@ -1,0 +1,92 @@
+//! Fig. 5 reproduction: 256 subtrees distributed among 16 partitions by
+//! the optimization-based load balancer, rendered as a colored map
+//! (ANSI) plus a PPM image.
+//!
+//!     cargo run --release --example partition_viz [uniform|clustered]
+//!
+//! The uniform case reproduces Fig. 5 (near-equal blocks); the clustered
+//! case shows the balancer concentrating ranks around the particle blobs
+//! — the behaviour the DPMTA baseline lacks.
+
+use petfmm::partition::{assign_subtrees, Strategy};
+use petfmm::proptest::Gen;
+use petfmm::quadtree::{BoxId, Domain, Quadtree, TreeCut};
+
+fn main() {
+    let dist = std::env::args().nth(1).unwrap_or_else(|| "uniform".into());
+    let mut g = Gen::new(7);
+    let particles = match dist.as_str() {
+        "clustered" => g.clustered_particles(40_000, 3),
+        _ => g.particles(40_000),
+    };
+    // Fig. 5 configuration: cut at k = 4 -> 256 subtrees, 16 partitions
+    let levels = 8u8;
+    let cut = TreeCut::new(levels, 4);
+    let tree = Quadtree::build(Domain::UNIT, levels, particles);
+    let a = assign_subtrees(&tree, &cut, 17, 16, Strategy::Optimized, 7);
+    println!("Fig. 5: {} subtrees -> {} partitions ({} particles, {dist})",
+             cut.n_subtrees(), 16, tree.n_particles());
+    println!("imbalance {:.4}, edge cut {:.3} MB, min/max {:.4}\n",
+             a.imbalance(), a.edge_cut() / 1e6, a.min_max_ratio());
+
+    // ANSI map (16 background colors)
+    let n = 1u32 << cut.cut_level;
+    for y in (0..n).rev() {
+        let mut line = String::new();
+        for x in 0..n {
+            let st = BoxId::new(cut.cut_level, x, y);
+            let r = a.part[cut.subtree_index(&st)];
+            let (bg, fg) = (40 + (r % 8), if r < 8 { 97 } else { 30 });
+            line.push_str(&format!("\x1b[{bg};{fg}m{r:>3} \x1b[0m"));
+        }
+        println!("{line}");
+    }
+
+    // PPM image (upscaled), one color per rank
+    let scale = 24usize;
+    let side = n as usize * scale;
+    let mut img = vec![0u8; side * side * 3];
+    let palette: Vec<[u8; 3]> = (0..16)
+        .map(|i| {
+            let h = i as f64 / 16.0 * 6.0;
+            let c = 200.0;
+            let x = c * (1.0 - ((h % 2.0) - 1.0).abs());
+            let (r, g, b) = match h as u32 {
+                0 => (c, x, 0.0),
+                1 => (x, c, 0.0),
+                2 => (0.0, c, x),
+                3 => (0.0, x, c),
+                4 => (x, 0.0, c),
+                _ => (c, 0.0, x),
+            };
+            [r as u8 + 40, g as u8 + 40, b as u8 + 40]
+        })
+        .collect();
+    for py in 0..side {
+        for px in 0..side {
+            let st = BoxId::new(
+                cut.cut_level,
+                (px / scale) as u32,
+                (n as usize - 1 - py / scale) as u32,
+            );
+            let r = a.part[cut.subtree_index(&st)];
+            let o = (py * side + px) * 3;
+            img[o..o + 3].copy_from_slice(&palette[r % 16]);
+        }
+    }
+    let path = format!("partition_{dist}.ppm");
+    let mut out = format!("P6\n{side} {side}\n255\n").into_bytes();
+    out.extend(img);
+    std::fs::write(&path, out).expect("write ppm");
+    println!("\nwrote {path}");
+
+    // per-rank weights (Fig. 5's point: equal work, not equal area)
+    println!("\nper-rank work share (ideal = {:.4}):", 1.0 / 16.0);
+    let weights = a.graph.part_weights(&a.part, 16);
+    let total: f64 = weights.iter().sum();
+    for (r, w) in weights.iter().enumerate() {
+        let share = w / total;
+        let bar = "#".repeat((share * 320.0) as usize);
+        println!("rank {r:>2}: {share:.4} {bar}");
+    }
+}

@@ -1,0 +1,46 @@
+//! The §7 strong-scaling experiment: fixed problem, P ∈ {1,4,8,16,32,64}.
+//! Prints the Fig. 6/7/8/9 series (stage times, speedup, efficiency,
+//! load balance).
+//!
+//!     cargo run --release --example strong_scaling [n_target]
+//!
+//! The paper's full size (N = 765,625, L = 10, k = 4, p = 17) is
+//! reachable with `n_target = 765625` given patience; the default is a
+//! scaled-down configuration with the same particles-per-leaf density.
+
+use petfmm::config::RunConfig;
+use petfmm::coordinator::{make_backend, strong_scaling};
+
+fn main() {
+    let n_target: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100_000);
+    // match the paper's leaf occupancy: N=765625 at L=10 is ~0.73
+    // particles per leaf cell; keep L so that density is comparable
+    let levels = ((n_target as f64 / 0.73).log2() / 2.0).round()
+        .clamp(4.0, 10.0) as u8;
+    let config = RunConfig {
+        particles: n_target,
+        levels,
+        cut_level: 4.min(levels - 1),
+        terms: 17,
+        ranks: 1,
+        distribution: "lattice".into(),
+        backend: if std::path::Path::new("artifacts/manifest.json")
+            .exists() { "pjrt".into() } else { "native".into() },
+        ..Default::default()
+    };
+    println!("strong scaling: {}", config.summary());
+    let backend = make_backend(&config).expect("backend");
+    let series = strong_scaling(&config, &[1, 4, 8, 16, 32, 64],
+                                backend.as_ref())
+        .expect("scaling run");
+    println!("\n--- Fig. 6: stage times vs P (virtual seconds) ---");
+    print!("{}", series.fig6_table());
+    println!("\n--- Figs. 7-8: speedup / parallel efficiency ---");
+    print!("{}", series.fig7_8_table());
+    println!("\n--- Fig. 9: load balance + efficiency ---");
+    print!("{}", series.fig9_table());
+    println!("\ncsv:\n{}", series.to_csv());
+}

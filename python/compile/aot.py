@@ -1,0 +1,126 @@
+"""AOT compile path: lower every FMM operator to HLO text + manifest.
+
+Emits HLO *text*, NOT serialized HloModuleProto: jax >= 0.5 emits protos
+with 64-bit instruction ids which the rust `xla` crate's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/gen_hlo.py).
+
+Run once at build time (`make artifacts`):
+
+    cd python && python -m compile.aot --out-dir ../artifacts \
+        [--batch 64] [--leaf 32] [--terms 17] [--sigma 0.02]
+
+Outputs:
+    artifacts/<op>.hlo.txt  for op in p2m m2m m2l l2l l2p p2p
+    artifacts/manifest.json describing shapes/params for the rust runtime.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+F64 = jnp.float64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format).
+
+    `as_hlo_text(True)` = print_large_constants: without it the text
+    printer elides big array constants as `{...}`, which the rust side's
+    XLA 0.5.1 text parser silently reads back as ZEROS (observed: the
+    binomial tables of m2m/m2l/l2l became all-zero and every coefficient
+    operator returned 0).  Always print constants in full.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F64)
+
+
+def operator_signatures(b, s, p):
+    """Example-arg shapes for each operator, keyed by artifact name."""
+    return {
+        "p2m": (spec(b, s, 3), spec(b, 2), spec(b, 1)),
+        "m2m": (spec(b, p, 2), spec(b, 2), spec(b, 1)),
+        "m2l": (spec(b, p, 2), spec(b, 2), spec(b, 1)),
+        "l2l": (spec(b, p, 2), spec(b, 2), spec(b, 1)),
+        "l2p": (spec(b, p, 2), spec(b, s, 3), spec(b, 2), spec(b, 1)),
+        "p2p": (spec(b, s, 3), spec(b, s, 3)),
+    }
+
+
+def build_operators(p, sigma):
+    return {
+        "p2m": functools.partial(model.p2m, p=p),
+        "m2m": functools.partial(model.m2m, p=p),
+        "m2l": functools.partial(model.m2l, p=p),
+        "l2l": functools.partial(model.l2l, p=p),
+        "l2p": functools.partial(model.l2p, p=p),
+        "p2p": functools.partial(model.p2p, sigma=sigma),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=64,
+                    help="B: boxes per PJRT call")
+    ap.add_argument("--leaf", type=int, default=32,
+                    help="S: max particles per leaf box (padded)")
+    ap.add_argument("--terms", type=int, default=17,
+                    help="p: expansion terms (paper uses 17)")
+    ap.add_argument("--sigma", type=float, default=0.005,
+                    help="Gaussian core size of the Biot-Savart kernel")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    b, s, p = args.batch, args.leaf, args.terms
+    sigs = operator_signatures(b, s, p)
+    ops = build_operators(p, args.sigma)
+
+    entries = {}
+    for name, fn in ops.items():
+        example = sigs[name]
+        lowered = jax.jit(lambda *a, _f=fn: (_f(*a),)).lower(*example)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        entries[name] = {
+            "file": fname,
+            "inputs": [list(x.shape) for x in example],
+            "dtype": "f64",
+        }
+        print(f"  lowered {name:5s} -> {fname} ({len(text)} chars)")
+
+    manifest = {
+        "version": 1,
+        "batch": b,
+        "leaf": s,
+        "terms": p,
+        "sigma": args.sigma,
+        "operators": entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out_dir}/manifest.json  (B={b} S={s} P={p} "
+          f"sigma={args.sigma})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""L1 Pallas kernel: multipole-to-local (M2L) transform.
+
+The M2L transform is the second hot spot of the FMM (the `c * N/(B P)` term
+of the paper's Eq. 10): every box performs one transform per interaction
+list member (up to 27 in 2D), each costing O(p^2).
+
+TPU shaping: the Hankel structure of the transform,
+
+    c~_l = (1/r) * sum_k a~_k (-1)^(k+1) C(k+l,k) itau^(k+l+1),
+
+factorizes as itau^(k+l+1) = itau^l * itau^(k+1), i.e. a complex rank-1
+outer product, so each batch element becomes a (p,p) x (p,2) real matmul
+pair — exactly the MXU systolic-array shape (pad p to a multiple of 8/128
+on real hardware; here p is small and interpret=True).  The binomial/sign
+matrix is a compile-time constant broadcast to every grid step.
+
+Inputs per batch element b:
+    me   (P,2)  scaled source multipole coefficients
+    tau  (2,)   (z_src - z_tgt)/r, complex
+    invr (1,)   1/r
+Output:
+    le   (P,2)  scaled local-expansion contribution (accumulated by L3).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.experimental import pallas as pl
+
+from .ref import binomial_table
+
+
+def _m2l_kernel(me_ref, tau_ref, invr_ref, bs_ref, o_ref, *, p):
+    """One batch TILE, vectorized over its T boxes.
+
+    Shapes: (T,P,2), (T,2), (T,1), (P,P) -> (T,P,2).
+
+    Processing a whole tile per grid step keeps the work VPU-vectorized
+    across boxes instead of looping a scalar grid (the original one-box
+    grid spent ~3.5x the native backend's time per transform; see
+    EXPERIMENTS.md §Perf).
+    """
+    tr = tau_ref[:, 0]          # (T,)
+    ti = tau_ref[:, 1]
+    den = tr * tr + ti * ti
+    ir = tr / den               # itau = 1/tau
+    ii = -ti / den
+
+    # Complex powers, vectorized over the tile:
+    # lp[t, l] = itau_t^l (l < p), q[t, k] = itau_t^(k+1)
+    pr = [jnp.ones_like(ir)]
+    pi = [jnp.zeros_like(ir)]
+    for _ in range(1, p + 1):
+        nr = pr[-1] * ir - pi[-1] * ii
+        ni = pr[-1] * ii + pi[-1] * ir
+        pr.append(nr)
+        pi.append(ni)
+    lpr = jnp.stack(pr[:p], axis=1)      # (T,P) itau^l
+    lpi = jnp.stack(pi[:p], axis=1)
+    qr = jnp.stack(pr[1:p + 1], axis=1)  # (T,P) itau^(k+1)
+    qi = jnp.stack(pi[1:p + 1], axis=1)
+
+    # W[t,l,k] = bs[l,k] * itau_t^l * itau_t^(k+1) (complex outer product)
+    bs = bs_ref[...][None, :, :]
+    wr = bs * (lpr[:, :, None] * qr[:, None, :]
+               - lpi[:, :, None] * qi[:, None, :])
+    wi = bs * (lpr[:, :, None] * qi[:, None, :]
+               + lpi[:, :, None] * qr[:, None, :])
+
+    ar = me_ref[:, :, 0]        # (T,P)
+    ai = me_ref[:, :, 1]
+    inv_r = invr_ref[:, 0:1]    # (T,1)
+    # batched complex matvec out[t] = W[t] @ a[t], scaled by 1/r
+    out_r = (jnp.einsum("tlk,tk->tl", wr, ar)
+             - jnp.einsum("tlk,tk->tl", wi, ai)) * inv_r
+    out_i = (jnp.einsum("tlk,tk->tl", wr, ai)
+             + jnp.einsum("tlk,tk->tl", wi, ar)) * inv_r
+    o_ref[:, :, 0] = out_r
+    o_ref[:, :, 1] = out_i
+
+
+def m2l_binom_sign(p):
+    """(P,P) constant: (-1)^(k+1) C(k+l, k) at [l, k]."""
+    binom = binomial_table(p)
+    m = np.zeros((p, p))
+    for l in range(p):
+        for k in range(p):
+            m[l, k] = ((-1.0) ** (k + 1)) * binom[k + l, k]
+    return m
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile"))
+def m2l_pallas(me, tau, inv_r, bs, *, interpret=True, tile=None):
+    """Batched M2L via Pallas.
+
+    me (B,P,2), tau (B,2), inv_r (B,1), bs (P,P) -> le (B,P,2).
+    `tile` boxes are processed per grid step (default: the whole batch in
+    one step — best on CPU; on real TPU pick a tile whose W matrix fits
+    VMEM: T * p^2 * 8 bytes * 2).
+    """
+    b, p, _ = me.shape
+    t = tile or b
+    assert b % t == 0, (b, t)
+    kern = functools.partial(_m2l_kernel, p=p)
+    return pl.pallas_call(
+        kern,
+        grid=(b // t,),
+        in_specs=[
+            pl.BlockSpec((t, p, 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((t, 2), lambda i: (i, 0)),
+            pl.BlockSpec((t, 1), lambda i: (i, 0)),
+            pl.BlockSpec((p, p), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, p, 2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, p, 2), me.dtype),
+        interpret=interpret,
+    )(me, tau, inv_r, bs)

@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: direct regularized Biot-Savart (the FMM near field).
+
+This is the dominant cost of the whole method (the `d * N B / P` term of the
+paper's Eq. 10), so it is the primary Pallas hot spot.
+
+TPU shaping (DESIGN.md §7): the grid iterates over the batch of leaf-box
+pairs; each grid step holds one (S,3) target block and one (S,3) source
+block in VMEM and produces an (S,2) velocity block.  The S x S pairwise
+interaction is evaluated as fully vectorized VPU work (no MXU — the kernel
+is transcendental-bound by the exp), with the broadcasted distance matrix
+kept entirely VMEM-resident.  On CPU we run interpret=True; the same
+BlockSpec schedule is what a real TPU lowering would pipeline HBM->VMEM.
+
+Padding convention: padded particle slots carry gamma == 0 and coincident
+positions contribute nothing (r2 == 0 is masked), so no separate mask input
+is needed.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TWO_PI = 6.283185307179586
+
+
+def _p2p_kernel(t_ref, s_ref, o_ref, *, inv_two_sigma2):
+    """One batch TILE, vectorized: (T,S,3) x (T,S,3) -> (T,S,2).
+
+    The (T,S,S) pairwise block stays resident per grid step; vectorizing
+    across the tile's boxes (instead of a one-box grid) is what keeps the
+    kernel compute-bound rather than loop-bound (EXPERIMENTS.md §Perf).
+    """
+    tx = t_ref[:, :, 0]
+    ty = t_ref[:, :, 1]
+    sx = s_ref[:, :, 0]
+    sy = s_ref[:, :, 1]
+    g = s_ref[:, :, 2]
+
+    dx = tx[:, :, None] - sx[:, None, :]          # (T, S, S)
+    dy = ty[:, :, None] - sy[:, None, :]
+    r2 = dx * dx + dy * dy
+    nz = r2 > 0.0
+    safe = jnp.where(nz, r2, 1.0)
+    # Eq. 8: (1 - exp(-r^2 / 2 sigma^2)) / (2 pi r^2), zero at r == 0.
+    fac = jnp.where(
+        nz, (1.0 - jnp.exp(-r2 * inv_two_sigma2)) / (TWO_PI * safe), 0.0)
+    gf = g[:, None, :] * fac
+    u = jnp.sum(gf * (-dy), axis=2)
+    v = jnp.sum(gf * dx, axis=2)
+    o_ref[:, :, 0] = u
+    o_ref[:, :, 1] = v
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "interpret", "tile"))
+def p2p_pallas(targets, sources, *, sigma, interpret=True, tile=None):
+    """Batched direct interactions via Pallas.
+
+    targets (B,S,3), sources (B,S,3) -> (B,S,2).
+    `sigma` is the Gaussian core size (static: baked into the artifact).
+    `tile` boxes are processed per grid step (default: whole batch; on a
+    real TPU pick T so the (T,S,S) distance block fits VMEM).
+    """
+    b, s, _ = targets.shape
+    assert sources.shape == (b, s, 3), sources.shape
+    t = tile or b
+    assert b % t == 0, (b, t)
+    kern = functools.partial(
+        _p2p_kernel, inv_two_sigma2=1.0 / (2.0 * sigma * sigma))
+    return pl.pallas_call(
+        kern,
+        grid=(b // t,),
+        in_specs=[
+            pl.BlockSpec((t, s, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((t, s, 3), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, s, 2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, 2), targets.dtype),
+        interpret=interpret,
+    )(targets, sources)

@@ -1,0 +1,190 @@
+"""Pure-jnp reference oracles for every FMM operator.
+
+These are the correctness ground truth for the Pallas kernels (L1) and the
+batched jax operators (L2).  Everything is written in the radius-scaled
+complex formulation of DESIGN.md §3:
+
+    f(z) = sum_j gamma_j / (z - z_j)            (far-field kernel)
+    u - i v = -i/(2pi) * f(z)                   (vortex velocity)
+
+Complex numbers are carried as a trailing dimension of size 2 (re, im) so
+the HLO interchange never needs complex literals.
+
+Shapes (B = batch of boxes, S = max particles/box, P = expansion terms):
+    particles : (B, S, 3)   columns x, y, gamma (gamma == 0 marks padding)
+    centers   : (B, 2)
+    radius    : (B, 1)      box half-width
+    me / le   : (B, P, 2)   scaled multipole / local coefficients
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+TWO_PI = 2.0 * np.pi
+
+
+# ----------------------------------------------------------------------------
+# complex helpers on (..., 2) arrays
+# ----------------------------------------------------------------------------
+
+def cmul(a, b):
+    """Complex multiply of (...,2) arrays."""
+    ar, ai = a[..., 0], a[..., 1]
+    br, bi = b[..., 0], b[..., 1]
+    return jnp.stack([ar * br - ai * bi, ar * bi + ai * br], axis=-1)
+
+
+def cdiv(a, b):
+    """Complex divide of (...,2) arrays (b != 0)."""
+    br, bi = b[..., 0], b[..., 1]
+    den = br * br + bi * bi
+    ar, ai = a[..., 0], a[..., 1]
+    return jnp.stack([(ar * br + ai * bi) / den, (ai * br - ar * bi) / den],
+                     axis=-1)
+
+
+def cpowers(z, p):
+    """Powers z^0 .. z^(p-1) of a (...,2) complex array -> (..., p, 2)."""
+    out = [jnp.stack([jnp.ones_like(z[..., 0]), jnp.zeros_like(z[..., 0])],
+                     axis=-1)]
+    for _ in range(1, p):
+        out.append(cmul(out[-1], z))
+    return jnp.stack(out, axis=-2)
+
+
+def binomial_table(p):
+    """C(n, k) for n, k in [0, 2p): float64 (2p, 2p) numpy array."""
+    n = 2 * p
+    c = np.zeros((n, n))
+    for i in range(n):
+        c[i, 0] = 1.0
+        for j in range(1, i + 1):
+            c[i, j] = c[i - 1, j - 1] + c[i - 1, j]
+    return c
+
+
+# ----------------------------------------------------------------------------
+# operator references
+# ----------------------------------------------------------------------------
+
+def p2m_ref(particles, centers, radius, p):
+    """Scaled multipole expansion: a~_k = sum_j gamma_j ((z_j - z0)/r)^k."""
+    dz = (particles[..., 0:2] - centers[:, None, :]) / radius[:, None, :]
+    pw = cpowers(dz, p)                      # (B, S, P, 2)
+    g = particles[..., 2][..., None, None]   # (B, S, 1, 1)
+    return jnp.sum(g * pw, axis=1)           # (B, P, 2)
+
+
+def m2m_ref(child_me, d, rho, p):
+    """Shift child ME to parent center.
+
+    d   : (B,2)  (z_child - z_parent)/r_parent
+    rho : (B,1)  r_child / r_parent
+    b~_l = sum_{k<=l} C(l,k) d^(l-k) rho^k a~_k
+    """
+    binom = binomial_table(p)
+    dpw = cpowers(d, p)                                  # (B, P, 2)
+    rpw = rho[:, 0:1] ** jnp.arange(p)[None, :]          # (B, P)
+    a = child_me * rpw[..., None]                        # rho^k a~_k
+    out = []
+    for l in range(p):
+        acc = jnp.zeros_like(child_me[:, 0, :])
+        for k in range(l + 1):
+            acc = acc + float(binom[l, k]) * cmul(dpw[:, l - k, :], a[:, k, :])
+        out.append(acc)
+    return jnp.stack(out, axis=1)
+
+
+def m2l_ref(me, tau, inv_r, p):
+    """Transform source ME into target LE (same level).
+
+    tau   : (B,2)  (z_src - z_tgt)/r
+    inv_r : (B,1)  1/r
+    c~_l = (1/r) sum_k a~_k (-1)^(k+1) C(k+l,k) tau^-(k+l+1)
+    """
+    binom = binomial_table(p)
+    one = jnp.stack([jnp.ones_like(tau[..., 0]), jnp.zeros_like(tau[..., 0])],
+                    axis=-1)
+    itau = cdiv(one, tau)                                # 1/tau (B,2)
+    ipw = cpowers(itau, 2 * p + 1)                       # (B, 2P+1, 2)
+    out = []
+    for l in range(p):
+        acc = jnp.zeros_like(me[:, 0, :])
+        for k in range(p):
+            coef = ((-1.0) ** (k + 1)) * float(binom[k + l, k])
+            acc = acc + coef * cmul(me[:, k, :], ipw[:, k + l + 1, :])
+        out.append(acc)
+    return jnp.stack(out, axis=1) * inv_r[..., None]
+
+
+def l2l_ref(parent_le, d, rho, p):
+    """Shift parent LE into child center.
+
+    d   : (B,2)  (z_child - z_parent)/r_parent
+    rho : (B,1)  r_child / r_parent
+    c~'_l = rho^l sum_{m>=l} C(m,l) d^(m-l) c~_m
+    """
+    binom = binomial_table(p)
+    dpw = cpowers(d, p)
+    out = []
+    for l in range(p):
+        acc = jnp.zeros_like(parent_le[:, 0, :])
+        for m in range(l, p):
+            acc = acc + float(binom[m, l]) * cmul(dpw[:, m - l, :],
+                                                  parent_le[:, m, :])
+        out.append(acc)
+    rpw = rho[:, 0:1] ** jnp.arange(p)[None, :]
+    return jnp.stack(out, axis=1) * rpw[..., None]
+
+
+def l2p_ref(le, particles, centers, radius, p):
+    """Evaluate LE at particle positions -> velocity (u, v).
+
+    f = sum_l c~_l ((z - z_L)/r)^l with u - iv = -i/(2pi) f, i.e.
+    -i (f_r + i f_i) = f_i - i f_r  =>  u = f_i/(2pi), v = f_r/(2pi).
+    """
+    dz = (particles[..., 0:2] - centers[:, None, :]) / radius[:, None, :]
+    pw = cpowers(dz, p)                                # (B, S, P, 2)
+    f = jnp.sum(cmul(le[:, None, :, :], pw), axis=2)   # (B, S, 2)
+    u = f[..., 1] / TWO_PI
+    v = f[..., 0] / TWO_PI
+    return jnp.stack([u, v], axis=-1)
+
+
+def p2p_ref(targets, sources, sigma):
+    """Direct regularized Biot-Savart (Eq. 8 of the paper).
+
+    targets (B,St,3), sources (B,Ss,3) -> velocities (B,St,2)
+    u(x) = sum_j gamma_j K_sigma(x - x_j),
+    K_sigma(x) = (-x2, x1)/(2pi |x|^2) (1 - exp(-|x|^2 / 2 sigma^2))
+    Zero-distance pairs (self/padding) contribute zero.
+    """
+    dx = targets[:, :, None, 0] - sources[:, None, :, 0]   # (B,St,Ss)
+    dy = targets[:, :, None, 1] - sources[:, None, :, 1]
+    r2 = dx * dx + dy * dy
+    g = sources[:, None, :, 2]
+    safe = jnp.where(r2 > 0.0, r2, 1.0)
+    fac = jnp.where(r2 > 0.0,
+                    (1.0 - jnp.exp(-r2 / (2.0 * sigma * sigma)))
+                    / (TWO_PI * safe),
+                    0.0)
+    u = jnp.sum(g * fac * (-dy), axis=2)
+    v = jnp.sum(g * fac * dx, axis=2)
+    return jnp.stack([u, v], axis=-1)
+
+
+def direct_far_ref(targets_xy, sources):
+    """Unregularized far-field sum f(z) = sum gamma/(z - z_j), velocity form.
+
+    Used by tests to check the ME/LE pipeline: the FMM far field expands the
+    1/z kernel (the paper's kernel substitution), so it must match this.
+    targets_xy (T,2), sources (S,3) -> (T,2) velocities.
+    """
+    dx = targets_xy[:, None, 0] - sources[None, :, 0]
+    dy = targets_xy[:, None, 1] - sources[None, :, 1]
+    r2 = dx * dx + dy * dy
+    g = sources[None, :, 2]
+    safe = jnp.where(r2 > 0.0, r2, 1.0)
+    u = jnp.sum(jnp.where(r2 > 0.0, g * (-dy) / (TWO_PI * safe), 0.0), axis=1)
+    v = jnp.sum(jnp.where(r2 > 0.0, g * dx / (TWO_PI * safe), 0.0), axis=1)
+    return jnp.stack([u, v], axis=-1)

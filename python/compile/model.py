@@ -1,0 +1,109 @@
+"""L2: the FMM operator set as batched jax functions.
+
+The paper's "model" is not a neural net — it is the FMM operator algebra
+(P2M, M2M, M2L, L2L, L2P, P2P).  Each operator is a batched, fixed-shape
+jax function; the two hot spots (P2P, M2L) call the L1 Pallas kernels so
+they lower into the same HLO module.  `aot.py` lowers each operator once
+into `artifacts/<op>.hlo.txt`, and the rust coordinator (L3) drives them
+from the request path via PJRT.
+
+All complex quantities are real/imag split (trailing dim 2); all dtypes are
+float64 (jax_enable_x64 is set by aot.py / tests before import).
+
+Shape glossary: B = batch of boxes, S = max particles per box (padded with
+gamma == 0), P = number of expansion terms (p in the paper, 17 in §7).
+"""
+
+import jax.numpy as jnp
+
+from .kernels.m2l import m2l_binom_sign, m2l_pallas
+from .kernels.p2p import p2p_pallas
+from .kernels.ref import binomial_table, cmul, cpowers
+
+TWO_PI = 6.283185307179586
+
+
+def p2m(particles, centers, radius, *, p):
+    """Particles -> scaled ME.  (B,S,3),(B,2),(B,1) -> (B,P,2).
+
+    a~_k = sum_j gamma_j ((z_j - z0)/r)^k ; padded slots have gamma = 0.
+    Running-power accumulation keeps intermediates at (B,S,2) instead of
+    materializing the (B,S,P,2) power tensor (§Perf: ~3x less traffic).
+    """
+    dz = (particles[..., 0:2] - centers[:, None, :]) / radius[:, None, :]
+    g = particles[..., 2]                               # (B,S)
+    pw = jnp.stack([jnp.ones_like(g), jnp.zeros_like(g)], axis=-1)
+    out = []
+    for _ in range(p):
+        out.append(jnp.sum(g[..., None] * pw, axis=1))  # (B,2)
+        pw = cmul(pw, dz)
+    return jnp.stack(out, axis=1)
+
+
+def m2m(child_me, d, rho, *, p):
+    """Shift child ME to parent center.  (B,P,2),(B,2),(B,1) -> (B,P,2).
+
+    b~_l = sum_{k<=l} C(l,k) d^(l-k) rho^k a~_k with d, rho as in ref.py.
+    Implemented as a masked (P,P) contraction so XLA emits one fused loop.
+    """
+    binom = binomial_table(p)
+    dpw = cpowers(d, p)                                 # (B,P,2) d^m
+    rpw = rho[:, 0:1] ** jnp.arange(p)[None, :]         # (B,P)
+    a = child_me * rpw[..., None]                       # (B,P,2)
+    # T[b,l,k] = C(l,k) * d^(l-k): gather dpw at index l-k, mask k<=l.
+    idx = jnp.arange(p)[:, None] - jnp.arange(p)[None, :]       # (P,P) l-k
+    mask = (idx >= 0).astype(a.dtype)
+    coeff = jnp.asarray(binom[:p, :p]) * mask                   # (P,P)
+    dmat = dpw[:, jnp.clip(idx, 0, p - 1), :]                   # (B,P,P,2)
+    t = coeff[None, :, :, None] * dmat                          # (B,P,P,2)
+    return jnp.sum(cmul(t, a[:, None, :, :]), axis=2)
+
+
+def m2l(me, tau, inv_r, *, p):
+    """ME -> LE contribution across a well-separated pair (Pallas L1 kernel).
+
+    (B,P,2),(B,2),(B,1) -> (B,P,2).
+    """
+    bs = jnp.asarray(m2l_binom_sign(p), dtype=me.dtype)
+    return m2l_pallas(me, tau, inv_r, bs)
+
+
+def l2l(parent_le, d, rho, *, p):
+    """Shift parent LE to child center.  (B,P,2),(B,2),(B,1) -> (B,P,2).
+
+    c~'_l = rho^l sum_{m>=l} C(m,l) d^(m-l) c~_m.
+    """
+    binom = binomial_table(p)
+    dpw = cpowers(d, p)
+    idx = jnp.arange(p)[None, :] - jnp.arange(p)[:, None]       # (P,P) m-l
+    mask = (idx >= 0).astype(parent_le.dtype)
+    coeff = jnp.asarray(binom[:p, :p]).T * mask                 # C(m,l)[l,m]
+    dmat = dpw[:, jnp.clip(idx, 0, p - 1), :]                   # (B,P,P,2)
+    t = coeff[None, :, :, None] * dmat
+    out = jnp.sum(cmul(t, parent_le[:, None, :, :]), axis=2)
+    rpw = rho[:, 0:1] ** jnp.arange(p)[None, :]
+    return out * rpw[..., None]
+
+
+def l2p(le, particles, centers, radius, *, p):
+    """Evaluate LE at particle positions -> velocities (B,S,2).
+
+    u = Im(f)/(2pi), v = Re(f)/(2pi) with f = sum_l c~_l ((z-zL)/r)^l,
+    evaluated by Horner's rule with (B,S,2) intermediates only.
+    """
+    dz = (particles[..., 0:2] - centers[:, None, :]) / radius[:, None, :]
+    f = jnp.broadcast_to(le[:, None, p - 1, :], dz.shape)
+    for k in range(p - 2, -1, -1):
+        f = cmul(f, dz) + le[:, None, k, :]
+    return jnp.stack([f[..., 1] / TWO_PI, f[..., 0] / TWO_PI], axis=-1)
+
+
+def p2p(targets, sources, *, sigma):
+    """Direct near-field interactions (Pallas L1 kernel).
+
+    (B,S,3),(B,S,3) -> (B,S,2), exact regularized Biot-Savart (Eq. 8).
+    """
+    return p2p_pallas(targets, sources, sigma=sigma)
+
+
+OPERATORS = ("p2m", "m2m", "m2l", "l2l", "l2p", "p2p")

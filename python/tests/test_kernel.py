@@ -1,0 +1,131 @@
+"""L1 Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+
+hypothesis sweeps shapes, seeds and kernel parameters; every case asserts
+allclose against ref.py (which itself is validated against brute-force
+complex arithmetic in test_operators.py).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.m2l import m2l_binom_sign, m2l_pallas
+from compile.kernels.p2p import p2p_pallas
+
+
+def rand_particles(rng, b, s, span=1.0):
+    xy = rng.uniform(0.0, span, size=(b, s, 2))
+    g = rng.normal(size=(b, s, 1))
+    return np.concatenate([xy, g], axis=2)
+
+
+# ----------------------------------------------------------------------------
+# P2P
+# ----------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    s=st.integers(1, 48),
+    sigma=st.sampled_from([0.005, 0.02, 0.1]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_p2p_matches_ref(b, s, sigma, seed):
+    rng = np.random.default_rng(seed)
+    t = jnp.asarray(rand_particles(rng, b, s))
+    src = jnp.asarray(rand_particles(rng, b, s))
+    out = p2p_pallas(t, src, sigma=sigma)
+    want = ref.p2p_ref(t, src, sigma)
+    np.testing.assert_allclose(out, want, rtol=1e-12, atol=1e-12)
+
+
+def test_p2p_self_interaction_is_zero():
+    """A single particle induces no velocity on itself."""
+    t = jnp.asarray([[[0.5, 0.5, 3.0]]])
+    out = p2p_pallas(t, t, sigma=0.02)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_p2p_padding_is_inert():
+    """gamma == 0 padded slots change nothing for real targets."""
+    rng = np.random.default_rng(7)
+    t = rand_particles(rng, 2, 8)
+    src = rand_particles(rng, 2, 8)
+    pad = np.zeros((2, 4, 3))
+    pad[..., 0:2] = 0.123  # position of padding must not matter
+    src_padded = np.concatenate([src, pad], axis=1)
+    t_padded = np.concatenate([t, np.zeros((2, 4, 3))], axis=1)
+    out = p2p_pallas(jnp.asarray(t_padded), jnp.asarray(src_padded),
+                     sigma=0.02)
+    want = ref.p2p_ref(jnp.asarray(t), jnp.asarray(src), 0.02)
+    np.testing.assert_allclose(out[:, :8, :], want, rtol=1e-12, atol=1e-12)
+
+
+def test_p2p_antisymmetry():
+    """Velocity induced by j on i is opposite to i on j (equal gamma)."""
+    a = jnp.asarray([[[0.2, 0.3, 1.5]]])
+    b = jnp.asarray([[[0.6, 0.8, 1.5]]])
+    uab = np.asarray(p2p_pallas(a, b, sigma=0.02))[0, 0]
+    uba = np.asarray(p2p_pallas(b, a, sigma=0.02))[0, 0]
+    np.testing.assert_allclose(uab, -uba, rtol=1e-12)
+
+
+def test_p2p_single_vortex_tangential():
+    """One unit vortex at origin: at (r,0) velocity is (0, ~1/(2 pi r))."""
+    r = 0.25
+    src = jnp.asarray([[[0.0, 0.0, 1.0]]])
+    tgt = jnp.asarray([[[r, 0.0, 0.0]]])
+    out = np.asarray(p2p_pallas(tgt, src, sigma=0.02))[0, 0]
+    expect_v = (1.0 - np.exp(-r * r / (2 * 0.02**2))) / (2 * np.pi * r)
+    np.testing.assert_allclose(out, [0.0, expect_v], rtol=1e-12, atol=1e-14)
+
+
+# ----------------------------------------------------------------------------
+# M2L
+# ----------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    p=st.integers(2, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_m2l_matches_ref(b, p, seed):
+    rng = np.random.default_rng(seed)
+    me = jnp.asarray(rng.normal(size=(b, p, 2)))
+    # well-separated: |tau| >= 2 as in a real interaction list
+    ang = rng.uniform(0, 2 * np.pi, size=b)
+    mag = rng.uniform(2.0, 6.0, size=b)
+    tau = jnp.asarray(np.stack([mag * np.cos(ang), mag * np.sin(ang)], 1))
+    inv_r = jnp.asarray(rng.uniform(1.0, 1024.0, size=(b, 1)))
+    bs = jnp.asarray(m2l_binom_sign(p))
+    out = m2l_pallas(me, tau, inv_r, bs)
+    want = ref.m2l_ref(me, tau, inv_r, p)
+    np.testing.assert_allclose(out, want, rtol=1e-9, atol=1e-9)
+
+
+def test_m2l_binom_sign_values():
+    """Spot-check the constant matrix: [l,k] = (-1)^(k+1) C(k+l, k)."""
+    m = m2l_binom_sign(4)
+    assert m[0, 0] == -1.0          # (-1)^1 C(0,0)
+    assert m[0, 1] == 1.0           # (-1)^2 C(1,1)
+    assert m[2, 1] == 3.0           # (-1)^2 C(3,1)
+    assert m[3, 2] == -10.0         # (-1)^3 C(5,2)
+
+
+@pytest.mark.parametrize("p", [3, 17])
+def test_m2l_linearity(p):
+    """M2L is linear in the multipole coefficients."""
+    rng = np.random.default_rng(3)
+    b = 4
+    me1 = rng.normal(size=(b, p, 2))
+    me2 = rng.normal(size=(b, p, 2))
+    tau = np.tile(np.array([[3.0, 1.0]]), (b, 1))
+    inv_r = np.ones((b, 1))
+    bs = jnp.asarray(m2l_binom_sign(p))
+    f = lambda m: np.asarray(
+        m2l_pallas(jnp.asarray(m), jnp.asarray(tau), jnp.asarray(inv_r), bs))
+    np.testing.assert_allclose(f(me1) + f(me2), f(me1 + me2),
+                               rtol=1e-9, atol=1e-9)

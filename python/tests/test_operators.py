@@ -1,0 +1,189 @@
+"""L2 operator algebra: model.py vs ref.py vs brute-force complex math.
+
+Validates (a) the batched model operators against ref.py, and (b) ref.py
+itself against direct complex-arithmetic evaluation of the underlying
+series — translation/transform identities of DESIGN.md §3.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand_cluster(rng, n, center, r):
+    """n sources uniformly inside the box (center, half-width r)."""
+    xy = rng.uniform(-r, r, size=(n, 2)) + np.asarray(center)
+    g = rng.normal(size=(n, 1))
+    return np.concatenate([xy, g], axis=1)
+
+
+def eval_me_bruteforce(me, center, r, z, p):
+    """f(z) = sum_k a~_k r^k / (z - z0)^(k+1) via complex arithmetic."""
+    zc = complex(z[0] - center[0], z[1] - center[1])
+    f = 0j
+    for k in range(p):
+        f += complex(me[k, 0], me[k, 1]) * r**k / zc ** (k + 1)
+    return f
+
+
+def eval_le_bruteforce(le, center, r, z, p):
+    """f(z) = sum_l c~_l ((z - zL)/r)^l via complex arithmetic."""
+    zc = complex(z[0] - center[0], z[1] - center[1]) / r
+    f = 0j
+    for l in range(p):
+        f += complex(le[l, 0], le[l, 1]) * zc**l
+    return f
+
+
+def velocity(f):
+    """u - iv = -i f / (2 pi) -> (u, v)."""
+    w = -1j * f / (2 * np.pi)
+    return np.array([w.real, -w.imag])
+
+
+# ----------------------------------------------------------------------------
+# model.* vs ref.*
+# ----------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 6), s=st.integers(1, 16), p=st.integers(2, 20),
+       seed=st.integers(0, 2**31 - 1))
+def test_p2m_matches_ref(b, s, p, seed):
+    rng = np.random.default_rng(seed)
+    parts = jnp.asarray(rng.uniform(0, 1, size=(b, s, 3)))
+    c = jnp.asarray(rng.uniform(0, 1, size=(b, 2)))
+    r = jnp.asarray(rng.uniform(0.1, 1.0, size=(b, 1)))
+    np.testing.assert_allclose(model.p2m(parts, c, r, p=p),
+                               ref.p2m_ref(parts, c, r, p),
+                               rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 6), p=st.integers(2, 20),
+       seed=st.integers(0, 2**31 - 1))
+def test_m2m_matches_ref(b, p, seed):
+    rng = np.random.default_rng(seed)
+    me = jnp.asarray(rng.normal(size=(b, p, 2)))
+    d = jnp.asarray(rng.uniform(-0.5, 0.5, size=(b, 2)))
+    rho = jnp.asarray(rng.uniform(0.3, 0.7, size=(b, 1)))
+    np.testing.assert_allclose(model.m2m(me, d, rho, p=p),
+                               ref.m2m_ref(me, d, rho, p),
+                               rtol=1e-10, atol=1e-10)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 6), p=st.integers(2, 20),
+       seed=st.integers(0, 2**31 - 1))
+def test_l2l_matches_ref(b, p, seed):
+    rng = np.random.default_rng(seed)
+    le = jnp.asarray(rng.normal(size=(b, p, 2)))
+    d = jnp.asarray(rng.uniform(-0.5, 0.5, size=(b, 2)))
+    rho = jnp.asarray(rng.uniform(0.3, 0.7, size=(b, 1)))
+    np.testing.assert_allclose(model.l2l(le, d, rho, p=p),
+                               ref.l2l_ref(le, d, rho, p),
+                               rtol=1e-10, atol=1e-10)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 6), s=st.integers(1, 16), p=st.integers(2, 20),
+       seed=st.integers(0, 2**31 - 1))
+def test_l2p_matches_ref(b, s, p, seed):
+    rng = np.random.default_rng(seed)
+    le = jnp.asarray(rng.normal(size=(b, p, 2)))
+    parts = jnp.asarray(rng.uniform(0, 1, size=(b, s, 3)))
+    c = jnp.asarray(rng.uniform(0, 1, size=(b, 2)))
+    r = jnp.asarray(rng.uniform(0.1, 1.0, size=(b, 1)))
+    np.testing.assert_allclose(model.l2p(le, parts, c, r, p=p),
+                               ref.l2p_ref(le, parts, c, r, p),
+                               rtol=1e-10, atol=1e-10)
+
+
+# ----------------------------------------------------------------------------
+# series identities (ref.* vs brute force)
+# ----------------------------------------------------------------------------
+
+P = 20          # terms for identity tests
+RTOL = 1e-8
+
+
+def test_p2m_far_field_converges():
+    """ME evaluation approaches the direct 1/z sum far from the cluster."""
+    rng = np.random.default_rng(0)
+    src = rand_cluster(rng, 30, (0.5, 0.5), 0.1)
+    me = np.asarray(ref.p2m_ref(src[None], np.array([[0.5, 0.5]]),
+                                np.array([[0.1]]), P))[0]
+    z = (2.5, 1.0)
+    f = eval_me_bruteforce(me, (0.5, 0.5), 0.1, z, P)
+    want = np.asarray(ref.direct_far_ref(np.asarray([z]), src))[0]
+    np.testing.assert_allclose(velocity(f), want, rtol=RTOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_m2m_preserves_far_field(seed):
+    """Shifting an ME to the parent center must not change the far field."""
+    rng = np.random.default_rng(seed)
+    child_c, child_r = np.array([0.25, 0.75]), 0.25
+    parent_c, parent_r = np.array([0.5, 0.5]), 0.5
+    src = rand_cluster(rng, 12, child_c, child_r)
+    me_c = ref.p2m_ref(src[None], child_c[None], np.array([[child_r]]), P)
+    d = (child_c - parent_c)[None] / parent_r
+    rho = np.array([[child_r / parent_r]])
+    me_p = np.asarray(ref.m2m_ref(me_c, jnp.asarray(d), jnp.asarray(rho), P))
+    z = (4.0, -3.0)   # far from both centers
+    f = eval_me_bruteforce(me_p[0], parent_c, parent_r, z, P)
+    want = np.asarray(ref.direct_far_ref(np.asarray([z]), src))[0]
+    np.testing.assert_allclose(velocity(f), want, rtol=RTOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_m2l_l2p_equals_direct(seed):
+    """ME -> LE -> evaluation == direct sum for well-separated boxes."""
+    rng = np.random.default_rng(seed)
+    src_c, r = np.array([0.1, 0.1]), 0.1
+    tgt_c = np.array([0.7, 0.1])          # separation 6 r -> well separated
+    src = rand_cluster(rng, 15, src_c, r)
+    me = ref.p2m_ref(src[None], src_c[None], np.array([[r]]), P)
+    tau = (src_c - tgt_c)[None] / r
+    le = ref.m2l_ref(me, jnp.asarray(tau), np.array([[1.0 / r]]), P)
+    tgt = rand_cluster(rng, 9, tgt_c, r)
+    vel = np.asarray(ref.l2p_ref(le, tgt[None], tgt_c[None],
+                                 np.array([[r]]), P))[0]
+    want = np.asarray(ref.direct_far_ref(tgt[:, 0:2], src))
+    np.testing.assert_allclose(vel, want, rtol=1e-6, atol=1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_l2l_preserves_local_field(seed):
+    """Shifting an LE into a child box must not change its value there."""
+    rng = np.random.default_rng(seed)
+    parent_c, parent_r = np.array([0.5, 0.5]), 0.2
+    child_c, child_r = np.array([0.4, 0.6]), 0.1
+    le_p = rng.normal(size=(1, P, 2))
+    d = (child_c - parent_c)[None] / parent_r
+    rho = np.array([[child_r / parent_r]])
+    le_c = np.asarray(ref.l2l_ref(jnp.asarray(le_p), jnp.asarray(d),
+                                  jnp.asarray(rho), P))
+    z = child_c + np.array([0.03, -0.05])   # inside the child box
+    fp = eval_le_bruteforce(le_p[0], parent_c, parent_r, z, P)
+    fc = eval_le_bruteforce(le_c[0], child_c, child_r, z, P)
+    np.testing.assert_allclose([fc.real, fc.imag], [fp.real, fp.imag],
+                               rtol=1e-9, atol=1e-12)
+
+
+def test_p2m_translation_invariance():
+    """Shifting all particles and the center together shifts nothing."""
+    rng = np.random.default_rng(5)
+    src = rand_cluster(rng, 10, (0.3, 0.3), 0.1)
+    me1 = ref.p2m_ref(src[None], np.array([[0.3, 0.3]]),
+                      np.array([[0.1]]), 8)
+    shifted = src.copy()
+    shifted[:, 0:2] += 10.0
+    me2 = ref.p2m_ref(shifted[None], np.array([[10.3, 10.3]]),
+                      np.array([[0.1]]), 8)
+    np.testing.assert_allclose(me1, me2, rtol=1e-9, atol=1e-9)

@@ -1,0 +1,58 @@
+//! Ablation: the tree-cut level k (§4's central design choice).
+//!
+//! The cut controls the subtree/process ratio: k too small -> too few
+//! subtrees to balance (the paper wants "more subtrees than processes");
+//! k too large -> the serial root tree and the reduce/scatter volumes
+//! grow.  The paper fixes k = 4 for P up to 64; this ablation shows the
+//! sweet spot and its sensitivity, plus the §8 recursive-cut motivation.
+
+use petfmm::bench::bench_header;
+use petfmm::config::RunConfig;
+use petfmm::coordinator::{make_backend, prepare_with_particles, workload};
+use petfmm::sched::OpCosts;
+
+fn main() {
+    bench_header("Ablation: cut level k (subtrees vs root-tree cost)");
+    let n: usize = std::env::var("PETFMM_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30_000);
+    let ranks = 16;
+    let levels = 8u8;
+    let base = RunConfig {
+        particles: n,
+        levels,
+        terms: 17,
+        ranks,
+        distribution: "lattice".into(),
+        ..Default::default()
+    };
+    let particles = workload::generate(&base).expect("workload");
+    let backend = make_backend(&base).expect("backend");
+    let costs = OpCosts::calibrate(backend.as_ref());
+    println!("N={n} L={levels} P={ranks} p=17 (lattice)\n");
+    println!("{:>3}{:>10}{:>12}{:>14}{:>12}{:>12}{:>10}", "k", "subtrees",
+             "imbalance", "makespan(s)", "root(s)", "comm(MB)", "LB(P)");
+    for k in 2..=6u8 {
+        let cfg = RunConfig { cut_level: k, ..base.clone() };
+        let problem =
+            prepare_with_particles(&cfg, particles.clone()).unwrap();
+        let res = problem
+            .simulate_calibrated(backend.as_ref(), Some(costs))
+            .unwrap();
+        println!(
+            "{:>3}{:>10}{:>12.4}{:>14.6}{:>12.6}{:>12.2}{:>10.4}",
+            k,
+            problem.cut.n_subtrees(),
+            problem.assignment.imbalance(),
+            res.makespan(),
+            res.stage_time("root"),
+            res.comm_bytes / 1e6,
+            res.load_balance()
+        );
+    }
+    println!("\npaper shape check: k=4 (256 subtrees for P=16..64) near \
+              the optimum; smaller k starves the balancer, larger k \
+              inflates the serial root stage and comm — the §8 \
+              recursive-cut motivation.");
+}

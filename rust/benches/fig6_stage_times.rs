@@ -1,0 +1,38 @@
+//! Bench: Fig. 6 — measured time per FMM stage for increasing P.
+//!
+//! Paper series: total time + stage times for N = 765,625, L = 10,
+//! k = 4, p = 17, P in {1,4,8,16,32,64}.  We run a scaled configuration
+//! (same leaf density) by default; pass a particle target via
+//! PETFMM_BENCH_N to go bigger.
+
+use petfmm::bench::{bench_header, time_once};
+use petfmm::config::RunConfig;
+use petfmm::coordinator::{make_backend, strong_scaling};
+
+fn main() {
+    bench_header("Fig. 6: stage times vs P (virtual seconds)");
+    let n: usize = std::env::var("PETFMM_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30_000);
+    let levels = ((n as f64 / 0.73).log2() / 2.0).round()
+        .clamp(4.0, 10.0) as u8;
+    let config = RunConfig {
+        particles: n,
+        levels,
+        cut_level: 4.min(levels - 1),
+        terms: 17,
+        distribution: "lattice".into(),
+        ..Default::default()
+    };
+    println!("config: {}", config.summary());
+    let backend = make_backend(&config).expect("backend");
+    let (series, secs) = time_once(|| {
+        strong_scaling(&config, &[1, 4, 8, 16, 32, 64], backend.as_ref())
+            .expect("scaling")
+    });
+    print!("{}", series.fig6_table());
+    println!("\npaper shape check: P2P and M2L dominate at P=1; every \
+              stage shrinks with P while comm grows.");
+    println!("(bench wall time {secs:.1}s)");
+}

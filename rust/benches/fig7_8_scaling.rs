@@ -1,0 +1,54 @@
+//! Bench: Figs. 7–8 — speedup S(N,P) (Eq. 18) and parallel efficiency
+//! E(N,P) (Eq. 19) vs P.
+//!
+//! Paper claims to check (shape, not absolute numbers): near-linear
+//! speedup through P = 32; >90% efficiency at 32 ranks and >85% at 64
+//! ranks for the balanced partition.
+
+use petfmm::bench::{bench_header, time_once};
+use petfmm::config::RunConfig;
+use petfmm::coordinator::{make_backend, strong_scaling};
+use petfmm::metrics::efficiency;
+
+fn main() {
+    bench_header("Figs. 7-8: speedup + parallel efficiency vs P");
+    let n: usize = std::env::var("PETFMM_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30_000);
+    let levels = ((n as f64 / 0.73).log2() / 2.0).round()
+        .clamp(4.0, 10.0) as u8;
+    let config = RunConfig {
+        particles: n,
+        levels,
+        cut_level: 4.min(levels - 1),
+        terms: 17,
+        distribution: "lattice".into(),
+        ..Default::default()
+    };
+    println!("config: {}", config.summary());
+    let backend = make_backend(&config).expect("backend");
+    let (series, secs) = time_once(|| {
+        strong_scaling(&config, &[1, 4, 8, 16, 32, 64], backend.as_ref())
+            .expect("scaling")
+    });
+    print!("{}", series.fig7_8_table());
+    let t1 = series.serial_time().unwrap();
+    for p in &series.points {
+        let claim = match p.ranks {
+            32 => Some(0.90),
+            64 => Some(0.85),
+            _ => None,
+        };
+        if let Some(c) = claim {
+            let e = efficiency(t1, p.total_time, p.ranks);
+            println!(
+                "paper claim @P={}: efficiency > {:.2} -> measured {:.3} \
+                 [{}]",
+                p.ranks, c, e,
+                if e > c { "reproduced" } else { "NOT reproduced" }
+            );
+        }
+    }
+    println!("(bench wall time {secs:.1}s)");
+}

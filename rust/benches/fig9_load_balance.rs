@@ -1,0 +1,50 @@
+//! Bench: Fig. 9 — the load-balance metric LB(P) (Eq. 20) together with
+//! total efficiency vs P.
+//!
+//! Paper claims: rank execution times within 5% of each other at P = 32
+//! (LB >= 0.95) and within 7% at P = 64 (LB >= 0.93).
+
+use petfmm::bench::{bench_header, time_once};
+use petfmm::config::RunConfig;
+use petfmm::coordinator::{make_backend, strong_scaling};
+
+fn main() {
+    bench_header("Fig. 9: load balance metric vs P");
+    let n: usize = std::env::var("PETFMM_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30_000);
+    let levels = ((n as f64 / 0.73).log2() / 2.0).round()
+        .clamp(4.0, 10.0) as u8;
+    let config = RunConfig {
+        particles: n,
+        levels,
+        cut_level: 4.min(levels - 1),
+        terms: 17,
+        distribution: "lattice".into(),
+        ..Default::default()
+    };
+    println!("config: {}", config.summary());
+    let backend = make_backend(&config).expect("backend");
+    let (series, secs) = time_once(|| {
+        strong_scaling(&config, &[1, 4, 8, 16, 32, 64], backend.as_ref())
+            .expect("scaling")
+    });
+    print!("{}", series.fig9_table());
+    for p in &series.points {
+        let claim = match p.ranks {
+            32 => Some(0.95),
+            64 => Some(0.93),
+            _ => None,
+        };
+        if let Some(c) = claim {
+            println!(
+                "paper claim @P={}: LB >= {:.2} -> measured {:.4} [{}]",
+                p.ranks, c, p.load_balance,
+                if p.load_balance >= c { "reproduced" }
+                else { "NOT reproduced" }
+            );
+        }
+    }
+    println!("(bench wall time {secs:.1}s)");
+}

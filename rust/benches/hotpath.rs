@@ -1,0 +1,83 @@
+//! Bench: operator hot paths — P2P and M2L throughput per backend.
+//!
+//! These are the two dominant terms of the Greengard–Gropp model
+//! (d·NB/P direct interactions, c·N/(BP) transforms).  Measures batched
+//! operator throughput for the native backend and, when artifacts are
+//! present, the PJRT (jax/pallas) backend, plus batch-size sensitivity
+//! for the §Perf iteration log.
+
+use petfmm::bench::{bench, bench_header, fmt_time};
+use petfmm::fmm::{BiotSavart2D, NativeBackend, OpDims, OpsBackend};
+use petfmm::proptest::Gen;
+use petfmm::runtime::PjrtBackend;
+
+fn rand_buf(g: &mut Gen, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+    (0..n).map(|_| g.f64_in(lo, hi)).collect()
+}
+
+fn bench_backend(name: &str, be: &dyn OpsBackend, g: &mut Gen) {
+    let d = be.dims();
+    let (b, s, p) = (d.batch, d.leaf, d.terms);
+    let targets = rand_buf(g, b * s * 3, 0.0, 1.0);
+    let sources = rand_buf(g, b * s * 3, 0.0, 1.0);
+    let me = rand_buf(g, b * p * 2, -1.0, 1.0);
+    let tau: Vec<f64> = (0..b).flat_map(|_| [3.0, 1.5]).collect();
+    let inv_r = vec![64.0; b];
+    let centers = rand_buf(g, b * 2, 0.3, 0.7);
+    let radius = vec![0.05; b];
+
+    let s1 = bench(&format!("{name}/p2p  B={b} S={s}"), 3, 15, || {
+        std::hint::black_box(be.p2p(&targets, &sources));
+    });
+    let pairs = (b * s * s) as f64;
+    println!("{}   [{:.1} Mpairs/s]", s1.report(),
+             pairs / s1.median() / 1e6);
+
+    let s2 = bench(&format!("{name}/m2l  B={b} P={p}"), 3, 15, || {
+        std::hint::black_box(be.m2l(&me, &tau, &inv_r));
+    });
+    println!("{}   [{:.2} Mxform/s]", s2.report(),
+             b as f64 / s2.median() / 1e6);
+
+    let s3 = bench(&format!("{name}/p2m  B={b} S={s}"), 3, 15, || {
+        std::hint::black_box(be.p2m(&targets, &centers, &radius));
+    });
+    println!("{}", s3.report());
+
+    let s4 = bench(&format!("{name}/m2m  B={b} P={p}"), 3, 15, || {
+        std::hint::black_box(be.m2m(&me, &tau, &radius));
+    });
+    println!("{}", s4.report());
+}
+
+fn main() {
+    bench_header("Hot paths: P2P + M2L operator throughput");
+    let mut g = Gen::new(1234);
+
+    let dims = OpDims { batch: 64, leaf: 32, terms: 17, sigma: 0.02 };
+    let native = NativeBackend::new(dims, BiotSavart2D::new(0.02));
+    bench_backend("native", &native, &mut g);
+
+    // honours $PETFMM_ARTIFACTS (e.g. a --batch 256 build) for sweeps
+    match PjrtBackend::load_default() {
+        Ok(pjrt) => bench_backend("pjrt", &pjrt, &mut g),
+        Err(e) => println!("pjrt backend skipped: {e:#}"),
+    }
+
+    // batch-size sensitivity (native): the padding/dispatch trade-off
+    println!("\nbatch-size sweep (native p2p, fixed 2048 box-pairs):");
+    for batch in [8usize, 16, 32, 64, 128, 256] {
+        let d = OpDims { batch, leaf: 32, terms: 17, sigma: 0.02 };
+        let be = NativeBackend::new(d, BiotSavart2D::new(0.02));
+        let t = rand_buf(&mut g, batch * 32 * 3, 0.0, 1.0);
+        let s = rand_buf(&mut g, batch * 32 * 3, 0.0, 1.0);
+        let calls = 2048 / batch;
+        let res = bench(&format!("B={batch}"), 2, 9, || {
+            for _ in 0..calls {
+                std::hint::black_box(be.p2p(&t, &s));
+            }
+        });
+        println!("  B={batch:>4}: {:>12} per 2048 boxes",
+                 fmt_time(res.median()));
+    }
+}

@@ -1,0 +1,95 @@
+//! Bench: Tables 1–2 — the §5.3 memory model vs measured structure
+//! sizes.
+//!
+//! Table 1 rows are analytic; the "measured" column instruments the
+//! actual rust structures (particle storage, coefficient maps, overlap
+//! maps) on a live problem so the model's linearity claims are checked
+//! against reality.
+
+use petfmm::bench::bench_header;
+use petfmm::comm::{interaction_overlap, neighbor_overlap};
+use petfmm::config::RunConfig;
+use petfmm::coordinator::prepare;
+use petfmm::fmm::{BiotSavart2D, Evaluator, NativeBackend, OpDims};
+use petfmm::model::{parallel_memory, serial_memory};
+
+fn main() {
+    bench_header("Tables 1-2: memory model vs measured");
+    let config = RunConfig {
+        particles: 50_000,
+        levels: 7,
+        terms: 17,
+        ranks: 16,
+        distribution: "lattice".into(),
+        ..Default::default()
+    };
+    println!("config: {}\n", config.summary());
+    let problem = prepare(&config).expect("prepare");
+    let tree = &problem.tree;
+
+    // ---- Table 1 (serial) ----
+    println!("--- Table 1: serial memory (bytes) ---");
+    println!("{:<26}{:>16}{:>16}", "type", "bookkeeping", "data");
+    let rows = serial_memory(tree.levels, config.terms,
+                             tree.n_particles(),
+                             tree.max_leaf_occupancy());
+    let mut model_total = 0.0;
+    for r in &rows {
+        println!("{:<26}{:>16.0}{:>16.0}", r.name, r.bookkeeping, r.data);
+        model_total += r.bookkeeping + r.data;
+    }
+    println!("model total: {:.2} MB", model_total / 1e6);
+
+    // measured: run the FMM and add up live structure sizes
+    let dims = OpDims {
+        batch: 64, leaf: 32, terms: config.terms, sigma: config.sigma,
+    };
+    let backend = NativeBackend::new(dims, BiotSavart2D::new(config.sigma));
+    let ev = Evaluator::new(tree, &backend);
+    let state = ev.evaluate();
+    let me_bytes: usize =
+        state.me.values().map(|v| v.len() * 8 + 32).sum();
+    let le_bytes: usize =
+        state.le.values().map(|v| v.len() * 8 + 32).sum();
+    let part_bytes = tree.particles.len() * 24;
+    println!("\nmeasured live structures:");
+    println!("  multipole coefficients: {:>12} bytes ({} boxes)",
+             me_bytes, state.me.len());
+    println!("  local coefficients:     {:>12} bytes ({} boxes)",
+             le_bytes, state.le.len());
+    println!("  particle storage:       {:>12} bytes", part_bytes);
+    let model_coeff = 16.0 * config.terms as f64;
+    println!("  model says 16p = {:.0} B/box -> measured {:.1} B/box \
+              (plus map overhead)",
+             model_coeff,
+             me_bytes as f64 / state.me.len().max(1) as f64);
+
+    // ---- Table 2 (parallel) ----
+    println!("\n--- Table 2: parallel memory (per process, bytes) ---");
+    let nb = neighbor_overlap(tree, &problem.cut, &problem.assignment);
+    let il = interaction_overlap(tree, &problem.cut, &problem.assignment);
+    let n_bd = nb.max_boundary_boxes(config.ranks)
+        .max(il.max_boundary_boxes(config.ranks));
+    let rows = parallel_memory(config.ranks, problem.cut.n_subtrees(),
+                               n_bd, tree.max_leaf_occupancy());
+    println!("{:<28}{:>16}{:>16}", "type", "bookkeeping", "data");
+    for r in &rows {
+        let bk = if r.bookkeeping.is_nan() { "N/A".to_string() }
+                 else { format!("{:.0}", r.bookkeeping) };
+        println!("{:<28}{:>16}{:>16.0}", r.name, bk, r.data);
+    }
+    println!("\nmeasured overlap structures: neighbor arrows {}, \
+              interaction arrows {}, max boundary boxes {}",
+             nb.n_arrows(), il.n_arrows(), n_bd);
+
+    // linearity check (§5.3 claim: memory linear in N and leaf boxes)
+    println!("\n--- linearity check (model) ---");
+    for n in [10_000usize, 20_000, 40_000] {
+        let total: f64 = serial_memory(7, 17, n, 32)
+            .iter()
+            .map(|r| r.bookkeeping + r.data)
+            .sum();
+        println!("  N = {n:>6}: {:.3} MB", total / 1e6);
+    }
+    println!("paper claim: growth is linear in N (slope = 28 B/particle)");
+}

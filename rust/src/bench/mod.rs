@@ -1,0 +1,135 @@
+//! Micro/meso benchmark harness (the `criterion` crate is not in the
+//! offline registry — DESIGN.md §6): warmup + fixed-count sampling with
+//! median / MAD / min reporting, used by the `rust/benches/*.rs` targets
+//! (`harness = false`).
+
+use std::time::Instant;
+
+/// One benchmark measurement set.
+#[derive(Clone, Debug)]
+pub struct Samples {
+    pub name: String,
+    /// seconds per iteration, one entry per sample
+    pub secs: Vec<f64>,
+}
+
+impl Samples {
+    pub fn median(&self) -> f64 {
+        let mut s = self.secs.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            0.5 * (s[n / 2 - 1] + s[n / 2])
+        }
+    }
+
+    /// Median absolute deviation (robust spread).
+    pub fn mad(&self) -> f64 {
+        let med = self.median();
+        let devs = Samples {
+            name: String::new(),
+            secs: self.secs.iter().map(|x| (x - med).abs()).collect(),
+        };
+        devs.median()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.secs.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// One-line report: `name  median ± mad  (min)`.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} ± {:<10} (min {})",
+            self.name,
+            fmt_time(self.median()),
+            fmt_time(self.mad()),
+            fmt_time(self.min())
+        )
+    }
+}
+
+/// Human time formatting (s / ms / µs / ns).
+pub fn fmt_time(secs: f64) -> String {
+    if !secs.is_finite() {
+        return "n/a".into();
+    }
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3}µs", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+/// Benchmark runner: `warmup` throwaway runs, then `samples` timed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize,
+                         mut f: F) -> Samples {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut secs = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        secs.push(t0.elapsed().as_secs_f64());
+    }
+    Samples { name: name.to_string(), secs }
+}
+
+/// Time a single closure (for one-shot, long-running measurements).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Standard header for bench binaries.
+pub fn bench_header(title: &str) {
+    println!("\n=== {title} ===");
+    println!("host: {} core(s); backend timings are wall-clock",
+             std::thread::available_parallelism()
+                 .map(|n| n.get())
+                 .unwrap_or(1));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_and_mad() {
+        let s = Samples {
+            name: "t".into(),
+            secs: vec![1.0, 2.0, 3.0, 4.0, 100.0],
+        };
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.mad(), 1.0);
+        assert_eq!(s.min(), 1.0);
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let s = bench("noop-ish", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.secs.len(), 5);
+        assert!(s.median() >= 0.0);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(2.0), "2.000s");
+        assert_eq!(fmt_time(2.5e-3), "2.500ms");
+        assert_eq!(fmt_time(3.0e-6), "3.000µs");
+        assert!(fmt_time(5.0e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,73 @@
+//! Typed inter-rank messages and their wire-size accounting.
+//!
+//! Two payload families exist in the FMM (§5.1): particle blocks (near
+//! field halos) and expansion-coefficient blocks (M2M / M2L / L2L).
+//! Byte sizes follow the paper's constants: a particle is B = 28 bytes
+//! (x, y, γ + tag), an expansion block is 16·p bytes (p complex f64).
+
+use crate::quadtree::BoxId;
+
+/// Payload moved between ranks.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// Leaf particles for near-field halo (P2P).
+    Particles { leaf: BoxId, parts: Vec<[f64; 3]> },
+    /// Multipole expansion of a box (upward reduce / M2L exchange).
+    Multipole { boxid: BoxId, coeffs: Vec<f64> },
+    /// Local expansion of a box (downward scatter).
+    Local { boxid: BoxId, coeffs: Vec<f64> },
+    /// Computed velocities for a set of particle indices (final gather).
+    Velocities { idx: Vec<u32>, vel: Vec<[f64; 2]> },
+    /// Stage barrier token.
+    Barrier(u32),
+}
+
+/// Paper constant: bytes per particle on the wire.
+pub const PARTICLE_WIRE_BYTES: f64 = 28.0;
+
+impl Message {
+    /// Modeled wire size in bytes (headers ignored; the α term of the
+    /// network model covers per-message overhead).
+    pub fn wire_bytes(&self) -> f64 {
+        match self {
+            Message::Particles { parts, .. } => {
+                PARTICLE_WIRE_BYTES * parts.len() as f64
+            }
+            Message::Multipole { coeffs, .. }
+            | Message::Local { coeffs, .. } => 8.0 * coeffs.len() as f64,
+            Message::Velocities { vel, .. } => 16.0 * vel.len() as f64,
+            Message::Barrier(_) => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expansion_block_is_16p() {
+        // p complex coefficients stored as 2p f64 = 16p bytes — exactly
+        // the alpha_comm constant of Eq. 11/12
+        let p = 17;
+        let m = Message::Multipole {
+            boxid: BoxId::ROOT,
+            coeffs: vec![0.0; 2 * p],
+        };
+        assert_eq!(m.wire_bytes(), 16.0 * p as f64);
+    }
+
+    #[test]
+    fn particle_block_uses_paper_constant() {
+        let m = Message::Particles {
+            leaf: BoxId::ROOT,
+            parts: vec![[0.0; 3]; 10],
+        };
+        assert_eq!(m.wire_bytes(), 280.0);
+    }
+
+    #[test]
+    fn barrier_is_free() {
+        assert_eq!(Message::Barrier(3).wire_bytes(), 0.0);
+    }
+}

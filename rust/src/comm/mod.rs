@@ -1,0 +1,14 @@
+//! Simulated distributed runtime (DESIGN.md §6 substitution for the
+//! paper's MPI/BlueCrystal testbed): typed messages, α–β network cost
+//! model, Sieve-style overlap maps, and a threaded message-passing mode
+//! that physically exercises the parallel protocol.
+
+pub mod message;
+pub mod network;
+pub mod overlap;
+pub mod threaded;
+
+pub use message::{Message, PARTICLE_WIRE_BYTES};
+pub use network::NetworkModel;
+pub use overlap::{interaction_overlap, neighbor_overlap, owner_of,
+                  OverlapMap};

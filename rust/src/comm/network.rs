@@ -1,0 +1,108 @@
+//! Network cost model (the α–β model) for the simulated cluster.
+//!
+//! The paper's testbed is BlueCrystal-I: QLogic InfiniPath interconnect
+//! (§7.1).  We do not have a 64-node cluster (DESIGN.md §6), so message
+//! costs are *modeled*: `t(bytes) = latency + bytes / bandwidth`, with
+//! InfiniPath-era defaults (~1.3 μs latency, ~950 MB/s effective per-link
+//! bandwidth).  Collectives use log₂P trees, matching 2009 MPI practice.
+
+/// α–β point-to-point cost model.
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkModel {
+    /// per-message latency α (seconds)
+    pub latency: f64,
+    /// link bandwidth β (bytes/second)
+    pub bandwidth: f64,
+}
+
+impl NetworkModel {
+    /// QLogic InfiniPath (BlueCrystal-I era) constants.
+    pub fn infinipath() -> Self {
+        NetworkModel { latency: 1.3e-6, bandwidth: 950.0e6 }
+    }
+
+    /// An idealized zero-cost network (for ablations: isolates load
+    /// imbalance from communication overhead).
+    pub fn ideal() -> Self {
+        NetworkModel { latency: 0.0, bandwidth: f64::INFINITY }
+    }
+
+    /// A slow-ethernet profile (the paper's "low bandwidth connections"
+    /// robustness claim, §8).
+    pub fn gigabit_ethernet() -> Self {
+        NetworkModel { latency: 50.0e-6, bandwidth: 110.0e6 }
+    }
+
+    /// Point-to-point message cost in seconds.
+    #[inline]
+    pub fn p2p_cost(&self, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        self.latency + bytes / self.bandwidth
+    }
+
+    /// Cost of a binomial-tree collective (reduce/bcast/gather) over
+    /// `ranks` processes moving `bytes` per hop.
+    #[inline]
+    pub fn collective_cost(&self, ranks: usize, bytes: f64) -> f64 {
+        if ranks <= 1 {
+            return 0.0;
+        }
+        let hops = (ranks as f64).log2().ceil();
+        hops * self.p2p_cost(bytes)
+    }
+
+    pub fn parse(name: &str) -> Option<NetworkModel> {
+        match name {
+            "infinipath" => Some(Self::infinipath()),
+            "ideal" => Some(Self::ideal()),
+            "ethernet" | "gige" => Some(Self::gigabit_ethernet()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::check;
+
+    #[test]
+    fn zero_bytes_costs_nothing() {
+        let n = NetworkModel::infinipath();
+        assert_eq!(n.p2p_cost(0.0), 0.0);
+    }
+
+    #[test]
+    fn latency_floor() {
+        let n = NetworkModel::infinipath();
+        assert!(n.p2p_cost(1.0) >= n.latency);
+    }
+
+    #[test]
+    fn prop_cost_monotone_in_bytes() {
+        check("cost monotone", 32, |g| {
+            let n = NetworkModel::infinipath();
+            let a = g.f64_in(1.0, 1e9);
+            let b = a + g.f64_in(0.0, 1e9);
+            assert!(n.p2p_cost(b) >= n.p2p_cost(a));
+        });
+    }
+
+    #[test]
+    fn collective_is_logarithmic() {
+        let n = NetworkModel::infinipath();
+        let c2 = n.collective_cost(2, 1e6);
+        let c64 = n.collective_cost(64, 1e6);
+        assert!((c64 / c2 - 6.0).abs() < 1e-9); // log2(64)/log2(2)
+        assert_eq!(n.collective_cost(1, 1e6), 0.0);
+    }
+
+    #[test]
+    fn ideal_network_is_free() {
+        let n = NetworkModel::ideal();
+        assert_eq!(n.p2p_cost(1e12), 0.0);
+        assert_eq!(n.collective_cost(64, 1e12), 0.0);
+    }
+}

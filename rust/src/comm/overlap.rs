@@ -1,0 +1,183 @@
+//! Overlap structures: box-to-box send/recv maps across ranks.
+//!
+//! The rust analogue of PETSc Sieve's overlap structures the paper uses
+//! (§5.3, Table 2): for each rank pair, which boxes' data must flow.
+//! Two kinds exist, mirroring Table 2:
+//!
+//! * **neighbor overlap** — leaf boxes whose particles are needed by an
+//!   adjacent leaf owned by another rank (P2P halo);
+//! * **interaction overlap** — boxes (levels > cut) whose MEs are needed
+//!   by an interaction-list member owned by another rank (M2L exchange).
+
+use std::collections::HashMap;
+
+use crate::partition::Assignment;
+use crate::quadtree::{interaction_list, near_domain, BoxId, Quadtree,
+                      TreeCut};
+
+/// Directed overlap: (from_rank, to_rank) -> boxes whose data flows.
+#[derive(Clone, Debug, Default)]
+pub struct OverlapMap {
+    pub sends: HashMap<(usize, usize), Vec<BoxId>>,
+}
+
+impl OverlapMap {
+    fn add(&mut self, from: usize, to: usize, b: BoxId) {
+        let list = self.sends.entry((from, to)).or_default();
+        if !list.contains(&b) {
+            list.push(b);
+        }
+    }
+
+    /// Total number of arrows (box-to-rank relations).
+    pub fn n_arrows(&self) -> usize {
+        self.sends.values().map(Vec::len).sum()
+    }
+
+    /// Boxes rank `from` must send to rank `to`.
+    pub fn boxes(&self, from: usize, to: usize) -> &[BoxId] {
+        self.sends
+            .get(&(from, to))
+            .map(Vec::as_slice)
+            .unwrap_or(&[])
+    }
+
+    /// Maximum number of distinct boundary boxes any rank sends
+    /// (the N_bd of Table 2).
+    pub fn max_boundary_boxes(&self, ranks: usize) -> usize {
+        (0..ranks)
+            .map(|r| {
+                let mut boxes: Vec<BoxId> = self
+                    .sends
+                    .iter()
+                    .filter(|((from, _), _)| *from == r)
+                    .flat_map(|(_, v)| v.iter().copied())
+                    .collect();
+                boxes.sort();
+                boxes.dedup();
+                boxes.len()
+            })
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Rank that owns a box at level >= cut.
+pub fn owner_of(cut: &TreeCut, assignment: &Assignment, b: &BoxId)
+    -> usize {
+    assignment.part[cut.subtree_index(&cut.subtree_of(b))]
+}
+
+/// Build the neighbor (P2P halo) overlap: occupied leaves adjacent to a
+/// leaf owned by a different rank.
+pub fn neighbor_overlap(
+    tree: &Quadtree,
+    cut: &TreeCut,
+    assignment: &Assignment,
+) -> OverlapMap {
+    let mut map = OverlapMap::default();
+    for tgt in &tree.occupied_leaves {
+        let tgt_rank = owner_of(cut, assignment, tgt);
+        for src in near_domain(tgt) {
+            if tree.particles_in(&src).is_empty() {
+                continue;
+            }
+            let src_rank = owner_of(cut, assignment, &src);
+            if src_rank != tgt_rank {
+                map.add(src_rank, tgt_rank, src);
+            }
+        }
+    }
+    map
+}
+
+/// Build the interaction (M2L) overlap for all levels below the cut:
+/// source boxes whose ME crosses a rank boundary.
+pub fn interaction_overlap(
+    tree: &Quadtree,
+    cut: &TreeCut,
+    assignment: &Assignment,
+) -> OverlapMap {
+    let mut map = OverlapMap::default();
+    for lvl in (cut.cut_level + 1)..=tree.levels {
+        for tgt in tree.occupied_at_level(lvl) {
+            let tgt_rank = owner_of(cut, assignment, &tgt);
+            for src in interaction_list(&tgt) {
+                // ME exists only for boxes with occupied descendants;
+                // cheap check via the leaf ancestor structure
+                let src_rank = owner_of(cut, assignment, &src);
+                if src_rank != tgt_rank {
+                    map.add(src_rank, tgt_rank, src);
+                }
+            }
+        }
+    }
+    map
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::{assign_subtrees, Strategy};
+    use crate::proptest::check;
+    use crate::quadtree::Domain;
+
+    fn setup(g: &mut crate::proptest::Gen, levels: u8, k: u8, ranks: usize)
+        -> (Quadtree, TreeCut, Assignment) {
+        let parts = g.particles(500);
+        let tree = Quadtree::build(Domain::UNIT, levels, parts);
+        let cut = TreeCut::new(levels, k);
+        let a = assign_subtrees(&tree, &cut, 5, ranks,
+                                Strategy::Optimized, g.seed);
+        (tree, cut, a)
+    }
+
+    #[test]
+    fn prop_no_self_sends() {
+        check("overlap no self sends", 8, |g| {
+            let (tree, cut, a) = setup(g, 4, 2, 4);
+            for map in [neighbor_overlap(&tree, &cut, &a),
+                        interaction_overlap(&tree, &cut, &a)] {
+                for (from, to) in map.sends.keys() {
+                    assert_ne!(from, to);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_neighbor_overlap_boxes_are_owned_by_sender() {
+        check("overlap ownership", 8, |g| {
+            let (tree, cut, a) = setup(g, 4, 2, 4);
+            let map = neighbor_overlap(&tree, &cut, &a);
+            for ((from, _), boxes) in &map.sends {
+                for b in boxes {
+                    assert_eq!(owner_of(&cut, &a, b), *from);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn single_rank_has_no_overlap() {
+        let mut g = crate::proptest::Gen::new(3);
+        let (tree, cut, a) = setup(&mut g, 4, 2, 1);
+        assert_eq!(neighbor_overlap(&tree, &cut, &a).n_arrows(), 0);
+        assert_eq!(interaction_overlap(&tree, &cut, &a).n_arrows(), 0);
+    }
+
+    #[test]
+    fn prop_interaction_overlap_crosses_cut_boundaries_only() {
+        check("il overlap subtree boundary", 8, |g| {
+            let (tree, cut, a) = setup(g, 4, 2, 4);
+            let map = interaction_overlap(&tree, &cut, &a);
+            for ((from, to), boxes) in &map.sends {
+                for b in boxes {
+                    // the box's subtree owner differs from the receiver
+                    assert_eq!(owner_of(&cut, &a, b), *from);
+                    assert_ne!(owner_of(&cut, &a, b), *to);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,418 @@
+//! Threaded message-passing execution: the parallel FMM protocol run for
+//! real, one OS thread per rank, full-mesh mpsc channels, no shared
+//! mutable state.
+//!
+//! Each rank sees ONLY its own particles plus what arrives in messages —
+//! exactly the information an MPI rank would hold.  This mode validates
+//! the distributed protocol (the virtual-time simulator reuses the same
+//! plan but executes on shared state); its results must match the serial
+//! evaluator, which is the §6.2 verification methodology.
+//!
+//! Geometry note: box centers/radii derive from `BoxId` + domain alone,
+//! so ranks need no remote geometry — the paper makes the same
+//! observation ("all relations can be dynamically generated", §5.3).
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+
+use super::message::Message;
+use super::overlap::{interaction_overlap, neighbor_overlap, owner_of};
+use crate::fmm::{BiotSavart2D, Evaluator, FmmState, NativeBackend,
+                 OpDims};
+use crate::partition::Assignment;
+use crate::quadtree::{BoxId, Domain, Quadtree, TreeCut};
+use crate::sched::ParallelPlan;
+
+/// A (from, payload) envelope.
+type Envelope = (usize, Message);
+
+/// Run the distributed FMM with real threads + channels.
+/// Returns per-particle velocities in the global particle order.
+pub fn run_threaded(
+    domain: Domain,
+    levels: u8,
+    particles: &[[f64; 3]],
+    cut: &TreeCut,
+    assignment: &Assignment,
+    dims: OpDims,
+) -> Vec<[f64; 2]> {
+    let ranks = assignment.ranks;
+    let global_tree =
+        Arc::new(Quadtree::build(domain, levels, particles.to_vec()));
+    let plan = Arc::new(ParallelPlan::build(&global_tree, cut, assignment));
+    let nb_overlap =
+        Arc::new(neighbor_overlap(&global_tree, cut, assignment));
+    let il_overlap =
+        Arc::new(interaction_overlap(&global_tree, cut, assignment));
+    let cut = Arc::new(cut.clone());
+    let assignment = Arc::new(assignment.clone());
+
+    // full mesh of channels
+    let mut senders: Vec<mpsc::Sender<Envelope>> = Vec::new();
+    let mut receivers: Vec<Option<mpsc::Receiver<Envelope>>> = Vec::new();
+    for _ in 0..ranks {
+        let (tx, rx) = mpsc::channel();
+        senders.push(tx);
+        receivers.push(Some(rx));
+    }
+
+    // per-rank own particles with global indices
+    let mut own: Vec<Vec<([f64; 3], u32)>> = vec![Vec::new(); ranks];
+    for (i, p) in particles.iter().enumerate() {
+        let leaf = domain.locate(levels, p[0], p[1]);
+        let r = owner_of(&cut, &assignment, &leaf);
+        own[r].push((*p, i as u32));
+    }
+
+    let mut handles = Vec::new();
+    for r in 0..ranks {
+        let rx = receivers[r].take().unwrap();
+        let txs = senders.clone();
+        let my_parts = std::mem::take(&mut own[r]);
+        let plan = plan.clone();
+        let nb = nb_overlap.clone();
+        let il = il_overlap.clone();
+        let cut = cut.clone();
+        let assignment = assignment.clone();
+        let gtree = global_tree.clone();
+
+        handles.push(thread::spawn(move || {
+            rank_main(r, ranks, rx, txs, my_parts, domain, levels, &plan,
+                      &nb, &il, &cut, &assignment, &gtree, dims)
+        }));
+    }
+    drop(senders);
+
+    let mut vel = vec![[0.0; 2]; particles.len()];
+    for h in handles {
+        if let Some(partial) = h.join().expect("rank thread panicked") {
+            for (i, v) in partial {
+                vel[i as usize] = v;
+            }
+        }
+    }
+    vel
+}
+
+#[allow(clippy::too_many_arguments)]
+fn rank_main(
+    rank: usize,
+    ranks: usize,
+    rx: mpsc::Receiver<Envelope>,
+    txs: Vec<mpsc::Sender<Envelope>>,
+    my_parts: Vec<([f64; 3], u32)>,
+    domain: Domain,
+    levels: u8,
+    plan: &ParallelPlan,
+    nb_overlap: &super::overlap::OverlapMap,
+    il_overlap: &super::overlap::OverlapMap,
+    cut: &TreeCut,
+    assignment: &Assignment,
+    gtree: &Quadtree,
+    dims: OpDims,
+) -> Option<Vec<(u32, [f64; 2])>> {
+    let backend = NativeBackend::new(dims, BiotSavart2D::new(dims.sigma));
+
+    // ---- phase A: halo exchange (send own boundary leaf particles) ----
+    let mut my_leaf_parts: HashMap<BoxId, Vec<[f64; 3]>> = HashMap::new();
+    for (p, _) in &my_parts {
+        let leaf = domain.locate(levels, p[0], p[1]);
+        my_leaf_parts.entry(leaf).or_default().push(*p);
+    }
+    let mut expected_halo = 0usize;
+    for ((from, to), boxes) in &nb_overlap.sends {
+        if *from == rank {
+            for b in boxes {
+                txs[*to]
+                    .send((rank, Message::Particles {
+                        leaf: *b,
+                        parts: my_leaf_parts.get(b).cloned()
+                            .unwrap_or_default(),
+                    }))
+                    .expect("send halo");
+            }
+        }
+        if *to == rank {
+            expected_halo += boxes.len();
+        }
+    }
+    let mut halo_parts: Vec<[f64; 3]> = Vec::new();
+    let mut inbox: Vec<Envelope> = Vec::new();
+    let mut got = 0;
+    while got < expected_halo {
+        let (from, msg) = rx.recv().expect("recv halo");
+        match msg {
+            Message::Particles { parts, .. } => {
+                halo_parts.extend(parts);
+                got += 1;
+            }
+            other => inbox.push((from, other)), // early arrivals
+        }
+    }
+
+    // ---- local tree: own + halo particles (global ids for own only) ----
+    let mut local_particles: Vec<[f64; 3]> =
+        my_parts.iter().map(|(p, _)| *p).collect();
+    let global_ids: Vec<u32> = my_parts.iter().map(|(_, i)| *i).collect();
+    let n_own = local_particles.len();
+    local_particles.extend(halo_parts);
+    let tree = Quadtree::build(domain, levels, local_particles);
+    let ev = Evaluator::new(&tree, &backend);
+    let mut state = FmmState::new(tree.n_particles());
+
+    // ---- phase B: upward sweep (local) ----
+    ev.run_p2m(&plan.leaves[rank], &mut state);
+    for li in (0..plan.m2m_children[rank].len()).rev() {
+        ev.run_m2m(&plan.m2m_children[rank][li], &mut state);
+    }
+
+    // ---- phase C: ME reduce -> root sweep on rank 0 -> LE scatter ----
+    let k = cut.cut_level;
+    let occupied_roots: Vec<BoxId> = gtree
+        .occupied_at_level(k)
+        .into_iter()
+        .collect();
+    let mut expected_les = 0usize;
+    let mut expected_root_mes = 0usize;
+    for st in &occupied_roots {
+        let o = owner_of(cut, assignment, st);
+        if o == rank && rank != 0 {
+            let me = state.me.get(st).cloned().unwrap_or_else(|| {
+                vec![0.0; dims.terms * 2]
+            });
+            txs[0]
+                .send((rank, Message::Multipole { boxid: *st, coeffs: me }))
+                .expect("send reduce");
+            expected_les += 1;
+        }
+        if rank == 0 && o != 0 {
+            expected_root_mes += 1;
+        }
+    }
+
+    let recv_or_stash = |state: &mut FmmState,
+                             inbox: &mut Vec<Envelope>,
+                             want_mul: &mut usize,
+                             want_loc: &mut usize,
+                             rx: &mpsc::Receiver<Envelope>| {
+        // drain stashed first
+        let mut rest = Vec::new();
+        for (from, msg) in inbox.drain(..) {
+            match msg {
+                Message::Multipole { boxid, coeffs } if *want_mul > 0 => {
+                    accumulate(&mut state.me, boxid, &coeffs);
+                    *want_mul -= 1;
+                }
+                Message::Local { boxid, coeffs } if *want_loc > 0 => {
+                    accumulate(&mut state.le, boxid, &coeffs);
+                    *want_loc -= 1;
+                }
+                other => rest.push((from, other)),
+            }
+        }
+        *inbox = rest;
+        while *want_mul > 0 || *want_loc > 0 {
+            let (from, msg) = rx.recv().expect("recv coeffs");
+            match msg {
+                Message::Multipole { boxid, coeffs } if *want_mul > 0 => {
+                    accumulate(&mut state.me, boxid, &coeffs);
+                    *want_mul -= 1;
+                }
+                Message::Local { boxid, coeffs } if *want_loc > 0 => {
+                    accumulate(&mut state.le, boxid, &coeffs);
+                    *want_loc -= 1;
+                }
+                other => inbox.push((from, other)),
+            }
+        }
+    };
+
+    if rank == 0 {
+        let mut want = expected_root_mes;
+        let mut zero = 0usize;
+        recv_or_stash(&mut state, &mut inbox, &mut want, &mut zero, &rx);
+        // root sweep
+        for children in &plan.root_m2m_children {
+            ev.run_m2m(children, &mut state);
+        }
+        ev.run_m2l(&plan.root_m2l_pairs, &mut state);
+        for children in &plan.root_l2l_children {
+            ev.run_l2l(children, &mut state);
+        }
+        // scatter LEs of subtree roots to owners
+        for st in &occupied_roots {
+            let o = owner_of(cut, assignment, st);
+            let le = state.le.get(st).cloned()
+                .unwrap_or_else(|| vec![0.0; dims.terms * 2]);
+            if o != 0 {
+                txs[o]
+                    .send((0, Message::Local { boxid: *st, coeffs: le }))
+                    .expect("send scatter");
+            }
+        }
+    } else {
+        let mut zero = 0usize;
+        let mut want = expected_les;
+        recv_or_stash(&mut state, &mut inbox, &mut zero, &mut want, &rx);
+    }
+
+    // ---- phase D: boundary ME exchange for M2L ----
+    let mut expected_mes = 0usize;
+    for ((from, to), boxes) in &il_overlap.sends {
+        if *from == rank {
+            for b in boxes {
+                if let Some(me) = state.me.get(b) {
+                    txs[*to]
+                        .send((rank, Message::Multipole {
+                            boxid: *b,
+                            coeffs: me.clone(),
+                        }))
+                        .expect("send me exchange");
+                }
+            }
+        }
+        if *to == rank {
+            expected_mes += boxes
+                .iter()
+                .filter(|b| {
+                    // sender only sends MEs that exist (occupied boxes)
+                    gtree
+                        .occupied_at_level(b.level)
+                        .contains(b)
+                })
+                .count();
+        }
+    }
+    let mut zero = 0usize;
+    recv_or_stash(&mut state, &mut inbox, &mut expected_mes, &mut zero,
+                  &rx);
+
+    // ---- phase E: local downward sweep + evaluation ----
+    let nlv = plan.m2l_pairs[rank].len();
+    for li in 0..nlv {
+        ev.run_l2l(&plan.l2l_children[rank][li], &mut state);
+        ev.run_m2l(&plan.m2l_pairs[rank][li], &mut state);
+    }
+    ev.run_p2p(&plan.p2p_pairs[rank], &mut state);
+    ev.run_l2p(&plan.leaves[rank], &mut state);
+
+    // ---- phase F: gather velocities at rank 0 ----
+    // local particle i < n_own corresponds to global_ids[i]; halo
+    // particles were appended after and carry no output.
+    // NOTE: local tree binning visits particles in insertion order, so
+    // local index i < n_own is exactly my_parts[i].
+    let out: Vec<(u32, [f64; 2])> = (0..n_own)
+        .map(|i| (global_ids[i], state.vel[i]))
+        .collect();
+    if rank == 0 {
+        let mut all = out;
+        // receive Velocities from every other rank
+        let mut expected: usize = (1..ranks)
+            .filter(|&r| plan.rank_particles[r] > 0)
+            .count();
+        for (_, msg) in inbox.drain(..) {
+            if let Message::Velocities { idx, vel } = msg {
+                all.extend(idx.into_iter().zip(vel));
+                expected -= 1;
+            }
+        }
+        while expected > 0 {
+            let (_, msg) = rx.recv().expect("recv velocities");
+            if let Message::Velocities { idx, vel } = msg {
+                all.extend(idx.into_iter().zip(vel));
+                expected -= 1;
+            }
+        }
+        Some(all)
+    } else {
+        if !out.is_empty() {
+            let (idx, vel): (Vec<u32>, Vec<[f64; 2]>) =
+                out.into_iter().unzip();
+            txs[0]
+                .send((rank, Message::Velocities { idx, vel }))
+                .expect("send velocities");
+        }
+        None
+    }
+}
+
+fn accumulate(dst: &mut HashMap<BoxId, Vec<f64>>, b: BoxId, c: &[f64]) {
+    match dst.entry(b) {
+        std::collections::hash_map::Entry::Occupied(mut e) => {
+            for (d, s) in e.get_mut().iter_mut().zip(c) {
+                *d += s;
+            }
+        }
+        std::collections::hash_map::Entry::Vacant(e) => {
+            e.insert(c.to_vec());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fmm::direct_all;
+    use crate::partition::{assign_subtrees, Strategy};
+    use crate::proptest::check;
+    use crate::util::rel_l2_error;
+
+    #[test]
+    fn threaded_matches_serial_fmm() {
+        check("threaded == serial", 3, |g| {
+            let parts = g.particles(250);
+            let levels = 4u8;
+            let tree =
+                Quadtree::build(Domain::UNIT, levels, parts.clone());
+            let cut = TreeCut::new(levels, 2);
+            let a = assign_subtrees(&tree, &cut, 8, 4,
+                                    Strategy::Optimized, g.seed);
+            let dims =
+                OpDims { batch: 16, leaf: 8, terms: 12, sigma: 0.01 };
+            let got = run_threaded(Domain::UNIT, levels, &parts, &cut, &a,
+                                   dims);
+            let backend = NativeBackend::new(dims, BiotSavart2D::new(0.01));
+            let want = Evaluator::new(&tree, &backend).evaluate().vel;
+            let err = rel_l2_error(&got, &want);
+            assert!(err < 1e-11, "threaded vs serial err {err}");
+        });
+    }
+
+    #[test]
+    fn threaded_matches_direct_clustered() {
+        check("threaded == direct", 2, |g| {
+            let parts = g.clustered_particles(300, 3);
+            let levels = 4u8;
+            let cut = TreeCut::new(levels, 2);
+            let tree =
+                Quadtree::build(Domain::UNIT, levels, parts.clone());
+            let a = assign_subtrees(&tree, &cut, 8, 6,
+                                    Strategy::SfcEqualCount, g.seed);
+            let dims =
+                OpDims { batch: 16, leaf: 8, terms: 17, sigma: 0.005 };
+            let got = run_threaded(Domain::UNIT, levels, &parts, &cut, &a,
+                                   dims);
+            let want = direct_all(&BiotSavart2D::new(0.005), &parts);
+            let err = rel_l2_error(&got, &want);
+            assert!(err < 2e-4, "threaded vs direct err {err}");
+        });
+    }
+
+    #[test]
+    fn threaded_single_rank_works() {
+        let mut g = crate::proptest::Gen::new(2);
+        let parts = g.particles(100);
+        let cut = TreeCut::new(3, 1);
+        let tree = Quadtree::build(Domain::UNIT, 3, parts.clone());
+        let a = assign_subtrees(&tree, &cut, 8, 1,
+                                Strategy::Optimized, 0);
+        let dims = OpDims { batch: 16, leaf: 8, terms: 10, sigma: 0.01 };
+        let got =
+            run_threaded(Domain::UNIT, 3, &parts, &cut, &a, dims);
+        let backend = NativeBackend::new(dims, BiotSavart2D::new(0.01));
+        let want = Evaluator::new(&tree, &backend).evaluate().vel;
+        assert!(rel_l2_error(&got, &want) < 1e-12);
+    }
+}

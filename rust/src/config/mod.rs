@@ -1,0 +1,231 @@
+//! Run configuration: typed config struct, an INI-style config-file
+//! parser (no `serde`/`toml` in the offline registry), and CLI overrides.
+//!
+//! Precedence: defaults < config file (`--config path`) < CLI flags.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::comm::NetworkModel;
+use crate::partition::Strategy;
+
+/// Full run configuration for the coordinator.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// number of particles (synthetic workloads)
+    pub particles: usize,
+    /// tree depth L
+    pub levels: u8,
+    /// cut level k (§4); 0 = choose automatically
+    pub cut_level: u8,
+    /// expansion terms p
+    pub terms: usize,
+    /// Gaussian core size σ
+    pub sigma: f64,
+    /// simulated process count P
+    pub ranks: usize,
+    /// partitioning strategy
+    pub strategy: Strategy,
+    /// network model name (infinipath | ideal | ethernet)
+    pub network: String,
+    /// particle distribution: lattice | uniform | clustered
+    pub distribution: String,
+    /// compute backend: native | pjrt
+    pub backend: String,
+    /// RNG seed
+    pub seed: u64,
+    /// artifact directory for the pjrt backend
+    pub artifacts: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            particles: 10_000,
+            levels: 5,
+            cut_level: 0,
+            terms: 17,
+            sigma: 0.02,
+            ranks: 4,
+            strategy: Strategy::Optimized,
+            network: "infinipath".into(),
+            distribution: "lattice".into(),
+            backend: "native".into(),
+            seed: 1,
+            artifacts: "artifacts".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Effective cut level: explicit, or the deepest level with at least
+    /// 4 subtrees per rank (the paper's "more subtrees than processes").
+    pub fn effective_cut(&self) -> u8 {
+        if self.cut_level > 0 {
+            return self.cut_level.min(self.levels);
+        }
+        for k in 1..self.levels {
+            if (1usize << (2 * k)) >= 4 * self.ranks {
+                return k;
+            }
+        }
+        (self.levels - 1).max(1)
+    }
+
+    pub fn network_model(&self) -> Result<NetworkModel> {
+        NetworkModel::parse(&self.network)
+            .ok_or_else(|| anyhow!("unknown network '{}'", self.network))
+    }
+
+    /// Apply one `key = value` (file) or `--key value` (CLI) setting.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "particles" | "n" => self.particles = value.parse()?,
+            "levels" | "l" => self.levels = value.parse()?,
+            "cut-level" | "cut_level" | "k" => {
+                self.cut_level = value.parse()?
+            }
+            "terms" | "p" => self.terms = value.parse()?,
+            "sigma" => self.sigma = value.parse()?,
+            "ranks" | "procs" => self.ranks = value.parse()?,
+            "strategy" => {
+                self.strategy = Strategy::parse(value).ok_or_else(|| {
+                    anyhow!("unknown strategy '{value}'")
+                })?
+            }
+            "network" => self.network = value.into(),
+            "distribution" | "dist" => self.distribution = value.into(),
+            "backend" => self.backend = value.into(),
+            "seed" => self.seed = value.parse()?,
+            "artifacts" => self.artifacts = value.into(),
+            _ => bail!("unknown config key '{key}'"),
+        }
+        Ok(())
+    }
+
+    /// Parse an INI-style config file body (comments `#`/`;`, sections
+    /// ignored, `key = value` lines).
+    pub fn apply_ini(&mut self, body: &str) -> Result<()> {
+        for (lineno, raw) in body.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty()
+                || line.starts_with('#')
+                || line.starts_with(';')
+                || (line.starts_with('[') && line.ends_with(']'))
+            {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value",
+                                       lineno + 1))?;
+            self.set(k.trim(), v.trim())
+                .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        }
+        Ok(())
+    }
+
+    /// Apply `--key value` / `--key=value` CLI arguments; returns
+    /// positional (non-flag) arguments.
+    pub fn apply_cli(&mut self, args: &[String]) -> Result<Vec<String>> {
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(flag) = a.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    self.set(k, v)?;
+                } else {
+                    let v = args
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow!("--{flag} needs a value"))?;
+                    self.set(flag, v)?;
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(positional)
+    }
+
+    /// Summarize for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "N={} L={} k={} p={} sigma={} P={} strategy={} network={} \
+             dist={} backend={} seed={}",
+            self.particles, self.levels, self.effective_cut(), self.terms,
+            self.sigma, self.ranks, self.strategy.name(), self.network,
+            self.distribution, self.backend, self.seed
+        )
+    }
+}
+
+/// Parse a raw `key=value` map (used by tools/tests).
+pub fn parse_kv(body: &str) -> HashMap<String, String> {
+    body.lines()
+        .filter_map(|l| l.split_once('='))
+        .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = RunConfig::default();
+        assert!(c.effective_cut() >= 1);
+        assert!(c.network_model().is_ok());
+    }
+
+    #[test]
+    fn ini_round() {
+        let mut c = RunConfig::default();
+        c.apply_ini(
+            "# comment\n[run]\nparticles = 500\nterms=9\n\
+             strategy = sfc\nnetwork = ethernet\n",
+        )
+        .unwrap();
+        assert_eq!(c.particles, 500);
+        assert_eq!(c.terms, 9);
+        assert_eq!(c.strategy, Strategy::SfcEqualCount);
+        assert_eq!(c.network, "ethernet");
+    }
+
+    #[test]
+    fn cli_overrides_and_positionals() {
+        let mut c = RunConfig::default();
+        let args: Vec<String> =
+            ["run", "--ranks", "16", "--p=5", "--dist", "clustered"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let pos = c.apply_cli(&args).unwrap();
+        assert_eq!(pos, vec!["run"]);
+        assert_eq!(c.ranks, 16);
+        assert_eq!(c.terms, 5);
+        assert_eq!(c.distribution, "clustered");
+    }
+
+    #[test]
+    fn unknown_key_is_an_error() {
+        let mut c = RunConfig::default();
+        assert!(c.set("bogus", "1").is_err());
+        assert!(c.apply_ini("bogus = 1\n").is_err());
+    }
+
+    #[test]
+    fn effective_cut_scales_with_ranks() {
+        let mut c = RunConfig { levels: 8, ..Default::default() };
+        c.ranks = 1;
+        let k1 = c.effective_cut();
+        c.ranks = 64;
+        let k64 = c.effective_cut();
+        assert!(k64 > k1);
+        assert!((1usize << (2 * k64)) >= 4 * 64);
+    }
+}

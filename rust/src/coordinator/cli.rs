@@ -1,0 +1,354 @@
+//! The petfmm command-line interface (hand-rolled: no `clap` offline).
+//!
+//! Subcommands:
+//!   run        one FMM solve, serial + parallel-sim, accuracy + timings
+//!   scale      the §7 strong-scaling experiment (Figs. 6–9 tables)
+//!   partition  partition quality + Fig. 5-style map per strategy
+//!   model      §5 model tables (work, comm, memory, Eq. 10 fit)
+//!   verify     compare two §6.2 verification files
+//!   help
+
+use anyhow::{anyhow, bail, Result};
+
+use super::driver::{self, make_backend};
+use crate::config::RunConfig;
+use crate::fmm::{direct_all, BiotSavart2D};
+use crate::metrics::ScalingSeries;
+use crate::model::{serial_memory, CommEstimator, WorkEstimator};
+use crate::partition::Strategy;
+use crate::util::{max_abs_error, rel_l2_error};
+use crate::verify::VerificationFile;
+
+const USAGE: &str = "\
+petfmm — dynamically load-balancing parallel fast multipole library
+  (reproduction of Cruz, Knepley & Barba 2009)
+
+USAGE: petfmm <command> [--key value ...]
+
+COMMANDS
+  run        solve once; report accuracy vs direct sum + stage timings
+  scale      strong scaling over --ranks-list (default 1,4,8,16,32,64)
+  partition  compare partitioning strategies on the current workload
+  model      print the §5 analytical model tables
+  verify A B compare two verification files (written via run --dump)
+  help       this text
+
+COMMON FLAGS (defaults in brackets)
+  --particles N     [10000]   --levels L    [5]     --terms p   [17]
+  --ranks P         [4]       --cut-level k [auto]  --sigma s   [0.02]
+  --strategy S      [optimized|sfc|sfc-weighted|uniform]
+  --network M       [infinipath|ideal|ethernet]
+  --dist D          [lattice|uniform|clustered]
+  --backend B       [native|pjrt]        --artifacts DIR [artifacts]
+  --config FILE     INI-style config file        --seed N [1]
+  scale only: --ranks-list 1,4,8,16,32,64
+  run only:   --dump FILE (write verification file)
+";
+
+/// CLI entry point (called by main).
+pub fn cli_main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Parse args and run a subcommand (exposed for tests).
+pub fn dispatch(args: &[String]) -> Result<()> {
+    let mut config = RunConfig::default();
+    // pre-scan --config before other flags
+    if let Some(i) = args.iter().position(|a| a == "--config") {
+        let path = args
+            .get(i + 1)
+            .ok_or_else(|| anyhow!("--config needs a path"))?;
+        let body = std::fs::read_to_string(path)?;
+        config.apply_ini(&body)?;
+    }
+    // extract run-specific flags before generic parsing
+    let mut filtered = Vec::new();
+    let mut ranks_list: Vec<usize> = vec![1, 4, 8, 16, 32, 64];
+    let mut dump: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--config" => i += 1, // value consumed above
+            "--ranks-list" => {
+                let v = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("--ranks-list needs a value"))?;
+                ranks_list = v
+                    .split(',')
+                    .map(|s| s.trim().parse::<usize>())
+                    .collect::<Result<_, _>>()
+                    .map_err(|_| anyhow!("bad --ranks-list '{v}'"))?;
+                i += 1;
+            }
+            "--dump" => {
+                dump = Some(
+                    args.get(i + 1)
+                        .ok_or_else(|| anyhow!("--dump needs a path"))?
+                        .clone(),
+                );
+                i += 1;
+            }
+            _ => filtered.push(args[i].clone()),
+        }
+        i += 1;
+    }
+    let positional = config.apply_cli(&filtered)?;
+    let cmd = positional.first().map(String::as_str).unwrap_or("help");
+
+    match cmd {
+        "run" => cmd_run(&config, dump.as_deref()),
+        "scale" => cmd_scale(&config, &ranks_list),
+        "partition" => cmd_partition(&config),
+        "model" => cmd_model(&config),
+        "verify" => {
+            let a = positional
+                .get(1)
+                .ok_or_else(|| anyhow!("verify needs two files"))?;
+            let b = positional
+                .get(2)
+                .ok_or_else(|| anyhow!("verify needs two files"))?;
+            cmd_verify(a, b)
+        }
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `petfmm help`)"),
+    }
+}
+
+fn cmd_run(config: &RunConfig, dump: Option<&str>) -> Result<()> {
+    println!("petfmm run: {}", config.summary());
+    let problem = driver::prepare(config)?;
+    println!(
+        "tree: {} particles, {} occupied leaves, {} subtrees (cut k={})",
+        problem.tree.n_particles(),
+        problem.tree.occupied_leaves.len(),
+        problem.cut.n_subtrees(),
+        problem.cut.cut_level
+    );
+    println!(
+        "partition [{}]: imbalance {:.4}, edge cut {:.3e}",
+        problem.assignment.strategy.name(),
+        problem.assignment.imbalance(),
+        problem.assignment.edge_cut()
+    );
+    let backend = make_backend(config)?;
+    let res = problem.simulate(backend.as_ref())?;
+    println!("\nstage times (virtual seconds, barrier semantics):");
+    for s in &res.stages {
+        println!("  {:<20} {:>12.6}", s.name, s.duration());
+    }
+    println!("  {:<20} {:>12.6}", "TOTAL", res.makespan());
+    println!("load balance LB(P) = {:.4}", res.load_balance());
+    println!("modeled comm volume = {:.3} MB", res.comm_bytes / 1e6);
+
+    // accuracy vs direct (capped N so the check stays fast)
+    if problem.tree.n_particles() <= 20_000 {
+        let want = direct_all(
+            &BiotSavart2D::new(config.sigma),
+            &problem.tree.particles,
+        );
+        println!(
+            "accuracy vs direct: rel-L2 {:.3e}, max-abs {:.3e}",
+            rel_l2_error(&res.vel, &want),
+            max_abs_error(&res.vel, &want)
+        );
+        if let Some(path) = dump {
+            let state = problem.serial(backend.as_ref());
+            let vf = VerificationFile::build(
+                &problem.tree,
+                config.terms,
+                &state,
+                want,
+            );
+            std::fs::write(path, vf.to_text())?;
+            println!("verification file written to {path}");
+        }
+    } else if dump.is_some() {
+        bail!("--dump requires particles <= 20000 (direct sum)");
+    }
+    Ok(())
+}
+
+fn cmd_scale(config: &RunConfig, ranks_list: &[usize]) -> Result<()> {
+    println!("petfmm scale: {}", config.summary());
+    println!("ranks list: {ranks_list:?}\n");
+    let backend = make_backend(config)?;
+    let series: ScalingSeries =
+        driver::strong_scaling(config, ranks_list, backend.as_ref())?;
+    println!("--- Fig. 6: stage times vs P (seconds) ---");
+    print!("{}", series.fig6_table());
+    println!("\n--- Figs. 7–8: speedup / parallel efficiency ---");
+    print!("{}", series.fig7_8_table());
+    println!("\n--- Fig. 9: load balance + efficiency ---");
+    print!("{}", series.fig9_table());
+    Ok(())
+}
+
+fn cmd_partition(config: &RunConfig) -> Result<()> {
+    println!("petfmm partition: {}", config.summary());
+    let particles = super::workload::generate(config)?;
+    println!("strategies on this workload (P = {}):\n", config.ranks);
+    println!("{:<14}{:>12}{:>16}{:>14}", "strategy", "imbalance",
+             "edge cut (MB)", "min/max");
+    for strat in [Strategy::Optimized, Strategy::SfcWeighted,
+                  Strategy::SfcEqualCount, Strategy::UniformBlock] {
+        let cfg = RunConfig { strategy: strat, ..config.clone() };
+        let p = driver::prepare_with_particles(&cfg, particles.clone())?;
+        println!(
+            "{:<14}{:>12.4}{:>16.4}{:>14.4}",
+            strat.name(),
+            p.assignment.imbalance(),
+            p.assignment.edge_cut() / 1e6,
+            p.assignment.min_max_ratio()
+        );
+    }
+    // Fig. 5-style map for the configured strategy
+    let problem = driver::prepare_with_particles(config, particles)?;
+    let k = problem.cut.cut_level;
+    let n = 1u32 << k;
+    println!("\nFig. 5-style subtree->rank map (cut level {k}, {}x{} \
+              subtrees):", n, n);
+    for y in (0..n).rev() {
+        let mut row = String::new();
+        for x in 0..n {
+            let st = crate::quadtree::BoxId::new(k, x, y);
+            let r = problem.assignment.part
+                [problem.cut.subtree_index(&st)];
+            row.push_str(&format!("{r:>4}"));
+        }
+        println!("{row}");
+    }
+    Ok(())
+}
+
+fn cmd_model(config: &RunConfig) -> Result<()> {
+    println!("petfmm model: {}", config.summary());
+    let problem = driver::prepare(config)?;
+    let (tree, cut) = (&problem.tree, &problem.cut);
+
+    println!("\n--- work model (Eqs. 13–15) ---");
+    let we = WorkEstimator::new(config.terms);
+    let works = we.all_subtree_work(tree, cut);
+    let total: f64 = works.iter().sum();
+    let max = works.iter().cloned().fold(0.0, f64::max);
+    println!("subtrees: {}  total work: {:.3e}  max: {:.3e}  \
+              mean: {:.3e}",
+             works.len(), total, max, total / works.len() as f64);
+    println!("root-tree (serial) work: {:.3e}", we.root_tree_work(cut));
+
+    println!("\n--- communication model (Eqs. 11–12) ---");
+    let ce = CommEstimator::for_terms(config.terms);
+    println!("lateral pair:  {:.1} bytes", ce.lateral(tree.levels,
+                                                      cut.cut_level));
+    println!("diagonal pair: {:.1} bytes", ce.diagonal(tree.levels,
+                                                       cut.cut_level));
+    println!("total matrix volume: {:.3} MB",
+             ce.comm_matrix(cut).total() / 1e6);
+
+    println!("\n--- memory model (Table 1, serial) ---");
+    let rows = serial_memory(tree.levels, config.terms,
+                             tree.n_particles(),
+                             tree.max_leaf_occupancy());
+    println!("{:<26}{:>16}{:>16}", "type", "bookkeeping (B)", "data (B)");
+    let mut total_mem = 0.0;
+    for r in &rows {
+        println!("{:<26}{:>16.0}{:>16.0}", r.name, r.bookkeeping, r.data);
+        total_mem += r.bookkeeping + r.data;
+    }
+    println!("{:<26}{:>32.0}  ({:.2} MB)", "TOTAL", total_mem,
+             total_mem / 1e6);
+    Ok(())
+}
+
+fn cmd_verify(a: &str, b: &str) -> Result<()> {
+    let fa = VerificationFile::from_text(&std::fs::read_to_string(a)?)
+        .map_err(|e| anyhow!("{a}: {e}"))?;
+    let fb = VerificationFile::from_text(&std::fs::read_to_string(b)?)
+        .map_err(|e| anyhow!("{b}: {e}"))?;
+    let issues = fa.compare(&fb, 1e-9);
+    if issues.is_empty() {
+        println!("VERIFY OK: {a} == {b} (tol 1e-9)");
+        Ok(())
+    } else {
+        for i in &issues {
+            println!("DIFF: {i}");
+        }
+        bail!("{} discrepancies", issues.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn help_runs() {
+        dispatch(&args(&["help"])).unwrap();
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(dispatch(&args(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn run_small_problem() {
+        dispatch(&args(&[
+            "run", "--particles", "200", "--levels", "3", "--terms", "8",
+            "--ranks", "2", "--dist", "uniform",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn scale_small_problem() {
+        dispatch(&args(&[
+            "scale", "--particles", "200", "--levels", "3", "--terms",
+            "6", "--dist", "uniform", "--ranks-list", "1,2",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn partition_and_model_commands() {
+        dispatch(&args(&[
+            "partition", "--particles", "300", "--levels", "4",
+            "--ranks", "4", "--dist", "clustered", "--terms", "6",
+        ]))
+        .unwrap();
+        dispatch(&args(&[
+            "model", "--particles", "300", "--levels", "4", "--terms",
+            "6", "--dist", "uniform",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn verify_roundtrip_via_cli() {
+        let dir = std::env::temp_dir().join("petfmm-cli-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let f = dir.join("dump.txt");
+        dispatch(&args(&[
+            "run", "--particles", "150", "--levels", "3", "--terms", "6",
+            "--dist", "uniform", "--dump", f.to_str().unwrap(),
+        ]))
+        .unwrap();
+        dispatch(&args(&[
+            "verify", f.to_str().unwrap(), f.to_str().unwrap(),
+        ]))
+        .unwrap();
+    }
+}

@@ -1,0 +1,231 @@
+//! The leader driver: builds the problem, runs the schedule, collects
+//! metrics.  Library-level entry points used by the CLI, the examples
+//! and the benches.
+
+use anyhow::{bail, Context, Result};
+
+use super::workload;
+use crate::config::RunConfig;
+use crate::fmm::{BiotSavart2D, Evaluator, FmmState, NativeBackend,
+                 OpDims, OpsBackend};
+use crate::metrics::{ScalingPoint, ScalingSeries};
+use crate::partition::{assign_subtrees, Assignment};
+use crate::quadtree::{Domain, Particle, Quadtree, TreeCut};
+use crate::runtime::PjrtBackend;
+use crate::sched::sim::OpCosts as PetfmmOpCosts;
+use crate::sched::{ParallelPlan, SimResult, Simulator};
+
+/// A fully prepared problem: particles binned, tree cut, graph
+/// partitioned.
+pub struct Problem {
+    pub config: RunConfig,
+    pub tree: Quadtree,
+    pub cut: TreeCut,
+    pub assignment: Assignment,
+}
+
+/// Build a backend per the config (`native` or `pjrt`).
+pub fn make_backend(config: &RunConfig) -> Result<Box<dyn OpsBackend>> {
+    match config.backend.as_str() {
+        "native" => {
+            let dims = OpDims {
+                batch: 64,
+                leaf: 32,
+                terms: config.terms,
+                sigma: config.sigma,
+            };
+            Ok(Box::new(NativeBackend::new(
+                dims,
+                BiotSavart2D::new(config.sigma),
+            )))
+        }
+        "pjrt" => {
+            let be = PjrtBackend::load(std::path::Path::new(
+                &config.artifacts,
+            ))
+            .context("loading PJRT artifacts (run `make artifacts`)")?;
+            if be.dims().terms != config.terms {
+                bail!(
+                    "artifacts were built with p={}, config wants p={} — \
+                     re-run `make artifacts` with --terms",
+                    be.dims().terms,
+                    config.terms
+                );
+            }
+            if (be.dims().sigma - config.sigma).abs() > 1e-12 {
+                eprintln!(
+                    "warning: artifacts bake sigma={} but config wants \
+                     sigma={}; the P2P kernel uses the artifact value \
+                     (timings unaffected; accuracy checks should compare \
+                     against sigma={})",
+                    be.dims().sigma, config.sigma, be.dims().sigma
+                );
+            }
+            Ok(Box::new(be))
+        }
+        other => bail!("unknown backend '{other}'"),
+    }
+}
+
+/// Prepare the problem: generate particles, build the tree, cut it, and
+/// partition the weighted subtree graph.
+pub fn prepare(config: &RunConfig) -> Result<Problem> {
+    let particles = workload::generate(config)?;
+    prepare_with_particles(config, particles)
+}
+
+/// Prepare with an explicit particle set.
+pub fn prepare_with_particles(config: &RunConfig, particles: Vec<Particle>)
+    -> Result<Problem> {
+    let tree = Quadtree::build(Domain::UNIT, config.levels, particles);
+    let cut = TreeCut::new(config.levels, config.effective_cut());
+    let assignment = assign_subtrees(
+        &tree,
+        &cut,
+        config.terms,
+        config.ranks,
+        config.strategy,
+        config.seed,
+    );
+    Ok(Problem { config: config.clone(), tree, cut, assignment })
+}
+
+impl Problem {
+    /// Run the parallel simulation with the given backend.
+    pub fn simulate(&self, backend: &dyn OpsBackend) -> Result<SimResult> {
+        self.simulate_calibrated(backend, None)
+    }
+
+    /// Like [`Problem::simulate`] but with a shared calibration, so that
+    /// several runs (strategies, rank counts) use identical unit costs.
+    pub fn simulate_calibrated(
+        &self,
+        backend: &dyn OpsBackend,
+        costs: Option<PetfmmOpCosts>,
+    ) -> Result<SimResult> {
+        let plan = ParallelPlan::build(&self.tree, &self.cut,
+                                       &self.assignment);
+        let mut sim = Simulator::new(
+            &self.tree,
+            &self.cut,
+            &self.assignment,
+            backend,
+            self.config.network_model()?,
+        );
+        if let Some(c) = costs {
+            sim = sim.with_costs(c);
+        }
+        Ok(sim.run(&plan))
+    }
+
+    /// Run the plain serial evaluator (no parallel machinery).
+    pub fn serial(&self, backend: &dyn OpsBackend) -> FmmState {
+        Evaluator::new(&self.tree, backend).evaluate()
+    }
+}
+
+/// Turn a [`SimResult`] into a scaling point (stage aggregation matching
+/// the paper's Fig. 6 stage list).
+pub fn scaling_point(res: &SimResult) -> ScalingPoint {
+    let agg = |names: &[&str]| -> f64 {
+        names.iter().map(|n| res.stage_time(n)).sum()
+    };
+    ScalingPoint {
+        ranks: res.ranks,
+        total_time: res.makespan(),
+        stage_times: vec![
+            ("p2m".into(), agg(&["p2m"])),
+            ("m2m".into(), agg(&["m2m"])),
+            ("root".into(), agg(&["root"])),
+            ("m2l".into(), agg(&["m2l"])),
+            ("l2l".into(), agg(&["l2l"])),
+            ("p2p".into(), agg(&["p2p"])),
+            ("l2p".into(), agg(&["l2p"])),
+            (
+                "comm".into(),
+                agg(&[
+                    "scatter-particles",
+                    "reduce-me",
+                    "scatter-le",
+                    "exchange-me",
+                    "exchange-halo",
+                    "gather-vel",
+                ]),
+            ),
+        ],
+        load_balance: res.load_balance(),
+        comm_bytes: res.comm_bytes,
+    }
+}
+
+/// The §7 strong-scaling experiment: same problem, varying P.
+pub fn strong_scaling(
+    base: &RunConfig,
+    ranks_list: &[usize],
+    backend: &dyn OpsBackend,
+) -> Result<ScalingSeries> {
+    let particles = workload::generate(base)?;
+    let mut series = ScalingSeries::default();
+    // calibrate once so every P uses identical unit costs
+    let costs = PetfmmOpCosts::calibrate(backend);
+    for &ranks in ranks_list {
+        let cfg = RunConfig { ranks, ..base.clone() };
+        let problem =
+            prepare_with_particles(&cfg, particles.clone())?;
+        let res = problem.simulate_calibrated(backend, Some(costs))?;
+        series.points.push(scaling_point(&res));
+    }
+    Ok(series)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fmm::direct_all;
+    use crate::util::rel_l2_error;
+
+    fn small_config() -> RunConfig {
+        RunConfig {
+            particles: 300,
+            levels: 4,
+            terms: 10,
+            ranks: 4,
+            distribution: "uniform".into(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn prepare_and_simulate_end_to_end() {
+        let cfg = small_config();
+        let problem = prepare(&cfg).unwrap();
+        let backend = make_backend(&cfg).unwrap();
+        let res = problem.simulate(backend.as_ref()).unwrap();
+        let want = direct_all(
+            &BiotSavart2D::new(cfg.sigma),
+            &problem.tree.particles,
+        );
+        let err = rel_l2_error(&res.vel, &want);
+        assert!(err < 1e-3, "err {err}");
+    }
+
+    #[test]
+    fn strong_scaling_produces_series() {
+        let cfg = small_config();
+        let backend = make_backend(&cfg).unwrap();
+        let s =
+            strong_scaling(&cfg, &[1, 2, 4], backend.as_ref()).unwrap();
+        assert_eq!(s.points.len(), 3);
+        assert!(s.serial_time().unwrap() > 0.0);
+        // table renders without panic
+        let _ = s.fig6_table();
+        let _ = s.fig7_8_table();
+        let _ = s.fig9_table();
+    }
+
+    #[test]
+    fn unknown_backend_is_an_error() {
+        let cfg = RunConfig { backend: "gpu".into(), ..small_config() };
+        assert!(make_backend(&cfg).is_err());
+    }
+}

@@ -1,0 +1,55 @@
+//! Batched operator backend: the seam between the L3 coordinator and the
+//! compute layer.
+//!
+//! Both implementations speak the *artifact ABI* — fixed-shape flattened
+//! f64 buffers matching `artifacts/manifest.json`:
+//!
+//! * [`crate::runtime::PjrtBackend`] executes the AOT-lowered HLO (the
+//!   product path: jax/pallas compute, python never at runtime), and
+//! * [`super::native::NativeBackend`] is the pure-rust oracle/fast path.
+//!
+//! Shapes (B = batch, S = leaf capacity, P = expansion terms):
+//!
+//! | op  | inputs                                        | output     |
+//! |-----|-----------------------------------------------|------------|
+//! | p2m | parts (B,S,3), centers (B,2), radius (B,1)    | me (B,P,2) |
+//! | m2m | me (B,P,2), d (B,2), rho (B,1)                | me (B,P,2) |
+//! | m2l | me (B,P,2), tau (B,2), inv_r (B,1)            | le (B,P,2) |
+//! | l2l | le (B,P,2), d (B,2), rho (B,1)                | le (B,P,2) |
+//! | l2p | le (B,P,2), parts (B,S,3), centers, radius    | vel (B,S,2)|
+//! | p2p | targets (B,S,3), sources (B,S,3)              | vel (B,S,2)|
+
+/// Fixed dimensions a backend was built for.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OpDims {
+    /// B: boxes per batched call.
+    pub batch: usize,
+    /// S: max particles per leaf slot (padded with gamma = 0).
+    pub leaf: usize,
+    /// P: expansion terms (the paper's p).
+    pub terms: usize,
+    /// Gaussian core size baked into the P2P kernel.
+    pub sigma: f64,
+}
+
+/// A batched FMM operator backend. All buffers are flattened row-major
+/// f64 with the exact shapes listed in the module docs.
+///
+/// Not `Send`/`Sync`: the PJRT executable handles are thread-local by
+/// construction. The threaded comm mode (protocol validation) bounds on
+/// `OpsBackend + Send + Sync` explicitly and uses the native backend.
+pub trait OpsBackend {
+    fn dims(&self) -> OpDims;
+
+    fn p2m(&self, particles: &[f64], centers: &[f64], radius: &[f64])
+        -> Vec<f64>;
+    fn m2m(&self, me: &[f64], d: &[f64], rho: &[f64]) -> Vec<f64>;
+    fn m2l(&self, me: &[f64], tau: &[f64], inv_r: &[f64]) -> Vec<f64>;
+    fn l2l(&self, le: &[f64], d: &[f64], rho: &[f64]) -> Vec<f64>;
+    fn l2p(&self, le: &[f64], particles: &[f64], centers: &[f64],
+           radius: &[f64]) -> Vec<f64>;
+    fn p2p(&self, targets: &[f64], sources: &[f64]) -> Vec<f64>;
+
+    /// Backend label for logs/metrics ("native", "pjrt").
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,97 @@
+//! O(N²) direct summation — the exact baseline the FMM is verified and
+//! benchmarked against (the paper's "direct solution" in the §6.2
+//! verification format, and the N² reference of §1).
+
+use super::kernel::Kernel;
+use crate::quadtree::Particle;
+
+/// Evaluate all pairwise interactions directly: `vel[i] = Σ_j K(x_i - x_j)`.
+pub fn direct_all<K: Kernel>(kernel: &K, parts: &[Particle])
+    -> Vec<[f64; 2]> {
+    let n = parts.len();
+    let mut vel = vec![[0.0; 2]; n];
+    for i in 0..n {
+        let (xi, yi) = (parts[i][0], parts[i][1]);
+        let mut u = 0.0;
+        let mut v = 0.0;
+        for j in 0..n {
+            let w = kernel.direct(xi - parts[j][0], yi - parts[j][1],
+                                  parts[j][2]);
+            u += w[0];
+            v += w[1];
+        }
+        vel[i] = [u, v];
+    }
+    vel
+}
+
+/// Velocities induced by `sources` at arbitrary `targets` (used for halo /
+/// verification checks where targets are not the source set).
+pub fn direct_at<K: Kernel>(
+    kernel: &K,
+    targets: &[[f64; 2]],
+    sources: &[Particle],
+) -> Vec<[f64; 2]> {
+    targets
+        .iter()
+        .map(|t| {
+            let mut u = 0.0;
+            let mut v = 0.0;
+            for s in sources {
+                let w = kernel.direct(t[0] - s[0], t[1] - s[1], s[2]);
+                u += w[0];
+                v += w[1];
+            }
+            [u, v]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::kernel::BiotSavart2D;
+    use super::*;
+    use crate::proptest::check;
+
+    #[test]
+    fn two_counter_vortices_translate_together() {
+        // a vortex pair with opposite circulation induces identical
+        // velocity on each other (classic dipole propagation)
+        let k = BiotSavart2D::new(1e-6);
+        let parts = vec![[0.0, 0.0, 1.0], [0.1, 0.0, -1.0]];
+        let v = direct_all(&k, &parts);
+        assert!((v[0][0] - v[1][0]).abs() < 1e-12);
+        assert!((v[0][1] - v[1][1]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_total_momentum_conserved_equal_cores() {
+        // sum_i gamma_i * u_i = 0 for the antisymmetric regularized kernel
+        check("momentum conservation", 16, |g| {
+            let k = BiotSavart2D::new(0.05);
+            let parts = g.particles(20);
+            let v = direct_all(&k, &parts);
+            let px: f64 =
+                parts.iter().zip(&v).map(|(p, w)| p[2] * w[0]).sum();
+            let py: f64 =
+                parts.iter().zip(&v).map(|(p, w)| p[2] * w[1]).sum();
+            assert!(px.abs() < 1e-10 && py.abs() < 1e-10, "({px}, {py})");
+        });
+    }
+
+    #[test]
+    fn direct_at_matches_direct_all_on_sources() {
+        check("direct_at == direct_all", 8, |g| {
+            let k = BiotSavart2D::new(0.02);
+            let parts = g.particles(15);
+            let targets: Vec<[f64; 2]> =
+                parts.iter().map(|p| [p[0], p[1]]).collect();
+            let a = direct_all(&k, &parts);
+            let b = direct_at(&k, &targets, &parts);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x[0] - y[0]).abs() < 1e-14);
+                assert!((x[1] - y[1]).abs() < 1e-14);
+            }
+        });
+    }
+}

@@ -1,0 +1,542 @@
+//! The FMM evaluator: stage runners + the serial pipeline (§2.2).
+//!
+//! Mirrors the paper's `Evaluator` class (§6.1): all computation is
+//! expressed as *batched stage runners* over box sets, so the
+//! `ParallelEvaluator` (rust/src/sched) reuses the identical code with
+//! per-rank task subsets — "the serial code is completely reused in the
+//! parallel setting" (§6.1).
+//!
+//! Every runner pads its task list to the backend's fixed batch shape
+//! (B boxes x S particle slots) and scatters results back; leaves holding
+//! more than S particles are processed in chunks of S, so arbitrary
+//! occupancy is supported with fixed artifacts.
+
+use std::collections::HashMap;
+
+use super::backend::OpsBackend;
+use crate::quadtree::{interaction_list, near_domain, BoxId, Quadtree};
+
+/// Mutable solution state: expansions per box + per-particle velocities.
+#[derive(Clone, Debug, Default)]
+pub struct FmmState {
+    /// Scaled multipole coefficients, flattened (P,2) per box.
+    pub me: HashMap<BoxId, Vec<f64>>,
+    /// Scaled local coefficients, flattened (P,2) per box.
+    pub le: HashMap<BoxId, Vec<f64>>,
+    /// Output velocities, one per particle.
+    pub vel: Vec<[f64; 2]>,
+}
+
+impl FmmState {
+    pub fn new(n_particles: usize) -> Self {
+        FmmState {
+            me: HashMap::new(),
+            le: HashMap::new(),
+            vel: vec![[0.0; 2]; n_particles],
+        }
+    }
+
+    fn accumulate(dst: &mut HashMap<BoxId, Vec<f64>>, b: BoxId, c: &[f64]) {
+        match dst.entry(b) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                for (d, s) in e.get_mut().iter_mut().zip(c) {
+                    *d += s;
+                }
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(c.to_vec());
+            }
+        }
+    }
+}
+
+/// Counts of operator applications, for validating the work model (§5.2).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    pub p2m: u64,
+    pub m2m: u64,
+    pub m2l: u64,
+    pub l2l: u64,
+    pub l2p: u64,
+    pub p2p: u64,
+    /// pairwise particle interactions inside p2p tasks (excludes padding)
+    pub p2p_pairs: u64,
+    /// dispatched batches per operator (for calibrated cost attribution)
+    pub p2m_batches: u64,
+    pub m2m_batches: u64,
+    pub m2l_batches: u64,
+    pub l2l_batches: u64,
+    pub l2p_batches: u64,
+    pub p2p_batches: u64,
+}
+
+/// Serial FMM evaluator over a [`Quadtree`], batched through an
+/// [`OpsBackend`].
+pub struct Evaluator<'a> {
+    pub tree: &'a Quadtree,
+    pub backend: &'a dyn OpsBackend,
+    pub counts: std::cell::Cell<OpCounts>,
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(tree: &'a Quadtree, backend: &'a dyn OpsBackend) -> Self {
+        Evaluator { tree, backend, counts: Default::default() }
+    }
+
+
+    /// Particle chunks of a leaf, each at most S slots, padded with
+    /// `gamma = 0` at the box center.
+    fn leaf_chunks(&self, leaf: &BoxId) -> Vec<(Vec<f64>, Vec<u32>)> {
+        let s = self.backend.dims().leaf;
+        let c = self.tree.center(leaf);
+        let idxs = self.tree.particles_in(leaf);
+        let mut out = Vec::new();
+        for chunk in idxs.chunks(s.max(1)) {
+            let mut buf = vec![0.0; s * 3];
+            for (j, &i) in chunk.iter().enumerate() {
+                let p = self.tree.particles[i as usize];
+                buf[j * 3] = p[0];
+                buf[j * 3 + 1] = p[1];
+                buf[j * 3 + 2] = p[2];
+            }
+            // padding at the center, zero strength
+            for j in chunk.len()..s {
+                buf[j * 3] = c[0];
+                buf[j * 3 + 1] = c[1];
+            }
+            out.push((buf, chunk.to_vec()));
+        }
+        if out.is_empty() {
+            // an unoccupied leaf still needs a representation when it is a
+            // p2p source pair target — callers skip those, but be safe
+            let mut buf = vec![0.0; s * 3];
+            for j in 0..s {
+                buf[j * 3] = c[0];
+                buf[j * 3 + 1] = c[1];
+            }
+            out.push((buf, Vec::new()));
+        }
+        out
+    }
+
+    fn bump(&self, f: impl FnOnce(&mut OpCounts)) {
+        let mut c = self.counts.get();
+        f(&mut c);
+        self.counts.set(c);
+    }
+
+    // ------------------------------------------------------------------
+    // stage runners
+    // ------------------------------------------------------------------
+
+    /// P2M over a set of occupied leaves: builds `state.me` at leaf level.
+    pub fn run_p2m(&self, leaves: &[BoxId], state: &mut FmmState) {
+        let dims = self.backend.dims();
+        let (b, p) = (dims.batch, dims.terms);
+        // flatten (leaf, chunk) tasks
+        let mut tasks: Vec<(BoxId, Vec<f64>)> = Vec::new();
+        for leaf in leaves {
+            if self.tree.particles_in(leaf).is_empty() {
+                continue;
+            }
+            for (buf, _) in self.leaf_chunks(leaf) {
+                tasks.push((*leaf, buf));
+            }
+        }
+        for group in tasks.chunks(b) {
+            let mut parts = vec![0.0; b * dims.leaf * 3];
+            let mut centers = vec![0.0; b * 2];
+            let mut radius = vec![1.0; b];
+            for (t, (leaf, buf)) in group.iter().enumerate() {
+                parts[t * dims.leaf * 3..(t + 1) * dims.leaf * 3]
+                    .copy_from_slice(buf);
+                let c = self.tree.center(leaf);
+                centers[t * 2] = c[0];
+                centers[t * 2 + 1] = c[1];
+                radius[t] = self.tree.radius(leaf);
+            }
+            let out = self.backend.p2m(&parts, &centers, &radius);
+            for (t, (leaf, _)) in group.iter().enumerate() {
+                FmmState::accumulate(
+                    &mut state.me, *leaf,
+                    &out[t * p * 2..(t + 1) * p * 2]);
+            }
+            self.bump(|c| { c.p2m += group.len() as u64; c.p2m_batches += 1; });
+        }
+    }
+
+    /// M2M: shift the MEs of `children` into their parents (accumulating).
+    pub fn run_m2m(&self, children: &[BoxId], state: &mut FmmState) {
+        let dims = self.backend.dims();
+        let (b, p) = (dims.batch, dims.terms);
+        let tasks: Vec<BoxId> = children
+            .iter()
+            .filter(|c| state.me.contains_key(c))
+            .copied()
+            .collect();
+        for group in tasks.chunks(b) {
+            let mut me = vec![0.0; b * p * 2];
+            let mut d = vec![0.0; b * 2];
+            let mut rho = vec![0.5; b];
+            for (t, child) in group.iter().enumerate() {
+                me[t * p * 2..(t + 1) * p * 2]
+                    .copy_from_slice(&state.me[child]);
+                let parent = child.parent().expect("child has parent");
+                let cc = self.tree.center(child);
+                let cp = self.tree.center(&parent);
+                let rp = self.tree.radius(&parent);
+                d[t * 2] = (cc[0] - cp[0]) / rp;
+                d[t * 2 + 1] = (cc[1] - cp[1]) / rp;
+                rho[t] = self.tree.radius(child) / rp;
+            }
+            let out = self.backend.m2m(&me, &d, &rho);
+            for (t, child) in group.iter().enumerate() {
+                let parent = child.parent().unwrap();
+                FmmState::accumulate(
+                    &mut state.me, parent,
+                    &out[t * p * 2..(t + 1) * p * 2]);
+            }
+            self.bump(|c| { c.m2m += group.len() as u64; c.m2m_batches += 1; });
+        }
+    }
+
+    /// M2L over explicit (target, source) same-level pairs; sources
+    /// without an ME are skipped (empty subtrees).
+    pub fn run_m2l(&self, pairs: &[(BoxId, BoxId)], state: &mut FmmState) {
+        let dims = self.backend.dims();
+        let (b, p) = (dims.batch, dims.terms);
+        let tasks: Vec<&(BoxId, BoxId)> = pairs
+            .iter()
+            .filter(|(_, src)| state.me.contains_key(src))
+            .collect();
+        for group in tasks.chunks(b) {
+            let mut me = vec![0.0; b * p * 2];
+            let mut tau = vec![2.0; b * 2]; // harmless padding (|tau|=2)
+            let mut inv_r = vec![1.0; b];
+            for (t, (tgt, src)) in group.iter().enumerate() {
+                debug_assert_eq!(tgt.level, src.level);
+                me[t * p * 2..(t + 1) * p * 2]
+                    .copy_from_slice(&state.me[src]);
+                let cs = self.tree.center(src);
+                let ct = self.tree.center(tgt);
+                let r = self.tree.radius(src);
+                tau[t * 2] = (cs[0] - ct[0]) / r;
+                tau[t * 2 + 1] = (cs[1] - ct[1]) / r;
+                inv_r[t] = 1.0 / r;
+            }
+            let out = self.backend.m2l(&me, &tau, &inv_r);
+            for (t, (tgt, _)) in group.iter().enumerate() {
+                FmmState::accumulate(
+                    &mut state.le, *tgt,
+                    &out[t * p * 2..(t + 1) * p * 2]);
+            }
+            self.bump(|c| { c.m2l += group.len() as u64; c.m2l_batches += 1; });
+        }
+    }
+
+    /// L2L: shift parent LEs into `children` (accumulating). Parents
+    /// without an LE contribute nothing.
+    pub fn run_l2l(&self, children: &[BoxId], state: &mut FmmState) {
+        let dims = self.backend.dims();
+        let (b, p) = (dims.batch, dims.terms);
+        let tasks: Vec<BoxId> = children
+            .iter()
+            .filter(|c| {
+                c.parent().map_or(false, |pa| state.le.contains_key(&pa))
+            })
+            .copied()
+            .collect();
+        for group in tasks.chunks(b) {
+            let mut le = vec![0.0; b * p * 2];
+            let mut d = vec![0.0; b * 2];
+            let mut rho = vec![0.5; b];
+            for (t, child) in group.iter().enumerate() {
+                let parent = child.parent().unwrap();
+                le[t * p * 2..(t + 1) * p * 2]
+                    .copy_from_slice(&state.le[&parent]);
+                let cc = self.tree.center(child);
+                let cp = self.tree.center(&parent);
+                let rp = self.tree.radius(&parent);
+                d[t * 2] = (cc[0] - cp[0]) / rp;
+                d[t * 2 + 1] = (cc[1] - cp[1]) / rp;
+                rho[t] = self.tree.radius(child) / rp;
+            }
+            let out = self.backend.l2l(&le, &d, &rho);
+            for (t, child) in group.iter().enumerate() {
+                FmmState::accumulate(
+                    &mut state.le, *child,
+                    &out[t * p * 2..(t + 1) * p * 2]);
+            }
+            self.bump(|c| { c.l2l += group.len() as u64; c.l2l_batches += 1; });
+        }
+    }
+
+    /// L2P: evaluate leaf LEs at particle positions, adding the far-field
+    /// velocity into `state.vel`.
+    pub fn run_l2p(&self, leaves: &[BoxId], state: &mut FmmState) {
+        let dims = self.backend.dims();
+        let (b, p, s) = (dims.batch, dims.terms, dims.leaf);
+        let mut tasks: Vec<(BoxId, Vec<f64>, Vec<u32>)> = Vec::new();
+        for leaf in leaves {
+            if !state.le.contains_key(leaf)
+                || self.tree.particles_in(leaf).is_empty() {
+                continue;
+            }
+            for (buf, idx) in self.leaf_chunks(leaf) {
+                tasks.push((*leaf, buf, idx));
+            }
+        }
+        for group in tasks.chunks(b) {
+            let mut le = vec![0.0; b * p * 2];
+            let mut parts = vec![0.0; b * s * 3];
+            let mut centers = vec![0.0; b * 2];
+            let mut radius = vec![1.0; b];
+            for (t, (leaf, buf, _)) in group.iter().enumerate() {
+                le[t * p * 2..(t + 1) * p * 2]
+                    .copy_from_slice(&state.le[leaf]);
+                parts[t * s * 3..(t + 1) * s * 3].copy_from_slice(buf);
+                let c = self.tree.center(leaf);
+                centers[t * 2] = c[0];
+                centers[t * 2 + 1] = c[1];
+                radius[t] = self.tree.radius(leaf);
+            }
+            let out = self.backend.l2p(&le, &parts, &centers, &radius);
+            for (t, (_, _, idx)) in group.iter().enumerate() {
+                for (j, &i) in idx.iter().enumerate() {
+                    state.vel[i as usize][0] += out[(t * s + j) * 2];
+                    state.vel[i as usize][1] += out[(t * s + j) * 2 + 1];
+                }
+            }
+            self.bump(|c| { c.l2p += group.len() as u64; c.l2p_batches += 1; });
+        }
+    }
+
+    /// P2P over explicit (target leaf, source leaf) pairs, adding the
+    /// near-field velocity into `state.vel`.
+    pub fn run_p2p(&self, pairs: &[(BoxId, BoxId)], state: &mut FmmState) {
+        let dims = self.backend.dims();
+        let (b, s) = (dims.batch, dims.leaf);
+        // expand into chunk-level tasks
+        let mut tasks: Vec<(Vec<f64>, Vec<u32>, Vec<f64>, u64)> = Vec::new();
+        for (tgt, src) in pairs {
+            let nt = self.tree.particles_in(tgt).len();
+            let ns = self.tree.particles_in(src).len();
+            if nt == 0 || ns == 0 {
+                continue;
+            }
+            let tchunks = self.leaf_chunks(tgt);
+            let schunks = self.leaf_chunks(src);
+            for (tbuf, tidx) in &tchunks {
+                for (sbuf, sidx) in &schunks {
+                    tasks.push((
+                        tbuf.clone(),
+                        tidx.clone(),
+                        sbuf.clone(),
+                        (tidx.len() * sidx.len()) as u64,
+                    ));
+                }
+            }
+        }
+        for group in tasks.chunks(b) {
+            let mut targets = vec![0.0; b * s * 3];
+            let mut sources = vec![0.0; b * s * 3];
+            for (t, (tbuf, _, sbuf, _)) in group.iter().enumerate() {
+                targets[t * s * 3..(t + 1) * s * 3].copy_from_slice(tbuf);
+                sources[t * s * 3..(t + 1) * s * 3].copy_from_slice(sbuf);
+            }
+            let out = self.backend.p2p(&targets, &sources);
+            for (t, (_, tidx, _, npairs)) in group.iter().enumerate() {
+                for (j, &i) in tidx.iter().enumerate() {
+                    state.vel[i as usize][0] += out[(t * s + j) * 2];
+                    state.vel[i as usize][1] += out[(t * s + j) * 2 + 1];
+                }
+                let np = *npairs;
+                self.bump(|c| c.p2p_pairs += np);
+            }
+            self.bump(|c| { c.p2p += group.len() as u64; c.p2p_batches += 1; });
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // serial pipeline (§2.2: upward sweep, downward sweep, evaluation)
+    // ------------------------------------------------------------------
+
+    /// Run the complete serial FMM and return the solution state.
+    pub fn evaluate(&self) -> FmmState {
+        let mut state = FmmState::new(self.tree.n_particles());
+        let levels = self.tree.levels;
+
+        // ---- upward sweep ----
+        self.run_p2m(&self.tree.occupied_leaves.clone(), &mut state);
+        for lvl in (3..=levels).rev() {
+            let children = self.tree.occupied_at_level(lvl);
+            self.run_m2m(&children, &mut state);
+        }
+
+        // ---- downward sweep ----
+        for lvl in 2..=levels {
+            let tgts = self.tree.occupied_at_level(lvl);
+            let mut pairs = Vec::new();
+            for tgt in &tgts {
+                for src in interaction_list(tgt) {
+                    pairs.push((*tgt, src));
+                }
+            }
+            self.run_m2l(&pairs, &mut state);
+            if lvl < levels {
+                let children = self.tree.occupied_at_level(lvl + 1);
+                self.run_l2l(&children, &mut state);
+            }
+        }
+
+        // ---- evaluation ----
+        self.run_l2p(&self.tree.occupied_leaves.clone(), &mut state);
+        let mut near_pairs = Vec::new();
+        for tgt in &self.tree.occupied_leaves {
+            for src in near_domain(tgt) {
+                near_pairs.push((*tgt, src));
+            }
+        }
+        self.run_p2p(&near_pairs, &mut state);
+        state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::OpDims;
+    use super::super::direct::direct_all;
+    use super::super::kernel::{BiotSavart2D, Laplace2D};
+    use super::super::native::NativeBackend;
+    use super::*;
+    use crate::proptest::check;
+    use crate::quadtree::Domain;
+    use crate::util::rel_l2_error;
+
+    fn eval_with(
+        parts: Vec<[f64; 3]>,
+        levels: u8,
+        terms: usize,
+        sigma: f64,
+    ) -> (Vec<[f64; 2]>, Vec<[f64; 2]>) {
+        let tree = Quadtree::build(Domain::UNIT, levels, parts.clone());
+        let dims = OpDims { batch: 16, leaf: 8, terms, sigma };
+        let kernel = BiotSavart2D::new(sigma);
+        let backend = NativeBackend::new(dims, kernel);
+        let ev = Evaluator::new(&tree, &backend);
+        let state = ev.evaluate();
+        let want = direct_all(&kernel, &parts);
+        (state.vel, want)
+    }
+
+    #[test]
+    fn fmm_matches_direct_uniform() {
+        check("fmm == direct (uniform)", 6, |g| {
+            let n = g.usize_in(30, 150);
+            let parts = g.particles(n);
+            let (got, want) = eval_with(parts, 3, 17, 0.005);
+            let err = rel_l2_error(&got, &want);
+            assert!(err < 2e-4, "rel l2 err {err}");
+        });
+    }
+
+    #[test]
+    fn fmm_matches_direct_clustered() {
+        check("fmm == direct (clustered)", 4, |g| {
+            let parts = g.clustered_particles(200, 3);
+            let (got, want) = eval_with(parts, 4, 17, 0.005);
+            let err = rel_l2_error(&got, &want);
+            assert!(err < 2e-4, "rel l2 err {err}");
+        });
+    }
+
+    #[test]
+    fn deeper_tree_still_correct() {
+        check("fmm deep tree", 2, |g| {
+            let parts = g.particles(300);
+            let (got, want) = eval_with(parts, 5, 17, 0.003);
+            let err = rel_l2_error(&got, &want);
+            assert!(err < 2e-4, "rel l2 err {err}");
+        });
+    }
+
+    #[test]
+    fn leaf_overflow_chunks_correctly() {
+        // more particles in one leaf than S forces the chunked path
+        check("chunking", 4, |g| {
+            let mut parts = Vec::new();
+            for _ in 0..50 {
+                // all in one leaf box at level 2
+                parts.push([
+                    g.f64_in(0.30, 0.45),
+                    g.f64_in(0.30, 0.45),
+                    g.normal(),
+                ]);
+            }
+            for _ in 0..50 {
+                parts.push([g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0),
+                            g.normal()]);
+            }
+            let (got, want) = eval_with(parts, 2, 17, 0.005);
+            let err = rel_l2_error(&got, &want);
+            assert!(err < 2e-3, "rel l2 err {err}");
+        });
+    }
+
+    #[test]
+    fn laplace_kernel_through_same_machinery() {
+        check("laplace fmm == direct", 4, |g| {
+            let parts = g.particles(120);
+            let tree = Quadtree::build(Domain::UNIT, 3, parts.clone());
+            let dims = OpDims { batch: 16, leaf: 8, terms: 17, sigma: 0.0 };
+            let backend = NativeBackend::new(dims, Laplace2D);
+            let ev = Evaluator::new(&tree, &backend);
+            let got = ev.evaluate().vel;
+            let want = direct_all(&Laplace2D, &parts);
+            let err = rel_l2_error(&got, &want);
+            assert!(err < 1e-4, "rel l2 err {err}");
+        });
+    }
+
+    #[test]
+    fn op_counts_match_tree_structure_uniform_full() {
+        // dense particle set so every box is occupied: counts follow the
+        // work model of §5.2 exactly
+        let levels = 3u8;
+        let n_leaf = 1usize << levels;
+        let mut parts = Vec::new();
+        for i in 0..n_leaf {
+            for j in 0..n_leaf {
+                parts.push([
+                    (i as f64 + 0.5) / n_leaf as f64,
+                    (j as f64 + 0.5) / n_leaf as f64,
+                    1.0,
+                ]);
+            }
+        }
+        let tree = Quadtree::build(Domain::UNIT, levels, parts);
+        let dims = OpDims { batch: 16, leaf: 8, terms: 5, sigma: 0.01 };
+        let backend = NativeBackend::new(dims, BiotSavart2D::new(0.01));
+        let ev = Evaluator::new(&tree, &backend);
+        let _ = ev.evaluate();
+        let c = ev.counts.get();
+        assert_eq!(c.p2m, 64);           // one per leaf
+        assert_eq!(c.m2m, 64);           // level-3 boxes shifted into parents
+        assert_eq!(c.l2p, 64);
+        // M2L pair count at levels 2 and 3 of a full tree
+        let m2l_expected: u64 = [2u8, 3]
+            .iter()
+            .map(|&l| {
+                let n = 1u32 << l;
+                (0..n)
+                    .flat_map(|x| (0..n).map(move |y| (x, y)))
+                    .map(|(x, y)| {
+                        interaction_list(&BoxId::new(l, x, y)).len() as u64
+                    })
+                    .sum::<u64>()
+            })
+            .sum();
+        assert_eq!(c.m2l, m2l_expected);
+        assert_eq!(c.l2l, 64);           // level-3 children of level-2 LEs
+    }
+}

@@ -1,0 +1,272 @@
+//! Native-rust expansion operators (P2M, M2M, M2L, L2L, L2P).
+//!
+//! These mirror the L1/L2 python operators coefficient-for-coefficient
+//! (same radius-scaled complex formulation, DESIGN.md §3) and serve two
+//! roles: the correctness oracle for the PJRT path, and the fast native
+//! path used when artifact execution is not requested.
+//!
+//! Scaling convention (mandatory for deep trees — raw (dz)^16 underflows
+//! at level 10): ME `a~_k = Σ γ_j ((z_j-z0)/r)^k`, LE `c~_l = c_l r^l`.
+
+use crate::util::{BinomialTable, Complex};
+
+/// One multipole or local expansion: `p` scaled complex coefficients.
+pub type Coeffs = Vec<Complex>;
+
+/// P2M: particles (positions + strengths) -> scaled ME about (center, r).
+pub fn p2m(
+    parts: &[[f64; 3]],
+    center: [f64; 2],
+    r: f64,
+    p: usize,
+) -> Coeffs {
+    let mut me = vec![Complex::ZERO; p];
+    let inv_r = 1.0 / r;
+    for pa in parts {
+        let dz = Complex::new((pa[0] - center[0]) * inv_r,
+                              (pa[1] - center[1]) * inv_r);
+        let g = pa[2];
+        let mut pw = Complex::ONE;
+        for k in 0..p {
+            me[k] += pw.scale(g);
+            pw = pw * dz;
+        }
+    }
+    me
+}
+
+/// M2M: shift a child ME to the parent center.
+/// `d = (z_child - z_parent)/r_parent`, `rho = r_child/r_parent`:
+/// `b~_l = Σ_{k<=l} C(l,k) d^(l-k) rho^k a~_k`.
+pub fn m2m(
+    child: &Coeffs,
+    d: Complex,
+    rho: f64,
+    binom: &BinomialTable,
+) -> Coeffs {
+    let p = child.len();
+    // d^m table and rho^k-scaled child coefficients
+    let mut dpw = vec![Complex::ONE; p];
+    for m in 1..p {
+        dpw[m] = dpw[m - 1] * d;
+    }
+    let mut a = Vec::with_capacity(p);
+    let mut rpw = 1.0;
+    for k in 0..p {
+        a.push(child[k].scale(rpw));
+        rpw *= rho;
+    }
+    let mut out = vec![Complex::ZERO; p];
+    for l in 0..p {
+        let mut acc = Complex::ZERO;
+        for k in 0..=l {
+            acc += (dpw[l - k] * a[k]).scale(binom.get(l, k));
+        }
+        out[l] = acc;
+    }
+    out
+}
+
+/// M2L: transform a source ME into a target LE across a well-separated
+/// pair at the same level.  `tau = (z_src - z_tgt)/r`:
+/// `c~_l = (1/r) Σ_k a~_k (-1)^(k+1) C(k+l,k) tau^-(k+l+1)`.
+pub fn m2l(
+    me: &Coeffs,
+    tau: Complex,
+    inv_r: f64,
+    binom: &BinomialTable,
+) -> Coeffs {
+    let p = me.len();
+    let itau = tau.inv();
+    // itau^(n) for n in 0..2p
+    let mut ipw = vec![Complex::ONE; 2 * p];
+    for n in 1..2 * p {
+        ipw[n] = ipw[n - 1] * itau;
+    }
+    let mut out = vec![Complex::ZERO; p];
+    for l in 0..p {
+        let mut acc = Complex::ZERO;
+        for k in 0..p {
+            let sign = if (k + 1) % 2 == 0 { 1.0 } else { -1.0 };
+            let c = sign * binom.get(k + l, k);
+            acc += (me[k] * ipw[k + l + 1]).scale(c);
+        }
+        out[l] = acc.scale(inv_r);
+    }
+    out
+}
+
+/// L2L: shift a parent LE into a child box.
+/// `d = (z_child - z_parent)/r_parent`, `rho = r_child/r_parent`:
+/// `c~'_l = rho^l Σ_{m>=l} C(m,l) d^(m-l) c~_m`.
+pub fn l2l(
+    parent: &Coeffs,
+    d: Complex,
+    rho: f64,
+    binom: &BinomialTable,
+) -> Coeffs {
+    let p = parent.len();
+    let mut dpw = vec![Complex::ONE; p];
+    for m in 1..p {
+        dpw[m] = dpw[m - 1] * d;
+    }
+    let mut out = vec![Complex::ZERO; p];
+    let mut rpw = 1.0;
+    for l in 0..p {
+        let mut acc = Complex::ZERO;
+        for m in l..p {
+            acc += (dpw[m - l] * parent[m]).scale(binom.get(m, l));
+        }
+        out[l] = acc.scale(rpw);
+        rpw *= rho;
+    }
+    out
+}
+
+/// L2P: evaluate an LE at a point, returning the complex far-field sum
+/// `f(z) = Σ_l c~_l ((z - z_L)/r)^l` (the kernel maps it to a 2-vector).
+pub fn l2p(le: &Coeffs, center: [f64; 2], r: f64, x: f64, y: f64)
+    -> Complex {
+    let dz = Complex::new((x - center[0]) / r, (y - center[1]) / r);
+    // Horner evaluation
+    let mut acc = Complex::ZERO;
+    for c in le.iter().rev() {
+        acc = acc * dz + *c;
+    }
+    acc
+}
+
+/// Evaluate an ME directly (used by tests and by root-tree bookkeeping):
+/// `f(z) = Σ_k a~_k r^k/(z - z0)^(k+1)`.
+pub fn eval_me(me: &Coeffs, center: [f64; 2], r: f64, x: f64, y: f64)
+    -> Complex {
+    let dz = Complex::new(x - center[0], y - center[1]);
+    let idz = dz.inv();
+    let mut acc = Complex::ZERO;
+    let mut rk = 1.0; // r^k
+    let mut ipw = idz; // 1/dz^(k+1)
+    for k in 0..me.len() {
+        acc += (me[k] * ipw).scale(rk);
+        rk *= r;
+        ipw = ipw * idz;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{check, Gen};
+
+    const P: usize = 20;
+
+    fn cluster(g: &mut Gen, n: usize, c: [f64; 2], r: f64)
+        -> Vec<[f64; 3]> {
+        (0..n)
+            .map(|_| {
+                [
+                    c[0] + g.f64_in(-r, r),
+                    c[1] + g.f64_in(-r, r),
+                    g.normal(),
+                ]
+            })
+            .collect()
+    }
+
+    fn direct_f(parts: &[[f64; 3]], x: f64, y: f64) -> Complex {
+        let mut f = Complex::ZERO;
+        for p in parts {
+            let dz = Complex::new(x - p[0], y - p[1]);
+            f += dz.inv().scale(p[2]);
+        }
+        f
+    }
+
+    #[test]
+    fn prop_me_converges_to_direct_far_field() {
+        check("ME == direct far", 32, |g| {
+            let c = [0.5, 0.5];
+            let r = 0.1;
+            let parts = cluster(g, 15, c, r);
+            let me = p2m(&parts, c, r, P);
+            let (x, y) = (g.f64_in(2.0, 4.0), g.f64_in(-3.0, -2.0));
+            let got = eval_me(&me, c, r, x, y);
+            let want = direct_f(&parts, x, y);
+            let scale = want.abs().max(1e-12);
+            assert!((got - want).abs() / scale < 1e-10,
+                    "got {got:?} want {want:?}");
+        });
+    }
+
+    #[test]
+    fn prop_m2m_preserves_far_field() {
+        check("M2M preserves", 32, |g| {
+            let binom = BinomialTable::for_terms(P);
+            let cc = [0.25, 0.75];
+            let rc = 0.25;
+            let cp = [0.5, 0.5];
+            let rp = 0.5;
+            let parts = cluster(g, 10, cc, rc);
+            let me_c = p2m(&parts, cc, rc, P);
+            let d = Complex::new((cc[0] - cp[0]) / rp, (cc[1] - cp[1]) / rp);
+            let me_p = m2m(&me_c, d, rc / rp, &binom);
+            let (x, y) = (5.0, -4.0);
+            let got = eval_me(&me_p, cp, rp, x, y);
+            let want = direct_f(&parts, x, y);
+            assert!((got - want).abs() / want.abs().max(1e-12) < 1e-9);
+        });
+    }
+
+    #[test]
+    fn prop_m2l_l2p_equals_direct() {
+        check("M2L+L2P == direct", 32, |g| {
+            let binom = BinomialTable::for_terms(P);
+            let cs = [0.1, 0.1];
+            let r = 0.1;
+            let ct = [0.7, 0.1]; // 6r separation
+            let parts = cluster(g, 12, cs, r);
+            let me = p2m(&parts, cs, r, P);
+            let tau = Complex::new((cs[0] - ct[0]) / r, (cs[1] - ct[1]) / r);
+            let le = m2l(&me, tau, 1.0 / r, &binom);
+            let (x, y) = (ct[0] + g.f64_in(-r, r), ct[1] + g.f64_in(-r, r));
+            let got = l2p(&le, ct, r, x, y);
+            let want = direct_f(&parts, x, y);
+            assert!((got - want).abs() / want.abs().max(1e-12) < 1e-5,
+                    "got {got:?} want {want:?}");
+        });
+    }
+
+    #[test]
+    fn prop_l2l_preserves_local_field() {
+        check("L2L preserves", 32, |g| {
+            let binom = BinomialTable::for_terms(P);
+            let cp = [0.5, 0.5];
+            let rp = 0.2;
+            let cc = [0.45, 0.55];
+            let rc = 0.1;
+            let le_p: Coeffs =
+                (0..P).map(|_| Complex::new(g.normal(), g.normal())).collect();
+            let d = Complex::new((cc[0] - cp[0]) / rp, (cc[1] - cp[1]) / rp);
+            let le_c = l2l(&le_p, d, rc / rp, &binom);
+            let (x, y) = (cc[0] + g.f64_in(-0.05, 0.05),
+                          cc[1] + g.f64_in(-0.05, 0.05));
+            let got = l2p(&le_c, cc, rc, x, y);
+            let want = l2p(&le_p, cp, rp, x, y);
+            assert!((got - want).abs() / want.abs().max(1e-12) < 1e-9);
+        });
+    }
+
+    #[test]
+    fn p2m_is_linear_in_strengths() {
+        let c = [0.3, 0.3];
+        let r = 0.1;
+        let a = [[0.31, 0.29, 2.0]];
+        let b = [[0.31, 0.29, 3.0]];
+        let ab = [[0.31, 0.29, 5.0]];
+        let (ma, mb, mab) =
+            (p2m(&a, c, r, 8), p2m(&b, c, r, 8), p2m(&ab, c, r, 8));
+        for k in 0..8 {
+            assert!(((ma[k] + mb[k]) - mab[k]).abs() < 1e-12);
+        }
+    }
+}

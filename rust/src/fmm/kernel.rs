@@ -1,0 +1,160 @@
+//! Interaction kernels.
+//!
+//! The paper's `Evaluator` is "templated over a Kernel object ... so that
+//! we can easily replace one equation with another" (§6.1).  The same
+//! extensibility point here: every kernel shares the complex 1/z expansion
+//! machinery (the paper's far-field kernel substitution, §3) and supplies
+//! (a) its exact near-field pairwise interaction and (b) the map from the
+//! complex far-field sum `f(z) = Σ γ_j/(z-z_j)` to the physical output.
+
+use crate::util::{Complex, TWO_PI};
+
+/// An interaction kernel usable by the FMM evaluators.
+pub trait Kernel: Send + Sync {
+    /// Exact pairwise contribution of a source at distance (dx, dy) with
+    /// strength `gamma` onto a target. Must be zero at dx = dy = 0.
+    fn direct(&self, dx: f64, dy: f64, gamma: f64) -> [f64; 2];
+
+    /// Map the complex far-field sum `f` to the physical 2-vector.
+    fn far_transform(&self, f: Complex) -> [f64; 2];
+
+    /// Human-readable name (for manifests, logs, verification files).
+    fn name(&self) -> &'static str;
+}
+
+/// Regularized Biot–Savart kernel of the vortex method (paper Eq. 8):
+///
+/// `K_σ(x) = (-x₂, x₁)/(2π|x|²) · (1 - exp(-|x|²/2σ²))`
+///
+/// Far field uses the 1/|x|² (point-vortex) expansion; the paper shows the
+/// substitution does not impact accuracy for reasonable box sizes (§3).
+#[derive(Clone, Copy, Debug)]
+pub struct BiotSavart2D {
+    pub sigma: f64,
+}
+
+impl BiotSavart2D {
+    pub fn new(sigma: f64) -> Self {
+        assert!(sigma > 0.0);
+        BiotSavart2D { sigma }
+    }
+}
+
+impl Kernel for BiotSavart2D {
+    #[inline]
+    fn direct(&self, dx: f64, dy: f64, gamma: f64) -> [f64; 2] {
+        let r2 = dx * dx + dy * dy;
+        if r2 == 0.0 {
+            return [0.0, 0.0];
+        }
+        let fac = gamma * (1.0 - (-r2 / (2.0 * self.sigma * self.sigma)).exp())
+            / (TWO_PI * r2);
+        [-dy * fac, dx * fac]
+    }
+
+    /// u - iv = -i f/(2π)  =>  u = Im(f)/(2π), v = Re(f)/(2π).
+    #[inline]
+    fn far_transform(&self, f: Complex) -> [f64; 2] {
+        [f.im / TWO_PI, f.re / TWO_PI]
+    }
+
+    fn name(&self) -> &'static str {
+        "biot-savart-2d"
+    }
+}
+
+/// 2D Coulomb/Laplace field kernel (second kernel instance, §8 extension):
+/// the in-plane field of a 2D point charge, `E = q (x-x_j)/|x-x_j|²`.
+/// Its complex form is exactly `E_x - iE_y = q/(z - z_j)`, so the far
+/// field needs no substitution at all.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Laplace2D;
+
+impl Kernel for Laplace2D {
+    #[inline]
+    fn direct(&self, dx: f64, dy: f64, gamma: f64) -> [f64; 2] {
+        let r2 = dx * dx + dy * dy;
+        if r2 == 0.0 {
+            return [0.0, 0.0];
+        }
+        [gamma * dx / r2, gamma * dy / r2]
+    }
+
+    /// E_x - iE_y = f  =>  E = (Re f, -Im f).
+    #[inline]
+    fn far_transform(&self, f: Complex) -> [f64; 2] {
+        [f.re, -f.im]
+    }
+
+    fn name(&self) -> &'static str {
+        "laplace-2d"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::check;
+
+    #[test]
+    fn biot_savart_single_vortex_tangential() {
+        let k = BiotSavart2D::new(0.02);
+        // unit vortex at origin, target at (r, 0): u = 0, v ~ 1/(2 pi r)
+        let r = 0.3;
+        let v = k.direct(r, 0.0, 1.0);
+        let want = (1.0 - (-r * r / (2.0 * 0.02f64.powi(2))).exp())
+            / (TWO_PI * r);
+        assert!(v[0].abs() < 1e-15);
+        assert!((v[1] - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn biot_savart_far_matches_point_vortex() {
+        // far from the core the regularization vanishes:
+        // K_sigma -> K = (-dy, dx)/(2 pi r^2)
+        let k = BiotSavart2D::new(0.02);
+        let (dx, dy) = (0.5, -0.8);
+        let r2: f64 = dx * dx + dy * dy;
+        let got = k.direct(dx, dy, 2.0);
+        let want = [-dy * 2.0 / (TWO_PI * r2), dx * 2.0 / (TWO_PI * r2)];
+        assert!((got[0] - want[0]).abs() < 1e-12);
+        assert!((got[1] - want[1]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn far_transform_consistent_with_direct_far_field() {
+        // far_transform(gamma/(z - z_j)) == direct(dx, dy, gamma) far away
+        check("far transform consistency", 64, |g| {
+            let k = BiotSavart2D::new(1e-4); // tiny core: regularization off
+            let dx = g.f64_in(0.5, 2.0);
+            let dy = g.f64_in(0.5, 2.0);
+            let gamma = g.normal();
+            let f = Complex::new(dx, dy).inv().scale(gamma); // gamma/dz
+            let got = k.far_transform(f);
+            let want = k.direct(dx, dy, gamma);
+            assert!((got[0] - want[0]).abs() < 1e-12, "{got:?} {want:?}");
+            assert!((got[1] - want[1]).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn laplace_far_transform_exact() {
+        check("laplace far transform", 64, |g| {
+            let k = Laplace2D;
+            let dx = g.f64_in(-2.0, 2.0);
+            let dy = g.f64_in(0.1, 2.0);
+            let q = g.normal();
+            let f = Complex::new(dx, dy).inv().scale(q);
+            let got = k.far_transform(f);
+            let want = k.direct(dx, dy, q);
+            assert!((got[0] - want[0]).abs() < 1e-12);
+            assert!((got[1] - want[1]).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn self_interaction_is_zero() {
+        assert_eq!(BiotSavart2D::new(0.1).direct(0.0, 0.0, 5.0), [0.0, 0.0]);
+        assert_eq!(Laplace2D.direct(0.0, 0.0, 5.0), [0.0, 0.0]);
+    }
+}

@@ -1,0 +1,15 @@
+//! The fast multipole method core (§2): kernels, expansion operators,
+//! batched backends, the serial evaluator, and the O(N²) direct baseline.
+
+pub mod backend;
+pub mod direct;
+pub mod evaluator;
+pub mod expansions;
+pub mod kernel;
+pub mod native;
+
+pub use backend::{OpDims, OpsBackend};
+pub use direct::{direct_all, direct_at};
+pub use evaluator::{Evaluator, FmmState, OpCounts};
+pub use kernel::{BiotSavart2D, Kernel, Laplace2D};
+pub use native::NativeBackend;

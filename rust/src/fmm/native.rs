@@ -1,0 +1,241 @@
+//! Pure-rust implementation of the batched operator ABI.
+//!
+//! Serves as the correctness oracle for the PJRT artifacts (they must agree
+//! to ~1e-12) and as the high-throughput native path: it is generic over
+//! [`Kernel`], which is how the Laplace2D kernel (the paper's §8
+//! extensibility claim) runs through the identical evaluator machinery.
+
+use super::backend::{OpDims, OpsBackend};
+use super::expansions;
+use super::kernel::Kernel;
+use crate::util::{BinomialTable, Complex};
+
+/// Native batched backend, generic over the interaction kernel.
+pub struct NativeBackend<K: Kernel> {
+    dims: OpDims,
+    kernel: K,
+    binom: BinomialTable,
+}
+
+impl<K: Kernel> NativeBackend<K> {
+    pub fn new(dims: OpDims, kernel: K) -> Self {
+        let binom = BinomialTable::for_terms(dims.terms);
+        NativeBackend { dims, kernel, binom }
+    }
+
+    pub fn kernel(&self) -> &K {
+        &self.kernel
+    }
+
+    #[inline]
+    fn coeffs_in(buf: &[f64], b: usize, p: usize) -> Vec<Complex> {
+        (0..p)
+            .map(|k| Complex::new(buf[(b * p + k) * 2],
+                                  buf[(b * p + k) * 2 + 1]))
+            .collect()
+    }
+
+    #[inline]
+    fn coeffs_out(dst: &mut [f64], b: usize, p: usize, c: &[Complex]) {
+        for k in 0..p {
+            dst[(b * p + k) * 2] = c[k].re;
+            dst[(b * p + k) * 2 + 1] = c[k].im;
+        }
+    }
+
+    #[inline]
+    fn parts_in(buf: &[f64], b: usize, s: usize) -> Vec<[f64; 3]> {
+        (0..s)
+            .map(|j| {
+                let o = (b * s + j) * 3;
+                [buf[o], buf[o + 1], buf[o + 2]]
+            })
+            .collect()
+    }
+}
+
+impl<K: Kernel> OpsBackend for NativeBackend<K> {
+    fn dims(&self) -> OpDims {
+        self.dims
+    }
+
+    fn p2m(&self, particles: &[f64], centers: &[f64], radius: &[f64])
+        -> Vec<f64> {
+        let OpDims { batch, leaf, terms, .. } = self.dims;
+        let mut out = vec![0.0; batch * terms * 2];
+        for b in 0..batch {
+            let parts = Self::parts_in(particles, b, leaf);
+            let me = expansions::p2m(
+                &parts,
+                [centers[b * 2], centers[b * 2 + 1]],
+                radius[b],
+                terms,
+            );
+            Self::coeffs_out(&mut out, b, terms, &me);
+        }
+        out
+    }
+
+    fn m2m(&self, me: &[f64], d: &[f64], rho: &[f64]) -> Vec<f64> {
+        let OpDims { batch, terms, .. } = self.dims;
+        let mut out = vec![0.0; batch * terms * 2];
+        for b in 0..batch {
+            let c = Self::coeffs_in(me, b, terms);
+            let shifted = expansions::m2m(
+                &c,
+                Complex::new(d[b * 2], d[b * 2 + 1]),
+                rho[b],
+                &self.binom,
+            );
+            Self::coeffs_out(&mut out, b, terms, &shifted);
+        }
+        out
+    }
+
+    fn m2l(&self, me: &[f64], tau: &[f64], inv_r: &[f64]) -> Vec<f64> {
+        let OpDims { batch, terms, .. } = self.dims;
+        let mut out = vec![0.0; batch * terms * 2];
+        for b in 0..batch {
+            let c = Self::coeffs_in(me, b, terms);
+            let le = expansions::m2l(
+                &c,
+                Complex::new(tau[b * 2], tau[b * 2 + 1]),
+                inv_r[b],
+                &self.binom,
+            );
+            Self::coeffs_out(&mut out, b, terms, &le);
+        }
+        out
+    }
+
+    fn l2l(&self, le: &[f64], d: &[f64], rho: &[f64]) -> Vec<f64> {
+        let OpDims { batch, terms, .. } = self.dims;
+        let mut out = vec![0.0; batch * terms * 2];
+        for b in 0..batch {
+            let c = Self::coeffs_in(le, b, terms);
+            let shifted = expansions::l2l(
+                &c,
+                Complex::new(d[b * 2], d[b * 2 + 1]),
+                rho[b],
+                &self.binom,
+            );
+            Self::coeffs_out(&mut out, b, terms, &shifted);
+        }
+        out
+    }
+
+    fn l2p(&self, le: &[f64], particles: &[f64], centers: &[f64],
+           radius: &[f64]) -> Vec<f64> {
+        let OpDims { batch, leaf, terms, .. } = self.dims;
+        let mut out = vec![0.0; batch * leaf * 2];
+        for b in 0..batch {
+            let c = Self::coeffs_in(le, b, terms);
+            let center = [centers[b * 2], centers[b * 2 + 1]];
+            let r = radius[b];
+            for j in 0..leaf {
+                let o = (b * leaf + j) * 3;
+                let f = expansions::l2p(
+                    &c, center, r, particles[o], particles[o + 1]);
+                let v = self.kernel.far_transform(f);
+                out[(b * leaf + j) * 2] = v[0];
+                out[(b * leaf + j) * 2 + 1] = v[1];
+            }
+        }
+        out
+    }
+
+    fn p2p(&self, targets: &[f64], sources: &[f64]) -> Vec<f64> {
+        let OpDims { batch, leaf, .. } = self.dims;
+        let mut out = vec![0.0; batch * leaf * 2];
+        for b in 0..batch {
+            for i in 0..leaf {
+                let to = (b * leaf + i) * 3;
+                let (tx, ty) = (targets[to], targets[to + 1]);
+                let mut u = 0.0;
+                let mut v = 0.0;
+                for j in 0..leaf {
+                    let so = (b * leaf + j) * 3;
+                    let g = sources[so + 2];
+                    let w = self.kernel.direct(
+                        tx - sources[so], ty - sources[so + 1], g);
+                    u += w[0];
+                    v += w[1];
+                }
+                out[(b * leaf + i) * 2] = u;
+                out[(b * leaf + i) * 2 + 1] = v;
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::kernel::BiotSavart2D;
+    use super::*;
+    use crate::proptest::check;
+
+    fn dims() -> OpDims {
+        OpDims { batch: 3, leaf: 4, terms: 6, sigma: 0.02 }
+    }
+
+    #[test]
+    fn p2m_matches_scalar_expansions() {
+        check("native p2m batched == scalar", 16, |g| {
+            let d = dims();
+            let be = NativeBackend::new(d, BiotSavart2D::new(d.sigma));
+            let mut parts = vec![0.0; d.batch * d.leaf * 3];
+            for x in parts.iter_mut() {
+                *x = g.f64_in(0.0, 1.0);
+            }
+            let centers: Vec<f64> =
+                (0..d.batch * 2).map(|_| g.f64_in(0.0, 1.0)).collect();
+            let radius: Vec<f64> =
+                (0..d.batch).map(|_| g.f64_in(0.1, 0.5)).collect();
+            let out = be.p2m(&parts, &centers, &radius);
+            for b in 0..d.batch {
+                let ps: Vec<[f64; 3]> = (0..d.leaf)
+                    .map(|j| {
+                        let o = (b * d.leaf + j) * 3;
+                        [parts[o], parts[o + 1], parts[o + 2]]
+                    })
+                    .collect();
+                let me = expansions::p2m(
+                    &ps,
+                    [centers[b * 2], centers[b * 2 + 1]],
+                    radius[b],
+                    d.terms,
+                );
+                for k in 0..d.terms {
+                    assert!((out[(b * d.terms + k) * 2] - me[k].re).abs()
+                        < 1e-14);
+                    assert!((out[(b * d.terms + k) * 2 + 1] - me[k].im)
+                        .abs() < 1e-14);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn p2p_padding_is_inert() {
+        let d = dims();
+        let be = NativeBackend::new(d, BiotSavart2D::new(d.sigma));
+        // one real particle per box, rest padded at the same position with
+        // gamma = 0 — must produce zero velocity everywhere
+        let mut t = vec![0.0; d.batch * d.leaf * 3];
+        for b in 0..d.batch {
+            for j in 0..d.leaf {
+                let o = (b * d.leaf + j) * 3;
+                t[o] = 0.5;
+                t[o + 1] = 0.5;
+                t[o + 2] = 0.0;
+            }
+        }
+        let out = be.p2p(&t, &t);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,32 @@
+//! # PetFMM-RS
+//!
+//! Reproduction of *"PetFMM — a dynamically load-balancing parallel fast
+//! multipole library"* (Cruz, Knepley & Barba, 2009) as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: quadtree
+//!   decomposition, tree cutting, work/communication modeling (§5),
+//!   weighted-graph partitioning (§4), and a simulated distributed runtime
+//!   reproducing the strong-scaling experiments (§7).
+//! * **L2/L1 (python/, build-time only)** — the FMM operator algebra as
+//!   batched jax functions with Pallas kernels for the P2P and M2L hot
+//!   spots, AOT-lowered to HLO artifacts executed via PJRT.
+//!
+//! See DESIGN.md for the full system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod fmm;
+pub mod metrics;
+pub mod model;
+pub mod partition;
+pub mod proptest;
+pub mod quadtree;
+pub mod runtime;
+pub mod sched;
+pub mod util;
+pub mod verify;
+pub mod vortex;

@@ -1,0 +1,3 @@
+fn main() {
+    petfmm::coordinator::cli_main();
+}

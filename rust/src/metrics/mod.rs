@@ -1,0 +1,188 @@
+//! Performance metrics and table rendering for the §7 experiments:
+//! speedup S(N,P) (Eq. 18), parallel efficiency E(N,P) (Eq. 19), the
+//! load-balance metric LB(P) (Eq. 20), and text/CSV renderers for the
+//! figure series.
+
+/// Speedup (Eq. 18): serial time / parallel time.
+pub fn speedup(serial_time: f64, parallel_time: f64) -> f64 {
+    serial_time / parallel_time
+}
+
+/// Parallel efficiency (Eq. 19): S(N,P)/P.
+pub fn efficiency(serial_time: f64, parallel_time: f64, ranks: usize)
+    -> f64 {
+    speedup(serial_time, parallel_time) / ranks as f64
+}
+
+/// Load balance (Eq. 20): min/max of per-rank execution times.
+pub fn load_balance(rank_times: &[f64]) -> f64 {
+    let max = rank_times.iter().cloned().fold(f64::MIN, f64::max);
+    let min = rank_times.iter().cloned().fold(f64::MAX, f64::min);
+    if max <= 0.0 {
+        1.0
+    } else {
+        min / max
+    }
+}
+
+/// One strong-scaling observation (a point on Figs. 6–9).
+#[derive(Clone, Debug)]
+pub struct ScalingPoint {
+    pub ranks: usize,
+    pub total_time: f64,
+    pub stage_times: Vec<(String, f64)>,
+    pub load_balance: f64,
+    pub comm_bytes: f64,
+}
+
+/// A full strong-scaling experiment (fixed N, varying P).
+#[derive(Clone, Debug, Default)]
+pub struct ScalingSeries {
+    pub points: Vec<ScalingPoint>,
+}
+
+impl ScalingSeries {
+    pub fn serial_time(&self) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.ranks == 1)
+            .map(|p| p.total_time)
+    }
+
+    /// Render the Fig. 6 table: per-stage + total times vs P.
+    pub fn fig6_table(&self) -> String {
+        let mut out = String::new();
+        let stage_names: Vec<String> = self
+            .points
+            .first()
+            .map(|p| p.stage_times.iter().map(|(n, _)| n.clone()).collect())
+            .unwrap_or_default();
+        out.push_str(&format!("{:>6}", "P"));
+        for n in &stage_names {
+            out.push_str(&format!("{n:>18}"));
+        }
+        out.push_str(&format!("{:>18}\n", "total"));
+        for p in &self.points {
+            out.push_str(&format!("{:>6}", p.ranks));
+            for (_, t) in &p.stage_times {
+                out.push_str(&format!("{t:>18.6}"));
+            }
+            out.push_str(&format!("{:>18.6}\n", p.total_time));
+        }
+        out
+    }
+
+    /// Render the Fig. 7/8 table: speedup + efficiency vs P.
+    pub fn fig7_8_table(&self) -> String {
+        let mut out = String::new();
+        let Some(t1) = self.serial_time() else {
+            return "no P=1 baseline\n".into();
+        };
+        out.push_str(&format!("{:>6}{:>14}{:>14}{:>14}\n", "P", "time(s)",
+                              "speedup", "efficiency"));
+        for p in &self.points {
+            out.push_str(&format!(
+                "{:>6}{:>14.6}{:>14.3}{:>14.3}\n",
+                p.ranks,
+                p.total_time,
+                speedup(t1, p.total_time),
+                efficiency(t1, p.total_time, p.ranks)
+            ));
+        }
+        out
+    }
+
+    /// Render the Fig. 9 table: LB(P) + total efficiency vs P.
+    pub fn fig9_table(&self) -> String {
+        let mut out = String::new();
+        let t1 = self.serial_time().unwrap_or(f64::NAN);
+        out.push_str(&format!("{:>6}{:>14}{:>14}{:>16}\n", "P",
+                              "load-balance", "efficiency", "comm(MB)"));
+        for p in &self.points {
+            out.push_str(&format!(
+                "{:>6}{:>14.4}{:>14.3}{:>16.3}\n",
+                p.ranks,
+                p.load_balance,
+                efficiency(t1, p.total_time, p.ranks),
+                p.comm_bytes / 1e6
+            ));
+        }
+        out
+    }
+
+    /// CSV export (one row per point; stages flattened).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("ranks,total_time,load_balance,\
+                                    comm_bytes");
+        if let Some(p) = self.points.first() {
+            for (n, _) in &p.stage_times {
+                out.push(',');
+                out.push_str(n);
+            }
+        }
+        out.push('\n');
+        for p in &self.points {
+            out.push_str(&format!("{},{},{},{}", p.ranks, p.total_time,
+                                  p.load_balance, p.comm_bytes));
+            for (_, t) in &p.stage_times {
+                out.push_str(&format!(",{t}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_series() -> ScalingSeries {
+        let mk = |ranks: usize, t: f64| ScalingPoint {
+            ranks,
+            total_time: t,
+            stage_times: vec![("p2p".into(), t * 0.6),
+                              ("m2l".into(), t * 0.3)],
+            load_balance: 0.95,
+            comm_bytes: 1e6 * ranks as f64,
+        };
+        ScalingSeries {
+            points: vec![mk(1, 64.0), mk(4, 17.0), mk(16, 4.5)],
+        }
+    }
+
+    #[test]
+    fn speedup_and_efficiency() {
+        assert_eq!(speedup(10.0, 2.0), 5.0);
+        assert_eq!(efficiency(10.0, 2.0, 5), 1.0);
+    }
+
+    #[test]
+    fn load_balance_bounds() {
+        assert_eq!(load_balance(&[1.0, 1.0]), 1.0);
+        assert_eq!(load_balance(&[1.0, 4.0]), 0.25);
+    }
+
+    #[test]
+    fn tables_render_every_point() {
+        let s = fake_series();
+        let fig6 = s.fig6_table();
+        let fig78 = s.fig7_8_table();
+        let fig9 = s.fig9_table();
+        for t in [&fig6, &fig78, &fig9] {
+            assert_eq!(t.lines().count(), 4, "{t}");
+        }
+        assert!(fig78.contains("3.76")
+                || fig78.contains("3.765"), "{fig78}"); // 64/17
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let s = fake_series();
+        let csv = s.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].split(',').count(), 6);
+        assert_eq!(lines[1].split(',').count(), 6);
+    }
+}

@@ -1,0 +1,192 @@
+//! Communication estimates (§5.1, Eqs. 11–12) and the communication
+//! matrix construction.
+//!
+//! Between two *lateral* neighboring subtrees of a quadtree (Eq. 11):
+//!
+//! ```text
+//!     Σ_{n=k+1}^{L} α_comm · 2^(n-k) · 4
+//! ```
+//!
+//! (at each level below the cut, the number of boundary boxes along the
+//! shared edge doubles; the factor 4 covers the per-box expansion blocks
+//! exchanged for M2L across the cut).
+//!
+//! Between two *diagonal* neighbors (Eq. 12), only corner boxes touch:
+//!
+//! ```text
+//!     α_comm · (L - k) · 4
+//! ```
+//!
+//! (one corner box per level; the paper writes ((k-L)-1)·4 with its sign
+//! convention — magnitude (L-k) levels of corner exchanges, ±1 box
+//! depending on how the cut-level corner is counted; we count L-k).
+//!
+//! α_comm depends on the expansion order p and scalar width (§5.1):
+//! one expansion block is p complex f64 coefficients = 16 p bytes.
+
+use crate::quadtree::{Adjacency, TreeCut};
+
+/// Symmetric communication matrix between subtrees (bytes).
+#[derive(Clone, Debug)]
+pub struct CommMatrix {
+    pub n: usize,
+    data: Vec<f64>,
+}
+
+impl CommMatrix {
+    pub fn zeros(n: usize) -> Self {
+        CommMatrix { n, data: vec![0.0; n * n] }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn add(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.n + j] += v;
+    }
+
+    /// Total communication volume (each directed edge counted once).
+    pub fn total(&self) -> f64 {
+        self.data.iter().sum()
+    }
+
+    /// Non-zero undirected edges as (i, j, weight), i < j.
+    pub fn edges(&self) -> Vec<(usize, usize, f64)> {
+        let mut out = Vec::new();
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                let w = self.get(i, j) + self.get(j, i);
+                if w > 0.0 {
+                    out.push((i, j, w));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Estimator implementing Eqs. 11–12 and the §5.1 matrix-fill pseudocode.
+#[derive(Clone, Copy, Debug)]
+pub struct CommEstimator {
+    /// bytes per expansion block: 16 p (p complex f64 coefficients)
+    pub alpha_comm: f64,
+}
+
+impl CommEstimator {
+    pub fn for_terms(p: usize) -> Self {
+        CommEstimator { alpha_comm: 16.0 * p as f64 }
+    }
+
+    /// Eq. 11: volume between lateral neighboring subtrees.
+    pub fn lateral(&self, tree_levels: u8, cut_level: u8) -> f64 {
+        let (l, k) = (tree_levels as i64, cut_level as i64);
+        let mut sum = 0.0;
+        for n in (k + 1)..=l {
+            sum += self.alpha_comm * (1u64 << (n - k)) as f64 * 4.0;
+        }
+        sum
+    }
+
+    /// Eq. 12: volume between diagonal neighboring subtrees.
+    pub fn diagonal(&self, tree_levels: u8, cut_level: u8) -> f64 {
+        let (l, k) = (tree_levels as i64, cut_level as i64);
+        self.alpha_comm * (l - k) as f64 * 4.0
+    }
+
+    /// §5.1 pseudocode: fill the subtree-to-subtree communication matrix
+    /// using z-order neighbor discovery (no communication required).
+    pub fn comm_matrix(&self, cut: &TreeCut) -> CommMatrix {
+        let n = cut.n_subtrees();
+        let mut m = CommMatrix::zeros(n);
+        let lateral = self.lateral(cut.tree_levels, cut.cut_level);
+        let diagonal = self.diagonal(cut.tree_levels, cut.cut_level);
+        for (j, sj) in cut.subtrees.iter().enumerate() {
+            // neighbor set of j at the cut level
+            for si in crate::quadtree::neighbors(sj) {
+                let i = cut.subtree_index(&si);
+                match TreeCut::adjacency(&si, sj) {
+                    Adjacency::Lateral => m.add(i, j, lateral),
+                    Adjacency::Diagonal => m.add(i, j, diagonal),
+                    Adjacency::None => {}
+                }
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::check;
+
+    #[test]
+    fn lateral_estimate_eq11() {
+        // L=10, k=4, p=17: sum_{n=5}^{10} 16*17 * 2^(n-k) * 4
+        let e = CommEstimator::for_terms(17);
+        let mut want = 0.0;
+        for n in 5..=10i64 {
+            want += 16.0 * 17.0 * (1u64 << (n - 4)) as f64 * 4.0;
+        }
+        assert_eq!(e.lateral(10, 4), want);
+    }
+
+    #[test]
+    fn diagonal_estimate_eq12() {
+        let e = CommEstimator::for_terms(17);
+        assert_eq!(e.diagonal(10, 4), 16.0 * 17.0 * 6.0 * 4.0);
+    }
+
+    #[test]
+    fn lateral_exceeds_diagonal() {
+        // edges share 2^(n-k) boxes/level, corners just 1
+        let e = CommEstimator::for_terms(17);
+        assert!(e.lateral(8, 3) > e.diagonal(8, 3));
+    }
+
+    #[test]
+    fn matrix_is_symmetric_and_local() {
+        let e = CommEstimator::for_terms(5);
+        let cut = TreeCut::new(5, 2);
+        let m = e.comm_matrix(&cut);
+        for i in 0..m.n {
+            assert_eq!(m.get(i, i), 0.0);
+            for j in 0..m.n {
+                assert_eq!(m.get(i, j), m.get(j, i));
+            }
+        }
+        // interior subtree: 4 lateral + 4 diagonal neighbors
+        let interior = cut.subtree_index(
+            &crate::quadtree::BoxId::new(2, 1, 1));
+        let row: Vec<f64> = (0..m.n).map(|j| m.get(interior, j)).collect();
+        let nonzero = row.iter().filter(|&&x| x > 0.0).count();
+        assert_eq!(nonzero, 8);
+    }
+
+    #[test]
+    fn prop_corner_subtrees_have_3_neighbors() {
+        check("corner comm degree", 4, |g| {
+            let k = g.usize_in(1, 3) as u8;
+            let cut = TreeCut::new(6, k);
+            let e = CommEstimator::for_terms(17);
+            let m = e.comm_matrix(&cut);
+            let corner = cut.subtree_index(
+                &crate::quadtree::BoxId::new(k, 0, 0));
+            let deg = (0..m.n)
+                .filter(|&j| m.get(corner, j) > 0.0)
+                .count();
+            assert_eq!(deg, 3);
+        });
+    }
+
+    #[test]
+    fn total_volume_grows_with_depth() {
+        let e = CommEstimator::for_terms(17);
+        let a = e.comm_matrix(&TreeCut::new(6, 3)).total();
+        let b = e.comm_matrix(&TreeCut::new(8, 3)).total();
+        assert!(b > a);
+    }
+}

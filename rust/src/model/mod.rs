@@ -1,0 +1,18 @@
+//! The paper's §5 analytical model: per-subtree work estimates
+//! (Eqs. 13–15), inter-subtree communication estimates (Eqs. 11–12),
+//! memory estimates (Tables 1–2), and the extended Greengard–Gropp
+//! running-time model (Eq. 10).
+//!
+//! These estimates turn the tree cut into a *weighted* graph — the input
+//! of the optimization-based load balancing (§4).
+
+pub mod comm;
+pub mod gg_time;
+pub mod memory;
+pub mod work;
+
+pub use comm::{CommEstimator, CommMatrix};
+pub use gg_time::{ExtendedTimeModel, GreengardGroppModel};
+pub use memory::{parallel_memory, serial_memory, serial_total,
+                 MemoryEstimate};
+pub use work::WorkEstimator;

@@ -1,0 +1,195 @@
+//! Work estimates (§5.2, Eqs. 13–15).
+//!
+//! Per-node work:
+//!   non-leaf:  O(p² (2 n_c + n_IL))                     (Eq. 13)
+//!   leaf:      O(2 N_i p + p² n_IL + n_nd N_i²)          (Eq. 14)
+//!
+//! Per-subtree (Eq. 15): sum the non-leaf estimate over the interior
+//! levels and the leaf estimate over the subtree's leaves, using the
+//! *actual* per-leaf particle counts (this is exactly what makes the
+//! estimate sensitive to non-uniform distributions, unlike
+//! Greengard–Gropp's uniform assumption).
+
+use crate::quadtree::{interaction_list, near_domain, BoxId, Quadtree,
+                      TreeCut};
+
+/// Work estimator parameterized by the expansion order p.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkEstimator {
+    /// expansion terms p
+    pub terms: f64,
+    /// relative cost of one pairwise direct interaction vs one p² unit —
+    /// calibrated constant (paper absorbs it into the O(); we expose it
+    /// so measured task costs can calibrate the model, §Perf)
+    pub direct_unit: f64,
+}
+
+impl Default for WorkEstimator {
+    fn default() -> Self {
+        WorkEstimator { terms: 17.0, direct_unit: 1.0 }
+    }
+}
+
+impl WorkEstimator {
+    pub fn new(terms: usize) -> Self {
+        WorkEstimator { terms: terms as f64, ..Default::default() }
+    }
+
+    /// Eq. 13: work of a non-leaf node with `n_c` children and `n_il`
+    /// interaction-list members.
+    pub fn nonleaf_node(&self, n_c: usize, n_il: usize) -> f64 {
+        let p2 = self.terms * self.terms;
+        p2 * (2.0 * n_c as f64 + n_il as f64)
+    }
+
+    /// Eq. 14: work of a leaf with `n_i` particles, `n_il` interaction
+    /// list members, and `near_particles` particles in its near domain.
+    pub fn leaf_node(&self, n_i: usize, n_il: usize, near_particles: usize)
+        -> f64 {
+        let p = self.terms;
+        2.0 * n_i as f64 * p
+            + p * p * n_il as f64
+            + self.direct_unit * (near_particles as f64) * (n_i as f64)
+    }
+
+    /// Eq. 15 evaluated exactly on a concrete tree: total work of the
+    /// subtree rooted at `root` (levels cut..L inside the cut).
+    pub fn subtree_work(&self, tree: &Quadtree, cut: &TreeCut, root: &BoxId)
+        -> f64 {
+        let mut w = 0.0;
+        // interior levels: root level .. L-1
+        let mut frontier = vec![*root];
+        for _lvl in root.level..tree.levels {
+            let mut next = Vec::with_capacity(frontier.len() * 4);
+            for b in &frontier {
+                w += self.nonleaf_node(4, interaction_list(b).len());
+                next.extend(b.children());
+            }
+            frontier = next;
+        }
+        // leaf level
+        for leaf in &frontier {
+            let n_i = tree.particles_in(leaf).len();
+            if n_i == 0 {
+                continue;
+            }
+            let near: usize = near_domain(leaf)
+                .iter()
+                .map(|nb| tree.particles_in(nb).len())
+                .sum();
+            w += self.leaf_node(n_i, interaction_list(leaf).len(), near);
+        }
+        let _ = cut;
+        w
+    }
+
+    /// Work weights for all subtrees of a cut (vertex weights of Fig. 4).
+    pub fn all_subtree_work(&self, tree: &Quadtree, cut: &TreeCut)
+        -> Vec<f64> {
+        cut.subtrees
+            .iter()
+            .map(|st| self.subtree_work(tree, cut, st))
+            .collect()
+    }
+
+    /// Work of the root tree (levels 0..cut): the serial bottleneck owned
+    /// by rank 0 (the `b log₄ P` term of Eq. 10).
+    pub fn root_tree_work(&self, cut: &TreeCut) -> f64 {
+        let mut w = 0.0;
+        for lvl in 0..cut.cut_level {
+            let n = 1u64 << (2 * lvl);
+            for m in 0..n {
+                let b = BoxId::from_morton(lvl, m);
+                w += self.nonleaf_node(4, interaction_list(&b).len());
+            }
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::check;
+    use crate::quadtree::Domain;
+
+    #[test]
+    fn leaf_work_scales_quadratically_with_density() {
+        let w = WorkEstimator::new(17);
+        // doubling particles in a leaf with self-only near domain
+        // quadruples the direct term
+        let a = w.leaf_node(10, 27, 10);
+        let b = w.leaf_node(20, 27, 20);
+        let direct_a = 10.0 * 10.0;
+        let direct_b = 20.0 * 20.0;
+        assert!((b - a) > (direct_b - direct_a) * 0.99);
+    }
+
+    #[test]
+    fn empty_subtree_has_only_interior_work() {
+        let tree = Quadtree::build(Domain::UNIT, 4,
+                                   vec![[0.01, 0.01, 1.0]]);
+        let cut = TreeCut::new(4, 2);
+        let w = WorkEstimator::new(5);
+        // subtree far from the particle: its leaves are empty
+        let far = &cut.subtrees[cut.n_subtrees() - 1];
+        let wf = w.subtree_work(&tree, &cut, far);
+        // interior work only: levels 2,3 => 1 + 4 nodes
+        let expect: f64 = {
+            let mut e = 0.0;
+            let mut frontier = vec![*far];
+            for _ in 2..4 {
+                let mut next = Vec::new();
+                for b in &frontier {
+                    e += w.nonleaf_node(4, interaction_list(b).len());
+                    next.extend(b.children());
+                }
+                frontier = next;
+            }
+            e
+        };
+        assert_eq!(wf, expect);
+    }
+
+    #[test]
+    fn prop_total_work_increases_with_particles() {
+        check("work monotone in N", 8, |g| {
+            let cut = TreeCut::new(3, 1);
+            let w = WorkEstimator::new(8);
+            let p1 = g.particles(50);
+            let mut p2 = p1.clone();
+            p2.extend(g.particles(50));
+            let t1 = Quadtree::build(Domain::UNIT, 3, p1);
+            let t2 = Quadtree::build(Domain::UNIT, 3, p2);
+            let w1: f64 = w.all_subtree_work(&t1, &cut).iter().sum();
+            let w2: f64 = w.all_subtree_work(&t2, &cut).iter().sum();
+            assert!(w2 > w1);
+        });
+    }
+
+    #[test]
+    fn prop_clustered_distribution_is_imbalanced() {
+        // the paper's premise: uniform partitions of non-uniform particle
+        // sets produce large work imbalance
+        check("clustered work spread", 8, |g| {
+            let parts = g.clustered_particles(2000, 2);
+            let tree = Quadtree::build(Domain::UNIT, 5, parts);
+            let cut = TreeCut::new(5, 2);
+            let w = WorkEstimator::new(17);
+            let ws = w.all_subtree_work(&tree, &cut);
+            let max = ws.iter().cloned().fold(0.0, f64::max);
+            let mean = ws.iter().sum::<f64>() / ws.len() as f64;
+            assert!(max > 2.0 * mean,
+                    "clusters should concentrate work (max {max}, mean {mean})");
+        });
+    }
+
+    #[test]
+    fn root_tree_work_counts_interior_levels() {
+        let w = WorkEstimator::new(3);
+        let cut = TreeCut::new(6, 2);
+        // levels 0 and 1 have empty ILs: work = p^2 * 2 n_c * (1 + 4)
+        let expect = 9.0 * 8.0 * 5.0;
+        assert_eq!(w.root_tree_work(&cut), expect);
+    }
+}

@@ -1,0 +1,117 @@
+//! Baseline partitioners the paper compares against (§4):
+//!
+//! * **uniform block** — equal *counts* of subtrees per process, in index
+//!   order (ignores weights entirely);
+//! * **space-filling curve** — equal-count contiguous runs of the z-order
+//!   (Morton) curve, the Warren–Salmon / DPMTA-style "straightforward
+//!   uniform data partition (accomplished using a space-filling curve
+//!   indexing scheme)" that the paper cites as evidence of imbalance;
+//! * **sfc weighted** — SFC runs split by cumulative *weight* rather than
+//!   count (the strongest cheap baseline; isolates the benefit of graph
+//!   refinement from the benefit of weighting).
+
+/// Uniform block partition by vertex index: first n/k vertices to part 0…
+pub fn uniform_block(n: usize, k: usize) -> Vec<usize> {
+    assert!(k >= 1);
+    (0..n).map(|v| (v * k / n.max(1)).min(k - 1)).collect()
+}
+
+/// Space-filling-curve partition with equal counts. `order[i]` is the
+/// position of vertex i on the curve; for subtrees indexed in z-order
+/// the identity order reproduces classic Morton partitioning.
+pub fn sfc_equal_count(order: &[usize], k: usize) -> Vec<usize> {
+    let n = order.len();
+    let mut part = vec![0; n];
+    for (v, &pos) in order.iter().enumerate() {
+        part[v] = (pos * k / n.max(1)).min(k - 1);
+    }
+    part
+}
+
+/// Space-filling-curve partition with weight-balanced splits.
+pub fn sfc_weighted(order: &[usize], weights: &[f64], k: usize)
+    -> Vec<usize> {
+    let n = order.len();
+    // vertices in curve order
+    let mut by_pos: Vec<usize> = (0..n).collect();
+    by_pos.sort_by_key(|&v| order[v]);
+    let total: f64 = weights.iter().sum();
+    let ideal = total / k as f64;
+    let mut part = vec![0; n];
+    let mut acc = 0.0;
+    let mut cur = 0usize;
+    for &v in &by_pos {
+        // close the current part when it reached its share (never past k-1)
+        if cur + 1 < k && acc >= ideal * (cur + 1) as f64 {
+            cur += 1;
+        }
+        part[v] = cur;
+        acc += weights[v];
+    }
+    part
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::check;
+
+    #[test]
+    fn uniform_block_counts_are_even() {
+        let p = uniform_block(256, 16);
+        let mut counts = vec![0; 16];
+        for &x in &p {
+            counts[x] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 16));
+    }
+
+    #[test]
+    fn prop_uniform_block_monotone() {
+        check("uniform block monotone", 16, |g| {
+            let n = g.usize_in(1, 300);
+            let k = g.usize_in(1, 32);
+            let p = uniform_block(n, k);
+            for w in p.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+            assert!(p.iter().all(|&x| x < k));
+        });
+    }
+
+    #[test]
+    fn sfc_equal_count_follows_curve() {
+        let order: Vec<usize> = (0..8).rev().collect(); // reversed curve
+        let p = sfc_equal_count(&order, 2);
+        // vertices late on the curve (low index -> high pos) get part 1
+        assert_eq!(p, vec![1, 1, 1, 1, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn prop_sfc_weighted_is_contiguous_on_curve() {
+        check("sfc weighted contiguous", 16, |g| {
+            let n = g.usize_in(2, 200);
+            let k = g.usize_in(1, 16);
+            let order: Vec<usize> = (0..n).collect();
+            let w = g.vec_f64(n, 0.1, 10.0);
+            let p = sfc_weighted(&order, &w, k);
+            for i in 1..n {
+                assert!(p[i - 1] <= p[i], "parts must be curve-contiguous");
+            }
+            assert!(p.iter().all(|&x| x < k));
+        });
+    }
+
+    #[test]
+    fn sfc_weighted_balances_skewed_weights() {
+        // one heavy vertex dominating: weighted splits isolate it
+        let order: Vec<usize> = (0..10).collect();
+        let mut w = vec![1.0; 10];
+        w[0] = 100.0;
+        let p = sfc_weighted(&order, &w, 2);
+        // heavy vertex alone (or nearly) in part 0
+        let part0: Vec<usize> =
+            (0..10).filter(|&v| p[v] == 0).collect();
+        assert!(part0.len() <= 2, "{p:?}");
+    }
+}

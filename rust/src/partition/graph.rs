@@ -1,0 +1,164 @@
+//! Weighted undirected graph (Fig. 4): vertices = subtrees with work
+//! weights, edges = inter-subtree communication volumes.
+
+/// Adjacency-list weighted graph. Undirected: every edge is stored in
+/// both endpoint lists.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// vertex weights (computational work, Eq. 15)
+    pub vwgt: Vec<f64>,
+    /// adjacency: (neighbor, edge weight)
+    pub adj: Vec<Vec<(usize, f64)>>,
+}
+
+impl Graph {
+    pub fn new(vwgt: Vec<f64>) -> Self {
+        let n = vwgt.len();
+        Graph { vwgt, adj: vec![Vec::new(); n] }
+    }
+
+    pub fn n(&self) -> usize {
+        self.vwgt.len()
+    }
+
+    /// Add an undirected edge (i != j). Parallel edges are merged.
+    pub fn add_edge(&mut self, i: usize, j: usize, w: f64) {
+        assert_ne!(i, j, "self edge");
+        let existing = self.adj[i].iter().position(|&(nb, _)| nb == j);
+        if let Some(pos) = existing {
+            self.adj[i][pos].1 += w;
+            let back = self.adj[j]
+                .iter()
+                .position(|&(nb, _)| nb == i)
+                .expect("undirected invariant");
+            self.adj[j][back].1 += w;
+        } else {
+            self.adj[i].push((j, w));
+            self.adj[j].push((i, w));
+        }
+    }
+
+    /// Build from a communication matrix + work weights
+    /// (the paper's Fig. 3 -> Fig. 4 translation).
+    pub fn from_comm_matrix(
+        vwgt: Vec<f64>,
+        comm: &crate::model::CommMatrix,
+    ) -> Graph {
+        let mut g = Graph::new(vwgt);
+        for (i, j, w) in comm.edges() {
+            g.add_edge(i, j, w);
+        }
+        g
+    }
+
+    /// Total edge-cut of a partition (each cut edge counted once).
+    pub fn edge_cut(&self, part: &[usize]) -> f64 {
+        let mut cut = 0.0;
+        for i in 0..self.n() {
+            for &(j, w) in &self.adj[i] {
+                if j > i && part[i] != part[j] {
+                    cut += w;
+                }
+            }
+        }
+        cut
+    }
+
+    /// Per-part total vertex weight.
+    pub fn part_weights(&self, part: &[usize], k: usize) -> Vec<f64> {
+        let mut w = vec![0.0; k];
+        for (v, &p) in part.iter().enumerate() {
+            w[p] += self.vwgt[v];
+        }
+        w
+    }
+
+    /// Imbalance ratio: max part weight / ideal part weight (>= 1).
+    pub fn imbalance(&self, part: &[usize], k: usize) -> f64 {
+        let w = self.part_weights(part, k);
+        let total: f64 = w.iter().sum();
+        if total == 0.0 {
+            return 1.0;
+        }
+        let ideal = total / k as f64;
+        w.iter().cloned().fold(0.0, f64::max) / ideal
+    }
+
+    /// Load-balance metric as the paper defines it (Eq. 20 analogue on
+    /// weights): min part weight / max part weight.
+    pub fn min_max_ratio(&self, part: &[usize], k: usize) -> f64 {
+        let w = self.part_weights(part, k);
+        let max = w.iter().cloned().fold(f64::MIN, f64::max);
+        let min = w.iter().cloned().fold(f64::MAX, f64::min);
+        if max <= 0.0 {
+            1.0
+        } else {
+            min / max
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{check, Gen};
+
+    pub fn random_graph(g: &mut Gen, n: usize, extra_edges: usize) -> Graph {
+        let vwgt = g.vec_f64(n, 0.5, 5.0);
+        let mut gr = Graph::new(vwgt);
+        // spanning path for connectivity
+        for i in 1..n {
+            gr.add_edge(i - 1, i, g.f64_in(0.1, 2.0));
+        }
+        for _ in 0..extra_edges {
+            let i = g.usize_in(0, n - 1);
+            let j = g.usize_in(0, n - 1);
+            if i != j {
+                gr.add_edge(i, j, g.f64_in(0.1, 2.0));
+            }
+        }
+        gr
+    }
+
+    #[test]
+    fn edge_cut_counts_each_edge_once() {
+        let mut g = Graph::new(vec![1.0; 4]);
+        g.add_edge(0, 1, 3.0);
+        g.add_edge(2, 3, 5.0);
+        g.add_edge(1, 2, 7.0);
+        let part = vec![0, 0, 1, 1];
+        assert_eq!(g.edge_cut(&part), 7.0);
+    }
+
+    #[test]
+    fn imbalance_perfect_split() {
+        let mut g = Graph::new(vec![1.0; 4]);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(2, 3, 1.0);
+        assert_eq!(g.imbalance(&[0, 0, 1, 1], 2), 1.0);
+        assert_eq!(g.imbalance(&[0, 0, 0, 1], 2), 1.5);
+    }
+
+    #[test]
+    fn prop_adjacency_symmetric() {
+        check("graph symmetric", 32, |g| {
+            let n = g.usize_in(2, 50);
+            let gr = random_graph(g, n, 30);
+            for i in 0..n {
+                for &(j, w) in &gr.adj[i] {
+                    assert!(gr.adj[j].iter().any(
+                        |&(k, w2)| k == i && (w2 - w).abs() < 1e-12));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_cut_zero_for_single_part() {
+        check("single part no cut", 16, |g| {
+            let n = g.usize_in(2, 40);
+            let gr = random_graph(g, n, 20);
+            assert_eq!(gr.edge_cut(&vec![0; n]), 0.0);
+        });
+    }
+}

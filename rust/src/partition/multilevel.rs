@@ -1,0 +1,486 @@
+//! Multilevel k-way graph partitioner — the ParMETIS substrate (§4).
+//!
+//! Same algorithm family as METIS/ParMETIS [Karypis & Kumar 1998]:
+//!
+//! 1. **Coarsening** — heavy-edge matching collapses matched vertex pairs
+//!    until the graph is small;
+//! 2. **Initial partitioning** — greedy graph growing on the coarsest
+//!    graph (seeded BFS accumulating vertices until the target weight);
+//! 3. **Uncoarsening + refinement** — project the partition back up,
+//!    applying boundary Kernighan–Lin/Fiduccia–Mattheyses moves at every
+//!    level (best-gain vertex moves subject to a balance constraint).
+
+use super::graph::Graph;
+use crate::util::SplitMix64;
+
+/// Tunables for the multilevel scheme.
+#[derive(Clone, Copy, Debug)]
+pub struct MultilevelOptions {
+    /// stop coarsening when the graph has at most this many vertices per
+    /// requested part
+    pub coarsen_to_per_part: usize,
+    /// allowed imbalance (max part weight / ideal), e.g. 1.05
+    pub balance_tol: f64,
+    /// FM refinement passes per uncoarsening level
+    pub refine_passes: usize,
+    /// RNG seed (tie-breaking in matching/growing)
+    pub seed: u64,
+}
+
+impl Default for MultilevelOptions {
+    fn default() -> Self {
+        MultilevelOptions {
+            coarsen_to_per_part: 8,
+            balance_tol: 1.05,
+            refine_passes: 6,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Partition `graph` into `k` parts. Returns the per-vertex part index.
+pub fn partition(graph: &Graph, k: usize, opts: &MultilevelOptions)
+    -> Vec<usize> {
+    assert!(k >= 1);
+    let n = graph.n();
+    if k == 1 || n <= 1 {
+        return vec![0; n];
+    }
+    if k >= n {
+        // one vertex per part (extra parts stay empty)
+        return (0..n).collect();
+    }
+    let mut rng = SplitMix64::new(opts.seed);
+
+    // ---- 1. coarsening ----
+    let mut levels: Vec<(Graph, Vec<usize>)> = Vec::new(); // (finer, map)
+    let mut cur = graph.clone();
+    let target = (opts.coarsen_to_per_part * k).max(2 * k);
+    while cur.n() > target {
+        let (coarse, map) = coarsen_once(&cur, &mut rng);
+        if coarse.n() as f64 > cur.n() as f64 * 0.95 {
+            break; // no progress (e.g. star graphs)
+        }
+        levels.push((cur, map));
+        cur = coarse;
+    }
+
+    // ---- 2. initial partition on the coarsest graph ----
+    let mut part = greedy_growing(&cur, k, &mut rng);
+    ensure_nonempty(&cur, &mut part, k);
+    refine(&cur, &mut part, k, opts);
+
+    // ---- 3. uncoarsen + refine ----
+    while let Some((finer, map)) = levels.pop() {
+        let mut fine_part = vec![0usize; finer.n()];
+        for v in 0..finer.n() {
+            fine_part[v] = part[map[v]];
+        }
+        part = fine_part;
+        balance(&finer, &mut part, k, opts);
+        refine(&finer, &mut part, k, opts);
+        cur = finer;
+    }
+    debug_assert_eq!(cur.n(), graph.n());
+    balance(graph, &mut part, k, opts);
+    refine(graph, &mut part, k, opts);
+    ensure_nonempty(graph, &mut part, k);
+    part
+}
+
+/// Explicit balance pass: repeatedly move the best vertex from the
+/// heaviest part toward the lightest part until the imbalance meets the
+/// tolerance (cut quality is repaired by the subsequent [`refine`]).
+fn balance(g: &Graph, part: &mut [usize], k: usize,
+           opts: &MultilevelOptions) {
+    let n = g.n();
+    if k > n {
+        return;
+    }
+    let total: f64 = g.vwgt.iter().sum();
+    let ideal = total / k as f64;
+    let mut weights = {
+        let mut w = vec![0.0; k];
+        for v in 0..n {
+            w[part[v]] += g.vwgt[v];
+        }
+        w
+    };
+    for _ in 0..(4 * n) {
+        let heavy = (0..k)
+            .max_by(|&a, &b| weights[a].partial_cmp(&weights[b]).unwrap())
+            .unwrap();
+        let light = (0..k)
+            .min_by(|&a, &b| weights[a].partial_cmp(&weights[b]).unwrap())
+            .unwrap();
+        if weights[heavy] <= ideal * opts.balance_tol {
+            break;
+        }
+        let gap = weights[heavy] - weights[light];
+        // best move: a heavy-part vertex small enough not to overshoot,
+        // preferring strong connectivity to the light part
+        let mut best: Option<(usize, f64)> = None;
+        let mut fallback: Option<(usize, f64)> = None; // lightest vertex
+        for v in 0..n {
+            if part[v] != heavy {
+                continue;
+            }
+            let w = g.vwgt[v];
+            if fallback.map_or(true, |(_, fw)| w < fw) {
+                fallback = Some((v, w));
+            }
+            if w > gap {
+                continue; // would just swap the imbalance around
+            }
+            let mut conn_light = 0.0;
+            let mut conn_heavy = 0.0;
+            for &(u, ew) in &g.adj[v] {
+                if part[u] == light {
+                    conn_light += ew;
+                } else if part[u] == heavy {
+                    conn_heavy += ew;
+                }
+            }
+            let score = conn_light - conn_heavy;
+            if best.map_or(true, |(_, bs)| score > bs) {
+                best = Some((v, score));
+            }
+        }
+        let heavy_count = part.iter().filter(|&&p| p == heavy).count();
+        let v = match best.or(fallback) {
+            Some((v, _)) if heavy_count >= 2 => v,
+            _ => break,
+        };
+        weights[heavy] -= g.vwgt[v];
+        weights[light] += g.vwgt[v];
+        part[v] = light;
+    }
+}
+
+/// Guarantee every part owns at least one vertex (required whenever
+/// k <= n): repeatedly move the lightest vertex out of the most-loaded
+/// multi-vertex part into an empty part.  A single subtree heavier than
+/// the ideal weight can otherwise starve later parts during growing.
+fn ensure_nonempty(g: &Graph, part: &mut [usize], k: usize) {
+    if k > part.len() {
+        return;
+    }
+    loop {
+        let mut counts = vec![0usize; k];
+        for &p in part.iter() {
+            counts[p] += 1;
+        }
+        let empty = match (0..k).find(|&p| counts[p] == 0) {
+            Some(p) => p,
+            None => return,
+        };
+        let weights = g.part_weights(part, k);
+        // donor: heaviest part with >= 2 vertices
+        let donor = (0..k)
+            .filter(|&p| counts[p] >= 2)
+            .max_by(|&a, &b| weights[a].partial_cmp(&weights[b]).unwrap())
+            .expect("k <= n guarantees a multi-vertex part");
+        // lightest vertex of the donor
+        let v = (0..g.n())
+            .filter(|&v| part[v] == donor)
+            .min_by(|&a, &b| g.vwgt[a].partial_cmp(&g.vwgt[b]).unwrap())
+            .unwrap();
+        part[v] = empty;
+    }
+}
+
+/// One round of heavy-edge matching. Returns the coarse graph and the
+/// fine-vertex -> coarse-vertex map.
+fn coarsen_once(g: &Graph, rng: &mut SplitMix64) -> (Graph, Vec<usize>) {
+    let n = g.n();
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut matched = vec![usize::MAX; n];
+    let mut coarse_id = vec![usize::MAX; n];
+    let mut next = 0usize;
+    for &v in &order {
+        if matched[v] != usize::MAX {
+            continue;
+        }
+        // heaviest unmatched neighbor
+        let mut best: Option<(usize, f64)> = None;
+        for &(u, w) in &g.adj[v] {
+            if matched[u] == usize::MAX
+                && best.map_or(true, |(_, bw)| w > bw) {
+                best = Some((u, w));
+            }
+        }
+        match best {
+            Some((u, _)) => {
+                matched[v] = u;
+                matched[u] = v;
+                coarse_id[v] = next;
+                coarse_id[u] = next;
+            }
+            None => {
+                matched[v] = v;
+                coarse_id[v] = next;
+            }
+        }
+        next += 1;
+    }
+    // build coarse graph
+    let mut vwgt = vec![0.0; next];
+    for v in 0..n {
+        vwgt[coarse_id[v]] += g.vwgt[v];
+    }
+    let mut coarse = Graph::new(vwgt);
+    let mut acc: std::collections::HashMap<(usize, usize), f64> =
+        std::collections::HashMap::new();
+    for v in 0..n {
+        for &(u, w) in &g.adj[v] {
+            let (a, b) = (coarse_id[v], coarse_id[u]);
+            if a < b {
+                *acc.entry((a, b)).or_insert(0.0) += w;
+            }
+        }
+    }
+    for ((a, b), w) in acc {
+        coarse.add_edge(a, b, w);
+    }
+    (coarse, coarse_id)
+}
+
+/// Greedy graph growing: grow each part by BFS from a random unassigned
+/// seed until it reaches the ideal weight.
+fn greedy_growing(g: &Graph, k: usize, rng: &mut SplitMix64)
+    -> Vec<usize> {
+    let n = g.n();
+    let total: f64 = g.vwgt.iter().sum();
+    let mut part = vec![usize::MAX; n];
+    let mut unassigned = n;
+    let mut remaining = total;
+    for p in 0..k {
+        if unassigned == 0 {
+            break;
+        }
+        // re-target from the remaining weight so an oversized early part
+        // cannot starve the later ones
+        let ideal = remaining / (k - p) as f64;
+        // random unassigned seed
+        let seed = {
+            let free: Vec<usize> =
+                (0..n).filter(|&v| part[v] == usize::MAX).collect();
+            free[rng.below(free.len())]
+        };
+        let mut w = 0.0;
+        let mut queue = std::collections::VecDeque::new();
+        queue.push_back(seed);
+        while let Some(v) = queue.pop_front() {
+            if part[v] != usize::MAX {
+                continue;
+            }
+            if p + 1 < k && w >= ideal && v != seed {
+                continue;
+            }
+            part[v] = p;
+            w += g.vwgt[v];
+            unassigned -= 1;
+            if p + 1 < k && w >= ideal {
+                break;
+            }
+            // enqueue neighbors, heaviest-edge first
+            let mut nb: Vec<(usize, f64)> = g.adj[v]
+                .iter()
+                .filter(|(u, _)| part[*u] == usize::MAX)
+                .cloned()
+                .collect();
+            nb.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            for (u, _) in nb {
+                queue.push_back(u);
+            }
+        }
+        remaining -= w;
+    }
+    // sweep leftovers (disconnected components) into the lightest part
+    let mut weights = vec![0.0; k];
+    for v in 0..n {
+        if part[v] != usize::MAX {
+            weights[part[v]] += g.vwgt[v];
+        }
+    }
+    for v in 0..n {
+        if part[v] == usize::MAX {
+            let lightest = (0..k)
+                .min_by(|&a, &b| weights[a].partial_cmp(&weights[b])
+                    .unwrap())
+                .unwrap();
+            part[v] = lightest;
+            weights[lightest] += g.vwgt[v];
+        }
+    }
+    part
+}
+
+/// Boundary FM refinement: greedy best-gain single-vertex moves under the
+/// balance constraint, repeated `refine_passes` times.
+fn refine(g: &Graph, part: &mut Vec<usize>, k: usize,
+          opts: &MultilevelOptions) {
+    let n = g.n();
+    let total: f64 = g.vwgt.iter().sum();
+    let ideal = total / k as f64;
+    let max_w = ideal * opts.balance_tol;
+    let mut weights = g.part_weights(part, k);
+
+    for _pass in 0..opts.refine_passes {
+        let mut improved = false;
+        for v in 0..n {
+            let home = part[v];
+            // connectivity of v to each part
+            let mut conn = vec![0.0; k];
+            for &(u, w) in &g.adj[v] {
+                conn[part[u]] += w;
+            }
+            // best destination by cut gain, respecting balance;
+            // also allow balance-improving moves with zero cut gain
+            let mut best: Option<(usize, f64)> = None;
+            for dest in 0..k {
+                if dest == home {
+                    continue;
+                }
+                let gain = conn[dest] - conn[home];
+                let fits = weights[dest] + g.vwgt[v] <= max_w;
+                let balance_gain = weights[home] - ideal > 0.0
+                    && weights[dest] + g.vwgt[v] < weights[home];
+                if fits && (gain > 1e-12 || (gain >= -1e-12 && balance_gain))
+                    && best.map_or(true, |(_, bg)| gain > bg) {
+                    best = Some((dest, gain));
+                }
+            }
+            if let Some((dest, _)) = best {
+                // never empty a part
+                let home_count =
+                    part.iter().filter(|&&p| p == home).count();
+                if home_count <= 1 {
+                    continue;
+                }
+                weights[home] -= g.vwgt[v];
+                weights[dest] += g.vwgt[v];
+                part[v] = dest;
+                improved = true;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{check, Gen};
+
+    fn random_graph(g: &mut Gen, n: usize, extra: usize) -> Graph {
+        let vwgt = g.vec_f64(n, 0.5, 5.0);
+        let mut gr = Graph::new(vwgt);
+        for i in 1..n {
+            gr.add_edge(i - 1, i, g.f64_in(0.1, 2.0));
+        }
+        for _ in 0..extra {
+            let i = g.usize_in(0, n - 1);
+            let j = g.usize_in(0, n - 1);
+            if i != j {
+                gr.add_edge(i, j, g.f64_in(0.1, 2.0));
+            }
+        }
+        gr
+    }
+
+    #[test]
+    fn prop_partition_is_total_and_in_range() {
+        check("partition valid", 24, |g| {
+            let n = g.usize_in(2, 120);
+            let k = g.usize_in(1, 16);
+            let gr = random_graph(g, n, n);
+            let part = partition(&gr, k, &Default::default());
+            assert_eq!(part.len(), n);
+            assert!(part.iter().all(|&p| p < k.max(n)));
+        });
+    }
+
+    #[test]
+    fn prop_partition_reasonably_balanced() {
+        check("partition balanced", 16, |g| {
+            let n = g.usize_in(64, 256);
+            let k = g.usize_in(2, 8);
+            let gr = random_graph(g, n, 2 * n);
+            let part = partition(&gr, k, &Default::default());
+            let imb = gr.imbalance(&part, k);
+            // generous bound: vertex weights up to 5.0 on ideal ~ n/k
+            assert!(imb < 1.6, "imbalance {imb} (n={n}, k={k})");
+        });
+    }
+
+    #[test]
+    fn two_cliques_split_cleanly() {
+        // two 8-cliques joined by one light edge: optimal bisection cuts
+        // only the bridge
+        let mut g = Graph::new(vec![1.0; 16]);
+        for a in 0..8 {
+            for b in (a + 1)..8 {
+                g.add_edge(a, b, 10.0);
+                g.add_edge(8 + a, 8 + b, 10.0);
+            }
+        }
+        g.add_edge(3, 12, 0.1);
+        let part = partition(&g, 2, &Default::default());
+        assert_eq!(g.edge_cut(&part), 0.1, "{part:?}");
+        assert_eq!(g.imbalance(&part, 2), 1.0);
+    }
+
+    #[test]
+    fn grid_partition_beats_random_assignment() {
+        // 16x16 grid, uniform weights: multilevel cut must be far below a
+        // random partition's expected cut
+        let n = 16;
+        let mut g = Graph::new(vec![1.0; n * n]);
+        for i in 0..n {
+            for j in 0..n {
+                let v = i * n + j;
+                if i + 1 < n {
+                    g.add_edge(v, v + n, 1.0);
+                }
+                if j + 1 < n {
+                    g.add_edge(v, v + 1, 1.0);
+                }
+            }
+        }
+        let part = partition(&g, 4, &Default::default());
+        let cut = g.edge_cut(&part);
+        let mut rng = SplitMix64::new(1);
+        let random: Vec<usize> =
+            (0..n * n).map(|_| rng.below(4)).collect();
+        let rand_cut = g.edge_cut(&random);
+        assert!(cut < rand_cut * 0.25,
+                "ml cut {cut} vs random {rand_cut}");
+        assert!(g.imbalance(&part, 4) <= 1.30, "{}", g.imbalance(&part, 4));
+    }
+
+    #[test]
+    fn k_equals_one_is_trivial() {
+        let g = Graph::new(vec![1.0; 5]);
+        assert_eq!(partition(&g, 1, &Default::default()), vec![0; 5]);
+    }
+
+    #[test]
+    fn k_geq_n_gives_singletons() {
+        let g = Graph::new(vec![1.0; 3]);
+        let p = partition(&g, 8, &Default::default());
+        assert_eq!(p, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut gen = Gen::new(77);
+        let gr = random_graph(&mut gen, 100, 200);
+        let a = partition(&gr, 8, &Default::default());
+        let b = partition(&gr, 8, &Default::default());
+        assert_eq!(a, b);
+    }
+}

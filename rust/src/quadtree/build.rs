@@ -1,0 +1,222 @@
+//! Quadtree construction: particle binning over a uniform level-L
+//! decomposition of a square domain (§2.1).
+//!
+//! Storage is sparse: only occupied boxes (and their ancestors) carry data.
+//! The geometry is implicit in [`BoxId`] — as the paper notes (§5.3), all
+//! relations "can be dynamically generated so that we need only store data
+//! across the cells".
+
+use std::collections::HashMap;
+
+use super::node::BoxId;
+
+/// A particle: position (x, y) and circulation strength gamma.
+pub type Particle = [f64; 3];
+
+/// Square computational domain.
+#[derive(Clone, Copy, Debug)]
+pub struct Domain {
+    pub origin: [f64; 2],
+    pub size: f64,
+}
+
+impl Domain {
+    pub const UNIT: Domain = Domain { origin: [0.0, 0.0], size: 1.0 };
+
+    /// Smallest axis-aligned square containing all particles (with a small
+    /// margin so boundary particles bin strictly inside).
+    pub fn bounding(parts: &[Particle]) -> Domain {
+        let mut lo = [f64::INFINITY; 2];
+        let mut hi = [f64::NEG_INFINITY; 2];
+        for p in parts {
+            for d in 0..2 {
+                lo[d] = lo[d].min(p[d]);
+                hi[d] = hi[d].max(p[d]);
+            }
+        }
+        if parts.is_empty() {
+            return Domain::UNIT;
+        }
+        let size = ((hi[0] - lo[0]).max(hi[1] - lo[1])).max(1e-12) * 1.0001;
+        Domain { origin: lo, size }
+    }
+
+    /// Leaf box containing a point, clamped into the grid.
+    pub fn locate(&self, level: u8, x: f64, y: f64) -> BoxId {
+        let n = 1u32 << level;
+        let w = self.size / n as f64;
+        let ix = (((x - self.origin[0]) / w) as i64).clamp(0, n as i64 - 1);
+        let iy = (((y - self.origin[1]) / w) as i64).clamp(0, n as i64 - 1);
+        BoxId::new(level, ix as u32, iy as u32)
+    }
+}
+
+/// The problem geometry: a level-L quadtree with particles binned at the
+/// leaf level.  Mirrors the paper's `Quadtree` class (§6.1).
+#[derive(Clone, Debug)]
+pub struct Quadtree {
+    pub domain: Domain,
+    pub levels: u8,
+    pub particles: Vec<Particle>,
+    /// leaf box -> indices into `particles`
+    pub leaf_particles: HashMap<BoxId, Vec<u32>>,
+    /// occupied leaves in z-order (deterministic iteration everywhere)
+    pub occupied_leaves: Vec<BoxId>,
+}
+
+impl Quadtree {
+    /// Bin `particles` into a level-`levels` quadtree over `domain`.
+    pub fn build(domain: Domain, levels: u8, particles: Vec<Particle>)
+        -> Quadtree {
+        let mut leaf_particles: HashMap<BoxId, Vec<u32>> = HashMap::new();
+        for (i, p) in particles.iter().enumerate() {
+            let leaf = domain.locate(levels, p[0], p[1]);
+            leaf_particles.entry(leaf).or_default().push(i as u32);
+        }
+        let mut occupied: Vec<BoxId> = leaf_particles.keys().copied()
+            .collect();
+        occupied.sort_by_key(|b| b.morton());
+        Quadtree {
+            domain,
+            levels,
+            particles,
+            leaf_particles,
+            occupied_leaves: occupied,
+        }
+    }
+
+    pub fn n_particles(&self) -> usize {
+        self.particles.len()
+    }
+
+    /// Total number of boxes in the (conceptually full) tree:
+    /// Λ = (4^(L+1) - 1)/3 (paper §5.3).
+    pub fn total_boxes(&self) -> u64 {
+        ((1u64 << (2 * (self.levels as u64 + 1))) - 1) / 3
+    }
+
+    /// Maximum observed leaf occupancy (the `s` of Table 1).
+    pub fn max_leaf_occupancy(&self) -> usize {
+        self.leaf_particles.values().map(Vec::len).max().unwrap_or(0)
+    }
+
+    pub fn center(&self, b: &BoxId) -> [f64; 2] {
+        b.center(self.domain.origin, self.domain.size)
+    }
+
+    pub fn radius(&self, b: &BoxId) -> f64 {
+        b.radius(self.domain.size)
+    }
+
+    /// Occupied boxes at `level` (ancestors of occupied leaves), z-ordered.
+    pub fn occupied_at_level(&self, level: u8) -> Vec<BoxId> {
+        debug_assert!(level <= self.levels);
+        if level == self.levels {
+            return self.occupied_leaves.clone();
+        }
+        let mut v: Vec<BoxId> = self
+            .occupied_leaves
+            .iter()
+            .map(|b| b.ancestor(level))
+            .collect();
+        v.sort_by_key(|b| b.morton());
+        v.dedup();
+        v
+    }
+
+    /// Particle indices of a leaf (empty slice if unoccupied).
+    pub fn particles_in(&self, leaf: &BoxId) -> &[u32] {
+        self.leaf_particles
+            .get(leaf)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{check, Gen};
+
+    fn tree_from(g: &mut Gen, n: usize, levels: u8) -> Quadtree {
+        let parts = g.particles(n);
+        Quadtree::build(Domain::UNIT, levels, parts)
+    }
+
+    #[test]
+    fn every_particle_lands_in_its_leaf() {
+        check("binning is geometric", 32, |g| {
+            let t = tree_from(g, 200, 4);
+            for (leaf, idxs) in &t.leaf_particles {
+                let c = t.center(leaf);
+                let r = t.radius(leaf);
+                for &i in idxs {
+                    let p = t.particles[i as usize];
+                    assert!((p[0] - c[0]).abs() <= r + 1e-12);
+                    assert!((p[1] - c[1]).abs() <= r + 1e-12);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn binning_is_a_partition() {
+        check("binning partitions particles", 32, |g| {
+            let n = g.usize_in(1, 500);
+            let t = tree_from(g, n, 5);
+            let total: usize = t.leaf_particles.values().map(Vec::len).sum();
+            assert_eq!(total, n);
+        });
+    }
+
+    #[test]
+    fn total_boxes_formula() {
+        let t = Quadtree::build(Domain::UNIT, 3, vec![[0.5, 0.5, 1.0]]);
+        // levels=3: 1 + 4 + 16 + 64 = 85
+        assert_eq!(t.total_boxes(), 85);
+    }
+
+    #[test]
+    fn occupied_at_level_are_ancestors() {
+        check("ancestors occupied", 16, |g| {
+            let t = tree_from(g, 100, 5);
+            for lvl in 0..=5u8 {
+                let occ = t.occupied_at_level(lvl);
+                // every occupied leaf's ancestor must be in the set
+                for leaf in &t.occupied_leaves {
+                    assert!(occ.contains(&leaf.ancestor(lvl)));
+                }
+                // z-ordered and unique
+                for w in occ.windows(2) {
+                    assert!(w[0].morton() < w[1].morton());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn bounding_domain_contains_all() {
+        check("bounding domain", 16, |g| {
+            let mut parts = g.particles(50);
+            for p in &mut parts {
+                p[0] = p[0] * 7.0 - 3.0;
+                p[1] = p[1] * 2.0 + 10.0;
+            }
+            let d = Domain::bounding(&parts);
+            for p in &parts {
+                let b = d.locate(6, p[0], p[1]);
+                let c = b.center(d.origin, d.size);
+                let r = b.radius(d.size);
+                assert!((p[0] - c[0]).abs() <= r + 1e-9);
+                assert!((p[1] - c[1]).abs() <= r + 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn boundary_particle_clamps() {
+        let t = Quadtree::build(Domain::UNIT, 3, vec![[1.0, 1.0, 1.0]]);
+        assert_eq!(t.occupied_leaves.len(), 1);
+        assert_eq!(t.occupied_leaves[0], BoxId::new(3, 7, 7));
+    }
+}

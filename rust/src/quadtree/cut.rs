@@ -1,0 +1,150 @@
+//! Tree cutting (§4, Fig. 3): cut the level-L quadtree at level k,
+//! producing a root tree (levels 0..k) plus 4^k local subtrees, each the
+//! branch rooted at one level-k box.
+//!
+//! Subtrees are the paper's "basic algorithmic elements" — the unit of
+//! distribution.  The cut also classifies subtree adjacency (lateral vs
+//! diagonal) because the communication estimates (Eqs. 11–12) differ.
+
+use super::node::BoxId;
+
+/// How two subtrees at the cut level touch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Adjacency {
+    Lateral,
+    Diagonal,
+    None,
+}
+
+/// The result of cutting a level-`tree_levels` quadtree at `cut_level`.
+#[derive(Clone, Debug)]
+pub struct TreeCut {
+    pub tree_levels: u8,
+    pub cut_level: u8,
+    /// All 4^k subtree roots, in z-order (vertex order of the comm graph).
+    pub subtrees: Vec<BoxId>,
+}
+
+impl TreeCut {
+    pub fn new(tree_levels: u8, cut_level: u8) -> TreeCut {
+        assert!(cut_level <= tree_levels,
+                "cut level {cut_level} > tree depth {tree_levels}");
+        let n = 1u64 << (2 * cut_level);
+        let subtrees = (0..n)
+            .map(|m| BoxId::from_morton(cut_level, m))
+            .collect();
+        TreeCut { tree_levels, cut_level, subtrees }
+    }
+
+    pub fn n_subtrees(&self) -> usize {
+        self.subtrees.len()
+    }
+
+    /// Levels inside each subtree, counting the root of the subtree
+    /// (the paper's L_st: level k down to level L has L - k + 1 levels).
+    pub fn subtree_levels(&self) -> u8 {
+        self.tree_levels - self.cut_level + 1
+    }
+
+    /// Subtree owning a box at level >= cut (its level-k ancestor).
+    pub fn subtree_of(&self, b: &BoxId) -> BoxId {
+        debug_assert!(b.level >= self.cut_level);
+        b.ancestor(self.cut_level)
+    }
+
+    /// Dense index (z-order) of a subtree root in `self.subtrees`.
+    pub fn subtree_index(&self, root: &BoxId) -> usize {
+        debug_assert_eq!(root.level, self.cut_level);
+        root.morton() as usize
+    }
+
+    /// Adjacency classification between two subtree roots.
+    pub fn adjacency(a: &BoxId, b: &BoxId) -> Adjacency {
+        debug_assert_eq!(a.level, b.level);
+        let dx = a.ix.abs_diff(b.ix);
+        let dy = a.iy.abs_diff(b.iy);
+        match (dx, dy) {
+            (0, 0) => Adjacency::None, // self
+            (1, 0) | (0, 1) => Adjacency::Lateral,
+            (1, 1) => Adjacency::Diagonal,
+            _ => Adjacency::None,
+        }
+    }
+
+    /// Leaves of the original tree belonging to subtree `root`, z-ordered.
+    pub fn subtree_leaves(&self, root: &BoxId) -> Vec<BoxId> {
+        let depth = self.tree_levels - self.cut_level;
+        let base_x = root.ix << depth;
+        let base_y = root.iy << depth;
+        let n = 1u32 << depth;
+        let mut out = Vec::with_capacity((n as usize) * (n as usize));
+        for m in 0..(1u64 << (2 * depth)) {
+            let (dx, dy) = super::morton::deinterleave(m);
+            out.push(BoxId::new(self.tree_levels, base_x + dx, base_y + dy));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{check, Gen};
+
+    #[test]
+    fn cut_produces_4_pow_k_subtrees() {
+        let cut = TreeCut::new(6, 3);
+        assert_eq!(cut.n_subtrees(), 64);
+        assert_eq!(cut.subtree_levels(), 4);
+    }
+
+    #[test]
+    fn paper_configuration() {
+        // §4: "cut at level k=4, resulting in 256 parallel subtrees"
+        let cut = TreeCut::new(10, 4);
+        assert_eq!(cut.n_subtrees(), 256);
+    }
+
+    #[test]
+    fn adjacency_classification() {
+        let a = BoxId::new(3, 3, 3);
+        assert_eq!(TreeCut::adjacency(&a, &BoxId::new(3, 4, 3)),
+                   Adjacency::Lateral);
+        assert_eq!(TreeCut::adjacency(&a, &BoxId::new(3, 3, 2)),
+                   Adjacency::Lateral);
+        assert_eq!(TreeCut::adjacency(&a, &BoxId::new(3, 4, 4)),
+                   Adjacency::Diagonal);
+        assert_eq!(TreeCut::adjacency(&a, &BoxId::new(3, 5, 3)),
+                   Adjacency::None);
+        assert_eq!(TreeCut::adjacency(&a, &a), Adjacency::None);
+    }
+
+    #[test]
+    fn prop_subtree_leaves_partition_the_grid() {
+        check("subtree leaves partition", 8, |g: &mut Gen| {
+            let levels = g.usize_in(2, 5) as u8;
+            let k = g.usize_in(1, levels as usize) as u8;
+            let cut = TreeCut::new(levels, k);
+            let mut seen = std::collections::HashSet::new();
+            for st in &cut.subtrees {
+                for leaf in cut.subtree_leaves(st) {
+                    assert_eq!(cut.subtree_of(&leaf), *st);
+                    assert!(seen.insert(leaf), "leaf counted twice");
+                }
+            }
+            let n = 1u64 << (2 * levels);
+            assert_eq!(seen.len() as u64, n);
+        });
+    }
+
+    #[test]
+    fn prop_subtree_index_is_dense_zorder() {
+        check("subtree index dense", 8, |g: &mut Gen| {
+            let k = g.usize_in(0, 4) as u8;
+            let cut = TreeCut::new(6, k);
+            for (i, st) in cut.subtrees.iter().enumerate() {
+                assert_eq!(cut.subtree_index(st), i);
+            }
+        });
+    }
+}

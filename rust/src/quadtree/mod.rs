@@ -1,0 +1,14 @@
+//! Hierarchical space decomposition (§2.1): Morton indexing, box identity
+//! and geometry, particle binning, neighbor/interaction lists, and the
+//! tree cut that produces the parallel subtrees (§4).
+
+pub mod build;
+pub mod cut;
+pub mod morton;
+pub mod neighbors;
+pub mod node;
+
+pub use build::{Domain, Particle, Quadtree};
+pub use cut::{Adjacency, TreeCut};
+pub use neighbors::{interaction_list, near_domain, neighbors};
+pub use node::BoxId;

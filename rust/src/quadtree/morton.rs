@@ -1,0 +1,87 @@
+//! Morton (z-order) indexing for quadtree boxes.
+//!
+//! The paper uses the "quadtree z-order numbering of the nodes ... to
+//! discover the neighbor sets for every vertex of the graph without any
+//! communication" (§5.1).  The same code is the space-filling-curve
+//! baseline partitioner (Warren–Salmon / DPMTA style).
+
+/// Interleave the low 32 bits of x and y: result bit 2i = x_i, 2i+1 = y_i.
+#[inline]
+pub fn interleave(x: u32, y: u32) -> u64 {
+    part1by1(x) | (part1by1(y) << 1)
+}
+
+/// Inverse of [`interleave`].
+#[inline]
+pub fn deinterleave(m: u64) -> (u32, u32) {
+    (compact1by1(m), compact1by1(m >> 1))
+}
+
+#[inline]
+fn part1by1(v: u32) -> u64 {
+    let mut x = v as u64;
+    x &= 0xFFFF_FFFF;
+    x = (x | (x << 16)) & 0x0000_FFFF_0000_FFFF;
+    x = (x | (x << 8)) & 0x00FF_00FF_00FF_00FF;
+    x = (x | (x << 4)) & 0x0F0F_0F0F_0F0F_0F0F;
+    x = (x | (x << 2)) & 0x3333_3333_3333_3333;
+    x = (x | (x << 1)) & 0x5555_5555_5555_5555;
+    x
+}
+
+#[inline]
+fn compact1by1(m: u64) -> u32 {
+    let mut x = m & 0x5555_5555_5555_5555;
+    x = (x | (x >> 1)) & 0x3333_3333_3333_3333;
+    x = (x | (x >> 2)) & 0x0F0F_0F0F_0F0F_0F0F;
+    x = (x | (x >> 4)) & 0x00FF_00FF_00FF_00FF;
+    x = (x | (x >> 8)) & 0x0000_FFFF_0000_FFFF;
+    x = (x | (x >> 16)) & 0x0000_0000_FFFF_FFFF;
+    x as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{check, Gen};
+
+    #[test]
+    fn roundtrip_small() {
+        for x in 0..32u32 {
+            for y in 0..32u32 {
+                assert_eq!(deinterleave(interleave(x, y)), (x, y));
+            }
+        }
+    }
+
+    #[test]
+    fn z_order_first_quad() {
+        // canonical z-curve over a 2x2 grid: (0,0) (1,0) (0,1) (1,1)
+        assert_eq!(interleave(0, 0), 0);
+        assert_eq!(interleave(1, 0), 1);
+        assert_eq!(interleave(0, 1), 2);
+        assert_eq!(interleave(1, 1), 3);
+    }
+
+    #[test]
+    fn prop_roundtrip_random() {
+        check("morton roundtrip", 256, |g: &mut Gen| {
+            let x = g.u64() as u32;
+            let y = g.u64() as u32;
+            assert_eq!(deinterleave(interleave(x, y)), (x, y));
+        });
+    }
+
+    #[test]
+    fn prop_locality_children_contiguous() {
+        // the four children of any box are contiguous in z-order
+        check("children contiguous", 128, |g: &mut Gen| {
+            let x = (g.u64() as u32) & 0x7FFF;
+            let y = (g.u64() as u32) & 0x7FFF;
+            let base = interleave(2 * x, 2 * y);
+            assert_eq!(interleave(2 * x + 1, 2 * y), base + 1);
+            assert_eq!(interleave(2 * x, 2 * y + 1), base + 2);
+            assert_eq!(interleave(2 * x + 1, 2 * y + 1), base + 3);
+        });
+    }
+}

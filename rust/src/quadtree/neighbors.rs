@@ -1,0 +1,175 @@
+//! Neighbor sets and interaction lists (§2.1, Fig. 1b).
+//!
+//! * near field of a box = the box itself + adjacent boxes at its level
+//! * interaction list = children of the parent's neighbors that are NOT
+//!   adjacent to the box (well-separated, same level) — at most 27 in 2D,
+//!   matching the constant 27 in the paper's memory model (Table 1).
+
+use super::node::BoxId;
+
+/// Adjacent boxes at the same level (excluding the box itself, ≤ 8 in 2D).
+pub fn neighbors(b: &BoxId) -> Vec<BoxId> {
+    let n = 1i64 << b.level;
+    let mut out = Vec::with_capacity(8);
+    for dx in -1i64..=1 {
+        for dy in -1i64..=1 {
+            if dx == 0 && dy == 0 {
+                continue;
+            }
+            let x = b.ix as i64 + dx;
+            let y = b.iy as i64 + dy;
+            if (0..n).contains(&x) && (0..n).contains(&y) {
+                out.push(BoxId::new(b.level, x as u32, y as u32));
+            }
+        }
+    }
+    out
+}
+
+/// The near domain: the box itself plus its neighbors.
+pub fn near_domain(b: &BoxId) -> Vec<BoxId> {
+    let mut out = vec![*b];
+    out.extend(neighbors(b));
+    out
+}
+
+/// The interaction list: same-level boxes that are children of the
+/// parent's near domain but not adjacent to `b` (≤ 27 in 2D).
+pub fn interaction_list(b: &BoxId) -> Vec<BoxId> {
+    if b.level < 2 {
+        // levels 0 and 1 have no well-separated boxes
+        return Vec::new();
+    }
+    let parent = b.parent().expect("level >= 2 has a parent");
+    let mut out = Vec::with_capacity(27);
+    for pn in near_domain(&parent) {
+        for c in pn.children() {
+            if !b.touches(&c) {
+                out.push(c);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{check, Gen};
+
+    /// Brute-force oracle: all same-level boxes with Chebyshev distance
+    /// > 1 whose parents have Chebyshev distance <= 1.
+    fn interaction_list_bruteforce(b: &BoxId) -> Vec<BoxId> {
+        let n = 1u32 << b.level;
+        let mut out = Vec::new();
+        for x in 0..n {
+            for y in 0..n {
+                let c = BoxId::new(b.level, x, y);
+                if b.touches(&c) {
+                    continue;
+                }
+                if b.parent().unwrap().touches(&c.parent().unwrap()) {
+                    out.push(c);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn interior_box_has_8_neighbors_27_interactions() {
+        let b = BoxId::new(4, 7, 9);
+        assert_eq!(neighbors(&b).len(), 8);
+        assert_eq!(interaction_list(&b).len(), 27);
+    }
+
+    #[test]
+    fn corner_box_has_3_neighbors() {
+        let b = BoxId::new(4, 0, 0);
+        assert_eq!(neighbors(&b).len(), 3);
+    }
+
+    #[test]
+    fn coarse_levels_have_empty_interaction_lists() {
+        assert!(interaction_list(&BoxId::ROOT).is_empty());
+        assert!(interaction_list(&BoxId::new(1, 1, 0)).is_empty());
+    }
+
+    #[test]
+    fn prop_interaction_list_matches_bruteforce() {
+        check("IL == brute force", 64, |g: &mut Gen| {
+            let level = g.usize_in(2, 6) as u8;
+            let n = (1u32 << level) as usize;
+            let b = BoxId::new(
+                level,
+                g.usize_in(0, n - 1) as u32,
+                g.usize_in(0, n - 1) as u32,
+            );
+            let mut got = interaction_list(&b);
+            let mut want = interaction_list_bruteforce(&b);
+            got.sort();
+            want.sort();
+            assert_eq!(got, want, "box {b:?}");
+        });
+    }
+
+    #[test]
+    fn prop_interaction_list_is_well_separated_same_level() {
+        check("IL well separated", 64, |g: &mut Gen| {
+            let level = g.usize_in(2, 8) as u8;
+            let n = (1u32 << level) as usize;
+            let b = BoxId::new(
+                level,
+                g.usize_in(0, n - 1) as u32,
+                g.usize_in(0, n - 1) as u32,
+            );
+            for c in interaction_list(&b) {
+                assert_eq!(c.level, b.level);
+                assert!(b.chebyshev(&c) > 1);
+                // separation ratio bound used by the expansion error
+                assert!(b.chebyshev(&c) <= 3);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_near_plus_il_covers_parent_near_children() {
+        // every child of the parent's near domain is either near b or in IL
+        check("near + IL cover", 64, |g: &mut Gen| {
+            let level = g.usize_in(2, 6) as u8;
+            let n = (1u32 << level) as usize;
+            let b = BoxId::new(
+                level,
+                g.usize_in(0, n - 1) as u32,
+                g.usize_in(0, n - 1) as u32,
+            );
+            let il = interaction_list(&b);
+            let near = near_domain(&b);
+            for pn in near_domain(&b.parent().unwrap()) {
+                for c in pn.children() {
+                    assert!(
+                        il.contains(&c) ^ near.contains(&c),
+                        "{c:?} must be in exactly one of near/IL"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_interaction_symmetry() {
+        // c in IL(b) <=> b in IL(c)
+        check("IL symmetric", 64, |g: &mut Gen| {
+            let level = g.usize_in(2, 6) as u8;
+            let n = (1u32 << level) as usize;
+            let b = BoxId::new(
+                level,
+                g.usize_in(0, n - 1) as u32,
+                g.usize_in(0, n - 1) as u32,
+            );
+            for c in interaction_list(&b) {
+                assert!(interaction_list(&c).contains(&b));
+            }
+        });
+    }
+}

@@ -1,0 +1,174 @@
+//! Box identifiers and geometry for the hierarchical decomposition (§2.1).
+
+use super::morton;
+
+/// A box (node) of the quadtree: `(level, ix, iy)` with `ix, iy < 2^level`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BoxId {
+    pub level: u8,
+    pub ix: u32,
+    pub iy: u32,
+}
+
+impl BoxId {
+    pub const ROOT: BoxId = BoxId { level: 0, ix: 0, iy: 0 };
+
+    pub fn new(level: u8, ix: u32, iy: u32) -> Self {
+        debug_assert!(ix < (1 << level) && iy < (1 << level));
+        BoxId { level, ix, iy }
+    }
+
+    /// Morton index of this box within its level.
+    #[inline]
+    pub fn morton(&self) -> u64 {
+        morton::interleave(self.ix, self.iy)
+    }
+
+    /// Build from a morton index within `level`.
+    pub fn from_morton(level: u8, m: u64) -> Self {
+        let (ix, iy) = morton::deinterleave(m);
+        BoxId::new(level, ix, iy)
+    }
+
+    /// Globally unique numbering: boxes of coarser levels come first
+    /// (level-offset + morton), matching the paper's "global box numbers"
+    /// used by the §6.2 verification format.
+    pub fn global_id(&self) -> u64 {
+        // offset = sum_{l<level} 4^l = (4^level - 1)/3
+        let offset = ((1u64 << (2 * self.level)) - 1) / 3;
+        offset + self.morton()
+    }
+
+    /// Inverse of [`BoxId::global_id`].
+    pub fn from_global_id(gid: u64) -> Self {
+        let mut level = 0u8;
+        let mut offset = 0u64;
+        loop {
+            let count = 1u64 << (2 * level);
+            if gid < offset + count {
+                return BoxId::from_morton(level, gid - offset);
+            }
+            offset += count;
+            level += 1;
+        }
+    }
+
+    pub fn parent(&self) -> Option<BoxId> {
+        if self.level == 0 {
+            None
+        } else {
+            Some(BoxId::new(self.level - 1, self.ix / 2, self.iy / 2))
+        }
+    }
+
+    /// The four children, in z-order.
+    pub fn children(&self) -> [BoxId; 4] {
+        let l = self.level + 1;
+        let (x, y) = (2 * self.ix, 2 * self.iy);
+        [
+            BoxId::new(l, x, y),
+            BoxId::new(l, x + 1, y),
+            BoxId::new(l, x, y + 1),
+            BoxId::new(l, x + 1, y + 1),
+        ]
+    }
+
+    /// Ancestor at `level` (<= self.level).
+    pub fn ancestor(&self, level: u8) -> BoxId {
+        debug_assert!(level <= self.level);
+        let shift = self.level - level;
+        BoxId::new(level, self.ix >> shift, self.iy >> shift)
+    }
+
+    /// Chebyshev distance between box indices at the same level.
+    pub fn chebyshev(&self, other: &BoxId) -> u32 {
+        debug_assert_eq!(self.level, other.level);
+        let dx = self.ix.abs_diff(other.ix);
+        let dy = self.iy.abs_diff(other.iy);
+        dx.max(dy)
+    }
+
+    /// Adjacent or identical (the near-field relation of §2.1).
+    pub fn touches(&self, other: &BoxId) -> bool {
+        self.chebyshev(other) <= 1
+    }
+
+    /// Center in a domain `[origin, origin + size)^2`.
+    pub fn center(&self, origin: [f64; 2], size: f64) -> [f64; 2] {
+        let w = size / (1u64 << self.level) as f64;
+        [
+            origin[0] + (self.ix as f64 + 0.5) * w,
+            origin[1] + (self.iy as f64 + 0.5) * w,
+        ]
+    }
+
+    /// Half-width in a domain of side `size`.
+    pub fn radius(&self, size: f64) -> f64 {
+        size / (1u64 << (self.level + 1)) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{check, Gen};
+
+    #[test]
+    fn parent_child_roundtrip() {
+        let b = BoxId::new(5, 13, 27);
+        for c in b.children() {
+            assert_eq!(c.parent(), Some(b));
+        }
+        assert_eq!(BoxId::ROOT.parent(), None);
+    }
+
+    #[test]
+    fn global_id_level_offsets() {
+        assert_eq!(BoxId::ROOT.global_id(), 0);
+        assert_eq!(BoxId::new(1, 0, 0).global_id(), 1);
+        assert_eq!(BoxId::new(1, 1, 1).global_id(), 4);
+        assert_eq!(BoxId::new(2, 0, 0).global_id(), 5);
+    }
+
+    #[test]
+    fn prop_global_id_roundtrip() {
+        check("global id roundtrip", 256, |g: &mut Gen| {
+            let level = g.usize_in(0, 12) as u8;
+            let n = 1u32 << level;
+            let b = BoxId::new(
+                level,
+                g.usize_in(0, n as usize - 1) as u32,
+                g.usize_in(0, n as usize - 1) as u32,
+            );
+            assert_eq!(BoxId::from_global_id(b.global_id()), b);
+        });
+    }
+
+    #[test]
+    fn center_and_radius_unit_domain() {
+        let b = BoxId::new(1, 1, 0);
+        assert_eq!(b.center([0.0, 0.0], 1.0), [0.75, 0.25]);
+        assert_eq!(b.radius(1.0), 0.25);
+    }
+
+    #[test]
+    fn ancestor_consistent_with_parents() {
+        let b = BoxId::new(6, 41, 22);
+        let mut cur = b;
+        for l in (0..6u8).rev() {
+            cur = cur.parent().unwrap();
+            assert_eq!(b.ancestor(l), cur);
+        }
+    }
+
+    #[test]
+    fn children_cover_parent_geometrically() {
+        let b = BoxId::new(3, 5, 2);
+        let c = b.center([0.0, 0.0], 1.0);
+        let r = b.radius(1.0);
+        for ch in b.children() {
+            let cc = ch.center([0.0, 0.0], 1.0);
+            assert!((cc[0] - c[0]).abs() < r && (cc[1] - c[1]).abs() < r);
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! Minimal JSON parser for `artifacts/manifest.json` (no `serde` in the
+//! offline registry — DESIGN.md §6).  Supports the full JSON grammar
+//! except unicode escapes; numbers parse to f64.
+
+use std::collections::HashMap;
+
+/// A parsed JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(HashMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(s: &str) -> Result<Json, String> {
+        let bytes = s.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(format!("trailing data at byte {pos}"));
+        }
+        Ok(v)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|x| x as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&HashMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && (b[*pos] as char).is_ascii_whitespace() {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    skip_ws(b, pos);
+    if *pos >= b.len() {
+        return Err("unexpected end".into());
+    }
+    match b[*pos] {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Json::Str(parse_string(b, pos)?)),
+        b't' => lit(b, pos, "true", Json::Bool(true)),
+        b'f' => lit(b, pos, "false", Json::Bool(false)),
+        b'n' => lit(b, pos, "null", Json::Null),
+        _ => parse_num(b, pos),
+    }
+}
+
+fn lit(b: &[u8], pos: &mut usize, s: &str, v: Json) -> Result<Json, String> {
+    if b[*pos..].starts_with(s.as_bytes()) {
+        *pos += s.len();
+        Ok(v)
+    } else {
+        Err(format!("bad literal at {pos}"))
+    }
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    std::str::from_utf8(&b[start..*pos])
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(Json::Num)
+        .ok_or_else(|| format!("bad number at {start}"))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
+    if b.get(*pos) != Some(&b'"') {
+        return Err(format!("expected string at {pos}"));
+    }
+    *pos += 1;
+    let mut out = String::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                if *pos >= b.len() {
+                    break;
+                }
+                out.push(match b[*pos] {
+                    b'n' => '\n',
+                    b't' => '\t',
+                    b'r' => '\r',
+                    b'/' => '/',
+                    b'\\' => '\\',
+                    b'"' => '"',
+                    c => return Err(format!("bad escape \\{}", c as char)),
+                });
+                *pos += 1;
+            }
+            c => {
+                out.push(c as char);
+                *pos += 1;
+            }
+        }
+    }
+    Err("unterminated string".into())
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    *pos += 1; // [
+    let mut out = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b']' {
+        *pos += 1;
+        return Ok(Json::Arr(out));
+    }
+    loop {
+        out.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(out));
+            }
+            _ => return Err(format!("expected , or ] at {pos}")),
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    *pos += 1; // {
+    let mut out = HashMap::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b'}' {
+        *pos += 1;
+        return Ok(Json::Obj(out));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        if b.get(*pos) != Some(&b':') {
+            return Err(format!("expected : at {pos}"));
+        }
+        *pos += 1;
+        out.insert(key, parse_value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(out));
+            }
+            _ => return Err(format!("expected , or }} at {pos}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_like_document() {
+        let doc = r#"{
+          "version": 1,
+          "batch": 64, "leaf": 32, "terms": 17, "sigma": 0.02,
+          "operators": {
+            "p2m": {"file": "p2m.hlo.txt", "inputs": [[64,32,3],[64,2]],
+                    "dtype": "f64"}
+          }
+        }"#;
+        let j = Json::parse(doc).unwrap();
+        assert_eq!(j.get("batch").unwrap().as_usize(), Some(64));
+        assert_eq!(j.get("sigma").unwrap().as_f64(), Some(0.02));
+        let ops = j.get("operators").unwrap().as_obj().unwrap();
+        let p2m = &ops["p2m"];
+        assert_eq!(p2m.get("file").unwrap().as_str(), Some("p2m.hlo.txt"));
+        let inputs = p2m.get("inputs").unwrap().as_arr().unwrap();
+        assert_eq!(inputs[0].as_arr().unwrap()[1].as_usize(), Some(32));
+    }
+
+    #[test]
+    fn parses_scalars_and_arrays() {
+        assert_eq!(Json::parse("3.5").unwrap(), Json::Num(3.5));
+        assert_eq!(Json::parse("-2e3").unwrap(), Json::Num(-2000.0));
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(
+            Json::parse(r#"["a", 1, false]"#).unwrap(),
+            Json::Arr(vec![Json::Str("a".into()), Json::Num(1.0),
+                           Json::Bool(false)])
+        );
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse(r#"{"a": }"#).is_err());
+        assert!(Json::parse("[1, 2").is_err());
+        assert!(Json::parse("1 2").is_err());
+    }
+
+    #[test]
+    fn string_escapes() {
+        assert_eq!(Json::parse(r#""a\nb\"c""#).unwrap(),
+                   Json::Str("a\nb\"c".into()));
+    }
+}

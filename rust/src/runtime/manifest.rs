@@ -1,0 +1,138 @@
+//! `artifacts/manifest.json`: the contract between the python AOT path
+//! and the rust runtime (operator names, HLO files, shapes, parameters).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::json::Json;
+use crate::fmm::OpDims;
+
+/// One lowered operator.
+#[derive(Clone, Debug)]
+pub struct OperatorEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dims: OpDims,
+    pub dir: PathBuf,
+    pub operators: HashMap<String, OperatorEntry>,
+}
+
+pub const REQUIRED_OPS: [&str; 6] = ["p2m", "m2m", "m2l", "l2l", "l2p",
+                                     "p2p"];
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let field = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("manifest missing numeric '{k}'"))
+        };
+        let dims = OpDims {
+            batch: field("batch")? as usize,
+            leaf: field("leaf")? as usize,
+            terms: field("terms")? as usize,
+            sigma: field("sigma")?,
+        };
+        let ops_json = j
+            .get("operators")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'operators'"))?;
+        let mut operators = HashMap::new();
+        for (name, entry) in ops_json {
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("operator {name} missing file"))?;
+            let input_shapes = entry
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("operator {name} missing inputs"))?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .map(|dims| {
+                            dims.iter()
+                                .filter_map(Json::as_usize)
+                                .collect::<Vec<_>>()
+                        })
+                        .ok_or_else(|| anyhow!("bad shape in {name}"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            operators.insert(
+                name.clone(),
+                OperatorEntry {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    input_shapes,
+                },
+            );
+        }
+        for req in REQUIRED_OPS {
+            if !operators.contains_key(req) {
+                return Err(anyhow!("manifest missing operator '{req}'"));
+            }
+            if !operators[req].file.exists() {
+                return Err(anyhow!("artifact {} missing — run `make \
+                                    artifacts`",
+                                   operators[req].file.display()));
+            }
+        }
+        Ok(Manifest { dims, dir: dir.to_path_buf(), operators })
+    }
+
+    /// Default artifact location: `$PETFMM_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("PETFMM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let Some(dir) = repo_artifacts() else {
+            eprintln!("skipped: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.operators.len(), 6);
+        assert!(m.dims.terms >= 2);
+        // every declared input shape leads with the batch dimension
+        for op in m.operators.values() {
+            for shape in &op.input_shapes {
+                assert_eq!(shape[0], m.dims.batch, "{}", op.name);
+            }
+        }
+    }
+
+    #[test]
+    fn missing_dir_is_a_clean_error() {
+        let err = Manifest::load(Path::new("/nonexistent-petfmm"))
+            .unwrap_err();
+        assert!(err.to_string().contains("manifest.json"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Artifact runtime: manifest parsing + PJRT compilation/execution of the
+//! AOT-lowered jax/pallas operators (see `python/compile/aot.py`).
+
+pub mod json;
+pub mod manifest;
+pub mod pjrt;
+
+pub use json::Json;
+pub use manifest::{Manifest, OperatorEntry};
+pub use pjrt::PjrtBackend;

@@ -1,0 +1,159 @@
+//! PJRT execution of the AOT artifacts: the product compute path.
+//!
+//! Loads each operator's HLO **text** (see aot.py — text, not serialized
+//! proto, is the interchange format), compiles once on the CPU PJRT
+//! client, and serves the [`OpsBackend`] ABI from compiled executables.
+//! Python is never on this path.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::manifest::Manifest;
+use crate::fmm::{OpDims, OpsBackend};
+
+/// A compiled operator.
+struct CompiledOp {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledOp {
+    fn load(client: &xla::PjRtClient, path: &Path) -> Result<CompiledOp> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?)
+            .with_context(|| format!("parsing HLO {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(CompiledOp { exe })
+    }
+
+    /// Execute with f64 inputs of the given shapes; returns the flattened
+    /// f64 output (operators return a 1-tuple, see aot.py return_tuple).
+    fn run(&self, inputs: &[(&[f64], &[i64])]) -> Result<Vec<f64>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                xla::Literal::vec1(data).reshape(shape).context("reshape")
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let out = result[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?
+            .to_vec::<f64>()?;
+        Ok(out)
+    }
+}
+
+/// [`OpsBackend`] executing the AOT-lowered jax/pallas operators via PJRT.
+pub struct PjrtBackend {
+    dims: OpDims,
+    p2m: CompiledOp,
+    m2m: CompiledOp,
+    m2l: CompiledOp,
+    l2l: CompiledOp,
+    l2p: CompiledOp,
+    p2p: CompiledOp,
+}
+
+impl PjrtBackend {
+    /// Load + compile every operator from an artifact directory.
+    pub fn load(dir: &Path) -> Result<PjrtBackend> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .context("creating PJRT CPU client")?;
+        let get = |name: &str| -> Result<CompiledOp> {
+            CompiledOp::load(&client, &manifest.operators[name].file)
+        };
+        Ok(PjrtBackend {
+            dims: manifest.dims,
+            p2m: get("p2m")?,
+            m2m: get("m2m")?,
+            m2l: get("m2l")?,
+            l2l: get("l2l")?,
+            l2p: get("l2p")?,
+            p2p: get("p2p")?,
+        })
+    }
+
+    /// Load from the default artifact directory (`$PETFMM_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn load_default() -> Result<PjrtBackend> {
+        Self::load(&Manifest::default_dir())
+    }
+
+    fn shapes(&self) -> Shapes {
+        let OpDims { batch, leaf, terms, .. } = self.dims;
+        Shapes {
+            parts: [batch as i64, leaf as i64, 3],
+            coeff: [batch as i64, terms as i64, 2],
+            vec2: [batch as i64, 2],
+            scal: [batch as i64, 1],
+        }
+    }
+}
+
+struct Shapes {
+    parts: [i64; 3],
+    coeff: [i64; 3],
+    vec2: [i64; 2],
+    scal: [i64; 2],
+}
+
+impl OpsBackend for PjrtBackend {
+    fn dims(&self) -> OpDims {
+        self.dims
+    }
+
+    fn p2m(&self, particles: &[f64], centers: &[f64], radius: &[f64])
+        -> Vec<f64> {
+        let s = self.shapes();
+        self.p2m
+            .run(&[(particles, &s.parts), (centers, &s.vec2),
+                   (radius, &s.scal)])
+            .expect("p2m artifact execution")
+    }
+
+    fn m2m(&self, me: &[f64], d: &[f64], rho: &[f64]) -> Vec<f64> {
+        let s = self.shapes();
+        self.m2m
+            .run(&[(me, &s.coeff), (d, &s.vec2), (rho, &s.scal)])
+            .expect("m2m artifact execution")
+    }
+
+    fn m2l(&self, me: &[f64], tau: &[f64], inv_r: &[f64]) -> Vec<f64> {
+        let s = self.shapes();
+        self.m2l
+            .run(&[(me, &s.coeff), (tau, &s.vec2), (inv_r, &s.scal)])
+            .expect("m2l artifact execution")
+    }
+
+    fn l2l(&self, le: &[f64], d: &[f64], rho: &[f64]) -> Vec<f64> {
+        let s = self.shapes();
+        self.l2l
+            .run(&[(le, &s.coeff), (d, &s.vec2), (rho, &s.scal)])
+            .expect("l2l artifact execution")
+    }
+
+    fn l2p(&self, le: &[f64], particles: &[f64], centers: &[f64],
+           radius: &[f64]) -> Vec<f64> {
+        let s = self.shapes();
+        self.l2p
+            .run(&[(le, &s.coeff), (particles, &s.parts),
+                   (centers, &s.vec2), (radius, &s.scal)])
+            .expect("l2p artifact execution")
+    }
+
+    fn p2p(&self, targets: &[f64], sources: &[f64]) -> Vec<f64> {
+        let s = self.shapes();
+        self.p2p
+            .run(&[(targets, &s.parts), (sources, &s.parts)])
+            .expect("p2p artifact execution")
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

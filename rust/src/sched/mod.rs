@@ -1,0 +1,9 @@
+//! The parallel schedule (DESIGN.md §8): plan derivation from
+//! (tree, cut, assignment) and its execution by the virtual-time
+//! strong-scaling simulator.
+
+pub mod plan;
+pub mod sim;
+
+pub use plan::{coeff_bytes, ParallelPlan};
+pub use sim::{OpCosts, SimResult, Simulator, StageRecord, Timing};

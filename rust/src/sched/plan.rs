@@ -1,0 +1,315 @@
+//! The parallel schedule plan: who computes what, and which bytes cross
+//! rank boundaries (DESIGN.md §8).
+//!
+//! The plan is derived deterministically from (tree, cut, assignment) and
+//! is executed either by the virtual-time simulator ([`super::sim`]) or
+//! by the threaded message-passing runtime ([`super::super::comm::threaded`]).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::comm::{interaction_overlap, neighbor_overlap, owner_of};
+use crate::partition::Assignment;
+use crate::quadtree::{interaction_list, near_domain, BoxId, Quadtree,
+                      TreeCut};
+
+/// Expansion-block wire size: 16 p bytes (p complex f64).
+pub fn coeff_bytes(terms: usize) -> f64 {
+    16.0 * terms as f64
+}
+
+/// Per-rank work lists + inter-rank communication volumes for one run.
+#[derive(Clone, Debug)]
+pub struct ParallelPlan {
+    pub ranks: usize,
+    pub terms: usize,
+    /// occupied leaves per rank
+    pub leaves: Vec<Vec<BoxId>>,
+    /// per rank, per tree level (index 0 = level cut+1): M2M children
+    pub m2m_children: Vec<Vec<Vec<BoxId>>>,
+    /// per rank, per level (cut+1..=L): M2L (target, source) pairs
+    pub m2l_pairs: Vec<Vec<Vec<(BoxId, BoxId)>>>,
+    /// per rank, per level (cut+1..=L): L2L children
+    pub l2l_children: Vec<Vec<Vec<BoxId>>>,
+    /// per rank: near-field (target, source) leaf pairs
+    pub p2p_pairs: Vec<Vec<(BoxId, BoxId)>>,
+    /// root tree (leader): M2M children per level (cut down to 3)
+    pub root_m2m_children: Vec<Vec<BoxId>>,
+    /// root tree: M2L pairs (levels 2..=cut)
+    pub root_m2l_pairs: Vec<(BoxId, BoxId)>,
+    /// root tree: L2L children (levels 3..=cut)
+    pub root_l2l_children: Vec<Vec<BoxId>>,
+    /// per rank: number of particles owned
+    pub rank_particles: Vec<usize>,
+    /// per rank: ME blocks sent to the leader in the upward reduce
+    pub reduce_blocks: Vec<usize>,
+    /// per rank: LE blocks received from the leader in the scatter
+    pub scatter_blocks: Vec<usize>,
+    /// (from, to) -> ME blocks crossing in the M2L exchange
+    pub m2l_exchange_blocks: HashMap<(usize, usize), usize>,
+    /// (from, to) -> particles crossing in the P2P halo
+    pub halo_particles: HashMap<(usize, usize), usize>,
+}
+
+impl ParallelPlan {
+    /// Derive the full plan.
+    pub fn build(tree: &Quadtree, cut: &TreeCut, assignment: &Assignment)
+        -> ParallelPlan {
+        let ranks = assignment.ranks;
+        let terms = 0; // filled by caller contexts that need bytes; kept
+                       // here for symmetry — blocks are counted, bytes
+                       // derived via coeff_bytes(terms) at costing time
+        let levels = tree.levels;
+        let k = cut.cut_level;
+
+        // occupancy per level (boxes with particles underneath)
+        let occupied: Vec<HashSet<BoxId>> = (0..=levels)
+            .map(|l| tree.occupied_at_level(l).into_iter().collect())
+            .collect();
+
+        let owner = |b: &BoxId| owner_of(cut, assignment, b);
+
+        // ---- per-rank leaves & particles ----
+        let mut leaves = vec![Vec::new(); ranks];
+        let mut rank_particles = vec![0usize; ranks];
+        for leaf in &tree.occupied_leaves {
+            let r = owner(leaf);
+            leaves[r].push(*leaf);
+            rank_particles[r] += tree.particles_in(leaf).len();
+        }
+
+        // ---- upward: M2M children per rank per level ----
+        // local levels: children at lvl in (k+1 ..= L), shifted into lvl-1
+        let mut m2m_children =
+            vec![vec![Vec::new(); (levels - k) as usize]; ranks];
+        for lvl in (k + 1)..=levels {
+            for b in &occupied[lvl as usize] {
+                let r = owner(b);
+                m2m_children[r][(lvl - k - 1) as usize].push(*b);
+            }
+        }
+        // deterministic order
+        for rank_lists in &mut m2m_children {
+            for list in rank_lists.iter_mut() {
+                list.sort();
+            }
+        }
+
+        // ---- downward: M2L pairs + L2L children per rank per level ----
+        let nlv = (levels - k) as usize;
+        let mut m2l_pairs = vec![vec![Vec::new(); nlv]; ranks];
+        let mut l2l_children = vec![vec![Vec::new(); nlv]; ranks];
+        for lvl in (k + 1)..=levels {
+            let li = (lvl - k - 1) as usize;
+            for tgt in &occupied[lvl as usize] {
+                let r = owner(tgt);
+                for src in interaction_list(tgt) {
+                    if occupied[lvl as usize].contains(&src) {
+                        m2l_pairs[r][li].push((*tgt, src));
+                    }
+                }
+                l2l_children[r][li].push(*tgt);
+            }
+        }
+        for rank_lists in m2l_pairs.iter_mut() {
+            for list in rank_lists.iter_mut() {
+                list.sort();
+            }
+        }
+        for rank_lists in l2l_children.iter_mut() {
+            for list in rank_lists.iter_mut() {
+                list.sort();
+            }
+        }
+
+        // ---- near field: P2P pairs per rank ----
+        let mut p2p_pairs = vec![Vec::new(); ranks];
+        for tgt in &tree.occupied_leaves {
+            let r = owner(tgt);
+            for src in near_domain(tgt) {
+                if !tree.particles_in(&src).is_empty() {
+                    p2p_pairs[r].push((*tgt, src));
+                }
+            }
+        }
+        for list in &mut p2p_pairs {
+            list.sort();
+        }
+
+        // ---- root tree (leader, rank 0) ----
+        let mut root_m2m_children = Vec::new();
+        for lvl in (3..=k).rev() {
+            let mut cs: Vec<BoxId> = occupied[lvl as usize]
+                .iter()
+                .copied()
+                .collect();
+            cs.sort();
+            root_m2m_children.push(cs);
+        }
+        let mut root_m2l_pairs = Vec::new();
+        for lvl in 2..=k {
+            let mut tgts: Vec<BoxId> =
+                occupied[lvl as usize].iter().copied().collect();
+            tgts.sort();
+            for tgt in tgts {
+                for src in interaction_list(&tgt) {
+                    if occupied[lvl as usize].contains(&src) {
+                        root_m2l_pairs.push((tgt, src));
+                    }
+                }
+            }
+        }
+        let mut root_l2l_children = Vec::new();
+        for lvl in 3..=k {
+            let mut cs: Vec<BoxId> =
+                occupied[lvl as usize].iter().copied().collect();
+            cs.sort();
+            root_l2l_children.push(cs);
+        }
+
+        // ---- communication volumes ----
+        // upward reduce: every rank sends the ME of each owned occupied
+        // subtree root to the leader
+        let mut reduce_blocks = vec![0usize; ranks];
+        let mut scatter_blocks = vec![0usize; ranks];
+        for st in &cut.subtrees {
+            if !occupied[k as usize].contains(st) {
+                continue;
+            }
+            let r = assignment.part[cut.subtree_index(st)];
+            if r != 0 {
+                reduce_blocks[r] += 1;
+                scatter_blocks[r] += 1; // leader sends the LE back
+            }
+        }
+
+        // M2L exchange: interaction overlap restricted to occupied boxes
+        let il_overlap = interaction_overlap(tree, cut, assignment);
+        let mut m2l_exchange_blocks = HashMap::new();
+        for ((from, to), boxes) in &il_overlap.sends {
+            let n = boxes
+                .iter()
+                .filter(|b| occupied[b.level as usize].contains(b))
+                .count();
+            if n > 0 {
+                m2l_exchange_blocks.insert((*from, *to), n);
+            }
+        }
+
+        // P2P halo: neighbor overlap weighted by actual particle counts
+        let nb_overlap = neighbor_overlap(tree, cut, assignment);
+        let mut halo_particles = HashMap::new();
+        for ((from, to), boxes) in &nb_overlap.sends {
+            let n: usize = boxes
+                .iter()
+                .map(|b| tree.particles_in(b).len())
+                .sum();
+            if n > 0 {
+                halo_particles.insert((*from, *to), n);
+            }
+        }
+
+        let _ = terms;
+        ParallelPlan {
+            ranks,
+            terms: 0,
+            leaves,
+            m2m_children,
+            m2l_pairs,
+            l2l_children,
+            p2p_pairs,
+            root_m2m_children,
+            root_m2l_pairs,
+            root_l2l_children,
+            rank_particles,
+            reduce_blocks,
+            scatter_blocks,
+            m2l_exchange_blocks,
+            halo_particles,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::{assign_subtrees, Strategy};
+    use crate::proptest::{check, Gen};
+    use crate::quadtree::Domain;
+
+    fn build(g: &mut Gen, n: usize, levels: u8, k: u8, ranks: usize)
+        -> (Quadtree, TreeCut, Assignment, ParallelPlan) {
+        let parts = g.particles(n);
+        let tree = Quadtree::build(Domain::UNIT, levels, parts);
+        let cut = TreeCut::new(levels, k);
+        let a = assign_subtrees(&tree, &cut, 5, ranks,
+                                Strategy::Optimized, g.seed);
+        let plan = ParallelPlan::build(&tree, &cut, &a);
+        (tree, cut, a, plan)
+    }
+
+    #[test]
+    fn prop_plan_covers_all_leaves_once() {
+        check("plan covers leaves", 8, |g| {
+            let (tree, _, _, plan) = build(g, 400, 4, 2, 4);
+            let total: usize = plan.leaves.iter().map(Vec::len).sum();
+            assert_eq!(total, tree.occupied_leaves.len());
+            let parts: usize = plan.rank_particles.iter().sum();
+            assert_eq!(parts, tree.n_particles());
+        });
+    }
+
+    #[test]
+    fn prop_plan_matches_serial_pair_counts() {
+        // the union of per-rank M2L pairs at levels > cut plus the root
+        // pairs equals the serial evaluator's occupied-pair set
+        check("plan pair counts", 6, |g| {
+            let (tree, cut, _, plan) = build(g, 300, 4, 2, 3);
+            let mut plan_pairs: usize = plan.root_m2l_pairs.len();
+            for r in 0..plan.ranks {
+                for lv in &plan.m2l_pairs[r] {
+                    plan_pairs += lv.len();
+                }
+            }
+            let mut serial_pairs = 0;
+            for lvl in 2..=tree.levels {
+                let occ: std::collections::HashSet<_> =
+                    tree.occupied_at_level(lvl).into_iter().collect();
+                for tgt in &occ {
+                    for src in interaction_list(tgt) {
+                        if occ.contains(&src) {
+                            serial_pairs += 1;
+                        }
+                    }
+                }
+            }
+            let _ = cut;
+            assert_eq!(plan_pairs, serial_pairs);
+        });
+    }
+
+    #[test]
+    fn single_rank_plan_has_no_comm() {
+        let mut g = Gen::new(9);
+        let (_, _, _, plan) = build(&mut g, 300, 4, 2, 1);
+        assert!(plan.m2l_exchange_blocks.is_empty());
+        assert!(plan.halo_particles.is_empty());
+        assert!(plan.reduce_blocks.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn prop_p2p_pairs_match_occupied_near_domains() {
+        check("p2p pair counts", 6, |g| {
+            let (tree, _, _, plan) = build(g, 300, 4, 2, 4);
+            let total: usize = plan.p2p_pairs.iter().map(Vec::len).sum();
+            let mut want = 0;
+            for tgt in &tree.occupied_leaves {
+                for src in near_domain(tgt) {
+                    if !tree.particles_in(&src).is_empty() {
+                        want += 1;
+                    }
+                }
+            }
+            assert_eq!(total, want);
+        });
+    }
+}

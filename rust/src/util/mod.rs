@@ -1,0 +1,64 @@
+//! Shared numeric substrates: complex arithmetic, PRNG, binomial tables.
+//!
+//! The offline registry carries no `num-complex` or `rand`, so both are
+//! implemented here (DESIGN.md §6).
+
+pub mod complex;
+pub mod rng;
+pub mod tables;
+
+pub use complex::Complex;
+pub use rng::SplitMix64;
+pub use tables::BinomialTable;
+
+/// 2π, used throughout the Biot–Savart kernels.
+pub const TWO_PI: f64 = std::f64::consts::TAU;
+
+/// Relative L2 error between two velocity sets, `‖a-b‖₂ / ‖b‖₂`.
+pub fn rel_l2_error(a: &[[f64; 2]], b: &[[f64; 2]]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in a.iter().zip(b.iter()) {
+        num += (x[0] - y[0]).powi(2) + (x[1] - y[1]).powi(2);
+        den += y[0].powi(2) + y[1].powi(2);
+    }
+    if den == 0.0 {
+        num.sqrt()
+    } else {
+        (num / den).sqrt()
+    }
+}
+
+/// Max-abs error between two velocity sets.
+pub fn max_abs_error(a: &[[f64; 2]], b: &[[f64; 2]]) -> f64 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x[0] - y[0]).abs().max((x[1] - y[1]).abs()))
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_l2_zero_for_identical() {
+        let a = vec![[1.0, 2.0], [3.0, -1.0]];
+        assert_eq!(rel_l2_error(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn rel_l2_scales() {
+        let a = vec![[2.0, 0.0]];
+        let b = vec![[1.0, 0.0]];
+        assert!((rel_l2_error(&a, &b) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn max_abs_picks_worst() {
+        let a = vec![[0.0, 0.0], [0.0, 5.0]];
+        let b = vec![[0.1, 0.0], [0.0, 0.0]];
+        assert!((max_abs_error(&a, &b) - 5.0).abs() < 1e-15);
+    }
+}

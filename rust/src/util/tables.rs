@@ -1,0 +1,82 @@
+//! Precomputed binomial-coefficient tables for the expansion operators.
+//!
+//! M2M/M2L/L2L each contract against C(n,k); at p = 17 (paper §7) the
+//! largest coefficient is C(32,16) ≈ 6·10⁸, well inside f64.
+
+/// Pascal's-triangle table of C(n, k) for n, k < size.
+#[derive(Clone, Debug)]
+pub struct BinomialTable {
+    size: usize,
+    c: Vec<f64>,
+}
+
+impl BinomialTable {
+    /// Table covering all coefficients needed for `p` expansion terms
+    /// (M2L needs C(k + l, k) with k, l < p, i.e. n up to 2p - 2).
+    pub fn for_terms(p: usize) -> Self {
+        Self::new(2 * p)
+    }
+
+    pub fn new(size: usize) -> Self {
+        let mut c = vec![0.0; size * size];
+        for n in 0..size {
+            c[n * size] = 1.0;
+            for k in 1..=n {
+                c[n * size + k] =
+                    c[(n - 1) * size + k - 1] + if k <= n - 1 {
+                        c[(n - 1) * size + k]
+                    } else {
+                        0.0
+                    };
+            }
+        }
+        BinomialTable { size, c }
+    }
+
+    /// C(n, k); zero when k > n. Panics if n >= table size.
+    #[inline]
+    pub fn get(&self, n: usize, k: usize) -> f64 {
+        debug_assert!(n < self.size, "binomial table too small: C({n},{k})");
+        if k > n {
+            0.0
+        } else {
+            self.c[n * self.size + k]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values() {
+        let t = BinomialTable::new(10);
+        assert_eq!(t.get(0, 0), 1.0);
+        assert_eq!(t.get(4, 2), 6.0);
+        assert_eq!(t.get(5, 0), 1.0);
+        assert_eq!(t.get(5, 5), 1.0);
+        assert_eq!(t.get(9, 3), 84.0);
+        assert_eq!(t.get(3, 4), 0.0);
+    }
+
+    #[test]
+    fn pascal_identity() {
+        let t = BinomialTable::new(30);
+        for n in 1..29 {
+            for k in 1..=n {
+                let want = t.get(n - 1, k - 1) + t.get(n - 1, k);
+                assert_eq!(t.get(n, k), want, "C({n},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn for_terms_covers_m2l_range() {
+        let p = 17;
+        let t = BinomialTable::for_terms(p);
+        // the largest index M2L touches: C(2p-2, p-1)
+        let v = t.get(2 * p - 2, p - 1);
+        assert!(v > 6.0e8 && v < 6.1e8, "C(32,16)={v}");
+    }
+}

@@ -1,0 +1,384 @@
+//! The §6.2 verification file format and comparator.
+//!
+//! The paper's methodology: dump a run's complete structure — levels,
+//! terms, particle assignment, per-box centers/children/neighbors/
+//! interaction lists/coefficients, and the direct + FMM solutions — with
+//! boxes labeled by *global numbers* so serial and parallel outputs are
+//! comparable in any order.  A comparator then reports discrepancies.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::fmm::FmmState;
+use crate::quadtree::{interaction_list, neighbors, BoxId, Quadtree};
+
+/// A run dump in the verification format.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VerificationFile {
+    pub levels: u8,
+    pub terms: usize,
+    pub n_particles: usize,
+    pub domain: ([f64; 2], f64),
+    /// particle index -> global box number of its leaf
+    pub assignment: Vec<u64>,
+    /// global box number -> box record
+    pub boxes: BTreeMap<u64, BoxRecord>,
+    /// direct and FMM velocities per particle
+    pub direct: Vec<[f64; 2]>,
+    pub fmm: Vec<[f64; 2]>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct BoxRecord {
+    pub center: [f64; 2],
+    pub n_particles: usize,
+    pub children: Vec<u64>,
+    pub neighbors: Vec<u64>,
+    pub interaction_list: Vec<u64>,
+    pub multipole: Vec<f64>,
+    pub local: Vec<f64>,
+}
+
+impl VerificationFile {
+    /// Build from a tree + solved state (+ optionally a direct solution).
+    pub fn build(
+        tree: &Quadtree,
+        terms: usize,
+        state: &FmmState,
+        direct: Vec<[f64; 2]>,
+    ) -> VerificationFile {
+        let mut assignment = vec![0u64; tree.n_particles()];
+        for leaf in &tree.occupied_leaves {
+            for &i in tree.particles_in(leaf) {
+                assignment[i as usize] = leaf.global_id();
+            }
+        }
+        let mut boxes = BTreeMap::new();
+        for lvl in 0..=tree.levels {
+            for b in tree.occupied_at_level(lvl) {
+                let children: Vec<u64> = if lvl < tree.levels {
+                    b.children().iter().map(BoxId::global_id).collect()
+                } else {
+                    Vec::new()
+                };
+                boxes.insert(
+                    b.global_id(),
+                    BoxRecord {
+                        center: tree.center(&b),
+                        n_particles: if lvl == tree.levels {
+                            tree.particles_in(&b).len()
+                        } else {
+                            0
+                        },
+                        children,
+                        neighbors: neighbors(&b)
+                            .iter()
+                            .map(BoxId::global_id)
+                            .collect(),
+                        interaction_list: interaction_list(&b)
+                            .iter()
+                            .map(BoxId::global_id)
+                            .collect(),
+                        multipole: state
+                            .me
+                            .get(&b)
+                            .cloned()
+                            .unwrap_or_default(),
+                        local: state.le.get(&b).cloned().unwrap_or_default(),
+                    },
+                );
+            }
+        }
+        VerificationFile {
+            levels: tree.levels,
+            terms,
+            n_particles: tree.n_particles(),
+            domain: (tree.domain.origin, tree.domain.size),
+            assignment,
+            boxes,
+            direct,
+            fmm: state.vel.clone(),
+        }
+    }
+
+    /// Serialize to the text format (line-oriented, box order arbitrary
+    /// on read — the paper's "box output may come in any order").
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        writeln!(s, "petfmm-verify 1").unwrap();
+        writeln!(s, "levels {} terms {} particles {} domain {} {} {}",
+                 self.levels, self.terms, self.n_particles,
+                 self.domain.0[0], self.domain.0[1], self.domain.1)
+            .unwrap();
+        write!(s, "assignment").unwrap();
+        for a in &self.assignment {
+            write!(s, " {a}").unwrap();
+        }
+        writeln!(s).unwrap();
+        for (gid, b) in &self.boxes {
+            write!(s, "box {gid} center {} {} np {} children",
+                   b.center[0], b.center[1], b.n_particles)
+                .unwrap();
+            for c in &b.children {
+                write!(s, " {c}").unwrap();
+            }
+            write!(s, " neighbors").unwrap();
+            for c in &b.neighbors {
+                write!(s, " {c}").unwrap();
+            }
+            write!(s, " il").unwrap();
+            for c in &b.interaction_list {
+                write!(s, " {c}").unwrap();
+            }
+            write!(s, " me").unwrap();
+            for c in &b.multipole {
+                write!(s, " {c:.17e}").unwrap();
+            }
+            write!(s, " le").unwrap();
+            for c in &b.local {
+                write!(s, " {c:.17e}").unwrap();
+            }
+            writeln!(s).unwrap();
+        }
+        for (name, vel) in [("direct", &self.direct), ("fmm", &self.fmm)] {
+            write!(s, "{name}").unwrap();
+            for v in vel.iter() {
+                write!(s, " {:.17e} {:.17e}", v[0], v[1]).unwrap();
+            }
+            writeln!(s).unwrap();
+        }
+        s
+    }
+
+    /// Parse the text format back.
+    pub fn from_text(text: &str) -> Result<VerificationFile, String> {
+        let mut lines = text.lines();
+        let header = lines.next().ok_or("empty file")?;
+        if header != "petfmm-verify 1" {
+            return Err(format!("bad header: {header}"));
+        }
+        let meta = lines.next().ok_or("missing meta")?;
+        let tok: Vec<&str> = meta.split_whitespace().collect();
+        let get = |i: usize| -> Result<f64, String> {
+            tok.get(i)
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| format!("bad meta field {i}"))
+        };
+        let levels = get(1)? as u8;
+        let terms = get(3)? as usize;
+        let n_particles = get(5)? as usize;
+        let domain = ([get(7)?, get(8)?], get(9)?);
+        let mut assignment = Vec::new();
+        let mut boxes = BTreeMap::new();
+        let mut direct = Vec::new();
+        let mut fmm = Vec::new();
+        let assn = lines.next().ok_or("missing assignment")?;
+        for t in assn.split_whitespace().skip(1) {
+            assignment.push(t.parse().map_err(|_| "bad assignment")?);
+        }
+        for line in lines {
+            let tok: Vec<&str> = line.split_whitespace().collect();
+            match tok.first() {
+                Some(&"box") => {
+                    let gid: u64 =
+                        tok[1].parse().map_err(|_| "bad gid")?;
+                    let center = [
+                        tok[3].parse().map_err(|_| "bad cx")?,
+                        tok[4].parse().map_err(|_| "bad cy")?,
+                    ];
+                    let np: usize =
+                        tok[6].parse().map_err(|_| "bad np")?;
+                    let mut rec = BoxRecord {
+                        center,
+                        n_particles: np,
+                        children: Vec::new(),
+                        neighbors: Vec::new(),
+                        interaction_list: Vec::new(),
+                        multipole: Vec::new(),
+                        local: Vec::new(),
+                    };
+                    let mut mode = "";
+                    for t in &tok[7..] {
+                        match *t {
+                            "children" | "neighbors" | "il" | "me"
+                            | "le" => mode = t,
+                            v => match mode {
+                                "children" => rec.children.push(
+                                    v.parse().map_err(|_| "bad child")?),
+                                "neighbors" => rec.neighbors.push(
+                                    v.parse().map_err(|_| "bad nb")?),
+                                "il" => rec.interaction_list.push(
+                                    v.parse().map_err(|_| "bad il")?),
+                                "me" => rec.multipole.push(
+                                    v.parse().map_err(|_| "bad me")?),
+                                "le" => rec.local.push(
+                                    v.parse().map_err(|_| "bad le")?),
+                                _ => return Err("value before tag".into()),
+                            },
+                        }
+                    }
+                    boxes.insert(gid, rec);
+                }
+                Some(&"direct") | Some(&"fmm") => {
+                    let vals: Vec<f64> = tok[1..]
+                        .iter()
+                        .map(|t| t.parse().map_err(|_| "bad vel"))
+                        .collect::<Result<_, _>>()?;
+                    let v: Vec<[f64; 2]> = vals
+                        .chunks(2)
+                        .map(|c| [c[0], c[1]])
+                        .collect();
+                    if tok[0] == "direct" {
+                        direct = v;
+                    } else {
+                        fmm = v;
+                    }
+                }
+                _ => return Err(format!("bad line: {line}")),
+            }
+        }
+        Ok(VerificationFile {
+            levels,
+            terms,
+            n_particles,
+            domain,
+            assignment,
+            boxes,
+            direct,
+            fmm,
+        })
+    }
+
+    /// Compare two files; returns human-readable discrepancies.
+    pub fn compare(&self, other: &VerificationFile, tol: f64)
+        -> Vec<String> {
+        let mut issues = Vec::new();
+        if self.levels != other.levels || self.terms != other.terms {
+            issues.push("structure mismatch (levels/terms)".into());
+        }
+        if self.assignment != other.assignment {
+            issues.push("particle assignment differs".into());
+        }
+        let keys: std::collections::BTreeSet<u64> = self
+            .boxes
+            .keys()
+            .chain(other.boxes.keys())
+            .copied()
+            .collect();
+        for gid in keys {
+            match (self.boxes.get(&gid), other.boxes.get(&gid)) {
+                (Some(a), Some(b)) => {
+                    if a.children != b.children
+                        || a.neighbors != b.neighbors
+                        || a.interaction_list != b.interaction_list {
+                        issues.push(format!("box {gid}: topology differs"));
+                    }
+                    for (what, x, y) in [("me", &a.multipole, &b.multipole),
+                                         ("le", &a.local, &b.local)] {
+                        if x.len() != y.len() {
+                            issues.push(format!(
+                                "box {gid}: {what} length differs"));
+                            continue;
+                        }
+                        let scale = x
+                            .iter()
+                            .chain(y.iter())
+                            .fold(1e-30f64, |m, v| m.max(v.abs()));
+                        for (u, v) in x.iter().zip(y) {
+                            if ((u - v) / scale).abs() > tol {
+                                issues.push(format!(
+                                    "box {gid}: {what} differs"));
+                                break;
+                            }
+                        }
+                    }
+                }
+                (a, _) => issues.push(format!(
+                    "box {gid} only in {}",
+                    if a.is_some() { "left" } else { "right" }
+                )),
+            }
+        }
+        for (name, a, b) in [("direct", &self.direct, &other.direct),
+                             ("fmm", &self.fmm, &other.fmm)] {
+            if a.len() != b.len() {
+                issues.push(format!("{name} length differs"));
+                continue;
+            }
+            let scale = a
+                .iter()
+                .chain(b.iter())
+                .flat_map(|v| v.iter())
+                .fold(1e-30f64, |m, v| m.max(v.abs()));
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                if ((x[0] - y[0]) / scale).abs() > tol
+                    || ((x[1] - y[1]) / scale).abs() > tol {
+                    issues.push(format!("{name}[{i}] differs"));
+                    break;
+                }
+            }
+        }
+        issues
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fmm::{direct_all, BiotSavart2D, Evaluator, NativeBackend,
+                     OpDims};
+    use crate::proptest::Gen;
+    use crate::quadtree::Domain;
+
+    fn solved(seed: u64) -> (Quadtree, FmmState, Vec<[f64; 2]>) {
+        let mut g = Gen::new(seed);
+        let parts = g.particles(80);
+        let tree = Quadtree::build(Domain::UNIT, 3, parts.clone());
+        let dims = OpDims { batch: 8, leaf: 8, terms: 6, sigma: 0.02 };
+        let backend = NativeBackend::new(dims, BiotSavart2D::new(0.02));
+        let state = Evaluator::new(&tree, &backend).evaluate();
+        let direct = direct_all(&BiotSavart2D::new(0.02), &parts);
+        (tree, state, direct)
+    }
+
+    #[test]
+    fn roundtrip_text_format() {
+        let (tree, state, direct) = solved(1);
+        let vf = VerificationFile::build(&tree, 6, &state, direct);
+        let text = vf.to_text();
+        let back = VerificationFile::from_text(&text).unwrap();
+        assert_eq!(vf, back);
+    }
+
+    #[test]
+    fn identical_runs_compare_clean() {
+        let (tree, state, direct) = solved(2);
+        let a = VerificationFile::build(&tree, 6, &state, direct.clone());
+        let b = VerificationFile::build(&tree, 6, &state, direct);
+        assert!(a.compare(&b, 1e-12).is_empty());
+    }
+
+    #[test]
+    fn perturbed_run_is_flagged() {
+        let (tree, state, direct) = solved(3);
+        let a = VerificationFile::build(&tree, 6, &state, direct.clone());
+        let mut state2 = state.clone();
+        state2.vel[0][0] += 1.0;
+        let b = VerificationFile::build(&tree, 6, &state2, direct);
+        let issues = a.compare(&b, 1e-12);
+        assert!(issues.iter().any(|i| i.contains("fmm[0]")), "{issues:?}");
+    }
+
+    #[test]
+    fn coefficient_corruption_is_flagged() {
+        let (tree, state, direct) = solved(4);
+        let a = VerificationFile::build(&tree, 6, &state, direct.clone());
+        let mut state2 = state.clone();
+        let key = *state2.me.keys().next().unwrap();
+        state2.me.get_mut(&key).unwrap()[0] *= 2.0;
+        let b = VerificationFile::build(&tree, 6, &state2, direct);
+        let issues = a.compare(&b, 1e-9);
+        assert!(issues.iter().any(|i| i.contains("me differs")),
+                "{issues:?}");
+    }
+}

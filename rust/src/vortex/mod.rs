@@ -1,0 +1,12 @@
+//! Client application (§3, §7.1): the 2D vortex particle method.
+//!
+//! Particles carry circulation γ; their velocity is the Biot–Savart sum
+//! accelerated by the FMM.  The test problem is the Lamb–Oseen vortex
+//! (Eqs. 16–17), initialized exactly as §7.1: particles on a lattice with
+//! spacing h = 0.8 σ, strengths γ_i from the analytic vorticity.
+
+pub mod lamb_oseen;
+pub mod timestep;
+
+pub use lamb_oseen::{lamb_oseen_lattice, LambOseen};
+pub use timestep::{convect, convect_rk2};

@@ -1,0 +1,71 @@
+//! Convection time-stepping for the vortex method (§3): particles move
+//! with their local velocity (Eq. 6 — vorticity is conserved along
+//! trajectories for ideal flow), so a step is x ← x + u Δt.
+
+use crate::quadtree::Particle;
+
+/// One forward-Euler convection step (the paper's client advances
+/// particles with the FMM-computed velocity).
+pub fn convect(parts: &mut [Particle], vel: &[[f64; 2]], dt: f64) {
+    assert_eq!(parts.len(), vel.len());
+    for (p, u) in parts.iter_mut().zip(vel) {
+        p[0] += u[0] * dt;
+        p[1] += u[1] * dt;
+    }
+}
+
+/// Second-order Runge–Kutta (midpoint) step, given a velocity oracle.
+pub fn convect_rk2<F>(parts: &mut Vec<Particle>, dt: f64, mut velocity: F)
+where
+    F: FnMut(&[Particle]) -> Vec<[f64; 2]>,
+{
+    let v1 = velocity(parts);
+    let mut mid = parts.clone();
+    convect(&mut mid, &v1, 0.5 * dt);
+    let v2 = velocity(&mid);
+    convect(parts, &v2, dt);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn convect_moves_particles() {
+        let mut p = vec![[0.0, 0.0, 1.0], [1.0, 1.0, -1.0]];
+        let v = vec![[1.0, 2.0], [-1.0, 0.0]];
+        convect(&mut p, &v, 0.5);
+        assert_eq!(p[0][0..2], [0.5, 1.0]);
+        assert_eq!(p[1][0..2], [0.5, 1.0]);
+        // strengths untouched (vorticity transport, Eq. 6)
+        assert_eq!(p[0][2], 1.0);
+        assert_eq!(p[1][2], -1.0);
+    }
+
+    #[test]
+    fn rk2_exact_for_constant_field() {
+        let mut p = vec![[0.0, 0.0, 1.0]];
+        convect_rk2(&mut p, 1.0, |ps| vec![[2.0, -1.0]; ps.len()]);
+        assert!((p[0][0] - 2.0).abs() < 1e-15);
+        assert!((p[0][1] + 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn rk2_second_order_on_rotation() {
+        // solid-body rotation u = (-y, x): RK2 global error O(dt^2);
+        // dt must divide 2π exactly or endpoint mismatch dominates
+        let run = |steps: usize| {
+            let dt = std::f64::consts::TAU / steps as f64;
+            let mut p = vec![[1.0, 0.0, 1.0]];
+            for _ in 0..steps {
+                convect_rk2(&mut p, dt, |ps| {
+                    ps.iter().map(|q| [-q[1], q[0]]).collect()
+                });
+            }
+            ((p[0][0] - 1.0).powi(2) + p[0][1].powi(2)).sqrt()
+        };
+        let e1 = run(64);
+        let e2 = run(128);
+        assert!(e2 < e1 / 3.0, "convergence order too low: {e1} -> {e2}");
+    }
+}

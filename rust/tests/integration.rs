@@ -1,0 +1,224 @@
+//! End-to-end integration: coordinator pipeline, CLI, config files,
+//! verification format — everything above the unit level that does not
+//! need PJRT artifacts.
+
+use petfmm::comm::threaded::run_threaded;
+use petfmm::config::RunConfig;
+use petfmm::coordinator::{dispatch, make_backend, prepare,
+                          prepare_with_particles, strong_scaling};
+use petfmm::fmm::{direct_all, BiotSavart2D, OpDims};
+use petfmm::partition::Strategy;
+use petfmm::proptest::Gen;
+use petfmm::util::rel_l2_error;
+use petfmm::vortex::{lamb_oseen_lattice, LambOseen};
+
+fn args(v: &[&str]) -> Vec<String> {
+    v.iter().map(|s| s.to_string()).collect()
+}
+
+#[test]
+fn full_pipeline_lattice_accuracy() {
+    // the paper's workload at miniature scale: lattice + optimized
+    // partition + simulated schedule must match direct summation
+    // sigma must be small vs the level-5 leaf width (1/32) or the far
+    // field's 1/z substitution error (the paper's Type I error, §3)
+    // dominates
+    let config = RunConfig {
+        particles: 2_000,
+        levels: 5,
+        terms: 17,
+        sigma: 0.005,
+        ranks: 8,
+        distribution: "lattice".into(),
+        ..Default::default()
+    };
+    let problem = prepare(&config).unwrap();
+    let backend = make_backend(&config).unwrap();
+    let res = problem.simulate(backend.as_ref()).unwrap();
+    let want = direct_all(&BiotSavart2D::new(config.sigma),
+                          &problem.tree.particles);
+    let err = rel_l2_error(&res.vel, &want);
+    assert!(err < 5e-4, "rel err {err}");
+}
+
+#[test]
+fn strong_scaling_shape_holds() {
+    // miniature Fig. 7: speedup grows with P and stays meaningful
+    let config = RunConfig {
+        particles: 4_000,
+        levels: 5,
+        cut_level: 3,
+        terms: 17,
+        distribution: "lattice".into(),
+        ..Default::default()
+    };
+    let backend = make_backend(&config).unwrap();
+    let series =
+        strong_scaling(&config, &[1, 2, 4, 8], backend.as_ref()).unwrap();
+    let t1 = series.serial_time().unwrap();
+    let mut last_speedup = 0.0;
+    for p in &series.points {
+        let s = t1 / p.total_time;
+        assert!(s >= last_speedup * 0.9,
+                "speedup should not collapse: P={} S={s}", p.ranks);
+        last_speedup = s;
+    }
+    let s8 = t1 / series.points.last().unwrap().total_time;
+    assert!(s8 > 3.0, "speedup at P=8 too low: {s8}");
+}
+
+#[test]
+fn optimized_partition_beats_sfc_end_to_end() {
+    // the headline claim at integration level: on a clustered workload
+    // the optimized partition yields a shorter simulated makespan than
+    // the DPMTA-style equal-count SFC partition
+    let mut g = Gen::new(99);
+    let particles = g.clustered_particles(4_000, 2);
+    let base = RunConfig {
+        particles: particles.len(),
+        levels: 6,
+        cut_level: 3,
+        terms: 17,
+        ranks: 8,
+        ..Default::default()
+    };
+    let backend = make_backend(&base).unwrap();
+    let run = |strategy: Strategy| {
+        let cfg = RunConfig { strategy, ..base.clone() };
+        let p = prepare_with_particles(&cfg, particles.clone()).unwrap();
+        let imb = p.assignment.imbalance();
+        let r = p.simulate(backend.as_ref()).unwrap();
+        (r.makespan(), imb)
+    };
+    let (mk_opt, imb_opt) = run(Strategy::Optimized);
+    let (mk_sfc, imb_sfc) = run(Strategy::SfcEqualCount);
+    assert!(mk_opt < mk_sfc,
+            "optimized {mk_opt} should beat sfc {mk_sfc}");
+    // LB(P) is degenerate here (ranks owning only empty subtrees have
+    // exactly zero calibrated compute), so compare weight imbalance
+    assert!(imb_opt < imb_sfc,
+            "imbalance: optimized {imb_opt} vs sfc {imb_sfc}");
+}
+
+#[test]
+fn threaded_and_simulated_runtimes_agree() {
+    // the two parallel execution modes implement the same schedule:
+    // their velocities must agree to reassociation tolerance
+    let mut g = Gen::new(5);
+    let particles = g.particles(400);
+    let config = RunConfig {
+        particles: particles.len(),
+        levels: 4,
+        cut_level: 2,
+        terms: 12,
+        ranks: 4,
+        sigma: 0.01,
+        ..Default::default()
+    };
+    let problem =
+        prepare_with_particles(&config, particles.clone()).unwrap();
+    let backend = make_backend(&config).unwrap();
+    let sim_vel = problem.simulate(backend.as_ref()).unwrap().vel;
+    let dims = OpDims { batch: 64, leaf: 32, terms: 12, sigma: 0.01 };
+    let thr_vel = run_threaded(
+        petfmm::quadtree::Domain::UNIT,
+        config.levels,
+        &particles,
+        &problem.cut,
+        &problem.assignment,
+        dims,
+    );
+    let err = rel_l2_error(&thr_vel, &sim_vel);
+    assert!(err < 1e-11, "threaded vs sim err {err}");
+}
+
+#[test]
+fn lamb_oseen_client_workflow() {
+    // §3/§7.1 client: velocity of the Lamb-Oseen lattice via parallel
+    // FMM matches the smoothed analytic solution in the annulus
+    let vortex = LambOseen::paper_default();
+    let sigma = 0.02;
+    let particles = lamb_oseen_lattice(&vortex, sigma, 0.8, 1.0, 1e-12);
+    let config = RunConfig {
+        particles: particles.len(),
+        levels: 5,
+        terms: 17,
+        sigma,
+        ranks: 8,
+        ..Default::default()
+    };
+    let problem =
+        prepare_with_particles(&config, particles.clone()).unwrap();
+    let backend = make_backend(&config).unwrap();
+    let res = problem.simulate(backend.as_ref()).unwrap();
+    let v_eff = LambOseen {
+        t: vortex.t + sigma * sigma / (2.0 * vortex.nu),
+        ..vortex
+    };
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (p, u) in particles.iter().zip(&res.vel) {
+        let r = ((p[0] - 0.5f64).powi(2) + (p[1] - 0.5).powi(2)).sqrt();
+        if !(0.1..0.35).contains(&r) {
+            continue;
+        }
+        let ua = v_eff.velocity(p[0], p[1]);
+        num += (u[0] - ua[0]).powi(2) + (u[1] - ua[1]).powi(2);
+        den += ua[0] * ua[0] + ua[1] * ua[1];
+    }
+    let rel = (num / den).sqrt();
+    assert!(rel < 0.01, "rel-L2 vs analytic {rel}");
+}
+
+#[test]
+fn cli_end_to_end_with_config_file() {
+    let dir = std::env::temp_dir().join("petfmm-int-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("run.ini");
+    std::fs::write(
+        &cfg_path,
+        "particles = 300\nlevels = 4\nterms = 8\nranks = 4\n\
+         dist = uniform\n",
+    )
+    .unwrap();
+    dispatch(&args(&["run", "--config", cfg_path.to_str().unwrap()]))
+        .unwrap();
+    // CLI override beats file
+    dispatch(&args(&[
+        "run", "--config", cfg_path.to_str().unwrap(), "--particles",
+        "150",
+    ]))
+    .unwrap();
+}
+
+#[test]
+fn verification_flow_serial_vs_parallel() {
+    // §6.2 methodology: dump serial run + parallel run through the file
+    // format and compare
+    use petfmm::verify::VerificationFile;
+    let mut g = Gen::new(31);
+    let particles = g.particles(200);
+    let config = RunConfig {
+        particles: particles.len(),
+        levels: 3,
+        terms: 8,
+        ranks: 3,
+        ..Default::default()
+    };
+    let problem =
+        prepare_with_particles(&config, particles.clone()).unwrap();
+    let backend = make_backend(&config).unwrap();
+    let serial_state = problem.serial(backend.as_ref());
+    let direct = direct_all(&BiotSavart2D::new(config.sigma), &particles);
+    let a = VerificationFile::build(&problem.tree, config.terms,
+                                    &serial_state, direct.clone());
+    // parallel run: swap the parallel velocities into the state (the
+    // simulator reports velocities; expansions follow the same code)
+    let par = problem.simulate(backend.as_ref()).unwrap();
+    let mut par_state = serial_state.clone();
+    par_state.vel = par.vel;
+    let b = VerificationFile::build(&problem.tree, config.terms,
+                                    &par_state, direct);
+    let issues = a.compare(&b, 1e-9);
+    assert!(issues.is_empty(), "{issues:?}");
+}

@@ -1,0 +1,80 @@
+//! Parallel consistency (§6.2): results must be independent of the rank
+//! count, the partition strategy, and the run (determinism) — "even
+//! among parallel runs with different number of processes".
+
+use petfmm::config::RunConfig;
+use petfmm::coordinator::{make_backend, prepare_with_particles};
+use petfmm::partition::Strategy;
+use petfmm::proptest::Gen;
+use petfmm::util::rel_l2_error;
+
+fn base_config(n: usize) -> RunConfig {
+    RunConfig {
+        particles: n,
+        levels: 5,
+        cut_level: 2,
+        terms: 14,
+        ranks: 1,
+        sigma: 0.008,
+        ..Default::default()
+    }
+}
+
+fn run_with(particles: &[[f64; 3]], ranks: usize, strategy: Strategy,
+            seed: u64) -> Vec<[f64; 2]> {
+    let cfg = RunConfig {
+        ranks,
+        strategy,
+        seed,
+        ..base_config(particles.len())
+    };
+    let problem =
+        prepare_with_particles(&cfg, particles.to_vec()).unwrap();
+    let backend = make_backend(&cfg).unwrap();
+    problem.simulate(backend.as_ref()).unwrap().vel
+}
+
+#[test]
+fn results_independent_of_rank_count() {
+    let mut g = Gen::new(1);
+    let particles = g.clustered_particles(800, 3);
+    let reference = run_with(&particles, 1, Strategy::Optimized, 1);
+    for ranks in [2, 3, 4, 8, 16] {
+        let got = run_with(&particles, ranks, Strategy::Optimized, 1);
+        let err = rel_l2_error(&got, &reference);
+        assert!(err < 1e-11, "P={ranks}: err {err}");
+    }
+}
+
+#[test]
+fn results_independent_of_partition_strategy() {
+    let mut g = Gen::new(2);
+    let particles = g.particles(600);
+    let reference =
+        run_with(&particles, 6, Strategy::Optimized, 1);
+    for strategy in [Strategy::SfcEqualCount, Strategy::SfcWeighted,
+                     Strategy::UniformBlock] {
+        let got = run_with(&particles, 6, strategy, 1);
+        let err = rel_l2_error(&got, &reference);
+        assert!(err < 1e-11, "{strategy:?}: err {err}");
+    }
+}
+
+#[test]
+fn runs_are_deterministic() {
+    let mut g = Gen::new(3);
+    let particles = g.particles(500);
+    let a = run_with(&particles, 4, Strategy::Optimized, 7);
+    let b = run_with(&particles, 4, Strategy::Optimized, 7);
+    assert_eq!(a, b, "identical configs must produce identical bits");
+}
+
+#[test]
+fn partition_seed_changes_assignment_not_result() {
+    let mut g = Gen::new(4);
+    let particles = g.clustered_particles(600, 2);
+    let a = run_with(&particles, 5, Strategy::Optimized, 1);
+    let b = run_with(&particles, 5, Strategy::Optimized, 2);
+    let err = rel_l2_error(&a, &b);
+    assert!(err < 1e-11, "seed must not change physics: {err}");
+}

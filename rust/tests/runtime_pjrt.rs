@@ -1,0 +1,109 @@
+//! Cross-layer equivalence: the PJRT artifacts (jax/pallas, AOT-lowered)
+//! must agree with the native rust operators to near machine precision,
+//! and the full FMM through PJRT must match direct summation.
+//!
+//! Requires `make artifacts` (skips cleanly otherwise).
+
+use petfmm::fmm::{direct_all, BiotSavart2D, Evaluator, NativeBackend,
+                  OpsBackend};
+use petfmm::proptest::Gen;
+use petfmm::quadtree::{Domain, Quadtree};
+use petfmm::runtime::PjrtBackend;
+use petfmm::util::rel_l2_error;
+
+fn load_backend() -> Option<PjrtBackend> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(PjrtBackend::load(&dir).expect("loading artifacts"))
+}
+
+fn native_twin(pjrt: &PjrtBackend) -> NativeBackend<BiotSavart2D> {
+    let dims = pjrt.dims();
+    NativeBackend::new(dims, BiotSavart2D::new(dims.sigma))
+}
+
+#[test]
+fn every_operator_matches_native() {
+    let Some(pjrt) = load_backend() else { return };
+    let native = native_twin(&pjrt);
+    let d = pjrt.dims();
+    let mut g = Gen::new(0xA07);
+    let (b, s, p) = (d.batch, d.leaf, d.terms);
+
+    // p2m + l2p + p2p share particle-shaped inputs
+    let parts: Vec<f64> = (0..b * s * 3).map(|_| g.f64_in(0.0, 1.0))
+        .collect();
+    let centers: Vec<f64> = (0..b * 2).map(|_| g.f64_in(0.3, 0.7)).collect();
+    let radius: Vec<f64> = (0..b).map(|_| g.f64_in(0.05, 0.3)).collect();
+    let close = |a: &[f64], b: &[f64], what: &str| {
+        assert_eq!(a.len(), b.len(), "{what} length");
+        let denom = b.iter().fold(1e-30f64, |m, x| m.max(x.abs()));
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(((x - y) / denom).abs() < 1e-9,
+                    "{what}[{i}]: pjrt {x} native {y}");
+        }
+    };
+
+    close(&pjrt.p2m(&parts, &centers, &radius),
+          &native.p2m(&parts, &centers, &radius), "p2m");
+
+    let me: Vec<f64> = (0..b * p * 2).map(|_| g.normal()).collect();
+    let dvec: Vec<f64> = (0..b * 2).map(|_| g.f64_in(-0.5, 0.5)).collect();
+    let rho: Vec<f64> = (0..b).map(|_| 0.5).collect();
+    close(&pjrt.m2m(&me, &dvec, &rho), &native.m2m(&me, &dvec, &rho),
+          "m2m");
+    close(&pjrt.l2l(&me, &dvec, &rho), &native.l2l(&me, &dvec, &rho),
+          "l2l");
+
+    // m2l needs well-separated tau
+    let tau: Vec<f64> = (0..b)
+        .flat_map(|_| {
+            let ang = g.f64_in(0.0, std::f64::consts::TAU);
+            let mag = g.f64_in(2.0, 6.0);
+            [mag * ang.cos(), mag * ang.sin()]
+        })
+        .collect();
+    let inv_r: Vec<f64> = (0..b).map(|_| g.f64_in(1.0, 64.0)).collect();
+    close(&pjrt.m2l(&me, &tau, &inv_r), &native.m2l(&me, &tau, &inv_r),
+          "m2l (pallas)");
+
+    close(&pjrt.l2p(&me, &parts, &centers, &radius),
+          &native.l2p(&me, &parts, &centers, &radius), "l2p");
+
+    let sources: Vec<f64> = (0..b * s * 3).map(|_| g.f64_in(0.0, 1.0))
+        .collect();
+    close(&pjrt.p2p(&parts, &sources), &native.p2p(&parts, &sources),
+          "p2p (pallas)");
+}
+
+#[test]
+fn full_fmm_through_pjrt_matches_direct() {
+    let Some(pjrt) = load_backend() else { return };
+    let mut g = Gen::new(42);
+    let parts = g.particles(400);
+    let tree = Quadtree::build(Domain::UNIT, 3, parts.clone());
+    let ev = Evaluator::new(&tree, &pjrt);
+    let got = ev.evaluate().vel;
+    let want = direct_all(&BiotSavart2D::new(pjrt.dims().sigma), &parts);
+    let err = rel_l2_error(&got, &want);
+    assert!(err < 2e-4, "rel l2 err {err}");
+}
+
+#[test]
+fn pjrt_and_native_full_pipeline_agree_closely() {
+    // stronger than matching direct: both backends run the identical
+    // schedule, so they must agree to ~1e-10 (same math, same order)
+    let Some(pjrt) = load_backend() else { return };
+    let native = native_twin(&pjrt);
+    let mut g = Gen::new(7);
+    let parts = g.clustered_particles(300, 3);
+    let tree = Quadtree::build(Domain::UNIT, 4, parts);
+    let a = Evaluator::new(&tree, &pjrt).evaluate().vel;
+    let b = Evaluator::new(&tree, &native).evaluate().vel;
+    let err = rel_l2_error(&a, &b);
+    assert!(err < 1e-10, "pjrt vs native rel err {err}");
+}
