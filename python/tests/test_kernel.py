@@ -8,6 +8,8 @@ complex arithmetic in test_operators.py).
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import ref

@@ -7,6 +7,9 @@ series — translation/transform identities of DESIGN.md §3.
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile import model

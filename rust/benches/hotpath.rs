@@ -7,8 +7,10 @@
 //! for the §Perf iteration log.
 
 use petfmm::bench::{bench, bench_header, fmt_time};
-use petfmm::fmm::{BiotSavart2D, NativeBackend, OpDims, OpsBackend};
+use petfmm::fmm::{resolve_threads, BiotSavart2D, Evaluator, NativeBackend,
+                  OpDims, OpsBackend, ReferenceEvaluator};
 use petfmm::proptest::Gen;
+use petfmm::quadtree::{Domain, Quadtree};
 use petfmm::runtime::PjrtBackend;
 
 fn rand_buf(g: &mut Gen, n: usize, lo: f64, hi: f64) -> Vec<f64> {
@@ -80,4 +82,42 @@ fn main() {
         println!("  B={batch:>4}: {:>12} per 2048 boxes",
                  fmt_time(res.median()));
     }
+
+    // ---- end-to-end: dense-arena evaluator vs the seed HashMap
+    // evaluator, single- and multi-threaded dispatch ----
+    let n = 20_000usize;
+    println!("\nend-to-end serial solve, {n} particles, L=6, p=17:");
+    let parts = g.particles(n);
+    let tree = Quadtree::build(Domain::UNIT, 6, parts);
+    let dims = OpDims { batch: 64, leaf: 32, terms: 17, sigma: 0.005 };
+    let be = NativeBackend::new(dims, BiotSavart2D::new(dims.sigma));
+
+    let s_ref = bench("seed HashMap evaluator", 1, 5, || {
+        std::hint::black_box(ReferenceEvaluator::new(&tree, &be).evaluate());
+    });
+    println!("{}", s_ref.report());
+
+    let s_arena = bench("arena evaluator (1 thread)", 1, 5, || {
+        std::hint::black_box(Evaluator::new(&tree, &be).evaluate());
+    });
+    println!("{}   [{:.2}x vs seed]", s_arena.report(),
+             s_ref.median() / s_arena.median());
+
+    let cores = resolve_threads(0);
+    let s_par = bench(&format!("arena evaluator ({cores} threads)"), 1, 5,
+                      || {
+        std::hint::black_box(
+            Evaluator::new(&tree, &be).with_threads(0).evaluate(),
+        );
+    });
+    println!("{}   [{:.2}x vs seed]", s_par.report(),
+             s_ref.median() / s_par.median());
+
+    // determinism spot check alongside the numbers
+    let a = Evaluator::new(&tree, &be).evaluate().vel;
+    let b = Evaluator::new(&tree, &be).with_threads(0).evaluate().vel;
+    let r = ReferenceEvaluator::new(&tree, &be).evaluate();
+    assert_eq!(a, b, "thread count changed bits");
+    assert_eq!(a, r, "arena diverged from seed baseline");
+    println!("bitwise: arena(1T) == arena({cores}T) == seed baseline ✓");
 }

@@ -47,22 +47,23 @@ fn main() {
     let backend = NativeBackend::new(dims, BiotSavart2D::new(config.sigma));
     let ev = Evaluator::new(tree, &backend);
     let state = ev.evaluate();
-    let me_bytes: usize =
-        state.me.values().map(|v| v.len() * 8 + 32).sum();
-    let le_bytes: usize =
-        state.le.values().map(|v| v.len() * 8 + 32).sum();
+    // the dense arena allocates 16p bytes for every box of the full
+    // tree (Λ slots), exactly the Table 1 "multipole coefficients" row —
+    // no per-box map overhead at all
+    let me_bytes = state.me.bytes();
+    let le_bytes = state.le.bytes();
     let part_bytes = tree.particles.len() * 24;
-    println!("\nmeasured live structures:");
-    println!("  multipole coefficients: {:>12} bytes ({} boxes)",
-             me_bytes, state.me.len());
-    println!("  local coefficients:     {:>12} bytes ({} boxes)",
-             le_bytes, state.le.len());
-    println!("  particle storage:       {:>12} bytes", part_bytes);
+    println!("\nmeasured live structures (dense arenas):");
+    println!("  multipole arena: {:>12} bytes ({} slots, {} present)",
+             me_bytes, state.me.n_slots(), state.me.n_present());
+    println!("  local arena:     {:>12} bytes ({} slots, {} present)",
+             le_bytes, state.le.n_slots(), state.le.n_present());
+    println!("  particle storage:{:>12} bytes", part_bytes);
     let model_coeff = 16.0 * config.terms as f64;
-    println!("  model says 16p = {:.0} B/box -> measured {:.1} B/box \
-              (plus map overhead)",
+    println!("  model says 16p = {:.0} B/box -> arena {:.1} B/slot \
+              (+1 B presence bit)",
              model_coeff,
-             me_bytes as f64 / state.me.len().max(1) as f64);
+             me_bytes as f64 / state.me.n_slots().max(1) as f64);
 
     // ---- Table 2 (parallel) ----
     println!("\n--- Table 2: parallel memory (per process, bytes) ---");

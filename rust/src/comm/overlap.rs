@@ -9,16 +9,18 @@
 //! * **interaction overlap** — boxes (levels > cut) whose MEs are needed
 //!   by an interaction-list member owned by another rank (M2L exchange).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::partition::Assignment;
 use crate::quadtree::{interaction_list, near_domain, BoxId, Quadtree,
                       TreeCut};
 
 /// Directed overlap: (from_rank, to_rank) -> boxes whose data flows.
+/// Ordered map so every iteration (message sends, flow costing) is
+/// deterministic across runs.
 #[derive(Clone, Debug, Default)]
 pub struct OverlapMap {
-    pub sends: HashMap<(usize, usize), Vec<BoxId>>,
+    pub sends: BTreeMap<(usize, usize), Vec<BoxId>>,
 }
 
 impl OverlapMap {

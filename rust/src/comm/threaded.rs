@@ -138,14 +138,18 @@ fn rank_main(
             expected_halo += boxes.len();
         }
     }
-    let mut halo_parts: Vec<[f64; 3]> = Vec::new();
+    // collect halo particles per leaf, then append them in Morton order
+    // of their leaf (with each leaf's particles in the sender's order —
+    // the global relative order).  Arrival order must not leak into the
+    // local tree, or P2P summation order would vary run to run.
+    let mut halo_by_leaf: HashMap<BoxId, Vec<[f64; 3]>> = HashMap::new();
     let mut inbox: Vec<Envelope> = Vec::new();
     let mut got = 0;
     while got < expected_halo {
         let (from, msg) = rx.recv().expect("recv halo");
         match msg {
-            Message::Particles { parts, .. } => {
-                halo_parts.extend(parts);
+            Message::Particles { leaf, parts } => {
+                halo_by_leaf.entry(leaf).or_default().extend(parts);
                 got += 1;
             }
             other => inbox.push((from, other)), // early arrivals
@@ -157,10 +161,14 @@ fn rank_main(
         my_parts.iter().map(|(p, _)| *p).collect();
     let global_ids: Vec<u32> = my_parts.iter().map(|(_, i)| *i).collect();
     let n_own = local_particles.len();
-    local_particles.extend(halo_parts);
+    let mut halo_leaves: Vec<BoxId> = halo_by_leaf.keys().copied().collect();
+    halo_leaves.sort_by_key(BoxId::morton);
+    for leaf in &halo_leaves {
+        local_particles.extend(halo_by_leaf[leaf].iter().copied());
+    }
     let tree = Quadtree::build(domain, levels, local_particles);
     let ev = Evaluator::new(&tree, &backend);
-    let mut state = FmmState::new(tree.n_particles());
+    let mut state = FmmState::new(levels, dims.terms, tree.n_particles());
 
     // ---- phase B: upward sweep (local) ----
     ev.run_p2m(&plan.leaves[rank], &mut state);
@@ -179,9 +187,8 @@ fn rank_main(
     for st in &occupied_roots {
         let o = owner_of(cut, assignment, st);
         if o == rank && rank != 0 {
-            let me = state.me.get(st).cloned().unwrap_or_else(|| {
-                vec![0.0; dims.terms * 2]
-            });
+            let me = state.me.get(st).map(<[f64]>::to_vec)
+                .unwrap_or_else(|| vec![0.0; dims.terms * 2]);
             txs[0]
                 .send((rank, Message::Multipole { boxid: *st, coeffs: me }))
                 .expect("send reduce");
@@ -202,11 +209,11 @@ fn rank_main(
         for (from, msg) in inbox.drain(..) {
             match msg {
                 Message::Multipole { boxid, coeffs } if *want_mul > 0 => {
-                    accumulate(&mut state.me, boxid, &coeffs);
+                    state.me.accumulate(&boxid, &coeffs);
                     *want_mul -= 1;
                 }
                 Message::Local { boxid, coeffs } if *want_loc > 0 => {
-                    accumulate(&mut state.le, boxid, &coeffs);
+                    state.le.accumulate(&boxid, &coeffs);
                     *want_loc -= 1;
                 }
                 other => rest.push((from, other)),
@@ -217,11 +224,11 @@ fn rank_main(
             let (from, msg) = rx.recv().expect("recv coeffs");
             match msg {
                 Message::Multipole { boxid, coeffs } if *want_mul > 0 => {
-                    accumulate(&mut state.me, boxid, &coeffs);
+                    state.me.accumulate(&boxid, &coeffs);
                     *want_mul -= 1;
                 }
                 Message::Local { boxid, coeffs } if *want_loc > 0 => {
-                    accumulate(&mut state.le, boxid, &coeffs);
+                    state.le.accumulate(&boxid, &coeffs);
                     *want_loc -= 1;
                 }
                 other => inbox.push((from, other)),
@@ -233,18 +240,11 @@ fn rank_main(
         let mut want = expected_root_mes;
         let mut zero = 0usize;
         recv_or_stash(&mut state, &mut inbox, &mut want, &mut zero, &rx);
-        // root sweep
-        for children in &plan.root_m2m_children {
-            ev.run_m2m(children, &mut state);
-        }
-        ev.run_m2l(&plan.root_m2l_pairs, &mut state);
-        for children in &plan.root_l2l_children {
-            ev.run_l2l(children, &mut state);
-        }
+        plan.run_root_sweep(&ev, &mut state);
         // scatter LEs of subtree roots to owners
         for st in &occupied_roots {
             let o = owner_of(cut, assignment, st);
-            let le = state.le.get(st).cloned()
+            let le = state.le.get(st).map(<[f64]>::to_vec)
                 .unwrap_or_else(|| vec![0.0; dims.terms * 2]);
             if o != 0 {
                 txs[o]
@@ -267,7 +267,7 @@ fn rank_main(
                     txs[*to]
                         .send((rank, Message::Multipole {
                             boxid: *b,
-                            coeffs: me.clone(),
+                            coeffs: me.to_vec(),
                         }))
                         .expect("send me exchange");
                 }
@@ -295,8 +295,10 @@ fn rank_main(
         ev.run_l2l(&plan.l2l_children[rank][li], &mut state);
         ev.run_m2l(&plan.m2l_pairs[rank][li], &mut state);
     }
-    ev.run_p2p(&plan.p2p_pairs[rank], &mut state);
+    // L2P before P2P: the serial evaluator's per-particle accumulation
+    // order, so the gathered velocities are bit-identical to a serial run
     ev.run_l2p(&plan.leaves[rank], &mut state);
+    ev.run_p2p(&plan.p2p_pairs[rank], &mut state);
 
     // ---- phase F: gather velocities at rank 0 ----
     // local particle i < n_own corresponds to global_ids[i]; halo
@@ -335,19 +337,6 @@ fn rank_main(
                 .expect("send velocities");
         }
         None
-    }
-}
-
-fn accumulate(dst: &mut HashMap<BoxId, Vec<f64>>, b: BoxId, c: &[f64]) {
-    match dst.entry(b) {
-        std::collections::hash_map::Entry::Occupied(mut e) => {
-            for (d, s) in e.get_mut().iter_mut().zip(c) {
-                *d += s;
-            }
-        }
-        std::collections::hash_map::Entry::Vacant(e) => {
-            e.insert(c.to_vec());
-        }
     }
 }
 

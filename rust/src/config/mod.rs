@@ -37,6 +37,9 @@ pub struct RunConfig {
     pub seed: u64,
     /// artifact directory for the pjrt backend
     pub artifacts: String,
+    /// intra-rank worker threads for evaluator batch dispatch
+    /// (0 = one per host core); results are bit-identical at any setting
+    pub par_threads: usize,
 }
 
 impl Default for RunConfig {
@@ -54,6 +57,7 @@ impl Default for RunConfig {
             backend: "native".into(),
             seed: 1,
             artifacts: "artifacts".into(),
+            par_threads: 0,
         }
     }
 }
@@ -99,6 +103,9 @@ impl RunConfig {
             "backend" => self.backend = value.into(),
             "seed" => self.seed = value.parse()?,
             "artifacts" => self.artifacts = value.into(),
+            "par-threads" | "par_threads" | "threads" => {
+                self.par_threads = value.parse()?
+            }
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -155,10 +162,15 @@ impl RunConfig {
     pub fn summary(&self) -> String {
         format!(
             "N={} L={} k={} p={} sigma={} P={} strategy={} network={} \
-             dist={} backend={} seed={}",
+             dist={} backend={} seed={} threads={}",
             self.particles, self.levels, self.effective_cut(), self.terms,
             self.sigma, self.ranks, self.strategy.name(), self.network,
-            self.distribution, self.backend, self.seed
+            self.distribution, self.backend, self.seed,
+            if self.par_threads == 0 {
+                "auto".to_string()
+            } else {
+                self.par_threads.to_string()
+            }
         )
     }
 }
@@ -209,6 +221,17 @@ mod tests {
         assert_eq!(c.ranks, 16);
         assert_eq!(c.terms, 5);
         assert_eq!(c.distribution, "clustered");
+    }
+
+    #[test]
+    fn par_threads_knob_parses() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.par_threads, 0); // auto by default
+        c.set("threads", "3").unwrap();
+        assert_eq!(c.par_threads, 3);
+        c.apply_ini("par-threads = 8\n").unwrap();
+        assert_eq!(c.par_threads, 8);
+        assert!(c.summary().contains("threads=8"));
     }
 
     #[test]

@@ -41,6 +41,7 @@ COMMON FLAGS (defaults in brackets)
   --dist D          [lattice|uniform|clustered]
   --backend B       [native|pjrt]        --artifacts DIR [artifacts]
   --config FILE     INI-style config file        --seed N [1]
+  --threads T       evaluator worker pool, 0 = one per core [0]
   scale only: --ranks-list 1,4,8,16,32,64
   run only:   --dump FILE (write verification file)
 ";

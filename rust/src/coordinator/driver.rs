@@ -111,7 +111,8 @@ impl Problem {
             &self.assignment,
             backend,
             self.config.network_model()?,
-        );
+        )
+        .with_threads(self.config.par_threads);
         if let Some(c) = costs {
             sim = sim.with_costs(c);
         }
@@ -120,7 +121,9 @@ impl Problem {
 
     /// Run the plain serial evaluator (no parallel machinery).
     pub fn serial(&self, backend: &dyn OpsBackend) -> FmmState {
-        Evaluator::new(&self.tree, backend).evaluate()
+        Evaluator::new(&self.tree, backend)
+            .with_threads(self.config.par_threads)
+            .evaluate()
     }
 }
 

@@ -1,0 +1,197 @@
+//! Dense level-offset expansion storage: the [`ExpansionArena`].
+//!
+//! The evaluator's mutable state used to be `HashMap<BoxId, Vec<f64>>`
+//! per expansion kind — one heap allocation per box, hashing on every
+//! access, and (worse for the §6.2 consistency contract) iteration order
+//! that varies run to run.  The arena replaces it with one contiguous
+//! `Vec<f64>` per expansion kind covering *every* box of the conceptual
+//! full tree, laid out level-major in Morton order.  Box → slot is pure
+//! arithmetic ([`BoxId::global_id`]: level offset `(4^l - 1)/3` plus the
+//! Morton rank within the level), so the hot accumulation loops do no
+//! hashing and no allocation, and the summation order is fixed by the
+//! task order alone — the precondition for bitwise-identical serial and
+//! parallel runs.
+//!
+//! A `present` bitmap preserves the sparse-map semantics the stage
+//! runners rely on (`contains` gates M2M/M2L/L2L/L2P on boxes that have
+//! actually received data, keeping [`super::evaluator::OpCounts`] exact).
+
+use crate::quadtree::BoxId;
+
+/// Dense per-run storage for one expansion kind (ME or LE).
+#[derive(Clone, Debug)]
+pub struct ExpansionArena {
+    levels: u8,
+    terms: usize,
+    /// `total_slots * terms * 2` coefficients (complex, interleaved),
+    /// slot = `BoxId::global_id()`.
+    coeffs: Vec<f64>,
+    /// Which slots have received at least one accumulation.
+    present: Vec<bool>,
+}
+
+impl ExpansionArena {
+    /// Arena covering all boxes of a depth-`levels` quadtree with `terms`
+    /// complex coefficients per box.
+    ///
+    /// Storage is dense over the *full* tree — the deliberate trade-off
+    /// that buys arithmetic indexing (see module docs).  That is ~16p·4^L
+    /// bytes, a few MB at the depths the experiments use (L ≤ 8); it is
+    /// the wrong structure for very deep sparse trees, so depth is
+    /// checked loudly here instead of failing as an opaque OOM (or a
+    /// wrapped shift) far from the cause.
+    pub fn new(levels: u8, terms: usize) -> Self {
+        assert!(
+            levels <= 12,
+            "ExpansionArena is dense over the full tree: levels = {levels} \
+             would allocate (4^{} - 1)/3 slots x {} B; use a shallower \
+             tree or add compact per-occupancy storage first",
+            levels as u32 + 1,
+            terms * 16,
+        );
+        let slots = Self::total_slots(levels);
+        ExpansionArena {
+            levels,
+            terms,
+            coeffs: vec![0.0; slots * terms * 2],
+            present: vec![false; slots],
+        }
+    }
+
+    /// Λ = (4^(L+1) - 1)/3 boxes in the full tree (paper §5.3).
+    fn total_slots(levels: u8) -> usize {
+        (((1u64 << (2 * (levels as u64 + 1))) - 1) / 3) as usize
+    }
+
+    #[inline]
+    fn slot(&self, b: &BoxId) -> usize {
+        debug_assert!(b.level <= self.levels, "box {b:?} beyond arena depth");
+        b.global_id() as usize
+    }
+
+    pub fn terms(&self) -> usize {
+        self.terms
+    }
+
+    pub fn levels(&self) -> u8 {
+        self.levels
+    }
+
+    /// Total slots (present or not).
+    pub fn n_slots(&self) -> usize {
+        self.present.len()
+    }
+
+    /// Boxes that have received data.
+    pub fn n_present(&self) -> usize {
+        self.present.iter().filter(|&&p| p).count()
+    }
+
+    /// Resident bytes of the coefficient store + bitmap.
+    pub fn bytes(&self) -> usize {
+        self.coeffs.len() * 8 + self.present.len()
+    }
+
+    /// Whether `b` has received at least one accumulation.
+    #[inline]
+    pub fn contains(&self, b: &BoxId) -> bool {
+        self.present[self.slot(b)]
+    }
+
+    /// Coefficients of `b`, if any accumulation happened.
+    #[inline]
+    pub fn get(&self, b: &BoxId) -> Option<&[f64]> {
+        let s = self.slot(b);
+        if self.present[s] {
+            let w = self.terms * 2;
+            Some(&self.coeffs[s * w..(s + 1) * w])
+        } else {
+            None
+        }
+    }
+
+    /// Mutable coefficients of `b`, if present.
+    #[inline]
+    pub fn get_mut(&mut self, b: &BoxId) -> Option<&mut [f64]> {
+        let s = self.slot(b);
+        if self.present[s] {
+            let w = self.terms * 2;
+            Some(&mut self.coeffs[s * w..(s + 1) * w])
+        } else {
+            None
+        }
+    }
+
+    /// Add `c` (length `2 * terms`) into the slot of `b`, marking it
+    /// present.  Pure arithmetic indexing; no hashing, no allocation.
+    #[inline]
+    pub fn accumulate(&mut self, b: &BoxId, c: &[f64]) {
+        let w = self.terms * 2;
+        debug_assert_eq!(c.len(), w, "coefficient block length");
+        let s = self.slot(b);
+        self.present[s] = true;
+        let dst = &mut self.coeffs[s * w..(s + 1) * w];
+        for (d, v) in dst.iter_mut().zip(c) {
+            *d += v;
+        }
+    }
+
+    /// Present boxes in global-id order (level-major, Morton within each
+    /// level) — the deterministic iteration the verification format and
+    /// the memory instrumentation use.
+    pub fn present_boxes(&self) -> Vec<BoxId> {
+        self.present
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p)
+            .map(|(i, _)| BoxId::from_global_id(i as u64))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_is_global_id_arithmetic() {
+        let a = ExpansionArena::new(3, 4);
+        // (4^4 - 1)/3 = 85 boxes for L = 3
+        assert_eq!(a.n_slots(), 85);
+        assert_eq!(a.slot(&BoxId::ROOT), 0);
+        assert_eq!(a.slot(&BoxId::new(1, 1, 1)), 4);
+        assert_eq!(a.slot(&BoxId::new(2, 0, 0)), 5);
+    }
+
+    #[test]
+    fn accumulate_sums_and_marks_present() {
+        let mut a = ExpansionArena::new(2, 2);
+        let b = BoxId::new(2, 1, 1);
+        assert!(!a.contains(&b));
+        assert!(a.get(&b).is_none());
+        a.accumulate(&b, &[1.0, 2.0, 3.0, 4.0]);
+        a.accumulate(&b, &[0.5, 0.5, 0.5, 0.5]);
+        assert!(a.contains(&b));
+        assert_eq!(a.get(&b).unwrap(), &[1.5, 2.5, 3.5, 4.5]);
+        assert_eq!(a.n_present(), 1);
+    }
+
+    #[test]
+    fn present_boxes_in_global_order() {
+        let mut a = ExpansionArena::new(2, 1);
+        let hi = BoxId::new(2, 3, 3);
+        let lo = BoxId::new(1, 0, 0);
+        a.accumulate(&hi, &[1.0, 0.0]);
+        a.accumulate(&lo, &[1.0, 0.0]);
+        assert_eq!(a.present_boxes(), vec![lo, hi]);
+    }
+
+    #[test]
+    fn get_mut_edits_in_place() {
+        let mut a = ExpansionArena::new(1, 1);
+        let b = BoxId::new(1, 0, 1);
+        a.accumulate(&b, &[2.0, -2.0]);
+        a.get_mut(&b).unwrap()[0] = 7.0;
+        assert_eq!(a.get(&b).unwrap(), &[7.0, -2.0]);
+    }
+}

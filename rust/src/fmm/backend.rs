@@ -41,6 +41,15 @@ pub struct OpDims {
 pub trait OpsBackend {
     fn dims(&self) -> OpDims;
 
+    /// Thread-safe view of this backend for parallel batch dispatch, or
+    /// `None` when it must stay on one thread (PJRT executable handles
+    /// are thread-local by construction).  The evaluator's worker pool
+    /// only engages when a view is available, so correctness never
+    /// depends on it.
+    fn sync_view(&self) -> Option<&(dyn OpsBackend + Sync)> {
+        None
+    }
+
     fn p2m(&self, particles: &[f64], centers: &[f64], radius: &[f64])
         -> Vec<f64>;
     fn m2m(&self, me: &[f64], d: &[f64], rho: &[f64]) -> Vec<f64>;

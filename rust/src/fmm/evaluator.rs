@@ -10,42 +10,39 @@
 //! (B boxes x S particle slots) and scatters results back; leaves holding
 //! more than S particles are processed in chunks of S, so arbitrary
 //! occupancy is supported with fixed artifacts.
+//!
+//! Determinism contract (DESIGN.md §Determinism): expansion state lives
+//! in a dense [`ExpansionArena`] (box → slot is arithmetic, no hashing),
+//! task lists arrive in Morton order, and each runner splits into
+//! 1. *assemble + compute* — pure per-batch work, parallelized across
+//!    batch chunks with a scoped worker pool when the backend is
+//!    thread-safe ([`OpsBackend::sync_view`], `par_threads` knob), then
+//! 2. *scatter* — sequential accumulation in task order.
+//! Result: velocities are bit-identical for any thread count, rank
+//! count, or partition strategy.
 
-use std::collections::HashMap;
-
+use super::arena::ExpansionArena;
 use super::backend::OpsBackend;
 use crate::quadtree::{interaction_list, near_domain, BoxId, Quadtree};
 
-/// Mutable solution state: expansions per box + per-particle velocities.
-#[derive(Clone, Debug, Default)]
+/// Mutable solution state: dense expansion arenas + per-particle
+/// velocities.
+#[derive(Clone, Debug)]
 pub struct FmmState {
-    /// Scaled multipole coefficients, flattened (P,2) per box.
-    pub me: HashMap<BoxId, Vec<f64>>,
-    /// Scaled local coefficients, flattened (P,2) per box.
-    pub le: HashMap<BoxId, Vec<f64>>,
+    /// Scaled multipole coefficients, (P,2) per box slot.
+    pub me: ExpansionArena,
+    /// Scaled local coefficients, (P,2) per box slot.
+    pub le: ExpansionArena,
     /// Output velocities, one per particle.
     pub vel: Vec<[f64; 2]>,
 }
 
 impl FmmState {
-    pub fn new(n_particles: usize) -> Self {
+    pub fn new(levels: u8, terms: usize, n_particles: usize) -> Self {
         FmmState {
-            me: HashMap::new(),
-            le: HashMap::new(),
+            me: ExpansionArena::new(levels, terms),
+            le: ExpansionArena::new(levels, terms),
             vel: vec![[0.0; 2]; n_particles],
-        }
-    }
-
-    fn accumulate(dst: &mut HashMap<BoxId, Vec<f64>>, b: BoxId, c: &[f64]) {
-        match dst.entry(b) {
-            std::collections::hash_map::Entry::Occupied(mut e) => {
-                for (d, s) in e.get_mut().iter_mut().zip(c) {
-                    *d += s;
-                }
-            }
-            std::collections::hash_map::Entry::Vacant(e) => {
-                e.insert(c.to_vec());
-            }
         }
     }
 }
@@ -76,20 +73,41 @@ pub struct Evaluator<'a> {
     pub tree: &'a Quadtree,
     pub backend: &'a dyn OpsBackend,
     pub counts: std::cell::Cell<OpCounts>,
+    /// Worker count for batch dispatch (resolved; >= 1).
+    threads: usize,
 }
 
 impl<'a> Evaluator<'a> {
     pub fn new(tree: &'a Quadtree, backend: &'a dyn OpsBackend) -> Self {
-        Evaluator { tree, backend, counts: Default::default() }
+        Evaluator {
+            tree,
+            backend,
+            counts: Default::default(),
+            threads: 1,
+        }
     }
 
+    /// Set the batch-dispatch worker count; 0 = one worker per host core.
+    /// Results are bit-identical for every setting (compute is pure, the
+    /// scatter stays sequential in task order).
+    pub fn with_threads(mut self, n: usize) -> Self {
+        self.threads = resolve_threads(n);
+        self
+    }
 
-    /// Particle chunks of a leaf, each at most S slots, padded with
-    /// `gamma = 0` at the box center.
+    /// Particle chunks of an occupied leaf, each at most S slots, padded
+    /// with `gamma = 0` at the box center.  Callers must skip unoccupied
+    /// leaves — emitting padded all-zero batches for them would inflate
+    /// [`OpCounts`] and skew the §5.2 work-model validation.
     fn leaf_chunks(&self, leaf: &BoxId) -> Vec<(Vec<f64>, Vec<u32>)> {
         let s = self.backend.dims().leaf;
         let c = self.tree.center(leaf);
         let idxs = self.tree.particles_in(leaf);
+        assert!(
+            !idxs.is_empty(),
+            "leaf_chunks on unoccupied leaf {leaf:?}: callers must skip \
+             empty leaves"
+        );
         let mut out = Vec::new();
         for chunk in idxs.chunks(s.max(1)) {
             let mut buf = vec![0.0; s * 3];
@@ -106,16 +124,6 @@ impl<'a> Evaluator<'a> {
             }
             out.push((buf, chunk.to_vec()));
         }
-        if out.is_empty() {
-            // an unoccupied leaf still needs a representation when it is a
-            // p2p source pair target — callers skip those, but be safe
-            let mut buf = vec![0.0; s * 3];
-            for j in 0..s {
-                buf[j * 3] = c[0];
-                buf[j * 3 + 1] = c[1];
-            }
-            out.push((buf, Vec::new()));
-        }
         out
     }
 
@@ -125,6 +133,37 @@ impl<'a> Evaluator<'a> {
         self.counts.set(c);
     }
 
+    /// Assemble-and-compute `n_groups` fixed-shape batches.  `assemble`
+    /// must be pure (read-only state); outputs come back in group order.
+    /// Runs on the scoped worker pool when the backend is thread-safe.
+    fn run_groups<F>(&self, n_groups: usize, assemble: F) -> Vec<Vec<f64>>
+    where
+        F: Fn(&dyn OpsBackend, usize) -> Vec<f64> + Sync,
+    {
+        if n_groups == 0 {
+            return Vec::new();
+        }
+        let workers = self.threads.min(n_groups);
+        if workers > 1 {
+            if let Some(be) = self.backend.sync_view() {
+                let mut out: Vec<Vec<f64>> = vec![Vec::new(); n_groups];
+                let chunk = n_groups.div_ceil(workers);
+                std::thread::scope(|s| {
+                    for (t, slice) in out.chunks_mut(chunk).enumerate() {
+                        let assemble = &assemble;
+                        s.spawn(move || {
+                            for (j, dst) in slice.iter_mut().enumerate() {
+                                *dst = assemble(be, t * chunk + j);
+                            }
+                        });
+                    }
+                });
+                return out;
+            }
+        }
+        (0..n_groups).map(|i| assemble(self.backend, i)).collect()
+    }
+
     // ------------------------------------------------------------------
     // stage runners
     // ------------------------------------------------------------------
@@ -132,7 +171,7 @@ impl<'a> Evaluator<'a> {
     /// P2M over a set of occupied leaves: builds `state.me` at leaf level.
     pub fn run_p2m(&self, leaves: &[BoxId], state: &mut FmmState) {
         let dims = self.backend.dims();
-        let (b, p) = (dims.batch, dims.terms);
+        let (b, p, s) = (dims.batch, dims.terms, dims.leaf);
         // flatten (leaf, chunk) tasks
         let mut tasks: Vec<(BoxId, Vec<f64>)> = Vec::new();
         for leaf in leaves {
@@ -143,25 +182,33 @@ impl<'a> Evaluator<'a> {
                 tasks.push((*leaf, buf));
             }
         }
-        for group in tasks.chunks(b) {
-            let mut parts = vec![0.0; b * dims.leaf * 3];
+        if tasks.is_empty() {
+            return;
+        }
+        let groups: Vec<&[(BoxId, Vec<f64>)]> = tasks.chunks(b).collect();
+        let tree = self.tree;
+        let outs = self.run_groups(groups.len(), |be, gi| {
+            let group = groups[gi];
+            let mut parts = vec![0.0; b * s * 3];
             let mut centers = vec![0.0; b * 2];
             let mut radius = vec![1.0; b];
             for (t, (leaf, buf)) in group.iter().enumerate() {
-                parts[t * dims.leaf * 3..(t + 1) * dims.leaf * 3]
-                    .copy_from_slice(buf);
-                let c = self.tree.center(leaf);
+                parts[t * s * 3..(t + 1) * s * 3].copy_from_slice(buf);
+                let c = tree.center(leaf);
                 centers[t * 2] = c[0];
                 centers[t * 2 + 1] = c[1];
-                radius[t] = self.tree.radius(leaf);
+                radius[t] = tree.radius(leaf);
             }
-            let out = self.backend.p2m(&parts, &centers, &radius);
+            be.p2m(&parts, &centers, &radius)
+        });
+        for (group, out) in groups.iter().zip(&outs) {
             for (t, (leaf, _)) in group.iter().enumerate() {
-                FmmState::accumulate(
-                    &mut state.me, *leaf,
-                    &out[t * p * 2..(t + 1) * p * 2]);
+                state.me.accumulate(leaf, &out[t * p * 2..(t + 1) * p * 2]);
             }
-            self.bump(|c| { c.p2m += group.len() as u64; c.p2m_batches += 1; });
+            self.bump(|c| {
+                c.p2m += group.len() as u64;
+                c.p2m_batches += 1;
+            });
         }
     }
 
@@ -171,32 +218,44 @@ impl<'a> Evaluator<'a> {
         let (b, p) = (dims.batch, dims.terms);
         let tasks: Vec<BoxId> = children
             .iter()
-            .filter(|c| state.me.contains_key(c))
+            .filter(|c| state.me.contains(c))
             .copied()
             .collect();
-        for group in tasks.chunks(b) {
+        if tasks.is_empty() {
+            return;
+        }
+        let groups: Vec<&[BoxId]> = tasks.chunks(b).collect();
+        let tree = self.tree;
+        let me_arena = &state.me;
+        let outs = self.run_groups(groups.len(), |be, gi| {
+            let group = groups[gi];
             let mut me = vec![0.0; b * p * 2];
             let mut d = vec![0.0; b * 2];
             let mut rho = vec![0.5; b];
             for (t, child) in group.iter().enumerate() {
                 me[t * p * 2..(t + 1) * p * 2]
-                    .copy_from_slice(&state.me[child]);
+                    .copy_from_slice(me_arena.get(child).expect("filtered"));
                 let parent = child.parent().expect("child has parent");
-                let cc = self.tree.center(child);
-                let cp = self.tree.center(&parent);
-                let rp = self.tree.radius(&parent);
+                let cc = tree.center(child);
+                let cp = tree.center(&parent);
+                let rp = tree.radius(&parent);
                 d[t * 2] = (cc[0] - cp[0]) / rp;
                 d[t * 2 + 1] = (cc[1] - cp[1]) / rp;
-                rho[t] = self.tree.radius(child) / rp;
+                rho[t] = tree.radius(child) / rp;
             }
-            let out = self.backend.m2m(&me, &d, &rho);
+            be.m2m(&me, &d, &rho)
+        });
+        for (group, out) in groups.iter().zip(&outs) {
             for (t, child) in group.iter().enumerate() {
                 let parent = child.parent().unwrap();
-                FmmState::accumulate(
-                    &mut state.me, parent,
-                    &out[t * p * 2..(t + 1) * p * 2]);
+                state
+                    .me
+                    .accumulate(&parent, &out[t * p * 2..(t + 1) * p * 2]);
             }
-            self.bump(|c| { c.m2m += group.len() as u64; c.m2m_batches += 1; });
+            self.bump(|c| {
+                c.m2m += group.len() as u64;
+                c.m2m_batches += 1;
+            });
         }
     }
 
@@ -205,32 +264,43 @@ impl<'a> Evaluator<'a> {
     pub fn run_m2l(&self, pairs: &[(BoxId, BoxId)], state: &mut FmmState) {
         let dims = self.backend.dims();
         let (b, p) = (dims.batch, dims.terms);
-        let tasks: Vec<&(BoxId, BoxId)> = pairs
+        let tasks: Vec<(BoxId, BoxId)> = pairs
             .iter()
-            .filter(|(_, src)| state.me.contains_key(src))
+            .filter(|(_, src)| state.me.contains(src))
+            .copied()
             .collect();
-        for group in tasks.chunks(b) {
+        if tasks.is_empty() {
+            return;
+        }
+        let groups: Vec<&[(BoxId, BoxId)]> = tasks.chunks(b).collect();
+        let tree = self.tree;
+        let me_arena = &state.me;
+        let outs = self.run_groups(groups.len(), |be, gi| {
+            let group = groups[gi];
             let mut me = vec![0.0; b * p * 2];
             let mut tau = vec![2.0; b * 2]; // harmless padding (|tau|=2)
             let mut inv_r = vec![1.0; b];
             for (t, (tgt, src)) in group.iter().enumerate() {
                 debug_assert_eq!(tgt.level, src.level);
                 me[t * p * 2..(t + 1) * p * 2]
-                    .copy_from_slice(&state.me[src]);
-                let cs = self.tree.center(src);
-                let ct = self.tree.center(tgt);
-                let r = self.tree.radius(src);
+                    .copy_from_slice(me_arena.get(src).expect("filtered"));
+                let cs = tree.center(src);
+                let ct = tree.center(tgt);
+                let r = tree.radius(src);
                 tau[t * 2] = (cs[0] - ct[0]) / r;
                 tau[t * 2 + 1] = (cs[1] - ct[1]) / r;
                 inv_r[t] = 1.0 / r;
             }
-            let out = self.backend.m2l(&me, &tau, &inv_r);
+            be.m2l(&me, &tau, &inv_r)
+        });
+        for (group, out) in groups.iter().zip(&outs) {
             for (t, (tgt, _)) in group.iter().enumerate() {
-                FmmState::accumulate(
-                    &mut state.le, *tgt,
-                    &out[t * p * 2..(t + 1) * p * 2]);
+                state.le.accumulate(tgt, &out[t * p * 2..(t + 1) * p * 2]);
             }
-            self.bump(|c| { c.m2l += group.len() as u64; c.m2l_batches += 1; });
+            self.bump(|c| {
+                c.m2l += group.len() as u64;
+                c.m2l_batches += 1;
+            });
         }
     }
 
@@ -242,32 +312,43 @@ impl<'a> Evaluator<'a> {
         let tasks: Vec<BoxId> = children
             .iter()
             .filter(|c| {
-                c.parent().map_or(false, |pa| state.le.contains_key(&pa))
+                c.parent().map_or(false, |pa| state.le.contains(&pa))
             })
             .copied()
             .collect();
-        for group in tasks.chunks(b) {
+        if tasks.is_empty() {
+            return;
+        }
+        let groups: Vec<&[BoxId]> = tasks.chunks(b).collect();
+        let tree = self.tree;
+        let le_arena = &state.le;
+        let outs = self.run_groups(groups.len(), |be, gi| {
+            let group = groups[gi];
             let mut le = vec![0.0; b * p * 2];
             let mut d = vec![0.0; b * 2];
             let mut rho = vec![0.5; b];
             for (t, child) in group.iter().enumerate() {
                 let parent = child.parent().unwrap();
-                le[t * p * 2..(t + 1) * p * 2]
-                    .copy_from_slice(&state.le[&parent]);
-                let cc = self.tree.center(child);
-                let cp = self.tree.center(&parent);
-                let rp = self.tree.radius(&parent);
+                le[t * p * 2..(t + 1) * p * 2].copy_from_slice(
+                    le_arena.get(&parent).expect("filtered"),
+                );
+                let cc = tree.center(child);
+                let cp = tree.center(&parent);
+                let rp = tree.radius(&parent);
                 d[t * 2] = (cc[0] - cp[0]) / rp;
                 d[t * 2 + 1] = (cc[1] - cp[1]) / rp;
-                rho[t] = self.tree.radius(child) / rp;
+                rho[t] = tree.radius(child) / rp;
             }
-            let out = self.backend.l2l(&le, &d, &rho);
+            be.l2l(&le, &d, &rho)
+        });
+        for (group, out) in groups.iter().zip(&outs) {
             for (t, child) in group.iter().enumerate() {
-                FmmState::accumulate(
-                    &mut state.le, *child,
-                    &out[t * p * 2..(t + 1) * p * 2]);
+                state.le.accumulate(child, &out[t * p * 2..(t + 1) * p * 2]);
             }
-            self.bump(|c| { c.l2l += group.len() as u64; c.l2l_batches += 1; });
+            self.bump(|c| {
+                c.l2l += group.len() as u64;
+                c.l2l_batches += 1;
+            });
         }
     }
 
@@ -278,36 +359,50 @@ impl<'a> Evaluator<'a> {
         let (b, p, s) = (dims.batch, dims.terms, dims.leaf);
         let mut tasks: Vec<(BoxId, Vec<f64>, Vec<u32>)> = Vec::new();
         for leaf in leaves {
-            if !state.le.contains_key(leaf)
-                || self.tree.particles_in(leaf).is_empty() {
+            if !state.le.contains(leaf)
+                || self.tree.particles_in(leaf).is_empty()
+            {
                 continue;
             }
             for (buf, idx) in self.leaf_chunks(leaf) {
                 tasks.push((*leaf, buf, idx));
             }
         }
-        for group in tasks.chunks(b) {
+        if tasks.is_empty() {
+            return;
+        }
+        let groups: Vec<&[(BoxId, Vec<f64>, Vec<u32>)]> =
+            tasks.chunks(b).collect();
+        let tree = self.tree;
+        let le_arena = &state.le;
+        let outs = self.run_groups(groups.len(), |be, gi| {
+            let group = groups[gi];
             let mut le = vec![0.0; b * p * 2];
             let mut parts = vec![0.0; b * s * 3];
             let mut centers = vec![0.0; b * 2];
             let mut radius = vec![1.0; b];
             for (t, (leaf, buf, _)) in group.iter().enumerate() {
                 le[t * p * 2..(t + 1) * p * 2]
-                    .copy_from_slice(&state.le[leaf]);
+                    .copy_from_slice(le_arena.get(leaf).expect("filtered"));
                 parts[t * s * 3..(t + 1) * s * 3].copy_from_slice(buf);
-                let c = self.tree.center(leaf);
+                let c = tree.center(leaf);
                 centers[t * 2] = c[0];
                 centers[t * 2 + 1] = c[1];
-                radius[t] = self.tree.radius(leaf);
+                radius[t] = tree.radius(leaf);
             }
-            let out = self.backend.l2p(&le, &parts, &centers, &radius);
+            be.l2p(&le, &parts, &centers, &radius)
+        });
+        for (group, out) in groups.iter().zip(&outs) {
             for (t, (_, _, idx)) in group.iter().enumerate() {
                 for (j, &i) in idx.iter().enumerate() {
                     state.vel[i as usize][0] += out[(t * s + j) * 2];
                     state.vel[i as usize][1] += out[(t * s + j) * 2 + 1];
                 }
             }
-            self.bump(|c| { c.l2p += group.len() as u64; c.l2p_batches += 1; });
+            self.bump(|c| {
+                c.l2p += group.len() as u64;
+                c.l2p_batches += 1;
+            });
         }
     }
 
@@ -337,14 +432,22 @@ impl<'a> Evaluator<'a> {
                 }
             }
         }
-        for group in tasks.chunks(b) {
+        if tasks.is_empty() {
+            return;
+        }
+        let groups: Vec<&[(Vec<f64>, Vec<u32>, Vec<f64>, u64)]> =
+            tasks.chunks(b).collect();
+        let outs = self.run_groups(groups.len(), |be, gi| {
+            let group = groups[gi];
             let mut targets = vec![0.0; b * s * 3];
             let mut sources = vec![0.0; b * s * 3];
             for (t, (tbuf, _, sbuf, _)) in group.iter().enumerate() {
                 targets[t * s * 3..(t + 1) * s * 3].copy_from_slice(tbuf);
                 sources[t * s * 3..(t + 1) * s * 3].copy_from_slice(sbuf);
             }
-            let out = self.backend.p2p(&targets, &sources);
+            be.p2p(&targets, &sources)
+        });
+        for (group, out) in groups.iter().zip(&outs) {
             for (t, (_, tidx, _, npairs)) in group.iter().enumerate() {
                 for (j, &i) in tidx.iter().enumerate() {
                     state.vel[i as usize][0] += out[(t * s + j) * 2];
@@ -353,7 +456,10 @@ impl<'a> Evaluator<'a> {
                 let np = *npairs;
                 self.bump(|c| c.p2p_pairs += np);
             }
-            self.bump(|c| { c.p2p += group.len() as u64; c.p2p_batches += 1; });
+            self.bump(|c| {
+                c.p2p += group.len() as u64;
+                c.p2p_batches += 1;
+            });
         }
     }
 
@@ -363,7 +469,12 @@ impl<'a> Evaluator<'a> {
 
     /// Run the complete serial FMM and return the solution state.
     pub fn evaluate(&self) -> FmmState {
-        let mut state = FmmState::new(self.tree.n_particles());
+        let terms = self.backend.dims().terms;
+        let mut state = FmmState::new(
+            self.tree.levels,
+            terms,
+            self.tree.n_particles(),
+        );
         let levels = self.tree.levels;
 
         // ---- upward sweep ----
@@ -389,7 +500,7 @@ impl<'a> Evaluator<'a> {
             }
         }
 
-        // ---- evaluation ----
+        // ---- evaluation (L2P before P2P — fixed order, see module docs)
         self.run_l2p(&self.tree.occupied_leaves.clone(), &mut state);
         let mut near_pairs = Vec::new();
         for tgt in &self.tree.occupied_leaves {
@@ -399,6 +510,17 @@ impl<'a> Evaluator<'a> {
         }
         self.run_p2p(&near_pairs, &mut state);
         state
+    }
+}
+
+/// Resolve a `par_threads` knob: 0 = one worker per host core.
+pub fn resolve_threads(n: usize) -> usize {
+    if n == 0 {
+        std::thread::available_parallelism()
+            .map(|x| x.get())
+            .unwrap_or(1)
+    } else {
+        n
     }
 }
 
@@ -461,6 +583,19 @@ mod tests {
     }
 
     #[test]
+    fn very_deep_tree_radius_scaling_stays_stable() {
+        // levels >= 8: the raw (dz)^k formulation underflows/overflows
+        // here; only the radius-scaled convention survives (module docs
+        // of fmm/expansions.rs)
+        check("fmm level-8 tree", 2, |g| {
+            let parts = g.clustered_particles(120, 2);
+            let (got, want) = eval_with(parts, 8, 17, 0.0005);
+            let err = rel_l2_error(&got, &want);
+            assert!(err < 1e-3, "rel l2 err {err}");
+        });
+    }
+
+    #[test]
     fn leaf_overflow_chunks_correctly() {
         // more particles in one leaf than S forces the chunked path
         check("chunking", 4, |g| {
@@ -496,6 +631,22 @@ mod tests {
             let err = rel_l2_error(&got, &want);
             assert!(err < 1e-4, "rel l2 err {err}");
         });
+    }
+
+    #[test]
+    fn parallel_dispatch_is_bit_identical() {
+        // the scoped worker pool must not change a single bit
+        let mut g = crate::proptest::Gen::new(77);
+        let parts = g.clustered_particles(400, 3);
+        let tree = Quadtree::build(Domain::UNIT, 4, parts);
+        let dims = OpDims { batch: 8, leaf: 8, terms: 12, sigma: 0.01 };
+        let backend = NativeBackend::new(dims, BiotSavart2D::new(0.01));
+        let one = Evaluator::new(&tree, &backend).evaluate().vel;
+        let many = Evaluator::new(&tree, &backend)
+            .with_threads(4)
+            .evaluate()
+            .vel;
+        assert_eq!(one, many);
     }
 
     #[test]

@@ -257,6 +257,51 @@ mod tests {
     }
 
     #[test]
+    fn prop_deep_radius_scaled_chain_matches_direct() {
+        // levels >= 8: shift an ME up an 8..10-level ancestor chain
+        // (radius doubling each step), then M2L across a well-separated
+        // pair at the coarse level, and check the LE against direct
+        // summation.  The raw (dz)^k formulation underflows on this
+        // chain (module docs); only the scaled convention survives.
+        check("deep M2M/M2L chain", 16, |g| {
+            let binom = BinomialTable::for_terms(P);
+            let depth = 8 + g.usize_in(0, 2) as i32; // 8..=10 levels
+            // finest source box: corner cell of a unit-domain hierarchy
+            let mut r = 0.5f64.powi(depth + 1); // half-width at `depth`
+            let mut c = [r, r];                 // center of cell (0,0)
+            let parts = cluster(g, 10, c, 0.8 * r);
+            let mut me = p2m(&parts, c, r, P);
+            // M2M up the ancestor chain to level 2
+            for _ in (3..=depth).rev() {
+                let rp = 2.0 * r;
+                // the corner cell's parent is again the corner cell
+                let cp = [rp, rp];
+                let d = Complex::new((c[0] - cp[0]) / rp,
+                                     (c[1] - cp[1]) / rp);
+                me = m2m(&me, d, r / rp, &binom);
+                r = rp;
+                c = cp;
+            }
+            // the coarse ME must still reproduce the far field
+            let (x, y) = (g.f64_in(2.0, 3.0), g.f64_in(2.0, 3.0));
+            let got = eval_me(&me, c, r, x, y);
+            let want = direct_f(&parts, x, y);
+            assert!((got - want).abs() / want.abs().max(1e-12) < 1e-8,
+                    "depth {depth}: ME {got:?} direct {want:?}");
+            // M2L to a well-separated level-2 box, evaluated via L2P
+            let ct = [c[0] + 6.0 * r, c[1]];
+            let tau = Complex::new((c[0] - ct[0]) / r, (c[1] - ct[1]) / r);
+            let le = m2l(&me, tau, 1.0 / r, &binom);
+            let (tx, ty) = (ct[0] + g.f64_in(-0.5 * r, 0.5 * r),
+                            ct[1] + g.f64_in(-0.5 * r, 0.5 * r));
+            let got = l2p(&le, ct, r, tx, ty);
+            let want = direct_f(&parts, tx, ty);
+            assert!((got - want).abs() / want.abs().max(1e-12) < 1e-5,
+                    "depth {depth}: LE {got:?} direct {want:?}");
+        });
+    }
+
+    #[test]
     fn p2m_is_linear_in_strengths() {
         let c = [0.3, 0.3];
         let r = 0.1;

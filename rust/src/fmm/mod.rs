@@ -1,15 +1,21 @@
 //! The fast multipole method core (§2): kernels, expansion operators,
-//! batched backends, the serial evaluator, and the O(N²) direct baseline.
+//! batched backends, the dense-arena serial evaluator (plus the seed
+//! HashMap baseline it is benchmarked against), and the O(N²) direct
+//! baseline.
 
+pub mod arena;
 pub mod backend;
 pub mod direct;
 pub mod evaluator;
 pub mod expansions;
 pub mod kernel;
 pub mod native;
+pub mod reference;
 
+pub use arena::ExpansionArena;
 pub use backend::{OpDims, OpsBackend};
 pub use direct::{direct_all, direct_at};
-pub use evaluator::{Evaluator, FmmState, OpCounts};
+pub use evaluator::{resolve_threads, Evaluator, FmmState, OpCounts};
 pub use kernel::{BiotSavart2D, Kernel, Laplace2D};
 pub use native::NativeBackend;
+pub use reference::ReferenceEvaluator;

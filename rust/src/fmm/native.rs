@@ -59,6 +59,12 @@ impl<K: Kernel> OpsBackend for NativeBackend<K> {
         self.dims
     }
 
+    fn sync_view(&self) -> Option<&(dyn OpsBackend + Sync)> {
+        // Kernel: Send + Sync and the tables are immutable, so the
+        // native backend is safe to call from the evaluator worker pool.
+        Some(self)
+    }
+
     fn p2m(&self, particles: &[f64], centers: &[f64], radius: &[f64])
         -> Vec<f64> {
         let OpDims { batch, leaf, terms, .. } = self.dims;

@@ -1,0 +1,325 @@
+//! The original `HashMap<BoxId, Vec<f64>>`-backed serial evaluator, kept
+//! verbatim as a regression baseline.
+//!
+//! `benches/hotpath.rs` races it against the dense-arena [`Evaluator`]
+//! (`super::evaluator`) to quantify what removing per-box hashing and
+//! allocation from the inner loops buys; a unit test below pins the two
+//! implementations to each other so the baseline cannot rot.  New code
+//! should always use [`Evaluator`].
+//!
+//! [`Evaluator`]: super::evaluator::Evaluator
+
+use std::collections::HashMap;
+
+use super::backend::OpsBackend;
+use crate::quadtree::{interaction_list, near_domain, BoxId, Quadtree};
+
+fn accumulate(dst: &mut HashMap<BoxId, Vec<f64>>, b: BoxId, c: &[f64]) {
+    match dst.entry(b) {
+        std::collections::hash_map::Entry::Occupied(mut e) => {
+            for (d, s) in e.get_mut().iter_mut().zip(c) {
+                *d += s;
+            }
+        }
+        std::collections::hash_map::Entry::Vacant(e) => {
+            e.insert(c.to_vec());
+        }
+    }
+}
+
+/// Seed-era serial FMM evaluator with map-backed expansion storage.
+pub struct ReferenceEvaluator<'a> {
+    pub tree: &'a Quadtree,
+    pub backend: &'a dyn OpsBackend,
+}
+
+impl<'a> ReferenceEvaluator<'a> {
+    pub fn new(tree: &'a Quadtree, backend: &'a dyn OpsBackend) -> Self {
+        ReferenceEvaluator { tree, backend }
+    }
+
+    fn leaf_chunks(&self, leaf: &BoxId) -> Vec<(Vec<f64>, Vec<u32>)> {
+        let s = self.backend.dims().leaf;
+        let c = self.tree.center(leaf);
+        let idxs = self.tree.particles_in(leaf);
+        let mut out = Vec::new();
+        for chunk in idxs.chunks(s.max(1)) {
+            let mut buf = vec![0.0; s * 3];
+            for (j, &i) in chunk.iter().enumerate() {
+                let p = self.tree.particles[i as usize];
+                buf[j * 3] = p[0];
+                buf[j * 3 + 1] = p[1];
+                buf[j * 3 + 2] = p[2];
+            }
+            for j in chunk.len()..s {
+                buf[j * 3] = c[0];
+                buf[j * 3 + 1] = c[1];
+            }
+            out.push((buf, chunk.to_vec()));
+        }
+        out
+    }
+
+    fn run_p2m(&self, leaves: &[BoxId], me: &mut HashMap<BoxId, Vec<f64>>) {
+        let dims = self.backend.dims();
+        let (b, p) = (dims.batch, dims.terms);
+        let mut tasks: Vec<(BoxId, Vec<f64>)> = Vec::new();
+        for leaf in leaves {
+            if self.tree.particles_in(leaf).is_empty() {
+                continue;
+            }
+            for (buf, _) in self.leaf_chunks(leaf) {
+                tasks.push((*leaf, buf));
+            }
+        }
+        for group in tasks.chunks(b) {
+            let mut parts = vec![0.0; b * dims.leaf * 3];
+            let mut centers = vec![0.0; b * 2];
+            let mut radius = vec![1.0; b];
+            for (t, (leaf, buf)) in group.iter().enumerate() {
+                parts[t * dims.leaf * 3..(t + 1) * dims.leaf * 3]
+                    .copy_from_slice(buf);
+                let c = self.tree.center(leaf);
+                centers[t * 2] = c[0];
+                centers[t * 2 + 1] = c[1];
+                radius[t] = self.tree.radius(leaf);
+            }
+            let out = self.backend.p2m(&parts, &centers, &radius);
+            for (t, (leaf, _)) in group.iter().enumerate() {
+                accumulate(me, *leaf, &out[t * p * 2..(t + 1) * p * 2]);
+            }
+        }
+    }
+
+    fn run_m2m(&self, children: &[BoxId], me: &mut HashMap<BoxId, Vec<f64>>) {
+        let dims = self.backend.dims();
+        let (b, p) = (dims.batch, dims.terms);
+        let tasks: Vec<BoxId> = children
+            .iter()
+            .filter(|c| me.contains_key(c))
+            .copied()
+            .collect();
+        for group in tasks.chunks(b) {
+            let mut buf = vec![0.0; b * p * 2];
+            let mut d = vec![0.0; b * 2];
+            let mut rho = vec![0.5; b];
+            for (t, child) in group.iter().enumerate() {
+                buf[t * p * 2..(t + 1) * p * 2].copy_from_slice(&me[child]);
+                let parent = child.parent().expect("child has parent");
+                let cc = self.tree.center(child);
+                let cp = self.tree.center(&parent);
+                let rp = self.tree.radius(&parent);
+                d[t * 2] = (cc[0] - cp[0]) / rp;
+                d[t * 2 + 1] = (cc[1] - cp[1]) / rp;
+                rho[t] = self.tree.radius(child) / rp;
+            }
+            let out = self.backend.m2m(&buf, &d, &rho);
+            for (t, child) in group.iter().enumerate() {
+                let parent = child.parent().unwrap();
+                accumulate(me, parent, &out[t * p * 2..(t + 1) * p * 2]);
+            }
+        }
+    }
+
+    fn run_m2l(
+        &self,
+        pairs: &[(BoxId, BoxId)],
+        me: &HashMap<BoxId, Vec<f64>>,
+        le: &mut HashMap<BoxId, Vec<f64>>,
+    ) {
+        let dims = self.backend.dims();
+        let (b, p) = (dims.batch, dims.terms);
+        let tasks: Vec<&(BoxId, BoxId)> = pairs
+            .iter()
+            .filter(|(_, src)| me.contains_key(src))
+            .collect();
+        for group in tasks.chunks(b) {
+            let mut buf = vec![0.0; b * p * 2];
+            let mut tau = vec![2.0; b * 2];
+            let mut inv_r = vec![1.0; b];
+            for (t, (tgt, src)) in group.iter().enumerate() {
+                buf[t * p * 2..(t + 1) * p * 2].copy_from_slice(&me[src]);
+                let cs = self.tree.center(src);
+                let ct = self.tree.center(tgt);
+                let r = self.tree.radius(src);
+                tau[t * 2] = (cs[0] - ct[0]) / r;
+                tau[t * 2 + 1] = (cs[1] - ct[1]) / r;
+                inv_r[t] = 1.0 / r;
+            }
+            let out = self.backend.m2l(&buf, &tau, &inv_r);
+            for (t, (tgt, _)) in group.iter().enumerate() {
+                accumulate(le, *tgt, &out[t * p * 2..(t + 1) * p * 2]);
+            }
+        }
+    }
+
+    fn run_l2l(&self, children: &[BoxId], le: &mut HashMap<BoxId, Vec<f64>>) {
+        let dims = self.backend.dims();
+        let (b, p) = (dims.batch, dims.terms);
+        let tasks: Vec<BoxId> = children
+            .iter()
+            .filter(|c| c.parent().map_or(false, |pa| le.contains_key(&pa)))
+            .copied()
+            .collect();
+        for group in tasks.chunks(b) {
+            let mut buf = vec![0.0; b * p * 2];
+            let mut d = vec![0.0; b * 2];
+            let mut rho = vec![0.5; b];
+            for (t, child) in group.iter().enumerate() {
+                let parent = child.parent().unwrap();
+                buf[t * p * 2..(t + 1) * p * 2]
+                    .copy_from_slice(&le[&parent]);
+                let cc = self.tree.center(child);
+                let cp = self.tree.center(&parent);
+                let rp = self.tree.radius(&parent);
+                d[t * 2] = (cc[0] - cp[0]) / rp;
+                d[t * 2 + 1] = (cc[1] - cp[1]) / rp;
+                rho[t] = self.tree.radius(child) / rp;
+            }
+            let out = self.backend.l2l(&buf, &d, &rho);
+            for (t, child) in group.iter().enumerate() {
+                accumulate(le, *child, &out[t * p * 2..(t + 1) * p * 2]);
+            }
+        }
+    }
+
+    fn run_l2p(
+        &self,
+        leaves: &[BoxId],
+        le: &HashMap<BoxId, Vec<f64>>,
+        vel: &mut [[f64; 2]],
+    ) {
+        let dims = self.backend.dims();
+        let (b, p, s) = (dims.batch, dims.terms, dims.leaf);
+        let mut tasks: Vec<(BoxId, Vec<f64>, Vec<u32>)> = Vec::new();
+        for leaf in leaves {
+            if !le.contains_key(leaf)
+                || self.tree.particles_in(leaf).is_empty()
+            {
+                continue;
+            }
+            for (buf, idx) in self.leaf_chunks(leaf) {
+                tasks.push((*leaf, buf, idx));
+            }
+        }
+        for group in tasks.chunks(b) {
+            let mut lebuf = vec![0.0; b * p * 2];
+            let mut parts = vec![0.0; b * s * 3];
+            let mut centers = vec![0.0; b * 2];
+            let mut radius = vec![1.0; b];
+            for (t, (leaf, buf, _)) in group.iter().enumerate() {
+                lebuf[t * p * 2..(t + 1) * p * 2]
+                    .copy_from_slice(&le[leaf]);
+                parts[t * s * 3..(t + 1) * s * 3].copy_from_slice(buf);
+                let c = self.tree.center(leaf);
+                centers[t * 2] = c[0];
+                centers[t * 2 + 1] = c[1];
+                radius[t] = self.tree.radius(leaf);
+            }
+            let out = self.backend.l2p(&lebuf, &parts, &centers, &radius);
+            for (t, (_, _, idx)) in group.iter().enumerate() {
+                for (j, &i) in idx.iter().enumerate() {
+                    vel[i as usize][0] += out[(t * s + j) * 2];
+                    vel[i as usize][1] += out[(t * s + j) * 2 + 1];
+                }
+            }
+        }
+    }
+
+    fn run_p2p(&self, pairs: &[(BoxId, BoxId)], vel: &mut [[f64; 2]]) {
+        let dims = self.backend.dims();
+        let (b, s) = (dims.batch, dims.leaf);
+        let mut tasks: Vec<(Vec<f64>, Vec<u32>, Vec<f64>)> = Vec::new();
+        for (tgt, src) in pairs {
+            let nt = self.tree.particles_in(tgt).len();
+            let ns = self.tree.particles_in(src).len();
+            if nt == 0 || ns == 0 {
+                continue;
+            }
+            let tchunks = self.leaf_chunks(tgt);
+            let schunks = self.leaf_chunks(src);
+            for (tbuf, tidx) in &tchunks {
+                for (sbuf, _) in &schunks {
+                    tasks.push((tbuf.clone(), tidx.clone(), sbuf.clone()));
+                }
+            }
+        }
+        for group in tasks.chunks(b) {
+            let mut targets = vec![0.0; b * s * 3];
+            let mut sources = vec![0.0; b * s * 3];
+            for (t, (tbuf, _, sbuf)) in group.iter().enumerate() {
+                targets[t * s * 3..(t + 1) * s * 3].copy_from_slice(tbuf);
+                sources[t * s * 3..(t + 1) * s * 3].copy_from_slice(sbuf);
+            }
+            let out = self.backend.p2p(&targets, &sources);
+            for (t, (_, tidx, _)) in group.iter().enumerate() {
+                for (j, &i) in tidx.iter().enumerate() {
+                    vel[i as usize][0] += out[(t * s + j) * 2];
+                    vel[i as usize][1] += out[(t * s + j) * 2 + 1];
+                }
+            }
+        }
+    }
+
+    /// Full serial pipeline; returns per-particle velocities.
+    pub fn evaluate(&self) -> Vec<[f64; 2]> {
+        let mut me: HashMap<BoxId, Vec<f64>> = HashMap::new();
+        let mut le: HashMap<BoxId, Vec<f64>> = HashMap::new();
+        let mut vel = vec![[0.0; 2]; self.tree.n_particles()];
+        let levels = self.tree.levels;
+
+        self.run_p2m(&self.tree.occupied_leaves.clone(), &mut me);
+        for lvl in (3..=levels).rev() {
+            let children = self.tree.occupied_at_level(lvl);
+            self.run_m2m(&children, &mut me);
+        }
+        for lvl in 2..=levels {
+            let tgts = self.tree.occupied_at_level(lvl);
+            let mut pairs = Vec::new();
+            for tgt in &tgts {
+                for src in interaction_list(tgt) {
+                    pairs.push((*tgt, src));
+                }
+            }
+            self.run_m2l(&pairs, &me, &mut le);
+            if lvl < levels {
+                let children = self.tree.occupied_at_level(lvl + 1);
+                self.run_l2l(&children, &mut le);
+            }
+        }
+        self.run_l2p(&self.tree.occupied_leaves.clone(), &le, &mut vel);
+        let mut near_pairs = Vec::new();
+        for tgt in &self.tree.occupied_leaves {
+            for src in near_domain(tgt) {
+                near_pairs.push((*tgt, src));
+            }
+        }
+        self.run_p2p(&near_pairs, &mut vel);
+        vel
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::OpDims;
+    use super::super::evaluator::Evaluator;
+    use super::super::kernel::BiotSavart2D;
+    use super::super::native::NativeBackend;
+    use super::*;
+    use crate::proptest::Gen;
+    use crate::quadtree::Domain;
+
+    #[test]
+    fn reference_and_arena_evaluators_agree_bitwise() {
+        // identical task order + identical per-box accumulation order
+        // means the arena refactor must not move a single bit
+        let mut g = Gen::new(9);
+        let parts = g.clustered_particles(300, 3);
+        let tree = Quadtree::build(Domain::UNIT, 4, parts);
+        let dims = OpDims { batch: 16, leaf: 8, terms: 14, sigma: 0.008 };
+        let backend = NativeBackend::new(dims, BiotSavart2D::new(0.008));
+        let baseline = ReferenceEvaluator::new(&tree, &backend).evaluate();
+        let arena = Evaluator::new(&tree, &backend).evaluate().vel;
+        assert_eq!(baseline, arena);
+    }
+}

@@ -10,10 +10,12 @@
 //!   reproducing the strong-scaling experiments (§7).
 //! * **L2/L1 (python/, build-time only)** — the FMM operator algebra as
 //!   batched jax functions with Pallas kernels for the P2P and M2L hot
-//!   spots, AOT-lowered to HLO artifacts executed via PJRT.
+//!   spots, AOT-lowered to HLO artifacts executed via PJRT (currently a
+//!   validated stub, see `runtime/pjrt.rs`).
 //!
-//! See DESIGN.md for the full system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured results.
+//! See `DESIGN.md` at the repository root for the full system inventory,
+//! the dense expansion-arena layout, and the bitwise determinism
+//! contract; `rust/benches/` holds the paper-vs-measured experiments.
 
 pub mod bench;
 pub mod comm;

@@ -3,11 +3,21 @@
 //!
 //! The plan is derived deterministically from (tree, cut, assignment) and
 //! is executed either by the virtual-time simulator ([`super::sim`]) or
-//! by the threaded message-passing runtime ([`super::super::comm::threaded`]).
+//! by the threaded message-passing runtime
+//! ([`super::super::comm::threaded`]).
+//!
+//! Ordering contract: every task list is emitted in the *same* order the
+//! serial evaluator would visit it — targets in Morton order, each
+//! target's sources in interaction-list / near-domain construction order.
+//! Because a box's full contribution set always lands in one rank's list,
+//! per-box accumulation order (and therefore every floating-point sum) is
+//! identical to the serial run, which is what makes the §6.2 consistency
+//! checks bitwise instead of tolerance-based.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, HashSet};
 
 use crate::comm::{interaction_overlap, neighbor_overlap, owner_of};
+use crate::fmm::{Evaluator, FmmState};
 use crate::partition::Assignment;
 use crate::quadtree::{interaction_list, near_domain, BoxId, Quadtree,
                       TreeCut};
@@ -21,8 +31,7 @@ pub fn coeff_bytes(terms: usize) -> f64 {
 #[derive(Clone, Debug)]
 pub struct ParallelPlan {
     pub ranks: usize,
-    pub terms: usize,
-    /// occupied leaves per rank
+    /// occupied leaves per rank (Morton order)
     pub leaves: Vec<Vec<BoxId>>,
     /// per rank, per tree level (index 0 = level cut+1): M2M children
     pub m2m_children: Vec<Vec<Vec<BoxId>>>,
@@ -34,9 +43,9 @@ pub struct ParallelPlan {
     pub p2p_pairs: Vec<Vec<(BoxId, BoxId)>>,
     /// root tree (leader): M2M children per level (cut down to 3)
     pub root_m2m_children: Vec<Vec<BoxId>>,
-    /// root tree: M2L pairs (levels 2..=cut)
-    pub root_m2l_pairs: Vec<(BoxId, BoxId)>,
-    /// root tree: L2L children (levels 3..=cut)
+    /// root tree: M2L pairs per level (index 0 = level 2, .. up to cut)
+    pub root_m2l_pairs: Vec<Vec<(BoxId, BoxId)>>,
+    /// root tree: L2L children per level (index 0 = level 3, .. up to cut)
     pub root_l2l_children: Vec<Vec<BoxId>>,
     /// per rank: number of particles owned
     pub rank_particles: Vec<usize>,
@@ -45,9 +54,9 @@ pub struct ParallelPlan {
     /// per rank: LE blocks received from the leader in the scatter
     pub scatter_blocks: Vec<usize>,
     /// (from, to) -> ME blocks crossing in the M2L exchange
-    pub m2l_exchange_blocks: HashMap<(usize, usize), usize>,
+    pub m2l_exchange_blocks: BTreeMap<(usize, usize), usize>,
     /// (from, to) -> particles crossing in the P2P halo
-    pub halo_particles: HashMap<(usize, usize), usize>,
+    pub halo_particles: BTreeMap<(usize, usize), usize>,
 }
 
 impl ParallelPlan {
@@ -55,15 +64,17 @@ impl ParallelPlan {
     pub fn build(tree: &Quadtree, cut: &TreeCut, assignment: &Assignment)
         -> ParallelPlan {
         let ranks = assignment.ranks;
-        let terms = 0; // filled by caller contexts that need bytes; kept
-                       // here for symmetry — blocks are counted, bytes
-                       // derived via coeff_bytes(terms) at costing time
         let levels = tree.levels;
         let k = cut.cut_level;
 
-        // occupancy per level (boxes with particles underneath)
-        let occupied: Vec<HashSet<BoxId>> = (0..=levels)
-            .map(|l| tree.occupied_at_level(l).into_iter().collect())
+        // occupancy per level: Morton-ordered lists for deterministic
+        // iteration, hash sets for O(1) membership
+        let occ_lists: Vec<Vec<BoxId>> = (0..=levels)
+            .map(|l| tree.occupied_at_level(l))
+            .collect();
+        let occ_sets: Vec<HashSet<BoxId>> = occ_lists
+            .iter()
+            .map(|v| v.iter().copied().collect())
             .collect();
 
         let owner = |b: &BoxId| owner_of(cut, assignment, b);
@@ -78,19 +89,15 @@ impl ParallelPlan {
         }
 
         // ---- upward: M2M children per rank per level ----
-        // local levels: children at lvl in (k+1 ..= L), shifted into lvl-1
+        // local levels: children at lvl in (k+1 ..= L), shifted into
+        // lvl-1; Morton iteration keeps sibling accumulation order equal
+        // to the serial sweep
         let mut m2m_children =
             vec![vec![Vec::new(); (levels - k) as usize]; ranks];
         for lvl in (k + 1)..=levels {
-            for b in &occupied[lvl as usize] {
+            for b in &occ_lists[lvl as usize] {
                 let r = owner(b);
                 m2m_children[r][(lvl - k - 1) as usize].push(*b);
-            }
-        }
-        // deterministic order
-        for rank_lists in &mut m2m_children {
-            for list in rank_lists.iter_mut() {
-                list.sort();
             }
         }
 
@@ -100,24 +107,14 @@ impl ParallelPlan {
         let mut l2l_children = vec![vec![Vec::new(); nlv]; ranks];
         for lvl in (k + 1)..=levels {
             let li = (lvl - k - 1) as usize;
-            for tgt in &occupied[lvl as usize] {
+            for tgt in &occ_lists[lvl as usize] {
                 let r = owner(tgt);
                 for src in interaction_list(tgt) {
-                    if occupied[lvl as usize].contains(&src) {
+                    if occ_sets[lvl as usize].contains(&src) {
                         m2l_pairs[r][li].push((*tgt, src));
                     }
                 }
                 l2l_children[r][li].push(*tgt);
-            }
-        }
-        for rank_lists in m2l_pairs.iter_mut() {
-            for list in rank_lists.iter_mut() {
-                list.sort();
-            }
-        }
-        for rank_lists in l2l_children.iter_mut() {
-            for list in rank_lists.iter_mut() {
-                list.sort();
             }
         }
 
@@ -131,39 +128,27 @@ impl ParallelPlan {
                 }
             }
         }
-        for list in &mut p2p_pairs {
-            list.sort();
-        }
 
         // ---- root tree (leader, rank 0) ----
         let mut root_m2m_children = Vec::new();
         for lvl in (3..=k).rev() {
-            let mut cs: Vec<BoxId> = occupied[lvl as usize]
-                .iter()
-                .copied()
-                .collect();
-            cs.sort();
-            root_m2m_children.push(cs);
+            root_m2m_children.push(occ_lists[lvl as usize].clone());
         }
         let mut root_m2l_pairs = Vec::new();
         for lvl in 2..=k {
-            let mut tgts: Vec<BoxId> =
-                occupied[lvl as usize].iter().copied().collect();
-            tgts.sort();
-            for tgt in tgts {
-                for src in interaction_list(&tgt) {
-                    if occupied[lvl as usize].contains(&src) {
-                        root_m2l_pairs.push((tgt, src));
+            let mut pairs = Vec::new();
+            for tgt in &occ_lists[lvl as usize] {
+                for src in interaction_list(tgt) {
+                    if occ_sets[lvl as usize].contains(&src) {
+                        pairs.push((*tgt, src));
                     }
                 }
             }
+            root_m2l_pairs.push(pairs);
         }
         let mut root_l2l_children = Vec::new();
         for lvl in 3..=k {
-            let mut cs: Vec<BoxId> =
-                occupied[lvl as usize].iter().copied().collect();
-            cs.sort();
-            root_l2l_children.push(cs);
+            root_l2l_children.push(occ_lists[lvl as usize].clone());
         }
 
         // ---- communication volumes ----
@@ -172,7 +157,7 @@ impl ParallelPlan {
         let mut reduce_blocks = vec![0usize; ranks];
         let mut scatter_blocks = vec![0usize; ranks];
         for st in &cut.subtrees {
-            if !occupied[k as usize].contains(st) {
+            if !occ_sets[k as usize].contains(st) {
                 continue;
             }
             let r = assignment.part[cut.subtree_index(st)];
@@ -184,11 +169,11 @@ impl ParallelPlan {
 
         // M2L exchange: interaction overlap restricted to occupied boxes
         let il_overlap = interaction_overlap(tree, cut, assignment);
-        let mut m2l_exchange_blocks = HashMap::new();
+        let mut m2l_exchange_blocks = BTreeMap::new();
         for ((from, to), boxes) in &il_overlap.sends {
             let n = boxes
                 .iter()
-                .filter(|b| occupied[b.level as usize].contains(b))
+                .filter(|b| occ_sets[b.level as usize].contains(b))
                 .count();
             if n > 0 {
                 m2l_exchange_blocks.insert((*from, *to), n);
@@ -197,7 +182,7 @@ impl ParallelPlan {
 
         // P2P halo: neighbor overlap weighted by actual particle counts
         let nb_overlap = neighbor_overlap(tree, cut, assignment);
-        let mut halo_particles = HashMap::new();
+        let mut halo_particles = BTreeMap::new();
         for ((from, to), boxes) in &nb_overlap.sends {
             let n: usize = boxes
                 .iter()
@@ -208,10 +193,8 @@ impl ParallelPlan {
             }
         }
 
-        let _ = terms;
         ParallelPlan {
             ranks,
-            terms: 0,
             leaves,
             m2m_children,
             m2l_pairs,
@@ -225,6 +208,25 @@ impl ParallelPlan {
             scatter_blocks,
             m2l_exchange_blocks,
             halo_particles,
+        }
+    }
+
+    /// The leader's root-tree sweep: M2M up the root levels, then a
+    /// per-level M2L/L2L interleave that matches the serial downward
+    /// sweep exactly (box at level l: L2L from its parent first, then
+    /// M2L).  Both parallel runtimes (the virtual-time simulator and
+    /// the threaded message-passing mode) call this single definition —
+    /// the interleave is part of the bitwise determinism contract and
+    /// must not diverge between them.
+    pub fn run_root_sweep(&self, ev: &Evaluator, state: &mut FmmState) {
+        for children in &self.root_m2m_children {
+            ev.run_m2m(children, state);
+        }
+        for (i, pairs) in self.root_m2l_pairs.iter().enumerate() {
+            ev.run_m2l(pairs, state);
+            if let Some(children) = self.root_l2l_children.get(i) {
+                ev.run_l2l(children, state);
+            }
         }
     }
 }
@@ -264,7 +266,8 @@ mod tests {
         // pairs equals the serial evaluator's occupied-pair set
         check("plan pair counts", 6, |g| {
             let (tree, cut, _, plan) = build(g, 300, 4, 2, 3);
-            let mut plan_pairs: usize = plan.root_m2l_pairs.len();
+            let mut plan_pairs: usize =
+                plan.root_m2l_pairs.iter().map(Vec::len).sum();
             for r in 0..plan.ranks {
                 for lv in &plan.m2l_pairs[r] {
                     plan_pairs += lv.len();
@@ -310,6 +313,28 @@ mod tests {
                 }
             }
             assert_eq!(total, want);
+        });
+    }
+
+    #[test]
+    fn prop_task_lists_are_morton_ordered_per_target() {
+        // targets appear in nondecreasing Morton order within every
+        // per-rank list (the determinism contract's ordering invariant)
+        check("plan morton order", 6, |g| {
+            let (_, _, _, plan) = build(g, 300, 4, 2, 4);
+            for r in 0..plan.ranks {
+                for w in plan.leaves[r].windows(2) {
+                    assert!(w[0].morton() < w[1].morton());
+                }
+                for lv in &plan.m2l_pairs[r] {
+                    for w in lv.windows(2) {
+                        assert!(w[0].0.morton() <= w[1].0.morton());
+                    }
+                }
+                for w in plan.p2p_pairs[r].windows(2) {
+                    assert!(w[0].0.morton() <= w[1].0.morton());
+                }
+            }
         });
     }
 }

@@ -15,7 +15,7 @@
 //! floating-point reassociation, which the §6.2-style consistency tests
 //! check.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use super::plan::{coeff_bytes, ParallelPlan};
@@ -198,6 +198,9 @@ pub struct Simulator<'a> {
     /// pre-computed calibration (shared across runs for comparability);
     /// None = calibrate at run() start
     pub costs: Option<OpCosts>,
+    /// worker count for the evaluator's batch dispatch (0 = per-core);
+    /// results are bit-identical for every setting
+    pub threads: usize,
 }
 
 impl<'a> Simulator<'a> {
@@ -216,6 +219,7 @@ impl<'a> Simulator<'a> {
             network,
             timing: Timing::Calibrated,
             costs: None,
+            threads: 1,
         }
     }
 
@@ -231,13 +235,19 @@ impl<'a> Simulator<'a> {
         self
     }
 
+    /// Set the evaluator worker-pool size (0 = one worker per core).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
     /// Comm-stage record from per-rank (messages, bytes) pairs, counting
     /// both directions on each endpoint.
     fn comm_stage(
         &self,
         name: &'static str,
         ranks: usize,
-        flows: &HashMap<(usize, usize), f64>,
+        flows: &BTreeMap<(usize, usize), f64>,
         total_bytes: &mut f64,
     ) -> StageRecord {
         let mut rec = StageRecord::zeros(name, ranks);
@@ -255,8 +265,13 @@ impl<'a> Simulator<'a> {
         let ranks = plan.ranks;
         let terms = self.backend.dims().terms;
         let block = coeff_bytes(terms);
-        let ev = Evaluator::new(self.tree, self.backend);
-        let mut state = FmmState::new(self.tree.n_particles());
+        let ev = Evaluator::new(self.tree, self.backend)
+            .with_threads(self.threads);
+        let mut state = FmmState::new(
+            self.tree.levels,
+            terms,
+            self.tree.n_particles(),
+        );
         let mut stages: Vec<StageRecord> = Vec::new();
         let mut comm_bytes = 0.0;
         let costs = match (self.timing, self.costs) {
@@ -289,7 +304,7 @@ impl<'a> Simulator<'a> {
         };
 
         // ---- 1. particle scatter (leader -> ranks) ----
-        let mut flows = HashMap::new();
+        let mut flows = BTreeMap::new();
         for r in 1..ranks {
             if plan.rank_particles[r] > 0 {
                 flows.insert(
@@ -326,7 +341,7 @@ impl<'a> Simulator<'a> {
         stages.push(rec);
 
         // ---- 4. ME reduce to leader ----
-        let mut flows = HashMap::new();
+        let mut flows = BTreeMap::new();
         for r in 1..ranks {
             if plan.reduce_blocks[r] > 0 {
                 flows.insert((r, 0usize),
@@ -340,19 +355,13 @@ impl<'a> Simulator<'a> {
         let mut rec = StageRecord::zeros("root", ranks);
         let before = ev.counts.get();
         let t0 = Instant::now();
-        for children in &plan.root_m2m_children {
-            ev.run_m2m(children, &mut state);
-        }
-        ev.run_m2l(&plan.root_m2l_pairs, &mut state);
-        for children in &plan.root_l2l_children {
-            ev.run_l2l(children, &mut state);
-        }
+        plan.run_root_sweep(&ev, &mut state);
         rec.compute[0] = attribute(before, ev.counts.get(),
                                    t0.elapsed().as_secs_f64());
         stages.push(rec);
 
         // ---- 6. LE scatter (leader -> owners) ----
-        let mut flows = HashMap::new();
+        let mut flows = BTreeMap::new();
         for r in 1..ranks {
             if plan.scatter_blocks[r] > 0 {
                 flows.insert((0usize, r),
@@ -363,7 +372,7 @@ impl<'a> Simulator<'a> {
                                     &mut comm_bytes));
 
         // ---- 7. boundary ME exchange ----
-        let flows: HashMap<(usize, usize), f64> = plan
+        let flows: BTreeMap<(usize, usize), f64> = plan
             .m2l_exchange_blocks
             .iter()
             .map(|(&k, &n)| (k, block * n as f64))
@@ -393,7 +402,7 @@ impl<'a> Simulator<'a> {
         stages.push(rec_m2l);
 
         // ---- 9. halo exchange ----
-        let flows: HashMap<(usize, usize), f64> = plan
+        let flows: BTreeMap<(usize, usize), f64> = plan
             .halo_particles
             .iter()
             .map(|(&k, &n)| (k, PARTICLE_WIRE_BYTES * n as f64))
@@ -401,18 +410,8 @@ impl<'a> Simulator<'a> {
         stages.push(self.comm_stage("exchange-halo", ranks, &flows,
                                     &mut comm_bytes));
 
-        // ---- 10. P2P ----
-        let mut rec = StageRecord::zeros("p2p", ranks);
-        for r in 0..ranks {
-            let before = ev.counts.get();
-            let t0 = Instant::now();
-            ev.run_p2p(&plan.p2p_pairs[r], &mut state);
-            rec.compute[r] = attribute(before, ev.counts.get(),
-                                       t0.elapsed().as_secs_f64());
-        }
-        stages.push(rec);
-
-        // ---- 11. L2P ----
+        // ---- 10. L2P (before P2P: same per-particle accumulation order
+        // as the serial evaluator, so velocities match bitwise) ----
         let mut rec = StageRecord::zeros("l2p", ranks);
         for r in 0..ranks {
             let before = ev.counts.get();
@@ -423,8 +422,19 @@ impl<'a> Simulator<'a> {
         }
         stages.push(rec);
 
+        // ---- 11. P2P ----
+        let mut rec = StageRecord::zeros("p2p", ranks);
+        for r in 0..ranks {
+            let before = ev.counts.get();
+            let t0 = Instant::now();
+            ev.run_p2p(&plan.p2p_pairs[r], &mut state);
+            rec.compute[r] = attribute(before, ev.counts.get(),
+                                       t0.elapsed().as_secs_f64());
+        }
+        stages.push(rec);
+
         // ---- 12. velocity gather ----
-        let mut flows = HashMap::new();
+        let mut flows = BTreeMap::new();
         for r in 1..ranks {
             if plan.rank_particles[r] > 0 {
                 flows.insert((r, 0usize),

