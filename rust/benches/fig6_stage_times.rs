@@ -4,8 +4,14 @@
 //! k = 4, p = 17, P in {1,4,8,16,32,64}.  We run a scaled configuration
 //! (same leaf density) by default; pass a particle target via
 //! PETFMM_BENCH_N to go bigger.
+//!
+//! Besides the console table, the full series is written to
+//! `BENCH_stage_times.json` at the repository root so the per-stage
+//! trajectory (especially M2L and P2P, the operator-cache targets) is
+//! tracked across PRs.
 
-use petfmm::bench::{bench_header, time_once};
+use petfmm::bench::{bench_header, jarr, jnum, jobj, jstr, time_once,
+                    write_bench_json};
 use petfmm::config::RunConfig;
 use petfmm::coordinator::{make_backend, strong_scaling};
 
@@ -35,4 +41,37 @@ fn main() {
     println!("\npaper shape check: P2P and M2L dominate at P=1; every \
               stage shrinks with P while comm grows.");
     println!("(bench wall time {secs:.1}s)");
+
+    let points: Vec<String> = series
+        .points
+        .iter()
+        .map(|pt| {
+            let stages: Vec<String> = pt
+                .stage_times
+                .iter()
+                .map(|(name, t)| {
+                    jobj(&[("stage", jstr(name)), ("secs", jnum(*t))])
+                })
+                .collect();
+            jobj(&[
+                ("ranks", jnum(pt.ranks as f64)),
+                ("total_s", jnum(pt.total_time)),
+                ("load_balance", jnum(pt.load_balance)),
+                ("comm_bytes", jnum(pt.comm_bytes)),
+                ("stages", jarr(&stages)),
+            ])
+        })
+        .collect();
+    let body = jobj(&[
+        ("bench", jstr("fig6_stage_times")),
+        ("config", jobj(&[
+            ("particles", jnum(n as f64)),
+            ("levels", jnum(levels as f64)),
+            ("cut_level", jnum(config.cut_level as f64)),
+            ("terms", jnum(config.terms as f64)),
+        ])),
+        ("wall_s", jnum(secs)),
+        ("points", jarr(&points)),
+    ]);
+    write_bench_json("BENCH_stage_times.json", &body);
 }

@@ -1,23 +1,37 @@
-//! Bench: operator hot paths — P2P and M2L throughput per backend.
+//! Bench: operator hot paths — P2P and M2L throughput per backend, plus
+//! per-stage timings of the evaluator's cached operator path against the
+//! preserved PR-1 implementation.
 //!
 //! These are the two dominant terms of the Greengard–Gropp model
-//! (d·NB/P direct interactions, c·N/(BP) transforms).  Measures batched
-//! operator throughput for the native backend and, when artifacts are
-//! present, the PJRT (jax/pallas) backend, plus batch-size sensitivity
-//! for the §Perf iteration log.
+//! (d·NB/P direct interactions, c·N/(BP) transforms).  Three baselines
+//! are raced on the quickstart workload (10k particles, L = 5, p = 17):
+//!
+//! * `ReferenceEvaluator` + `BaselineBackend` — the seed implementation,
+//! * `Evaluator` + `BaselineBackend` — the PR-1 dense-arena evaluator
+//!   with the PR-1 allocating batched ABI, and
+//! * `Evaluator` + `NativeBackend` — the cached zero-copy operator path
+//!   (fmm::optable, DESIGN.md §8), single- and multi-threaded.
+//!
+//! Results are printed *and* written to `BENCH_hotpath.json` at the
+//! repository root so the perf trajectory is tracked across PRs.
+//! `PETFMM_BENCH_FAST=1` shrinks the workload for CI smoke runs.
 
-use petfmm::bench::{bench, bench_header, fmt_time};
-use petfmm::fmm::{resolve_threads, BiotSavart2D, Evaluator, NativeBackend,
-                  OpDims, OpsBackend, ReferenceEvaluator};
+use petfmm::bench::{bench, bench_header, fmt_time, jarr, jnum, jobj,
+                    jstr, write_bench_json, Samples};
+use petfmm::fmm::{resolve_threads, BaselineBackend, BiotSavart2D,
+                  Evaluator, FmmState, NativeBackend, OpDims, OpsBackend,
+                  ReferenceEvaluator};
 use petfmm::proptest::Gen;
-use petfmm::quadtree::{Domain, Quadtree};
+use petfmm::quadtree::{interaction_list, near_domain, BoxId, Domain,
+                       Quadtree};
 use petfmm::runtime::PjrtBackend;
 
 fn rand_buf(g: &mut Gen, n: usize, lo: f64, hi: f64) -> Vec<f64> {
     (0..n).map(|_| g.f64_in(lo, hi)).collect()
 }
 
-fn bench_backend(name: &str, be: &dyn OpsBackend, g: &mut Gen) {
+fn bench_backend(name: &str, be: &dyn OpsBackend, g: &mut Gen,
+                 samples: usize, json: &mut Vec<(String, String)>) {
     let d = be.dims();
     let (b, s, p) = (d.batch, d.leaf, d.terms);
     let targets = rand_buf(g, b * s * 3, 0.0, 1.0);
@@ -28,96 +42,273 @@ fn bench_backend(name: &str, be: &dyn OpsBackend, g: &mut Gen) {
     let centers = rand_buf(g, b * 2, 0.3, 0.7);
     let radius = vec![0.05; b];
 
-    let s1 = bench(&format!("{name}/p2p  B={b} S={s}"), 3, 15, || {
+    let s1 = bench(&format!("{name}/p2p  B={b} S={s}"), 3, samples, || {
         std::hint::black_box(be.p2p(&targets, &sources));
     });
     let pairs = (b * s * s) as f64;
     println!("{}   [{:.1} Mpairs/s]", s1.report(),
              pairs / s1.median() / 1e6);
 
-    let s2 = bench(&format!("{name}/m2l  B={b} P={p}"), 3, 15, || {
+    let s2 = bench(&format!("{name}/m2l  B={b} P={p}"), 3, samples, || {
         std::hint::black_box(be.m2l(&me, &tau, &inv_r));
     });
     println!("{}   [{:.2} Mxform/s]", s2.report(),
              b as f64 / s2.median() / 1e6);
 
-    let s3 = bench(&format!("{name}/p2m  B={b} S={s}"), 3, 15, || {
+    let s3 = bench(&format!("{name}/p2m  B={b} S={s}"), 3, samples, || {
         std::hint::black_box(be.p2m(&targets, &centers, &radius));
     });
     println!("{}", s3.report());
 
-    let s4 = bench(&format!("{name}/m2m  B={b} P={p}"), 3, 15, || {
+    let s4 = bench(&format!("{name}/m2m  B={b} P={p}"), 3, samples, || {
         std::hint::black_box(be.m2m(&me, &tau, &radius));
     });
     println!("{}", s4.report());
+
+    json.push((
+        name.to_string(),
+        jobj(&[
+            ("p2p_batch_s", jnum(s1.median())),
+            ("m2l_batch_s", jnum(s2.median())),
+            ("p2m_batch_s", jnum(s3.median())),
+            ("m2m_batch_s", jnum(s4.median())),
+        ]),
+    ));
+}
+
+/// All per-level M2L (target, source) pair lists, as the serial
+/// downward sweep emits them.
+fn m2l_level_pairs(tree: &Quadtree) -> Vec<Vec<(BoxId, BoxId)>> {
+    (2..=tree.levels)
+        .map(|lvl| {
+            let mut pairs = Vec::new();
+            for tgt in &tree.occupied_at_level(lvl) {
+                for src in interaction_list(tgt) {
+                    pairs.push((*tgt, src));
+                }
+            }
+            pairs
+        })
+        .collect()
+}
+
+/// Near-field pair list, as the serial evaluation phase emits it.
+fn near_pairs(tree: &Quadtree) -> Vec<(BoxId, BoxId)> {
+    let mut out = Vec::new();
+    for tgt in &tree.occupied_leaves {
+        for src in near_domain(tgt) {
+            out.push((*tgt, src));
+        }
+    }
+    out
+}
+
+/// Upward sweep only: a state with every ME populated, ready for
+/// repeated M2L stage runs.
+fn upward_state(ev: &Evaluator, tree: &Quadtree, terms: usize)
+    -> FmmState {
+    let mut state =
+        FmmState::new(tree.levels, terms, tree.n_particles());
+    ev.run_p2m(&tree.occupied_leaves.clone(), &mut state);
+    for lvl in (3..=tree.levels).rev() {
+        ev.run_m2m(&tree.occupied_at_level(lvl), &mut state);
+    }
+    state
+}
+
+fn stage_pair(label: &str, pr1: &Samples, cached: &Samples, n_ops: usize)
+    -> (f64, String) {
+    let speedup = pr1.median() / cached.median();
+    println!("{}", pr1.report());
+    println!("{}   [{speedup:.2}x vs PR-1, {:.0} ns/op]",
+             cached.report(), cached.median() / n_ops as f64 * 1e9);
+    (
+        speedup,
+        jobj(&[
+            ("stage", jstr(label)),
+            ("ops", jnum(n_ops as f64)),
+            ("pr1_s", jnum(pr1.median())),
+            ("cached_s", jnum(cached.median())),
+            ("cached_ns_per_op",
+             jnum(cached.median() / n_ops as f64 * 1e9)),
+            ("speedup", jnum(speedup)),
+        ]),
+    )
 }
 
 fn main() {
     bench_header("Hot paths: P2P + M2L operator throughput");
+    let fast = std::env::var("PETFMM_BENCH_FAST").is_ok();
     let mut g = Gen::new(1234);
+    let mut op_json: Vec<(String, String)> = Vec::new();
+    let samples = if fast { 5 } else { 15 };
 
     let dims = OpDims { batch: 64, leaf: 32, terms: 17, sigma: 0.02 };
     let native = NativeBackend::new(dims, BiotSavart2D::new(0.02));
-    bench_backend("native", &native, &mut g);
+    bench_backend("native", &native, &mut g, samples, &mut op_json);
+    let baseline = BaselineBackend::new(dims, BiotSavart2D::new(0.02));
+    bench_backend("baseline-pr1", &baseline, &mut g, samples,
+                  &mut op_json);
 
     // honours $PETFMM_ARTIFACTS (e.g. a --batch 256 build) for sweeps
     match PjrtBackend::load_default() {
-        Ok(pjrt) => bench_backend("pjrt", &pjrt, &mut g),
+        Ok(pjrt) => bench_backend("pjrt", &pjrt, &mut g, samples,
+                                  &mut op_json),
         Err(e) => println!("pjrt backend skipped: {e:#}"),
     }
 
     // batch-size sensitivity (native): the padding/dispatch trade-off
-    println!("\nbatch-size sweep (native p2p, fixed 2048 box-pairs):");
-    for batch in [8usize, 16, 32, 64, 128, 256] {
-        let d = OpDims { batch, leaf: 32, terms: 17, sigma: 0.02 };
-        let be = NativeBackend::new(d, BiotSavart2D::new(0.02));
-        let t = rand_buf(&mut g, batch * 32 * 3, 0.0, 1.0);
-        let s = rand_buf(&mut g, batch * 32 * 3, 0.0, 1.0);
-        let calls = 2048 / batch;
-        let res = bench(&format!("B={batch}"), 2, 9, || {
-            for _ in 0..calls {
-                std::hint::black_box(be.p2p(&t, &s));
-            }
-        });
-        println!("  B={batch:>4}: {:>12} per 2048 boxes",
-                 fmt_time(res.median()));
+    if !fast {
+        println!("\nbatch-size sweep (native p2p, fixed 2048 box-pairs):");
+        for batch in [8usize, 16, 32, 64, 128, 256] {
+            let d = OpDims { batch, leaf: 32, terms: 17, sigma: 0.02 };
+            let be = NativeBackend::new(d, BiotSavart2D::new(0.02));
+            let t = rand_buf(&mut g, batch * 32 * 3, 0.0, 1.0);
+            let s = rand_buf(&mut g, batch * 32 * 3, 0.0, 1.0);
+            let calls = 2048 / batch;
+            let res = bench(&format!("B={batch}"), 2, 9, || {
+                for _ in 0..calls {
+                    std::hint::black_box(be.p2p(&t, &s));
+                }
+            });
+            println!("  B={batch:>4}: {:>12} per 2048 boxes",
+                     fmt_time(res.median()));
+        }
     }
 
-    // ---- end-to-end: dense-arena evaluator vs the seed HashMap
-    // evaluator, single- and multi-threaded dispatch ----
-    let n = 20_000usize;
-    println!("\nend-to-end serial solve, {n} particles, L=6, p=17:");
+    // ---- per-stage: cached operator path vs the PR-1 arena evaluator
+    // on the quickstart workload ----
+    let n = if fast { 2_000 } else { 10_000 };
+    let levels: u8 = if fast { 4 } else { 5 };
+    println!("\nstage timings, quickstart config ({n} particles, \
+              L={levels}, p=17):");
     let parts = g.particles(n);
-    let tree = Quadtree::build(Domain::UNIT, 6, parts);
-    let dims = OpDims { batch: 64, leaf: 32, terms: 17, sigma: 0.005 };
-    let be = NativeBackend::new(dims, BiotSavart2D::new(dims.sigma));
+    let tree = Quadtree::build(Domain::UNIT, levels, parts);
+    let qdims = OpDims { batch: 64, leaf: 32, terms: 17, sigma: 0.005 };
+    let qnative = NativeBackend::new(qdims, BiotSavart2D::new(qdims.sigma));
+    let qbase = BaselineBackend::new(qdims, BiotSavart2D::new(qdims.sigma));
+    let ev_base = Evaluator::new(&tree, &qbase);
+    let ev_cached = Evaluator::new(&tree, &qnative);
+    let mut st_base = upward_state(&ev_base, &tree, qdims.terms);
+    let mut st_cached = upward_state(&ev_cached, &tree, qdims.terms);
+    let level_pairs = m2l_level_pairs(&tree);
+    // count only pairs the runners actually execute: sources with no ME
+    // (empty subtrees) are skipped, and padding them into the ns/op
+    // denominator would corrupt the cross-PR perf trajectory
+    let n_m2l: usize = level_pairs
+        .iter()
+        .enumerate()
+        .map(|(i, pairs)| {
+            let occ: std::collections::HashSet<BoxId> = tree
+                .occupied_at_level(i as u8 + 2)
+                .into_iter()
+                .collect();
+            pairs.iter().filter(|(_, src)| occ.contains(src)).count()
+        })
+        .sum();
+    let (w, smp) = if fast { (1, 3) } else { (2, 9) };
 
-    let s_ref = bench("seed HashMap evaluator", 1, 5, || {
-        std::hint::black_box(ReferenceEvaluator::new(&tree, &be).evaluate());
+    let s_m2l_pr1 = bench("m2l stage: PR-1 arena evaluator", w, smp, || {
+        for pairs in &level_pairs {
+            ev_base.run_m2l(pairs, &mut st_base);
+        }
+    });
+    let s_m2l_cached = bench("m2l stage: cached optable path", w, smp,
+                             || {
+        for pairs in &level_pairs {
+            ev_cached.run_m2l(pairs, &mut st_cached);
+        }
+    });
+    let (m2l_speedup, m2l_json) =
+        stage_pair("m2l", &s_m2l_pr1, &s_m2l_cached, n_m2l);
+
+    let nears = near_pairs(&tree);
+    // executed pair count: sources without particles are skipped
+    let n_p2p = nears
+        .iter()
+        .filter(|(_, src)| !tree.particles_in(src).is_empty())
+        .count();
+    let s_p2p_pr1 = bench("p2p stage: PR-1 arena evaluator", w, smp, || {
+        ev_base.run_p2p(&nears, &mut st_base);
+    });
+    let s_p2p_cached = bench("p2p stage: cached zero-copy path", w, smp,
+                             || {
+        ev_cached.run_p2p(&nears, &mut st_cached);
+    });
+    let (_, p2p_json) =
+        stage_pair("p2p", &s_p2p_pr1, &s_p2p_cached, n_p2p);
+
+    // ---- end-to-end: seed evaluator, PR-1 arena evaluator, cached
+    // path, single- and multi-threaded dispatch ----
+    println!("\nend-to-end serial solve, {n} particles, L={levels}, p=17:");
+    let (ew, es) = if fast { (0, 2) } else { (1, 5) };
+    let s_ref = bench("seed HashMap evaluator", ew, es, || {
+        std::hint::black_box(
+            ReferenceEvaluator::new(&tree, &qbase).evaluate());
     });
     println!("{}", s_ref.report());
 
-    let s_arena = bench("arena evaluator (1 thread)", 1, 5, || {
-        std::hint::black_box(Evaluator::new(&tree, &be).evaluate());
+    let s_pr1 = bench("PR-1 arena evaluator", ew, es, || {
+        std::hint::black_box(Evaluator::new(&tree, &qbase).evaluate());
     });
-    println!("{}   [{:.2}x vs seed]", s_arena.report(),
-             s_ref.median() / s_arena.median());
+    println!("{}   [{:.2}x vs seed]", s_pr1.report(),
+             s_ref.median() / s_pr1.median());
+
+    let s_arena = bench("cached evaluator (1 thread)", ew, es, || {
+        std::hint::black_box(Evaluator::new(&tree, &qnative).evaluate());
+    });
+    println!("{}   [{:.2}x vs seed, {:.2}x vs PR-1]", s_arena.report(),
+             s_ref.median() / s_arena.median(),
+             s_pr1.median() / s_arena.median());
 
     let cores = resolve_threads(0);
-    let s_par = bench(&format!("arena evaluator ({cores} threads)"), 1, 5,
-                      || {
+    let s_par = bench(&format!("cached evaluator ({cores} threads)"), ew,
+                      es, || {
         std::hint::black_box(
-            Evaluator::new(&tree, &be).with_threads(0).evaluate(),
+            Evaluator::new(&tree, &qnative).with_threads(0).evaluate(),
         );
     });
     println!("{}   [{:.2}x vs seed]", s_par.report(),
              s_ref.median() / s_par.median());
 
     // determinism spot check alongside the numbers
-    let a = Evaluator::new(&tree, &be).evaluate().vel;
-    let b = Evaluator::new(&tree, &be).with_threads(0).evaluate().vel;
-    let r = ReferenceEvaluator::new(&tree, &be).evaluate();
+    let a = Evaluator::new(&tree, &qnative).evaluate().vel;
+    let b = Evaluator::new(&tree, &qnative).with_threads(0).evaluate().vel;
+    let pr1 = Evaluator::new(&tree, &qbase).evaluate().vel;
+    let r = ReferenceEvaluator::new(&tree, &qbase).evaluate();
     assert_eq!(a, b, "thread count changed bits");
+    assert_eq!(a, pr1, "operator caches diverged from PR-1 baseline");
     assert_eq!(a, r, "arena diverged from seed baseline");
-    println!("bitwise: arena(1T) == arena({cores}T) == seed baseline ✓");
+    println!("bitwise: cached(1T) == cached({cores}T) == PR-1 == seed ✓");
+    println!("m2l stage speedup vs PR-1: {m2l_speedup:.2}x (target ≥ 2x)");
+
+    let ops_fields: Vec<(&str, String)> = op_json
+        .iter()
+        .map(|(k, v)| (k.as_str(), v.clone()))
+        .collect();
+    let body = jobj(&[
+        ("bench", jstr("hotpath")),
+        ("fast_mode", if fast { "true".into() } else { "false".into() }),
+        ("config", jobj(&[
+            ("particles", jnum(n as f64)),
+            ("levels", jnum(levels as f64)),
+            ("terms", jnum(qdims.terms as f64)),
+            ("batch", jnum(qdims.batch as f64)),
+            ("leaf", jnum(qdims.leaf as f64)),
+            ("threads", jnum(cores as f64)),
+        ])),
+        ("op_batches", jobj(&ops_fields)),
+        ("stages", jarr(&[m2l_json, p2p_json])),
+        ("e2e", jobj(&[
+            ("seed_s", jnum(s_ref.median())),
+            ("pr1_arena_s", jnum(s_pr1.median())),
+            ("cached_1t_s", jnum(s_arena.median())),
+            ("cached_mt_s", jnum(s_par.median())),
+            ("speedup_vs_seed",
+             jnum(s_ref.median() / s_arena.median())),
+            ("speedup_vs_pr1",
+             jnum(s_pr1.median() / s_arena.median())),
+        ])),
+    ]);
+    write_bench_json("BENCH_hotpath.json", &body);
 }

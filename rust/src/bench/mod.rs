@@ -101,6 +101,73 @@ pub fn bench_header(title: &str) {
                  .unwrap_or(1));
 }
 
+// ---------------------------------------------------------------------
+// machine-readable bench artifacts (no serde in the offline registry —
+// DESIGN.md §6 — so emission is a hand-rolled JSON value builder)
+// ---------------------------------------------------------------------
+
+/// A JSON number (f64 Display never emits NaN/inf into the file).
+pub fn jnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".into()
+    }
+}
+
+/// A JSON string: escapes `"` `\\` and control characters per the JSON
+/// grammar (NOT Rust's `escape_default`, whose `\'`/`\u{..}` forms are
+/// invalid JSON); non-ASCII passes through as raw UTF-8.
+pub fn jstr(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            _ if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            _ => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// A JSON object from (key, already-encoded value) pairs.
+pub fn jobj(fields: &[(&str, String)]) -> String {
+    let inner: Vec<String> = fields
+        .iter()
+        .map(|(k, v)| format!("{}: {}", jstr(k), v))
+        .collect();
+    format!("{{{}}}", inner.join(", "))
+}
+
+/// A JSON array from already-encoded values.
+pub fn jarr(items: &[String]) -> String {
+    format!("[{}]", items.join(", "))
+}
+
+/// Write a bench artifact at the repository root (one level above the
+/// crate manifest), where the perf trajectory is tracked across PRs.
+/// Returns the path written.
+pub fn write_bench_json(name: &str, body: &str) -> std::path::PathBuf {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join(name))
+        .unwrap_or_else(|| std::path::PathBuf::from(name));
+    if let Err(e) = std::fs::write(&path, format!("{body}\n")) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    } else {
+        println!("wrote {}", path.display());
+    }
+    path
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,5 +198,33 @@ mod tests {
         assert_eq!(fmt_time(2.5e-3), "2.500ms");
         assert_eq!(fmt_time(3.0e-6), "3.000µs");
         assert!(fmt_time(5.0e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn jstr_emits_json_escapes_not_rust_escapes() {
+        assert_eq!(jstr("leader's \"m2l\""), "\"leader's \\\"m2l\\\"\"");
+        assert_eq!(jstr("a\\b\nc"), "\"a\\\\b\\nc\"");
+        assert_eq!(jstr("\u{1}"), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn bench_json_round_trips_through_the_runtime_parser() {
+        let body = jobj(&[
+            ("name", jstr("hotpath")),
+            ("speedup", jnum(2.5)),
+            ("bad", jnum(f64::NAN)),
+            ("stages", jarr(&[
+                jobj(&[("stage", jstr("m2l")), ("secs", jnum(0.125))]),
+            ])),
+        ]);
+        let v = crate::runtime::json::Json::parse(&body).expect("valid");
+        assert_eq!(v.get("name").and_then(|x| x.as_str()),
+                   Some("hotpath"));
+        assert_eq!(v.get("speedup").and_then(|x| x.as_f64()), Some(2.5));
+        assert_eq!(v.get("bad"),
+                   Some(&crate::runtime::json::Json::Null));
+        let stages = v.get("stages").and_then(|x| x.as_arr()).unwrap();
+        assert_eq!(stages[0].get("secs").and_then(|x| x.as_f64()),
+                   Some(0.125));
     }
 }

@@ -19,6 +19,8 @@
 //! | l2p | le (B,P,2), parts (B,S,3), centers, radius    | vel (B,S,2)|
 //! | p2p | targets (B,S,3), sources (B,S,3)              | vel (B,S,2)|
 
+use super::optable::CachedOps;
+
 /// Fixed dimensions a backend was built for.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct OpDims {
@@ -50,6 +52,15 @@ pub trait OpsBackend {
         None
     }
 
+    /// Zero-copy cached-operator view ([`CachedOps`]), or `None` when
+    /// the backend only speaks the flattened batch ABI (PJRT: the
+    /// artifact shapes are fixed at AOT time).  When present, the
+    /// evaluator's stage runners read expansion blocks straight out of
+    /// the arena and skip the flattened round trip entirely.
+    fn cached_ops(&self) -> Option<&dyn CachedOps> {
+        None
+    }
+
     fn p2m(&self, particles: &[f64], centers: &[f64], radius: &[f64])
         -> Vec<f64>;
     fn m2m(&self, me: &[f64], d: &[f64], rho: &[f64]) -> Vec<f64>;
@@ -58,6 +69,27 @@ pub trait OpsBackend {
     fn l2p(&self, le: &[f64], particles: &[f64], centers: &[f64],
            radius: &[f64]) -> Vec<f64>;
     fn p2p(&self, targets: &[f64], sources: &[f64]) -> Vec<f64>;
+
+    /// Occupancy-aware L2P: like [`OpsBackend::l2p`] but with the real
+    /// particle count of each batch slot, so a backend may skip the
+    /// padded lanes (their output is never scattered).  Default: ignore
+    /// the counts and run the fixed shape — the PJRT artifacts stay
+    /// fixed-shape by construction, which `p2p_padding_is_inert` guards.
+    fn l2p_occ(&self, le: &[f64], particles: &[f64], centers: &[f64],
+               radius: &[f64], occupancy: &[u32]) -> Vec<f64> {
+        let _ = occupancy;
+        self.l2p(le, particles, centers, radius)
+    }
+
+    /// Occupancy-aware P2P: real target/source counts per batch slot.
+    /// Padded sources carry `gamma = 0` (their contribution is an exact
+    /// ±0.0), so skipping them is value-preserving; padded target lanes
+    /// are never scattered.  Default: fixed shape.
+    fn p2p_occ(&self, targets: &[f64], sources: &[f64], t_occ: &[u32],
+               s_occ: &[u32]) -> Vec<f64> {
+        let _ = (t_occ, s_occ);
+        self.p2p(targets, sources)
+    }
 
     /// Backend label for logs/metrics ("native", "pjrt").
     fn name(&self) -> &'static str;

@@ -6,23 +6,41 @@
 //! per-rank task subsets — "the serial code is completely reused in the
 //! parallel setting" (§6.1).
 //!
-//! Every runner pads its task list to the backend's fixed batch shape
-//! (B boxes x S particle slots) and scatters results back; leaves holding
-//! more than S particles are processed in chunks of S, so arbitrary
-//! occupancy is supported with fixed artifacts.
+//! Each runner has two execution paths (DESIGN.md §8):
+//!
+//! * **cached** (default when the backend offers [`CachedOps`]): tasks
+//!   read their coefficient blocks *straight out of the
+//!   [`ExpansionArena`]* and apply precomputed per-offset translation
+//!   operators (`fmm::optable`), writing into one flat per-stage output
+//!   buffer — zero per-task allocation, no flattened-ABI round trip, no
+//!   padded lanes.
+//! * **generic** (flattened batch ABI): pads every task list to the
+//!   backend's fixed batch shape (B boxes x S particle slots) and
+//!   scatters results back; leaves holding more than S particles are
+//!   processed in chunks of S.  This is the only path fixed-shape
+//!   artifact backends (PJRT) can execute.
 //!
 //! Determinism contract (DESIGN.md §Determinism): expansion state lives
 //! in a dense [`ExpansionArena`] (box → slot is arithmetic, no hashing),
 //! task lists arrive in Morton order, and each runner splits into
-//! 1. *assemble + compute* — pure per-batch work, parallelized across
-//!    batch chunks with a scoped worker pool when the backend is
-//!    thread-safe ([`OpsBackend::sync_view`], `par_threads` knob), then
+//! 1. *assemble + compute* — pure per-task work, parallelized across
+//!    contiguous task chunks with a scoped worker pool (`par_threads`
+//!    knob), then
 //! 2. *scatter* — sequential accumulation in task order.
-//! Result: velocities are bit-identical for any thread count, rank
-//! count, or partition strategy.
+//! Both paths add the same floating-point terms in the same order, so
+//! velocities are bit-identical for any thread count, rank count, or
+//! partition strategy.  Cached-vs-generic *path choice* is additionally
+//! bit-identical on power-of-two domain sizes (every bitwise-pinned
+//! configuration: `Domain::UNIT`, the coordinator, the §6.2 tests),
+//! where tau/d/rho/1-over-r are exact dyadic rationals; on arbitrary
+//! `Domain::bounding` geometries the cached tables are the *exactly
+//! rounded* operators while center-difference arithmetic may round,
+//! so the two paths can differ in the last ulp — each remains
+//! individually deterministic (tests/optable_cached.rs, DESIGN.md §8).
 
 use super::arena::ExpansionArena;
 use super::backend::OpsBackend;
+use super::optable::{self, CachedOps};
 use crate::quadtree::{interaction_list, near_domain, BoxId, Quadtree};
 
 /// Mutable solution state: dense expansion arenas + per-particle
@@ -75,15 +93,26 @@ pub struct Evaluator<'a> {
     pub counts: std::cell::Cell<OpCounts>,
     /// Worker count for batch dispatch (resolved; >= 1).
     threads: usize,
+    /// Use the zero-copy cached-operator path when the backend offers
+    /// it.  Off only for A/B benchmarking of the generic ABI path.
+    use_cached: bool,
+    /// `1 / r` per tree level (level-constant; the only geometric datum
+    /// the cached M2L path needs beyond the offset key).
+    inv_r_by_level: Vec<f64>,
 }
 
 impl<'a> Evaluator<'a> {
     pub fn new(tree: &'a Quadtree, backend: &'a dyn OpsBackend) -> Self {
+        let inv_r_by_level = (0..=tree.levels)
+            .map(|l| 1.0 / tree.radius(&BoxId::new(l, 0, 0)))
+            .collect();
         Evaluator {
             tree,
             backend,
             counts: Default::default(),
             threads: 1,
+            use_cached: true,
+            inv_r_by_level,
         }
     }
 
@@ -93,6 +122,23 @@ impl<'a> Evaluator<'a> {
     pub fn with_threads(mut self, n: usize) -> Self {
         self.threads = resolve_threads(n);
         self
+    }
+
+    /// Force the generic flattened-ABI path even when the backend offers
+    /// cached operators (A/B benchmarking; bit-identical on power-of-two
+    /// domain sizes — see the module docs for the general-domain caveat).
+    pub fn with_cached_ops(mut self, on: bool) -> Self {
+        self.use_cached = on;
+        self
+    }
+
+    #[inline]
+    fn cached(&self) -> Option<&dyn CachedOps> {
+        if self.use_cached {
+            self.backend.cached_ops()
+        } else {
+            None
+        }
     }
 
     /// Particle chunks of an occupied leaf, each at most S slots, padded
@@ -164,12 +210,285 @@ impl<'a> Evaluator<'a> {
         (0..n_groups).map(|i| assemble(self.backend, i)).collect()
     }
 
+    /// Compute `n` independent tasks into disjoint `stride`-sized slots
+    /// of the flat buffer `out` (`out.len() == n * stride`), fanning the
+    /// task range across the scoped worker pool.  `f` must be pure; the
+    /// caller scatters sequentially afterwards, so results are
+    /// bit-identical for every worker count.
+    fn par_fill<F>(&self, n: usize, stride: usize, out: &mut [f64], f: F)
+    where
+        F: Fn(usize, &mut [f64]) + Sync,
+    {
+        debug_assert_eq!(out.len(), n * stride);
+        let workers = self.threads.min(n.max(1));
+        if workers > 1 {
+            let chunk = n.div_ceil(workers);
+            std::thread::scope(|s| {
+                for (t, slice) in
+                    out.chunks_mut(chunk * stride).enumerate()
+                {
+                    let f = &f;
+                    s.spawn(move || {
+                        for (j, dst) in
+                            slice.chunks_mut(stride).enumerate()
+                        {
+                            f(t * chunk + j, dst);
+                        }
+                    });
+                }
+            });
+        } else {
+            for (i, dst) in out.chunks_mut(stride.max(1)).enumerate() {
+                f(i, dst);
+            }
+        }
+    }
+
     // ------------------------------------------------------------------
-    // stage runners
+    // cached stage runners (zero-copy arena reads, per-level operator
+    // tables, one flat output buffer per stage)
+    // ------------------------------------------------------------------
+
+    fn run_p2m_cached(&self, leaves: &[BoxId], state: &mut FmmState) {
+        let dims = self.backend.dims();
+        let (b, p, s) = (dims.batch, dims.terms, dims.leaf);
+        let mut tasks: Vec<(BoxId, &[u32])> = Vec::new();
+        for leaf in leaves {
+            let idxs = self.tree.particles_in(leaf);
+            if idxs.is_empty() {
+                continue;
+            }
+            for chunk in idxs.chunks(s.max(1)) {
+                tasks.push((*leaf, chunk));
+            }
+        }
+        if tasks.is_empty() {
+            return;
+        }
+        let n = tasks.len();
+        let mut out = vec![0.0; n * p * 2];
+        {
+            let tree = self.tree;
+            let tasks = &tasks;
+            self.par_fill(n, p * 2, &mut out, |i, dst| {
+                let (leaf, idx) = &tasks[i];
+                optable::p2m_indexed(&tree.particles, idx,
+                                     tree.center(leaf), tree.radius(leaf),
+                                     p, dst);
+            });
+        }
+        for (i, (leaf, _)) in tasks.iter().enumerate() {
+            state.me.accumulate(leaf, &out[i * p * 2..(i + 1) * p * 2]);
+        }
+        self.bump(|c| {
+            c.p2m += n as u64;
+            c.p2m_batches += n.div_ceil(b) as u64;
+        });
+    }
+
+    fn run_m2m_cached(&self, children: &[BoxId], state: &mut FmmState,
+                      ops: &dyn CachedOps) {
+        let dims = self.backend.dims();
+        let (b, p) = (dims.batch, dims.terms);
+        let tasks: Vec<BoxId> = children
+            .iter()
+            .filter(|c| state.me.contains(c))
+            .copied()
+            .collect();
+        if tasks.is_empty() {
+            return;
+        }
+        let n = tasks.len();
+        let mut out = vec![0.0; n * p * 2];
+        {
+            let me_arena = &state.me;
+            let tasks = &tasks;
+            self.par_fill(n, p * 2, &mut out, |i, dst| {
+                let child = tasks[i];
+                optable::m2m(ops.tables(), optable::child_quadrant(&child),
+                             me_arena.get(&child).expect("filtered"), dst);
+            });
+        }
+        for (i, child) in tasks.iter().enumerate() {
+            let parent = child.parent().expect("child has parent");
+            state
+                .me
+                .accumulate(&parent, &out[i * p * 2..(i + 1) * p * 2]);
+        }
+        self.bump(|c| {
+            c.m2m += n as u64;
+            c.m2m_batches += n.div_ceil(b) as u64;
+        });
+    }
+
+    fn run_m2l_cached(&self, pairs: &[(BoxId, BoxId)],
+                      state: &mut FmmState, ops: &dyn CachedOps) {
+        let dims = self.backend.dims();
+        let (b, p) = (dims.batch, dims.terms);
+        let tasks: Vec<(BoxId, BoxId)> = pairs
+            .iter()
+            .filter(|(_, src)| state.me.contains(src))
+            .copied()
+            .collect();
+        if tasks.is_empty() {
+            return;
+        }
+        let n = tasks.len();
+        let mut out = vec![0.0; n * p * 2];
+        {
+            let me_arena = &state.me;
+            let inv_r = &self.inv_r_by_level;
+            let tasks = &tasks;
+            self.par_fill(n, p * 2, &mut out, |i, dst| {
+                let (tgt, src) = &tasks[i];
+                debug_assert_eq!(tgt.level, src.level);
+                optable::m2l(ops.tables(), optable::m2l_key(tgt, src),
+                             inv_r[src.level as usize],
+                             me_arena.get(src).expect("filtered"), dst);
+            });
+        }
+        for (i, (tgt, _)) in tasks.iter().enumerate() {
+            state.le.accumulate(tgt, &out[i * p * 2..(i + 1) * p * 2]);
+        }
+        self.bump(|c| {
+            c.m2l += n as u64;
+            c.m2l_batches += n.div_ceil(b) as u64;
+        });
+    }
+
+    fn run_l2l_cached(&self, children: &[BoxId], state: &mut FmmState,
+                      ops: &dyn CachedOps) {
+        let dims = self.backend.dims();
+        let (b, p) = (dims.batch, dims.terms);
+        let tasks: Vec<BoxId> = children
+            .iter()
+            .filter(|c| {
+                c.parent().map_or(false, |pa| state.le.contains(&pa))
+            })
+            .copied()
+            .collect();
+        if tasks.is_empty() {
+            return;
+        }
+        let n = tasks.len();
+        let mut out = vec![0.0; n * p * 2];
+        {
+            let le_arena = &state.le;
+            let tasks = &tasks;
+            self.par_fill(n, p * 2, &mut out, |i, dst| {
+                let child = tasks[i];
+                let parent = child.parent().expect("filtered");
+                optable::l2l(ops.tables(), optable::child_quadrant(&child),
+                             le_arena.get(&parent).expect("filtered"),
+                             dst);
+            });
+        }
+        for (i, child) in tasks.iter().enumerate() {
+            state.le.accumulate(child, &out[i * p * 2..(i + 1) * p * 2]);
+        }
+        self.bump(|c| {
+            c.l2l += n as u64;
+            c.l2l_batches += n.div_ceil(b) as u64;
+        });
+    }
+
+    fn run_l2p_cached(&self, leaves: &[BoxId], state: &mut FmmState,
+                      ops: &dyn CachedOps) {
+        let dims = self.backend.dims();
+        let (b, s) = (dims.batch, dims.leaf);
+        let mut tasks: Vec<(BoxId, &[u32])> = Vec::new();
+        for leaf in leaves {
+            let idxs = self.tree.particles_in(leaf);
+            if !state.le.contains(leaf) || idxs.is_empty() {
+                continue;
+            }
+            for chunk in idxs.chunks(s.max(1)) {
+                tasks.push((*leaf, chunk));
+            }
+        }
+        if tasks.is_empty() {
+            return;
+        }
+        let n = tasks.len();
+        let mut out = vec![0.0; n * s * 2];
+        {
+            let tree = self.tree;
+            let le_arena = &state.le;
+            let tasks = &tasks;
+            self.par_fill(n, s * 2, &mut out, |i, dst| {
+                let (leaf, idx) = &tasks[i];
+                ops.l2p_into(le_arena.get(leaf).expect("filtered"),
+                             &tree.particles, idx, tree.center(leaf),
+                             tree.radius(leaf), dst);
+            });
+        }
+        for (i, (_, idx)) in tasks.iter().enumerate() {
+            for (j, &pi) in idx.iter().enumerate() {
+                state.vel[pi as usize][0] += out[(i * s + j) * 2];
+                state.vel[pi as usize][1] += out[(i * s + j) * 2 + 1];
+            }
+        }
+        self.bump(|c| {
+            c.l2p += n as u64;
+            c.l2p_batches += n.div_ceil(b) as u64;
+        });
+    }
+
+    fn run_p2p_cached(&self, pairs: &[(BoxId, BoxId)],
+                      state: &mut FmmState, ops: &dyn CachedOps) {
+        let dims = self.backend.dims();
+        let (b, s) = (dims.batch, dims.leaf);
+        let mut tasks: Vec<(&[u32], &[u32])> = Vec::new();
+        for (tgt, src) in pairs {
+            let ti = self.tree.particles_in(tgt);
+            let si = self.tree.particles_in(src);
+            if ti.is_empty() || si.is_empty() {
+                continue;
+            }
+            for tchunk in ti.chunks(s.max(1)) {
+                for schunk in si.chunks(s.max(1)) {
+                    tasks.push((tchunk, schunk));
+                }
+            }
+        }
+        if tasks.is_empty() {
+            return;
+        }
+        let n = tasks.len();
+        let mut out = vec![0.0; n * s * 2];
+        {
+            let tree = self.tree;
+            let tasks = &tasks;
+            self.par_fill(n, s * 2, &mut out, |i, dst| {
+                let (tidx, sidx) = tasks[i];
+                ops.p2p_into(&tree.particles, tidx, sidx, dst);
+            });
+        }
+        for (i, (tidx, sidx)) in tasks.iter().enumerate() {
+            for (j, &pi) in tidx.iter().enumerate() {
+                state.vel[pi as usize][0] += out[(i * s + j) * 2];
+                state.vel[pi as usize][1] += out[(i * s + j) * 2 + 1];
+            }
+            let np = (tidx.len() * sidx.len()) as u64;
+            self.bump(|c| c.p2p_pairs += np);
+        }
+        self.bump(|c| {
+            c.p2p += n as u64;
+            c.p2p_batches += n.div_ceil(b) as u64;
+        });
+    }
+
+    // ------------------------------------------------------------------
+    // stage runners (dispatch: cached path when available, else the
+    // generic flattened-ABI path)
     // ------------------------------------------------------------------
 
     /// P2M over a set of occupied leaves: builds `state.me` at leaf level.
     pub fn run_p2m(&self, leaves: &[BoxId], state: &mut FmmState) {
+        if self.cached().is_some() {
+            self.run_p2m_cached(leaves, state);
+            return;
+        }
         let dims = self.backend.dims();
         let (b, p, s) = (dims.batch, dims.terms, dims.leaf);
         // flatten (leaf, chunk) tasks
@@ -214,6 +533,10 @@ impl<'a> Evaluator<'a> {
 
     /// M2M: shift the MEs of `children` into their parents (accumulating).
     pub fn run_m2m(&self, children: &[BoxId], state: &mut FmmState) {
+        if let Some(ops) = self.cached() {
+            self.run_m2m_cached(children, state, ops);
+            return;
+        }
         let dims = self.backend.dims();
         let (b, p) = (dims.batch, dims.terms);
         let tasks: Vec<BoxId> = children
@@ -262,6 +585,10 @@ impl<'a> Evaluator<'a> {
     /// M2L over explicit (target, source) same-level pairs; sources
     /// without an ME are skipped (empty subtrees).
     pub fn run_m2l(&self, pairs: &[(BoxId, BoxId)], state: &mut FmmState) {
+        if let Some(ops) = self.cached() {
+            self.run_m2l_cached(pairs, state, ops);
+            return;
+        }
         let dims = self.backend.dims();
         let (b, p) = (dims.batch, dims.terms);
         let tasks: Vec<(BoxId, BoxId)> = pairs
@@ -307,6 +634,10 @@ impl<'a> Evaluator<'a> {
     /// L2L: shift parent LEs into `children` (accumulating). Parents
     /// without an LE contribute nothing.
     pub fn run_l2l(&self, children: &[BoxId], state: &mut FmmState) {
+        if let Some(ops) = self.cached() {
+            self.run_l2l_cached(children, state, ops);
+            return;
+        }
         let dims = self.backend.dims();
         let (b, p) = (dims.batch, dims.terms);
         let tasks: Vec<BoxId> = children
@@ -355,6 +686,10 @@ impl<'a> Evaluator<'a> {
     /// L2P: evaluate leaf LEs at particle positions, adding the far-field
     /// velocity into `state.vel`.
     pub fn run_l2p(&self, leaves: &[BoxId], state: &mut FmmState) {
+        if let Some(ops) = self.cached() {
+            self.run_l2p_cached(leaves, state, ops);
+            return;
+        }
         let dims = self.backend.dims();
         let (b, p, s) = (dims.batch, dims.terms, dims.leaf);
         let mut tasks: Vec<(BoxId, Vec<f64>, Vec<u32>)> = Vec::new();
@@ -381,7 +716,8 @@ impl<'a> Evaluator<'a> {
             let mut parts = vec![0.0; b * s * 3];
             let mut centers = vec![0.0; b * 2];
             let mut radius = vec![1.0; b];
-            for (t, (leaf, buf, _)) in group.iter().enumerate() {
+            let mut occ = vec![0u32; b];
+            for (t, (leaf, buf, idx)) in group.iter().enumerate() {
                 le[t * p * 2..(t + 1) * p * 2]
                     .copy_from_slice(le_arena.get(leaf).expect("filtered"));
                 parts[t * s * 3..(t + 1) * s * 3].copy_from_slice(buf);
@@ -389,8 +725,9 @@ impl<'a> Evaluator<'a> {
                 centers[t * 2] = c[0];
                 centers[t * 2 + 1] = c[1];
                 radius[t] = tree.radius(leaf);
+                occ[t] = idx.len() as u32;
             }
-            be.l2p(&le, &parts, &centers, &radius)
+            be.l2p_occ(&le, &parts, &centers, &radius, &occ)
         });
         for (group, out) in groups.iter().zip(&outs) {
             for (t, (_, _, idx)) in group.iter().enumerate() {
@@ -409,10 +746,15 @@ impl<'a> Evaluator<'a> {
     /// P2P over explicit (target leaf, source leaf) pairs, adding the
     /// near-field velocity into `state.vel`.
     pub fn run_p2p(&self, pairs: &[(BoxId, BoxId)], state: &mut FmmState) {
+        if let Some(ops) = self.cached() {
+            self.run_p2p_cached(pairs, state, ops);
+            return;
+        }
         let dims = self.backend.dims();
         let (b, s) = (dims.batch, dims.leaf);
-        // expand into chunk-level tasks
-        let mut tasks: Vec<(Vec<f64>, Vec<u32>, Vec<f64>, u64)> = Vec::new();
+        // expand into chunk-level tasks (last element: source occupancy)
+        let mut tasks: Vec<(Vec<f64>, Vec<u32>, Vec<f64>, u32)> =
+            Vec::new();
         for (tgt, src) in pairs {
             let nt = self.tree.particles_in(tgt).len();
             let ns = self.tree.particles_in(src).len();
@@ -427,7 +769,7 @@ impl<'a> Evaluator<'a> {
                         tbuf.clone(),
                         tidx.clone(),
                         sbuf.clone(),
-                        (tidx.len() * sidx.len()) as u64,
+                        sidx.len() as u32,
                     ));
                 }
             }
@@ -435,25 +777,29 @@ impl<'a> Evaluator<'a> {
         if tasks.is_empty() {
             return;
         }
-        let groups: Vec<&[(Vec<f64>, Vec<u32>, Vec<f64>, u64)]> =
+        let groups: Vec<&[(Vec<f64>, Vec<u32>, Vec<f64>, u32)]> =
             tasks.chunks(b).collect();
         let outs = self.run_groups(groups.len(), |be, gi| {
             let group = groups[gi];
             let mut targets = vec![0.0; b * s * 3];
             let mut sources = vec![0.0; b * s * 3];
-            for (t, (tbuf, _, sbuf, _)) in group.iter().enumerate() {
+            let mut t_occ = vec![0u32; b];
+            let mut s_occ = vec![0u32; b];
+            for (t, (tbuf, tidx, sbuf, slen)) in group.iter().enumerate() {
                 targets[t * s * 3..(t + 1) * s * 3].copy_from_slice(tbuf);
                 sources[t * s * 3..(t + 1) * s * 3].copy_from_slice(sbuf);
+                t_occ[t] = tidx.len() as u32;
+                s_occ[t] = *slen;
             }
-            be.p2p(&targets, &sources)
+            be.p2p_occ(&targets, &sources, &t_occ, &s_occ)
         });
         for (group, out) in groups.iter().zip(&outs) {
-            for (t, (_, tidx, _, npairs)) in group.iter().enumerate() {
+            for (t, (_, tidx, _, slen)) in group.iter().enumerate() {
                 for (j, &i) in tidx.iter().enumerate() {
                     state.vel[i as usize][0] += out[(t * s + j) * 2];
                     state.vel[i as usize][1] += out[(t * s + j) * 2 + 1];
                 }
-                let np = *npairs;
+                let np = tidx.len() as u64 * *slen as u64;
                 self.bump(|c| c.p2p_pairs += np);
             }
             self.bump(|c| {
@@ -647,6 +993,25 @@ mod tests {
             .evaluate()
             .vel;
         assert_eq!(one, many);
+    }
+
+    #[test]
+    fn cached_and_generic_paths_are_bit_identical() {
+        // same backend, both execution paths of every stage runner:
+        // optable-cached zero-copy vs flattened batch ABI
+        let mut g = crate::proptest::Gen::new(123);
+        let parts = g.clustered_particles(350, 3);
+        let tree = Quadtree::build(Domain::UNIT, 4, parts);
+        let dims = OpDims { batch: 8, leaf: 8, terms: 13, sigma: 0.01 };
+        let backend = NativeBackend::new(dims, BiotSavart2D::new(0.01));
+        let cached_ev = Evaluator::new(&tree, &backend);
+        let cached = cached_ev.evaluate();
+        let generic_ev =
+            Evaluator::new(&tree, &backend).with_cached_ops(false);
+        let generic = generic_ev.evaluate();
+        assert_eq!(cached.vel, generic.vel);
+        // identical work accounting on both paths
+        assert_eq!(cached_ev.counts.get(), generic_ev.counts.get());
     }
 
     #[test]

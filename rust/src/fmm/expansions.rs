@@ -77,6 +77,7 @@ pub fn m2l(
     binom: &BinomialTable,
 ) -> Coeffs {
     let p = me.len();
+    debug_assert!(binom.terms() >= p, "binomial table built for fewer terms");
     let itau = tau.inv();
     // itau^(n) for n in 0..2p
     let mut ipw = vec![Complex::ONE; 2 * p];
@@ -85,11 +86,11 @@ pub fn m2l(
     }
     let mut out = vec![Complex::ZERO; p];
     for l in 0..p {
+        // signed row (-1)^(k+1) C(k+l, k): no sign branch, no 2D lookup
+        let row = binom.m2l_row(l);
         let mut acc = Complex::ZERO;
         for k in 0..p {
-            let sign = if (k + 1) % 2 == 0 { 1.0 } else { -1.0 };
-            let c = sign * binom.get(k + l, k);
-            acc += (me[k] * ipw[k + l + 1]).scale(c);
+            acc += (me[k] * ipw[k + l + 1]).scale(row[k]);
         }
         out[l] = acc.scale(inv_r);
     }

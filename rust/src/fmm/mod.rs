@@ -1,7 +1,8 @@
 //! The fast multipole method core (§2): kernels, expansion operators,
+//! precomputed translation-operator tables (`optable`, DESIGN.md §8),
 //! batched backends, the dense-arena serial evaluator (plus the seed
-//! HashMap baseline it is benchmarked against), and the O(N²) direct
-//! baseline.
+//! HashMap evaluator and PR-1 backend baselines it is benchmarked
+//! against), and the O(N²) direct baseline.
 
 pub mod arena;
 pub mod backend;
@@ -10,6 +11,7 @@ pub mod evaluator;
 pub mod expansions;
 pub mod kernel;
 pub mod native;
+pub mod optable;
 pub mod reference;
 
 pub use arena::ExpansionArena;
@@ -18,4 +20,5 @@ pub use direct::{direct_all, direct_at};
 pub use evaluator::{resolve_threads, Evaluator, FmmState, OpCounts};
 pub use kernel::{BiotSavart2D, Kernel, Laplace2D};
 pub use native::NativeBackend;
-pub use reference::ReferenceEvaluator;
+pub use optable::{CachedOps, OpTables};
+pub use reference::{BaselineBackend, ReferenceEvaluator};

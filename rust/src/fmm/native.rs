@@ -4,53 +4,43 @@
 //! to ~1e-12) and as the high-throughput native path: it is generic over
 //! [`Kernel`], which is how the Laplace2D kernel (the paper's §8
 //! extensibility claim) runs through the identical evaluator machinery.
+//!
+//! Memory discipline (DESIGN.md §8): the batched entry points allocate
+//! only their output plus at most one power-table scratch *per call* —
+//! never per batch item — and read coefficient/particle blocks directly
+//! from the input slices.  The per-pair `coeffs_in`/`parts_in` staging
+//! vectors of the PR-1 implementation are gone (that implementation is
+//! preserved verbatim as [`BaselineBackend`] so the win stays
+//! measurable); every accumulation adds the same terms in the same order
+//! as the scalar operators in [`super::expansions`], so outputs are
+//! bit-identical to the baseline.
+//!
+//! The backend additionally exposes the zero-copy cached-operator view
+//! ([`CachedOps`]) the dense-arena evaluator uses to bypass the
+//! flattened ABI entirely.
+//!
+//! [`BaselineBackend`]: super::reference::BaselineBackend
 
 use super::backend::{OpDims, OpsBackend};
-use super::expansions;
 use super::kernel::Kernel;
-use crate::util::{BinomialTable, Complex};
+use super::optable::{self, CachedOps, OpTables};
+use crate::util::Complex;
 
 /// Native batched backend, generic over the interaction kernel.
 pub struct NativeBackend<K: Kernel> {
     dims: OpDims,
     kernel: K,
-    binom: BinomialTable,
+    tables: OpTables,
 }
 
 impl<K: Kernel> NativeBackend<K> {
     pub fn new(dims: OpDims, kernel: K) -> Self {
-        let binom = BinomialTable::for_terms(dims.terms);
-        NativeBackend { dims, kernel, binom }
+        let tables = OpTables::new(dims.terms);
+        NativeBackend { dims, kernel, tables }
     }
 
     pub fn kernel(&self) -> &K {
         &self.kernel
-    }
-
-    #[inline]
-    fn coeffs_in(buf: &[f64], b: usize, p: usize) -> Vec<Complex> {
-        (0..p)
-            .map(|k| Complex::new(buf[(b * p + k) * 2],
-                                  buf[(b * p + k) * 2 + 1]))
-            .collect()
-    }
-
-    #[inline]
-    fn coeffs_out(dst: &mut [f64], b: usize, p: usize, c: &[Complex]) {
-        for k in 0..p {
-            dst[(b * p + k) * 2] = c[k].re;
-            dst[(b * p + k) * 2 + 1] = c[k].im;
-        }
-    }
-
-    #[inline]
-    fn parts_in(buf: &[f64], b: usize, s: usize) -> Vec<[f64; 3]> {
-        (0..s)
-            .map(|j| {
-                let o = (b * s + j) * 3;
-                [buf[o], buf[o + 1], buf[o + 2]]
-            })
-            .collect()
     }
 }
 
@@ -65,83 +55,109 @@ impl<K: Kernel> OpsBackend for NativeBackend<K> {
         Some(self)
     }
 
+    fn cached_ops(&self) -> Option<&dyn CachedOps> {
+        Some(self)
+    }
+
     fn p2m(&self, particles: &[f64], centers: &[f64], radius: &[f64])
         -> Vec<f64> {
         let OpDims { batch, leaf, terms, .. } = self.dims;
         let mut out = vec![0.0; batch * terms * 2];
         for b in 0..batch {
-            let parts = Self::parts_in(particles, b, leaf);
-            let me = expansions::p2m(
-                &parts,
-                [centers[b * 2], centers[b * 2 + 1]],
-                radius[b],
-                terms,
-            );
-            Self::coeffs_out(&mut out, b, terms, &me);
+            let (cx, cy) = (centers[b * 2], centers[b * 2 + 1]);
+            let inv_r = 1.0 / radius[b];
+            let dst = &mut out[b * terms * 2..(b + 1) * terms * 2];
+            for j in 0..leaf {
+                let o = (b * leaf + j) * 3;
+                let dz = Complex::new((particles[o] - cx) * inv_r,
+                                      (particles[o + 1] - cy) * inv_r);
+                optable::p2m_accumulate(dz, particles[o + 2], terms, dst);
+            }
         }
         out
     }
 
     fn m2m(&self, me: &[f64], d: &[f64], rho: &[f64]) -> Vec<f64> {
         let OpDims { batch, terms, .. } = self.dims;
+        let binom = self.tables.binom();
         let mut out = vec![0.0; batch * terms * 2];
+        let mut dpw = vec![Complex::ONE; terms];
         for b in 0..batch {
-            let c = Self::coeffs_in(me, b, terms);
-            let shifted = expansions::m2m(
-                &c,
-                Complex::new(d[b * 2], d[b * 2 + 1]),
-                rho[b],
-                &self.binom,
+            let db = Complex::new(d[b * 2], d[b * 2 + 1]);
+            dpw[0] = Complex::ONE;
+            for m in 1..terms {
+                dpw[m] = dpw[m - 1] * db;
+            }
+            optable::m2m_contract(
+                binom, &dpw, rho[b], terms,
+                &me[b * terms * 2..(b + 1) * terms * 2],
+                &mut out[b * terms * 2..(b + 1) * terms * 2],
             );
-            Self::coeffs_out(&mut out, b, terms, &shifted);
         }
         out
     }
 
     fn m2l(&self, me: &[f64], tau: &[f64], inv_r: &[f64]) -> Vec<f64> {
         let OpDims { batch, terms, .. } = self.dims;
+        let binom = self.tables.binom();
         let mut out = vec![0.0; batch * terms * 2];
+        let mut ipw = vec![Complex::ONE; 2 * terms];
         for b in 0..batch {
-            let c = Self::coeffs_in(me, b, terms);
-            let le = expansions::m2l(
-                &c,
-                Complex::new(tau[b * 2], tau[b * 2 + 1]),
-                inv_r[b],
-                &self.binom,
+            let itau = Complex::new(tau[b * 2], tau[b * 2 + 1]).inv();
+            ipw[0] = Complex::ONE;
+            for n in 1..2 * terms {
+                ipw[n] = ipw[n - 1] * itau;
+            }
+            optable::m2l_contract(
+                binom, &ipw, inv_r[b], terms,
+                &me[b * terms * 2..(b + 1) * terms * 2],
+                &mut out[b * terms * 2..(b + 1) * terms * 2],
             );
-            Self::coeffs_out(&mut out, b, terms, &le);
         }
         out
     }
 
     fn l2l(&self, le: &[f64], d: &[f64], rho: &[f64]) -> Vec<f64> {
         let OpDims { batch, terms, .. } = self.dims;
+        let binom = self.tables.binom();
         let mut out = vec![0.0; batch * terms * 2];
+        let mut dpw = vec![Complex::ONE; terms];
         for b in 0..batch {
-            let c = Self::coeffs_in(le, b, terms);
-            let shifted = expansions::l2l(
-                &c,
-                Complex::new(d[b * 2], d[b * 2 + 1]),
-                rho[b],
-                &self.binom,
+            let db = Complex::new(d[b * 2], d[b * 2 + 1]);
+            dpw[0] = Complex::ONE;
+            for m in 1..terms {
+                dpw[m] = dpw[m - 1] * db;
+            }
+            optable::l2l_contract(
+                binom, &dpw, rho[b], terms,
+                &le[b * terms * 2..(b + 1) * terms * 2],
+                &mut out[b * terms * 2..(b + 1) * terms * 2],
             );
-            Self::coeffs_out(&mut out, b, terms, &shifted);
         }
         out
     }
 
     fn l2p(&self, le: &[f64], particles: &[f64], centers: &[f64],
            radius: &[f64]) -> Vec<f64> {
+        let OpDims { batch, leaf, .. } = self.dims;
+        let occ = vec![leaf as u32; batch];
+        self.l2p_occ(le, particles, centers, radius, &occ)
+    }
+
+    fn l2p_occ(&self, le: &[f64], particles: &[f64], centers: &[f64],
+               radius: &[f64], occupancy: &[u32]) -> Vec<f64> {
         let OpDims { batch, leaf, terms, .. } = self.dims;
         let mut out = vec![0.0; batch * leaf * 2];
         for b in 0..batch {
-            let c = Self::coeffs_in(le, b, terms);
-            let center = [centers[b * 2], centers[b * 2 + 1]];
+            let lb = &le[b * terms * 2..(b + 1) * terms * 2];
+            let (cx, cy) = (centers[b * 2], centers[b * 2 + 1]);
             let r = radius[b];
-            for j in 0..leaf {
+            let n = (occupancy[b] as usize).min(leaf);
+            for j in 0..n {
                 let o = (b * leaf + j) * 3;
-                let f = expansions::l2p(
-                    &c, center, r, particles[o], particles[o + 1]);
+                let dz = Complex::new((particles[o] - cx) / r,
+                                      (particles[o + 1] - cy) / r);
+                let f = optable::l2p_horner(lb, terms, dz);
                 let v = self.kernel.far_transform(f);
                 out[(b * leaf + j) * 2] = v[0];
                 out[(b * leaf + j) * 2 + 1] = v[1];
@@ -152,14 +168,23 @@ impl<K: Kernel> OpsBackend for NativeBackend<K> {
 
     fn p2p(&self, targets: &[f64], sources: &[f64]) -> Vec<f64> {
         let OpDims { batch, leaf, .. } = self.dims;
+        let occ = vec![leaf as u32; batch];
+        self.p2p_occ(targets, sources, &occ, &occ)
+    }
+
+    fn p2p_occ(&self, targets: &[f64], sources: &[f64], t_occ: &[u32],
+               s_occ: &[u32]) -> Vec<f64> {
+        let OpDims { batch, leaf, .. } = self.dims;
         let mut out = vec![0.0; batch * leaf * 2];
         for b in 0..batch {
-            for i in 0..leaf {
+            let nt = (t_occ[b] as usize).min(leaf);
+            let ns = (s_occ[b] as usize).min(leaf);
+            for i in 0..nt {
                 let to = (b * leaf + i) * 3;
                 let (tx, ty) = (targets[to], targets[to + 1]);
                 let mut u = 0.0;
                 let mut v = 0.0;
-                for j in 0..leaf {
+                for j in 0..ns {
                     let so = (b * leaf + j) * 3;
                     let g = sources[so + 2];
                     let w = self.kernel.direct(
@@ -179,9 +204,52 @@ impl<K: Kernel> OpsBackend for NativeBackend<K> {
     }
 }
 
+impl<K: Kernel> CachedOps for NativeBackend<K> {
+    fn tables(&self) -> &OpTables {
+        &self.tables
+    }
+
+    fn l2p_into(&self, le: &[f64], particles: &[[f64; 3]], idx: &[u32],
+                center: [f64; 2], r: f64, out: &mut [f64]) {
+        let terms = self.dims.terms;
+        debug_assert!(le.len() >= terms * 2);
+        debug_assert!(out.len() >= idx.len() * 2);
+        for (j, &i) in idx.iter().enumerate() {
+            let pa = particles[i as usize];
+            let dz = Complex::new((pa[0] - center[0]) / r,
+                                  (pa[1] - center[1]) / r);
+            let f = optable::l2p_horner(le, terms, dz);
+            let v = self.kernel.far_transform(f);
+            out[j * 2] = v[0];
+            out[j * 2 + 1] = v[1];
+        }
+    }
+
+    fn p2p_into(&self, particles: &[[f64; 3]], tidx: &[u32], sidx: &[u32],
+                out: &mut [f64]) {
+        debug_assert!(out.len() >= tidx.len() * 2);
+        for (ii, &i) in tidx.iter().enumerate() {
+            let t = particles[i as usize];
+            let mut u = 0.0;
+            let mut v = 0.0;
+            for &j in sidx {
+                let sp = particles[j as usize];
+                let w = self.kernel.direct(t[0] - sp[0], t[1] - sp[1],
+                                           sp[2]);
+                u += w[0];
+                v += w[1];
+            }
+            out[ii * 2] = u;
+            out[ii * 2 + 1] = v;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
+    use super::super::expansions;
     use super::super::kernel::BiotSavart2D;
+    use super::super::reference::BaselineBackend;
     use super::*;
     use crate::proptest::check;
 
@@ -243,5 +311,88 @@ mod tests {
         }
         let out = be.p2p(&t, &t);
         assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn prop_rewrite_is_bit_identical_to_pr1_baseline() {
+        // the allocation-free batched ABI must not move a single bit
+        // relative to the preserved PR-1 implementation, for all six ops
+        check("native == baseline bitwise", 16, |g| {
+            let d = dims();
+            let native = NativeBackend::new(d, BiotSavart2D::new(d.sigma));
+            let base = BaselineBackend::new(d, BiotSavart2D::new(d.sigma));
+            let rand = |g: &mut crate::proptest::Gen, n: usize,
+                        lo: f64, hi: f64| -> Vec<f64> {
+                (0..n).map(|_| g.f64_in(lo, hi)).collect()
+            };
+            let parts = rand(g, d.batch * d.leaf * 3, 0.0, 1.0);
+            let srcs = rand(g, d.batch * d.leaf * 3, 0.0, 1.0);
+            let centers = rand(g, d.batch * 2, 0.2, 0.8);
+            let radius = rand(g, d.batch, 0.05, 0.5);
+            let me = rand(g, d.batch * d.terms * 2, -1.0, 1.0);
+            let tau = rand(g, d.batch * 2, 2.0, 6.0);
+            let inv_r = rand(g, d.batch, 1.0, 64.0);
+            let dvec = rand(g, d.batch * 2, -0.5, 0.5);
+            let rho = vec![0.5; d.batch];
+            assert_eq!(native.p2m(&parts, &centers, &radius),
+                       base.p2m(&parts, &centers, &radius));
+            assert_eq!(native.m2m(&me, &dvec, &rho),
+                       base.m2m(&me, &dvec, &rho));
+            assert_eq!(native.m2l(&me, &tau, &inv_r),
+                       base.m2l(&me, &tau, &inv_r));
+            assert_eq!(native.l2l(&me, &dvec, &rho),
+                       base.l2l(&me, &dvec, &rho));
+            assert_eq!(native.l2p(&me, &parts, &centers, &radius),
+                       base.l2p(&me, &parts, &centers, &radius));
+            assert_eq!(native.p2p(&parts, &srcs), base.p2p(&parts, &srcs));
+        });
+    }
+
+    #[test]
+    fn occupancy_variants_only_drop_padded_lanes() {
+        let d = dims();
+        let be = NativeBackend::new(d, BiotSavart2D::new(d.sigma));
+        let mut g = crate::proptest::Gen::new(31);
+        let mut parts = vec![0.0; d.batch * d.leaf * 3];
+        for x in parts.iter_mut() {
+            *x = g.f64_in(0.0, 1.0);
+        }
+        // declare the last lane of each box padded: position at a fixed
+        // point, gamma exactly 0 (the batch assembler's convention)
+        let occ: Vec<u32> = vec![(d.leaf - 1) as u32; d.batch];
+        for b in 0..d.batch {
+            let o = (b * d.leaf + d.leaf - 1) * 3;
+            parts[o] = 0.5;
+            parts[o + 1] = 0.5;
+            parts[o + 2] = 0.0;
+        }
+        let full = be.p2p(&parts, &parts);
+        let skip = be.p2p_occ(&parts, &parts, &occ, &occ);
+        for b in 0..d.batch {
+            for j in 0..d.leaf - 1 {
+                let o = (b * d.leaf + j) * 2;
+                // padded sources contribute exact ±0.0: values equal
+                assert_eq!(full[o], skip[o]);
+                assert_eq!(full[o + 1], skip[o + 1]);
+            }
+            // the padded target lane is simply not computed
+            let o = (b * d.leaf + d.leaf - 1) * 2;
+            assert_eq!(skip[o], 0.0);
+            assert_eq!(skip[o + 1], 0.0);
+        }
+        let centers = vec![0.5; d.batch * 2];
+        let radius = vec![0.25; d.batch];
+        let me: Vec<f64> = (0..d.batch * d.terms * 2)
+            .map(|_| g.normal())
+            .collect();
+        let full = be.l2p(&me, &parts, &centers, &radius);
+        let skip = be.l2p_occ(&me, &parts, &centers, &radius, &occ);
+        for b in 0..d.batch {
+            for j in 0..d.leaf - 1 {
+                let o = (b * d.leaf + j) * 2;
+                assert_eq!(full[o], skip[o]);
+                assert_eq!(full[o + 1], skip[o + 1]);
+            }
+        }
     }
 }

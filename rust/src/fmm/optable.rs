@@ -1,0 +1,427 @@
+//! Precomputed translation-operator tables and the allocation-free
+//! operator hot path (DESIGN.md §8).
+//!
+//! A uniform quadtree has a tiny set of distinct translation operators:
+//! at most 40 well-separated M2L offsets `(di, dj)` (Chebyshev distance
+//! 2..=3) and exactly 4 M2M/L2L child shifts — and in the radius-scaled
+//! convention of `expansions.rs` every one of them is *level-invariant*:
+//!
+//! * M2L: `tau = (z_src - z_tgt)/r = 2 di + 2 dj i` (box width is twice
+//!   the half-width), so the `itau^n` power table depends only on the
+//!   offset; only the final `1/r` scale is per level.
+//! * M2M/L2L: `d = (z_child - z_parent)/r_parent = (±1/2, ±1/2)` and
+//!   `rho = r_child/r_parent = 1/2` for every level.
+//!
+//! [`OpTables`] precomputes the `itau^n` tables for all 40 offsets, the
+//! `d^m` tables for the 4 child quadrants, the `rho^k` powers, and holds
+//! the flattened (sign-folded) binomial rows.  The free functions below
+//! apply one operator to one coefficient block, reading the input
+//! straight out of an [`ExpansionArena`] slice and writing into a
+//! caller-provided output slice — no heap allocation anywhere on the
+//! path.
+//!
+//! Bitwise determinism: every table entry is produced by the *same*
+//! recurrence the uncached scalar operators in `expansions.rs` use
+//! (`ipw[n] = ipw[n-1] * itau`, `dpw[m] = dpw[m-1] * d`, `rpw *= rho`),
+//! and every accumulation below adds the same terms in the same order,
+//! so the cached path is bit-identical to the scalar functions given the
+//! same geometric inputs (enforced by `tests/optable_cached.rs`).  On
+//! power-of-two domains (all bitwise-pinned configurations) the table
+//! inputs themselves equal the center-difference arithmetic of the
+//! uncached path exactly, because every quantity is a dyadic rational.
+//!
+//! [`ExpansionArena`]: super::arena::ExpansionArena
+
+use crate::quadtree::{box_offset, well_separated_offsets, BoxId};
+use crate::util::{BinomialTable, Complex};
+
+/// Dense key space for same-level box offsets with `|di|, |dj| <= 3`:
+/// `(di + 3) * 7 + (dj + 3)`, i.e. 49 slots of which 40 are
+/// well separated.
+pub const KEY_SPAN: usize = 49;
+
+/// Key of an offset `(di, dj)` with components in `-3..=3`.
+#[inline]
+pub fn offset_key(di: i32, dj: i32) -> usize {
+    debug_assert!(
+        di.abs() <= 3 && dj.abs() <= 3,
+        "offset ({di},{dj}) outside the interaction-list range"
+    );
+    ((di + 3) * 7 + (dj + 3)) as usize
+}
+
+/// Key of the M2L pair (target, source) — same-level, well separated.
+/// Same offset convention as the plan census (`quadtree::box_offset`).
+#[inline]
+pub fn m2l_key(tgt: &BoxId, src: &BoxId) -> usize {
+    let (di, dj) = box_offset(tgt, src);
+    offset_key(di, dj)
+}
+
+/// Child-shift quadrant of a box within its parent: bit 0 = `ix & 1`,
+/// bit 1 = `iy & 1`, matching the `d = (e_x - 1/2, e_y - 1/2)` tables.
+#[inline]
+pub fn child_quadrant(b: &BoxId) -> usize {
+    (((b.iy & 1) << 1) | (b.ix & 1)) as usize
+}
+
+/// Geometry-free translation-operator tables for `terms` expansion terms.
+///
+/// Built once per backend (a few KB); shared read-only by every worker
+/// thread.  Per-level data reduces to the single scalar `1/r`, which the
+/// evaluator supplies per call.
+#[derive(Clone, Debug)]
+pub struct OpTables {
+    terms: usize,
+    binom: BinomialTable,
+    /// `itau^n` for `n < 2p`, indexed by [`offset_key`]; empty vectors at
+    /// the 9 near-field keys (never dereferenced).
+    m2l_ipw: Vec<Vec<Complex>>,
+    /// `d^m` for `m < p` per child quadrant (`d = (±1/2, ±1/2)`).
+    shift_dpw: [Vec<Complex>; 4],
+}
+
+impl OpTables {
+    pub fn new(terms: usize) -> Self {
+        let p = terms;
+        let binom = BinomialTable::for_terms(p);
+        let mut m2l_ipw = vec![Vec::new(); KEY_SPAN];
+        for (di, dj) in well_separated_offsets() {
+            let tau = Complex::new(2.0 * di as f64, 2.0 * dj as f64);
+            let itau = tau.inv();
+            let mut ipw = vec![Complex::ONE; 2 * p];
+            for n in 1..2 * p {
+                ipw[n] = ipw[n - 1] * itau;
+            }
+            m2l_ipw[offset_key(di, dj)] = ipw;
+        }
+        let shift_dpw = std::array::from_fn(|q| {
+            let d = Complex::new(
+                (q & 1) as f64 - 0.5,
+                ((q >> 1) & 1) as f64 - 0.5,
+            );
+            let mut dpw = vec![Complex::ONE; p];
+            for m in 1..p {
+                dpw[m] = dpw[m - 1] * d;
+            }
+            dpw
+        });
+        OpTables { terms: p, binom, m2l_ipw, shift_dpw }
+    }
+
+    pub fn terms(&self) -> usize {
+        self.terms
+    }
+
+    pub fn binom(&self) -> &BinomialTable {
+        &self.binom
+    }
+
+    /// Resident bytes of all cached tables, binomial rows included
+    /// (diagnostics; a few tens of KB at p = 17).
+    pub fn bytes(&self) -> usize {
+        let cplx = std::mem::size_of::<Complex>();
+        self.m2l_ipw.iter().map(|v| v.len() * cplx).sum::<usize>()
+            + self.shift_dpw.iter().map(|v| v.len() * cplx).sum::<usize>()
+            + self.binom.bytes()
+    }
+}
+
+// ---------------------------------------------------------------------
+// shared contraction kernels: ONE definition of each inner loop, called
+// by both the cached per-offset path below and the generic batched ABI
+// in `NativeBackend` (which supplies a freshly computed power table).
+// Keeping a single copy is what makes "bit-identical across paths" a
+// structural property instead of a discipline.
+// ---------------------------------------------------------------------
+
+/// M2L contraction of the ME block `me` against the power table `ipw`
+/// (`itau^n`, `n < 2p`), scaled by `inv_r` into `out`.  Adds the same
+/// terms in the same order as `expansions::m2l`.
+pub(crate) fn m2l_contract(binom: &BinomialTable, ipw: &[Complex],
+                           inv_r: f64, p: usize, me: &[f64],
+                           out: &mut [f64]) {
+    debug_assert!(me.len() >= 2 * p && out.len() >= 2 * p);
+    debug_assert!(ipw.len() >= 2 * p);
+    for l in 0..p {
+        let row = binom.m2l_row(l);
+        let mut acc = Complex::ZERO;
+        for k in 0..p {
+            let mek = Complex::new(me[2 * k], me[2 * k + 1]);
+            acc += (mek * ipw[k + l + 1]).scale(row[k]);
+        }
+        let o = acc.scale(inv_r);
+        out[2 * l] = o.re;
+        out[2 * l + 1] = o.im;
+    }
+}
+
+/// M2M contraction of the child ME block `me` against the shift-power
+/// table `dpw` (`d^m`, `m < p`) with child/parent radius ratio `rho`,
+/// overwriting `out`.  The k-outer loop hoists the `rho^k` scale while
+/// still feeding each `out[l]` in the ascending-k order of the scalar
+/// accumulator in `expansions::m2m` — bit-identical output.
+pub(crate) fn m2m_contract(binom: &BinomialTable, dpw: &[Complex],
+                           rho: f64, p: usize, me: &[f64],
+                           out: &mut [f64]) {
+    debug_assert!(me.len() >= 2 * p && out.len() >= 2 * p);
+    out[..2 * p].fill(0.0);
+    let mut rpw = 1.0;
+    for k in 0..p {
+        let a = Complex::new(me[2 * k], me[2 * k + 1]).scale(rpw);
+        rpw *= rho;
+        for l in k..p {
+            let v = (dpw[l - k] * a).scale(binom.get(l, k));
+            out[2 * l] += v.re;
+            out[2 * l + 1] += v.im;
+        }
+    }
+}
+
+/// L2L contraction of the parent LE block `le` against the shift-power
+/// table `dpw`, writing `out`.  Same term order as `expansions::l2l`.
+pub(crate) fn l2l_contract(binom: &BinomialTable, dpw: &[Complex],
+                           rho: f64, p: usize, le: &[f64],
+                           out: &mut [f64]) {
+    debug_assert!(le.len() >= 2 * p && out.len() >= 2 * p);
+    let mut rpw = 1.0;
+    for l in 0..p {
+        let mut acc = Complex::ZERO;
+        for m in l..p {
+            let cm = Complex::new(le[2 * m], le[2 * m + 1]);
+            acc += (dpw[m - l] * cm).scale(binom.get(m, l));
+        }
+        let o = acc.scale(rpw);
+        rpw *= rho;
+        out[2 * l] = o.re;
+        out[2 * l + 1] = o.im;
+    }
+}
+
+/// One particle's P2M contribution (`dz` pre-scaled by `1/r`, strength
+/// `g`) accumulated into the interleaved ME block `out` — the single
+/// inner loop every P2M variant shares (same op order as
+/// `expansions::p2m`).
+#[inline]
+pub(crate) fn p2m_accumulate(dz: Complex, g: f64, p: usize,
+                             out: &mut [f64]) {
+    let mut pw = Complex::ONE;
+    for k in 0..p {
+        out[2 * k] += pw.re * g;
+        out[2 * k + 1] += pw.im * g;
+        pw = pw * dz;
+    }
+}
+
+/// Horner evaluation of an interleaved LE block at the pre-scaled point
+/// `dz` — the single L2P inner loop (same op order as
+/// `expansions::l2p`).
+#[inline]
+pub(crate) fn l2p_horner(le: &[f64], p: usize, dz: Complex) -> Complex {
+    let mut acc = Complex::ZERO;
+    for k in (0..p).rev() {
+        acc = acc * dz + Complex::new(le[2 * k], le[2 * k + 1]);
+    }
+    acc
+}
+
+/// Cached M2L: transform the ME block `me` (interleaved re/im, `p`
+/// complex terms) across the offset `key` into the LE block `out`.
+/// Bit-identical to `expansions::m2l` with `tau = (2di, 2dj)`.
+pub fn m2l(t: &OpTables, key: usize, inv_r: f64, me: &[f64],
+           out: &mut [f64]) {
+    let ipw = &t.m2l_ipw[key];
+    debug_assert!(!ipw.is_empty(), "key {key} is not well separated");
+    m2l_contract(&t.binom, ipw, inv_r, t.terms, me, out);
+}
+
+/// Cached M2M: shift the child ME block `me` (child quadrant `q`) into
+/// the parent frame, writing `out`.  Bit-identical to `expansions::m2m`
+/// with `d = (±1/2, ±1/2)`, `rho = 1/2`.
+pub fn m2m(t: &OpTables, q: usize, me: &[f64], out: &mut [f64]) {
+    m2m_contract(&t.binom, &t.shift_dpw[q], 0.5, t.terms, me, out);
+}
+
+/// Cached L2L: shift the parent LE block `le` into child quadrant `q`,
+/// writing `out`.  Bit-identical to `expansions::l2l` with
+/// `d = (±1/2, ±1/2)`, `rho = 1/2`.
+pub fn l2l(t: &OpTables, q: usize, le: &[f64], out: &mut [f64]) {
+    l2l_contract(&t.binom, &t.shift_dpw[q], 0.5, t.terms, le, out);
+}
+
+/// Allocation-free P2M over an index chunk: accumulate the scaled ME of
+/// the particles `idx` (into `particles`) about `(center, r)` into
+/// `out` (`p` interleaved complex terms, caller-zeroed).  Identical to
+/// `expansions::p2m` over the same particles in the same order; padded
+/// lanes never existed here, so nothing is skipped.
+pub fn p2m_indexed(particles: &[[f64; 3]], idx: &[u32], center: [f64; 2],
+                   r: f64, p: usize, out: &mut [f64]) {
+    debug_assert!(out.len() >= 2 * p);
+    let inv_r = 1.0 / r;
+    for &i in idx {
+        let pa = particles[i as usize];
+        let dz = Complex::new((pa[0] - center[0]) * inv_r,
+                              (pa[1] - center[1]) * inv_r);
+        p2m_accumulate(dz, pa[2], p, out);
+    }
+}
+
+/// Zero-copy, occupancy-aware kernel-dependent operators: the seam the
+/// evaluator's cached stage runners use for L2P and P2P.  Implemented by
+/// [`NativeBackend`] (monomorphized over its kernel); the coefficient
+/// operators need no kernel and live as free functions above.
+///
+/// `Sync` is a supertrait so `&dyn CachedOps` can cross the evaluator's
+/// scoped worker pool.
+///
+/// [`NativeBackend`]: super::native::NativeBackend
+pub trait CachedOps: Sync {
+    /// The precomputed translation-operator tables.
+    fn tables(&self) -> &OpTables;
+
+    /// L2P for one box: evaluate the LE block `le` at the particles
+    /// `idx`, writing one `[u, v]` pair per index into `out`.
+    fn l2p_into(&self, le: &[f64], particles: &[[f64; 3]], idx: &[u32],
+                center: [f64; 2], r: f64, out: &mut [f64]);
+
+    /// P2P for one (target chunk, source chunk) pair: accumulate the
+    /// direct interactions of sources `sidx` onto targets `tidx`,
+    /// writing one `[u, v]` pair per target index into `out`.
+    fn p2p_into(&self, particles: &[[f64; 3]], tidx: &[u32], sidx: &[u32],
+                out: &mut [f64]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::expansions;
+    use super::*;
+    use crate::proptest::{check, Gen};
+
+    fn rand_block(g: &mut Gen, p: usize) -> Vec<f64> {
+        (0..2 * p).map(|_| g.normal()).collect()
+    }
+
+    fn as_coeffs(block: &[f64]) -> expansions::Coeffs {
+        block
+            .chunks(2)
+            .map(|c| Complex::new(c[0], c[1]))
+            .collect()
+    }
+
+    #[test]
+    fn key_space_is_injective_over_the_offset_box() {
+        let mut seen = [false; KEY_SPAN];
+        for di in -3i32..=3 {
+            for dj in -3i32..=3 {
+                let k = offset_key(di, dj);
+                assert!(!seen[k], "key collision at ({di},{dj})");
+                seen[k] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn tables_exist_exactly_for_well_separated_keys() {
+        let t = OpTables::new(8);
+        let ws = well_separated_offsets();
+        for di in -3i32..=3 {
+            for dj in -3i32..=3 {
+                let have = !t.m2l_ipw[offset_key(di, dj)].is_empty();
+                assert_eq!(have, ws.contains(&(di, dj)), "({di},{dj})");
+            }
+        }
+        assert!(t.bytes() > 0);
+    }
+
+    #[test]
+    fn prop_cached_m2l_is_bit_identical_to_scalar() {
+        check("optable m2l == scalar", 64, |g: &mut Gen| {
+            let p = g.usize_in(2, 20);
+            let t = OpTables::new(p);
+            let offs = well_separated_offsets();
+            let (di, dj) = offs[g.usize_in(0, offs.len() - 1)];
+            let me = rand_block(g, p);
+            let inv_r = (1u64 << g.usize_in(1, 10)) as f64;
+            let mut out = vec![0.0; 2 * p];
+            m2l(&t, offset_key(di, dj), inv_r, &me, &mut out);
+            let tau = Complex::new(2.0 * di as f64, 2.0 * dj as f64);
+            let want =
+                expansions::m2l(&as_coeffs(&me), tau, inv_r, t.binom());
+            for l in 0..p {
+                assert_eq!(out[2 * l], want[l].re, "re l={l}");
+                assert_eq!(out[2 * l + 1], want[l].im, "im l={l}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_cached_m2m_l2l_are_bit_identical_to_scalar() {
+        check("optable m2m/l2l == scalar", 64, |g: &mut Gen| {
+            let p = g.usize_in(2, 20);
+            let t = OpTables::new(p);
+            let q = g.usize_in(0, 3);
+            let d = Complex::new(
+                (q & 1) as f64 - 0.5,
+                ((q >> 1) & 1) as f64 - 0.5,
+            );
+            let block = rand_block(g, p);
+            let mut out = vec![f64::NAN; 2 * p]; // m2m must fully overwrite
+            m2m(&t, q, &block, &mut out);
+            let want = expansions::m2m(&as_coeffs(&block), d, 0.5,
+                                       t.binom());
+            for l in 0..p {
+                assert_eq!(out[2 * l], want[l].re, "m2m re l={l}");
+                assert_eq!(out[2 * l + 1], want[l].im, "m2m im l={l}");
+            }
+            let mut out = vec![0.0; 2 * p];
+            l2l(&t, q, &block, &mut out);
+            let want = expansions::l2l(&as_coeffs(&block), d, 0.5,
+                                       t.binom());
+            for l in 0..p {
+                assert_eq!(out[2 * l], want[l].re, "l2l re l={l}");
+                assert_eq!(out[2 * l + 1], want[l].im, "l2l im l={l}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_p2m_indexed_matches_scalar_p2m() {
+        check("optable p2m == scalar", 32, |g: &mut Gen| {
+            let p = g.usize_in(2, 17);
+            let n = g.usize_in(1, 20);
+            let parts: Vec<[f64; 3]> = (0..n)
+                .map(|_| [g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0),
+                          g.normal()])
+                .collect();
+            let idx: Vec<u32> = (0..n as u32).collect();
+            let center = [g.f64_in(0.2, 0.8), g.f64_in(0.2, 0.8)];
+            let r = 0.125;
+            let mut out = vec![0.0; 2 * p];
+            p2m_indexed(&parts, &idx, center, r, p, &mut out);
+            let want = expansions::p2m(&parts, center, r, p);
+            for k in 0..p {
+                assert_eq!(out[2 * k], want[k].re, "re k={k}");
+                assert_eq!(out[2 * k + 1], want[k].im, "im k={k}");
+            }
+        });
+    }
+
+    #[test]
+    fn quadrant_matches_shift_geometry() {
+        // the table's d for quadrant(child) equals (cc - cp)/rp on the
+        // unit domain, where the arithmetic is exact
+        let parent = BoxId::new(3, 5, 2);
+        for child in parent.children() {
+            let q = child_quadrant(&child);
+            let cc = child.center([0.0, 0.0], 1.0);
+            let cp = parent.center([0.0, 0.0], 1.0);
+            let rp = parent.radius(1.0);
+            let want = Complex::new((cc[0] - cp[0]) / rp,
+                                    (cc[1] - cp[1]) / rp);
+            let d = Complex::new((q & 1) as f64 - 0.5,
+                                 ((q >> 1) & 1) as f64 - 0.5);
+            assert_eq!(d, want, "child {child:?}");
+        }
+    }
+}

@@ -1,18 +1,194 @@
-//! The original `HashMap<BoxId, Vec<f64>>`-backed serial evaluator, kept
-//! verbatim as a regression baseline.
+//! Performance baselines, kept verbatim so speedups stay measurable:
 //!
-//! `benches/hotpath.rs` races it against the dense-arena [`Evaluator`]
-//! (`super::evaluator`) to quantify what removing per-box hashing and
-//! allocation from the inner loops buys; a unit test below pins the two
-//! implementations to each other so the baseline cannot rot.  New code
-//! should always use [`Evaluator`].
+//! * [`ReferenceEvaluator`] — the seed `HashMap<BoxId, Vec<f64>>`-backed
+//!   serial evaluator (pre-PR-1).
+//! * [`BaselineBackend`] — the PR-1 batched native backend with its
+//!   per-pair `coeffs_in`/`parts_in`/output allocations, before the
+//!   operator caches and the allocation-free ABI of DESIGN.md §8.
+//!
+//! `benches/hotpath.rs` races them against the dense-arena [`Evaluator`]
+//! + cached [`NativeBackend`] to quantify what removing per-box hashing
+//! and per-pair allocation from the inner loops buys; unit tests pin the
+//! implementations to each other so the baselines cannot rot.  New code
+//! should always use [`Evaluator`] with [`NativeBackend`].
 //!
 //! [`Evaluator`]: super::evaluator::Evaluator
+//! [`NativeBackend`]: super::native::NativeBackend
 
 use std::collections::HashMap;
 
-use super::backend::OpsBackend;
+use super::backend::{OpDims, OpsBackend};
+use super::expansions;
+use super::kernel::Kernel;
 use crate::quadtree::{interaction_list, near_domain, BoxId, Quadtree};
+use crate::util::{BinomialTable, Complex};
+
+/// The PR-1 native batched backend, preserved verbatim: allocates staging
+/// vectors for every batch item (`coeffs_in`/`parts_in`) and a fresh
+/// output per scalar-operator call.  Exists purely as the measured
+/// "before" of the allocation-free hot path; bit-identical to
+/// [`super::native::NativeBackend`] (pinned by a test there).
+pub struct BaselineBackend<K: Kernel> {
+    dims: OpDims,
+    kernel: K,
+    binom: BinomialTable,
+}
+
+impl<K: Kernel> BaselineBackend<K> {
+    pub fn new(dims: OpDims, kernel: K) -> Self {
+        let binom = BinomialTable::for_terms(dims.terms);
+        BaselineBackend { dims, kernel, binom }
+    }
+
+    #[inline]
+    fn coeffs_in(buf: &[f64], b: usize, p: usize) -> Vec<Complex> {
+        (0..p)
+            .map(|k| Complex::new(buf[(b * p + k) * 2],
+                                  buf[(b * p + k) * 2 + 1]))
+            .collect()
+    }
+
+    #[inline]
+    fn coeffs_out(dst: &mut [f64], b: usize, p: usize, c: &[Complex]) {
+        for k in 0..p {
+            dst[(b * p + k) * 2] = c[k].re;
+            dst[(b * p + k) * 2 + 1] = c[k].im;
+        }
+    }
+
+    #[inline]
+    fn parts_in(buf: &[f64], b: usize, s: usize) -> Vec<[f64; 3]> {
+        (0..s)
+            .map(|j| {
+                let o = (b * s + j) * 3;
+                [buf[o], buf[o + 1], buf[o + 2]]
+            })
+            .collect()
+    }
+}
+
+impl<K: Kernel> OpsBackend for BaselineBackend<K> {
+    fn dims(&self) -> OpDims {
+        self.dims
+    }
+
+    fn sync_view(&self) -> Option<&(dyn OpsBackend + Sync)> {
+        Some(self)
+    }
+
+    fn p2m(&self, particles: &[f64], centers: &[f64], radius: &[f64])
+        -> Vec<f64> {
+        let OpDims { batch, leaf, terms, .. } = self.dims;
+        let mut out = vec![0.0; batch * terms * 2];
+        for b in 0..batch {
+            let parts = Self::parts_in(particles, b, leaf);
+            let me = expansions::p2m(
+                &parts,
+                [centers[b * 2], centers[b * 2 + 1]],
+                radius[b],
+                terms,
+            );
+            Self::coeffs_out(&mut out, b, terms, &me);
+        }
+        out
+    }
+
+    fn m2m(&self, me: &[f64], d: &[f64], rho: &[f64]) -> Vec<f64> {
+        let OpDims { batch, terms, .. } = self.dims;
+        let mut out = vec![0.0; batch * terms * 2];
+        for b in 0..batch {
+            let c = Self::coeffs_in(me, b, terms);
+            let shifted = expansions::m2m(
+                &c,
+                Complex::new(d[b * 2], d[b * 2 + 1]),
+                rho[b],
+                &self.binom,
+            );
+            Self::coeffs_out(&mut out, b, terms, &shifted);
+        }
+        out
+    }
+
+    fn m2l(&self, me: &[f64], tau: &[f64], inv_r: &[f64]) -> Vec<f64> {
+        let OpDims { batch, terms, .. } = self.dims;
+        let mut out = vec![0.0; batch * terms * 2];
+        for b in 0..batch {
+            let c = Self::coeffs_in(me, b, terms);
+            let le = expansions::m2l(
+                &c,
+                Complex::new(tau[b * 2], tau[b * 2 + 1]),
+                inv_r[b],
+                &self.binom,
+            );
+            Self::coeffs_out(&mut out, b, terms, &le);
+        }
+        out
+    }
+
+    fn l2l(&self, le: &[f64], d: &[f64], rho: &[f64]) -> Vec<f64> {
+        let OpDims { batch, terms, .. } = self.dims;
+        let mut out = vec![0.0; batch * terms * 2];
+        for b in 0..batch {
+            let c = Self::coeffs_in(le, b, terms);
+            let shifted = expansions::l2l(
+                &c,
+                Complex::new(d[b * 2], d[b * 2 + 1]),
+                rho[b],
+                &self.binom,
+            );
+            Self::coeffs_out(&mut out, b, terms, &shifted);
+        }
+        out
+    }
+
+    fn l2p(&self, le: &[f64], particles: &[f64], centers: &[f64],
+           radius: &[f64]) -> Vec<f64> {
+        let OpDims { batch, leaf, terms, .. } = self.dims;
+        let mut out = vec![0.0; batch * leaf * 2];
+        for b in 0..batch {
+            let c = Self::coeffs_in(le, b, terms);
+            let center = [centers[b * 2], centers[b * 2 + 1]];
+            let r = radius[b];
+            for j in 0..leaf {
+                let o = (b * leaf + j) * 3;
+                let f = expansions::l2p(
+                    &c, center, r, particles[o], particles[o + 1]);
+                let v = self.kernel.far_transform(f);
+                out[(b * leaf + j) * 2] = v[0];
+                out[(b * leaf + j) * 2 + 1] = v[1];
+            }
+        }
+        out
+    }
+
+    fn p2p(&self, targets: &[f64], sources: &[f64]) -> Vec<f64> {
+        let OpDims { batch, leaf, .. } = self.dims;
+        let mut out = vec![0.0; batch * leaf * 2];
+        for b in 0..batch {
+            for i in 0..leaf {
+                let to = (b * leaf + i) * 3;
+                let (tx, ty) = (targets[to], targets[to + 1]);
+                let mut u = 0.0;
+                let mut v = 0.0;
+                for j in 0..leaf {
+                    let so = (b * leaf + j) * 3;
+                    let g = sources[so + 2];
+                    let w = self.kernel.direct(
+                        tx - sources[so], ty - sources[so + 1], g);
+                    u += w[0];
+                    v += w[1];
+                }
+                out[(b * leaf + i) * 2] = u;
+                out[(b * leaf + i) * 2 + 1] = v;
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "baseline"
+    }
+}
 
 fn accumulate(dst: &mut HashMap<BoxId, Vec<f64>>, b: BoxId, c: &[f64]) {
     match dst.entry(b) {
@@ -321,5 +497,26 @@ mod tests {
         let baseline = ReferenceEvaluator::new(&tree, &backend).evaluate();
         let arena = Evaluator::new(&tree, &backend).evaluate().vel;
         assert_eq!(baseline, arena);
+    }
+
+    #[test]
+    fn all_four_evaluator_backend_pairings_agree_bitwise() {
+        // seed evaluator x {PR-1 baseline, native} and arena evaluator x
+        // {PR-1 baseline, native-cached} are one equivalence class: the
+        // operator caches and the allocation-free ABI move zero bits
+        let mut g = Gen::new(23);
+        let parts = g.clustered_particles(250, 2);
+        let tree = Quadtree::build(Domain::UNIT, 4, parts);
+        let dims = OpDims { batch: 16, leaf: 8, terms: 12, sigma: 0.01 };
+        let native = NativeBackend::new(dims, BiotSavart2D::new(0.01));
+        let base = BaselineBackend::new(dims, BiotSavart2D::new(0.01));
+        let seed_base = ReferenceEvaluator::new(&tree, &base).evaluate();
+        let seed_native =
+            ReferenceEvaluator::new(&tree, &native).evaluate();
+        let arena_base = Evaluator::new(&tree, &base).evaluate().vel;
+        let arena_cached = Evaluator::new(&tree, &native).evaluate().vel;
+        assert_eq!(seed_base, seed_native);
+        assert_eq!(seed_base, arena_base);
+        assert_eq!(seed_base, arena_cached);
     }
 }

@@ -10,5 +10,6 @@ pub mod node;
 
 pub use build::{Domain, Particle, Quadtree};
 pub use cut::{Adjacency, TreeCut};
-pub use neighbors::{interaction_list, near_domain, neighbors};
+pub use neighbors::{box_offset, interaction_list, near_domain, neighbors,
+                    well_separated_offsets};
 pub use node::BoxId;

@@ -33,6 +33,34 @@ pub fn near_domain(b: &BoxId) -> Vec<BoxId> {
     out
 }
 
+/// Integer index offset `(di, dj) = (src - tgt)` between two same-level
+/// boxes — the translation-invariant coordinate the per-level operator
+/// caches (`fmm::optable`) are keyed on.
+#[inline]
+pub fn box_offset(tgt: &BoxId, src: &BoxId) -> (i32, i32) {
+    debug_assert_eq!(tgt.level, src.level, "offset needs same-level boxes");
+    (
+        src.ix as i32 - tgt.ix as i32,
+        src.iy as i32 - tgt.iy as i32,
+    )
+}
+
+/// Every offset an interaction-list pair can have: `(di, dj)` with
+/// components in `-3..=3` and Chebyshev distance ≥ 2 (well separated).
+/// Exactly 40 entries in 2D — the uniform quadtree needs at most one
+/// cached M2L operator per entry, regardless of level or box count.
+pub fn well_separated_offsets() -> Vec<(i32, i32)> {
+    let mut out = Vec::with_capacity(40);
+    for di in -3i32..=3 {
+        for dj in -3i32..=3 {
+            if di.abs().max(dj.abs()) >= 2 {
+                out.push((di, dj));
+            }
+        }
+    }
+    out
+}
+
 /// The interaction list: same-level boxes that are children of the
 /// parent's near domain but not adjacent to `b` (≤ 27 in 2D).
 pub fn interaction_list(b: &BoxId) -> Vec<BoxId> {
@@ -152,6 +180,29 @@ mod tests {
                         "{c:?} must be in exactly one of near/IL"
                     );
                 }
+            }
+        });
+    }
+
+    #[test]
+    fn well_separated_offsets_cover_all_interaction_offsets() {
+        let offsets = well_separated_offsets();
+        assert_eq!(offsets.len(), 40);
+        for &(di, dj) in &offsets {
+            assert!(di.abs() <= 3 && dj.abs() <= 3);
+            assert!(di.abs().max(dj.abs()) >= 2);
+        }
+        // every offset realized by an actual interaction list is covered
+        check("IL offsets ⊆ 40", 32, |g: &mut Gen| {
+            let level = g.usize_in(2, 6) as u8;
+            let n = (1u32 << level) as usize;
+            let b = BoxId::new(
+                level,
+                g.usize_in(0, n - 1) as u32,
+                g.usize_in(0, n - 1) as u32,
+            );
+            for c in interaction_list(&b) {
+                assert!(offsets.contains(&box_offset(&b, &c)));
             }
         });
     }

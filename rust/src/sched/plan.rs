@@ -14,13 +14,13 @@
 //! identical to the serial run, which is what makes the §6.2 consistency
 //! checks bitwise instead of tolerance-based.
 
-use std::collections::{BTreeMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet, HashSet};
 
 use crate::comm::{interaction_overlap, neighbor_overlap, owner_of};
 use crate::fmm::{Evaluator, FmmState};
 use crate::partition::Assignment;
-use crate::quadtree::{interaction_list, near_domain, BoxId, Quadtree,
-                      TreeCut};
+use crate::quadtree::{box_offset, interaction_list, near_domain, BoxId,
+                      Quadtree, TreeCut};
 
 /// Expansion-block wire size: 16 p bytes (p complex f64).
 pub fn coeff_bytes(terms: usize) -> f64 {
@@ -57,6 +57,12 @@ pub struct ParallelPlan {
     pub m2l_exchange_blocks: BTreeMap<(usize, usize), usize>,
     /// (from, to) -> particles crossing in the P2P halo
     pub halo_particles: BTreeMap<(usize, usize), usize>,
+    /// per tree level: the distinct well-separated offsets `(di, dj)`
+    /// this plan's M2L pairs actually use (root sweep + every rank),
+    /// sorted.  At most 40 per level in 2D — `fmm::optable` caches one
+    /// translation operator per entry, which is why the M2L hot path
+    /// needs no per-pair operator setup.
+    pub m2l_offsets: Vec<Vec<(i32, i32)>>,
 }
 
 impl ParallelPlan {
@@ -193,6 +199,27 @@ impl ParallelPlan {
             }
         }
 
+        // ---- per-level translation-operator census (DESIGN.md §8) ----
+        let mut offset_sets: Vec<BTreeSet<(i32, i32)>> =
+            vec![BTreeSet::new(); levels as usize + 1];
+        for (li, pairs) in root_m2l_pairs.iter().enumerate() {
+            for (tgt, src) in pairs {
+                offset_sets[li + 2].insert(box_offset(tgt, src));
+            }
+        }
+        for rank_pairs in &m2l_pairs {
+            for (li, pairs) in rank_pairs.iter().enumerate() {
+                for (tgt, src) in pairs {
+                    offset_sets[k as usize + 1 + li]
+                        .insert(box_offset(tgt, src));
+                }
+            }
+        }
+        let m2l_offsets: Vec<Vec<(i32, i32)>> = offset_sets
+            .into_iter()
+            .map(|s| s.into_iter().collect())
+            .collect();
+
         ParallelPlan {
             ranks,
             leaves,
@@ -208,6 +235,7 @@ impl ParallelPlan {
             scatter_blocks,
             m2l_exchange_blocks,
             halo_particles,
+            m2l_offsets,
         }
     }
 
@@ -313,6 +341,27 @@ mod tests {
                 }
             }
             assert_eq!(total, want);
+        });
+    }
+
+    #[test]
+    fn prop_offset_census_is_bounded_and_well_separated() {
+        // the plan never needs more distinct M2L operators per level
+        // than the 40 cached by fmm::optable
+        check("≤40 offsets per level", 6, |g| {
+            let (tree, _, _, plan) = build(g, 400, 4, 2, 4);
+            let all = crate::quadtree::well_separated_offsets();
+            assert_eq!(plan.m2l_offsets.len(),
+                       tree.levels as usize + 1);
+            for (lvl, offs) in plan.m2l_offsets.iter().enumerate() {
+                assert!(offs.len() <= 40, "level {lvl}: {}", offs.len());
+                if lvl < 2 {
+                    assert!(offs.is_empty());
+                }
+                for o in offs {
+                    assert!(all.contains(o), "level {lvl}: {o:?}");
+                }
+            }
         });
     }
 

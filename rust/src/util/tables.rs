@@ -3,11 +3,18 @@
 //! M2M/M2L/L2L each contract against C(n,k); at p = 17 (paper §7) the
 //! largest coefficient is C(32,16) ≈ 6·10⁸, well inside f64.
 
-/// Pascal's-triangle table of C(n, k) for n, k < size.
+/// Pascal's-triangle table of C(n, k) for n, k < size, plus the signed
+/// M2L contraction rows the hot path consumes as contiguous slices.
 #[derive(Clone, Debug)]
 pub struct BinomialTable {
     size: usize,
     c: Vec<f64>,
+    /// Expansion-term count the M2L rows were sized for (`size / 2`).
+    terms: usize,
+    /// Row-major `terms x terms`: entry `[l * terms + k]` is
+    /// `(-1)^(k+1) C(k + l, k)` — the full per-`l` coefficient of the
+    /// M2L contraction, sign already folded in.
+    m2l_rows: Vec<f64>,
 }
 
 impl BinomialTable {
@@ -30,7 +37,15 @@ impl BinomialTable {
                     };
             }
         }
-        BinomialTable { size, c }
+        let terms = size / 2;
+        let mut m2l_rows = vec![0.0; terms * terms];
+        for l in 0..terms {
+            for k in 0..terms {
+                let sign = if (k + 1) % 2 == 0 { 1.0 } else { -1.0 };
+                m2l_rows[l * terms + k] = sign * c[(k + l) * size + k];
+            }
+        }
+        BinomialTable { size, c, terms, m2l_rows }
     }
 
     /// C(n, k); zero when k > n. Panics if n >= table size.
@@ -42,6 +57,25 @@ impl BinomialTable {
         } else {
             self.c[n * self.size + k]
         }
+    }
+
+    /// Expansion-term count (`p`) the M2L rows cover.
+    pub fn terms(&self) -> usize {
+        self.terms
+    }
+
+    /// Resident bytes of the triangle + signed M2L rows (diagnostics).
+    pub fn bytes(&self) -> usize {
+        (self.c.len() + self.m2l_rows.len()) * 8
+    }
+
+    /// Signed M2L row for output order `l`: entry `k` is
+    /// `(-1)^(k+1) C(k + l, k)`, `k < terms` — consumed by the inner
+    /// loop without any per-iteration sign branch or 2D lookup.
+    #[inline]
+    pub fn m2l_row(&self, l: usize) -> &[f64] {
+        debug_assert!(l < self.terms, "m2l row {l} beyond p={}", self.terms);
+        &self.m2l_rows[l * self.terms..(l + 1) * self.terms]
     }
 }
 
@@ -78,5 +112,20 @@ mod tests {
         // the largest index M2L touches: C(2p-2, p-1)
         let v = t.get(2 * p - 2, p - 1);
         assert!(v > 6.0e8 && v < 6.1e8, "C(32,16)={v}");
+    }
+
+    #[test]
+    fn m2l_rows_fold_sign_into_binomial() {
+        let p = 11;
+        let t = BinomialTable::for_terms(p);
+        assert_eq!(t.terms(), p);
+        for l in 0..p {
+            let row = t.m2l_row(l);
+            assert_eq!(row.len(), p);
+            for (k, &v) in row.iter().enumerate() {
+                let sign = if (k + 1) % 2 == 0 { 1.0 } else { -1.0 };
+                assert_eq!(v, sign * t.get(k + l, k), "row {l} entry {k}");
+            }
+        }
     }
 }

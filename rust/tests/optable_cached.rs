@@ -1,0 +1,109 @@
+//! The operator-cache contract (DESIGN.md §8), enforced at the bit
+//! level: the cached zero-copy operator path must be indistinguishable —
+//! not "close", *identical* — from the scalar expansion operators, the
+//! PR-1 allocating backend, and the generic flattened-ABI evaluator
+//! path, at every worker-pool size.
+
+use petfmm::fmm::expansions;
+use petfmm::fmm::{optable, BaselineBackend, BiotSavart2D, Evaluator,
+                  NativeBackend, OpDims, OpTables};
+use petfmm::proptest::{check, Gen};
+use petfmm::quadtree::{well_separated_offsets, Domain, Quadtree};
+use petfmm::util::Complex;
+
+#[test]
+fn prop_cached_m2l_bit_identical_to_scalar_all_offsets_and_levels() {
+    // every one of the 40 cached operators, exercised at random tree
+    // levels (inv_r = 2^(l+1)) against the uncached scalar m2l
+    check("all 40 cached m2l == scalar", 40, |g: &mut Gen| {
+        let p = g.usize_in(4, 20);
+        let tables = OpTables::new(p);
+        let lvl = g.usize_in(2, 10) as u32;
+        let inv_r = (1u64 << (lvl + 1)) as f64;
+        let me: Vec<f64> = (0..2 * p).map(|_| g.normal()).collect();
+        let me_c: Vec<Complex> =
+            me.chunks(2).map(|c| Complex::new(c[0], c[1])).collect();
+        let mut out = vec![0.0; 2 * p];
+        for (di, dj) in well_separated_offsets() {
+            optable::m2l(&tables, optable::offset_key(di, dj), inv_r,
+                         &me, &mut out);
+            let tau = Complex::new(2.0 * di as f64, 2.0 * dj as f64);
+            let want = expansions::m2l(&me_c, tau, inv_r, tables.binom());
+            for l in 0..p {
+                assert_eq!(out[2 * l], want[l].re, "({di},{dj}) l={l}");
+                assert_eq!(out[2 * l + 1], want[l].im,
+                           "({di},{dj}) l={l}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cached_shifts_bit_identical_to_scalar_all_quadrants() {
+    check("4 cached shifts == scalar", 40, |g: &mut Gen| {
+        let p = g.usize_in(4, 20);
+        let tables = OpTables::new(p);
+        let block: Vec<f64> = (0..2 * p).map(|_| g.normal()).collect();
+        let block_c: Vec<Complex> =
+            block.chunks(2).map(|c| Complex::new(c[0], c[1])).collect();
+        for q in 0..4usize {
+            let d = Complex::new((q & 1) as f64 - 0.5,
+                                 ((q >> 1) & 1) as f64 - 0.5);
+            let mut out = vec![0.0; 2 * p];
+            optable::m2m(&tables, q, &block, &mut out);
+            let want = expansions::m2m(&block_c, d, 0.5, tables.binom());
+            for l in 0..p {
+                assert_eq!(out[2 * l], want[l].re, "m2m q={q} l={l}");
+                assert_eq!(out[2 * l + 1], want[l].im, "m2m q={q} l={l}");
+            }
+            let mut out = vec![0.0; 2 * p];
+            optable::l2l(&tables, q, &block, &mut out);
+            let want = expansions::l2l(&block_c, d, 0.5, tables.binom());
+            for l in 0..p {
+                assert_eq!(out[2 * l], want[l].re, "l2l q={q} l={l}");
+                assert_eq!(out[2 * l + 1], want[l].im, "l2l q={q} l={l}");
+            }
+        }
+    });
+}
+
+#[test]
+fn cached_path_is_deterministic_across_thread_counts() {
+    // quickstart-shaped workload over the cached path at 1/2/8 workers:
+    // the flat per-stage output buffer + sequential scatter must make
+    // every velocity bit-identical
+    let mut g = Gen::new(42);
+    let particles = g.particles(4000);
+    let tree = Quadtree::build(Domain::UNIT, 5, particles);
+    let dims = OpDims { batch: 64, leaf: 32, terms: 17, sigma: 0.005 };
+    let be = NativeBackend::new(dims, BiotSavart2D::new(dims.sigma));
+    let one = Evaluator::new(&tree, &be).evaluate().vel;
+    for threads in [2usize, 8] {
+        let t = Evaluator::new(&tree, &be)
+            .with_threads(threads)
+            .evaluate()
+            .vel;
+        assert_eq!(one, t, "threads={threads} changed bits");
+    }
+}
+
+#[test]
+fn cached_path_matches_pr1_baseline_backend_bitwise() {
+    // end-to-end: arena evaluator + cached native path vs the preserved
+    // PR-1 evaluator path (generic ABI + allocating BaselineBackend)
+    let mut g = Gen::new(7);
+    let particles = g.clustered_particles(2500, 3);
+    let tree = Quadtree::build(Domain::UNIT, 5, particles);
+    let dims = OpDims { batch: 64, leaf: 32, terms: 17, sigma: 0.005 };
+    let native = NativeBackend::new(dims, BiotSavart2D::new(dims.sigma));
+    let base = BaselineBackend::new(dims, BiotSavart2D::new(dims.sigma));
+    let cached = Evaluator::new(&tree, &native).evaluate().vel;
+    let pr1 = Evaluator::new(&tree, &base).evaluate().vel;
+    assert_eq!(cached, pr1, "operator caches moved bits");
+    // and the generic path of the rewritten backend agrees too
+    let generic = Evaluator::new(&tree, &native)
+        .with_cached_ops(false)
+        .evaluate()
+        .vel;
+    assert_eq!(cached, generic);
+}
