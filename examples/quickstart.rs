@@ -54,13 +54,15 @@ fn main() {
     let t_fmm = t0.elapsed().as_secs_f64();
     println!("fmm solve: {t_fmm:.3}s");
 
-    // 5. compare with the O(N^2) direct sum
+    // 5. compare with the O(N^2) direct sum (FMM velocities come back
+    //    in the tree's Morton order; map them to input order first)
+    let vel = state.vel_in_input_order(&tree);
     let t0 = std::time::Instant::now();
     let exact = direct_all(&BiotSavart2D::new(sigma), &particles);
     let t_direct = t0.elapsed().as_secs_f64();
     println!("direct solve: {t_direct:.3}s  (speedup {:.1}x)",
              t_direct / t_fmm);
     println!("rel-L2 error {:.3e}, max-abs error {:.3e}",
-             rel_l2_error(&state.vel, &exact),
-             max_abs_error(&state.vel, &exact));
+             rel_l2_error(&vel, &exact),
+             max_abs_error(&vel, &exact));
 }

@@ -19,8 +19,8 @@
 use petfmm::bench::{bench, bench_header, fmt_time, jarr, jnum, jobj,
                     jstr, write_bench_json, Samples};
 use petfmm::fmm::{resolve_threads, BaselineBackend, BiotSavart2D,
-                  Evaluator, FmmState, NativeBackend, OpDims, OpsBackend,
-                  ReferenceEvaluator};
+                  CachedOps, Evaluator, FmmState, NativeBackend, OpDims,
+                  OpsBackend, ReferenceEvaluator};
 use petfmm::proptest::Gen;
 use petfmm::quadtree::{interaction_list, near_domain, BoxId, Domain,
                        Quadtree};
@@ -116,24 +116,23 @@ fn upward_state(ev: &Evaluator, tree: &Quadtree, terms: usize)
     state
 }
 
-fn stage_pair(label: &str, pr1: &Samples, cached: &Samples, n_ops: usize)
-    -> (f64, String) {
+fn stage_pair(label: &str, pr1: &Samples, cached: &Samples,
+              n_ops: usize, extra: &[(&str, String)]) -> (f64, String) {
     let speedup = pr1.median() / cached.median();
     println!("{}", pr1.report());
     println!("{}   [{speedup:.2}x vs PR-1, {:.0} ns/op]",
              cached.report(), cached.median() / n_ops as f64 * 1e9);
-    (
-        speedup,
-        jobj(&[
-            ("stage", jstr(label)),
-            ("ops", jnum(n_ops as f64)),
-            ("pr1_s", jnum(pr1.median())),
-            ("cached_s", jnum(cached.median())),
-            ("cached_ns_per_op",
-             jnum(cached.median() / n_ops as f64 * 1e9)),
-            ("speedup", jnum(speedup)),
-        ]),
-    )
+    let mut fields = vec![
+        ("stage", jstr(label)),
+        ("ops", jnum(n_ops as f64)),
+        ("pr1_s", jnum(pr1.median())),
+        ("cached_s", jnum(cached.median())),
+        ("cached_ns_per_op",
+         jnum(cached.median() / n_ops as f64 * 1e9)),
+        ("speedup", jnum(speedup)),
+    ];
+    fields.extend(extra.iter().map(|(k, v)| (*k, v.clone())));
+    (speedup, jobj(&fields))
 }
 
 fn main() {
@@ -220,23 +219,97 @@ fn main() {
         }
     });
     let (m2l_speedup, m2l_json) =
-        stage_pair("m2l", &s_m2l_pr1, &s_m2l_cached, n_m2l);
+        stage_pair("m2l", &s_m2l_pr1, &s_m2l_cached, n_m2l, &[]);
 
     let nears = near_pairs(&tree);
     // executed pair count: sources without particles are skipped
     let n_p2p = nears
         .iter()
-        .filter(|(_, src)| !tree.particles_in(src).is_empty())
+        .filter(|(_, src)| tree.leaf_len(src) > 0)
         .count();
+    // executed pairwise interactions (the §3.1 near-field term): the
+    // denominator of ns_per_interaction, the layout-independent unit
+    let n_inter: u64 = nears
+        .iter()
+        .map(|(tgt, src)| {
+            (tree.leaf_len(tgt) * tree.leaf_len(src)) as u64
+        })
+        .sum();
     let s_p2p_pr1 = bench("p2p stage: PR-1 arena evaluator", w, smp, || {
         ev_base.run_p2p(&nears, &mut st_base);
     });
-    let s_p2p_cached = bench("p2p stage: cached zero-copy path", w, smp,
-                             || {
+    let s_p2p_cached = bench("p2p stage: slice/lane path", w, smp, || {
         ev_cached.run_p2p(&nears, &mut st_cached);
     });
-    let (_, p2p_json) =
-        stage_pair("p2p", &s_p2p_pr1, &s_p2p_cached, n_p2p);
+    let p2p_ns_per_inter =
+        s_p2p_cached.median() / n_inter as f64 * 1e9;
+    println!("p2p: {n_inter} pairwise interactions, \
+              {p2p_ns_per_inter:.2} ns/interaction");
+
+    // ---- gather-vs-slice micro-comparison: the identical interaction
+    // set driven through the index-gather ABI (PR-2 hot path) and
+    // through contiguous CSR slices (this PR's hot path) ----
+    let ops: &dyn CachedOps =
+        qnative.cached_ops().expect("native offers cached ops");
+    let s = qdims.leaf.max(1);
+    let mut scratch = vec![0.0; s * 2];
+    let s_gather = bench("p2p micro: index-gather (p2p_into)", w, smp,
+                         || {
+        for (tgt, src) in &nears {
+            let ti = tree.particles_in(tgt);
+            let si = tree.particles_in(src);
+            if ti.is_empty() || si.is_empty() {
+                continue;
+            }
+            for tc in ti.chunks(s) {
+                for sc in si.chunks(s) {
+                    ops.p2p_into(&tree.particles, tc, sc, &mut scratch);
+                    std::hint::black_box(&scratch);
+                }
+            }
+        }
+    });
+    println!("{}", s_gather.report());
+    let s_slice = bench("p2p micro: CSR slices (p2p_slice)", w, smp,
+                        || {
+        for (tgt, src) in &nears {
+            let (tlo, thi) = tree.leaf_range(tgt);
+            let (slo, shi) = tree.leaf_range(src);
+            if tlo == thi || slo == shi {
+                continue;
+            }
+            let mut t0 = tlo;
+            while t0 < thi {
+                let t1 = (t0 + s).min(thi);
+                let mut s0 = slo;
+                while s0 < shi {
+                    let s1 = (s0 + s).min(shi);
+                    ops.p2p_slice(&tree.xs[t0..t1], &tree.ys[t0..t1],
+                                  &tree.xs[s0..s1], &tree.ys[s0..s1],
+                                  &tree.gammas[s0..s1], &mut scratch);
+                    std::hint::black_box(&scratch);
+                    s0 = s1;
+                }
+                t0 = t1;
+            }
+        }
+    });
+    let gather_vs_slice = s_gather.median() / s_slice.median();
+    println!("{}   [{gather_vs_slice:.2}x vs gather]",
+             s_slice.report());
+
+    let (_, p2p_json) = stage_pair(
+        "p2p", &s_p2p_pr1, &s_p2p_cached, n_p2p,
+        &[
+            ("interactions", jnum(n_inter as f64)),
+            ("ns_per_interaction", jnum(p2p_ns_per_inter)),
+            ("gather_vs_slice", jobj(&[
+                ("gather_s", jnum(s_gather.median())),
+                ("slice_s", jnum(s_slice.median())),
+                ("speedup", jnum(gather_vs_slice)),
+            ])),
+        ],
+    );
 
     // ---- end-to-end: seed evaluator, PR-1 arena evaluator, cached
     // path, single- and multi-threaded dispatch ----
@@ -271,14 +344,16 @@ fn main() {
     println!("{}   [{:.2}x vs seed]", s_par.report(),
              s_ref.median() / s_par.median());
 
-    // determinism spot check alongside the numbers
+    // determinism spot check alongside the numbers (vel is internal
+    // Morton order; the seed evaluator reports input order)
     let a = Evaluator::new(&tree, &qnative).evaluate().vel;
     let b = Evaluator::new(&tree, &qnative).with_threads(0).evaluate().vel;
     let pr1 = Evaluator::new(&tree, &qbase).evaluate().vel;
     let r = ReferenceEvaluator::new(&tree, &qbase).evaluate();
     assert_eq!(a, b, "thread count changed bits");
     assert_eq!(a, pr1, "operator caches diverged from PR-1 baseline");
-    assert_eq!(a, r, "arena diverged from seed baseline");
+    assert_eq!(tree.to_input_order(&a), r,
+               "slice layout diverged from seed baseline");
     println!("bitwise: cached(1T) == cached({cores}T) == PR-1 == seed ✓");
     println!("m2l stage speedup vs PR-1: {m2l_speedup:.2}x (target ≥ 2x)");
 

@@ -52,13 +52,19 @@ fn main() {
     // no per-box map overhead at all
     let me_bytes = state.me.bytes();
     let le_bytes = state.le.bytes();
-    let part_bytes = tree.particles.len() * 24;
+    // input-order AoS copy + Morton-sorted SoA mirrors + permutation
+    // pair + CSR leaf offsets (DESIGN.md §9)
+    let part_bytes = tree.particles.len() * 24
+        + tree.xs.len() * 8 * 3
+        + tree.perm.len() * 4 * 2
+        + tree.leaf_offsets.len() * 4;
     println!("\nmeasured live structures (dense arenas):");
     println!("  multipole arena: {:>12} bytes ({} slots, {} present)",
              me_bytes, state.me.n_slots(), state.me.n_present());
     println!("  local arena:     {:>12} bytes ({} slots, {} present)",
              le_bytes, state.le.n_slots(), state.le.n_present());
-    println!("  particle storage:{:>12} bytes", part_bytes);
+    println!("  particle store:  {:>12} bytes (AoS + SoA + perm + CSR)",
+             part_bytes);
     let model_coeff = 16.0 * config.terms as f64;
     println!("  model says 16p = {:.0} B/box -> arena {:.1} B/slot \
               (+1 B presence bit)",

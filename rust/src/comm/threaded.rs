@@ -116,11 +116,14 @@ fn rank_main(
     let backend = NativeBackend::new(dims, BiotSavart2D::new(dims.sigma));
 
     // ---- phase A: halo exchange (send own boundary leaf particles) ----
-    let mut my_leaf_parts: HashMap<BoxId, Vec<[f64; 3]>> = HashMap::new();
-    for (p, _) in &my_parts {
-        let leaf = domain.locate(levels, p[0], p[1]);
-        my_leaf_parts.entry(leaf).or_default().push(*p);
-    }
+    // Bin the rank's own particles once (Morton-sorted CSR layout); each
+    // boundary leaf's payload is then one contiguous SoA slice — the
+    // stable sort keeps per-leaf particles in ascending own order, i.e.
+    // the global relative order the receiver's determinism contract
+    // expects.
+    let own_aos: Vec<[f64; 3]> =
+        my_parts.iter().map(|(p, _)| *p).collect();
+    let own_tree = Quadtree::build(domain, levels, own_aos);
     let mut expected_halo = 0usize;
     for ((from, to), boxes) in &nb_overlap.sends {
         if *from == rank {
@@ -128,8 +131,7 @@ fn rank_main(
                 txs[*to]
                     .send((rank, Message::Particles {
                         leaf: *b,
-                        parts: my_leaf_parts.get(b).cloned()
-                            .unwrap_or_default(),
+                        parts: own_tree.leaf_particles_aos(b),
                     }))
                     .expect("send halo");
             }
@@ -301,12 +303,14 @@ fn rank_main(
     ev.run_p2p(&plan.p2p_pairs[rank], &mut state);
 
     // ---- phase F: gather velocities at rank 0 ----
-    // local particle i < n_own corresponds to global_ids[i]; halo
-    // particles were appended after and carry no output.
-    // NOTE: local tree binning visits particles in insertion order, so
-    // local index i < n_own is exactly my_parts[i].
+    // state.vel is in the LOCAL tree's internal (Morton-sorted) order;
+    // local input index i < n_own is my_parts[i], so its velocity sits
+    // at internal position inv_perm[i].  Halo particles were appended
+    // after n_own and carry no output.
     let out: Vec<(u32, [f64; 2])> = (0..n_own)
-        .map(|i| (global_ids[i], state.vel[i]))
+        .map(|i| {
+            (global_ids[i], state.vel[tree.inv_perm[i] as usize])
+        })
         .collect();
     if rank == 0 {
         let mut all = out;
@@ -363,7 +367,9 @@ mod tests {
             let got = run_threaded(Domain::UNIT, levels, &parts, &cut, &a,
                                    dims);
             let backend = NativeBackend::new(dims, BiotSavart2D::new(0.01));
-            let want = Evaluator::new(&tree, &backend).evaluate().vel;
+            let want = Evaluator::new(&tree, &backend)
+                .evaluate()
+                .vel_in_input_order(&tree);
             let err = rel_l2_error(&got, &want);
             assert!(err < 1e-11, "threaded vs serial err {err}");
         });
@@ -401,7 +407,9 @@ mod tests {
         let got =
             run_threaded(Domain::UNIT, 3, &parts, &cut, &a, dims);
         let backend = NativeBackend::new(dims, BiotSavart2D::new(0.01));
-        let want = Evaluator::new(&tree, &backend).evaluate().vel;
+        let want = Evaluator::new(&tree, &backend)
+            .evaluate()
+            .vel_in_input_order(&tree);
         assert!(rel_l2_error(&got, &want) < 1e-12);
     }
 }

@@ -164,11 +164,13 @@ fn cmd_run(config: &RunConfig, dump: Option<&str>) -> Result<()> {
         );
         if let Some(path) = dump {
             let state = problem.serial(backend.as_ref());
+            let fmm = state.vel_in_input_order(&problem.tree);
             let vf = VerificationFile::build(
                 &problem.tree,
                 config.terms,
                 &state,
                 want,
+                fmm,
             );
             std::fs::write(path, vf.to_text())?;
             println!("verification file written to {path}");

@@ -6,14 +6,18 @@
 //! per-rank task subsets — "the serial code is completely reused in the
 //! parallel setting" (§6.1).
 //!
-//! Each runner has two execution paths (DESIGN.md §8):
+//! Each runner has two execution paths (DESIGN.md §8, §9):
 //!
 //! * **cached** (default when the backend offers [`CachedOps`]): tasks
 //!   read their coefficient blocks *straight out of the
 //!   [`ExpansionArena`]* and apply precomputed per-offset translation
 //!   operators (`fmm::optable`), writing into one flat per-stage output
 //!   buffer — zero per-task allocation, no flattened-ABI round trip, no
-//!   padded lanes.
+//!   padded lanes.  The particle stages (P2M, L2P, P2P) additionally
+//!   stream the tree's Morton-sorted SoA arrays through the CSR leaf
+//!   ranges: every task is a pair of *contiguous slices*, there is no
+//!   index-gather anywhere on the hot path, and L2P/P2P run the
+//!   lane-vectorized across-targets kernels (DESIGN.md §9).
 //! * **generic** (flattened batch ABI): pads every task list to the
 //!   backend's fixed batch shape (B boxes x S particle slots) and
 //!   scatters results back; leaves holding more than S particles are
@@ -51,7 +55,12 @@ pub struct FmmState {
     pub me: ExpansionArena,
     /// Scaled local coefficients, (P,2) per box slot.
     pub le: ExpansionArena,
-    /// Output velocities, one per particle.
+    /// Output velocities in the tree's **internal (Morton-sorted)
+    /// particle order** — `vel[pos]` belongs to input particle
+    /// `tree.perm[pos]` (DESIGN.md §9).  The L2P/P2P scatters write this
+    /// contiguously, leaf slice by leaf slice; map to input order with
+    /// [`FmmState::vel_in_input_order`] (or `Quadtree::to_input_order`)
+    /// at result boundaries.
     pub vel: Vec<[f64; 2]>,
 }
 
@@ -62,6 +71,11 @@ impl FmmState {
             le: ExpansionArena::new(levels, terms),
             vel: vec![[0.0; 2]; n_particles],
         }
+    }
+
+    /// Velocities permuted back to the caller's input particle order.
+    pub fn vel_in_input_order(&self, tree: &Quadtree) -> Vec<[f64; 2]> {
+        tree.to_input_order(&self.vel)
     }
 }
 
@@ -249,18 +263,26 @@ impl<'a> Evaluator<'a> {
     // tables, one flat output buffer per stage)
     // ------------------------------------------------------------------
 
+    /// Split a leaf's CSR range into chunks of at most S positions —
+    /// the same chunk boundaries the index-list path produced, so task
+    /// counts and accumulation order are unchanged.
+    fn leaf_range_chunks(&self, leaf: &BoxId, s: usize,
+                         tasks: &mut Vec<(BoxId, usize, usize)>) {
+        let (lo, hi) = self.tree.leaf_range(leaf);
+        let mut start = lo;
+        while start < hi {
+            let end = (start + s).min(hi);
+            tasks.push((*leaf, start, end));
+            start = end;
+        }
+    }
+
     fn run_p2m_cached(&self, leaves: &[BoxId], state: &mut FmmState) {
         let dims = self.backend.dims();
-        let (b, p, s) = (dims.batch, dims.terms, dims.leaf);
-        let mut tasks: Vec<(BoxId, &[u32])> = Vec::new();
+        let (b, p, s) = (dims.batch, dims.terms, dims.leaf.max(1));
+        let mut tasks: Vec<(BoxId, usize, usize)> = Vec::new();
         for leaf in leaves {
-            let idxs = self.tree.particles_in(leaf);
-            if idxs.is_empty() {
-                continue;
-            }
-            for chunk in idxs.chunks(s.max(1)) {
-                tasks.push((*leaf, chunk));
-            }
+            self.leaf_range_chunks(leaf, s, &mut tasks);
         }
         if tasks.is_empty() {
             return;
@@ -271,13 +293,14 @@ impl<'a> Evaluator<'a> {
             let tree = self.tree;
             let tasks = &tasks;
             self.par_fill(n, p * 2, &mut out, |i, dst| {
-                let (leaf, idx) = &tasks[i];
-                optable::p2m_indexed(&tree.particles, idx,
-                                     tree.center(leaf), tree.radius(leaf),
-                                     p, dst);
+                let (leaf, lo, hi) = tasks[i];
+                optable::p2m_slice(&tree.xs[lo..hi], &tree.ys[lo..hi],
+                                   &tree.gammas[lo..hi],
+                                   tree.center(&leaf), tree.radius(&leaf),
+                                   p, dst);
             });
         }
-        for (i, (leaf, _)) in tasks.iter().enumerate() {
+        for (i, (leaf, _, _)) in tasks.iter().enumerate() {
             state.me.accumulate(leaf, &out[i * p * 2..(i + 1) * p * 2]);
         }
         self.bump(|c| {
@@ -395,16 +418,13 @@ impl<'a> Evaluator<'a> {
     fn run_l2p_cached(&self, leaves: &[BoxId], state: &mut FmmState,
                       ops: &dyn CachedOps) {
         let dims = self.backend.dims();
-        let (b, s) = (dims.batch, dims.leaf);
-        let mut tasks: Vec<(BoxId, &[u32])> = Vec::new();
+        let (b, s) = (dims.batch, dims.leaf.max(1));
+        let mut tasks: Vec<(BoxId, usize, usize)> = Vec::new();
         for leaf in leaves {
-            let idxs = self.tree.particles_in(leaf);
-            if !state.le.contains(leaf) || idxs.is_empty() {
+            if !state.le.contains(leaf) {
                 continue;
             }
-            for chunk in idxs.chunks(s.max(1)) {
-                tasks.push((*leaf, chunk));
-            }
+            self.leaf_range_chunks(leaf, s, &mut tasks);
         }
         if tasks.is_empty() {
             return;
@@ -416,16 +436,18 @@ impl<'a> Evaluator<'a> {
             let le_arena = &state.le;
             let tasks = &tasks;
             self.par_fill(n, s * 2, &mut out, |i, dst| {
-                let (leaf, idx) = &tasks[i];
-                ops.l2p_into(le_arena.get(leaf).expect("filtered"),
-                             &tree.particles, idx, tree.center(leaf),
-                             tree.radius(leaf), dst);
+                let (leaf, lo, hi) = tasks[i];
+                ops.l2p_slice(le_arena.get(&leaf).expect("filtered"),
+                              &tree.xs[lo..hi], &tree.ys[lo..hi],
+                              tree.center(&leaf), tree.radius(&leaf),
+                              &mut dst[..(hi - lo) * 2]);
             });
         }
-        for (i, (_, idx)) in tasks.iter().enumerate() {
-            for (j, &pi) in idx.iter().enumerate() {
-                state.vel[pi as usize][0] += out[(i * s + j) * 2];
-                state.vel[pi as usize][1] += out[(i * s + j) * 2 + 1];
+        // contiguous scatter: chunk j lands at internal position lo + j
+        for (i, &(_, lo, hi)) in tasks.iter().enumerate() {
+            for j in 0..hi - lo {
+                state.vel[lo + j][0] += out[(i * s + j) * 2];
+                state.vel[lo + j][1] += out[(i * s + j) * 2 + 1];
             }
         }
         self.bump(|c| {
@@ -437,18 +459,26 @@ impl<'a> Evaluator<'a> {
     fn run_p2p_cached(&self, pairs: &[(BoxId, BoxId)],
                       state: &mut FmmState, ops: &dyn CachedOps) {
         let dims = self.backend.dims();
-        let (b, s) = (dims.batch, dims.leaf);
-        let mut tasks: Vec<(&[u32], &[u32])> = Vec::new();
+        let (b, s) = (dims.batch, dims.leaf.max(1));
+        // (t_lo, t_hi, s_lo, s_hi) CSR range chunks, target-major —
+        // identical task order to the old index-list expansion
+        let mut tasks: Vec<(usize, usize, usize, usize)> = Vec::new();
         for (tgt, src) in pairs {
-            let ti = self.tree.particles_in(tgt);
-            let si = self.tree.particles_in(src);
-            if ti.is_empty() || si.is_empty() {
+            let (tlo, thi) = self.tree.leaf_range(tgt);
+            let (slo, shi) = self.tree.leaf_range(src);
+            if tlo == thi || slo == shi {
                 continue;
             }
-            for tchunk in ti.chunks(s.max(1)) {
-                for schunk in si.chunks(s.max(1)) {
-                    tasks.push((tchunk, schunk));
+            let mut t0 = tlo;
+            while t0 < thi {
+                let t1 = (t0 + s).min(thi);
+                let mut s0 = slo;
+                while s0 < shi {
+                    let s1 = (s0 + s).min(shi);
+                    tasks.push((t0, t1, s0, s1));
+                    s0 = s1;
                 }
+                t0 = t1;
             }
         }
         if tasks.is_empty() {
@@ -460,16 +490,19 @@ impl<'a> Evaluator<'a> {
             let tree = self.tree;
             let tasks = &tasks;
             self.par_fill(n, s * 2, &mut out, |i, dst| {
-                let (tidx, sidx) = tasks[i];
-                ops.p2p_into(&tree.particles, tidx, sidx, dst);
+                let (tlo, thi, slo, shi) = tasks[i];
+                ops.p2p_slice(&tree.xs[tlo..thi], &tree.ys[tlo..thi],
+                              &tree.xs[slo..shi], &tree.ys[slo..shi],
+                              &tree.gammas[slo..shi],
+                              &mut dst[..(thi - tlo) * 2]);
             });
         }
-        for (i, (tidx, sidx)) in tasks.iter().enumerate() {
-            for (j, &pi) in tidx.iter().enumerate() {
-                state.vel[pi as usize][0] += out[(i * s + j) * 2];
-                state.vel[pi as usize][1] += out[(i * s + j) * 2 + 1];
+        for (i, &(tlo, thi, slo, shi)) in tasks.iter().enumerate() {
+            for j in 0..thi - tlo {
+                state.vel[tlo + j][0] += out[(i * s + j) * 2];
+                state.vel[tlo + j][1] += out[(i * s + j) * 2 + 1];
             }
-            let np = (tidx.len() * sidx.len()) as u64;
+            let np = ((thi - tlo) * (shi - slo)) as u64;
             self.bump(|c| c.p2p_pairs += np);
         }
         self.bump(|c| {
@@ -732,8 +765,10 @@ impl<'a> Evaluator<'a> {
         for (group, out) in groups.iter().zip(&outs) {
             for (t, (_, _, idx)) in group.iter().enumerate() {
                 for (j, &i) in idx.iter().enumerate() {
-                    state.vel[i as usize][0] += out[(t * s + j) * 2];
-                    state.vel[i as usize][1] += out[(t * s + j) * 2 + 1];
+                    // idx holds input-order indices; vel is internal order
+                    let pos = self.tree.inv_perm[i as usize] as usize;
+                    state.vel[pos][0] += out[(t * s + j) * 2];
+                    state.vel[pos][1] += out[(t * s + j) * 2 + 1];
                 }
             }
             self.bump(|c| {
@@ -796,8 +831,10 @@ impl<'a> Evaluator<'a> {
         for (group, out) in groups.iter().zip(&outs) {
             for (t, (_, tidx, _, slen)) in group.iter().enumerate() {
                 for (j, &i) in tidx.iter().enumerate() {
-                    state.vel[i as usize][0] += out[(t * s + j) * 2];
-                    state.vel[i as usize][1] += out[(t * s + j) * 2 + 1];
+                    // tidx holds input-order indices; vel is internal
+                    let pos = self.tree.inv_perm[i as usize] as usize;
+                    state.vel[pos][0] += out[(t * s + j) * 2];
+                    state.vel[pos][1] += out[(t * s + j) * 2 + 1];
                 }
                 let np = tidx.len() as u64 * *slen as u64;
                 self.bump(|c| c.p2p_pairs += np);
@@ -894,7 +931,8 @@ mod tests {
         let ev = Evaluator::new(&tree, &backend);
         let state = ev.evaluate();
         let want = direct_all(&kernel, &parts);
-        (state.vel, want)
+        // direct is input order; vel is internal order — map at the seam
+        (state.vel_in_input_order(&tree), want)
     }
 
     #[test]
@@ -972,7 +1010,7 @@ mod tests {
             let dims = OpDims { batch: 16, leaf: 8, terms: 17, sigma: 0.0 };
             let backend = NativeBackend::new(dims, Laplace2D);
             let ev = Evaluator::new(&tree, &backend);
-            let got = ev.evaluate().vel;
+            let got = ev.evaluate().vel_in_input_order(&tree);
             let want = direct_all(&Laplace2D, &parts);
             let err = rel_l2_error(&got, &want);
             assert!(err < 1e-4, "rel l2 err {err}");

@@ -23,7 +23,7 @@
 
 use super::backend::{OpDims, OpsBackend};
 use super::kernel::Kernel;
-use super::optable::{self, CachedOps, OpTables};
+use super::optable::{self, CachedOps, OpTables, TARGET_LANES};
 use crate::util::Complex;
 
 /// Native batched backend, generic over the interaction kernel.
@@ -41,6 +41,46 @@ impl<K: Kernel> NativeBackend<K> {
 
     pub fn kernel(&self) -> &K {
         &self.kernel
+    }
+
+    /// One full lane block of P2P: `TARGET_LANES` target accumulators
+    /// advance through the source stream together, each lane adding the
+    /// identical term sequence the scalar loop would (DESIGN.md §9:
+    /// vectorize across targets, never across sources).
+    #[inline]
+    fn p2p_lane_block(
+        &self,
+        tx: &[f64; TARGET_LANES],
+        ty: &[f64; TARGET_LANES],
+        sources: impl Iterator<Item = (f64, f64, f64)>,
+        u: &mut [f64; TARGET_LANES],
+        v: &mut [f64; TARGET_LANES],
+    ) {
+        *u = [0.0; TARGET_LANES];
+        *v = [0.0; TARGET_LANES];
+        for (sx, sy, g) in sources {
+            for l in 0..TARGET_LANES {
+                let w = self.kernel.direct(tx[l] - sx, ty[l] - sy, g);
+                u[l] += w[0];
+                v[l] += w[1];
+            }
+        }
+    }
+
+    /// Scalar P2P for one target (the remainder path of the lane kernel;
+    /// same sequential source order).
+    #[inline]
+    fn p2p_one(&self, tx: f64, ty: f64,
+               sources: impl Iterator<Item = (f64, f64, f64)>)
+        -> [f64; 2] {
+        let mut u = 0.0;
+        let mut v = 0.0;
+        for (sx, sy, g) in sources {
+            let w = self.kernel.direct(tx - sx, ty - sy, g);
+            u += w[0];
+            v += w[1];
+        }
+        [u, v]
     }
 }
 
@@ -148,12 +188,33 @@ impl<K: Kernel> OpsBackend for NativeBackend<K> {
                radius: &[f64], occupancy: &[u32]) -> Vec<f64> {
         let OpDims { batch, leaf, terms, .. } = self.dims;
         let mut out = vec![0.0; batch * leaf * 2];
+        let mut dzre = [0.0; TARGET_LANES];
+        let mut dzim = [0.0; TARGET_LANES];
+        let mut accre = [0.0; TARGET_LANES];
+        let mut accim = [0.0; TARGET_LANES];
         for b in 0..batch {
             let lb = &le[b * terms * 2..(b + 1) * terms * 2];
             let (cx, cy) = (centers[b * 2], centers[b * 2 + 1]);
             let r = radius[b];
             let n = (occupancy[b] as usize).min(leaf);
-            for j in 0..n {
+            let mut j = 0;
+            while j + TARGET_LANES <= n {
+                for l in 0..TARGET_LANES {
+                    let o = (b * leaf + j + l) * 3;
+                    dzre[l] = (particles[o] - cx) / r;
+                    dzim[l] = (particles[o + 1] - cy) / r;
+                }
+                optable::l2p_horner_lanes(lb, terms, &dzre, &dzim,
+                                          &mut accre, &mut accim);
+                for l in 0..TARGET_LANES {
+                    let v = self.kernel.far_transform(
+                        Complex::new(accre[l], accim[l]));
+                    out[(b * leaf + j + l) * 2] = v[0];
+                    out[(b * leaf + j + l) * 2 + 1] = v[1];
+                }
+                j += TARGET_LANES;
+            }
+            for j in j..n {
                 let o = (b * leaf + j) * 3;
                 let dz = Complex::new((particles[o] - cx) / r,
                                       (particles[o + 1] - cy) / r);
@@ -176,24 +237,39 @@ impl<K: Kernel> OpsBackend for NativeBackend<K> {
                s_occ: &[u32]) -> Vec<f64> {
         let OpDims { batch, leaf, .. } = self.dims;
         let mut out = vec![0.0; batch * leaf * 2];
+        let mut tx = [0.0; TARGET_LANES];
+        let mut ty = [0.0; TARGET_LANES];
+        let mut u = [0.0; TARGET_LANES];
+        let mut v = [0.0; TARGET_LANES];
         for b in 0..batch {
             let nt = (t_occ[b] as usize).min(leaf);
             let ns = (s_occ[b] as usize).min(leaf);
-            for i in 0..nt {
-                let to = (b * leaf + i) * 3;
-                let (tx, ty) = (targets[to], targets[to + 1]);
-                let mut u = 0.0;
-                let mut v = 0.0;
-                for j in 0..ns {
-                    let so = (b * leaf + j) * 3;
-                    let g = sources[so + 2];
-                    let w = self.kernel.direct(
-                        tx - sources[so], ty - sources[so + 1], g);
-                    u += w[0];
-                    v += w[1];
+            let sblock = &sources[b * leaf * 3..(b * leaf + ns) * 3];
+            let srcs = || {
+                sblock
+                    .chunks_exact(3)
+                    .map(|s| (s[0], s[1], s[2]))
+            };
+            let mut i = 0;
+            while i + TARGET_LANES <= nt {
+                for l in 0..TARGET_LANES {
+                    let to = (b * leaf + i + l) * 3;
+                    tx[l] = targets[to];
+                    ty[l] = targets[to + 1];
                 }
-                out[(b * leaf + i) * 2] = u;
-                out[(b * leaf + i) * 2 + 1] = v;
+                self.p2p_lane_block(&tx, &ty, srcs(), &mut u, &mut v);
+                for l in 0..TARGET_LANES {
+                    out[(b * leaf + i + l) * 2] = u[l];
+                    out[(b * leaf + i + l) * 2 + 1] = v[l];
+                }
+                i += TARGET_LANES;
+            }
+            for i in i..nt {
+                let to = (b * leaf + i) * 3;
+                let w = self.p2p_one(targets[to], targets[to + 1],
+                                     srcs());
+                out[(b * leaf + i) * 2] = w[0];
+                out[(b * leaf + i) * 2 + 1] = w[1];
             }
         }
         out
@@ -241,6 +317,77 @@ impl<K: Kernel> CachedOps for NativeBackend<K> {
             }
             out[ii * 2] = u;
             out[ii * 2 + 1] = v;
+        }
+    }
+
+    fn l2p_slice(&self, le: &[f64], xs: &[f64], ys: &[f64],
+                 center: [f64; 2], r: f64, out: &mut [f64]) {
+        let terms = self.dims.terms;
+        let n = xs.len();
+        debug_assert_eq!(n, ys.len());
+        debug_assert!(le.len() >= terms * 2 && out.len() >= n * 2);
+        let mut dzre = [0.0; TARGET_LANES];
+        let mut dzim = [0.0; TARGET_LANES];
+        let mut accre = [0.0; TARGET_LANES];
+        let mut accim = [0.0; TARGET_LANES];
+        let mut i = 0;
+        while i + TARGET_LANES <= n {
+            for l in 0..TARGET_LANES {
+                dzre[l] = (xs[i + l] - center[0]) / r;
+                dzim[l] = (ys[i + l] - center[1]) / r;
+            }
+            optable::l2p_horner_lanes(le, terms, &dzre, &dzim,
+                                      &mut accre, &mut accim);
+            for l in 0..TARGET_LANES {
+                let v = self
+                    .kernel
+                    .far_transform(Complex::new(accre[l], accim[l]));
+                out[(i + l) * 2] = v[0];
+                out[(i + l) * 2 + 1] = v[1];
+            }
+            i += TARGET_LANES;
+        }
+        for i in i..n {
+            let dz = Complex::new((xs[i] - center[0]) / r,
+                                  (ys[i] - center[1]) / r);
+            let f = optable::l2p_horner(le, terms, dz);
+            let v = self.kernel.far_transform(f);
+            out[i * 2] = v[0];
+            out[i * 2 + 1] = v[1];
+        }
+    }
+
+    fn p2p_slice(&self, txs: &[f64], tys: &[f64], sxs: &[f64],
+                 sys: &[f64], sgs: &[f64], out: &mut [f64]) {
+        let n = txs.len();
+        debug_assert_eq!(n, tys.len());
+        debug_assert!(sxs.len() == sys.len() && sxs.len() == sgs.len());
+        debug_assert!(out.len() >= n * 2);
+        let mut tx = [0.0; TARGET_LANES];
+        let mut ty = [0.0; TARGET_LANES];
+        let mut u = [0.0; TARGET_LANES];
+        let mut v = [0.0; TARGET_LANES];
+        let srcs = || {
+            sxs.iter()
+                .zip(sys)
+                .zip(sgs)
+                .map(|((&x, &y), &g)| (x, y, g))
+        };
+        let mut i = 0;
+        while i + TARGET_LANES <= n {
+            tx.copy_from_slice(&txs[i..i + TARGET_LANES]);
+            ty.copy_from_slice(&tys[i..i + TARGET_LANES]);
+            self.p2p_lane_block(&tx, &ty, srcs(), &mut u, &mut v);
+            for l in 0..TARGET_LANES {
+                out[(i + l) * 2] = u[l];
+                out[(i + l) * 2 + 1] = v[l];
+            }
+            i += TARGET_LANES;
+        }
+        for i in i..n {
+            let w = self.p2p_one(txs[i], tys[i], srcs());
+            out[i * 2] = w[0];
+            out[i * 2 + 1] = w[1];
         }
     }
 }
@@ -345,6 +492,49 @@ mod tests {
             assert_eq!(native.l2p(&me, &parts, &centers, &radius),
                        base.l2p(&me, &parts, &centers, &radius));
             assert_eq!(native.p2p(&parts, &srcs), base.p2p(&parts, &srcs));
+        });
+    }
+
+    #[test]
+    fn prop_slice_kernels_bit_identical_to_gather() {
+        // the lane-vectorized slice path must equal the index-gather
+        // path bit for bit, for every target count (full lanes + scalar
+        // remainder) — this is the across-targets-only determinism rule
+        check("slice == gather bitwise", 24, |g| {
+            let d = dims();
+            let be = NativeBackend::new(d, BiotSavart2D::new(d.sigma));
+            let nt = g.usize_in(1, 3 * super::TARGET_LANES + 3);
+            let ns = g.usize_in(1, 20);
+            let parts: Vec<[f64; 3]> = (0..nt + ns)
+                .map(|_| [g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0),
+                          g.normal()])
+                .collect();
+            let tidx: Vec<u32> = (0..nt as u32).collect();
+            let sidx: Vec<u32> = (nt as u32..(nt + ns) as u32).collect();
+            let txs: Vec<f64> = (0..nt).map(|i| parts[i][0]).collect();
+            let tys: Vec<f64> = (0..nt).map(|i| parts[i][1]).collect();
+            let sxs: Vec<f64> =
+                (nt..nt + ns).map(|i| parts[i][0]).collect();
+            let sys: Vec<f64> =
+                (nt..nt + ns).map(|i| parts[i][1]).collect();
+            let sgs: Vec<f64> =
+                (nt..nt + ns).map(|i| parts[i][2]).collect();
+
+            let mut a = vec![0.0; nt * 2];
+            let mut b = vec![0.0; nt * 2];
+            be.p2p_into(&parts, &tidx, &sidx, &mut a);
+            be.p2p_slice(&txs, &tys, &sxs, &sys, &sgs, &mut b);
+            assert_eq!(a, b, "p2p slice vs gather");
+
+            let le: Vec<f64> =
+                (0..d.terms * 2).map(|_| g.normal()).collect();
+            let center = [g.f64_in(0.3, 0.7), g.f64_in(0.3, 0.7)];
+            let r = 0.125;
+            let mut a = vec![0.0; nt * 2];
+            let mut b = vec![0.0; nt * 2];
+            be.l2p_into(&le, &parts, &tidx, center, r, &mut a);
+            be.l2p_slice(&le, &txs, &tys, center, r, &mut b);
+            assert_eq!(a, b, "l2p slice vs gather");
         });
     }
 

@@ -225,6 +225,63 @@ pub(crate) fn l2p_horner(le: &[f64], p: usize, dz: Complex) -> Complex {
     acc
 }
 
+/// Fixed lane width of the across-targets P2P/L2P kernels (DESIGN.md
+/// §9).  Eight f64 accumulators fill one AVX-512 register or two AVX2
+/// registers; the remainder of a target slice runs the scalar loop.
+///
+/// Vectorization happens **across targets only**: each lane holds one
+/// target, and every lane walks the shared source/coefficient stream in
+/// the same sequential order as the scalar kernel — so each target's
+/// floating-point accumulation order is unchanged and the lane kernels
+/// are bit-identical to their scalar counterparts, per lane, always.
+pub const TARGET_LANES: usize = 8;
+
+/// Across-targets Horner evaluation of one interleaved LE block at
+/// [`TARGET_LANES`] pre-scaled points: lane `l` computes exactly
+/// [`l2p_horner`]`(le, p, (dzre[l], dzim[l]))`, same multiply-add
+/// sequence per lane, with the coefficient loop shared across lanes.
+#[inline]
+pub(crate) fn l2p_horner_lanes(
+    le: &[f64],
+    p: usize,
+    dzre: &[f64; TARGET_LANES],
+    dzim: &[f64; TARGET_LANES],
+    accre: &mut [f64; TARGET_LANES],
+    accim: &mut [f64; TARGET_LANES],
+) {
+    *accre = [0.0; TARGET_LANES];
+    *accim = [0.0; TARGET_LANES];
+    for k in (0..p).rev() {
+        let (cre, cim) = (le[2 * k], le[2 * k + 1]);
+        for l in 0..TARGET_LANES {
+            // acc = acc * dz + c, in the exact operation order of
+            // Complex::mul followed by Complex::add
+            let re = accre[l] * dzre[l] - accim[l] * dzim[l];
+            let im = accre[l] * dzim[l] + accim[l] * dzre[l];
+            accre[l] = re + cre;
+            accim[l] = im + cim;
+        }
+    }
+}
+
+/// Allocation-free P2M over a contiguous SoA slice: accumulate the
+/// scaled ME of the particles `(xs[i], ys[i], gammas[i])` about
+/// `(center, r)` into `out` (`p` interleaved complex terms,
+/// caller-zeroed).  Streams the Morton-sorted leaf slice directly —
+/// identical values and accumulation order to [`p2m_indexed`] over the
+/// same particles.
+pub fn p2m_slice(xs: &[f64], ys: &[f64], gammas: &[f64],
+                 center: [f64; 2], r: f64, p: usize, out: &mut [f64]) {
+    debug_assert!(out.len() >= 2 * p);
+    debug_assert!(xs.len() == ys.len() && xs.len() == gammas.len());
+    let inv_r = 1.0 / r;
+    for i in 0..xs.len() {
+        let dz = Complex::new((xs[i] - center[0]) * inv_r,
+                              (ys[i] - center[1]) * inv_r);
+        p2m_accumulate(dz, gammas[i], p, out);
+    }
+}
+
 /// Cached M2L: transform the ME block `me` (interleaved re/im, `p`
 /// complex terms) across the offset `key` into the LE block `out`.
 /// Bit-identical to `expansions::m2l` with `tau = (2di, 2dj)`.
@@ -279,16 +336,35 @@ pub trait CachedOps: Sync {
     /// The precomputed translation-operator tables.
     fn tables(&self) -> &OpTables;
 
-    /// L2P for one box: evaluate the LE block `le` at the particles
-    /// `idx`, writing one `[u, v]` pair per index into `out`.
+    /// Index-gather L2P: evaluate the LE block `le` at the particles
+    /// `idx`, writing one `[u, v]` pair per index into `out`.  Kept as
+    /// the measured "gather" baseline of the slice path below (the
+    /// hotpath bench races them); the evaluator's hot path uses
+    /// [`CachedOps::l2p_slice`].
     fn l2p_into(&self, le: &[f64], particles: &[[f64; 3]], idx: &[u32],
                 center: [f64; 2], r: f64, out: &mut [f64]);
 
-    /// P2P for one (target chunk, source chunk) pair: accumulate the
-    /// direct interactions of sources `sidx` onto targets `tidx`,
-    /// writing one `[u, v]` pair per target index into `out`.
+    /// Index-gather P2P: accumulate the direct interactions of sources
+    /// `sidx` onto targets `tidx`, one `[u, v]` pair per target index.
+    /// Gather baseline of [`CachedOps::p2p_slice`] (see above).
     fn p2p_into(&self, particles: &[[f64; 3]], tidx: &[u32], sidx: &[u32],
                 out: &mut [f64]);
+
+    /// Contiguous-slice L2P over one Morton-sorted leaf chunk
+    /// (`xs`/`ys` are the tree's SoA arrays sliced to the chunk):
+    /// lane-vectorized across targets ([`TARGET_LANES`]), coefficient
+    /// order per target identical to [`CachedOps::l2p_into`] —
+    /// bit-identical output, no index indirection.
+    fn l2p_slice(&self, le: &[f64], xs: &[f64], ys: &[f64],
+                 center: [f64; 2], r: f64, out: &mut [f64]);
+
+    /// Contiguous-slice P2P of one (target chunk, source chunk) pair of
+    /// SoA slices: lane-vectorized across targets, sources walked
+    /// sequentially per lane in slice order — bit-identical to
+    /// [`CachedOps::p2p_into`] over the same particles in the same
+    /// order, with zero gathers on the hot path.
+    fn p2p_slice(&self, txs: &[f64], tys: &[f64], sxs: &[f64],
+                 sys: &[f64], sgs: &[f64], out: &mut [f64]);
 }
 
 #[cfg(test)]
@@ -403,6 +479,52 @@ mod tests {
             for k in 0..p {
                 assert_eq!(out[2 * k], want[k].re, "re k={k}");
                 assert_eq!(out[2 * k + 1], want[k].im, "im k={k}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_p2m_slice_bit_identical_to_indexed() {
+        check("optable p2m slice == indexed", 32, |g: &mut Gen| {
+            let p = g.usize_in(2, 17);
+            let n = g.usize_in(1, 25);
+            let parts: Vec<[f64; 3]> = (0..n)
+                .map(|_| [g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0),
+                          g.normal()])
+                .collect();
+            let xs: Vec<f64> = parts.iter().map(|q| q[0]).collect();
+            let ys: Vec<f64> = parts.iter().map(|q| q[1]).collect();
+            let gs: Vec<f64> = parts.iter().map(|q| q[2]).collect();
+            let idx: Vec<u32> = (0..n as u32).collect();
+            let center = [g.f64_in(0.2, 0.8), g.f64_in(0.2, 0.8)];
+            let r = 0.0625;
+            let mut a = vec![0.0; 2 * p];
+            let mut b = vec![0.0; 2 * p];
+            p2m_slice(&xs, &ys, &gs, center, r, p, &mut a);
+            p2m_indexed(&parts, &idx, center, r, p, &mut b);
+            assert_eq!(a, b);
+        });
+    }
+
+    #[test]
+    fn prop_l2p_horner_lanes_bit_identical_to_scalar() {
+        check("horner lanes == scalar per lane", 48, |g: &mut Gen| {
+            let p = g.usize_in(1, 20);
+            let le = rand_block(g, p);
+            let mut dzre = [0.0; TARGET_LANES];
+            let mut dzim = [0.0; TARGET_LANES];
+            for l in 0..TARGET_LANES {
+                dzre[l] = g.f64_in(-1.0, 1.0);
+                dzim[l] = g.f64_in(-1.0, 1.0);
+            }
+            let mut accre = [f64::NAN; TARGET_LANES];
+            let mut accim = [f64::NAN; TARGET_LANES];
+            l2p_horner_lanes(&le, p, &dzre, &dzim, &mut accre, &mut accim);
+            for l in 0..TARGET_LANES {
+                let want =
+                    l2p_horner(&le, p, Complex::new(dzre[l], dzim[l]));
+                assert_eq!(accre[l], want.re, "re lane {l}");
+                assert_eq!(accim[l], want.im, "im lane {l}");
             }
         });
     }

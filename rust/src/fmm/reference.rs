@@ -495,7 +495,11 @@ mod tests {
         let dims = OpDims { batch: 16, leaf: 8, terms: 14, sigma: 0.008 };
         let backend = NativeBackend::new(dims, BiotSavart2D::new(0.008));
         let baseline = ReferenceEvaluator::new(&tree, &backend).evaluate();
-        let arena = Evaluator::new(&tree, &backend).evaluate().vel;
+        // the seed evaluator reports input order; the arena evaluator's
+        // internal-order vel maps back through the tree permutation
+        let arena =
+            Evaluator::new(&tree, &backend).evaluate()
+                .vel_in_input_order(&tree);
         assert_eq!(baseline, arena);
     }
 
@@ -513,8 +517,12 @@ mod tests {
         let seed_base = ReferenceEvaluator::new(&tree, &base).evaluate();
         let seed_native =
             ReferenceEvaluator::new(&tree, &native).evaluate();
-        let arena_base = Evaluator::new(&tree, &base).evaluate().vel;
-        let arena_cached = Evaluator::new(&tree, &native).evaluate().vel;
+        let arena_base = Evaluator::new(&tree, &base)
+            .evaluate()
+            .vel_in_input_order(&tree);
+        let arena_cached = Evaluator::new(&tree, &native)
+            .evaluate()
+            .vel_in_input_order(&tree);
         assert_eq!(seed_base, seed_native);
         assert_eq!(seed_base, arena_base);
         assert_eq!(seed_base, arena_cached);

@@ -5,8 +5,18 @@
 //! The geometry is implicit in [`BoxId`] — as the paper notes (§5.3), all
 //! relations "can be dynamically generated so that we need only store data
 //! across the cells".
-
-use std::collections::HashMap;
+//!
+//! Particle layout (DESIGN.md §9): at build time the particles are
+//! *sorted once* into Morton leaf order (a stable sort, so particles
+//! sharing a leaf keep their input-relative order) and mirrored into
+//! structure-of-arrays form (`xs`/`ys`/`gammas`).  Each occupied leaf
+//! then owns one **contiguous slice** of every array, described by the
+//! CSR offsets `leaf_offsets` aligned with `occupied_leaves` — the hot
+//! kernels (P2P, L2P, P2M) stream these slices directly, with no
+//! index-gather and no per-task staging copies.  `perm`/`inv_perm`
+//! translate between internal (Morton-sorted) positions and the original
+//! input order; `particles` keeps the input-order AoS copy for the seed
+//! reference path, I/O, and direct-sum verification.
 
 use super::node::BoxId;
 
@@ -53,35 +63,96 @@ impl Domain {
 
 /// The problem geometry: a level-L quadtree with particles binned at the
 /// leaf level.  Mirrors the paper's `Quadtree` class (§6.1).
+///
+/// Two particle orders coexist (DESIGN.md §9):
+///
+/// * **input order** — the order the caller supplied; `particles` and
+///   every public result boundary (simulator, threaded runtime,
+///   verification files) use it.
+/// * **internal order** — Morton leaf order; `xs`/`ys`/`gammas` and
+///   [`crate::fmm::FmmState::vel`] use it.  `perm[pos]` is the input
+///   index stored at internal position `pos`; `inv_perm` is its inverse.
 #[derive(Clone, Debug)]
 pub struct Quadtree {
     pub domain: Domain,
     pub levels: u8,
+    /// Input-order AoS copy (seed/reference path, I/O, direct sums).
     pub particles: Vec<Particle>,
-    /// leaf box -> indices into `particles`
-    pub leaf_particles: HashMap<BoxId, Vec<u32>>,
-    /// occupied leaves in z-order (deterministic iteration everywhere)
+    /// x coordinates in internal (Morton leaf) order.
+    pub xs: Vec<f64>,
+    /// y coordinates in internal order.
+    pub ys: Vec<f64>,
+    /// circulation strengths in internal order.
+    pub gammas: Vec<f64>,
+    /// internal position -> input index (stable within each leaf).
+    pub perm: Vec<u32>,
+    /// input index -> internal position (inverse of `perm`).
+    pub inv_perm: Vec<u32>,
+    /// occupied leaves in strictly increasing Morton order — the single
+    /// source of truth for leaf iteration (never derived from a hash
+    /// map's iteration order).
     pub occupied_leaves: Vec<BoxId>,
+    /// CSR offsets aligned with `occupied_leaves`
+    /// (`len == occupied_leaves.len() + 1`): leaf `i` owns internal
+    /// positions `leaf_offsets[i]..leaf_offsets[i + 1]`.
+    pub leaf_offsets: Vec<u32>,
 }
 
 impl Quadtree {
-    /// Bin `particles` into a level-`levels` quadtree over `domain`.
+    /// Bin `particles` into a level-`levels` quadtree over `domain`,
+    /// sorting them once into Morton leaf order (see the struct docs).
     pub fn build(domain: Domain, levels: u8, particles: Vec<Particle>)
         -> Quadtree {
-        let mut leaf_particles: HashMap<BoxId, Vec<u32>> = HashMap::new();
-        for (i, p) in particles.iter().enumerate() {
-            let leaf = domain.locate(levels, p[0], p[1]);
-            leaf_particles.entry(leaf).or_default().push(i as u32);
-        }
-        let mut occupied: Vec<BoxId> = leaf_particles.keys().copied()
+        let n = particles.len();
+        let mut keyed: Vec<(u64, u32)> = particles
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                (domain.locate(levels, p[0], p[1]).morton(), i as u32)
+            })
             .collect();
-        occupied.sort_by_key(|b| b.morton());
+        // stable: ties (same leaf) keep ascending input order, which is
+        // what makes every per-leaf accumulation order identical to the
+        // seed HashMap<leaf, Vec<index>> path
+        keyed.sort_by_key(|&(m, _)| m);
+
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        let mut gammas = Vec::with_capacity(n);
+        let mut perm = Vec::with_capacity(n);
+        let mut inv_perm = vec![0u32; n];
+        let mut occupied: Vec<BoxId> = Vec::new();
+        let mut leaf_offsets: Vec<u32> = vec![0];
+        let mut prev: Option<u64> = None;
+        for (pos, &(m, i)) in keyed.iter().enumerate() {
+            if prev != Some(m) {
+                if prev.is_some() {
+                    leaf_offsets.push(pos as u32);
+                }
+                occupied.push(BoxId::from_morton(levels, m));
+                prev = Some(m);
+            }
+            let p = particles[i as usize];
+            xs.push(p[0]);
+            ys.push(p[1]);
+            gammas.push(p[2]);
+            perm.push(i);
+            inv_perm[i as usize] = pos as u32;
+        }
+        if !occupied.is_empty() {
+            leaf_offsets.push(n as u32);
+        }
         Quadtree {
             domain,
             levels,
             particles,
-            leaf_particles,
+            xs,
+            ys,
+            gammas,
+            perm,
+            inv_perm,
             occupied_leaves: occupied,
+            leaf_offsets,
         }
     }
 
@@ -97,7 +168,11 @@ impl Quadtree {
 
     /// Maximum observed leaf occupancy (the `s` of Table 1).
     pub fn max_leaf_occupancy(&self) -> usize {
-        self.leaf_particles.values().map(Vec::len).max().unwrap_or(0)
+        self.leaf_offsets
+            .windows(2)
+            .map(|w| (w[1] - w[0]) as usize)
+            .max()
+            .unwrap_or(0)
     }
 
     pub fn center(&self, b: &BoxId) -> [f64; 2] {
@@ -109,27 +184,83 @@ impl Quadtree {
     }
 
     /// Occupied boxes at `level` (ancestors of occupied leaves), z-ordered.
+    /// Derived from the Morton-sorted `occupied_leaves` only — hash-map
+    /// iteration order can never leak into task order.
     pub fn occupied_at_level(&self, level: u8) -> Vec<BoxId> {
         debug_assert!(level <= self.levels);
         if level == self.levels {
             return self.occupied_leaves.clone();
         }
+        // ancestors of a Morton-sorted leaf list are themselves Morton
+        // nondecreasing, so a dedup pass suffices (no re-sort)
         let mut v: Vec<BoxId> = self
             .occupied_leaves
             .iter()
             .map(|b| b.ancestor(level))
             .collect();
-        v.sort_by_key(|b| b.morton());
         v.dedup();
         v
     }
 
-    /// Particle indices of a leaf (empty slice if unoccupied).
+    /// Position of `leaf` in `occupied_leaves` (binary search over the
+    /// Morton order), or `None` for unoccupied leaves.
+    #[inline]
+    pub fn leaf_index(&self, leaf: &BoxId) -> Option<usize> {
+        if leaf.level != self.levels {
+            return None;
+        }
+        self.occupied_leaves
+            .binary_search_by_key(&leaf.morton(), BoxId::morton)
+            .ok()
+    }
+
+    /// Internal-position range `lo..hi` of a leaf's contiguous slice
+    /// (empty range for unoccupied leaves).
+    #[inline]
+    pub fn leaf_range(&self, leaf: &BoxId) -> (usize, usize) {
+        match self.leaf_index(leaf) {
+            Some(i) => (
+                self.leaf_offsets[i] as usize,
+                self.leaf_offsets[i + 1] as usize,
+            ),
+            None => (0, 0),
+        }
+    }
+
+    /// Number of particles in a leaf (0 for unoccupied leaves).
+    #[inline]
+    pub fn leaf_len(&self, leaf: &BoxId) -> usize {
+        let (lo, hi) = self.leaf_range(leaf);
+        hi - lo
+    }
+
+    /// Input-order indices of a leaf's particles — the contiguous
+    /// `perm[lo..hi]` slice of the CSR layout (ascending input order,
+    /// exactly what the seed HashMap held).  Empty slice for unoccupied
+    /// leaves; no lookup-with-default, no hashing.
     pub fn particles_in(&self, leaf: &BoxId) -> &[u32] {
-        self.leaf_particles
-            .get(leaf)
-            .map(|v| v.as_slice())
-            .unwrap_or(&[])
+        let (lo, hi) = self.leaf_range(leaf);
+        &self.perm[lo..hi]
+    }
+
+    /// A leaf's particles as AoS triples, gathered from the contiguous
+    /// SoA slice (wire format of the threaded halo exchange).
+    pub fn leaf_particles_aos(&self, leaf: &BoxId) -> Vec<Particle> {
+        let (lo, hi) = self.leaf_range(leaf);
+        (lo..hi)
+            .map(|p| [self.xs[p], self.ys[p], self.gammas[p]])
+            .collect()
+    }
+
+    /// Map an internal-order per-particle vector (e.g.
+    /// [`crate::fmm::FmmState::vel`]) back to input order.
+    pub fn to_input_order(&self, vals: &[[f64; 2]]) -> Vec<[f64; 2]> {
+        debug_assert_eq!(vals.len(), self.perm.len());
+        let mut out = vec![[0.0; 2]; vals.len()];
+        for (pos, &i) in self.perm.iter().enumerate() {
+            out[i as usize] = vals[pos];
+        }
+        out
     }
 }
 
@@ -147,10 +278,15 @@ mod tests {
     fn every_particle_lands_in_its_leaf() {
         check("binning is geometric", 32, |g| {
             let t = tree_from(g, 200, 4);
-            for (leaf, idxs) in &t.leaf_particles {
+            for leaf in &t.occupied_leaves {
                 let c = t.center(leaf);
                 let r = t.radius(leaf);
-                for &i in idxs {
+                let (lo, hi) = t.leaf_range(leaf);
+                for p in lo..hi {
+                    assert!((t.xs[p] - c[0]).abs() <= r + 1e-12);
+                    assert!((t.ys[p] - c[1]).abs() <= r + 1e-12);
+                }
+                for &i in t.particles_in(leaf) {
                     let p = t.particles[i as usize];
                     assert!((p[0] - c[0]).abs() <= r + 1e-12);
                     assert!((p[1] - c[1]).abs() <= r + 1e-12);
@@ -164,9 +300,79 @@ mod tests {
         check("binning partitions particles", 32, |g| {
             let n = g.usize_in(1, 500);
             let t = tree_from(g, n, 5);
-            let total: usize = t.leaf_particles.values().map(Vec::len).sum();
+            // CSR covers every particle exactly once
+            assert_eq!(*t.leaf_offsets.last().unwrap() as usize, n);
+            assert_eq!(t.leaf_offsets.len(), t.occupied_leaves.len() + 1);
+            let total: usize = t
+                .occupied_leaves
+                .iter()
+                .map(|b| t.leaf_len(b))
+                .sum();
             assert_eq!(total, n);
         });
+    }
+
+    #[test]
+    fn soa_and_perm_are_consistent() {
+        check("SoA mirrors + perm/inv_perm inverse", 32, |g| {
+            let n = g.usize_in(1, 400);
+            let t = tree_from(g, n, 5);
+            assert_eq!(t.xs.len(), n);
+            for pos in 0..n {
+                let i = t.perm[pos] as usize;
+                assert_eq!(t.inv_perm[i] as usize, pos);
+                assert_eq!(t.xs[pos], t.particles[i][0]);
+                assert_eq!(t.ys[pos], t.particles[i][1]);
+                assert_eq!(t.gammas[pos], t.particles[i][2]);
+            }
+        });
+    }
+
+    #[test]
+    fn per_leaf_input_indices_ascend() {
+        // stable sort: the slice particles_in returns is exactly the
+        // ascending index list the seed HashMap binning produced
+        check("stable within leaf", 32, |g| {
+            let t = tree_from(g, 300, 4);
+            for leaf in &t.occupied_leaves {
+                for w in t.particles_in(leaf).windows(2) {
+                    assert!(w[0] < w[1], "within-leaf order not stable");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn occupied_leaves_strictly_morton_sorted() {
+        check("occupied leaves strictly z-ordered", 32, |g| {
+            let n = g.usize_in(1, 500);
+            let t = tree_from(g, n, 5);
+            for w in t.occupied_leaves.windows(2) {
+                assert!(w[0].morton() < w[1].morton());
+            }
+        });
+    }
+
+    #[test]
+    fn unoccupied_leaf_has_empty_slice() {
+        // a single particle occupies exactly one leaf; every other leaf
+        // must come back as a zero-length slice without any default map
+        let t = Quadtree::build(Domain::UNIT, 3, vec![[0.1, 0.1, 1.0]]);
+        assert_eq!(t.occupied_leaves.len(), 1);
+        let empty = BoxId::new(3, 7, 0);
+        assert!(t.particles_in(&empty).is_empty());
+        assert_eq!(t.leaf_range(&empty), (0, 0));
+        assert_eq!(t.leaf_len(&empty), 0);
+        assert!(t.leaf_particles_aos(&empty).is_empty());
+    }
+
+    #[test]
+    fn empty_tree_is_well_formed() {
+        let t = Quadtree::build(Domain::UNIT, 3, Vec::new());
+        assert!(t.occupied_leaves.is_empty());
+        assert_eq!(t.leaf_offsets, vec![0]);
+        assert_eq!(t.max_leaf_occupancy(), 0);
+        assert!(t.to_input_order(&[]).is_empty());
     }
 
     #[test]
@@ -218,5 +424,23 @@ mod tests {
         let t = Quadtree::build(Domain::UNIT, 3, vec![[1.0, 1.0, 1.0]]);
         assert_eq!(t.occupied_leaves.len(), 1);
         assert_eq!(t.occupied_leaves[0], BoxId::new(3, 7, 7));
+    }
+
+    #[test]
+    fn to_input_order_inverts_the_sort() {
+        check("to_input_order round trip", 16, |g| {
+            let n = g.usize_in(1, 300);
+            let t = tree_from(g, n, 4);
+            // tag each internal position with its input index
+            let tagged: Vec<[f64; 2]> = t
+                .perm
+                .iter()
+                .map(|&i| [i as f64, -(i as f64)])
+                .collect();
+            let back = t.to_input_order(&tagged);
+            for (i, v) in back.iter().enumerate() {
+                assert_eq!(v[0], i as f64);
+            }
+        });
     }
 }

@@ -91,7 +91,7 @@ impl ParallelPlan {
         for leaf in &tree.occupied_leaves {
             let r = owner(leaf);
             leaves[r].push(*leaf);
-            rank_particles[r] += tree.particles_in(leaf).len();
+            rank_particles[r] += tree.leaf_len(leaf);
         }
 
         // ---- upward: M2M children per rank per level ----
@@ -129,7 +129,7 @@ impl ParallelPlan {
         for tgt in &tree.occupied_leaves {
             let r = owner(tgt);
             for src in near_domain(tgt) {
-                if !tree.particles_in(&src).is_empty() {
+                if tree.leaf_len(&src) > 0 {
                     p2p_pairs[r].push((*tgt, src));
                 }
             }
@@ -192,7 +192,7 @@ impl ParallelPlan {
         for ((from, to), boxes) in &nb_overlap.sends {
             let n: usize = boxes
                 .iter()
-                .map(|b| tree.particles_in(b).len())
+                .map(|b| tree.leaf_len(b))
                 .sum();
             if n > 0 {
                 halo_particles.insert((*from, *to), n);

@@ -56,6 +56,9 @@ impl StageRecord {
 pub struct SimResult {
     pub ranks: usize,
     pub stages: Vec<StageRecord>,
+    /// Per-particle velocities in the caller's **input order** (the
+    /// tree-internal Morton order is mapped back at this boundary,
+    /// DESIGN.md §9).
     pub vel: Vec<[f64; 2]>,
     /// total modeled communication volume in bytes
     pub comm_bytes: f64,
@@ -444,7 +447,12 @@ impl<'a> Simulator<'a> {
         stages.push(self.comm_stage("gather-vel", ranks, &flows,
                                     &mut comm_bytes));
 
-        SimResult { ranks, stages, vel: state.vel, comm_bytes }
+        SimResult {
+            ranks,
+            stages,
+            vel: state.vel_in_input_order(self.tree),
+            comm_bytes,
+        }
     }
 }
 
@@ -497,7 +505,9 @@ mod tests {
             let sim = Simulator::new(&tree, &cut, &a, &backend,
                                      NetworkModel::infinipath());
             let par = sim.run(&plan).vel;
-            let ser = Evaluator::new(&tree, &backend).evaluate().vel;
+            let ser = Evaluator::new(&tree, &backend)
+                .evaluate()
+                .vel_in_input_order(&tree);
             let err = rel_l2_error(&par, &ser);
             assert!(err < 1e-11, "parallel vs serial err {err}");
         });

@@ -41,11 +41,18 @@ pub struct BoxRecord {
 
 impl VerificationFile {
     /// Build from a tree + solved state (+ optionally a direct solution).
+    ///
+    /// `fmm` is the FMM velocity vector in **input particle order**
+    /// (`state.vel` is internal Morton order — map it with
+    /// `state.vel_in_input_order(tree)` first, DESIGN.md §9).  It is an
+    /// explicit argument so parallel runtimes, which already report
+    /// input order, don't get double-permuted.
     pub fn build(
         tree: &Quadtree,
         terms: usize,
         state: &FmmState,
         direct: Vec<[f64; 2]>,
+        fmm: Vec<[f64; 2]>,
     ) -> VerificationFile {
         let mut assignment = vec![0u64; tree.n_particles()];
         for leaf in &tree.occupied_leaves {
@@ -101,7 +108,7 @@ impl VerificationFile {
             assignment,
             boxes,
             direct,
-            fmm: state.vel.clone(),
+            fmm,
         }
     }
 
@@ -334,7 +341,8 @@ mod tests {
     use crate::proptest::Gen;
     use crate::quadtree::Domain;
 
-    fn solved(seed: u64) -> (Quadtree, FmmState, Vec<[f64; 2]>) {
+    fn solved(seed: u64)
+        -> (Quadtree, FmmState, Vec<[f64; 2]>, Vec<[f64; 2]>) {
         let mut g = Gen::new(seed);
         let parts = g.particles(80);
         let tree = Quadtree::build(Domain::UNIT, 3, parts.clone());
@@ -342,13 +350,14 @@ mod tests {
         let backend = NativeBackend::new(dims, BiotSavart2D::new(0.02));
         let state = Evaluator::new(&tree, &backend).evaluate();
         let direct = direct_all(&BiotSavart2D::new(0.02), &parts);
-        (tree, state, direct)
+        let fmm = state.vel_in_input_order(&tree);
+        (tree, state, direct, fmm)
     }
 
     #[test]
     fn roundtrip_text_format() {
-        let (tree, state, direct) = solved(1);
-        let vf = VerificationFile::build(&tree, 6, &state, direct);
+        let (tree, state, direct, fmm) = solved(1);
+        let vf = VerificationFile::build(&tree, 6, &state, direct, fmm);
         let text = vf.to_text();
         let back = VerificationFile::from_text(&text).unwrap();
         assert_eq!(vf, back);
@@ -356,31 +365,34 @@ mod tests {
 
     #[test]
     fn identical_runs_compare_clean() {
-        let (tree, state, direct) = solved(2);
-        let a = VerificationFile::build(&tree, 6, &state, direct.clone());
-        let b = VerificationFile::build(&tree, 6, &state, direct);
+        let (tree, state, direct, fmm) = solved(2);
+        let a = VerificationFile::build(&tree, 6, &state, direct.clone(),
+                                        fmm.clone());
+        let b = VerificationFile::build(&tree, 6, &state, direct, fmm);
         assert!(a.compare(&b, 1e-12).is_empty());
     }
 
     #[test]
     fn perturbed_run_is_flagged() {
-        let (tree, state, direct) = solved(3);
-        let a = VerificationFile::build(&tree, 6, &state, direct.clone());
-        let mut state2 = state.clone();
-        state2.vel[0][0] += 1.0;
-        let b = VerificationFile::build(&tree, 6, &state2, direct);
+        let (tree, state, direct, fmm) = solved(3);
+        let a = VerificationFile::build(&tree, 6, &state, direct.clone(),
+                                        fmm.clone());
+        let mut fmm2 = fmm;
+        fmm2[0][0] += 1.0;
+        let b = VerificationFile::build(&tree, 6, &state, direct, fmm2);
         let issues = a.compare(&b, 1e-12);
         assert!(issues.iter().any(|i| i.contains("fmm[0]")), "{issues:?}");
     }
 
     #[test]
     fn coefficient_corruption_is_flagged() {
-        let (tree, state, direct) = solved(4);
-        let a = VerificationFile::build(&tree, 6, &state, direct.clone());
+        let (tree, state, direct, fmm) = solved(4);
+        let a = VerificationFile::build(&tree, 6, &state, direct.clone(),
+                                        fmm.clone());
         let mut state2 = state.clone();
         let key = state2.me.present_boxes()[0];
         state2.me.get_mut(&key).unwrap()[0] += 1.0;
-        let b = VerificationFile::build(&tree, 6, &state2, direct);
+        let b = VerificationFile::build(&tree, 6, &state2, direct, fmm);
         let issues = a.compare(&b, 1e-9);
         assert!(issues.iter().any(|i| i.contains("me differs")),
                 "{issues:?}");

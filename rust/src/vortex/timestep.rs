@@ -14,6 +14,23 @@ pub fn convect(parts: &mut [Particle], vel: &[[f64; 2]], dt: f64) {
     }
 }
 
+/// Convection step against velocities in the FMM's internal
+/// (Morton-sorted) order: particle `i` moves by `vel[inv_perm[i]]`.
+///
+/// This is how `FmmState::vel` comes back from a solve (DESIGN.md §9);
+/// reading through `inv_perm` here avoids materializing an input-order
+/// copy of the velocity vector every time step.
+pub fn convect_permuted(parts: &mut [Particle], vel: &[[f64; 2]],
+                        inv_perm: &[u32], dt: f64) {
+    assert_eq!(parts.len(), vel.len());
+    assert_eq!(parts.len(), inv_perm.len());
+    for (p, &pos) in parts.iter_mut().zip(inv_perm) {
+        let u = vel[pos as usize];
+        p[0] += u[0] * dt;
+        p[1] += u[1] * dt;
+    }
+}
+
 /// Second-order Runge–Kutta (midpoint) step, given a velocity oracle.
 pub fn convect_rk2<F>(parts: &mut Vec<Particle>, dt: f64, mut velocity: F)
 where
@@ -40,6 +57,25 @@ mod tests {
         // strengths untouched (vorticity transport, Eq. 6)
         assert_eq!(p[0][2], 1.0);
         assert_eq!(p[1][2], -1.0);
+    }
+
+    #[test]
+    fn convect_permuted_matches_convect_on_unsorted_vel() {
+        // an FMM solve's internal-order velocities drive the same motion
+        // as the input-order path
+        use crate::fmm::{BiotSavart2D, Evaluator, NativeBackend, OpDims};
+        use crate::quadtree::{Domain, Quadtree};
+        let mut g = crate::proptest::Gen::new(11);
+        let parts0 = g.particles(120);
+        let tree = Quadtree::build(Domain::UNIT, 3, parts0.clone());
+        let dims = OpDims { batch: 8, leaf: 8, terms: 8, sigma: 0.02 };
+        let be = NativeBackend::new(dims, BiotSavart2D::new(0.02));
+        let state = Evaluator::new(&tree, &be).evaluate();
+        let mut a = parts0.clone();
+        convect_permuted(&mut a, &state.vel, &tree.inv_perm, 0.25);
+        let mut b = parts0;
+        convect(&mut b, &state.vel_in_input_order(&tree), 0.25);
+        assert_eq!(a, b);
     }
 
     #[test]

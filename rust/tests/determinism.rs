@@ -30,9 +30,16 @@ fn quickstart() -> (Vec<[f64; 3]>, Quadtree, OpDims) {
     (particles, tree, dims)
 }
 
+/// Serial velocities in the tree's internal (Morton-sorted) order.
 fn serial_vel(tree: &Quadtree, dims: OpDims) -> Vec<[f64; 2]> {
     let be = NativeBackend::new(dims, BiotSavart2D::new(dims.sigma));
     Evaluator::new(tree, &be).evaluate().vel
+}
+
+/// Serial velocities mapped back to input particle order (what the
+/// parallel runtimes report at their boundaries).
+fn serial_vel_input(tree: &Quadtree, dims: OpDims) -> Vec<[f64; 2]> {
+    tree.to_input_order(&serial_vel(tree, dims))
 }
 
 #[test]
@@ -48,7 +55,7 @@ fn worker_pool_size_does_not_change_bits() {
     let (_, tree, dims) = quickstart();
     let be = NativeBackend::new(dims, BiotSavart2D::new(dims.sigma));
     let one = Evaluator::new(&tree, &be).evaluate().vel;
-    for threads in [2usize, 4, 0] {
+    for threads in [2usize, 4, 8, 0] {
         let t = Evaluator::new(&tree, &be)
             .with_threads(threads)
             .evaluate()
@@ -65,7 +72,7 @@ fn four_rank_threaded_run_matches_serial_bitwise() {
                             Strategy::Optimized, 1);
     let got = run_threaded(Domain::UNIT, QUICKSTART_LEVELS, &particles,
                            &cut, &a, dims);
-    let want = serial_vel(&tree, dims);
+    let want = serial_vel_input(&tree, dims);
     assert_eq!(got, want, "threaded 4-rank run diverged from serial");
 }
 
@@ -73,7 +80,7 @@ fn four_rank_threaded_run_matches_serial_bitwise() {
 fn simulator_matches_serial_bitwise_across_rank_counts() {
     let (_, tree, dims) = quickstart();
     let be = NativeBackend::new(dims, BiotSavart2D::new(dims.sigma));
-    let want = Evaluator::new(&tree, &be).evaluate().vel;
+    let want = serial_vel_input(&tree, dims);
     for ranks in [2usize, 4] {
         let cut = TreeCut::new(QUICKSTART_LEVELS, 2);
         let a = assign_subtrees(&tree, &cut, dims.terms, ranks,
@@ -96,7 +103,9 @@ fn deep_tree_level8_matches_direct() {
     let tree = Quadtree::build(Domain::UNIT, 8, particles.clone());
     let dims = OpDims { batch: 16, leaf: 8, terms: 17, sigma: 0.0005 };
     let be = NativeBackend::new(dims, BiotSavart2D::new(dims.sigma));
-    let got = Evaluator::new(&tree, &be).evaluate().vel;
+    let got = Evaluator::new(&tree, &be)
+        .evaluate()
+        .vel_in_input_order(&tree);
     let want = direct_all(&BiotSavart2D::new(dims.sigma), &particles);
     let err = rel_l2_error(&got, &want);
     assert!(err < 1e-3, "deep-tree rel l2 err {err}");

@@ -210,15 +210,18 @@ fn verification_flow_serial_vs_parallel() {
     let backend = make_backend(&config).unwrap();
     let serial_state = problem.serial(backend.as_ref());
     let direct = direct_all(&BiotSavart2D::new(config.sigma), &particles);
-    let a = VerificationFile::build(&problem.tree, config.terms,
-                                    &serial_state, direct.clone());
-    // parallel run: swap the parallel velocities into the state (the
-    // simulator reports velocities; expansions follow the same code)
+    let a = VerificationFile::build(
+        &problem.tree,
+        config.terms,
+        &serial_state,
+        direct.clone(),
+        serial_state.vel_in_input_order(&problem.tree),
+    );
+    // parallel run: the simulator already reports input-order
+    // velocities, so they drop straight into the file format
     let par = problem.simulate(backend.as_ref()).unwrap();
-    let mut par_state = serial_state.clone();
-    par_state.vel = par.vel;
     let b = VerificationFile::build(&problem.tree, config.terms,
-                                    &par_state, direct);
+                                    &serial_state, direct, par.vel);
     let issues = a.compare(&b, 1e-9);
     assert!(issues.is_empty(), "{issues:?}");
 }

@@ -95,7 +95,7 @@ fn full_fmm_through_pjrt_matches_direct() {
     let parts = g.particles(400);
     let tree = Quadtree::build(Domain::UNIT, 3, parts.clone());
     let ev = Evaluator::new(&tree, &pjrt);
-    let got = ev.evaluate().vel;
+    let got = ev.evaluate().vel_in_input_order(&tree);
     let want = direct_all(&BiotSavart2D::new(pjrt.dims().sigma), &parts);
     let err = rel_l2_error(&got, &want);
     assert!(err < 2e-4, "rel l2 err {err}");

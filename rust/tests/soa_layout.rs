@@ -1,0 +1,147 @@
+//! The SoA/CSR particle-layout contract (DESIGN.md §9), enforced at the
+//! bit level: sorting particles into Morton leaf order and reporting
+//! results through `perm`/`inv_perm` must be invisible — velocities
+//! mapped back to input order are *identical* to the unsorted seed-path
+//! run, index for index, including duplicate-position particles.
+
+use petfmm::fmm::{BaselineBackend, BiotSavart2D, Evaluator,
+                  NativeBackend, OpDims, ReferenceEvaluator};
+use petfmm::proptest::{check, Gen};
+use petfmm::quadtree::{near_domain, BoxId, Domain, Quadtree};
+
+fn dims() -> OpDims {
+    OpDims { batch: 16, leaf: 8, terms: 12, sigma: 0.01 }
+}
+
+/// Random particles with a slice of forced duplicate positions (same
+/// (x, y), distinct strengths and input indices) — the stable sort must
+/// keep their relative order or P2P summation order changes.
+fn particles_with_duplicates(g: &mut Gen, n: usize) -> Vec<[f64; 3]> {
+    let mut parts = g.particles(n);
+    for _ in 0..n / 8 {
+        let src = g.usize_in(0, n - 1);
+        let dst = g.usize_in(0, n - 1);
+        parts[dst][0] = parts[src][0];
+        parts[dst][1] = parts[src][1];
+    }
+    parts
+}
+
+#[test]
+fn prop_permutation_round_trip_matches_seed_path_bitwise() {
+    // the satellite contract: FMM velocities reported through inv_perm
+    // match a run on the unsorted seed path index-for-index (bitwise)
+    check("inv_perm round trip == seed path", 6, |g| {
+        let n = g.usize_in(60, 300);
+        let parts = particles_with_duplicates(g, n);
+        let tree = Quadtree::build(Domain::UNIT, 4, parts.clone());
+        let d = dims();
+        let native = NativeBackend::new(d, BiotSavart2D::new(d.sigma));
+        let base = BaselineBackend::new(d, BiotSavart2D::new(d.sigma));
+        let state = Evaluator::new(&tree, &native).evaluate();
+        let seed = ReferenceEvaluator::new(&tree, &base).evaluate();
+        // through the convenience mapper
+        assert_eq!(state.vel_in_input_order(&tree), seed);
+        // and through inv_perm directly, index for index
+        for (i, want) in seed.iter().enumerate() {
+            assert_eq!(&state.vel[tree.inv_perm[i] as usize], want,
+                       "particle {i}");
+        }
+    });
+}
+
+#[test]
+fn prop_occupied_leaves_strictly_morton_sorted() {
+    check("occupied_leaves strictly Morton-sorted", 16, |g| {
+        let n = g.usize_in(1, 600);
+        let parts = particles_with_duplicates(g, n);
+        let tree = Quadtree::build(Domain::UNIT, 5, parts);
+        for w in tree.occupied_leaves.windows(2) {
+            assert!(w[0].morton() < w[1].morton(),
+                    "{:?} !< {:?}", w[0], w[1]);
+        }
+        // occupied_at_level must derive the same strict order
+        for lvl in 0..=tree.levels {
+            for w in tree.occupied_at_level(lvl).windows(2) {
+                assert!(w[0].morton() < w[1].morton());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_csr_layout_partitions_particles() {
+    check("CSR covers every particle once, in leaf order", 16, |g| {
+        let n = g.usize_in(1, 500);
+        let parts = particles_with_duplicates(g, n);
+        let tree = Quadtree::build(Domain::UNIT, 4, parts);
+        assert_eq!(tree.leaf_offsets.len(),
+                   tree.occupied_leaves.len() + 1);
+        assert_eq!(*tree.leaf_offsets.last().unwrap() as usize, n);
+        let mut seen = vec![false; n];
+        for leaf in &tree.occupied_leaves {
+            let (lo, hi) = tree.leaf_range(leaf);
+            assert!(lo < hi, "occupied leaf with empty slice");
+            for pos in lo..hi {
+                // each internal position belongs to exactly one leaf,
+                // and its particle geometrically bins into that leaf
+                let i = tree.perm[pos] as usize;
+                assert!(!seen[i]);
+                seen[i] = true;
+                let located = tree.domain.locate(
+                    tree.levels, tree.xs[pos], tree.ys[pos]);
+                assert_eq!(&located, leaf);
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    });
+}
+
+#[test]
+fn unoccupied_near_domain_sources_return_empty_slices() {
+    // every unoccupied near-domain source of every occupied leaf must
+    // come back as a zero-length slice (the old path looked these up
+    // through a HashMap with a default)
+    let mut g = Gen::new(17);
+    let parts = g.clustered_particles(120, 2);
+    let tree = Quadtree::build(Domain::UNIT, 5, parts);
+    let occupied: std::collections::HashSet<BoxId> =
+        tree.occupied_leaves.iter().copied().collect();
+    let mut checked_empty = 0;
+    for leaf in &tree.occupied_leaves {
+        for src in near_domain(leaf) {
+            if !occupied.contains(&src) {
+                assert!(tree.particles_in(&src).is_empty());
+                assert_eq!(tree.leaf_len(&src), 0);
+                checked_empty += 1;
+            }
+        }
+    }
+    // a clustered distribution at level 5 always has empty neighbors
+    assert!(checked_empty > 0, "workload produced no empty neighbors");
+}
+
+#[test]
+fn sorted_layout_is_bitwise_stable_across_thread_counts_1_2_8() {
+    // the acceptance gate: the new layout path at 1/2/8 worker threads,
+    // against both the PR-1 baseline backend and the seed evaluator
+    let mut g = Gen::new(42);
+    let parts = particles_with_duplicates(&mut g, 3000);
+    let tree = Quadtree::build(Domain::UNIT, 5, parts);
+    let d = OpDims { batch: 64, leaf: 32, terms: 17, sigma: 0.005 };
+    let native = NativeBackend::new(d, BiotSavart2D::new(d.sigma));
+    let base = BaselineBackend::new(d, BiotSavart2D::new(d.sigma));
+    let one = Evaluator::new(&tree, &native).evaluate().vel;
+    for threads in [2usize, 8] {
+        let t = Evaluator::new(&tree, &native)
+            .with_threads(threads)
+            .evaluate()
+            .vel;
+        assert_eq!(one, t, "threads={threads} changed bits");
+    }
+    let pr1 = Evaluator::new(&tree, &base).evaluate().vel;
+    assert_eq!(one, pr1, "slice path diverged from BaselineBackend");
+    let seed = ReferenceEvaluator::new(&tree, &base).evaluate();
+    assert_eq!(tree.to_input_order(&one), seed,
+               "slice path diverged from the seed ReferenceEvaluator");
+}
