@@ -1,68 +1,69 @@
 //! Quickstart: solve a 10k-particle N-body problem with the FMM and
-//! check it against direct summation.
+//! check it against direct summation — all through the one public entry
+//! point, the [`FmmSolver`] facade.
 //!
 //!     cargo run --release --example quickstart
 //!
-//! Uses the PJRT artifacts if present (`make artifacts`), otherwise the
-//! native backend — the public API is identical.
+//! Backend selection (`auto`) tries the PJRT artifacts
+//! (`make artifacts`) and falls back to the native path — the facade
+//! owns that choice (`coordinator::make_backend`), so no client ever
+//! hand-wires it again.  Swapping the physics is one builder call:
+//! the same solve runs below with the gravity kernel.
 
-use petfmm::fmm::{direct_all, BiotSavart2D, Evaluator, NativeBackend,
-                  OpDims, OpsBackend};
-use petfmm::proptest::Gen;
-use petfmm::quadtree::{Domain, Quadtree};
-use petfmm::runtime::PjrtBackend;
+use petfmm::config::RunConfig;
+use petfmm::coordinator::{FmmSolver, RunMode};
+use petfmm::fmm::KernelSpec;
 use petfmm::util::{max_abs_error, rel_l2_error};
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     // sigma well below the level-5 leaf width (1/32) keeps the paper's
     // Type I kernel-substitution error negligible (§3); matches the
     // default `make artifacts` configuration
-    let sigma = 0.005;
-    let terms = 17;
-
-    // 1. make some particles (x, y, circulation strength)
-    let mut gen = Gen::new(42);
-    let particles = gen.particles(10_000);
-    println!("quickstart: {} vortex particles, p = {terms}",
-             particles.len());
-
-    // 2. build the quadtree decomposition (§2.1)
-    let tree = Quadtree::build(Domain::UNIT, 5, particles.clone());
-    println!("tree: level {} with {} occupied leaves", tree.levels,
-             tree.occupied_leaves.len());
-
-    // 3. pick a backend: AOT artifacts via PJRT, or native rust
-    let pjrt = PjrtBackend::load_default();
-    let native = NativeBackend::new(
-        OpDims { batch: 64, leaf: 32, terms, sigma },
-        BiotSavart2D::new(sigma),
-    );
-    let backend: &dyn OpsBackend = match &pjrt {
-        Ok(b) => {
-            println!("backend: pjrt (AOT jax/pallas artifacts)");
-            b
-        }
-        Err(e) => {
-            println!("backend: native ({e:#})");
-            &native
-        }
+    let config = RunConfig {
+        particles: 10_000,
+        levels: 5,
+        terms: 17,
+        sigma: 0.005,
+        distribution: "uniform".into(),
+        backend: "auto".into(),
+        seed: 42,
+        ..Default::default()
     };
+    println!("quickstart: {} vortex particles, p = {}", config.particles,
+             config.terms);
 
-    // 4. evaluate all pairwise Biot-Savart interactions in O(N)
+    // 1. solve: tree build, backend pick, serial FMM, and the single
+    //    internal->input permutation all happen behind the facade
     let t0 = std::time::Instant::now();
-    let state = Evaluator::new(&tree, backend).evaluate();
+    let sol = FmmSolver::from_config(&config)
+        .mode(RunMode::Serial)
+        .solve()?;
     let t_fmm = t0.elapsed().as_secs_f64();
-    println!("fmm solve: {t_fmm:.3}s");
+    println!("tree: level {} with {} occupied leaves",
+             sol.problem.tree.levels,
+             sol.problem.tree.occupied_leaves.len());
+    println!("backend: {}", sol.backend);
+    println!("fmm solve: {t_fmm:.3}s  ({} p2p pairs, {} m2l transforms)",
+             sol.counts.p2p_pairs, sol.counts.m2l);
 
-    // 5. compare with the O(N^2) direct sum (FMM velocities come back
-    //    in the tree's Morton order; map them to input order first)
-    let vel = state.vel_in_input_order(&tree);
+    // 2. compare with the kernel's O(N^2) direct oracle (both are in
+    //    input particle order — no permutation bookkeeping here)
     let t0 = std::time::Instant::now();
-    let exact = direct_all(&BiotSavart2D::new(sigma), &particles);
+    let exact = sol.direct_oracle();
     let t_direct = t0.elapsed().as_secs_f64();
     println!("direct solve: {t_direct:.3}s  (speedup {:.1}x)",
              t_direct / t_fmm);
     println!("rel-L2 error {:.3e}, max-abs error {:.3e}",
-             rel_l2_error(&vel, &exact),
-             max_abs_error(&vel, &exact));
+             rel_l2_error(&sol.vel, &exact),
+             max_abs_error(&sol.vel, &exact));
+
+    // 3. different physics, same facade: gravitational attraction
+    let grav = FmmSolver::from_config(&config)
+        .kernel(KernelSpec::Gravity)
+        .mode(RunMode::Serial)
+        .solve()?;
+    let gexact = grav.direct_oracle();
+    println!("gravity kernel: rel-L2 error {:.3e} vs its oracle",
+             rel_l2_error(&grav.vel, &gexact));
+    Ok(())
 }

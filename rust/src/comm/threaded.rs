@@ -19,7 +19,7 @@ use std::thread;
 
 use super::message::Message;
 use super::overlap::{interaction_overlap, neighbor_overlap, owner_of};
-use crate::fmm::{BiotSavart2D, Evaluator, FmmState, NativeBackend,
+use crate::fmm::{Evaluator, FmmKernel, FmmState, NativeBackend, OpCounts,
                  OpDims};
 use crate::partition::Assignment;
 use crate::quadtree::{BoxId, Domain, Quadtree, TreeCut};
@@ -28,19 +28,68 @@ use crate::sched::ParallelPlan;
 /// A (from, payload) envelope.
 type Envelope = (usize, Message);
 
-/// Run the distributed FMM with real threads + channels.
+/// Run the distributed FMM with real threads + channels, generic over
+/// the interaction kernel (each rank builds its own
+/// [`NativeBackend`] from a clone — static dispatch per rank, exactly
+/// as an MPI rank would instantiate its templated evaluator).
 /// Returns per-particle velocities in the global particle order.
-pub fn run_threaded(
+#[allow(clippy::too_many_arguments)]
+pub fn run_threaded<K>(
+    kernel: K,
     domain: Domain,
     levels: u8,
     particles: &[[f64; 3]],
     cut: &TreeCut,
     assignment: &Assignment,
     dims: OpDims,
-) -> Vec<[f64; 2]> {
-    let ranks = assignment.ranks;
+) -> Vec<[f64; 2]>
+where
+    K: FmmKernel + Clone + Send + 'static,
+{
+    run_threaded_counted(kernel, domain, levels, particles, cut,
+                         assignment, dims)
+        .0
+}
+
+/// Like [`run_threaded`], additionally returning the operator counts
+/// aggregated over all ranks (the facade's `Solution` reports them).
+#[allow(clippy::too_many_arguments)]
+pub fn run_threaded_counted<K>(
+    kernel: K,
+    domain: Domain,
+    levels: u8,
+    particles: &[[f64; 3]],
+    cut: &TreeCut,
+    assignment: &Assignment,
+    dims: OpDims,
+) -> (Vec<[f64; 2]>, OpCounts)
+where
+    K: FmmKernel + Clone + Send + 'static,
+{
     let global_tree =
         Arc::new(Quadtree::build(domain, levels, particles.to_vec()));
+    run_threaded_on(kernel, global_tree, cut, assignment, dims)
+}
+
+/// Like [`run_threaded_counted`] but over an **already-built** global
+/// tree (the solver facade has one from problem preparation — no second
+/// Morton sort/binning of the same particles).  The particle set is the
+/// tree's own input-order copy; after all rank threads join, the `Arc`
+/// the caller retains is again the sole owner.
+pub fn run_threaded_on<K>(
+    kernel: K,
+    global_tree: Arc<Quadtree>,
+    cut: &TreeCut,
+    assignment: &Assignment,
+    dims: OpDims,
+) -> (Vec<[f64; 2]>, OpCounts)
+where
+    K: FmmKernel + Clone + Send + 'static,
+{
+    let domain = global_tree.domain;
+    let levels = global_tree.levels;
+    let n_particles = global_tree.particles.len();
+    let ranks = assignment.ranks;
     let plan = Arc::new(ParallelPlan::build(&global_tree, cut, assignment));
     let nb_overlap =
         Arc::new(neighbor_overlap(&global_tree, cut, assignment));
@@ -58,9 +107,9 @@ pub fn run_threaded(
         receivers.push(Some(rx));
     }
 
-    // per-rank own particles with global indices
+    // per-rank own particles with global indices (input order)
     let mut own: Vec<Vec<([f64; 3], u32)>> = vec![Vec::new(); ranks];
-    for (i, p) in particles.iter().enumerate() {
+    for (i, p) in global_tree.particles.iter().enumerate() {
         let leaf = domain.locate(levels, p[0], p[1]);
         let r = owner_of(&cut, &assignment, &leaf);
         own[r].push((*p, i as u32));
@@ -77,27 +126,33 @@ pub fn run_threaded(
         let cut = cut.clone();
         let assignment = assignment.clone();
         let gtree = global_tree.clone();
+        let kernel = kernel.clone();
 
         handles.push(thread::spawn(move || {
-            rank_main(r, ranks, rx, txs, my_parts, domain, levels, &plan,
-                      &nb, &il, &cut, &assignment, &gtree, dims)
+            rank_main(kernel, r, ranks, rx, txs, my_parts, domain, levels,
+                      &plan, &nb, &il, &cut, &assignment, &gtree, dims)
         }));
     }
     drop(senders);
 
-    let mut vel = vec![[0.0; 2]; particles.len()];
+    let mut vel = vec![[0.0; 2]; n_particles];
+    let mut counts = OpCounts::default();
     for h in handles {
-        if let Some(partial) = h.join().expect("rank thread panicked") {
+        let (partial, rank_counts) =
+            h.join().expect("rank thread panicked");
+        counts.merge(&rank_counts);
+        if let Some(partial) = partial {
             for (i, v) in partial {
                 vel[i as usize] = v;
             }
         }
     }
-    vel
+    (vel, counts)
 }
 
 #[allow(clippy::too_many_arguments)]
-fn rank_main(
+fn rank_main<K: FmmKernel>(
+    kernel: K,
     rank: usize,
     ranks: usize,
     rx: mpsc::Receiver<Envelope>,
@@ -112,8 +167,8 @@ fn rank_main(
     assignment: &Assignment,
     gtree: &Quadtree,
     dims: OpDims,
-) -> Option<Vec<(u32, [f64; 2])>> {
-    let backend = NativeBackend::new(dims, BiotSavart2D::new(dims.sigma));
+) -> (Option<Vec<(u32, [f64; 2])>>, OpCounts) {
+    let backend = NativeBackend::new(dims, kernel);
 
     // ---- phase A: halo exchange (send own boundary leaf particles) ----
     // Bin the rank's own particles once (Morton-sorted CSR layout); each
@@ -312,6 +367,7 @@ fn rank_main(
             (global_ids[i], state.vel[tree.inv_perm[i] as usize])
         })
         .collect();
+    let counts = ev.counts.get();
     if rank == 0 {
         let mut all = out;
         // receive Velocities from every other rank
@@ -331,7 +387,7 @@ fn rank_main(
                 expected -= 1;
             }
         }
-        Some(all)
+        (Some(all), counts)
     } else {
         if !out.is_empty() {
             let (idx, vel): (Vec<u32>, Vec<[f64; 2]>) =
@@ -340,14 +396,14 @@ fn rank_main(
                 .send((rank, Message::Velocities { idx, vel }))
                 .expect("send velocities");
         }
-        None
+        (None, counts)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fmm::direct_all;
+    use crate::fmm::{direct_all, BiotSavart2D};
     use crate::partition::{assign_subtrees, Strategy};
     use crate::proptest::check;
     use crate::util::rel_l2_error;
@@ -364,8 +420,8 @@ mod tests {
                                     Strategy::Optimized, g.seed);
             let dims =
                 OpDims { batch: 16, leaf: 8, terms: 12, sigma: 0.01 };
-            let got = run_threaded(Domain::UNIT, levels, &parts, &cut, &a,
-                                   dims);
+            let got = run_threaded(BiotSavart2D::new(0.01), Domain::UNIT,
+                                   levels, &parts, &cut, &a, dims);
             let backend = NativeBackend::new(dims, BiotSavart2D::new(0.01));
             let want = Evaluator::new(&tree, &backend)
                 .evaluate()
@@ -387,8 +443,8 @@ mod tests {
                                     Strategy::SfcEqualCount, g.seed);
             let dims =
                 OpDims { batch: 16, leaf: 8, terms: 17, sigma: 0.005 };
-            let got = run_threaded(Domain::UNIT, levels, &parts, &cut, &a,
-                                   dims);
+            let got = run_threaded(BiotSavart2D::new(0.005), Domain::UNIT,
+                                   levels, &parts, &cut, &a, dims);
             let want = direct_all(&BiotSavart2D::new(0.005), &parts);
             let err = rel_l2_error(&got, &want);
             assert!(err < 2e-4, "threaded vs direct err {err}");
@@ -404,8 +460,8 @@ mod tests {
         let a = assign_subtrees(&tree, &cut, 8, 1,
                                 Strategy::Optimized, 0);
         let dims = OpDims { batch: 16, leaf: 8, terms: 10, sigma: 0.01 };
-        let got =
-            run_threaded(Domain::UNIT, 3, &parts, &cut, &a, dims);
+        let got = run_threaded(BiotSavart2D::new(0.01), Domain::UNIT, 3,
+                               &parts, &cut, &a, dims);
         let backend = NativeBackend::new(dims, BiotSavart2D::new(0.01));
         let want = Evaluator::new(&tree, &backend)
             .evaluate()

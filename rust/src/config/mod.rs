@@ -8,7 +8,16 @@ use std::collections::HashMap;
 use anyhow::{anyhow, bail, Result};
 
 use crate::comm::NetworkModel;
+use crate::fmm::KernelSpec;
 use crate::partition::Strategy;
+
+/// Canonical config keys (aliases joined with `|`), for the unknown-key
+/// error message — keep in sync with [`RunConfig::set`].
+const VALID_KEYS: &[&str] = &[
+    "particles|n", "levels|l", "cut-level|k", "terms|p", "sigma",
+    "kernel", "ranks|procs", "strategy", "network", "distribution|dist",
+    "backend", "seed", "artifacts", "par-threads|threads",
+];
 
 /// Full run configuration for the coordinator.
 #[derive(Clone, Debug)]
@@ -23,6 +32,8 @@ pub struct RunConfig {
     pub terms: usize,
     /// Gaussian core size σ
     pub sigma: f64,
+    /// interaction kernel (biot-savart | log-potential | gravity)
+    pub kernel: KernelSpec,
     /// simulated process count P
     pub ranks: usize,
     /// partitioning strategy
@@ -31,7 +42,7 @@ pub struct RunConfig {
     pub network: String,
     /// particle distribution: lattice | uniform | clustered
     pub distribution: String,
-    /// compute backend: native | pjrt
+    /// compute backend: native | pjrt | auto (pjrt-or-native fallback)
     pub backend: String,
     /// RNG seed
     pub seed: u64,
@@ -50,6 +61,7 @@ impl Default for RunConfig {
             cut_level: 0,
             terms: 17,
             sigma: 0.02,
+            kernel: KernelSpec::BiotSavart,
             ranks: 4,
             strategy: Strategy::Optimized,
             network: "infinipath".into(),
@@ -92,6 +104,15 @@ impl RunConfig {
             }
             "terms" | "p" => self.terms = value.parse()?,
             "sigma" => self.sigma = value.parse()?,
+            "kernel" => {
+                self.kernel =
+                    KernelSpec::parse(value).ok_or_else(|| {
+                        anyhow!(
+                            "unknown kernel '{value}' (available: {})",
+                            KernelSpec::NAMES.join(" | ")
+                        )
+                    })?
+            }
             "ranks" | "procs" => self.ranks = value.parse()?,
             "strategy" => {
                 self.strategy = Strategy::parse(value).ok_or_else(|| {
@@ -106,7 +127,10 @@ impl RunConfig {
             "par-threads" | "par_threads" | "threads" => {
                 self.par_threads = value.parse()?
             }
-            _ => bail!("unknown config key '{key}'"),
+            _ => bail!(
+                "unknown config key '{key}' (valid keys: {})",
+                VALID_KEYS.join(", ")
+            ),
         }
         Ok(())
     }
@@ -161,11 +185,12 @@ impl RunConfig {
     /// Summarize for logs.
     pub fn summary(&self) -> String {
         format!(
-            "N={} L={} k={} p={} sigma={} P={} strategy={} network={} \
-             dist={} backend={} seed={} threads={}",
+            "N={} L={} k={} p={} sigma={} kernel={} P={} strategy={} \
+             network={} dist={} backend={} seed={} threads={}",
             self.particles, self.levels, self.effective_cut(), self.terms,
-            self.sigma, self.ranks, self.strategy.name(), self.network,
-            self.distribution, self.backend, self.seed,
+            self.sigma, self.kernel.name(), self.ranks,
+            self.strategy.name(), self.network, self.distribution,
+            self.backend, self.seed,
             if self.par_threads == 0 {
                 "auto".to_string()
             } else {
@@ -235,10 +260,29 @@ mod tests {
     }
 
     #[test]
-    fn unknown_key_is_an_error() {
+    fn unknown_key_is_an_error_listing_valid_keys() {
         let mut c = RunConfig::default();
-        assert!(c.set("bogus", "1").is_err());
+        let err = c.set("bogus", "1").unwrap_err().to_string();
+        assert!(err.contains("valid keys"), "{err}");
+        assert!(err.contains("kernel") && err.contains("particles|n"),
+                "{err}");
         assert!(c.apply_ini("bogus = 1\n").is_err());
+    }
+
+    #[test]
+    fn kernel_key_parses_and_rejects_with_available_list() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.kernel, KernelSpec::BiotSavart);
+        c.set("kernel", "gravity").unwrap();
+        assert_eq!(c.kernel, KernelSpec::Gravity);
+        c.apply_ini("kernel = laplace\n").unwrap();
+        assert_eq!(c.kernel, KernelSpec::LogPotential);
+        assert!(c.summary().contains("kernel=log-potential"));
+        let err = c.set("kernel", "yukawa").unwrap_err().to_string();
+        assert!(err.contains("available"), "{err}");
+        for name in KernelSpec::NAMES {
+            assert!(err.contains(name), "{err} missing {name}");
+        }
     }
 
     #[test]

@@ -11,8 +11,8 @@
 use anyhow::{anyhow, bail, Result};
 
 use super::driver::{self, make_backend};
+use super::solver::{FmmSolver, RunMode};
 use crate::config::RunConfig;
-use crate::fmm::{direct_all, BiotSavart2D};
 use crate::metrics::ScalingSeries;
 use crate::model::{serial_memory, CommEstimator, WorkEstimator};
 use crate::partition::Strategy;
@@ -36,10 +36,11 @@ COMMANDS
 COMMON FLAGS (defaults in brackets)
   --particles N     [10000]   --levels L    [5]     --terms p   [17]
   --ranks P         [4]       --cut-level k [auto]  --sigma s   [0.02]
+  --kernel K        [biot-savart|log-potential|gravity]
   --strategy S      [optimized|sfc|sfc-weighted|uniform]
   --network M       [infinipath|ideal|ethernet]
   --dist D          [lattice|uniform|clustered]
-  --backend B       [native|pjrt]        --artifacts DIR [artifacts]
+  --backend B       [native|pjrt|auto]   --artifacts DIR [artifacts]
   --config FILE     INI-style config file        --seed N [1]
   --threads T       evaluator worker pool, 0 = one per core [0]
   scale only: --ranks-list 1,4,8,16,32,64
@@ -127,7 +128,13 @@ pub fn dispatch(args: &[String]) -> Result<()> {
 
 fn cmd_run(config: &RunConfig, dump: Option<&str>) -> Result<()> {
     println!("petfmm run: {}", config.summary());
-    let problem = driver::prepare(config)?;
+    // one entry point for the whole pipeline: the solver facade owns
+    // backend selection, the schedule, and the single input-order
+    // permutation of the results
+    let sol = FmmSolver::from_config(config)
+        .mode(RunMode::Simulated)
+        .solve()?;
+    let problem = &sol.problem;
     println!(
         "tree: {} particles, {} occupied leaves, {} subtrees (cut k={})",
         problem.tree.n_particles(),
@@ -141,36 +148,38 @@ fn cmd_run(config: &RunConfig, dump: Option<&str>) -> Result<()> {
         problem.assignment.imbalance(),
         problem.assignment.edge_cut()
     );
-    let backend = make_backend(config)?;
-    let res = problem.simulate(backend.as_ref())?;
     println!("\nstage times (virtual seconds, barrier semantics):");
-    for s in &res.stages {
+    for s in &sol.stages {
         println!("  {:<20} {:>12.6}", s.name, s.duration());
     }
-    println!("  {:<20} {:>12.6}", "TOTAL", res.makespan());
-    println!("load balance LB(P) = {:.4}", res.load_balance());
-    println!("modeled comm volume = {:.3} MB", res.comm_bytes / 1e6);
+    println!("  {:<20} {:>12.6}", "TOTAL", sol.makespan());
+    println!("load balance LB(P) = {:.4}", sol.load_balance());
+    println!("modeled comm volume = {:.3} MB", sol.comm_bytes / 1e6);
 
-    // accuracy vs direct (capped N so the check stays fast)
+    // accuracy vs the kernel's direct oracle (capped N: stays fast)
     if problem.tree.n_particles() <= 20_000 {
-        let want = direct_all(
-            &BiotSavart2D::new(config.sigma),
-            &problem.tree.particles,
-        );
+        let want = sol.direct_oracle();
         println!(
             "accuracy vs direct: rel-L2 {:.3e}, max-abs {:.3e}",
-            rel_l2_error(&res.vel, &want),
-            max_abs_error(&res.vel, &want)
+            rel_l2_error(&sol.vel, &want),
+            max_abs_error(&sol.vel, &want)
         );
         if let Some(path) = dump {
-            let state = problem.serial(backend.as_ref());
-            let fmm = state.vel_in_input_order(&problem.tree);
+            // the dump needs expansion coefficients: a serial facade
+            // solve carries the solved state.  Reuse the simulated
+            // run's prepared problem — same particles/tree/partition,
+            // no second workload generation or graph partition
+            let ser = FmmSolver::from_problem(problem.clone())
+                .mode(RunMode::Serial)
+                .solve()?;
+            let state =
+                ser.state.as_ref().expect("serial solve carries state");
             let vf = VerificationFile::build(
-                &problem.tree,
+                &ser.problem.tree,
                 config.terms,
-                &state,
+                state,
                 want,
-                fmm,
+                ser.vel.clone(),
             );
             std::fs::write(path, vf.to_text())?;
             println!("verification file written to {path}");
@@ -314,6 +323,22 @@ mod tests {
             "--ranks", "2", "--dist", "uniform",
         ]))
         .unwrap();
+    }
+
+    #[test]
+    fn run_with_each_kernel_flag() {
+        for kernel in ["log-potential", "gravity", "vortex"] {
+            dispatch(&args(&[
+                "run", "--particles", "150", "--levels", "3", "--terms",
+                "6", "--ranks", "2", "--dist", "uniform", "--kernel",
+                kernel,
+            ]))
+            .unwrap();
+        }
+        let err = dispatch(&args(&["run", "--kernel", "yukawa"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("available"), "{err}");
     }
 
     #[test]

@@ -6,8 +6,8 @@ use anyhow::{bail, Context, Result};
 
 use super::workload;
 use crate::config::RunConfig;
-use crate::fmm::{BiotSavart2D, Evaluator, FmmState, NativeBackend,
-                 OpDims, OpsBackend};
+use crate::fmm::{BiotSavart2D, Gravity2D, KernelSpec, LogPotential2D,
+                 NativeBackend, OpDims, OpsBackend};
 use crate::metrics::{ScalingPoint, ScalingSeries};
 use crate::partition::{assign_subtrees, Assignment};
 use crate::quadtree::{Domain, Particle, Quadtree, TreeCut};
@@ -17,6 +17,7 @@ use crate::sched::{ParallelPlan, SimResult, Simulator};
 
 /// A fully prepared problem: particles binned, tree cut, graph
 /// partitioned.
+#[derive(Clone, Debug)]
 pub struct Problem {
     pub config: RunConfig,
     pub tree: Quadtree,
@@ -24,46 +25,85 @@ pub struct Problem {
     pub assignment: Assignment,
 }
 
-/// Build a backend per the config (`native` or `pjrt`).
+/// The native backend's batch geometry for a config (shared by the
+/// serial, simulated and threaded paths, so their dims — and therefore
+/// their bitwise results — always agree).
+pub fn native_dims(config: &RunConfig) -> OpDims {
+    OpDims {
+        batch: 64,
+        leaf: 32,
+        terms: config.terms,
+        sigma: config.sigma,
+    }
+}
+
+/// Build the native backend for the config's kernel: the single place
+/// the runtime [`KernelSpec`] is monomorphized into a static
+/// [`NativeBackend`].
+fn native_backend(config: &RunConfig) -> Box<dyn OpsBackend> {
+    let dims = native_dims(config);
+    match config.kernel {
+        KernelSpec::BiotSavart => Box::new(NativeBackend::new(
+            dims,
+            BiotSavart2D::new(config.sigma),
+        )),
+        KernelSpec::LogPotential => {
+            Box::new(NativeBackend::new(dims, LogPotential2D))
+        }
+        KernelSpec::Gravity => {
+            Box::new(NativeBackend::new(dims, Gravity2D::default()))
+        }
+    }
+}
+
+/// Load the PJRT artifact backend for the config.  The artifacts bake
+/// the Biot–Savart kernel at AOT time, so any other kernel is an error
+/// (callers wanting graceful degradation use `backend = auto`).
+fn pjrt_backend(config: &RunConfig) -> Result<Box<dyn OpsBackend>> {
+    if config.kernel != KernelSpec::BiotSavart {
+        bail!(
+            "the PJRT artifacts bake the biot-savart kernel; kernel \
+             '{}' needs --backend native",
+            config.kernel.name()
+        );
+    }
+    let be = PjrtBackend::load(std::path::Path::new(&config.artifacts))
+        .context("loading PJRT artifacts (run `make artifacts`)")?;
+    if be.dims().terms != config.terms {
+        bail!(
+            "artifacts were built with p={}, config wants p={} — \
+             re-run `make artifacts` with --terms",
+            be.dims().terms,
+            config.terms
+        );
+    }
+    if (be.dims().sigma - config.sigma).abs() > 1e-12 {
+        eprintln!(
+            "warning: artifacts bake sigma={} but config wants \
+             sigma={}; the P2P kernel uses the artifact value \
+             (timings unaffected; accuracy checks should compare \
+             against sigma={})",
+            be.dims().sigma, config.sigma, be.dims().sigma
+        );
+    }
+    Ok(Box::new(be))
+}
+
+/// Build a backend per the config: `native`, `pjrt`, or `auto` (the
+/// pjrt-or-native fallback previously hand-rolled by every example —
+/// try the AOT artifacts, fall back to the native path when they are
+/// absent or don't speak the configured kernel).
 pub fn make_backend(config: &RunConfig) -> Result<Box<dyn OpsBackend>> {
     match config.backend.as_str() {
-        "native" => {
-            let dims = OpDims {
-                batch: 64,
-                leaf: 32,
-                terms: config.terms,
-                sigma: config.sigma,
-            };
-            Ok(Box::new(NativeBackend::new(
-                dims,
-                BiotSavart2D::new(config.sigma),
-            )))
+        "native" => Ok(native_backend(config)),
+        "pjrt" => pjrt_backend(config),
+        "auto" => Ok(pjrt_backend(config).unwrap_or_else(|e| {
+            eprintln!("note: pjrt unavailable ({e:#}); using native");
+            native_backend(config)
+        })),
+        other => {
+            bail!("unknown backend '{other}' (native | pjrt | auto)")
         }
-        "pjrt" => {
-            let be = PjrtBackend::load(std::path::Path::new(
-                &config.artifacts,
-            ))
-            .context("loading PJRT artifacts (run `make artifacts`)")?;
-            if be.dims().terms != config.terms {
-                bail!(
-                    "artifacts were built with p={}, config wants p={} — \
-                     re-run `make artifacts` with --terms",
-                    be.dims().terms,
-                    config.terms
-                );
-            }
-            if (be.dims().sigma - config.sigma).abs() > 1e-12 {
-                eprintln!(
-                    "warning: artifacts bake sigma={} but config wants \
-                     sigma={}; the P2P kernel uses the artifact value \
-                     (timings unaffected; accuracy checks should compare \
-                     against sigma={})",
-                    be.dims().sigma, config.sigma, be.dims().sigma
-                );
-            }
-            Ok(Box::new(be))
-        }
-        other => bail!("unknown backend '{other}'"),
     }
 }
 
@@ -117,13 +157,6 @@ impl Problem {
             sim = sim.with_costs(c);
         }
         Ok(sim.run(&plan))
-    }
-
-    /// Run the plain serial evaluator (no parallel machinery).
-    pub fn serial(&self, backend: &dyn OpsBackend) -> FmmState {
-        Evaluator::new(&self.tree, backend)
-            .with_threads(self.config.par_threads)
-            .evaluate()
     }
 }
 
@@ -230,5 +263,33 @@ mod tests {
     fn unknown_backend_is_an_error() {
         let cfg = RunConfig { backend: "gpu".into(), ..small_config() };
         assert!(make_backend(&cfg).is_err());
+    }
+
+    #[test]
+    fn auto_backend_always_resolves() {
+        // pjrt if artifacts exist, native otherwise — never an error
+        let cfg = RunConfig { backend: "auto".into(), ..small_config() };
+        assert!(make_backend(&cfg).is_ok());
+    }
+
+    #[test]
+    fn every_kernel_gets_a_native_backend() {
+        for spec in KernelSpec::ALL {
+            let cfg = RunConfig { kernel: spec, ..small_config() };
+            let be = make_backend(&cfg).unwrap();
+            assert_eq!(be.name(), "native");
+            assert_eq!(be.dims(), native_dims(&cfg));
+        }
+    }
+
+    #[test]
+    fn pjrt_rejects_non_biot_savart_kernels() {
+        let cfg = RunConfig {
+            backend: "pjrt".into(),
+            kernel: KernelSpec::Gravity,
+            ..small_config()
+        };
+        let err = make_backend(&cfg).unwrap_err().to_string();
+        assert!(err.contains("biot-savart"), "{err}");
     }
 }

@@ -1,12 +1,16 @@
 //! The leader/coordinator (L3): workload generation, problem
 //! preparation (tree build → cut → weighted-graph partition), schedule
-//! execution over a compute backend, and the CLI.
+//! execution over a compute backend, the kernel-generic solver facade
+//! ([`FmmSolver`]), and the CLI.
 
 pub mod cli;
 pub mod driver;
+pub mod solver;
 pub mod workload;
 
 pub use cli::{cli_main, dispatch};
-pub use driver::{make_backend, prepare, prepare_with_particles,
-                 scaling_point, strong_scaling, Problem};
+pub use driver::{make_backend, native_dims, prepare,
+                 prepare_with_particles, scaling_point, strong_scaling,
+                 Problem};
+pub use solver::{FmmSolver, RunMode, Solution};
 pub use workload::generate;

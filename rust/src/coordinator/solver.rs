@@ -1,0 +1,455 @@
+//! The kernel-generic solver facade: one entry point for every way of
+//! running the FMM.
+//!
+//! [`FmmSolver`] is the public face the paper's §1 extensibility claim
+//! resolves to: clients (quickstart, CLI, benches, application codes)
+//! describe *what* to solve — a [`RunConfig`] plus optional explicit
+//! particles, a [`KernelSpec`], a worker count, a [`RunMode`] — and the
+//! facade wires the quadtree build, the backend selection
+//! (`driver::make_backend`, including the pjrt-or-native `auto`
+//! fallback), the partition, and the chosen runtime.  The three run
+//! modes execute the identical schedule and are bitwise-identical on
+//! every pinned configuration (tests/kernel_conformance.rs):
+//!
+//! * [`RunMode::Serial`] — the dense-arena [`Evaluator`] pipeline (with
+//!   per-stage wall-clock timings),
+//! * [`RunMode::Threaded`] — the real message-passing runtime
+//!   (`comm::threaded`, one OS thread per rank), and
+//! * [`RunMode::Simulated`] — the virtual-time strong-scaling
+//!   [`Simulator`](crate::sched::Simulator) with α–β comm costing.
+//!
+//! **One-permutation rule (DESIGN.md §10).**  The tree stores particles
+//! in Morton order; results come back in [`Solution::vel`] in the
+//! caller's *input order*, and the internal→input mapping is applied
+//! exactly once, inside this module (or at the runtime boundary that
+//! already reports input order).  No client ever touches
+//! `perm`/`inv_perm` again.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::driver::{self, make_backend, native_dims, Problem};
+use crate::comm::threaded::run_threaded_on;
+use crate::config::RunConfig;
+use crate::fmm::{BiotSavart2D, Evaluator, FmmState, Gravity2D,
+                 KernelSpec, LogPotential2D, OpCounts};
+use crate::quadtree::Particle;
+use crate::sched::{stages_load_balance, stages_makespan, StageRecord};
+
+/// How a solve executes (same math, same bits — different runtimes).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RunMode {
+    /// Dense-arena serial evaluator (with the config's worker pool).
+    #[default]
+    Serial,
+    /// Real threads + channels, one rank per OS thread
+    /// (`comm::threaded`; always the native backend — PJRT executable
+    /// handles are thread-local by construction).
+    Threaded,
+    /// Virtual-time strong-scaling simulator (BSP stages, α–β network).
+    Simulated,
+}
+
+impl RunMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            RunMode::Serial => "serial",
+            RunMode::Threaded => "threaded",
+            RunMode::Simulated => "simulated",
+        }
+    }
+}
+
+/// Builder facade over the whole pipeline.  Construct with
+/// [`FmmSolver::from_config`] (or [`FmmSolver::new`] for defaults),
+/// refine with the chainable setters, then [`FmmSolver::solve`].
+///
+/// ```no_run
+/// use petfmm::config::RunConfig;
+/// use petfmm::coordinator::{FmmSolver, RunMode};
+/// use petfmm::fmm::KernelSpec;
+///
+/// let cfg = RunConfig { particles: 10_000, ..Default::default() };
+/// let sol = FmmSolver::from_config(&cfg)
+///     .kernel(KernelSpec::Gravity)
+///     .threads(4)
+///     .mode(RunMode::Serial)
+///     .solve()
+///     .unwrap();
+/// let err_vs_exact = sol.vel.len(); // input-order field, ready to use
+/// # let _ = err_vs_exact;
+/// ```
+#[derive(Clone, Debug)]
+pub struct FmmSolver {
+    config: RunConfig,
+    particles: Option<Vec<Particle>>,
+    problem: Option<Problem>,
+    mode: RunMode,
+}
+
+impl FmmSolver {
+    /// Solver over the default [`RunConfig`].
+    pub fn new() -> FmmSolver {
+        FmmSolver::from_config(&RunConfig::default())
+    }
+
+    /// Solver over an explicit config (the CLI/file/flag pipeline).
+    pub fn from_config(config: &RunConfig) -> FmmSolver {
+        FmmSolver {
+            config: config.clone(),
+            particles: None,
+            problem: None,
+            mode: RunMode::default(),
+        }
+    }
+
+    /// Solver over an **already-prepared** [`Problem`]: the tree, cut
+    /// and partition assignment are reused as prepared (no workload
+    /// regeneration, no second Morton sort, no re-partition), and the
+    /// problem's embedded config is the base.  The chainable setters
+    /// still apply — kernel/threads/mode don't affect preparation.
+    /// [`FmmSolver::particles`] is ignored on this path (the problem
+    /// already owns its particle set).
+    pub fn from_problem(problem: Problem) -> FmmSolver {
+        FmmSolver {
+            config: problem.config.clone(),
+            particles: None,
+            problem: Some(problem),
+            mode: RunMode::default(),
+        }
+    }
+
+    /// Override the interaction kernel (config `kernel` key).
+    pub fn kernel(mut self, kernel: KernelSpec) -> FmmSolver {
+        self.config.kernel = kernel;
+        self
+    }
+
+    /// Override the evaluator worker-pool size (0 = one per host core);
+    /// results are bit-identical at any setting.
+    pub fn threads(mut self, n: usize) -> FmmSolver {
+        self.config.par_threads = n;
+        self
+    }
+
+    /// Select the run mode (default: [`RunMode::Serial`]).
+    pub fn mode(mut self, mode: RunMode) -> FmmSolver {
+        self.mode = mode;
+        self
+    }
+
+    /// Solve an explicit particle set instead of the config's synthetic
+    /// workload (`config.distribution`).
+    pub fn particles(mut self, particles: Vec<Particle>) -> FmmSolver {
+        self.particles = Some(particles);
+        self
+    }
+
+    /// Run the configured solve.
+    pub fn solve(self) -> Result<Solution> {
+        let FmmSolver { config, particles, problem, mode } = self;
+        let problem = match problem {
+            Some(mut p) => {
+                // setters may have changed non-structural keys (kernel,
+                // threads) since from_problem — keep the embedded
+                // config in sync with what this solve actually runs
+                p.config = config.clone();
+                p
+            }
+            None => match particles {
+                Some(p) => driver::prepare_with_particles(&config, p)?,
+                None => driver::prepare(&config)?,
+            },
+        };
+        match mode {
+            RunMode::Serial => {
+                let backend = make_backend(&config)?;
+                let (state, times, counts) = {
+                    let ev =
+                        Evaluator::new(&problem.tree, backend.as_ref())
+                            .with_threads(config.par_threads);
+                    let (state, times) = ev.evaluate_timed();
+                    (state, times, ev.counts.get())
+                };
+                // the one place the Morton permutation is applied
+                let vel = state.vel_in_input_order(&problem.tree);
+                let stages = times
+                    .into_iter()
+                    .map(|(name, t)| StageRecord {
+                        name,
+                        compute: vec![t],
+                        comm: vec![0.0],
+                    })
+                    .collect();
+                Ok(Solution {
+                    vel,
+                    counts,
+                    stages,
+                    comm_bytes: 0.0,
+                    ranks: 1,
+                    state: Some(state),
+                    backend: backend.name(),
+                    mode,
+                    problem,
+                })
+            }
+            RunMode::Threaded => {
+                // same backend-name validation as the other modes;
+                // threaded execution itself is always per-rank native
+                match config.backend.as_str() {
+                    "native" | "auto" => {}
+                    "pjrt" => bail!(
+                        "threaded mode runs per-rank native backends \
+                         (PJRT handles are thread-local); use --backend \
+                         native or auto"
+                    ),
+                    other => bail!(
+                        "unknown backend '{other}' (native | pjrt | \
+                         auto)"
+                    ),
+                }
+                let dims = native_dims(&config);
+                // share the already-built tree with the rank threads
+                // (no second Morton sort/binning); after they join the
+                // Arc is sole-owned again and moves back into Problem
+                let Problem { config: pcfg, tree, cut, assignment } =
+                    problem;
+                let tree = Arc::new(tree);
+                let (vel, counts) = match config.kernel {
+                    KernelSpec::BiotSavart => run_threaded_on(
+                        BiotSavart2D::new(config.sigma), tree.clone(),
+                        &cut, &assignment, dims,
+                    ),
+                    KernelSpec::LogPotential => run_threaded_on(
+                        LogPotential2D, tree.clone(), &cut, &assignment,
+                        dims,
+                    ),
+                    KernelSpec::Gravity => run_threaded_on(
+                        Gravity2D::default(), tree.clone(), &cut,
+                        &assignment, dims,
+                    ),
+                };
+                let tree = Arc::try_unwrap(tree)
+                    .expect("rank threads joined; no Arc clones remain");
+                Ok(Solution {
+                    // already global input order (rank gather boundary)
+                    vel,
+                    counts,
+                    stages: Vec::new(),
+                    comm_bytes: 0.0,
+                    ranks: config.ranks,
+                    state: None,
+                    backend: "native",
+                    mode,
+                    problem: Problem {
+                        config: pcfg,
+                        tree,
+                        cut,
+                        assignment,
+                    },
+                })
+            }
+            RunMode::Simulated => {
+                let backend = make_backend(&config)?;
+                let res = problem.simulate(backend.as_ref())?;
+                Ok(Solution {
+                    // SimResult.vel is already input order (mapped once
+                    // at the simulator's result boundary)
+                    vel: res.vel,
+                    counts: res.counts,
+                    stages: res.stages,
+                    comm_bytes: res.comm_bytes,
+                    ranks: res.ranks,
+                    state: None,
+                    backend: backend.name(),
+                    mode,
+                    problem,
+                })
+            }
+        }
+    }
+}
+
+impl Default for FmmSolver {
+    fn default() -> FmmSolver {
+        FmmSolver::new()
+    }
+}
+
+/// Result of one facade solve: the field in **input particle order**
+/// (the permutation was applied exactly once — see the module docs),
+/// plus the work accounting and stage timings every run mode reports.
+#[derive(Clone, Debug)]
+pub struct Solution {
+    /// Per-particle output 2-vectors (velocity / field / acceleration,
+    /// per the kernel) in the caller's input order.
+    pub vel: Vec<[f64; 2]>,
+    /// Operator-application counts (aggregated over ranks).
+    pub counts: OpCounts,
+    /// Per-stage timings: wall-clock seconds for `Serial` (one entry
+    /// per operator), virtual BSP stages for `Simulated`, empty for
+    /// `Threaded` (real concurrency has no per-stage barrier to time).
+    pub stages: Vec<StageRecord>,
+    /// Modeled communication volume in bytes (`Simulated` only).
+    pub comm_bytes: f64,
+    /// Rank count of the run (1 for `Serial`).
+    pub ranks: usize,
+    /// The solved expansion state (`Serial` mode only — verification
+    /// dumps read coefficients from it).
+    pub state: Option<FmmState>,
+    /// Which backend executed (`"native"` / `"pjrt"`).
+    pub backend: &'static str,
+    /// The mode that produced this solution.
+    pub mode: RunMode,
+    /// The prepared problem (tree, cut, partition assignment) — kept so
+    /// clients can inspect structure without re-deriving it.
+    pub problem: Problem,
+}
+
+impl Solution {
+    /// The configured kernel's O(N²) direct-sum oracle over the same
+    /// particles, in the same input order as [`Solution::vel`].
+    pub fn direct_oracle(&self) -> Vec<[f64; 2]> {
+        self.problem.config.kernel.direct_all(
+            self.problem.config.sigma,
+            &self.problem.tree.particles,
+        )
+    }
+
+    /// Total time across stages (virtual seconds for `Simulated`,
+    /// wall-clock for `Serial`; 0 for `Threaded`).
+    pub fn makespan(&self) -> f64 {
+        stages_makespan(&self.stages)
+    }
+
+    /// The paper's LB(P) = min/max rank time (1.0 when no per-rank
+    /// stage data exists) — same definition as `SimResult`.
+    pub fn load_balance(&self) -> f64 {
+        stages_load_balance(self.ranks, &self.stages)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rel_l2_error;
+
+    fn small_config() -> RunConfig {
+        RunConfig {
+            particles: 250,
+            levels: 4,
+            terms: 12,
+            sigma: 0.01,
+            ranks: 4,
+            distribution: "uniform".into(),
+            par_threads: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn serial_solution_matches_oracle_and_reports_structure() {
+        let sol = FmmSolver::from_config(&small_config())
+            .solve()
+            .unwrap();
+        let want = sol.direct_oracle();
+        let err = rel_l2_error(&sol.vel, &want);
+        assert!(err < 1e-3, "err {err}");
+        assert!(sol.state.is_some());
+        assert_eq!(sol.stages.len(), 6);
+        assert!(sol.counts.p2m > 0 && sol.counts.p2p_pairs > 0);
+        assert_eq!(sol.ranks, 1);
+        assert_eq!(sol.mode, RunMode::Serial);
+    }
+
+    #[test]
+    fn all_three_modes_agree_bitwise_via_the_facade() {
+        let cfg = small_config();
+        let serial = FmmSolver::from_config(&cfg).solve().unwrap();
+        let threaded = FmmSolver::from_config(&cfg)
+            .mode(RunMode::Threaded)
+            .solve()
+            .unwrap();
+        let sim = FmmSolver::from_config(&cfg)
+            .mode(RunMode::Simulated)
+            .solve()
+            .unwrap();
+        assert_eq!(serial.vel, threaded.vel);
+        assert_eq!(serial.vel, sim.vel);
+        // identical schedules apply identical operator work (batch
+        // boundaries differ per mode: per-rank chunking)
+        assert_eq!(serial.counts.p2p_pairs, sim.counts.p2p_pairs);
+        assert_eq!(serial.counts.m2l, sim.counts.m2l);
+        assert!(sim.makespan() > 0.0);
+        let lb = sim.load_balance();
+        assert!((0.0..=1.0).contains(&lb), "lb {lb}");
+    }
+
+    #[test]
+    fn explicit_particles_and_kernel_override() {
+        let mut g = crate::proptest::Gen::new(3);
+        let parts = g.particles(150);
+        let sol = FmmSolver::from_config(&small_config())
+            .kernel(KernelSpec::Gravity)
+            .particles(parts.clone())
+            .solve()
+            .unwrap();
+        assert_eq!(sol.problem.config.kernel, KernelSpec::Gravity);
+        let want = KernelSpec::Gravity.direct_all(0.01, &parts);
+        let err = rel_l2_error(&sol.vel, &want);
+        assert!(err < 1e-3, "err {err}");
+    }
+
+    #[test]
+    fn threaded_mode_rejects_pjrt_backend() {
+        let cfg = RunConfig {
+            backend: "pjrt".into(),
+            ..small_config()
+        };
+        let err = FmmSolver::from_config(&cfg)
+            .mode(RunMode::Threaded)
+            .solve()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("threaded"), "{err}");
+    }
+
+    #[test]
+    fn every_mode_rejects_an_unknown_backend_name() {
+        let cfg = RunConfig {
+            backend: "gpu".into(),
+            ..small_config()
+        };
+        for mode in
+            [RunMode::Serial, RunMode::Threaded, RunMode::Simulated]
+        {
+            let err = FmmSolver::from_config(&cfg)
+                .mode(mode)
+                .solve()
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("unknown backend"),
+                    "{}: {err}", mode.name());
+        }
+    }
+
+    #[test]
+    fn from_problem_reuses_the_preparation_bitwise() {
+        let cfg = small_config();
+        let fresh = FmmSolver::from_config(&cfg).solve().unwrap();
+        let reused = FmmSolver::from_problem(fresh.problem.clone())
+            .solve()
+            .unwrap();
+        assert_eq!(fresh.vel, reused.vel);
+        // setters still apply on the reused problem
+        let grav = FmmSolver::from_problem(fresh.problem.clone())
+            .kernel(KernelSpec::Gravity)
+            .solve()
+            .unwrap();
+        assert_eq!(grav.problem.config.kernel, KernelSpec::Gravity);
+        let want = grav.direct_oracle();
+        let err = rel_l2_error(&grav.vel, &want);
+        assert!(err < 1e-3, "err {err}");
+    }
+}

@@ -5,8 +5,16 @@
 //! f64 buffers matching `artifacts/manifest.json`:
 //!
 //! * [`crate::runtime::PjrtBackend`] executes the AOT-lowered HLO (the
-//!   product path: jax/pallas compute, python never at runtime), and
-//! * [`super::native::NativeBackend`] is the pure-rust oracle/fast path.
+//!   product path: jax/pallas compute, python never at runtime; the
+//!   artifacts bake the Biot–Savart kernel at lowering time), and
+//! * [`super::native::NativeBackend`] is the pure-rust oracle/fast
+//!   path, monomorphized over any [`super::kernel::FmmKernel`].
+//!
+//! The interaction kernel lives *inside* the backend — the ABI itself
+//! is kernel-agnostic, which is what lets the evaluator, scheduler and
+//! runtimes stay generic.  Backend selection (including the
+//! pjrt-or-native `auto` fallback) is owned by
+//! `coordinator::make_backend`.
 //!
 //! Shapes (B = batch, S = leaf capacity, P = expansion terms):
 //!

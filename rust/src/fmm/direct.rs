@@ -1,55 +1,42 @@
 //! O(N²) direct summation — the exact baseline the FMM is verified and
 //! benchmarked against (the paper's "direct solution" in the §6.2
 //! verification format, and the N² reference of §1).
+//!
+//! Both entry points delegate to the kernel's own direct-sum oracle
+//! ([`FmmKernel::direct_at`], seam 5 of the trait contract): the default
+//! oracle accumulates [`FmmKernel::p2p`] in source order (bit-identical
+//! to the historical loop here), while kernels with an analytic
+//! simplification override it.  Runtime-selected kernels go through
+//! [`super::kernel::KernelSpec::direct_all`].
 
-use super::kernel::Kernel;
+use super::kernel::FmmKernel;
 use crate::quadtree::Particle;
 
 /// Evaluate all pairwise interactions directly: `vel[i] = Σ_j K(x_i - x_j)`.
-pub fn direct_all<K: Kernel>(kernel: &K, parts: &[Particle])
+pub fn direct_all<K: FmmKernel + ?Sized>(kernel: &K, parts: &[Particle])
     -> Vec<[f64; 2]> {
-    let n = parts.len();
-    let mut vel = vec![[0.0; 2]; n];
-    for i in 0..n {
-        let (xi, yi) = (parts[i][0], parts[i][1]);
-        let mut u = 0.0;
-        let mut v = 0.0;
-        for j in 0..n {
-            let w = kernel.direct(xi - parts[j][0], yi - parts[j][1],
-                                  parts[j][2]);
-            u += w[0];
-            v += w[1];
-        }
-        vel[i] = [u, v];
-    }
-    vel
+    parts
+        .iter()
+        .map(|p| kernel.direct_at(p[0], p[1], parts))
+        .collect()
 }
 
 /// Velocities induced by `sources` at arbitrary `targets` (used for halo /
 /// verification checks where targets are not the source set).
-pub fn direct_at<K: Kernel>(
+pub fn direct_at<K: FmmKernel + ?Sized>(
     kernel: &K,
     targets: &[[f64; 2]],
     sources: &[Particle],
 ) -> Vec<[f64; 2]> {
     targets
         .iter()
-        .map(|t| {
-            let mut u = 0.0;
-            let mut v = 0.0;
-            for s in sources {
-                let w = kernel.direct(t[0] - s[0], t[1] - s[1], s[2]);
-                u += w[0];
-                v += w[1];
-            }
-            [u, v]
-        })
+        .map(|t| kernel.direct_at(t[0], t[1], sources))
         .collect()
 }
 
 #[cfg(test)]
 mod tests {
-    use super::super::kernel::BiotSavart2D;
+    use super::super::kernel::{BiotSavart2D, Gravity2D};
     use super::*;
     use crate::proptest::check;
 
@@ -91,6 +78,19 @@ mod tests {
             for (x, y) in a.iter().zip(&b) {
                 assert!((x[0] - y[0]).abs() < 1e-14);
                 assert!((x[1] - y[1]).abs() < 1e-14);
+            }
+        });
+    }
+
+    #[test]
+    fn oracle_override_flows_through_direct_all() {
+        // Gravity2D overrides seam 5; direct_all must pick that up
+        check("direct_all uses the kernel oracle", 8, |g| {
+            let k = Gravity2D::new(1.5);
+            let parts = g.particles(10);
+            let got = direct_all(&k, &parts);
+            for (p, v) in parts.iter().zip(&got) {
+                assert_eq!(*v, k.direct_at(p[0], p[1], &parts));
             }
         });
     }

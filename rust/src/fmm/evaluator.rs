@@ -42,6 +42,8 @@
 //! so the two paths can differ in the last ulp — each remains
 //! individually deterministic (tests/optable_cached.rs, DESIGN.md §8).
 
+use std::time::Instant;
+
 use super::arena::ExpansionArena;
 use super::backend::OpsBackend;
 use super::optable::{self, CachedOps};
@@ -74,6 +76,13 @@ impl FmmState {
     }
 
     /// Velocities permuted back to the caller's input particle order.
+    ///
+    /// One-permutation rule (DESIGN.md §10): the canonical place this
+    /// mapping happens is `coordinator::Solution` — the solver facade
+    /// applies it exactly once per run and every client reads
+    /// `Solution::vel`.  This accessor is the delegated primitive the
+    /// facade (and the runtimes' own result boundaries) call; avoid
+    /// invoking it twice on the same run's output.
     pub fn vel_in_input_order(&self, tree: &Quadtree) -> Vec<[f64; 2]> {
         tree.to_input_order(&self.vel)
     }
@@ -97,6 +106,32 @@ pub struct OpCounts {
     pub l2l_batches: u64,
     pub l2p_batches: u64,
     pub p2p_batches: u64,
+}
+
+impl OpCounts {
+    /// Accumulate another counter set (used to aggregate per-rank counts
+    /// at the threaded runtime's gather boundary).  The full destructure
+    /// makes the compiler flag any future field this sum would miss.
+    pub fn merge(&mut self, o: &OpCounts) {
+        let OpCounts {
+            p2m, m2m, m2l, l2l, l2p, p2p, p2p_pairs, p2m_batches,
+            m2m_batches, m2l_batches, l2l_batches, l2p_batches,
+            p2p_batches,
+        } = *o;
+        self.p2m += p2m;
+        self.m2m += m2m;
+        self.m2l += m2l;
+        self.l2l += l2l;
+        self.l2p += l2p;
+        self.p2p += p2p;
+        self.p2p_pairs += p2p_pairs;
+        self.p2m_batches += p2m_batches;
+        self.m2m_batches += m2m_batches;
+        self.m2l_batches += m2l_batches;
+        self.l2l_batches += l2l_batches;
+        self.l2p_batches += l2p_batches;
+        self.p2p_batches += p2p_batches;
+    }
 }
 
 /// Serial FMM evaluator over a [`Quadtree`], batched through an
@@ -277,7 +312,8 @@ impl<'a> Evaluator<'a> {
         }
     }
 
-    fn run_p2m_cached(&self, leaves: &[BoxId], state: &mut FmmState) {
+    fn run_p2m_cached(&self, leaves: &[BoxId], state: &mut FmmState,
+                      ops: &dyn CachedOps) {
         let dims = self.backend.dims();
         let (b, p, s) = (dims.batch, dims.terms, dims.leaf.max(1));
         let mut tasks: Vec<(BoxId, usize, usize)> = Vec::new();
@@ -294,10 +330,10 @@ impl<'a> Evaluator<'a> {
             let tasks = &tasks;
             self.par_fill(n, p * 2, &mut out, |i, dst| {
                 let (leaf, lo, hi) = tasks[i];
-                optable::p2m_slice(&tree.xs[lo..hi], &tree.ys[lo..hi],
-                                   &tree.gammas[lo..hi],
-                                   tree.center(&leaf), tree.radius(&leaf),
-                                   p, dst);
+                ops.p2m_slice(&tree.xs[lo..hi], &tree.ys[lo..hi],
+                              &tree.gammas[lo..hi],
+                              tree.center(&leaf), tree.radius(&leaf),
+                              dst);
             });
         }
         for (i, (leaf, _, _)) in tasks.iter().enumerate() {
@@ -518,8 +554,8 @@ impl<'a> Evaluator<'a> {
 
     /// P2M over a set of occupied leaves: builds `state.me` at leaf level.
     pub fn run_p2m(&self, leaves: &[BoxId], state: &mut FmmState) {
-        if self.cached().is_some() {
-            self.run_p2m_cached(leaves, state);
+        if let Some(ops) = self.cached() {
+            self.run_p2m_cached(leaves, state, ops);
             return;
         }
         let dims = self.backend.dims();
@@ -852,6 +888,16 @@ impl<'a> Evaluator<'a> {
 
     /// Run the complete serial FMM and return the solution state.
     pub fn evaluate(&self) -> FmmState {
+        self.evaluate_timed().0
+    }
+
+    /// Like [`Evaluator::evaluate`], additionally returning per-stage
+    /// wall-clock seconds (`p2m`/`m2m`/`m2l`/`l2l`/`l2p`/`p2p`, the
+    /// simulator's compute-stage names; sweep levels aggregate into one
+    /// entry per operator).  Timing is observational: the pipeline and
+    /// every floating-point result are identical to `evaluate`.
+    pub fn evaluate_timed(&self)
+        -> (FmmState, Vec<(&'static str, f64)>) {
         let terms = self.backend.dims().terms;
         let mut state = FmmState::new(
             self.tree.levels,
@@ -859,13 +905,19 @@ impl<'a> Evaluator<'a> {
             self.tree.n_particles(),
         );
         let levels = self.tree.levels;
+        let mut t_m2l = 0.0;
+        let mut t_l2l = 0.0;
 
         // ---- upward sweep ----
+        let t0 = Instant::now();
         self.run_p2m(&self.tree.occupied_leaves.clone(), &mut state);
+        let t_p2m = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
         for lvl in (3..=levels).rev() {
             let children = self.tree.occupied_at_level(lvl);
             self.run_m2m(&children, &mut state);
         }
+        let t_m2m = t0.elapsed().as_secs_f64();
 
         // ---- downward sweep ----
         for lvl in 2..=levels {
@@ -876,23 +928,39 @@ impl<'a> Evaluator<'a> {
                     pairs.push((*tgt, src));
                 }
             }
+            let t0 = Instant::now();
             self.run_m2l(&pairs, &mut state);
+            t_m2l += t0.elapsed().as_secs_f64();
             if lvl < levels {
                 let children = self.tree.occupied_at_level(lvl + 1);
+                let t0 = Instant::now();
                 self.run_l2l(&children, &mut state);
+                t_l2l += t0.elapsed().as_secs_f64();
             }
         }
 
         // ---- evaluation (L2P before P2P — fixed order, see module docs)
+        let t0 = Instant::now();
         self.run_l2p(&self.tree.occupied_leaves.clone(), &mut state);
+        let t_l2p = t0.elapsed().as_secs_f64();
         let mut near_pairs = Vec::new();
         for tgt in &self.tree.occupied_leaves {
             for src in near_domain(tgt) {
                 near_pairs.push((*tgt, src));
             }
         }
+        let t0 = Instant::now();
         self.run_p2p(&near_pairs, &mut state);
-        state
+        let t_p2p = t0.elapsed().as_secs_f64();
+        let times = vec![
+            ("p2m", t_p2m),
+            ("m2m", t_m2m),
+            ("m2l", t_m2l),
+            ("l2l", t_l2l),
+            ("l2p", t_l2p),
+            ("p2p", t_p2p),
+        ];
+        (state, times)
     }
 }
 
@@ -911,7 +979,7 @@ pub fn resolve_threads(n: usize) -> usize {
 mod tests {
     use super::super::backend::OpDims;
     use super::super::direct::direct_all;
-    use super::super::kernel::{BiotSavart2D, Laplace2D};
+    use super::super::kernel::{BiotSavart2D, Gravity2D, LogPotential2D};
     use super::super::native::NativeBackend;
     use super::*;
     use crate::proptest::check;
@@ -1003,18 +1071,49 @@ mod tests {
     }
 
     #[test]
-    fn laplace_kernel_through_same_machinery() {
-        check("laplace fmm == direct", 4, |g| {
+    fn log_potential_kernel_through_same_machinery() {
+        check("log-potential fmm == direct", 4, |g| {
             let parts = g.particles(120);
             let tree = Quadtree::build(Domain::UNIT, 3, parts.clone());
             let dims = OpDims { batch: 16, leaf: 8, terms: 17, sigma: 0.0 };
-            let backend = NativeBackend::new(dims, Laplace2D);
+            let backend = NativeBackend::new(dims, LogPotential2D);
             let ev = Evaluator::new(&tree, &backend);
             let got = ev.evaluate().vel_in_input_order(&tree);
-            let want = direct_all(&Laplace2D, &parts);
+            let want = direct_all(&LogPotential2D, &parts);
             let err = rel_l2_error(&got, &want);
             assert!(err < 1e-4, "rel l2 err {err}");
         });
+    }
+
+    #[test]
+    fn gravity_kernel_through_same_machinery() {
+        check("gravity fmm == direct", 4, |g| {
+            let parts = g.particles(120);
+            let tree = Quadtree::build(Domain::UNIT, 3, parts.clone());
+            let dims = OpDims { batch: 16, leaf: 8, terms: 17, sigma: 0.0 };
+            let backend = NativeBackend::new(dims, Gravity2D::default());
+            let ev = Evaluator::new(&tree, &backend);
+            let got = ev.evaluate().vel_in_input_order(&tree);
+            let want = direct_all(&Gravity2D::default(), &parts);
+            let err = rel_l2_error(&got, &want);
+            assert!(err < 1e-4, "rel l2 err {err}");
+        });
+    }
+
+    #[test]
+    fn evaluate_timed_is_bit_identical_and_reports_all_stages() {
+        let mut g = crate::proptest::Gen::new(51);
+        let parts = g.particles(200);
+        let tree = Quadtree::build(Domain::UNIT, 4, parts);
+        let dims = OpDims { batch: 16, leaf: 8, terms: 10, sigma: 0.01 };
+        let backend = NativeBackend::new(dims, BiotSavart2D::new(0.01));
+        let plain = Evaluator::new(&tree, &backend).evaluate().vel;
+        let (state, times) =
+            Evaluator::new(&tree, &backend).evaluate_timed();
+        assert_eq!(plain, state.vel);
+        let names: Vec<&str> = times.iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, ["p2m", "m2m", "m2l", "l2l", "l2p", "p2p"]);
+        assert!(times.iter().all(|&(_, t)| t >= 0.0));
     }
 
     #[test]

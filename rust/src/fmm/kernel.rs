@@ -1,22 +1,104 @@
-//! Interaction kernels.
+//! Interaction kernels: the [`FmmKernel`] trait and its registered
+//! implementations.
 //!
 //! The paper's `Evaluator` is "templated over a Kernel object ... so that
-//! we can easily replace one equation with another" (§6.1).  The same
-//! extensibility point here: every kernel shares the complex 1/z expansion
-//! machinery (the paper's far-field kernel substitution, §3) and supplies
-//! (a) its exact near-field pairwise interaction and (b) the map from the
-//! complex far-field sum `f(z) = Σ γ_j/(z-z_j)` to the physical output.
+//! we can easily replace one equation with another" (§6.1), and §1 frames
+//! PetFMM as "designed to be extensible ... enabling easy development of
+//! scientific application codes".  [`FmmKernel`] is that extensibility
+//! point made first-class: it owns the **five math seams** of the FMM
+//! (DESIGN.md §10), and every evaluator path — serial, threaded,
+//! simulated, cached or batched-ABI — is generic over it with static
+//! dispatch:
+//!
+//! 1. **P2P** ([`FmmKernel::p2p`]) — the exact pairwise near-field
+//!    interaction.
+//! 2. **P2M moment basis** ([`FmmKernel::moment`]) — the weight a source
+//!    contributes to the k-th scaled multipole moment.  The default is
+//!    the shared `γ·dz^k` basis of the complex machinery.
+//! 3. **Translation convention** ([`FmmKernel::convention`]) — which
+//!    M2M/M2L/L2L operator family applies.  All registered kernels share
+//!    [`TranslationConvention::InverseZ`], the `f(z) = Σ γ_j/(z - z_j)`
+//!    expansion whose translation tables are *geometry-only*
+//!    (`fmm::optable`, DESIGN.md §10).
+//! 4. **L2P evaluation** ([`FmmKernel::far_transform`]) — the map from
+//!    the complex far-field sum `f` to the physical 2-vector output.
+//! 5. **Direct-sum oracle** ([`FmmKernel::direct_at`]) — the O(N²)
+//!    reference every FMM result is verified against; defaults to
+//!    summing [`FmmKernel::p2p`] but is overridable with an analytic
+//!    form (see [`Gravity2D`]).
+//!
+//! Runtime kernel selection (the config `kernel` key / `--kernel` flag)
+//! goes through [`KernelSpec`]; the solver facade
+//! (`coordinator::FmmSolver`) monomorphizes at that single point, so the
+//! hot paths never pay dynamic dispatch per interaction.
 
+use crate::quadtree::Particle;
 use crate::util::{Complex, TWO_PI};
 
-/// An interaction kernel usable by the FMM evaluators.
-pub trait Kernel: Send + Sync {
-    /// Exact pairwise contribution of a source at distance (dx, dy) with
-    /// strength `gamma` onto a target. Must be zero at dx = dy = 0.
-    fn direct(&self, dx: f64, dy: f64, gamma: f64) -> [f64; 2];
+/// Which translation-operator family a kernel's far field uses.
+///
+/// Every registered kernel expands as `f(z) = Σ_j γ_j/(z - z_j)`
+/// ([`TranslationConvention::InverseZ`]), for which the M2M/M2L/L2L
+/// tables in `fmm::optable` are kernel-independent (geometry-only).  A
+/// future kernel family (e.g. a scalar log-potential output, which needs
+/// a `log τ` term in M2L) would add a variant here and its own table
+/// family; `NativeBackend::new` asserts the convention it implements.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TranslationConvention {
+    /// `f(z) = Σ γ_j/(z - z_j)`: moments `a_k = Σ γ_j dz_j^k`, the
+    /// binomial M2M/M2L/L2L algebra of `fmm::expansions`.
+    #[default]
+    InverseZ,
+}
 
-    /// Map the complex far-field sum `f` to the physical 2-vector.
+/// An interaction kernel usable by every FMM evaluator path.
+///
+/// Implementations are small `Copy` structs; bounds are static
+/// (`NativeBackend<K>`, `direct_all<K>`), so each seam inlines into the
+/// hot loops.  See the module docs for the five-seam contract and
+/// DESIGN.md §10 for how to add a kernel.
+pub trait FmmKernel: Send + Sync {
+    /// Seam 1 (P2P): exact pairwise contribution of a source at distance
+    /// (dx, dy) with strength `gamma` onto a target.  Must be zero at
+    /// dx = dy = 0 (self-interaction).
+    fn p2p(&self, dx: f64, dy: f64, gamma: f64) -> [f64; 2];
+
+    /// Seam 2 (P2M moment basis): the contribution of a source with
+    /// strength `gamma` to the k-th scaled moment, given `dz_pow_k =
+    /// ((z_j - z_0)/r)^k`.  Default: the shared `γ·dz^k` basis — the
+    /// exact arithmetic (`re·γ`, `im·γ`) of the pre-trait P2M loop, so
+    /// kernels that keep the default are bit-identical to it.
+    #[inline]
+    fn moment(&self, dz_pow_k: Complex, gamma: f64) -> Complex {
+        dz_pow_k.scale(gamma)
+    }
+
+    /// Seam 3: the translation-operator family this kernel's far field
+    /// uses (decides which `optable` tables apply; see
+    /// [`TranslationConvention`]).
+    fn convention(&self) -> TranslationConvention {
+        TranslationConvention::InverseZ
+    }
+
+    /// Seam 4 (L2P): map the complex far-field sum `f` to the physical
+    /// 2-vector output.
     fn far_transform(&self, f: Complex) -> [f64; 2];
+
+    /// Seam 5 (direct oracle): exact field at `(tx, ty)` induced by
+    /// `sources`, the O(N²) reference for verification.  The default
+    /// accumulates [`FmmKernel::p2p`] in source order (bit-identical to
+    /// the pre-trait `direct_all` loop); kernels with an analytic
+    /// simplification may override it ([`Gravity2D`] does).
+    fn direct_at(&self, tx: f64, ty: f64, sources: &[Particle]) -> [f64; 2] {
+        let mut u = 0.0;
+        let mut v = 0.0;
+        for s in sources {
+            let w = self.p2p(tx - s[0], ty - s[1], s[2]);
+            u += w[0];
+            v += w[1];
+        }
+        [u, v]
+    }
 
     /// Human-readable name (for manifests, logs, verification files).
     fn name(&self) -> &'static str;
@@ -40,9 +122,9 @@ impl BiotSavart2D {
     }
 }
 
-impl Kernel for BiotSavart2D {
+impl FmmKernel for BiotSavart2D {
     #[inline]
-    fn direct(&self, dx: f64, dy: f64, gamma: f64) -> [f64; 2] {
+    fn p2p(&self, dx: f64, dy: f64, gamma: f64) -> [f64; 2] {
         let r2 = dx * dx + dy * dy;
         if r2 == 0.0 {
             return [0.0, 0.0];
@@ -63,16 +145,21 @@ impl Kernel for BiotSavart2D {
     }
 }
 
-/// 2D Coulomb/Laplace field kernel (second kernel instance, §8 extension):
-/// the in-plane field of a 2D point charge, `E = q (x-x_j)/|x-x_j|²`.
+/// Laplace single-layer (log-potential) kernel — the classic FMM
+/// testbed.  Sources are 2D point charges with potential
+/// `φ(x) = Σ q_j ln|x - x_j|`; the kernel evaluates its in-plane
+/// gradient field `E = ∇φ = Σ q_j (x - x_j)/|x - x_j|²`.
+///
 /// Its complex form is exactly `E_x - iE_y = q/(z - z_j)`, so the far
-/// field needs no substitution at all.
+/// field needs no substitution at all.  (The scalar potential itself
+/// would need a `log τ` M2L term — a different
+/// [`TranslationConvention`]; see DESIGN.md §10.)
 #[derive(Clone, Copy, Debug, Default)]
-pub struct Laplace2D;
+pub struct LogPotential2D;
 
-impl Kernel for Laplace2D {
+impl FmmKernel for LogPotential2D {
     #[inline]
-    fn direct(&self, dx: f64, dy: f64, gamma: f64) -> [f64; 2] {
+    fn p2p(&self, dx: f64, dy: f64, gamma: f64) -> [f64; 2] {
         let r2 = dx * dx + dy * dy;
         if r2 == 0.0 {
             return [0.0, 0.0];
@@ -87,7 +174,144 @@ impl Kernel for Laplace2D {
     }
 
     fn name(&self) -> &'static str {
-        "laplace-2d"
+        "log-potential-2d"
+    }
+}
+
+/// 2D gravitational attraction: sources are point masses `m_j`, the
+/// kernel evaluates the acceleration
+/// `a = -G Σ m_j (x - x_j)/|x - x_j|²` (the 2D 1/r force law — attract,
+/// not repel).  Complex form: `a_x - i a_y = -G Σ m_j/(z - z_j)`, i.e.
+/// the same inverse-z far field with a `-G` output scale.
+///
+/// Overrides the direct oracle (seam 5) with the analytic form that
+/// hoists `-G` out of the accumulation loop — the overridability proof
+/// for kernels whose direct sum simplifies.
+#[derive(Clone, Copy, Debug)]
+pub struct Gravity2D {
+    /// Gravitational constant (problem units).
+    pub g_const: f64,
+}
+
+impl Gravity2D {
+    pub fn new(g_const: f64) -> Self {
+        assert!(g_const > 0.0);
+        Gravity2D { g_const }
+    }
+}
+
+impl Default for Gravity2D {
+    fn default() -> Self {
+        Gravity2D { g_const: 1.0 }
+    }
+}
+
+impl FmmKernel for Gravity2D {
+    #[inline]
+    fn p2p(&self, dx: f64, dy: f64, gamma: f64) -> [f64; 2] {
+        let r2 = dx * dx + dy * dy;
+        if r2 == 0.0 {
+            return [0.0, 0.0];
+        }
+        let fac = -self.g_const * gamma / r2;
+        [dx * fac, dy * fac]
+    }
+
+    /// a_x - i a_y = -G f  =>  a = (-G Re f, G Im f).
+    #[inline]
+    fn far_transform(&self, f: Complex) -> [f64; 2] {
+        [-self.g_const * f.re, self.g_const * f.im]
+    }
+
+    /// Analytic direct sum: accumulate the unit-G field, scale by `-G`
+    /// once per target (equals the default oracle up to one final
+    /// rounding; compared under tolerance everywhere).
+    fn direct_at(&self, tx: f64, ty: f64, sources: &[Particle]) -> [f64; 2] {
+        let mut sx = 0.0;
+        let mut sy = 0.0;
+        for s in sources {
+            let (dx, dy) = (tx - s[0], ty - s[1]);
+            let r2 = dx * dx + dy * dy;
+            if r2 == 0.0 {
+                continue;
+            }
+            sx += s[2] * dx / r2;
+            sy += s[2] * dy / r2;
+        }
+        [-self.g_const * sx, -self.g_const * sy]
+    }
+
+    fn name(&self) -> &'static str {
+        "gravity-2d"
+    }
+}
+
+/// Runtime kernel selection: the config `kernel` key / `--kernel` CLI
+/// flag.  The solver facade matches on this once and monomorphizes the
+/// whole pipeline over the chosen [`FmmKernel`] — enum at the boundary,
+/// static dispatch inside.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelSpec {
+    /// [`BiotSavart2D`] (σ from the run config) — the paper's vortex
+    /// kernel and the bitwise-pinned default.
+    #[default]
+    BiotSavart,
+    /// [`LogPotential2D`] — Laplace single-layer field.
+    LogPotential,
+    /// [`Gravity2D`] (G = 1 in problem units).
+    Gravity,
+}
+
+impl KernelSpec {
+    /// Every registered kernel (the conformance suite iterates this).
+    pub const ALL: [KernelSpec; 3] = [
+        KernelSpec::BiotSavart,
+        KernelSpec::LogPotential,
+        KernelSpec::Gravity,
+    ];
+
+    /// Canonical names accepted by [`KernelSpec::parse`], for error
+    /// messages and help text.
+    pub const NAMES: [&'static str; 3] =
+        ["biot-savart", "log-potential", "gravity"];
+
+    /// Parse a kernel name (same alias style as `Strategy::parse`).
+    pub fn parse(s: &str) -> Option<KernelSpec> {
+        match s {
+            "biot-savart" | "biot-savart-2d" | "vortex" => {
+                Some(KernelSpec::BiotSavart)
+            }
+            "log-potential" | "log-potential-2d" | "laplace" => {
+                Some(KernelSpec::LogPotential)
+            }
+            "gravity" | "gravity-2d" | "newton" => Some(KernelSpec::Gravity),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelSpec::BiotSavart => "biot-savart",
+            KernelSpec::LogPotential => "log-potential",
+            KernelSpec::Gravity => "gravity",
+        }
+    }
+
+    /// The kernel's direct-sum oracle (seam 5) over an input-order
+    /// particle set; `sigma` is only consumed by the Biot–Savart kernel.
+    pub fn direct_all(self, sigma: f64, parts: &[Particle])
+        -> Vec<[f64; 2]> {
+        match self {
+            KernelSpec::BiotSavart => {
+                super::direct::direct_all(&BiotSavart2D::new(sigma), parts)
+            }
+            KernelSpec::LogPotential => {
+                super::direct::direct_all(&LogPotential2D, parts)
+            }
+            KernelSpec::Gravity => {
+                super::direct::direct_all(&Gravity2D::default(), parts)
+            }
+        }
     }
 }
 
@@ -101,7 +325,7 @@ mod tests {
         let k = BiotSavart2D::new(0.02);
         // unit vortex at origin, target at (r, 0): u = 0, v ~ 1/(2 pi r)
         let r = 0.3;
-        let v = k.direct(r, 0.0, 1.0);
+        let v = k.p2p(r, 0.0, 1.0);
         let want = (1.0 - (-r * r / (2.0 * 0.02f64.powi(2))).exp())
             / (TWO_PI * r);
         assert!(v[0].abs() < 1e-15);
@@ -115,46 +339,110 @@ mod tests {
         let k = BiotSavart2D::new(0.02);
         let (dx, dy) = (0.5, -0.8);
         let r2: f64 = dx * dx + dy * dy;
-        let got = k.direct(dx, dy, 2.0);
+        let got = k.p2p(dx, dy, 2.0);
         let want = [-dy * 2.0 / (TWO_PI * r2), dx * 2.0 / (TWO_PI * r2)];
         assert!((got[0] - want[0]).abs() < 1e-12);
         assert!((got[1] - want[1]).abs() < 1e-12);
     }
 
     #[test]
-    fn far_transform_consistent_with_direct_far_field() {
-        // far_transform(gamma/(z - z_j)) == direct(dx, dy, gamma) far away
+    fn far_transform_consistent_with_p2p_far_field() {
+        // far_transform(gamma/(z - z_j)) == p2p(dx, dy, gamma) far away,
+        // for every registered inverse-z kernel
         check("far transform consistency", 64, |g| {
-            let k = BiotSavart2D::new(1e-4); // tiny core: regularization off
             let dx = g.f64_in(0.5, 2.0);
             let dy = g.f64_in(0.5, 2.0);
             let gamma = g.normal();
             let f = Complex::new(dx, dy).inv().scale(gamma); // gamma/dz
-            let got = k.far_transform(f);
-            let want = k.direct(dx, dy, gamma);
+            let bs = BiotSavart2D::new(1e-4); // tiny core: smoothing off
+            let lp = LogPotential2D;
+            let gr = Gravity2D::new(2.5);
+            for (got, want) in [
+                (bs.far_transform(f), bs.p2p(dx, dy, gamma)),
+                (lp.far_transform(f), lp.p2p(dx, dy, gamma)),
+                (gr.far_transform(f), gr.p2p(dx, dy, gamma)),
+            ] {
+                assert!((got[0] - want[0]).abs() < 1e-12,
+                        "{got:?} {want:?}");
+                assert!((got[1] - want[1]).abs() < 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn gravity_attracts_along_the_separation() {
+        // a unit mass at the origin pulls a target at (r, 0) in -x
+        let k = Gravity2D::default();
+        let a = k.p2p(0.5, 0.0, 1.0);
+        assert!(a[0] < 0.0 && a[1].abs() < 1e-15, "{a:?}");
+        // and the magnitude follows the 2D 1/r law
+        assert!((a[0] + 1.0 / 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gravity_analytic_oracle_matches_p2p_sum() {
+        check("gravity oracle == p2p sum", 32, |g| {
+            let k = Gravity2D::new(1.5);
+            let srcs: Vec<Particle> = (0..12)
+                .map(|_| [g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0),
+                          g.f64_in(0.1, 2.0)])
+                .collect();
+            let (tx, ty) = (g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0));
+            let got = k.direct_at(tx, ty, &srcs);
+            let mut want = [0.0; 2];
+            for s in &srcs {
+                let w = k.p2p(tx - s[0], ty - s[1], s[2]);
+                want[0] += w[0];
+                want[1] += w[1];
+            }
             assert!((got[0] - want[0]).abs() < 1e-12, "{got:?} {want:?}");
             assert!((got[1] - want[1]).abs() < 1e-12);
         });
     }
 
     #[test]
-    fn laplace_far_transform_exact() {
-        check("laplace far transform", 64, |g| {
-            let k = Laplace2D;
-            let dx = g.f64_in(-2.0, 2.0);
-            let dy = g.f64_in(0.1, 2.0);
-            let q = g.normal();
-            let f = Complex::new(dx, dy).inv().scale(q);
-            let got = k.far_transform(f);
-            let want = k.direct(dx, dy, q);
-            assert!((got[0] - want[0]).abs() < 1e-12);
-            assert!((got[1] - want[1]).abs() < 1e-12);
-        });
+    fn default_moment_is_the_shared_basis() {
+        // seam 2 default: γ·dz^k with the exact component arithmetic of
+        // the pre-trait P2M loop
+        let k = LogPotential2D;
+        let dz = Complex::new(0.3, -0.7);
+        let m = k.moment(dz, 2.5);
+        assert_eq!(m.re, dz.re * 2.5);
+        assert_eq!(m.im, dz.im * 2.5);
+        assert_eq!(k.convention(), TranslationConvention::InverseZ);
     }
 
     #[test]
     fn self_interaction_is_zero() {
-        assert_eq!(BiotSavart2D::new(0.1).direct(0.0, 0.0, 5.0), [0.0, 0.0]);
-        assert_eq!(Laplace2D.direct(0.0, 0.0, 5.0), [0.0, 0.0]);
+        assert_eq!(BiotSavart2D::new(0.1).p2p(0.0, 0.0, 5.0), [0.0, 0.0]);
+        assert_eq!(LogPotential2D.p2p(0.0, 0.0, 5.0), [0.0, 0.0]);
+        assert_eq!(Gravity2D::default().p2p(0.0, 0.0, 5.0), [0.0, 0.0]);
+    }
+
+    #[test]
+    fn kernel_spec_round_trips_names_and_aliases() {
+        for (spec, name) in KernelSpec::ALL.iter().zip(KernelSpec::NAMES) {
+            assert_eq!(KernelSpec::parse(name), Some(*spec));
+            assert_eq!(spec.name(), name);
+        }
+        assert_eq!(KernelSpec::parse("vortex"),
+                   Some(KernelSpec::BiotSavart));
+        assert_eq!(KernelSpec::parse("laplace"),
+                   Some(KernelSpec::LogPotential));
+        assert_eq!(KernelSpec::parse("newton"), Some(KernelSpec::Gravity));
+        assert_eq!(KernelSpec::parse("bogus"), None);
+    }
+
+    #[test]
+    fn spec_direct_all_dispatches_to_the_right_oracle() {
+        let parts = vec![[0.2, 0.2, 1.0], [0.7, 0.4, -0.5]];
+        let bs = KernelSpec::BiotSavart.direct_all(0.02, &parts);
+        let want = super::super::direct::direct_all(
+            &BiotSavart2D::new(0.02), &parts);
+        assert_eq!(bs, want);
+        let gr = KernelSpec::Gravity.direct_all(0.02, &parts);
+        let want = super::super::direct::direct_all(
+            &Gravity2D::default(), &parts);
+        assert_eq!(gr, want);
     }
 }

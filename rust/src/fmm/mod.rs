@@ -1,8 +1,15 @@
-//! The fast multipole method core (§2): kernels, expansion operators,
-//! precomputed translation-operator tables (`optable`, DESIGN.md §8),
-//! batched backends, the dense-arena serial evaluator (plus the seed
-//! HashMap evaluator and PR-1 backend baselines it is benchmarked
-//! against), and the O(N²) direct baseline.
+//! The fast multipole method core (§2): the kernel-generic math seams
+//! ([`FmmKernel`], DESIGN.md §10), expansion operators, precomputed
+//! translation-operator tables (`optable`, DESIGN.md §8), batched
+//! backends, the dense-arena serial evaluator (plus the seed HashMap
+//! evaluator and PR-1 backend baselines it is benchmarked against), and
+//! the O(N²) direct baseline.
+//!
+//! Kernels plug in through [`FmmKernel`] with static dispatch
+//! ([`NativeBackend`] is monomorphized per kernel); runtime selection
+//! (config/CLI) goes through [`KernelSpec`] and the solver facade
+//! `coordinator::FmmSolver`, which is the one entry point unifying
+//! serial, threaded and simulated runs.
 
 pub mod arena;
 pub mod backend;
@@ -18,7 +25,8 @@ pub use arena::ExpansionArena;
 pub use backend::{OpDims, OpsBackend};
 pub use direct::{direct_all, direct_at};
 pub use evaluator::{resolve_threads, Evaluator, FmmState, OpCounts};
-pub use kernel::{BiotSavart2D, Kernel, Laplace2D};
+pub use kernel::{BiotSavart2D, FmmKernel, Gravity2D, KernelSpec,
+                 LogPotential2D, TranslationConvention};
 pub use native::NativeBackend;
 pub use optable::{CachedOps, OpTables};
 pub use reference::{BaselineBackend, ReferenceEvaluator};

@@ -2,7 +2,8 @@
 //!
 //! Serves as the correctness oracle for the PJRT artifacts (they must agree
 //! to ~1e-12) and as the high-throughput native path: it is generic over
-//! [`Kernel`], which is how the Laplace2D kernel (the paper's §8
+//! [`FmmKernel`] with static dispatch, which is how every registered
+//! kernel (Biot–Savart, log-potential, gravity — the paper's §8
 //! extensibility claim) runs through the identical evaluator machinery.
 //!
 //! Memory discipline (DESIGN.md §8): the batched entry points allocate
@@ -22,19 +23,29 @@
 //! [`BaselineBackend`]: super::reference::BaselineBackend
 
 use super::backend::{OpDims, OpsBackend};
-use super::kernel::Kernel;
+use super::kernel::{FmmKernel, TranslationConvention};
 use super::optable::{self, CachedOps, OpTables, TARGET_LANES};
 use crate::util::Complex;
 
 /// Native batched backend, generic over the interaction kernel.
-pub struct NativeBackend<K: Kernel> {
+pub struct NativeBackend<K: FmmKernel> {
     dims: OpDims,
     kernel: K,
     tables: OpTables,
 }
 
-impl<K: Kernel> NativeBackend<K> {
+impl<K: FmmKernel> NativeBackend<K> {
     pub fn new(dims: OpDims, kernel: K) -> Self {
+        // seam 3 guard: the optable M2M/M2L/L2L family implements only
+        // the inverse-z expansion; a future convention must bring its
+        // own tables rather than silently reuse these
+        assert_eq!(
+            kernel.convention(),
+            TranslationConvention::InverseZ,
+            "kernel '{}' uses a translation convention NativeBackend's \
+             operator tables do not implement",
+            kernel.name()
+        );
         let tables = OpTables::new(dims.terms);
         NativeBackend { dims, kernel, tables }
     }
@@ -60,7 +71,7 @@ impl<K: Kernel> NativeBackend<K> {
         *v = [0.0; TARGET_LANES];
         for (sx, sy, g) in sources {
             for l in 0..TARGET_LANES {
-                let w = self.kernel.direct(tx[l] - sx, ty[l] - sy, g);
+                let w = self.kernel.p2p(tx[l] - sx, ty[l] - sy, g);
                 u[l] += w[0];
                 v[l] += w[1];
             }
@@ -76,7 +87,7 @@ impl<K: Kernel> NativeBackend<K> {
         let mut u = 0.0;
         let mut v = 0.0;
         for (sx, sy, g) in sources {
-            let w = self.kernel.direct(tx - sx, ty - sy, g);
+            let w = self.kernel.p2p(tx - sx, ty - sy, g);
             u += w[0];
             v += w[1];
         }
@@ -84,7 +95,7 @@ impl<K: Kernel> NativeBackend<K> {
     }
 }
 
-impl<K: Kernel> OpsBackend for NativeBackend<K> {
+impl<K: FmmKernel> OpsBackend for NativeBackend<K> {
     fn dims(&self) -> OpDims {
         self.dims
     }
@@ -111,7 +122,8 @@ impl<K: Kernel> OpsBackend for NativeBackend<K> {
                 let o = (b * leaf + j) * 3;
                 let dz = Complex::new((particles[o] - cx) * inv_r,
                                       (particles[o + 1] - cy) * inv_r);
-                optable::p2m_accumulate(dz, particles[o + 2], terms, dst);
+                optable::p2m_accumulate(&self.kernel, dz,
+                                        particles[o + 2], terms, dst);
             }
         }
         out
@@ -280,9 +292,15 @@ impl<K: Kernel> OpsBackend for NativeBackend<K> {
     }
 }
 
-impl<K: Kernel> CachedOps for NativeBackend<K> {
+impl<K: FmmKernel> CachedOps for NativeBackend<K> {
     fn tables(&self) -> &OpTables {
         &self.tables
+    }
+
+    fn p2m_slice(&self, xs: &[f64], ys: &[f64], gammas: &[f64],
+                 center: [f64; 2], r: f64, out: &mut [f64]) {
+        optable::p2m_slice(&self.kernel, xs, ys, gammas, center, r,
+                           self.dims.terms, out);
     }
 
     fn l2p_into(&self, le: &[f64], particles: &[[f64; 3]], idx: &[u32],
@@ -310,8 +328,8 @@ impl<K: Kernel> CachedOps for NativeBackend<K> {
             let mut v = 0.0;
             for &j in sidx {
                 let sp = particles[j as usize];
-                let w = self.kernel.direct(t[0] - sp[0], t[1] - sp[1],
-                                           sp[2]);
+                let w = self.kernel.p2p(t[0] - sp[0], t[1] - sp[1],
+                                        sp[2]);
                 u += w[0];
                 v += w[1];
             }

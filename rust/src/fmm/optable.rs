@@ -30,8 +30,23 @@
 //! inputs themselves equal the center-difference arithmetic of the
 //! uncached path exactly, because every quantity is a dyadic rational.
 //!
+//! Kernel dependence (DESIGN.md §10): everything in [`OpTables`] — the
+//! `itau^n`/`d^m` power tables, `rho^k` scales and binomial rows — is
+//! **geometry-only**, shared by every kernel of the
+//! [`TranslationConvention::InverseZ`] family.  The kernel enters the
+//! cached path at exactly three seams: the P2M moment basis
+//! ([`FmmKernel::moment`], threaded through the shared
+//! `p2m_accumulate` inner loop), the L2P output transform
+//! ([`FmmKernel::far_transform`], applied by [`CachedOps::l2p_slice`]),
+//! and P2P ([`CachedOps::p2p_slice`]).
+//!
 //! [`ExpansionArena`]: super::arena::ExpansionArena
+//! [`FmmKernel::moment`]: super::kernel::FmmKernel::moment
+//! [`FmmKernel::far_transform`]: super::kernel::FmmKernel::far_transform
+//! [`TranslationConvention::InverseZ`]:
+//!     super::kernel::TranslationConvention::InverseZ
 
+use super::kernel::FmmKernel;
 use crate::quadtree::{box_offset, well_separated_offsets, BoxId};
 use crate::util::{BinomialTable, Complex};
 
@@ -200,15 +215,18 @@ pub(crate) fn l2l_contract(binom: &BinomialTable, dpw: &[Complex],
 
 /// One particle's P2M contribution (`dz` pre-scaled by `1/r`, strength
 /// `g`) accumulated into the interleaved ME block `out` — the single
-/// inner loop every P2M variant shares (same op order as
-/// `expansions::p2m`).
+/// inner loop every P2M variant shares.  The moment basis is the
+/// kernel's seam 2 ([`FmmKernel::moment`]); with the default `γ·dz^k`
+/// basis this adds the exact terms of `expansions::p2m` in the same
+/// order.
 #[inline]
-pub(crate) fn p2m_accumulate(dz: Complex, g: f64, p: usize,
-                             out: &mut [f64]) {
+pub(crate) fn p2m_accumulate<K: FmmKernel + ?Sized>(
+    kernel: &K, dz: Complex, g: f64, p: usize, out: &mut [f64]) {
     let mut pw = Complex::ONE;
     for k in 0..p {
-        out[2 * k] += pw.re * g;
-        out[2 * k + 1] += pw.im * g;
+        let m = kernel.moment(pw, g);
+        out[2 * k] += m.re;
+        out[2 * k + 1] += m.im;
         pw = pw * dz;
     }
 }
@@ -267,18 +285,20 @@ pub(crate) fn l2p_horner_lanes(
 /// Allocation-free P2M over a contiguous SoA slice: accumulate the
 /// scaled ME of the particles `(xs[i], ys[i], gammas[i])` about
 /// `(center, r)` into `out` (`p` interleaved complex terms,
-/// caller-zeroed).  Streams the Morton-sorted leaf slice directly —
-/// identical values and accumulation order to [`p2m_indexed`] over the
-/// same particles.
-pub fn p2m_slice(xs: &[f64], ys: &[f64], gammas: &[f64],
-                 center: [f64; 2], r: f64, p: usize, out: &mut [f64]) {
+/// caller-zeroed), using `kernel`'s moment basis.  Streams the
+/// Morton-sorted leaf slice directly — identical values and accumulation
+/// order to [`p2m_indexed`] over the same particles.
+#[allow(clippy::too_many_arguments)]
+pub fn p2m_slice<K: FmmKernel + ?Sized>(
+    kernel: &K, xs: &[f64], ys: &[f64], gammas: &[f64],
+    center: [f64; 2], r: f64, p: usize, out: &mut [f64]) {
     debug_assert!(out.len() >= 2 * p);
     debug_assert!(xs.len() == ys.len() && xs.len() == gammas.len());
     let inv_r = 1.0 / r;
     for i in 0..xs.len() {
         let dz = Complex::new((xs[i] - center[0]) * inv_r,
                               (ys[i] - center[1]) * inv_r);
-        p2m_accumulate(dz, gammas[i], p, out);
+        p2m_accumulate(kernel, dz, gammas[i], p, out);
     }
 }
 
@@ -308,25 +328,29 @@ pub fn l2l(t: &OpTables, q: usize, le: &[f64], out: &mut [f64]) {
 
 /// Allocation-free P2M over an index chunk: accumulate the scaled ME of
 /// the particles `idx` (into `particles`) about `(center, r)` into
-/// `out` (`p` interleaved complex terms, caller-zeroed).  Identical to
-/// `expansions::p2m` over the same particles in the same order; padded
-/// lanes never existed here, so nothing is skipped.
-pub fn p2m_indexed(particles: &[[f64; 3]], idx: &[u32], center: [f64; 2],
-                   r: f64, p: usize, out: &mut [f64]) {
+/// `out` (`p` interleaved complex terms, caller-zeroed), using
+/// `kernel`'s moment basis.  With the default basis this is identical
+/// to `expansions::p2m` over the same particles in the same order;
+/// padded lanes never existed here, so nothing is skipped.
+pub fn p2m_indexed<K: FmmKernel + ?Sized>(
+    kernel: &K, particles: &[[f64; 3]], idx: &[u32], center: [f64; 2],
+    r: f64, p: usize, out: &mut [f64]) {
     debug_assert!(out.len() >= 2 * p);
     let inv_r = 1.0 / r;
     for &i in idx {
         let pa = particles[i as usize];
         let dz = Complex::new((pa[0] - center[0]) * inv_r,
                               (pa[1] - center[1]) * inv_r);
-        p2m_accumulate(dz, pa[2], p, out);
+        p2m_accumulate(kernel, dz, pa[2], p, out);
     }
 }
 
 /// Zero-copy, occupancy-aware kernel-dependent operators: the seam the
-/// evaluator's cached stage runners use for L2P and P2P.  Implemented by
+/// evaluator's cached stage runners use for P2M, L2P and P2P — the three
+/// stages where the [`FmmKernel`] enters the hot path.  Implemented by
 /// [`NativeBackend`] (monomorphized over its kernel); the coefficient
-/// operators need no kernel and live as free functions above.
+/// translation operators (M2M/M2L/L2L) are geometry-only for the
+/// inverse-z convention and live as free functions above.
 ///
 /// `Sync` is a supertrait so `&dyn CachedOps` can cross the evaluator's
 /// scoped worker pool.
@@ -335,6 +359,14 @@ pub fn p2m_indexed(particles: &[[f64; 3]], idx: &[u32], center: [f64; 2],
 pub trait CachedOps: Sync {
     /// The precomputed translation-operator tables.
     fn tables(&self) -> &OpTables;
+
+    /// Contiguous-slice P2M over one Morton-sorted leaf chunk
+    /// (`xs`/`ys`/`gammas` are the tree's SoA arrays sliced to the
+    /// chunk): accumulate the scaled ME about `(center, r)` into `out`
+    /// (caller-zeroed, `dims().terms` interleaved complex terms), using
+    /// the backend kernel's moment basis (seam 2).
+    fn p2m_slice(&self, xs: &[f64], ys: &[f64], gammas: &[f64],
+                 center: [f64; 2], r: f64, out: &mut [f64]);
 
     /// Index-gather L2P: evaluate the LE block `le` at the particles
     /// `idx`, writing one `[u, v]` pair per index into `out`.  Kept as
@@ -370,6 +402,7 @@ pub trait CachedOps: Sync {
 #[cfg(test)]
 mod tests {
     use super::super::expansions;
+    use super::super::kernel::LogPotential2D;
     use super::*;
     use crate::proptest::{check, Gen};
 
@@ -474,7 +507,10 @@ mod tests {
             let center = [g.f64_in(0.2, 0.8), g.f64_in(0.2, 0.8)];
             let r = 0.125;
             let mut out = vec![0.0; 2 * p];
-            p2m_indexed(&parts, &idx, center, r, p, &mut out);
+            // default moment basis (seam 2): bit-identical to the
+            // scalar reference, whichever kernel carries it
+            p2m_indexed(&LogPotential2D, &parts, &idx, center, r, p,
+                        &mut out);
             let want = expansions::p2m(&parts, center, r, p);
             for k in 0..p {
                 assert_eq!(out[2 * k], want[k].re, "re k={k}");
@@ -500,8 +536,9 @@ mod tests {
             let r = 0.0625;
             let mut a = vec![0.0; 2 * p];
             let mut b = vec![0.0; 2 * p];
-            p2m_slice(&xs, &ys, &gs, center, r, p, &mut a);
-            p2m_indexed(&parts, &idx, center, r, p, &mut b);
+            let k = LogPotential2D;
+            p2m_slice(&k, &xs, &ys, &gs, center, r, p, &mut a);
+            p2m_indexed(&k, &parts, &idx, center, r, p, &mut b);
             assert_eq!(a, b);
         });
     }

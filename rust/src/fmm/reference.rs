@@ -19,7 +19,7 @@ use std::collections::HashMap;
 
 use super::backend::{OpDims, OpsBackend};
 use super::expansions;
-use super::kernel::Kernel;
+use super::kernel::FmmKernel;
 use crate::quadtree::{interaction_list, near_domain, BoxId, Quadtree};
 use crate::util::{BinomialTable, Complex};
 
@@ -28,13 +28,13 @@ use crate::util::{BinomialTable, Complex};
 /// output per scalar-operator call.  Exists purely as the measured
 /// "before" of the allocation-free hot path; bit-identical to
 /// [`super::native::NativeBackend`] (pinned by a test there).
-pub struct BaselineBackend<K: Kernel> {
+pub struct BaselineBackend<K: FmmKernel> {
     dims: OpDims,
     kernel: K,
     binom: BinomialTable,
 }
 
-impl<K: Kernel> BaselineBackend<K> {
+impl<K: FmmKernel> BaselineBackend<K> {
     pub fn new(dims: OpDims, kernel: K) -> Self {
         let binom = BinomialTable::for_terms(dims.terms);
         BaselineBackend { dims, kernel, binom }
@@ -67,7 +67,7 @@ impl<K: Kernel> BaselineBackend<K> {
     }
 }
 
-impl<K: Kernel> OpsBackend for BaselineBackend<K> {
+impl<K: FmmKernel> OpsBackend for BaselineBackend<K> {
     fn dims(&self) -> OpDims {
         self.dims
     }
@@ -173,7 +173,7 @@ impl<K: Kernel> OpsBackend for BaselineBackend<K> {
                 for j in 0..leaf {
                     let so = (b * leaf + j) * 3;
                     let g = sources[so + 2];
-                    let w = self.kernel.direct(
+                    let w = self.kernel.p2p(
                         tx - sources[so], ty - sources[so + 1], g);
                     u += w[0];
                     v += w[1];

@@ -13,9 +13,20 @@
 //!   spots, AOT-lowered to HLO artifacts executed via PJRT (currently a
 //!   validated stub, see `runtime/pjrt.rs`).
 //!
+//! **Entry point.**  Client code goes through the kernel-generic solver
+//! facade [`coordinator::FmmSolver`]: pick a [`config::RunConfig`], a
+//! [`fmm::KernelSpec`] (Biot–Savart vortex, Laplace single-layer
+//! log-potential, or 2D gravity), a worker count and a
+//! [`coordinator::RunMode`] (serial / threaded / simulated), and read
+//! back a [`coordinator::Solution`] with the field in input particle
+//! order, operator counts, and stage timings.  New physics plugs in by
+//! implementing the five-seam [`fmm::FmmKernel`] trait (DESIGN.md §10)
+//! — every evaluator path is generic over it with static dispatch.
+//!
 //! See `DESIGN.md` at the repository root for the full system inventory,
-//! the dense expansion-arena layout, and the bitwise determinism
-//! contract; `rust/benches/` holds the paper-vs-measured experiments.
+//! the dense expansion-arena layout, the bitwise determinism contract,
+//! and the §10 kernel-extension guide; `rust/benches/` holds the
+//! paper-vs-measured experiments.
 
 pub mod bench;
 pub mod comm;

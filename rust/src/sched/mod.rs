@@ -6,4 +6,5 @@ pub mod plan;
 pub mod sim;
 
 pub use plan::{coeff_bytes, ParallelPlan};
-pub use sim::{OpCosts, SimResult, Simulator, StageRecord, Timing};
+pub use sim::{stages_load_balance, stages_makespan, OpCosts, SimResult,
+              Simulator, StageRecord, Timing};

@@ -20,7 +20,7 @@ use std::time::Instant;
 
 use super::plan::{coeff_bytes, ParallelPlan};
 use crate::comm::{NetworkModel, PARTICLE_WIRE_BYTES};
-use crate::fmm::{Evaluator, FmmState, OpsBackend};
+use crate::fmm::{Evaluator, FmmState, OpCounts, OpsBackend};
 use crate::partition::Assignment;
 use crate::quadtree::{Quadtree, TreeCut};
 
@@ -51,23 +51,54 @@ impl StageRecord {
     }
 }
 
+/// Sum of stage durations — the BSP makespan (barrier semantics).
+/// Shared by [`SimResult`] and the facade's `coordinator::Solution`.
+pub fn stages_makespan(stages: &[StageRecord]) -> f64 {
+    stages.iter().map(StageRecord::duration).sum()
+}
+
+/// The paper's load-balance metric LB(P) (Eq. 20): min/max per-rank
+/// end-to-end time over `stages` (1.0 when there is no per-rank data).
+/// Shared by [`SimResult`] and the facade's `coordinator::Solution`.
+pub fn stages_load_balance(ranks: usize, stages: &[StageRecord]) -> f64 {
+    if ranks == 0 || stages.is_empty() {
+        return 1.0;
+    }
+    let mut t = vec![0.0; ranks];
+    for s in stages {
+        for r in 0..ranks.min(s.compute.len()).min(s.comm.len()) {
+            t[r] += s.compute[r] + s.comm[r];
+        }
+    }
+    let max = t.iter().cloned().fold(f64::MIN, f64::max);
+    let min = t.iter().cloned().fold(f64::MAX, f64::min);
+    if max <= 0.0 {
+        1.0
+    } else {
+        min / max
+    }
+}
+
 /// Result of one simulated parallel run.
 #[derive(Clone, Debug)]
 pub struct SimResult {
     pub ranks: usize,
     pub stages: Vec<StageRecord>,
     /// Per-particle velocities in the caller's **input order** (the
-    /// tree-internal Morton order is mapped back at this boundary,
-    /// DESIGN.md §9).
+    /// tree-internal Morton order is mapped back exactly once, at this
+    /// boundary — DESIGN.md §9/§10).
     pub vel: Vec<[f64; 2]>,
     /// total modeled communication volume in bytes
     pub comm_bytes: f64,
+    /// operator-application counts of the full schedule (all ranks),
+    /// for the §5.2 work-model validation and `Solution` reporting
+    pub counts: OpCounts,
 }
 
 impl SimResult {
     /// Total virtual execution time (the paper's measured "Total time").
     pub fn makespan(&self) -> f64 {
-        self.stages.iter().map(StageRecord::duration).sum()
+        stages_makespan(&self.stages)
     }
 
     /// Summed duration of stages whose name matches.
@@ -92,14 +123,7 @@ impl SimResult {
 
     /// The paper's load-balance metric LB(P) (Eq. 20): min/max rank time.
     pub fn load_balance(&self) -> f64 {
-        let t = self.rank_times();
-        let max = t.iter().cloned().fold(f64::MIN, f64::max);
-        let min = t.iter().cloned().fold(f64::MAX, f64::min);
-        if max <= 0.0 {
-            1.0
-        } else {
-            min / max
-        }
+        stages_load_balance(self.ranks, &self.stages)
     }
 
     /// Total compute-only time per rank (used for calibrating Eq. 10).
@@ -452,6 +476,7 @@ impl<'a> Simulator<'a> {
             stages,
             vel: state.vel_in_input_order(self.tree),
             comm_bytes,
+            counts: ev.counts.get(),
         }
     }
 }

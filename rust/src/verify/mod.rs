@@ -336,22 +336,30 @@ impl VerificationFile {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fmm::{direct_all, BiotSavart2D, Evaluator, NativeBackend,
-                     OpDims};
+    use crate::config::RunConfig;
+    use crate::coordinator::FmmSolver;
     use crate::proptest::Gen;
-    use crate::quadtree::Domain;
 
     fn solved(seed: u64)
         -> (Quadtree, FmmState, Vec<[f64; 2]>, Vec<[f64; 2]>) {
+        // one entry point, one permutation: Solution.vel is the
+        // input-order `fmm` column and Solution.state the coefficients
         let mut g = Gen::new(seed);
         let parts = g.particles(80);
-        let tree = Quadtree::build(Domain::UNIT, 3, parts.clone());
-        let dims = OpDims { batch: 8, leaf: 8, terms: 6, sigma: 0.02 };
-        let backend = NativeBackend::new(dims, BiotSavart2D::new(0.02));
-        let state = Evaluator::new(&tree, &backend).evaluate();
-        let direct = direct_all(&BiotSavart2D::new(0.02), &parts);
-        let fmm = state.vel_in_input_order(&tree);
-        (tree, state, direct, fmm)
+        let cfg = RunConfig {
+            particles: parts.len(),
+            levels: 3,
+            terms: 6,
+            sigma: 0.02,
+            ..Default::default()
+        };
+        let sol = FmmSolver::from_config(&cfg)
+            .particles(parts)
+            .solve()
+            .unwrap();
+        let direct = sol.direct_oracle();
+        let state = sol.state.expect("serial solve carries state");
+        (sol.problem.tree, state, direct, sol.vel)
     }
 
     #[test]

@@ -121,6 +121,7 @@ fn threaded_and_simulated_runtimes_agree() {
     let sim_vel = problem.simulate(backend.as_ref()).unwrap().vel;
     let dims = OpDims { batch: 64, leaf: 32, terms: 12, sigma: 0.01 };
     let thr_vel = run_threaded(
+        BiotSavart2D::new(config.sigma),
         petfmm::quadtree::Domain::UNIT,
         config.levels,
         &particles,
@@ -194,7 +195,8 @@ fn cli_end_to_end_with_config_file() {
 #[test]
 fn verification_flow_serial_vs_parallel() {
     // §6.2 methodology: dump serial run + parallel run through the file
-    // format and compare
+    // format and compare — both runs through the one solver facade
+    use petfmm::coordinator::{FmmSolver, RunMode};
     use petfmm::verify::VerificationFile;
     let mut g = Gen::new(31);
     let particles = g.particles(200);
@@ -205,23 +207,28 @@ fn verification_flow_serial_vs_parallel() {
         ranks: 3,
         ..Default::default()
     };
-    let problem =
-        prepare_with_particles(&config, particles.clone()).unwrap();
-    let backend = make_backend(&config).unwrap();
-    let serial_state = problem.serial(backend.as_ref());
-    let direct = direct_all(&BiotSavart2D::new(config.sigma), &particles);
+    let serial = FmmSolver::from_config(&config)
+        .particles(particles.clone())
+        .solve()
+        .unwrap();
+    let state = serial.state.as_ref().unwrap();
+    let direct = serial.direct_oracle();
     let a = VerificationFile::build(
-        &problem.tree,
+        &serial.problem.tree,
         config.terms,
-        &serial_state,
+        state,
         direct.clone(),
-        serial_state.vel_in_input_order(&problem.tree),
+        serial.vel.clone(),
     );
-    // parallel run: the simulator already reports input-order
-    // velocities, so they drop straight into the file format
-    let par = problem.simulate(backend.as_ref()).unwrap();
-    let b = VerificationFile::build(&problem.tree, config.terms,
-                                    &serial_state, direct, par.vel);
+    // parallel run: Solution.vel is input order in every mode, so it
+    // drops straight into the file format
+    let par = FmmSolver::from_config(&config)
+        .particles(particles)
+        .mode(RunMode::Simulated)
+        .solve()
+        .unwrap();
+    let b = VerificationFile::build(&serial.problem.tree, config.terms,
+                                    state, direct, par.vel);
     let issues = a.compare(&b, 1e-9);
     assert!(issues.is_empty(), "{issues:?}");
 }

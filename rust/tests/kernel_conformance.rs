@@ -1,0 +1,210 @@
+//! Kernel-conformance property suite (DESIGN.md §10): every registered
+//! [`FmmKernel`] must
+//!
+//! 1. match its own direct-sum oracle through the `FmmSolver` facade in
+//!    all three run modes (serial / threaded / simulated),
+//! 2. satisfy the P2M→M2M→M2L→L2L→L2P translation-chain identity
+//!    against the oracle (the five seams composed end to end), and
+//! 3. be bitwise deterministic: worker counts 1/2/8 and all three run
+//!    modes produce *identical* output vectors.
+//!
+//! Plus the refactor pin: Biot–Savart through the trait/facade is
+//! assert_eq-bitwise-identical to the hand-wired evaluator path.
+
+use petfmm::config::RunConfig;
+use petfmm::coordinator::{native_dims, FmmSolver, RunMode};
+use petfmm::fmm::{BiotSavart2D, Evaluator, FmmKernel, Gravity2D,
+                  KernelSpec, LogPotential2D, NativeBackend, OpDims,
+                  OpsBackend, TranslationConvention};
+use petfmm::proptest::Gen;
+use petfmm::quadtree::{Domain, Quadtree};
+use petfmm::util::rel_l2_error;
+
+fn conf(kernel: KernelSpec) -> RunConfig {
+    RunConfig {
+        particles: 240,
+        levels: 4,
+        terms: 17,
+        sigma: 0.005,
+        kernel,
+        ranks: 4,
+        distribution: "uniform".into(),
+        seed: 11,
+        par_threads: 1,
+        ..Default::default()
+    }
+}
+
+const MODES: [RunMode; 3] =
+    [RunMode::Serial, RunMode::Threaded, RunMode::Simulated];
+
+#[test]
+fn every_kernel_matches_its_direct_oracle_in_all_modes() {
+    for spec in KernelSpec::ALL {
+        for mode in MODES {
+            let sol = FmmSolver::from_config(&conf(spec))
+                .mode(mode)
+                .solve()
+                .unwrap();
+            let want = sol.direct_oracle();
+            let err = rel_l2_error(&sol.vel, &want);
+            assert!(
+                err < 2e-4,
+                "{} / {}: rel l2 err {err}",
+                spec.name(),
+                mode.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn every_kernel_is_bitwise_deterministic_across_threads_and_modes() {
+    for spec in KernelSpec::ALL {
+        let base = FmmSolver::from_config(&conf(spec)).solve().unwrap();
+        for threads in [2usize, 8] {
+            let t = FmmSolver::from_config(&conf(spec))
+                .threads(threads)
+                .solve()
+                .unwrap();
+            assert_eq!(base.vel, t.vel,
+                       "{}: threads={threads} changed bits",
+                       spec.name());
+        }
+        for mode in [RunMode::Threaded, RunMode::Simulated] {
+            let m = FmmSolver::from_config(&conf(spec))
+                .mode(mode)
+                .solve()
+                .unwrap();
+            assert_eq!(base.vel, m.vel,
+                       "{}: mode {} diverged from serial",
+                       spec.name(), mode.name());
+        }
+    }
+}
+
+#[test]
+fn biot_savart_facade_is_bitwise_identical_to_the_evaluator_path() {
+    // the api_redesign pin: routing through FmmKernel + FmmSolver moves
+    // zero bits relative to hand-wiring tree/backend/Evaluator (the
+    // PR-3 path)
+    let cfg = conf(KernelSpec::BiotSavart);
+    let sol = FmmSolver::from_config(&cfg).solve().unwrap();
+    let parts = petfmm::coordinator::generate(&cfg).unwrap();
+    let tree = Quadtree::build(Domain::UNIT, cfg.levels, parts);
+    let backend =
+        NativeBackend::new(native_dims(&cfg), BiotSavart2D::new(cfg.sigma));
+    let want = Evaluator::new(&tree, &backend)
+        .evaluate()
+        .vel_in_input_order(&tree);
+    assert_eq!(sol.vel, want);
+}
+
+/// P2M → M2M → M2L → L2L → L2P through the batched ABI, checked against
+/// the kernel's direct oracle at well-separated targets.
+fn chain_identity<K: FmmKernel + Copy>(kernel: K, tol: f64) {
+    assert_eq!(kernel.convention(), TranslationConvention::InverseZ);
+    let p = 20usize;
+    let leaf = 8usize;
+    let dims = OpDims { batch: 1, leaf, terms: p, sigma: 1e-4 };
+    let be = NativeBackend::new(dims, kernel);
+    let mut g = Gen::new(7);
+
+    // sources clustered in a child box (cc, rc) of the parent (cp, rp)
+    let (cc, rc) = ([0.05f64, 0.05], 0.05f64);
+    let (cp, rp) = ([0.1f64, 0.1], 0.1f64);
+    let n_src = 6;
+    // same-sign strengths: the far field cannot cancel toward zero,
+    // keeping the relative-error check meaningful
+    let sources: Vec<[f64; 3]> = (0..n_src)
+        .map(|_| {
+            [cc[0] + g.f64_in(-0.8 * rc, 0.8 * rc),
+             cc[1] + g.f64_in(-0.8 * rc, 0.8 * rc),
+             g.f64_in(0.5, 1.5)]
+        })
+        .collect();
+    let mut parts = vec![0.0; leaf * 3];
+    for (j, s) in sources.iter().enumerate() {
+        parts[j * 3] = s[0];
+        parts[j * 3 + 1] = s[1];
+        parts[j * 3 + 2] = s[2];
+    }
+    for j in n_src..leaf {
+        parts[j * 3] = cc[0]; // padding: center, zero strength
+        parts[j * 3 + 1] = cc[1];
+    }
+
+    // P2M about the child, M2M into the parent
+    let me_child = be.p2m(&parts, &cc, &[rc]);
+    let d = [(cc[0] - cp[0]) / rp, (cc[1] - cp[1]) / rp];
+    let me_parent = be.m2m(&me_child, &d, &[rc / rp]);
+
+    // M2L across a well-separated pair at the parent level
+    let (ct, rt) = ([0.7f64, 0.1], 0.1f64);
+    let tau = [(cp[0] - ct[0]) / rp, (cp[1] - ct[1]) / rp];
+    let le_t = be.m2l(&me_parent, &tau, &[1.0 / rp]);
+
+    // L2L into a child of the target box
+    let (ctc, rtc) = ([0.675f64, 0.075], 0.05f64);
+    let d2 = [(ctc[0] - ct[0]) / rt, (ctc[1] - ct[1]) / rt];
+    let le_c = be.l2l(&le_t, &d2, &[rtc / rt]);
+
+    // L2P at points inside the target child vs the direct oracle
+    let mut tparts = vec![0.0; leaf * 3];
+    let targets: Vec<[f64; 2]> = (0..leaf)
+        .map(|_| {
+            [ctc[0] + g.f64_in(-0.8 * rtc, 0.8 * rtc),
+             ctc[1] + g.f64_in(-0.8 * rtc, 0.8 * rtc)]
+        })
+        .collect();
+    for (j, t) in targets.iter().enumerate() {
+        tparts[j * 3] = t[0];
+        tparts[j * 3 + 1] = t[1];
+    }
+    let vel = be.l2p(&le_c, &tparts, &ctc, &[rtc]);
+    for (j, t) in targets.iter().enumerate() {
+        let want = kernel.direct_at(t[0], t[1], &sources);
+        let scale = want[0].abs().max(want[1].abs()).max(1e-12);
+        for c in 0..2 {
+            let got = vel[j * 2 + c];
+            assert!(
+                ((got - want[c]) / scale).abs() < tol,
+                "{}: target {j} component {c}: {got} vs {}",
+                kernel.name(),
+                want[c]
+            );
+        }
+    }
+}
+
+#[test]
+fn translation_chain_identity_for_every_kernel() {
+    // biot-savart with a tiny core: the far-field substitution is exact
+    // to double precision at 6r separation
+    chain_identity(BiotSavart2D::new(1e-4), 1e-5);
+    chain_identity(LogPotential2D, 1e-5);
+    chain_identity(Gravity2D::new(1.0), 1e-5);
+    chain_identity(Gravity2D::new(6.674e-2), 1e-5);
+}
+
+#[test]
+fn op_counts_are_kernel_independent_per_mode() {
+    // the kernel cannot change the schedule: operator counts are a
+    // geometry property — identical for every kernel within a mode
+    // (modes batch differently: per-rank chunking changes *_batches)
+    for mode in MODES {
+        let counts: Vec<_> = KernelSpec::ALL
+            .iter()
+            .map(|&spec| {
+                FmmSolver::from_config(&conf(spec))
+                    .mode(mode)
+                    .solve()
+                    .unwrap()
+                    .counts
+            })
+            .collect();
+        assert_eq!(counts[0], counts[1], "mode {}", mode.name());
+        assert_eq!(counts[0], counts[2], "mode {}", mode.name());
+        assert!(counts[0].p2m > 0 && counts[0].m2l > 0);
+    }
+}
