@@ -10,13 +10,15 @@ use anyhow::{anyhow, bail, Result};
 use crate::comm::NetworkModel;
 use crate::fmm::KernelSpec;
 use crate::partition::Strategy;
+use crate::vortex::Integrator;
 
 /// Canonical config keys (aliases joined with `|`), for the unknown-key
 /// error message — keep in sync with [`RunConfig::set`].
 const VALID_KEYS: &[&str] = &[
     "particles|n", "levels|l", "cut-level|k", "terms|p", "sigma",
     "kernel", "ranks|procs", "strategy", "network", "distribution|dist",
-    "backend", "seed", "artifacts", "par-threads|threads",
+    "backend", "seed", "artifacts", "par-threads|threads", "steps",
+    "dt", "rebalance-threshold", "rebalance", "integrator",
 ];
 
 /// Full run configuration for the coordinator.
@@ -51,6 +53,19 @@ pub struct RunConfig {
     /// intra-rank worker threads for evaluator batch dispatch
     /// (0 = one per host core); results are bit-identical at any setting
     pub par_threads: usize,
+    /// convection steps for the dynamic `simulate` driver
+    pub steps: usize,
+    /// convection time step Δt
+    pub dt: f64,
+    /// repartition when the predicted LB(P) min/max ratio (Eq. 20 on
+    /// the Eq. 15 work model) drops below this after particle motion
+    pub rebalance_threshold: f64,
+    /// model-driven repartitioning on/off (off keeps the initial
+    /// assignment for the whole run; numerics are identical either way
+    /// — rebalancing only moves work between ranks, DESIGN.md §11)
+    pub rebalance: bool,
+    /// time integrator for the dynamic driver: euler | rk2
+    pub integrator: Integrator,
 }
 
 impl Default for RunConfig {
@@ -70,6 +85,11 @@ impl Default for RunConfig {
             seed: 1,
             artifacts: "artifacts".into(),
             par_threads: 0,
+            steps: 20,
+            dt: 2e-3,
+            rebalance_threshold: 0.8,
+            rebalance: true,
+            integrator: Integrator::Euler,
         }
     }
 }
@@ -126,6 +146,28 @@ impl RunConfig {
             "artifacts" => self.artifacts = value.into(),
             "par-threads" | "par_threads" | "threads" => {
                 self.par_threads = value.parse()?
+            }
+            "steps" => self.steps = value.parse()?,
+            "dt" => self.dt = value.parse()?,
+            "rebalance-threshold" | "rebalance_threshold" => {
+                self.rebalance_threshold = value.parse()?
+            }
+            "rebalance" => {
+                self.rebalance = match value {
+                    "on" | "true" | "1" => true,
+                    "off" | "false" | "0" => false,
+                    _ => bail!(
+                        "rebalance must be on|off (got '{value}')"
+                    ),
+                }
+            }
+            "integrator" => {
+                self.integrator =
+                    Integrator::parse(value).ok_or_else(|| {
+                        anyhow!(
+                            "unknown integrator '{value}' (euler | rk2)"
+                        )
+                    })?
             }
             _ => bail!(
                 "unknown config key '{key}' (valid keys: {})",
@@ -283,6 +325,28 @@ mod tests {
         for name in KernelSpec::NAMES {
             assert!(err.contains(name), "{err} missing {name}");
         }
+    }
+
+    #[test]
+    fn dynamic_loop_keys_parse() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.steps, 20);
+        assert!(c.rebalance);
+        assert_eq!(c.integrator, Integrator::Euler);
+        c.apply_ini(
+            "steps = 50\ndt = 0.004\nrebalance-threshold = 0.7\n\
+             rebalance = off\nintegrator = rk2\n",
+        )
+        .unwrap();
+        assert_eq!(c.steps, 50);
+        assert_eq!(c.dt, 0.004);
+        assert_eq!(c.rebalance_threshold, 0.7);
+        assert!(!c.rebalance);
+        assert_eq!(c.integrator, Integrator::Rk2);
+        c.set("rebalance", "on").unwrap();
+        assert!(c.rebalance);
+        assert!(c.set("rebalance", "maybe").is_err());
+        assert!(c.set("integrator", "verlet").is_err());
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   run        one FMM solve, serial + parallel-sim, accuracy + timings
+//!   simulate   multi-step vortex run with model-driven rebalancing
 //!   scale      the §7 strong-scaling experiment (Figs. 6–9 tables)
 //!   partition  partition quality + Fig. 5-style map per strategy
 //!   model      §5 model tables (work, comm, memory, Eq. 10 fit)
@@ -11,6 +12,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use super::driver::{self, make_backend};
+use super::simulation::Simulation;
 use super::solver::{FmmSolver, RunMode};
 use crate::config::RunConfig;
 use crate::metrics::ScalingSeries;
@@ -27,6 +29,10 @@ USAGE: petfmm <command> [--key value ...]
 
 COMMANDS
   run        solve once; report accuracy vs direct sum + stage timings
+  simulate   advance the vortex system --steps steps: per step solve,
+             convect, rebuild the tree in place, re-run the work model,
+             and repartition (warm-start) when the predicted LB(P)
+             min/max ratio drops below --rebalance-threshold
   scale      strong scaling over --ranks-list (default 1,4,8,16,32,64)
   partition  compare partitioning strategies on the current workload
   model      print the §5 analytical model tables
@@ -45,6 +51,9 @@ COMMON FLAGS (defaults in brackets)
   --threads T       evaluator worker pool, 0 = one per core [0]
   scale only: --ranks-list 1,4,8,16,32,64
   run only:   --dump FILE (write verification file)
+  simulate:   --steps N [20]  --dt T [0.002]  --integrator [euler|rk2]
+              --rebalance [on|off]  --rebalance-threshold R [0.8]
+              --mode [serial|threaded|simulated]
 ";
 
 /// CLI entry point (called by main).
@@ -74,10 +83,26 @@ pub fn dispatch(args: &[String]) -> Result<()> {
     let mut filtered = Vec::new();
     let mut ranks_list: Vec<usize> = vec![1, 4, 8, 16, 32, 64];
     let mut dump: Option<String> = None;
+    let mut mode: Option<RunMode> = None;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
             "--config" => i += 1, // value consumed above
+            "--mode" => {
+                let v = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("--mode needs a value"))?;
+                mode = Some(match v.as_str() {
+                    "serial" => RunMode::Serial,
+                    "threaded" => RunMode::Threaded,
+                    "simulated" | "sim" => RunMode::Simulated,
+                    other => bail!(
+                        "unknown mode '{other}' (serial | threaded | \
+                         simulated)"
+                    ),
+                });
+                i += 1;
+            }
             "--ranks-list" => {
                 let v = args
                     .get(i + 1)
@@ -103,9 +128,17 @@ pub fn dispatch(args: &[String]) -> Result<()> {
     }
     let positional = config.apply_cli(&filtered)?;
     let cmd = positional.first().map(String::as_str).unwrap_or("help");
+    if mode.is_some() && cmd != "simulate" {
+        // don't silently ignore it: pre-simulate, `--mode` fell through
+        // to the config parser and errored as an unknown key
+        bail!("--mode only applies to the simulate command");
+    }
 
     match cmd {
         "run" => cmd_run(&config, dump.as_deref()),
+        "simulate" => {
+            cmd_simulate(&config, mode.unwrap_or(RunMode::Serial))
+        }
         "scale" => cmd_scale(&config, &ranks_list),
         "partition" => cmd_partition(&config),
         "model" => cmd_model(&config),
@@ -187,6 +220,40 @@ fn cmd_run(config: &RunConfig, dump: Option<&str>) -> Result<()> {
     } else if dump.is_some() {
         bail!("--dump requires particles <= 20000 (direct sum)");
     }
+    Ok(())
+}
+
+fn cmd_simulate(config: &RunConfig, mode: RunMode) -> Result<()> {
+    println!("petfmm simulate: {}", config.summary());
+    println!(
+        "steps={} dt={} integrator={} rebalance={} threshold={} mode={}",
+        config.steps,
+        config.dt,
+        config.integrator.name(),
+        if config.rebalance { "on" } else { "off" },
+        config.rebalance_threshold,
+        mode.name()
+    );
+    let mut sim = Simulation::new(config)?.mode(mode);
+    sim.run()?;
+    let trace = sim.trace();
+    print!("{}", trace.table());
+    println!(
+        "{} steps in {:.3}s ({:.2} steps/s): solve {:.3}s, \
+         convect+rebuild {:.3}s",
+        trace.steps.len(),
+        trace.wall_secs(),
+        trace.steps_per_sec(),
+        trace.solve_secs(),
+        trace.rebuild_secs()
+    );
+    println!(
+        "repartitions: {} (threshold {}), final predicted LB(P) = {:.4}",
+        trace.repartitions,
+        config.rebalance_threshold,
+        trace.final_lb()
+    );
+    println!("position digest: {:016x}", sim.position_digest());
     Ok(())
 }
 
@@ -339,6 +406,35 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("available"), "{err}");
+    }
+
+    #[test]
+    fn simulate_small_problem_all_modes() {
+        for mode in ["serial", "threaded", "simulated"] {
+            dispatch(&args(&[
+                "simulate", "--particles", "200", "--levels", "3",
+                "--terms", "6", "--ranks", "2", "--dist", "clustered",
+                "--steps", "2", "--dt", "0.001", "--mode", mode,
+            ]))
+            .unwrap();
+        }
+        let err = dispatch(&args(&["simulate", "--mode", "warp"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown mode"), "{err}");
+        // --mode is simulate-only; other commands must reject it
+        // loudly rather than silently running in a different mode
+        let err = dispatch(&args(&[
+            "run", "--particles", "100", "--levels", "3", "--mode",
+            "threaded",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("simulate"), "{err}");
+        let err = dispatch(&args(&["simulate", "--integrator", "xx"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("integrator"), "{err}");
     }
 
     #[test]

@@ -145,6 +145,20 @@ impl Problem {
     ) -> Result<SimResult> {
         let plan = ParallelPlan::build(&self.tree, &self.cut,
                                        &self.assignment);
+        self.simulate_planned(backend, costs, &plan)
+    }
+
+    /// Execute an **already-derived** plan (which must have been built
+    /// or refreshed against this problem's current tree/cut/assignment).
+    /// The dynamic time-stepper refreshes one plan in place across
+    /// steps (`ParallelPlan::rebuild_into`) instead of rebuilding the
+    /// task lists from scratch every solve.
+    pub fn simulate_planned(
+        &self,
+        backend: &dyn OpsBackend,
+        costs: Option<PetfmmOpCosts>,
+        plan: &ParallelPlan,
+    ) -> Result<SimResult> {
         let mut sim = Simulator::new(
             &self.tree,
             &self.cut,
@@ -156,7 +170,7 @@ impl Problem {
         if let Some(c) = costs {
             sim = sim.with_costs(c);
         }
-        Ok(sim.run(&plan))
+        Ok(sim.run(plan))
     }
 }
 

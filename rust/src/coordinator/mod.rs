@@ -1,10 +1,12 @@
 //! The leader/coordinator (L3): workload generation, problem
 //! preparation (tree build → cut → weighted-graph partition), schedule
 //! execution over a compute backend, the kernel-generic solver facade
-//! ([`FmmSolver`]), and the CLI.
+//! ([`FmmSolver`]), the dynamic load-balancing time-stepper
+//! ([`Simulation`]), and the CLI.
 
 pub mod cli;
 pub mod driver;
+pub mod simulation;
 pub mod solver;
 pub mod workload;
 
@@ -12,5 +14,6 @@ pub use cli::{cli_main, dispatch};
 pub use driver::{make_backend, native_dims, prepare,
                  prepare_with_particles, scaling_point, strong_scaling,
                  Problem};
+pub use simulation::Simulation;
 pub use solver::{FmmSolver, RunMode, Solution};
 pub use workload::generate;

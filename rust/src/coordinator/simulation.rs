@@ -1,0 +1,380 @@
+//! The dynamic load-balancing time-stepper — the paper's *title*
+//! feature (§3, §7.1): a vortex system advanced over many steps, with
+//! the work model re-evaluated after every convection and the
+//! partition refreshed **only when the model predicts imbalance**.
+//!
+//! Per step, [`Simulation::step`] runs:
+//!
+//! 1. **solve** — one FMM solve through the existing [`FmmSolver`]
+//!    facade (any [`RunMode`]); in `Simulated` mode the schedule plan
+//!    is threaded through the facade and refreshed in place
+//!    (`ParallelPlan::rebuild_into`), never rebuilt from scratch;
+//! 2. **convect** — forward Euler on the solution's input-order field
+//!    (the facade materializes it once per solve in every mode), or
+//!    the RK2 midpoint rule with a second solve at the half step;
+//! 3. **rebuild** — `Quadtree::rebuild_into` re-bins the *same*
+//!    particle buffer into the *same* tree storage: the per-step hot
+//!    loop is allocation-steady once capacities match the workload;
+//! 4. **re-model** — the Eq. 15 [`crate::model::WorkEstimator`]
+//!    re-weights the
+//!    assignment's comm graph in place (the adjacency depends only on
+//!    the cut and never changes) and predicts the next solve's LB(P);
+//! 5. **repartition (maybe)** — when the predicted min/max ratio drops
+//!    below `config.rebalance_threshold`, `partition::refine_from`
+//!    warm-starts from the previous assignment instead of partitioning
+//!    cold.
+//!
+//! **Numerics-neutrality (DESIGN.md §11).**  The assignment decides
+//! only *where* tasks run; the determinism contract (§4) guarantees
+//! every per-box accumulation order equals the serial sweep regardless
+//! of ownership, so a run with rebalancing on and the same run with
+//! rebalancing off produce bitwise-identical trajectories — pinned by
+//! `tests/dynamics_trajectory.rs`.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::driver::{self, make_backend, Problem};
+use super::solver::{validate_backend, FmmSolver, RunMode, Solution};
+use crate::config::RunConfig;
+use crate::metrics::{SimulationTrace, StepRecord};
+use crate::quadtree::{Particle, RebuildScratch};
+use crate::sched::{stages_makespan, ParallelPlan};
+use crate::util::position_digest;
+use crate::vortex::{convect, Integrator};
+
+/// Multi-step vortex simulation driver.  Construct with
+/// [`Simulation::new`] (config workload) or
+/// [`Simulation::from_problem`] / [`Simulation::with_particles`], pick
+/// a [`RunMode`], then [`Simulation::run`] or step manually.
+///
+/// The tree, the schedule plan and the partition assignment are
+/// **reusable mutable state** owned by the simulation: they are
+/// updated in place every step rather than derived anew, which is what
+/// makes the steady-state step allocation-light and the repartition
+/// warm.
+pub struct Simulation {
+    mode: RunMode,
+    /// taken/returned around each facade solve (the solver moves it)
+    problem: Option<Problem>,
+    /// `Simulated`-mode plan cache, refreshed in place by the facade
+    plan: Option<ParallelPlan>,
+    scratch: RebuildScratch,
+    trace: SimulationTrace,
+    /// mode the config-static pre-flight last passed for (re-checked
+    /// whenever the mode changes, so a failing combination can never
+    /// reach the state-consuming solver)
+    validated_mode: Option<RunMode>,
+}
+
+impl Simulation {
+    /// Simulation over the config's synthetic workload.
+    pub fn new(config: &RunConfig) -> Result<Simulation> {
+        Ok(Simulation::from_problem(driver::prepare(config)?))
+    }
+
+    /// Simulation over an explicit particle set.
+    pub fn with_particles(config: &RunConfig, particles: Vec<Particle>)
+        -> Result<Simulation> {
+        Ok(Simulation::from_problem(
+            driver::prepare_with_particles(config, particles)?,
+        ))
+    }
+
+    /// Simulation over an already-prepared problem (its embedded config
+    /// supplies `steps`/`dt`/`rebalance*`/`integrator`).
+    pub fn from_problem(problem: Problem) -> Simulation {
+        Simulation {
+            mode: RunMode::default(),
+            problem: Some(problem),
+            plan: None,
+            scratch: RebuildScratch::default(),
+            trace: SimulationTrace::default(),
+            validated_mode: None,
+        }
+    }
+
+    /// Select the per-step solve mode (default: serial).
+    pub fn mode(mut self, mode: RunMode) -> Simulation {
+        self.mode = mode;
+        self
+    }
+
+    /// The current problem state (tree over the convected particles,
+    /// cut, live assignment).
+    pub fn problem(&self) -> &Problem {
+        self.problem
+            .as_ref()
+            .expect("problem is always present between steps")
+    }
+
+    /// Current particle positions/strengths in input order.
+    pub fn particles(&self) -> &[Particle] {
+        &self.problem().tree.particles
+    }
+
+    /// The per-step trace so far.
+    pub fn trace(&self) -> &SimulationTrace {
+        &self.trace
+    }
+
+    /// Bitwise digest of the current particle state
+    /// (`util::position_digest`) — the golden-trajectory pin.
+    pub fn position_digest(&self) -> u64 {
+        position_digest(self.particles())
+    }
+
+    /// Advance one step (solve → convect → rebuild → re-model →
+    /// possible repartition); returns the step's record.
+    pub fn step(&mut self) -> Result<&StepRecord> {
+        let t_step = Instant::now();
+        // pre-flight the config-static failure modes BEFORE moving the
+        // problem into the solver (which consumes it): a bad
+        // backend/mode/network combination must error out with the
+        // particle state intact, not leave the simulation unusable.
+        // For an already-prepared problem these are the facade's only
+        // fallible pieces; they can only change with the mode, so one
+        // check per mode suffices.
+        if self.validated_mode != Some(self.mode) {
+            let cfg = &self.problem().config;
+            validate_backend(cfg, self.mode)?;
+            if self.mode != RunMode::Threaded {
+                make_backend(cfg).context("dynamic step backend")?;
+            }
+            if self.mode == RunMode::Simulated {
+                cfg.network_model()?;
+            }
+            self.validated_mode = Some(self.mode);
+        }
+        let problem = self
+            .problem
+            .take()
+            .expect("problem is always present between steps");
+        let cfg = problem.config.clone();
+        let dt = cfg.dt;
+
+        // ---- 1. solve (through the facade; plan refreshed in place)
+        let t_solve = Instant::now();
+        let mut solver = FmmSolver::from_problem(problem).mode(self.mode);
+        if let Some(plan) = self.plan.take() {
+            solver = solver.plan(plan);
+        }
+        let sol = solver.solve().context("dynamic step solve")?;
+        let mut solve_secs = t_solve.elapsed().as_secs_f64();
+        let Solution {
+            vel,
+            mut counts,
+            stages,
+            comm_bytes,
+            problem: returned,
+            plan,
+            ..
+        } = sol;
+        self.plan = plan;
+        let mut problem = returned;
+        let makespan = stages_makespan(&stages);
+
+        // ---- 2. convect + 3. rebuild (allocation-steady hot loop)
+        let t_move = Instant::now();
+        let mut parts = std::mem::take(&mut problem.tree.particles);
+        let mut midpoint_secs = 0.0;
+        match cfg.integrator {
+            // the facade's Solution.vel is already in input order in
+            // every mode (it pays the one permutation copy per solve
+            // regardless), so Euler convects it directly; the
+            // internal-order `convect_permuted` path stays the
+            // documented fast route for non-facade clients that skip
+            // that copy (vortex::timestep pins the two bitwise-equal)
+            Integrator::Euler => convect(&mut parts, &vel, dt),
+            Integrator::Rk2 => {
+                // midpoint rule, reusing this step's field as k1; the
+                // half-step field needs a second solve over a midpoint
+                // tree (cold prepare — RK2 trades the allocation-steady
+                // loop for second-order accuracy)
+                let mut mid = parts.clone();
+                convect(&mut mid, &vel, 0.5 * dt);
+                let t_half = Instant::now();
+                let half = FmmSolver::from_config(&cfg)
+                    .particles(mid)
+                    .mode(self.mode)
+                    .solve()
+                    .context("RK2 midpoint solve")?;
+                midpoint_secs = t_half.elapsed().as_secs_f64();
+                counts.merge(&half.counts);
+                convect(&mut parts, &half.vel, dt);
+            }
+        }
+        problem.tree.rebuild_into(&mut self.scratch, parts);
+        let rebuild_secs =
+            t_move.elapsed().as_secs_f64() - midpoint_secs;
+        solve_secs += midpoint_secs;
+
+        // ---- 4. re-model: Eq. 15 over the moved particles ----------
+        // the comm graph's adjacency depends only on the cut; only the
+        // vertex weights drift as particles convect
+        let lb_before = problem
+            .assignment
+            .reweigh(&problem.tree, &problem.cut, cfg.terms);
+
+        // ---- 5. model-driven repartition (warm-start) --------------
+        let mut repartitioned = false;
+        if cfg.rebalance && lb_before < cfg.rebalance_threshold {
+            problem.assignment.refine_in_place(cfg.seed);
+            repartitioned = true;
+        }
+        let lb_after = problem.assignment.min_max_ratio();
+
+        self.problem = Some(problem);
+        self.trace.push(StepRecord {
+            step: self.trace.steps.len(),
+            solve_secs,
+            rebuild_secs,
+            step_secs: t_step.elapsed().as_secs_f64(),
+            makespan,
+            comm_bytes,
+            counts,
+            stages,
+            lb_predicted_before: lb_before,
+            lb_predicted_after: lb_after,
+            repartitioned,
+        });
+        Ok(self.trace.steps.last().expect("just pushed"))
+    }
+
+    /// Run `config.steps` steps.
+    pub fn run(&mut self) -> Result<&SimulationTrace> {
+        let steps = self.problem().config.steps;
+        self.run_steps(steps)
+    }
+
+    /// Run `n` further steps.
+    pub fn run_steps(&mut self, n: usize) -> Result<&SimulationTrace> {
+        for _ in 0..n {
+            self.step()?;
+        }
+        Ok(&self.trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::Strategy;
+
+    fn small_config() -> RunConfig {
+        RunConfig {
+            particles: 300,
+            levels: 4,
+            terms: 8,
+            sigma: 0.02,
+            ranks: 3,
+            distribution: "clustered".into(),
+            par_threads: 1,
+            steps: 3,
+            dt: 1e-3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn steps_move_particles_and_record_a_trace() {
+        let cfg = small_config();
+        let mut sim = Simulation::new(&cfg).unwrap();
+        let before = sim.particles().to_vec();
+        let d0 = sim.position_digest();
+        sim.run().unwrap();
+        let trace = sim.trace();
+        assert_eq!(trace.steps.len(), 3);
+        assert_ne!(sim.position_digest(), d0);
+        assert_ne!(sim.particles(), &before[..]);
+        // strengths are conserved along trajectories (Eq. 6)
+        let g0: f64 = before.iter().map(|p| p[2]).sum();
+        let g1: f64 = sim.particles().iter().map(|p| p[2]).sum();
+        assert!((g0 - g1).abs() < 1e-12);
+        for (i, s) in trace.steps.iter().enumerate() {
+            assert_eq!(s.step, i);
+            assert!(s.counts.p2m > 0);
+            assert!((0.0..=1.0).contains(&s.lb_predicted_before));
+            assert!((0.0..=1.0).contains(&s.lb_predicted_after));
+            assert!(s.repartitioned
+                    || s.lb_predicted_after == s.lb_predicted_before);
+        }
+    }
+
+    #[test]
+    fn euler_serial_threaded_and_simulated_agree_bitwise() {
+        let cfg = small_config();
+        let run = |mode: RunMode| {
+            let mut sim = Simulation::new(&cfg).unwrap().mode(mode);
+            sim.run_steps(2).unwrap();
+            sim.particles().to_vec()
+        };
+        let serial = run(RunMode::Serial);
+        assert_eq!(serial, run(RunMode::Threaded));
+        assert_eq!(serial, run(RunMode::Simulated));
+    }
+
+    #[test]
+    fn rk2_integrator_runs_and_differs_from_euler() {
+        let euler_cfg = small_config();
+        let rk2_cfg = RunConfig {
+            integrator: Integrator::Rk2,
+            ..small_config()
+        };
+        let mut e = Simulation::new(&euler_cfg).unwrap();
+        let mut r = Simulation::new(&rk2_cfg).unwrap();
+        e.run_steps(2).unwrap();
+        r.run_steps(2).unwrap();
+        assert_ne!(e.position_digest(), r.position_digest());
+        // RK2 runs two solves per step
+        assert!(r.trace().steps[0].counts.p2m
+                > e.trace().steps[0].counts.p2m);
+    }
+
+    #[test]
+    fn a_bad_config_errors_without_destroying_the_state() {
+        // the pre-flight catches config-static failures before the
+        // problem is handed to (and consumed by) the solver
+        for (backend, mode) in
+            [("pjrt", RunMode::Threaded), ("gpu", RunMode::Serial)]
+        {
+            let cfg = RunConfig {
+                backend: backend.into(),
+                ..small_config()
+            };
+            let mut sim =
+                Simulation::new(&cfg).unwrap().mode(mode);
+            let before = sim.particles().to_vec();
+            assert!(sim.step().is_err(), "{backend}/{:?}", mode);
+            // state intact: accessors still work, nothing moved
+            assert_eq!(sim.particles(), &before[..]);
+            assert!(sim.trace().steps.is_empty());
+        }
+    }
+
+    #[test]
+    fn uniform_start_on_clustered_workload_triggers_a_repartition() {
+        // threshold at the refinement target: a count-asymmetric
+        // uniform block over a clustered workload always sits below it
+        let cfg = RunConfig {
+            strategy: Strategy::UniformBlock,
+            rebalance_threshold: 0.95,
+            ..small_config()
+        };
+        let mut sim =
+            Simulation::new(&cfg).unwrap().mode(RunMode::Simulated);
+        sim.run_steps(2).unwrap();
+        assert!(sim.trace().repartitions >= 1,
+                "clustered workload under a uniform assignment must \
+                 trip the model threshold");
+        // and with the knob off, nothing fires
+        let off = RunConfig { rebalance: false, ..cfg };
+        let mut sim_off =
+            Simulation::new(&off).unwrap().mode(RunMode::Simulated);
+        sim_off.run_steps(2).unwrap();
+        assert_eq!(sim_off.trace().repartitions, 0);
+        // placement decisions never touch the physics
+        assert_eq!(sim.position_digest(), sim_off.position_digest());
+    }
+}

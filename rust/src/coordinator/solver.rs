@@ -35,7 +35,8 @@ use crate::config::RunConfig;
 use crate::fmm::{BiotSavart2D, Evaluator, FmmState, Gravity2D,
                  KernelSpec, LogPotential2D, OpCounts};
 use crate::quadtree::Particle;
-use crate::sched::{stages_load_balance, stages_makespan, StageRecord};
+use crate::sched::{stages_load_balance, stages_makespan, ParallelPlan,
+                   StageRecord};
 
 /// How a solve executes (same math, same bits — different runtimes).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -58,6 +59,26 @@ impl RunMode {
             RunMode::Threaded => "threaded",
             RunMode::Simulated => "simulated",
         }
+    }
+}
+
+/// Backend-name validation for a run mode — the single definition
+/// shared by the solver's `Threaded` arm and the dynamic driver's
+/// pre-flight, so the accepted-backend lists cannot drift apart.
+/// `Serial`/`Simulated` defer to [`make_backend`], which performs its
+/// own (richer) validation.
+pub(crate) fn validate_backend(config: &RunConfig, mode: RunMode)
+    -> Result<()> {
+    match (mode, config.backend.as_str()) {
+        (RunMode::Threaded, "native" | "auto") => Ok(()),
+        (RunMode::Threaded, "pjrt") => bail!(
+            "threaded mode runs per-rank native backends (PJRT \
+             handles are thread-local); use --backend native or auto"
+        ),
+        (RunMode::Threaded, other) => {
+            bail!("unknown backend '{other}' (native | pjrt | auto)")
+        }
+        _ => Ok(()),
     }
 }
 
@@ -86,6 +107,7 @@ pub struct FmmSolver {
     particles: Option<Vec<Particle>>,
     problem: Option<Problem>,
     mode: RunMode,
+    plan: Option<ParallelPlan>,
 }
 
 impl FmmSolver {
@@ -101,6 +123,7 @@ impl FmmSolver {
             particles: None,
             problem: None,
             mode: RunMode::default(),
+            plan: None,
         }
     }
 
@@ -117,6 +140,7 @@ impl FmmSolver {
             particles: None,
             problem: Some(problem),
             mode: RunMode::default(),
+            plan: None,
         }
     }
 
@@ -146,9 +170,20 @@ impl FmmSolver {
         self
     }
 
+    /// Seed the `Simulated`-mode schedule plan from a previous solve:
+    /// the plan is refreshed **in place** against this solve's
+    /// tree/cut/assignment (`ParallelPlan::rebuild_into`, reusing its
+    /// task-vector allocations) and handed back in [`Solution::plan`].
+    /// The dynamic time-stepper threads one plan through every step.
+    /// Ignored (but passed through) by the other run modes.
+    pub fn plan(mut self, plan: ParallelPlan) -> FmmSolver {
+        self.plan = Some(plan);
+        self
+    }
+
     /// Run the configured solve.
     pub fn solve(self) -> Result<Solution> {
-        let FmmSolver { config, particles, problem, mode } = self;
+        let FmmSolver { config, particles, problem, mode, plan } = self;
         let problem = match problem {
             Some(mut p) => {
                 // setters may have changed non-structural keys (kernel,
@@ -192,23 +227,13 @@ impl FmmSolver {
                     backend: backend.name(),
                     mode,
                     problem,
+                    plan,
                 })
             }
             RunMode::Threaded => {
-                // same backend-name validation as the other modes;
-                // threaded execution itself is always per-rank native
-                match config.backend.as_str() {
-                    "native" | "auto" => {}
-                    "pjrt" => bail!(
-                        "threaded mode runs per-rank native backends \
-                         (PJRT handles are thread-local); use --backend \
-                         native or auto"
-                    ),
-                    other => bail!(
-                        "unknown backend '{other}' (native | pjrt | \
-                         auto)"
-                    ),
-                }
+                // threaded execution is always per-rank native; shared
+                // validation so the driver pre-flight cannot drift
+                validate_backend(&config, mode)?;
                 let dims = native_dims(&config);
                 // share the already-built tree with the rank threads
                 // (no second Morton sort/binning); after they join the
@@ -248,11 +273,25 @@ impl FmmSolver {
                         cut,
                         assignment,
                     },
+                    plan,
                 })
             }
             RunMode::Simulated => {
                 let backend = make_backend(&config)?;
-                let res = problem.simulate(backend.as_ref())?;
+                // refresh a caller-seeded plan in place (allocation
+                // reuse across dynamic steps); build cold otherwise
+                let plan = match plan {
+                    Some(mut p) => {
+                        p.rebuild_into(&problem.tree, &problem.cut,
+                                       &problem.assignment);
+                        p
+                    }
+                    None => ParallelPlan::build(&problem.tree,
+                                                &problem.cut,
+                                                &problem.assignment),
+                };
+                let res = problem.simulate_planned(backend.as_ref(),
+                                                   None, &plan)?;
                 Ok(Solution {
                     // SimResult.vel is already input order (mapped once
                     // at the simulator's result boundary)
@@ -265,6 +304,7 @@ impl FmmSolver {
                     backend: backend.name(),
                     mode,
                     problem,
+                    plan: Some(plan),
                 })
             }
         }
@@ -305,6 +345,12 @@ pub struct Solution {
     /// The prepared problem (tree, cut, partition assignment) — kept so
     /// clients can inspect structure without re-deriving it.
     pub problem: Problem,
+    /// The schedule plan the solve executed (`Simulated` mode; also the
+    /// pass-through of a plan seeded via [`FmmSolver::plan`] in other
+    /// modes).  The dynamic time-stepper hands it back to the next
+    /// step's solver so its task vectors are refreshed in place instead
+    /// of reallocated.
+    pub plan: Option<ParallelPlan>,
 }
 
 impl Solution {
@@ -432,6 +478,30 @@ mod tests {
             assert!(err.contains("unknown backend"),
                     "{}: {err}", mode.name());
         }
+    }
+
+    #[test]
+    fn seeded_plan_refresh_is_bitwise_identical_to_a_cold_plan() {
+        let cfg = small_config();
+        let cold = FmmSolver::from_config(&cfg)
+            .mode(RunMode::Simulated)
+            .solve()
+            .unwrap();
+        let plan = cold.plan.clone().expect("simulated solve has a plan");
+        let warm = FmmSolver::from_problem(cold.problem.clone())
+            .mode(RunMode::Simulated)
+            .plan(plan)
+            .solve()
+            .unwrap();
+        assert_eq!(cold.vel, warm.vel);
+        assert_eq!(cold.counts, warm.counts);
+        assert!(warm.plan.is_some());
+        // non-simulated modes pass a seeded plan through untouched
+        let passthrough = FmmSolver::from_problem(cold.problem.clone())
+            .plan(warm.plan.clone().unwrap())
+            .solve()
+            .unwrap();
+        assert!(passthrough.plan.is_some());
     }
 
     #[test]

@@ -1,7 +1,11 @@
 //! Performance metrics and table rendering for the §7 experiments:
 //! speedup S(N,P) (Eq. 18), parallel efficiency E(N,P) (Eq. 19), the
-//! load-balance metric LB(P) (Eq. 20), and text/CSV renderers for the
-//! figure series.
+//! load-balance metric LB(P) (Eq. 20), text/CSV renderers for the
+//! figure series, and the per-step trace of the dynamic
+//! load-balancing time-stepper ([`SimulationTrace`]).
+
+use crate::fmm::OpCounts;
+use crate::sched::StageRecord;
 
 /// Speedup (Eq. 18): serial time / parallel time.
 pub fn speedup(serial_time: f64, parallel_time: f64) -> f64 {
@@ -133,6 +137,119 @@ impl ScalingSeries {
     }
 }
 
+/// One step of the dynamic loop (solve → convect → tree rebuild →
+/// model re-evaluation → possible repartition): what the `simulate`
+/// CLI renders and the dynamics bench aggregates.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    /// 0-based step index
+    pub step: usize,
+    /// wall-clock seconds inside the FMM solve(s) of this step
+    /// (includes the RK2 midpoint solve when that integrator is on)
+    pub solve_secs: f64,
+    /// wall-clock seconds convecting particles + rebuilding the Morton
+    /// tree in place
+    pub rebuild_secs: f64,
+    /// end-to-end wall-clock seconds of the step (solve + convect +
+    /// rebuild + model + any repartition)
+    pub step_secs: f64,
+    /// the solve's stage makespan (virtual BSP seconds in Simulated
+    /// mode, summed wall-clock stage times in Serial, 0 in Threaded)
+    pub makespan: f64,
+    /// modeled communication volume of the solve (Simulated mode)
+    pub comm_bytes: f64,
+    /// operator-application counts of the solve(s)
+    pub counts: OpCounts,
+    /// per-stage records of the solve (see `coordinator::Solution`)
+    pub stages: Vec<StageRecord>,
+    /// predicted LB(P) (Eq. 20 on Eq. 15 work) for the *next* solve,
+    /// evaluated after this step's particle motion, before repartition
+    pub lb_predicted_before: f64,
+    /// same, after any repartition (== `lb_predicted_before` when the
+    /// threshold was not crossed)
+    pub lb_predicted_after: f64,
+    /// whether the model-driven repartition fired this step
+    pub repartitioned: bool,
+}
+
+/// The full per-step trace of one dynamic run.
+#[derive(Clone, Debug, Default)]
+pub struct SimulationTrace {
+    pub steps: Vec<StepRecord>,
+    /// total model-driven repartitions across the run
+    pub repartitions: usize,
+}
+
+impl SimulationTrace {
+    pub fn push(&mut self, r: StepRecord) {
+        if r.repartitioned {
+            self.repartitions += 1;
+        }
+        self.steps.push(r);
+    }
+
+    /// Total end-to-end wall-clock seconds across steps.
+    pub fn wall_secs(&self) -> f64 {
+        self.steps.iter().map(|s| s.step_secs).sum()
+    }
+
+    pub fn solve_secs(&self) -> f64 {
+        self.steps.iter().map(|s| s.solve_secs).sum()
+    }
+
+    pub fn rebuild_secs(&self) -> f64 {
+        self.steps.iter().map(|s| s.rebuild_secs).sum()
+    }
+
+    /// Steps per wall-clock second (NaN before the first step).
+    pub fn steps_per_sec(&self) -> f64 {
+        self.steps.len() as f64 / self.wall_secs()
+    }
+
+    /// Mean step time excluding the first step — step 0 pays the cold
+    /// allocations and (typically) the initial catch-up repartition, so
+    /// the steady state is what perf gates compare.
+    pub fn steady_step_secs(&self) -> f64 {
+        if self.steps.len() < 2 {
+            return self.wall_secs();
+        }
+        let tail = &self.steps[1..];
+        tail.iter().map(|s| s.step_secs).sum::<f64>()
+            / tail.len() as f64
+    }
+
+    /// Predicted LB(P) after the last step's (possible) repartition —
+    /// what the next solve would see.
+    pub fn final_lb(&self) -> f64 {
+        self.steps
+            .last()
+            .map(|s| s.lb_predicted_after)
+            .unwrap_or(1.0)
+    }
+
+    /// Per-step text table for the `simulate` CLI.
+    pub fn table(&self) -> String {
+        let mut out = format!(
+            "{:>5}{:>12}{:>12}{:>7}{:>12}{:>12}{:>12}\n",
+            "step", "LB-before", "LB-after", "repart", "solve(s)",
+            "rebuild(s)", "step(s)"
+        );
+        for s in &self.steps {
+            out.push_str(&format!(
+                "{:>5}{:>12.4}{:>12.4}{:>7}{:>12.6}{:>12.6}{:>12.6}\n",
+                s.step,
+                s.lb_predicted_before,
+                s.lb_predicted_after,
+                if s.repartitioned { "yes" } else { "-" },
+                s.solve_secs,
+                s.rebuild_secs,
+                s.step_secs
+            ));
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,6 +291,34 @@ mod tests {
         }
         assert!(fig78.contains("3.76")
                 || fig78.contains("3.765"), "{fig78}"); // 64/17
+    }
+
+    #[test]
+    fn simulation_trace_aggregates() {
+        let mk = |step: usize, repart: bool, secs: f64| StepRecord {
+            step,
+            solve_secs: secs * 0.7,
+            rebuild_secs: secs * 0.1,
+            step_secs: secs,
+            makespan: secs,
+            comm_bytes: 0.0,
+            counts: OpCounts::default(),
+            stages: Vec::new(),
+            lb_predicted_before: 0.5,
+            lb_predicted_after: if repart { 0.95 } else { 0.5 },
+            repartitioned: repart,
+        };
+        let mut t = SimulationTrace::default();
+        assert_eq!(t.final_lb(), 1.0);
+        t.push(mk(0, true, 4.0));
+        t.push(mk(1, false, 1.0));
+        t.push(mk(2, false, 1.0));
+        assert_eq!(t.repartitions, 1);
+        assert_eq!(t.wall_secs(), 6.0);
+        assert_eq!(t.steady_step_secs(), 1.0);
+        assert!((t.steps_per_sec() - 0.5).abs() < 1e-12);
+        assert_eq!(t.final_lb(), 0.5);
+        assert_eq!(t.table().lines().count(), 4);
     }
 
     #[test]

@@ -92,6 +92,31 @@ impl WorkEstimator {
             .collect()
     }
 
+    /// Predicted per-rank work of an assignment over this tree: Eq. 15
+    /// summed over each rank's subtrees.  This is the a-priori quantity
+    /// whose min/max ratio the dynamic driver watches — re-evaluated
+    /// over the *moved* particles every step, it predicts the next
+    /// solve's LB(P) before any work is executed.
+    pub fn per_rank_work(&self, tree: &Quadtree, cut: &TreeCut,
+                         part: &[usize], ranks: usize) -> Vec<f64> {
+        let works = self.all_subtree_work(tree, cut);
+        debug_assert_eq!(works.len(), part.len());
+        let mut w = vec![0.0; ranks];
+        for (st, &r) in part.iter().enumerate() {
+            w[r] += works[st];
+        }
+        w
+    }
+
+    /// Predicted LB(P) (Eq. 20 evaluated on modeled work rather than on
+    /// measured times): min/max of [`WorkEstimator::per_rank_work`].
+    pub fn predicted_load_balance(&self, tree: &Quadtree, cut: &TreeCut,
+                                  part: &[usize], ranks: usize) -> f64 {
+        crate::metrics::load_balance(
+            &self.per_rank_work(tree, cut, part, ranks),
+        )
+    }
+
     /// Work of the root tree (levels 0..cut): the serial bottleneck owned
     /// by rank 0 (the `b log₄ P` term of Eq. 10).
     pub fn root_tree_work(&self, cut: &TreeCut) -> f64 {
@@ -182,6 +207,27 @@ mod tests {
             assert!(max > 2.0 * mean,
                     "clusters should concentrate work (max {max}, mean {mean})");
         });
+    }
+
+    #[test]
+    fn per_rank_work_sums_to_total_and_predicts_imbalance() {
+        let mut g = crate::proptest::Gen::new(3);
+        let parts = g.clustered_particles(1500, 1);
+        let tree = Quadtree::build(Domain::UNIT, 5, parts);
+        let cut = TreeCut::new(5, 2);
+        let w = WorkEstimator::new(9);
+        let works = w.all_subtree_work(&tree, &cut);
+        let part: Vec<usize> =
+            (0..cut.n_subtrees()).map(|i| i % 3).collect();
+        let per_rank = w.per_rank_work(&tree, &cut, &part, 3);
+        let total: f64 = works.iter().sum();
+        let summed: f64 = per_rank.iter().sum();
+        assert!((total - summed).abs() <= 1e-9 * total);
+        let lb = w.predicted_load_balance(&tree, &cut, &part, 3);
+        assert!((0.0..=1.0).contains(&lb), "lb {lb}");
+        // a single blob concentrates work: a round-robin placement of
+        // z-ordered subtrees cannot be perfectly balanced
+        assert!(lb < 1.0);
     }
 
     #[test]

@@ -28,7 +28,11 @@ pub fn sfc_equal_count(order: &[usize], k: usize) -> Vec<usize> {
     part
 }
 
-/// Space-filling-curve partition with weight-balanced splits.
+/// Space-filling-curve partition with weight-balanced splits.  Every
+/// part is non-empty whenever `n >= k`: when exactly one vertex per
+/// still-unopened part remains on the curve, the split is forced even
+/// if the current part has not reached its weight share (a trailing
+/// run of near-zero weights must not starve the last parts).
 pub fn sfc_weighted(order: &[usize], weights: &[f64], k: usize)
     -> Vec<usize> {
     let n = order.len();
@@ -40,9 +44,14 @@ pub fn sfc_weighted(order: &[usize], weights: &[f64], k: usize)
     let mut part = vec![0; n];
     let mut acc = 0.0;
     let mut cur = 0usize;
-    for &v in &by_pos {
-        // close the current part when it reached its share (never past k-1)
-        if cur + 1 < k && acc >= ideal * (cur + 1) as f64 {
+    for (idx, &v) in by_pos.iter().enumerate() {
+        // close the current part when it reached its share (never past
+        // k-1), or when the remaining vertices (incl. v) are exactly
+        // enough to give each later part one
+        let left = n - idx;
+        if cur + 1 < k
+            && (acc >= ideal * (cur + 1) as f64 || left == k - 1 - cur)
+        {
             cur += 1;
         }
         part[v] = cur;
@@ -99,6 +108,28 @@ mod tests {
                 assert!(p[i - 1] <= p[i], "parts must be curve-contiguous");
             }
             assert!(p.iter().all(|&x| x < k));
+        });
+    }
+
+    #[test]
+    fn prop_sfc_weighted_uses_every_part_when_n_geq_k() {
+        // a heavy head followed by near-zero weights used to leave the
+        // trailing parts empty; the forced tail split guarantees a
+        // total surjection onto 0..k whenever there are enough vertices
+        check("sfc weighted surjective", 24, |g| {
+            let n = g.usize_in(2, 120);
+            let k = g.usize_in(1, n);
+            let order: Vec<usize> = (0..n).collect();
+            let mut w = g.vec_f64(n, 0.0, 1.0);
+            if g.bool() {
+                w[0] = 1e6; // adversarial heavy head
+            }
+            let p = sfc_weighted(&order, &w, k);
+            let mut used = vec![false; k];
+            for &x in &p {
+                used[x] = true;
+            }
+            assert!(used.iter().all(|&u| u), "empty part: {p:?}");
         });
     }
 

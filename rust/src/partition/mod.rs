@@ -14,7 +14,7 @@ pub mod multilevel;
 
 pub use baselines::{sfc_equal_count, sfc_weighted, uniform_block};
 pub use graph::Graph;
-pub use multilevel::{partition, MultilevelOptions};
+pub use multilevel::{partition, refine_from, MultilevelOptions};
 
 use crate::model::{CommEstimator, WorkEstimator};
 use crate::quadtree::{Quadtree, TreeCut};
@@ -76,6 +76,29 @@ impl Assignment {
     pub fn min_max_ratio(&self) -> f64 {
         self.graph.min_max_ratio(&self.part, self.ranks)
     }
+
+    /// Re-weight the §5 graph **in place** with Eq. 15 work over the
+    /// current (moved) tree — the adjacency depends only on the cut
+    /// and is left untouched — and return the predicted LB(P) min/max
+    /// ratio of this assignment under the new weights.  The dynamic
+    /// driver calls this every step; a repartition only follows when
+    /// the returned ratio crosses the rebalance threshold.
+    pub fn reweigh(&mut self, tree: &Quadtree, cut: &TreeCut,
+                   terms: usize) -> f64 {
+        self.graph.vwgt =
+            WorkEstimator::new(terms).all_subtree_work(tree, cut);
+        self.min_max_ratio()
+    }
+
+    /// Warm-start repartition: refine this assignment's part vector
+    /// against its (re-weighted) graph via [`refine_from`], marking
+    /// the result as the optimized family.
+    pub fn refine_in_place(&mut self, seed: u64) {
+        let opts = MultilevelOptions { seed, ..Default::default() };
+        self.part =
+            refine_from(&self.graph, self.ranks, &self.part, &opts);
+        self.strategy = Strategy::Optimized;
+    }
 }
 
 /// Build the §5 weighted graph for a tree + cut and partition it.
@@ -109,6 +132,7 @@ pub fn assign_subtrees(
     };
     Assignment { strategy, ranks, part, graph }
 }
+
 
 #[cfg(test)]
 mod tests {

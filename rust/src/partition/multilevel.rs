@@ -10,6 +10,7 @@
 //!    applying boundary Kernighan–Lin/Fiduccia–Mattheyses moves at every
 //!    level (best-gain vertex moves subject to a balance constraint).
 
+use super::baselines::sfc_weighted;
 use super::graph::Graph;
 use crate::util::SplitMix64;
 
@@ -25,6 +26,10 @@ pub struct MultilevelOptions {
     pub refine_passes: usize,
     /// RNG seed (tie-breaking in matching/growing)
     pub seed: u64,
+    /// min/max part-weight ratio the warm-start refinement
+    /// ([`refine_from`]) drives toward — the paper's LB(P) target for
+    /// the dynamic rebalance loop
+    pub min_max_target: f64,
 }
 
 impl Default for MultilevelOptions {
@@ -34,6 +39,7 @@ impl Default for MultilevelOptions {
             balance_tol: 1.05,
             refine_passes: 6,
             seed: 0x5EED,
+            min_max_target: 0.95,
         }
     }
 }
@@ -85,7 +91,120 @@ pub fn partition(graph: &Graph, k: usize, opts: &MultilevelOptions)
     balance(graph, &mut part, k, opts);
     refine(graph, &mut part, k, opts);
     ensure_nonempty(graph, &mut part, k);
+
+    // quality guard: the multilevel result must never be *dominated* by
+    // the cheap sfc-weighted baseline (strictly worse on both edge-cut
+    // and min/max balance for the same input) — in z-order subtree
+    // graphs the identity vertex order is the space-filling curve, so
+    // the baseline is one pass; fall back to it outright when the
+    // heuristic pipeline lands in a dominated corner
+    let order: Vec<usize> = (0..n).collect();
+    let sfcw = sfc_weighted(&order, &graph.vwgt, k);
+    let worse_cut = graph.edge_cut(&part) > graph.edge_cut(&sfcw);
+    let worse_bal =
+        graph.min_max_ratio(&part, k) < graph.min_max_ratio(&sfcw, k);
+    if worse_cut && worse_bal {
+        return sfcw;
+    }
     part
+}
+
+/// Warm-start k-way refinement (the dynamic rebalance of the paper's
+/// title): repair an existing assignment against a **re-weighted** graph
+/// without re-running the full coarsen/grow/uncoarsen pipeline.  The
+/// time-stepping driver calls this when the Eq. 15 work model predicts
+/// imbalance after particle motion — the previous assignment is a good
+/// starting point because only the weights drifted, so a balance + FM +
+/// min-raise pass converges in a handful of moves.
+///
+/// The final `raise_min` pass drives the min/max part-weight ratio
+/// (the paper's LB(P) on modeled work) toward
+/// [`MultilevelOptions::min_max_target`], which is what lets a run that
+/// starts from a uniform assignment on a clustered workload recover to
+/// LB ≥ 0.9 after one model-driven repartition.
+pub fn refine_from(graph: &Graph, k: usize, warm: &[usize],
+                   opts: &MultilevelOptions) -> Vec<usize> {
+    assert_eq!(warm.len(), graph.n(), "warm assignment length");
+    let n = graph.n();
+    if k == 1 || n <= 1 {
+        return vec![0; n];
+    }
+    if k >= n {
+        return (0..n).collect();
+    }
+    // clamp stray part ids (e.g. a warm start produced for more ranks)
+    let mut part: Vec<usize> =
+        warm.iter().map(|&p| p.min(k - 1)).collect();
+    ensure_nonempty(graph, &mut part, k);
+    let start = part.clone();
+    balance(graph, &mut part, k, opts);
+    refine(graph, &mut part, k, opts);
+    raise_min(graph, &mut part, k, opts.min_max_target);
+    // monotone-balance contract: the refined result is never less
+    // balanced than the warm start itself (a degenerate FM round must
+    // not hand the dynamic loop a worse LB than doing nothing); fall
+    // back to raise_min alone, which improves min/max monotonically
+    if graph.min_max_ratio(&part, k) < graph.min_max_ratio(&start, k) {
+        part = start;
+        raise_min(graph, &mut part, k, opts.min_max_target);
+    }
+    part
+}
+
+/// Greedy min/max-ratio repair: while the lightest part is below
+/// `target` × the heaviest, move one heavy-part vertex that fits in the
+/// gap (strict improvement on both endpoints) to the lightest part,
+/// preferring the best connectivity score so the edge-cut damage is
+/// minimal.  Runs last so no later pass can trade balance away again.
+fn raise_min(g: &Graph, part: &mut [usize], k: usize, target: f64) {
+    let n = g.n();
+    if k < 2 || k > n {
+        return;
+    }
+    let mut weights = g.part_weights(part, k);
+    let mut counts = vec![0usize; k];
+    for &p in part.iter() {
+        counts[p] += 1;
+    }
+    for _ in 0..(4 * n) {
+        let heavy = (0..k)
+            .max_by(|&a, &b| weights[a].partial_cmp(&weights[b]).unwrap())
+            .unwrap();
+        let light = (0..k)
+            .min_by(|&a, &b| weights[a].partial_cmp(&weights[b]).unwrap())
+            .unwrap();
+        if weights[light] >= target * weights[heavy]
+            || counts[heavy] <= 1
+        {
+            break;
+        }
+        let gap = weights[heavy] - weights[light];
+        // strictly-inside-the-gap moves leave both endpoints between
+        // the old min and max, so the ratio improves monotonically
+        let mut best: Option<(usize, f64)> = None;
+        for v in 0..n {
+            if part[v] != heavy || g.vwgt[v] >= gap {
+                continue;
+            }
+            let mut score = 0.0;
+            for &(u, ew) in &g.adj[v] {
+                if part[u] == light {
+                    score += ew;
+                } else if part[u] == heavy {
+                    score -= ew;
+                }
+            }
+            if best.map_or(true, |(_, bs)| score > bs) {
+                best = Some((v, score));
+            }
+        }
+        let Some((v, _)) = best else { break };
+        weights[heavy] -= g.vwgt[v];
+        weights[light] += g.vwgt[v];
+        counts[heavy] -= 1;
+        counts[light] += 1;
+        part[v] = light;
+    }
 }
 
 /// Explicit balance pass: repeatedly move the best vertex from the
@@ -473,6 +592,86 @@ mod tests {
         let g = Graph::new(vec![1.0; 3]);
         let p = partition(&g, 8, &Default::default());
         assert_eq!(p, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn prop_refine_from_is_total_nonempty_and_hits_the_target_band() {
+        check("warm refinement valid", 24, |g| {
+            let n = g.usize_in(8, 150);
+            let k = g.usize_in(2, 8.min(n));
+            let gr = random_graph(g, n, n);
+            // adversarial warm start: everything piled on one part
+            let warm = vec![0usize; n];
+            let part = refine_from(&gr, k, &warm, &Default::default());
+            assert_eq!(part.len(), n);
+            let mut counts = vec![0usize; k];
+            for &p in &part {
+                assert!(p < k);
+                counts[p] += 1;
+            }
+            assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+        });
+    }
+
+    #[test]
+    fn refine_from_recovers_balance_after_weight_drift() {
+        // a partition that was balanced for the old weights, re-weighted
+        // so one part became heavy: warm refinement must restore the
+        // min/max ratio close to the target without a cold repartition
+        let n = 64;
+        let mut g = Graph::new(vec![1.0; n]);
+        for i in 1..n {
+            g.add_edge(i - 1, i, 1.0);
+        }
+        let opts = MultilevelOptions::default();
+        let warm = partition(&g, 4, &opts);
+        assert!(g.min_max_ratio(&warm, 4) > 0.9);
+        // drift: part of the chain triples in weight
+        let mut heavy = g.clone();
+        for v in 0..(n / 4) {
+            heavy.vwgt[v] = 3.0;
+        }
+        let drifted = heavy.min_max_ratio(&warm, 4);
+        let refined = refine_from(&heavy, 4, &warm, &opts);
+        let repaired = heavy.min_max_ratio(&refined, 4);
+        assert!(
+            repaired > drifted && repaired >= 0.9,
+            "drifted {drifted} -> repaired {repaired}"
+        );
+    }
+
+    #[test]
+    fn refine_from_trivial_cases() {
+        let g = Graph::new(vec![1.0; 3]);
+        let opts = MultilevelOptions::default();
+        assert_eq!(refine_from(&g, 1, &[0, 0, 0], &opts), vec![0; 3]);
+        assert_eq!(refine_from(&g, 8, &[0, 0, 0], &opts), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn prop_never_dominated_by_sfc_weighted() {
+        // the partition() quality guard: for any input, the multilevel
+        // result is not strictly worse than the identity-order
+        // sfc-weighted baseline on *both* edge-cut and min/max ratio
+        check("ml not dominated by sfcw", 24, |g| {
+            let n = g.usize_in(4, 120);
+            let k = g.usize_in(2, 8.min(n - 1));
+            let gr = random_graph(g, n, 2 * n);
+            let part = partition(&gr, k, &Default::default());
+            let order: Vec<usize> = (0..n).collect();
+            let sfcw = sfc_weighted(&order, &gr.vwgt, k);
+            let worse_cut = gr.edge_cut(&part) > gr.edge_cut(&sfcw);
+            let worse_bal = gr.min_max_ratio(&part, k)
+                < gr.min_max_ratio(&sfcw, k);
+            assert!(
+                !(worse_cut && worse_bal),
+                "dominated: cut {} vs {}, min/max {} vs {}",
+                gr.edge_cut(&part),
+                gr.edge_cut(&sfcw),
+                gr.min_max_ratio(&part, k),
+                gr.min_max_ratio(&sfcw, k)
+            );
+        });
     }
 
     #[test]

@@ -98,61 +98,90 @@ pub struct Quadtree {
     pub leaf_offsets: Vec<u32>,
 }
 
+/// Reusable scratch for [`Quadtree::rebuild_into`]: the Morton-key sort
+/// buffer survives across time steps, so once its capacity has grown to
+/// the workload size the per-step rebuild allocates nothing.
+#[derive(Clone, Debug, Default)]
+pub struct RebuildScratch {
+    keyed: Vec<(u64, u32)>,
+}
+
 impl Quadtree {
     /// Bin `particles` into a level-`levels` quadtree over `domain`,
     /// sorting them once into Morton leaf order (see the struct docs).
     pub fn build(domain: Domain, levels: u8, particles: Vec<Particle>)
         -> Quadtree {
-        let n = particles.len();
-        let mut keyed: Vec<(u64, u32)> = particles
-            .iter()
-            .enumerate()
-            .map(|(i, p)| {
-                (domain.locate(levels, p[0], p[1]).morton(), i as u32)
-            })
-            .collect();
-        // stable: ties (same leaf) keep ascending input order, which is
-        // what makes every per-leaf accumulation order identical to the
-        // seed HashMap<leaf, Vec<index>> path
-        keyed.sort_by_key(|&(m, _)| m);
-
-        let mut xs = Vec::with_capacity(n);
-        let mut ys = Vec::with_capacity(n);
-        let mut gammas = Vec::with_capacity(n);
-        let mut perm = Vec::with_capacity(n);
-        let mut inv_perm = vec![0u32; n];
-        let mut occupied: Vec<BoxId> = Vec::new();
-        let mut leaf_offsets: Vec<u32> = vec![0];
-        let mut prev: Option<u64> = None;
-        for (pos, &(m, i)) in keyed.iter().enumerate() {
-            if prev != Some(m) {
-                if prev.is_some() {
-                    leaf_offsets.push(pos as u32);
-                }
-                occupied.push(BoxId::from_morton(levels, m));
-                prev = Some(m);
-            }
-            let p = particles[i as usize];
-            xs.push(p[0]);
-            ys.push(p[1]);
-            gammas.push(p[2]);
-            perm.push(i);
-            inv_perm[i as usize] = pos as u32;
-        }
-        if !occupied.is_empty() {
-            leaf_offsets.push(n as u32);
-        }
-        Quadtree {
+        let mut tree = Quadtree {
             domain,
             levels,
-            particles,
-            xs,
-            ys,
-            gammas,
-            perm,
-            inv_perm,
-            occupied_leaves: occupied,
-            leaf_offsets,
+            particles: Vec::new(),
+            xs: Vec::new(),
+            ys: Vec::new(),
+            gammas: Vec::new(),
+            perm: Vec::new(),
+            inv_perm: Vec::new(),
+            occupied_leaves: Vec::new(),
+            leaf_offsets: Vec::new(),
+        };
+        tree.rebuild_into(&mut RebuildScratch::default(), particles);
+        tree
+    }
+
+    /// Re-bin `particles` into this tree **in place** (DESIGN.md §11):
+    /// identical output to [`Quadtree::build`] over the same domain and
+    /// depth — same Morton order, same `perm`/`inv_perm`, same CSR —
+    /// but every field reuses its existing allocation.  The dynamic
+    /// time-stepper convects `self.particles` (taken by value), hands
+    /// the same buffer back here, and the per-step hot loop becomes
+    /// allocation-steady once capacities have grown to the workload
+    /// size.  Particles convected outside the domain bin into the
+    /// boundary boxes (`Domain::locate` clamps).
+    pub fn rebuild_into(&mut self, scratch: &mut RebuildScratch,
+                        particles: Vec<Particle>) {
+        let n = particles.len();
+        scratch.keyed.clear();
+        scratch.keyed.extend(particles.iter().enumerate().map(|(i, p)| {
+            (self.domain.locate(self.levels, p[0], p[1]).morton(),
+             i as u32)
+        }));
+        // unstable sort on the (morton, input index) pair is exactly the
+        // stable morton-only sort of the one-shot build path (the index
+        // tiebreak reproduces stability), without the stable sort's
+        // internal merge allocation
+        scratch.keyed.sort_unstable();
+
+        self.particles = particles;
+        self.xs.clear();
+        self.ys.clear();
+        self.gammas.clear();
+        self.perm.clear();
+        self.inv_perm.clear();
+        self.inv_perm.resize(n, 0);
+        self.occupied_leaves.clear();
+        self.leaf_offsets.clear();
+        self.leaf_offsets.push(0);
+        let mut prev: Option<u64> = None;
+        for (pos, &(m, i)) in scratch.keyed.iter().enumerate() {
+            if prev != Some(m) {
+                if prev.is_some() {
+                    self.leaf_offsets.push(pos as u32);
+                }
+                self.occupied_leaves
+                    .push(BoxId::from_morton(self.levels, m));
+                prev = Some(m);
+            }
+            let p = self.particles[i as usize];
+            self.xs.push(p[0]);
+            self.ys.push(p[1]);
+            self.gammas.push(p[2]);
+            self.perm.push(i);
+            self.inv_perm[i as usize] = pos as u32;
+        }
+        if self.occupied_leaves.is_empty() {
+            // empty tree: leaf_offsets stays the single [0] sentinel
+            debug_assert_eq!(self.leaf_offsets, &[0]);
+        } else {
+            self.leaf_offsets.push(n as u32);
         }
     }
 
@@ -424,6 +453,79 @@ mod tests {
         let t = Quadtree::build(Domain::UNIT, 3, vec![[1.0, 1.0, 1.0]]);
         assert_eq!(t.occupied_leaves.len(), 1);
         assert_eq!(t.occupied_leaves[0], BoxId::new(3, 7, 7));
+    }
+
+    fn assert_trees_identical(a: &Quadtree, b: &Quadtree) {
+        assert_eq!(a.particles, b.particles);
+        assert_eq!(a.xs, b.xs);
+        assert_eq!(a.ys, b.ys);
+        assert_eq!(a.gammas, b.gammas);
+        assert_eq!(a.perm, b.perm);
+        assert_eq!(a.inv_perm, b.inv_perm);
+        assert_eq!(a.occupied_leaves, b.occupied_leaves);
+        assert_eq!(a.leaf_offsets, b.leaf_offsets);
+    }
+
+    #[test]
+    fn prop_rebuild_into_matches_build_bitwise() {
+        // the in-place rebuild is field-for-field identical to a cold
+        // build over the same (moved) particle set
+        check("rebuild == build", 24, |g| {
+            let n = g.usize_in(0, 400);
+            let parts = g.particles(n);
+            let mut tree = tree_from(g, 150, 4);
+            let mut scratch = RebuildScratch::default();
+            tree.rebuild_into(&mut scratch, parts.clone());
+            let fresh = Quadtree::build(Domain::UNIT, 4, parts);
+            assert_trees_identical(&tree, &fresh);
+        });
+    }
+
+    #[test]
+    fn rebuild_into_is_allocation_steady() {
+        // warm rebuilds with an unchanged particle count reuse every
+        // buffer: clear+extend within capacity never reallocates, so
+        // the SoA base pointers must be stable across steps
+        let mut g = Gen::new(42);
+        let parts = g.particles(300);
+        let mut tree = Quadtree::build(Domain::UNIT, 4, parts);
+        let mut scratch = RebuildScratch::default();
+        // warm the scratch once
+        let moved = std::mem::take(&mut tree.particles);
+        tree.rebuild_into(&mut scratch, moved);
+        let (xs_ptr, perm_ptr, parts_ptr) = (
+            tree.xs.as_ptr(),
+            tree.perm.as_ptr(),
+            tree.particles.as_ptr(),
+        );
+        for step in 0..3 {
+            // convect in place (the dynamic loop's access pattern) and
+            // hand the same buffer back
+            let mut moved = std::mem::take(&mut tree.particles);
+            for p in &mut moved {
+                p[0] = (p[0] + 0.01 * (step + 1) as f64).fract().abs();
+                p[1] = (p[1] + 0.007).fract().abs();
+            }
+            tree.rebuild_into(&mut scratch, moved);
+            assert_eq!(tree.xs.as_ptr(), xs_ptr);
+            assert_eq!(tree.perm.as_ptr(), perm_ptr);
+            assert_eq!(tree.particles.as_ptr(), parts_ptr);
+        }
+    }
+
+    #[test]
+    fn rebuild_into_handles_shrinking_and_growing_sets() {
+        let mut g = Gen::new(7);
+        let mut tree = Quadtree::build(Domain::UNIT, 3, g.particles(200));
+        let mut scratch = RebuildScratch::default();
+        for n in [350usize, 40, 0, 90] {
+            let parts = g.particles(n);
+            tree.rebuild_into(&mut scratch, parts.clone());
+            assert_trees_identical(
+                &tree,
+                &Quadtree::build(Domain::UNIT, 3, parts),
+            );
+        }
     }
 
     #[test]

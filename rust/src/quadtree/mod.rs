@@ -8,7 +8,7 @@ pub mod morton;
 pub mod neighbors;
 pub mod node;
 
-pub use build::{Domain, Particle, Quadtree};
+pub use build::{Domain, Particle, Quadtree, RebuildScratch};
 pub use cut::{Adjacency, TreeCut};
 pub use neighbors::{box_offset, interaction_list, near_domain, neighbors,
                     well_separated_offsets};

@@ -65,10 +65,66 @@ pub struct ParallelPlan {
     pub m2l_offsets: Vec<Vec<(i32, i32)>>,
 }
 
+/// Clear a two-level list-of-lists and resize it to `n` outer entries,
+/// keeping every surviving inner allocation.
+fn reset2<T>(v: &mut Vec<Vec<T>>, n: usize) {
+    v.truncate(n);
+    for inner in v.iter_mut() {
+        inner.clear();
+    }
+    while v.len() < n {
+        v.push(Vec::new());
+    }
+}
+
+/// Same for a three-level nest with `n` outer and `m` middle entries.
+fn reset3<T>(v: &mut Vec<Vec<Vec<T>>>, n: usize, m: usize) {
+    v.truncate(n);
+    for mid in v.iter_mut() {
+        reset2(mid, m);
+    }
+    while v.len() < n {
+        // no vec![_; m]: that would demand T: Clone for Vec<T> clones
+        let mut mid = Vec::with_capacity(m);
+        mid.resize_with(m, Vec::new);
+        v.push(mid);
+    }
+}
+
 impl ParallelPlan {
     /// Derive the full plan.
     pub fn build(tree: &Quadtree, cut: &TreeCut, assignment: &Assignment)
         -> ParallelPlan {
+        let mut plan = ParallelPlan {
+            ranks: 0,
+            leaves: Vec::new(),
+            m2m_children: Vec::new(),
+            m2l_pairs: Vec::new(),
+            l2l_children: Vec::new(),
+            p2p_pairs: Vec::new(),
+            root_m2m_children: Vec::new(),
+            root_m2l_pairs: Vec::new(),
+            root_l2l_children: Vec::new(),
+            rank_particles: Vec::new(),
+            reduce_blocks: Vec::new(),
+            scatter_blocks: Vec::new(),
+            m2l_exchange_blocks: BTreeMap::new(),
+            halo_particles: BTreeMap::new(),
+            m2l_offsets: Vec::new(),
+        };
+        plan.rebuild_into(tree, cut, assignment);
+        plan
+    }
+
+    /// Refresh the plan **in place** from (tree, cut, assignment),
+    /// reusing the per-rank / per-level task vectors' allocations
+    /// (DESIGN.md §11).  Identical output to [`ParallelPlan::build`];
+    /// the dynamic time-stepper calls this once per step after the tree
+    /// rebuild and any warm repartition, so the schedule derivation
+    /// stops being a build-once value and becomes reusable mutable
+    /// state alongside the tree and the assignment.
+    pub fn rebuild_into(&mut self, tree: &Quadtree, cut: &TreeCut,
+                        assignment: &Assignment) {
         let ranks = assignment.ranks;
         let levels = tree.levels;
         let k = cut.cut_level;
@@ -86,128 +142,132 @@ impl ParallelPlan {
         let owner = |b: &BoxId| owner_of(cut, assignment, b);
 
         // ---- per-rank leaves & particles ----
-        let mut leaves = vec![Vec::new(); ranks];
-        let mut rank_particles = vec![0usize; ranks];
+        self.ranks = ranks;
+        reset2(&mut self.leaves, ranks);
+        self.rank_particles.clear();
+        self.rank_particles.resize(ranks, 0);
         for leaf in &tree.occupied_leaves {
             let r = owner(leaf);
-            leaves[r].push(*leaf);
-            rank_particles[r] += tree.leaf_len(leaf);
+            self.leaves[r].push(*leaf);
+            self.rank_particles[r] += tree.leaf_len(leaf);
         }
 
         // ---- upward: M2M children per rank per level ----
         // local levels: children at lvl in (k+1 ..= L), shifted into
         // lvl-1; Morton iteration keeps sibling accumulation order equal
         // to the serial sweep
-        let mut m2m_children =
-            vec![vec![Vec::new(); (levels - k) as usize]; ranks];
+        let nlv = (levels - k) as usize;
+        reset3(&mut self.m2m_children, ranks, nlv);
         for lvl in (k + 1)..=levels {
             for b in &occ_lists[lvl as usize] {
                 let r = owner(b);
-                m2m_children[r][(lvl - k - 1) as usize].push(*b);
+                self.m2m_children[r][(lvl - k - 1) as usize].push(*b);
             }
         }
 
         // ---- downward: M2L pairs + L2L children per rank per level ----
-        let nlv = (levels - k) as usize;
-        let mut m2l_pairs = vec![vec![Vec::new(); nlv]; ranks];
-        let mut l2l_children = vec![vec![Vec::new(); nlv]; ranks];
+        reset3(&mut self.m2l_pairs, ranks, nlv);
+        reset3(&mut self.l2l_children, ranks, nlv);
         for lvl in (k + 1)..=levels {
             let li = (lvl - k - 1) as usize;
             for tgt in &occ_lists[lvl as usize] {
                 let r = owner(tgt);
                 for src in interaction_list(tgt) {
                     if occ_sets[lvl as usize].contains(&src) {
-                        m2l_pairs[r][li].push((*tgt, src));
+                        self.m2l_pairs[r][li].push((*tgt, src));
                     }
                 }
-                l2l_children[r][li].push(*tgt);
+                self.l2l_children[r][li].push(*tgt);
             }
         }
 
         // ---- near field: P2P pairs per rank ----
-        let mut p2p_pairs = vec![Vec::new(); ranks];
+        reset2(&mut self.p2p_pairs, ranks);
         for tgt in &tree.occupied_leaves {
             let r = owner(tgt);
             for src in near_domain(tgt) {
                 if tree.leaf_len(&src) > 0 {
-                    p2p_pairs[r].push((*tgt, src));
+                    self.p2p_pairs[r].push((*tgt, src));
                 }
             }
         }
 
         // ---- root tree (leader, rank 0) ----
-        let mut root_m2m_children = Vec::new();
-        for lvl in (3..=k).rev() {
-            root_m2m_children.push(occ_lists[lvl as usize].clone());
+        let n_root_m2m = (3..=k).len();
+        reset2(&mut self.root_m2m_children, n_root_m2m);
+        for (i, lvl) in (3..=k).rev().enumerate() {
+            self.root_m2m_children[i]
+                .extend_from_slice(&occ_lists[lvl as usize]);
         }
-        let mut root_m2l_pairs = Vec::new();
-        for lvl in 2..=k {
-            let mut pairs = Vec::new();
+        reset2(&mut self.root_m2l_pairs, (2..=k).len());
+        for (i, lvl) in (2..=k).enumerate() {
             for tgt in &occ_lists[lvl as usize] {
                 for src in interaction_list(tgt) {
                     if occ_sets[lvl as usize].contains(&src) {
-                        pairs.push((*tgt, src));
+                        self.root_m2l_pairs[i].push((*tgt, src));
                     }
                 }
             }
-            root_m2l_pairs.push(pairs);
         }
-        let mut root_l2l_children = Vec::new();
-        for lvl in 3..=k {
-            root_l2l_children.push(occ_lists[lvl as usize].clone());
+        reset2(&mut self.root_l2l_children, n_root_m2m);
+        for (i, lvl) in (3..=k).enumerate() {
+            self.root_l2l_children[i]
+                .extend_from_slice(&occ_lists[lvl as usize]);
         }
 
         // ---- communication volumes ----
         // upward reduce: every rank sends the ME of each owned occupied
         // subtree root to the leader
-        let mut reduce_blocks = vec![0usize; ranks];
-        let mut scatter_blocks = vec![0usize; ranks];
+        self.reduce_blocks.clear();
+        self.reduce_blocks.resize(ranks, 0);
+        self.scatter_blocks.clear();
+        self.scatter_blocks.resize(ranks, 0);
         for st in &cut.subtrees {
             if !occ_sets[k as usize].contains(st) {
                 continue;
             }
             let r = assignment.part[cut.subtree_index(st)];
             if r != 0 {
-                reduce_blocks[r] += 1;
-                scatter_blocks[r] += 1; // leader sends the LE back
+                self.reduce_blocks[r] += 1;
+                self.scatter_blocks[r] += 1; // leader sends the LE back
             }
         }
 
         // M2L exchange: interaction overlap restricted to occupied boxes
         let il_overlap = interaction_overlap(tree, cut, assignment);
-        let mut m2l_exchange_blocks = BTreeMap::new();
+        self.m2l_exchange_blocks.clear();
         for ((from, to), boxes) in &il_overlap.sends {
             let n = boxes
                 .iter()
                 .filter(|b| occ_sets[b.level as usize].contains(b))
                 .count();
             if n > 0 {
-                m2l_exchange_blocks.insert((*from, *to), n);
+                self.m2l_exchange_blocks.insert((*from, *to), n);
             }
         }
 
         // P2P halo: neighbor overlap weighted by actual particle counts
         let nb_overlap = neighbor_overlap(tree, cut, assignment);
-        let mut halo_particles = BTreeMap::new();
+        self.halo_particles.clear();
         for ((from, to), boxes) in &nb_overlap.sends {
             let n: usize = boxes
                 .iter()
                 .map(|b| tree.leaf_len(b))
                 .sum();
             if n > 0 {
-                halo_particles.insert((*from, *to), n);
+                self.halo_particles.insert((*from, *to), n);
             }
         }
 
         // ---- per-level translation-operator census (DESIGN.md §8) ----
         let mut offset_sets: Vec<BTreeSet<(i32, i32)>> =
             vec![BTreeSet::new(); levels as usize + 1];
-        for (li, pairs) in root_m2l_pairs.iter().enumerate() {
+        for (li, pairs) in self.root_m2l_pairs.iter().enumerate() {
             for (tgt, src) in pairs {
                 offset_sets[li + 2].insert(box_offset(tgt, src));
             }
         }
-        for rank_pairs in &m2l_pairs {
+        for rank_pairs in &self.m2l_pairs {
             for (li, pairs) in rank_pairs.iter().enumerate() {
                 for (tgt, src) in pairs {
                     offset_sets[k as usize + 1 + li]
@@ -215,27 +275,9 @@ impl ParallelPlan {
                 }
             }
         }
-        let m2l_offsets: Vec<Vec<(i32, i32)>> = offset_sets
-            .into_iter()
-            .map(|s| s.into_iter().collect())
-            .collect();
-
-        ParallelPlan {
-            ranks,
-            leaves,
-            m2m_children,
-            m2l_pairs,
-            l2l_children,
-            p2p_pairs,
-            root_m2m_children,
-            root_m2l_pairs,
-            root_l2l_children,
-            rank_particles,
-            reduce_blocks,
-            scatter_blocks,
-            m2l_exchange_blocks,
-            halo_particles,
-            m2l_offsets,
+        reset2(&mut self.m2l_offsets, levels as usize + 1);
+        for (lvl, s) in offset_sets.into_iter().enumerate() {
+            self.m2l_offsets[lvl].extend(s);
         }
     }
 
@@ -315,6 +357,38 @@ mod tests {
             }
             let _ = cut;
             assert_eq!(plan_pairs, serial_pairs);
+        });
+    }
+
+    #[test]
+    fn prop_rebuild_into_matches_build_for_new_state() {
+        // a plan refreshed in place against a different tree and a
+        // different assignment (even a different rank count) is
+        // task-for-task identical to a cold build
+        check("plan rebuild == build", 6, |g| {
+            let (_, cut, _, mut plan) = build(g, 300, 4, 2, 4);
+            let parts2 = g.particles(250);
+            let tree2 = Quadtree::build(Domain::UNIT, 4, parts2);
+            let a2 = assign_subtrees(&tree2, &cut, 5, 3,
+                                     Strategy::SfcWeighted, g.seed);
+            plan.rebuild_into(&tree2, &cut, &a2);
+            let fresh = ParallelPlan::build(&tree2, &cut, &a2);
+            assert_eq!(plan.ranks, fresh.ranks);
+            assert_eq!(plan.leaves, fresh.leaves);
+            assert_eq!(plan.m2m_children, fresh.m2m_children);
+            assert_eq!(plan.m2l_pairs, fresh.m2l_pairs);
+            assert_eq!(plan.l2l_children, fresh.l2l_children);
+            assert_eq!(plan.p2p_pairs, fresh.p2p_pairs);
+            assert_eq!(plan.root_m2m_children, fresh.root_m2m_children);
+            assert_eq!(plan.root_m2l_pairs, fresh.root_m2l_pairs);
+            assert_eq!(plan.root_l2l_children, fresh.root_l2l_children);
+            assert_eq!(plan.rank_particles, fresh.rank_particles);
+            assert_eq!(plan.reduce_blocks, fresh.reduce_blocks);
+            assert_eq!(plan.scatter_blocks, fresh.scatter_blocks);
+            assert_eq!(plan.m2l_exchange_blocks,
+                       fresh.m2l_exchange_blocks);
+            assert_eq!(plan.halo_particles, fresh.halo_particles);
+            assert_eq!(plan.m2l_offsets, fresh.m2l_offsets);
         });
     }
 

@@ -38,6 +38,26 @@ pub fn max_abs_error(a: &[[f64; 2]], b: &[[f64; 2]]) -> f64 {
         .fold(0.0, f64::max)
 }
 
+/// Order-sensitive FNV-1a digest of a particle set's exact bit patterns
+/// (positions *and* strengths, `f64::to_bits`, little-endian byte
+/// order) — the golden-trajectory pin of the dynamic loop: two runs
+/// whose digests agree moved every particle through bitwise-identical
+/// positions.
+pub fn position_digest(parts: &[[f64; 3]]) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    for p in parts {
+        for v in p {
+            for byte in v.to_bits().to_le_bytes() {
+                h ^= byte as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        }
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -60,5 +80,23 @@ mod tests {
         let a = vec![[0.0, 0.0], [0.0, 5.0]];
         let b = vec![[0.1, 0.0], [0.0, 0.0]];
         assert!((max_abs_error(&a, &b) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn position_digest_is_order_and_bit_sensitive() {
+        let a = vec![[0.1, 0.2, 1.0], [0.3, 0.4, -1.0]];
+        let mut b = a.clone();
+        assert_eq!(position_digest(&a), position_digest(&b));
+        b.swap(0, 1); // order matters
+        assert_ne!(position_digest(&a), position_digest(&b));
+        let mut c = a.clone();
+        c[0][0] = f64::from_bits(c[0][0].to_bits() ^ 1); // 1 ulp
+        assert_ne!(position_digest(&a), position_digest(&c));
+        // -0.0 and +0.0 compare equal but are different trajectories
+        assert_ne!(
+            position_digest(&[[0.0, 0.0, 0.0]]),
+            position_digest(&[[-0.0, 0.0, 0.0]])
+        );
+        assert_eq!(position_digest(&[]), 0xcbf2_9ce4_8422_2325);
     }
 }

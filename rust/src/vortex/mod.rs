@@ -9,4 +9,4 @@ pub mod lamb_oseen;
 pub mod timestep;
 
 pub use lamb_oseen::{lamb_oseen_lattice, LambOseen};
-pub use timestep::{convect, convect_permuted, convect_rk2};
+pub use timestep::{convect, convect_permuted, convect_rk2, Integrator};

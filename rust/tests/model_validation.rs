@@ -1,0 +1,188 @@
+//! Work-model validation (§5.2): the `WorkEstimator`'s per-subtree
+//! predictions must track what a real solve actually executes.
+//!
+//! A three-blob workload is placed so that a `UniformBlock` assignment
+//! at cut level 2 gives rank 0 a 900-particle blob, rank 1 a
+//! 450-particle blob and rank 2 a 100-particle blob.  A simulated
+//! 3-rank solve then provides (a) aggregate `OpCounts` that must equal
+//! the schedule plan's task totals exactly (the plan *is* what ran),
+//! and (b) per-rank executed-operation tallies whose Eq. 13/14-weighted
+//! sum must rank the three ranks in the same order as the a-priori
+//! model — the quantity the dynamic rebalancer trusts.
+
+use petfmm::config::RunConfig;
+use petfmm::coordinator::{FmmSolver, RunMode};
+use petfmm::model::WorkEstimator;
+use petfmm::partition::Strategy;
+use petfmm::proptest::Gen;
+use petfmm::quadtree::Particle;
+
+/// Uniformly random particles in a square of half-width `hw` around
+/// (cx, cy) — strengths in [-1, 1].
+fn blob(g: &mut Gen, n: usize, cx: f64, cy: f64, hw: f64)
+    -> Vec<Particle> {
+    (0..n)
+        .map(|_| {
+            [
+                g.f64_in(cx - hw, cx + hw),
+                g.f64_in(cy - hw, cy + hw),
+                g.f64_in(-1.0, 1.0),
+            ]
+        })
+        .collect()
+}
+
+fn argsort(vals: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..vals.len()).collect();
+    idx.sort_by(|&a, &b| vals[a].partial_cmp(&vals[b]).unwrap());
+    idx
+}
+
+#[test]
+fn work_model_rank_order_matches_executed_ops_on_a_3_rank_run() {
+    // blob centers sit strictly inside level-2 boxes whose z-order
+    // indices land in distinct uniform-block thirds of the 16 subtrees:
+    // (0,0) = morton 0 -> rank 0, (2,1) = morton 6 -> rank 1,
+    // (3,3) = morton 15 -> rank 2
+    let mut g = Gen::new(11);
+    let mut parts = blob(&mut g, 900, 0.125, 0.125, 0.1);
+    parts.extend(blob(&mut g, 450, 0.625, 0.375, 0.1));
+    parts.extend(blob(&mut g, 100, 0.875, 0.875, 0.1));
+
+    let cfg = RunConfig {
+        particles: parts.len(),
+        levels: 5,
+        cut_level: 2,
+        terms: 8,
+        sigma: 0.02,
+        ranks: 3,
+        strategy: Strategy::UniformBlock,
+        distribution: "uniform".into(), // ignored: explicit particles
+        par_threads: 1,
+        ..Default::default()
+    };
+    let sol = FmmSolver::from_config(&cfg)
+        .particles(parts)
+        .mode(RunMode::Simulated)
+        .solve()
+        .unwrap();
+    let problem = &sol.problem;
+    let plan = sol.plan.as_ref().expect("simulated solve has a plan");
+    let tree = &problem.tree;
+
+    // the blob placement produced the intended per-rank loads
+    assert_eq!(plan.rank_particles, vec![900, 450, 100]);
+
+    // ---- (a) the plan's task totals ARE the executed op counts ----
+    let rank_m2l: Vec<u64> = (0..3usize)
+        .map(|r| {
+            plan.m2l_pairs[r]
+                .iter()
+                .map(|lv| lv.len() as u64)
+                .sum()
+        })
+        .collect();
+    let root_m2l: u64 =
+        plan.root_m2l_pairs.iter().map(|p| p.len() as u64).sum();
+    assert_eq!(
+        sol.counts.m2l,
+        root_m2l + rank_m2l.iter().sum::<u64>(),
+        "executed M2L ops != plan M2L pairs"
+    );
+    let rank_p2p: Vec<u64> = (0..3usize)
+        .map(|r| {
+            plan.p2p_pairs[r]
+                .iter()
+                .map(|(tgt, src)| {
+                    (tree.leaf_len(tgt) * tree.leaf_len(src)) as u64
+                })
+                .sum()
+        })
+        .collect();
+    assert_eq!(
+        sol.counts.p2p_pairs,
+        rank_p2p.iter().sum::<u64>(),
+        "executed P2P pair interactions != plan near-field recount"
+    );
+
+    // ---- (b) rank ordering: model vs executed-op tally ----
+    let we = WorkEstimator::new(cfg.terms);
+    let predicted = we.per_rank_work(
+        tree,
+        &problem.cut,
+        &problem.assignment.part,
+        3,
+    );
+    // Eq. 13/14-weighted tally of what each rank executed: p² per
+    // translation (M2L + the two sweep halves), 2p per particle for
+    // P2M + L2P, one unit per near-field pair interaction
+    let p2 = (cfg.terms * cfg.terms) as f64;
+    let measured: Vec<f64> = (0..3usize)
+        .map(|r| {
+            let m2m: u64 = plan.m2m_children[r]
+                .iter()
+                .map(|lv| lv.len() as u64)
+                .sum();
+            let l2l: u64 = plan.l2l_children[r]
+                .iter()
+                .map(|lv| lv.len() as u64)
+                .sum();
+            p2 * (rank_m2l[r] + m2m + l2l) as f64
+                + 2.0 * cfg.terms as f64
+                    * (2 * plan.rank_particles[r]) as f64
+                + rank_p2p[r] as f64
+        })
+        .collect();
+    assert_eq!(
+        argsort(&predicted),
+        argsort(&measured),
+        "model ranks the ranks differently than the executed ops: \
+         predicted {predicted:?}, measured {measured:?}"
+    );
+    // the blob asymmetry is the signal: predictions must be clearly
+    // separated, not accidentally tied
+    let ord = argsort(&predicted);
+    assert!(
+        predicted[ord[2]] > 1.1 * predicted[ord[1]]
+            && predicted[ord[1]] > 1.05 * predicted[ord[0]],
+        "predicted loads not separated: {predicted:?}"
+    );
+    // and the heaviest rank is the 900-particle blob's owner
+    assert_eq!(ord[2], 0);
+}
+
+#[test]
+fn predicted_lb_matches_the_assignment_graph_ratio() {
+    // the two LB predictors in the codebase (metrics on per-rank work
+    // vs the assignment graph's min/max) must agree — the dynamic
+    // driver uses the graph form, the tests use the estimator form
+    let mut g = Gen::new(5);
+    let parts = g.clustered_particles(1200, 2);
+    let cfg = RunConfig {
+        particles: parts.len(),
+        levels: 5,
+        cut_level: 2,
+        terms: 8,
+        ranks: 3,
+        strategy: Strategy::UniformBlock,
+        par_threads: 1,
+        ..Default::default()
+    };
+    let sol = FmmSolver::from_config(&cfg)
+        .particles(parts)
+        .solve()
+        .unwrap();
+    let problem = &sol.problem;
+    let we = WorkEstimator::new(cfg.terms);
+    let lb_model = we.predicted_load_balance(
+        &problem.tree,
+        &problem.cut,
+        &problem.assignment.part,
+        3,
+    );
+    let lb_graph = problem.assignment.min_max_ratio();
+    assert!(
+        (lb_model - lb_graph).abs() <= 1e-9,
+        "estimator LB {lb_model} vs assignment-graph LB {lb_graph}"
+    );
+}

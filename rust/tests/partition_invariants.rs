@@ -1,0 +1,162 @@
+//! Partition property suite (§4): structural invariants every strategy
+//! must satisfy on random trees, metric cross-checks against
+//! brute-force recounts, and the multilevel partitioner's quality
+//! guard vs the sfc-weighted baseline.
+
+use petfmm::partition::{assign_subtrees, Assignment, Strategy};
+use petfmm::proptest::{check, Gen};
+use petfmm::quadtree::{Domain, Quadtree, TreeCut};
+
+const ALL_STRATEGIES: [Strategy; 4] = [
+    Strategy::Optimized,
+    Strategy::SfcEqualCount,
+    Strategy::SfcWeighted,
+    Strategy::UniformBlock,
+];
+
+/// Random tree + cut + rank count with subtrees >= ranks (the paper's
+/// "more subtrees than processes" regime).
+fn random_problem(g: &mut Gen) -> (Quadtree, TreeCut, usize) {
+    let levels = g.usize_in(3, 5) as u8;
+    let cut_level = g.usize_in(1, levels as usize - 1) as u8;
+    let n = g.usize_in(50, 600);
+    let parts = if g.bool() {
+        g.particles(n)
+    } else {
+        g.clustered_particles(n, 3)
+    };
+    let tree = Quadtree::build(Domain::UNIT, levels, parts);
+    let cut = TreeCut::new(levels, cut_level);
+    let ranks = g.usize_in(2, cut.n_subtrees().min(8));
+    (tree, cut, ranks)
+}
+
+fn rank_counts(a: &Assignment) -> Vec<usize> {
+    let mut counts = vec![0usize; a.ranks];
+    for &p in &a.part {
+        counts[p] += 1;
+    }
+    counts
+}
+
+#[test]
+fn prop_every_strategy_is_a_total_partition_with_no_empty_rank() {
+    check("total partition, all ranks used", 24, |g| {
+        let (tree, cut, ranks) = random_problem(g);
+        for strat in ALL_STRATEGIES {
+            let a = assign_subtrees(&tree, &cut, 7, ranks, strat,
+                                    g.seed);
+            // total: one rank per subtree, every rank id in range
+            assert_eq!(a.part.len(), cut.n_subtrees(), "{strat:?}");
+            assert!(a.part.iter().all(|&p| p < ranks), "{strat:?}");
+            // surjective: subtrees >= ranks means no rank may idle
+            let counts = rank_counts(&a);
+            assert!(
+                counts.iter().all(|&c| c > 0),
+                "{strat:?} left a rank empty: {counts:?} \
+                 ({} subtrees, {} ranks)",
+                cut.n_subtrees(),
+                ranks
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_edge_cut_and_part_weights_agree_with_brute_force() {
+    check("metrics vs brute force", 16, |g| {
+        let (tree, cut, ranks) = random_problem(g);
+        for strat in ALL_STRATEGIES {
+            let a = assign_subtrees(&tree, &cut, 7, ranks, strat,
+                                    g.seed);
+            let n = a.graph.n();
+            // brute-force cut: walk both directed half-edges, halve
+            let mut double_cut = 0.0;
+            for i in 0..n {
+                for &(j, w) in &a.graph.adj[i] {
+                    if a.part[i] != a.part[j] {
+                        double_cut += w;
+                    }
+                }
+            }
+            let cut_w = a.edge_cut();
+            assert!(
+                (cut_w - double_cut / 2.0).abs()
+                    <= 1e-9 * double_cut.max(1.0),
+                "{strat:?}: edge_cut {cut_w} vs brute {}",
+                double_cut / 2.0
+            );
+            // brute-force weights: per-rank filter-sum
+            let pw = a.graph.part_weights(&a.part, ranks);
+            let mut total = 0.0;
+            for (r, &w) in pw.iter().enumerate() {
+                let brute: f64 = (0..n)
+                    .filter(|&v| a.part[v] == r)
+                    .map(|v| a.graph.vwgt[v])
+                    .sum();
+                assert!((w - brute).abs() <= 1e-9 * brute.max(1.0),
+                        "{strat:?} rank {r}: {w} vs {brute}");
+                total += w;
+            }
+            let vtotal: f64 = a.graph.vwgt.iter().sum();
+            assert!((total - vtotal).abs() <= 1e-9 * vtotal.max(1.0));
+            // min/max ratio is consistent with the weights
+            let max = pw.iter().cloned().fold(f64::MIN, f64::max);
+            let min = pw.iter().cloned().fold(f64::MAX, f64::min);
+            assert!((a.min_max_ratio() - min / max).abs() <= 1e-12);
+        }
+    });
+}
+
+#[test]
+fn prop_multilevel_is_never_dominated_by_sfc_weighted() {
+    // the guard in partition::multilevel: for the same input the
+    // optimized result is never *strictly worse on both* edge-cut and
+    // min/max ratio than the strongest cheap baseline
+    check("optimized not dominated by sfc-weighted", 16, |g| {
+        let (tree, cut, ranks) = random_problem(g);
+        let opt = assign_subtrees(&tree, &cut, 7, ranks,
+                                  Strategy::Optimized, g.seed);
+        let sfcw = assign_subtrees(&tree, &cut, 7, ranks,
+                                   Strategy::SfcWeighted, g.seed);
+        let worse_cut = opt.edge_cut() > sfcw.edge_cut() + 1e-9;
+        let worse_bal =
+            opt.min_max_ratio() < sfcw.min_max_ratio() - 1e-9;
+        assert!(
+            !(worse_cut && worse_bal),
+            "dominated: cut {} vs {}, min/max {} vs {}",
+            opt.edge_cut(),
+            sfcw.edge_cut(),
+            opt.min_max_ratio(),
+            sfcw.min_max_ratio()
+        );
+    });
+}
+
+#[test]
+fn prop_warm_refinement_is_valid_and_not_less_balanced_than_uniform() {
+    // the dynamic loop's repartition path, exercised exactly as
+    // Simulation::step runs it: re-weight the assignment's graph in
+    // place (Assignment::reweigh), then warm-refine from the previous
+    // part vector (Assignment::refine_in_place) — the result must be
+    // a valid partition at least as balanced as the start it refines
+    check("warm refinement valid", 12, |g| {
+        let (tree, cut, ranks) = random_problem(g);
+        let mut a = assign_subtrees(&tree, &cut, 7, ranks,
+                                    Strategy::UniformBlock, g.seed);
+        let lb_before = a.reweigh(&tree, &cut, 7);
+        assert!((lb_before - a.min_max_ratio()).abs() <= 1e-12);
+        a.refine_in_place(g.seed);
+        assert_eq!(a.strategy, Strategy::Optimized);
+        assert_eq!(a.part.len(), cut.n_subtrees());
+        assert!(a.part.iter().all(|&p| p < ranks));
+        let counts = rank_counts(&a);
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+        assert!(
+            a.min_max_ratio() >= lb_before - 1e-9,
+            "refinement worsened balance: {} -> {}",
+            lb_before,
+            a.min_max_ratio()
+        );
+    });
+}
