@@ -12,8 +12,8 @@
 use std::collections::BTreeMap;
 
 use crate::partition::Assignment;
-use crate::quadtree::{interaction_list, near_domain, BoxId, Quadtree,
-                      TreeCut};
+use crate::quadtree::{interaction_list, near_domain, p2p_sources, BoxId,
+                      Quadtree, TreeCut, TreeMode};
 
 /// Directed overlap: (from_rank, to_rank) -> boxes whose data flows.
 /// Ordered map so every iteration (message sends, flow costing) is
@@ -78,15 +78,34 @@ pub fn neighbor_overlap(
     assignment: &Assignment,
 ) -> OverlapMap {
     let mut map = OverlapMap::default();
-    for tgt in &tree.occupied_leaves {
-        let tgt_rank = owner_of(cut, assignment, tgt);
-        for src in near_domain(tgt) {
-            if tree.particles_in(&src).is_empty() {
-                continue;
+    match tree.mode {
+        TreeMode::Uniform => {
+            for tgt in &tree.occupied_leaves {
+                let tgt_rank = owner_of(cut, assignment, tgt);
+                for src in near_domain(tgt) {
+                    if tree.particles_in(&src).is_empty() {
+                        continue;
+                    }
+                    let src_rank = owner_of(cut, assignment, &src);
+                    if src_rank != tgt_rank {
+                        map.add(src_rank, tgt_rank, src);
+                    }
+                }
             }
-            let src_rank = owner_of(cut, assignment, &src);
-            if src_rank != tgt_rank {
-                map.add(src_rank, tgt_rank, src);
+        }
+        // adaptive: the halo partners of a leaf are its `p2p_sources`
+        // (one level finer or coarser across a 2:1 interface), each a
+        // leaf at level >= the cut, so subtree ownership is well
+        // defined for every box that crosses a rank boundary
+        TreeMode::Adaptive { .. } => {
+            for tgt in &tree.occupied_leaves {
+                let tgt_rank = owner_of(cut, assignment, tgt);
+                for src in p2p_sources(tree, tgt) {
+                    let src_rank = owner_of(cut, assignment, &src);
+                    if src_rank != tgt_rank {
+                        map.add(src_rank, tgt_rank, src);
+                    }
+                }
             }
         }
     }

@@ -22,7 +22,7 @@ use super::overlap::{interaction_overlap, neighbor_overlap, owner_of};
 use crate::fmm::{Evaluator, FmmKernel, FmmState, NativeBackend, OpCounts,
                  OpDims};
 use crate::partition::Assignment;
-use crate::quadtree::{BoxId, Domain, Quadtree, TreeCut};
+use crate::quadtree::{BoxId, Domain, Quadtree, TreeCut, TreeMode};
 use crate::sched::ParallelPlan;
 
 /// A (from, payload) envelope.
@@ -150,6 +150,33 @@ where
     (vel, counts)
 }
 
+/// Build a rank-local tree over a subset of the global particles.  In
+/// uniform mode this is an ordinary build (every depth-L leaf exists by
+/// construction).  In adaptive mode the rank must NOT re-derive its own
+/// refinement: capacity splits and 2:1 balance cascades depend on
+/// particles the rank cannot see, so local re-derivation could diverge
+/// from the global leaf set the plan's task lists reference.  Instead
+/// the local particles are binned into the GLOBAL tree's leaf set
+/// (`build_conforming`), which keeps every locally-present box
+/// identical to its global counterpart.
+fn build_rank_local(
+    gtree: &Quadtree,
+    domain: Domain,
+    levels: u8,
+    particles: Vec<[f64; 3]>,
+) -> Quadtree {
+    match gtree.mode {
+        TreeMode::Uniform => Quadtree::build(domain, levels, particles),
+        TreeMode::Adaptive { .. } => Quadtree::build_conforming(
+            domain,
+            levels,
+            gtree.mode,
+            &gtree.occupied_leaves,
+            particles,
+        ),
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn rank_main<K: FmmKernel>(
     kernel: K,
@@ -178,7 +205,7 @@ fn rank_main<K: FmmKernel>(
     // expects.
     let own_aos: Vec<[f64; 3]> =
         my_parts.iter().map(|(p, _)| *p).collect();
-    let own_tree = Quadtree::build(domain, levels, own_aos);
+    let own_tree = build_rank_local(gtree, domain, levels, own_aos);
     let mut expected_halo = 0usize;
     for ((from, to), boxes) in &nb_overlap.sends {
         if *from == rank {
@@ -223,7 +250,7 @@ fn rank_main<K: FmmKernel>(
     for leaf in &halo_leaves {
         local_particles.extend(halo_by_leaf[leaf].iter().copied());
     }
-    let tree = Quadtree::build(domain, levels, local_particles);
+    let tree = build_rank_local(gtree, domain, levels, local_particles);
     let ev = Evaluator::new(&tree, &backend);
     let mut state = FmmState::new(levels, dims.terms, tree.n_particles());
 

@@ -19,6 +19,7 @@ const VALID_KEYS: &[&str] = &[
     "kernel", "ranks|procs", "strategy", "network", "distribution|dist",
     "backend", "seed", "artifacts", "par-threads|threads", "steps",
     "dt", "rebalance-threshold", "rebalance", "integrator",
+    "tree", "leaf-capacity|capacity",
 ];
 
 /// Full run configuration for the coordinator.
@@ -66,6 +67,14 @@ pub struct RunConfig {
     pub rebalance: bool,
     /// time integrator for the dynamic driver: euler | rk2
     pub integrator: Integrator,
+    /// tree refinement mode: uniform | adaptive (DESIGN.md §12);
+    /// uniform is the default and is bitwise-pinned to the historical
+    /// behavior
+    pub tree: String,
+    /// adaptive mode only: split a leaf once it holds more than this
+    /// many particles (bounded below by the cut level, above by
+    /// `levels`)
+    pub leaf_capacity: u32,
 }
 
 impl Default for RunConfig {
@@ -90,6 +99,8 @@ impl Default for RunConfig {
             rebalance_threshold: 0.8,
             rebalance: true,
             integrator: Integrator::Euler,
+            tree: "uniform".into(),
+            leaf_capacity: 32,
         }
     }
 }
@@ -112,6 +123,24 @@ impl RunConfig {
     pub fn network_model(&self) -> Result<NetworkModel> {
         NetworkModel::parse(&self.network)
             .ok_or_else(|| anyhow!("unknown network '{}'", self.network))
+    }
+
+    /// Tree refinement mode for the tree builder.  Adaptive refinement
+    /// never coarsens past the effective cut level, so every leaf lies
+    /// wholly inside one parallel subtree and subtree ownership stays
+    /// well defined (DESIGN.md §12).
+    pub fn tree_mode(&self) -> Result<crate::quadtree::TreeMode> {
+        use crate::quadtree::TreeMode;
+        match self.tree.as_str() {
+            "uniform" => Ok(TreeMode::Uniform),
+            "adaptive" => Ok(TreeMode::Adaptive {
+                leaf_capacity: self.leaf_capacity.max(1),
+                min_level: self.effective_cut(),
+            }),
+            other => {
+                bail!("unknown tree mode '{other}' (uniform | adaptive)")
+            }
+        }
     }
 
     /// Apply one `key = value` (file) or `--key value` (CLI) setting.
@@ -169,6 +198,15 @@ impl RunConfig {
                         )
                     })?
             }
+            "tree" => match value {
+                "uniform" | "adaptive" => self.tree = value.into(),
+                _ => bail!(
+                    "tree must be uniform|adaptive (got '{value}')"
+                ),
+            },
+            "leaf-capacity" | "leaf_capacity" | "capacity" => {
+                self.leaf_capacity = value.parse()?
+            }
             _ => bail!(
                 "unknown config key '{key}' (valid keys: {})",
                 VALID_KEYS.join(", ")
@@ -224,9 +262,11 @@ impl RunConfig {
         Ok(positional)
     }
 
-    /// Summarize for logs.
+    /// Summarize for logs.  The adaptive suffix is only appended when
+    /// the mode is non-default, so uniform-mode log lines stay
+    /// byte-identical to the historical output.
     pub fn summary(&self) -> String {
-        format!(
+        let base = format!(
             "N={} L={} k={} p={} sigma={} kernel={} P={} strategy={} \
              network={} dist={} backend={} seed={} threads={}",
             self.particles, self.levels, self.effective_cut(), self.terms,
@@ -238,7 +278,12 @@ impl RunConfig {
             } else {
                 self.par_threads.to_string()
             }
-        )
+        );
+        if self.tree == "adaptive" {
+            format!("{base} tree=adaptive cap={}", self.leaf_capacity)
+        } else {
+            base
+        }
     }
 }
 
@@ -347,6 +392,28 @@ mod tests {
         assert!(c.rebalance);
         assert!(c.set("rebalance", "maybe").is_err());
         assert!(c.set("integrator", "verlet").is_err());
+    }
+
+    #[test]
+    fn tree_mode_keys_parse_and_default_to_uniform() {
+        use crate::quadtree::TreeMode;
+        let mut c = RunConfig::default();
+        assert_eq!(c.tree, "uniform");
+        assert_eq!(c.tree_mode().unwrap(), TreeMode::Uniform);
+        // uniform summary is byte-identical to the historical format
+        assert!(!c.summary().contains("tree="));
+        c.apply_ini("tree = adaptive\nleaf-capacity = 48\n").unwrap();
+        assert_eq!(
+            c.tree_mode().unwrap(),
+            TreeMode::Adaptive {
+                leaf_capacity: 48,
+                min_level: c.effective_cut(),
+            }
+        );
+        assert!(c.summary().contains("tree=adaptive cap=48"));
+        c.set("capacity", "16").unwrap();
+        assert_eq!(c.leaf_capacity, 16);
+        assert!(c.set("tree", "octree").is_err());
     }
 
     #[test]

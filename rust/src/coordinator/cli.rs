@@ -45,7 +45,8 @@ COMMON FLAGS (defaults in brackets)
   --kernel K        [biot-savart|log-potential|gravity]
   --strategy S      [optimized|sfc|sfc-weighted|uniform]
   --network M       [infinipath|ideal|ethernet]
-  --dist D          [lattice|uniform|clustered]
+  --dist D          [lattice|uniform|clustered|galaxy|vortex-sheet]
+  --tree T          [uniform|adaptive]  --leaf-capacity C [32]
   --backend B       [native|pjrt|auto]   --artifacts DIR [artifacts]
   --config FILE     INI-style config file        --seed N [1]
   --threads T       evaluator worker pool, 0 = one per core [0]
@@ -435,6 +436,33 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("integrator"), "{err}");
+    }
+
+    #[test]
+    fn run_adaptive_tree_on_clustered_workloads() {
+        for dist in ["galaxy", "vortex-sheet"] {
+            dispatch(&args(&[
+                "run", "--particles", "300", "--levels", "5", "--terms",
+                "8", "--ranks", "2", "--dist", dist, "--tree",
+                "adaptive", "--leaf-capacity", "16",
+            ]))
+            .unwrap();
+        }
+        let err = dispatch(&args(&["run", "--tree", "octree"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("uniform|adaptive"), "{err}");
+    }
+
+    #[test]
+    fn simulate_adaptive_small_problem() {
+        dispatch(&args(&[
+            "simulate", "--particles", "200", "--levels", "4", "--terms",
+            "6", "--ranks", "2", "--dist", "clustered", "--tree",
+            "adaptive", "--leaf-capacity", "12", "--steps", "2", "--dt",
+            "0.001", "--mode", "simulated",
+        ]))
+        .unwrap();
     }
 
     #[test]

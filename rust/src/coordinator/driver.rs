@@ -10,7 +10,7 @@ use crate::fmm::{BiotSavart2D, Gravity2D, KernelSpec, LogPotential2D,
                  NativeBackend, OpDims, OpsBackend};
 use crate::metrics::{ScalingPoint, ScalingSeries};
 use crate::partition::{assign_subtrees, Assignment};
-use crate::quadtree::{Domain, Particle, Quadtree, TreeCut};
+use crate::quadtree::{Domain, Particle, Quadtree, TreeCut, TreeMode};
 use crate::runtime::PjrtBackend;
 use crate::sched::sim::OpCosts as PetfmmOpCosts;
 use crate::sched::{ParallelPlan, SimResult, Simulator};
@@ -114,10 +114,27 @@ pub fn prepare(config: &RunConfig) -> Result<Problem> {
     prepare_with_particles(config, particles)
 }
 
-/// Prepare with an explicit particle set.
+/// Prepare with an explicit particle set.  In adaptive mode refinement
+/// is floored at the effective cut level (via `RunConfig::tree_mode`),
+/// so the tree cut and subtree ownership work identically in both
+/// modes; downstream (plan, simulator, threaded runtime, work model)
+/// all branch on `tree.mode` internally.
 pub fn prepare_with_particles(config: &RunConfig, particles: Vec<Particle>)
     -> Result<Problem> {
-    let tree = Quadtree::build(Domain::UNIT, config.levels, particles);
+    let tree = match config.tree_mode()? {
+        TreeMode::Uniform => {
+            Quadtree::build(Domain::UNIT, config.levels, particles)
+        }
+        TreeMode::Adaptive { leaf_capacity, min_level } => {
+            Quadtree::build_adaptive(
+                Domain::UNIT,
+                config.levels,
+                leaf_capacity,
+                min_level.min(config.levels),
+                particles,
+            )
+        }
+    };
     let cut = TreeCut::new(config.levels, config.effective_cut());
     let assignment = assign_subtrees(
         &tree,
@@ -257,6 +274,35 @@ mod tests {
         );
         let err = rel_l2_error(&res.vel, &want);
         assert!(err < 1e-3, "err {err}");
+    }
+
+    #[test]
+    fn adaptive_prepare_and_simulate_end_to_end() {
+        // clustered input, adaptive tree, simulated parallel execution:
+        // the full coordinator path in the non-uniform mode
+        let cfg = RunConfig {
+            particles: 400,
+            levels: 5,
+            terms: 12,
+            ranks: 4,
+            distribution: "clustered".into(),
+            tree: "adaptive".into(),
+            leaf_capacity: 12,
+            ..Default::default()
+        };
+        let problem = prepare(&cfg).unwrap();
+        assert!(
+            problem.tree.occupied_leaves.iter().any(|b| b.level < 5),
+            "clustered input should leave some coarse leaves"
+        );
+        let backend = make_backend(&cfg).unwrap();
+        let res = problem.simulate(backend.as_ref()).unwrap();
+        let want = direct_all(
+            &BiotSavart2D::new(cfg.sigma),
+            &problem.tree.particles,
+        );
+        let err = rel_l2_error(&res.vel, &want);
+        assert!(err < 1e-3, "adaptive simulate vs direct err {err}");
     }
 
     #[test]

@@ -433,6 +433,48 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_modes_agree_bitwise_via_the_facade() {
+        // the adaptive pipeline end-to-end: clustered particles, a
+        // genuinely mixed-level leaf set, and the three runtimes
+        // executing the identical schedule bit-for-bit
+        let cfg = RunConfig {
+            particles: 300,
+            levels: 5,
+            terms: 12,
+            sigma: 0.01,
+            ranks: 4,
+            distribution: "clustered".into(),
+            tree: "adaptive".into(),
+            leaf_capacity: 12,
+            par_threads: 1,
+            ..Default::default()
+        };
+        let serial = FmmSolver::from_config(&cfg).solve().unwrap();
+        assert!(
+            serial
+                .problem
+                .tree
+                .occupied_leaves
+                .iter()
+                .any(|b| b.level < cfg.levels),
+            "clustered input should produce coarse leaves"
+        );
+        let threaded = FmmSolver::from_config(&cfg)
+            .mode(RunMode::Threaded)
+            .solve()
+            .unwrap();
+        let sim = FmmSolver::from_config(&cfg)
+            .mode(RunMode::Simulated)
+            .solve()
+            .unwrap();
+        assert_eq!(serial.vel, threaded.vel);
+        assert_eq!(serial.vel, sim.vel);
+        let want = serial.direct_oracle();
+        let err = rel_l2_error(&serial.vel, &want);
+        assert!(err < 1e-3, "adaptive facade vs direct err {err}");
+    }
+
+    #[test]
     fn explicit_particles_and_kernel_override() {
         let mut g = crate::proptest::Gen::new(3);
         let parts = g.particles(150);

@@ -1,6 +1,8 @@
 //! Workload generation for experiments: the §7.1 Lamb–Oseen lattice and
 //! synthetic uniform/clustered distributions (clustered is the
-//! non-uniform case motivating the load balancer).
+//! non-uniform case motivating the load balancer), plus the strongly
+//! clustered `galaxy` and `vortex-sheet` workloads the adaptive tree
+//! (DESIGN.md §12) is benchmarked on.
 
 use anyhow::{bail, Result};
 
@@ -16,6 +18,13 @@ use crate::vortex::{lamb_oseen_lattice, LambOseen};
 ///   chosen to produce approximately that many particles.
 /// * `uniform` — i.i.d. uniform in the unit square.
 /// * `clustered` — Gaussian blobs (the DPMTA-style imbalance workload).
+/// * `galaxy` — a dominant central bulge plus tight satellite blobs of
+///   geometrically decreasing mass and radius: density varies by
+///   orders of magnitude across the domain, the regime where uniform
+///   refinement wastes its depth on empty space.
+/// * `vortex-sheet` — a thin perturbed shear layer: particles hug a
+///   quasi-1D strip, so a uniform tree is either far too coarse along
+///   the sheet or pays a full 2D refinement for a 1D feature.
 pub fn generate(config: &RunConfig) -> Result<Vec<Particle>> {
     match config.distribution.as_str() {
         "lattice" => {
@@ -36,8 +45,65 @@ pub fn generate(config: &RunConfig) -> Result<Vec<Particle>> {
             let mut g = Gen::new(config.seed);
             Ok(g.clustered_particles(config.particles, 4))
         }
+        "galaxy" => {
+            let mut g = Gen::new(config.seed);
+            Ok(galaxy_particles(&mut g, config.particles))
+        }
+        "vortex-sheet" | "sheet" => {
+            let mut g = Gen::new(config.seed);
+            Ok(vortex_sheet_particles(&mut g, config.particles))
+        }
         other => bail!("unknown distribution '{other}'"),
     }
+}
+
+/// Galaxy-like blobs: one broad central bulge and five satellites whose
+/// share of the particles and spatial extent both shrink geometrically.
+/// Deterministic for a given generator seed.
+pub fn galaxy_particles(g: &mut Gen, n: usize) -> Vec<Particle> {
+    // (center, radius) per component; centers drawn away from the
+    // domain boundary so clamping rarely distorts the shape
+    let mut comps: Vec<([f64; 2], f64)> = vec![([0.5, 0.5], 0.08)];
+    let mut r = 0.03;
+    for _ in 0..5 {
+        comps.push(([g.f64_in(0.12, 0.88), g.f64_in(0.12, 0.88)], r));
+        r *= 0.75;
+    }
+    // cumulative component weights: bulge holds ~40%, satellites the
+    // geometrically decaying rest
+    let weights = [0.40, 0.24, 0.14, 0.09, 0.07, 0.06];
+    let cum: Vec<f64> = weights
+        .iter()
+        .scan(0.0, |acc, w| {
+            *acc += w;
+            Some(*acc)
+        })
+        .collect();
+    (0..n)
+        .map(|_| {
+            let u = g.f64_in(0.0, 1.0);
+            let i = cum.iter().position(|&c| u < c).unwrap_or(5);
+            let (c, rad) = comps[i];
+            let x = (c[0] + rad * g.normal()).clamp(0.0, 0.999);
+            let y = (c[1] + rad * g.normal()).clamp(0.0, 0.999);
+            [x, y, g.normal()]
+        })
+        .collect()
+}
+
+/// Thin vortex-sheet strip: a quasi-1D shear layer at mid-height with
+/// Gaussian thickness ~4e-3 and a sinusoidal strength profile along the
+/// sheet (plus small noise), the classic roll-up initial condition.
+pub fn vortex_sheet_particles(g: &mut Gen, n: usize) -> Vec<Particle> {
+    (0..n)
+        .map(|_| {
+            let x = g.f64_in(0.05, 0.95);
+            let y = (0.5 + 0.004 * g.normal()).clamp(0.0, 0.999);
+            let gamma =
+                (std::f64::consts::PI * x).sin() + 0.05 * g.normal();
+            [x, y, gamma]
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -66,6 +132,61 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(generate(&c).unwrap(), generate(&c).unwrap());
+    }
+
+    #[test]
+    fn galaxy_is_deterministic_in_square_and_concentrated() {
+        let c = RunConfig {
+            particles: 2000,
+            distribution: "galaxy".into(),
+            seed: 5,
+            ..Default::default()
+        };
+        let p = generate(&c).unwrap();
+        assert_eq!(p, generate(&c).unwrap());
+        assert_eq!(p.len(), 2000);
+        for q in &p {
+            assert!((0.0..1.0).contains(&q[0]), "{q:?}");
+            assert!((0.0..1.0).contains(&q[1]), "{q:?}");
+        }
+        // the central bulge quarter-box holds far more than its
+        // uniform share (1/16 of the domain would be 125 particles)
+        let bulge = p
+            .iter()
+            .filter(|q| {
+                (q[0] - 0.5).abs() < 0.125 && (q[1] - 0.5).abs() < 0.125
+            })
+            .count();
+        assert!(bulge > 400, "bulge count {bulge}");
+    }
+
+    #[test]
+    fn vortex_sheet_is_a_thin_strip() {
+        let c = RunConfig {
+            particles: 1000,
+            distribution: "vortex-sheet".into(),
+            seed: 7,
+            ..Default::default()
+        };
+        let p = generate(&c).unwrap();
+        assert_eq!(p, generate(&c).unwrap());
+        for q in &p {
+            assert!((0.0..1.0).contains(&q[0]), "{q:?}");
+            assert!((0.0..1.0).contains(&q[1]), "{q:?}");
+        }
+        let thin = p
+            .iter()
+            .filter(|q| (q[1] - 0.5).abs() < 0.02)
+            .count();
+        assert!(thin as f64 > 0.99 * p.len() as f64, "thin {thin}");
+        // alias accepted
+        let c2 = RunConfig {
+            distribution: "sheet".into(),
+            particles: 10,
+            seed: 7,
+            ..Default::default()
+        };
+        assert_eq!(generate(&c2).unwrap().len(), 10);
     }
 
     #[test]

@@ -47,7 +47,8 @@ use std::time::Instant;
 use super::arena::ExpansionArena;
 use super::backend::OpsBackend;
 use super::optable::{self, CachedOps};
-use crate::quadtree::{interaction_list, near_domain, BoxId, Quadtree};
+use crate::quadtree::{interaction_list, near_domain, p2p_sources, BoxId,
+                      Quadtree, TreeMode};
 
 /// Mutable solution state: dense expansion arenas + per-particle
 /// velocities.
@@ -920,6 +921,14 @@ impl<'a> Evaluator<'a> {
         let t_m2m = t0.elapsed().as_secs_f64();
 
         // ---- downward sweep ----
+        //
+        // The same loop serves both tree modes: `occupied_at_level`
+        // returns the level's expansion carriers (adaptive) or occupied
+        // ancestors (uniform, the same thing), and `run_m2l`'s
+        // `me.contains` filter keeps exactly the carrier sources — in
+        // an adaptive tree a box holds an ME iff a leaf at its level or
+        // deeper lies beneath it, so the filtered pair set is the
+        // adaptive V-list (quadtree::adaptive module docs).
         for lvl in 2..=levels {
             let tgts = self.tree.occupied_at_level(lvl);
             let mut pairs = Vec::new();
@@ -944,9 +953,23 @@ impl<'a> Evaluator<'a> {
         self.run_l2p(&self.tree.occupied_leaves.clone(), &mut state);
         let t_l2p = t0.elapsed().as_secs_f64();
         let mut near_pairs = Vec::new();
-        for tgt in &self.tree.occupied_leaves {
-            for src in near_domain(tgt) {
-                near_pairs.push((*tgt, src));
+        match self.tree.mode {
+            TreeMode::Uniform => {
+                for tgt in &self.tree.occupied_leaves {
+                    for src in near_domain(tgt) {
+                        near_pairs.push((*tgt, src));
+                    }
+                }
+            }
+            TreeMode::Adaptive { .. } => {
+                // mixed-level near field: descend set (same level or
+                // one finer, 2:1-bounded) plus the parent's coarse
+                // leaf neighbors — see quadtree::adaptive
+                for tgt in &self.tree.occupied_leaves {
+                    for src in p2p_sources(self.tree, tgt) {
+                        near_pairs.push((*tgt, src));
+                    }
+                }
             }
         }
         let t0 = Instant::now();
@@ -1098,6 +1121,69 @@ mod tests {
             let err = rel_l2_error(&got, &want);
             assert!(err < 1e-4, "rel l2 err {err}");
         });
+    }
+
+    #[test]
+    fn adaptive_fmm_matches_direct_clustered() {
+        // the tentpole's correctness anchor: capacity-refined,
+        // 2:1-balanced tree against the direct oracle on the paper's
+        // motivating clustered distribution
+        check("adaptive fmm == direct", 4, |g| {
+            let parts = g.clustered_particles(300, 3);
+            let tree = Quadtree::build_adaptive(
+                Domain::UNIT, 6, 10, 0, parts.clone(),
+            );
+            assert!(
+                tree.occupied_leaves.iter()
+                    .any(|b| b.level < tree.levels),
+                "refinement should leave some coarse leaves"
+            );
+            let dims =
+                OpDims { batch: 16, leaf: 8, terms: 17, sigma: 0.002 };
+            let kernel = BiotSavart2D::new(0.002);
+            let backend = NativeBackend::new(dims, kernel);
+            let ev = Evaluator::new(&tree, &backend);
+            let got = ev.evaluate().vel_in_input_order(&tree);
+            let want = direct_all(&kernel, &parts);
+            let err = rel_l2_error(&got, &want);
+            assert!(err < 2e-4, "rel l2 err {err}");
+        });
+    }
+
+    #[test]
+    fn adaptive_parallel_dispatch_is_bit_identical() {
+        let mut g = crate::proptest::Gen::new(31);
+        let parts = g.clustered_particles(500, 4);
+        let tree =
+            Quadtree::build_adaptive(Domain::UNIT, 6, 12, 0, parts);
+        let dims = OpDims { batch: 8, leaf: 8, terms: 12, sigma: 0.01 };
+        let backend = NativeBackend::new(dims, BiotSavart2D::new(0.01));
+        let one = Evaluator::new(&tree, &backend).evaluate().vel;
+        for threads in [2usize, 8] {
+            let many = Evaluator::new(&tree, &backend)
+                .with_threads(threads)
+                .evaluate()
+                .vel;
+            assert_eq!(one, many, "threads={threads} changed bits");
+        }
+    }
+
+    #[test]
+    fn adaptive_cached_and_generic_paths_are_bit_identical() {
+        // the cached per-level operator tables must agree with the
+        // geometry-derived generic ABI on mixed-level trees too (same
+        // dyadic-exactness argument as uniform on Domain::UNIT)
+        let mut g = crate::proptest::Gen::new(17);
+        let parts = g.clustered_particles(350, 3);
+        let tree =
+            Quadtree::build_adaptive(Domain::UNIT, 5, 10, 0, parts);
+        let dims = OpDims { batch: 8, leaf: 8, terms: 13, sigma: 0.01 };
+        let backend = NativeBackend::new(dims, BiotSavart2D::new(0.01));
+        let cached = Evaluator::new(&tree, &backend).evaluate();
+        let generic = Evaluator::new(&tree, &backend)
+            .with_cached_ops(false)
+            .evaluate();
+        assert_eq!(cached.vel, generic.vel);
     }
 
     #[test]

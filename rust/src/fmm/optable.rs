@@ -30,6 +30,15 @@
 //! inputs themselves equal the center-difference arithmetic of the
 //! uncached path exactly, because every quantity is a dyadic rational.
 //!
+//! Adaptive trees (DESIGN.md §12) change none of this.  2:1 balance
+//! plus same-level-only M2L keep every adaptive interaction pair inside
+//! the same 40-offset census, M2M/L2L shifts stay the four quadrant
+//! operators at every level, and the per-level scaling rule is
+//! unchanged: the *only* level-dependent quantity is the `1/r` the
+//! evaluator already passes per call (`inv_r_by_level[src.level]`), now
+//! simply invoked at the mixed levels the carriers live at.  The tables
+//! therefore serve both tree modes byte-for-byte identically.
+//!
 //! Kernel dependence (DESIGN.md §10): everything in [`OpTables`] — the
 //! `itau^n`/`d^m` power tables, `rho^k` scales and binomial rows — is
 //! **geometry-only**, shared by every kernel of the

@@ -10,8 +10,8 @@
 //! estimate sensitive to non-uniform distributions, unlike
 //! Greengard–Gropp's uniform assumption).
 
-use crate::quadtree::{interaction_list, near_domain, BoxId, Quadtree,
-                      TreeCut};
+use crate::quadtree::{interaction_list, near_domain, p2p_sources, BoxId,
+                      Quadtree, TreeCut, TreeMode};
 
 /// Work estimator parameterized by the expansion order p.
 #[derive(Clone, Copy, Debug)]
@@ -54,8 +54,24 @@ impl WorkEstimator {
 
     /// Eq. 15 evaluated exactly on a concrete tree: total work of the
     /// subtree rooted at `root` (levels cut..L inside the cut).
+    ///
+    /// On an adaptive tree the dense level walk would badly overcount
+    /// (most fine boxes do not exist), so the adaptive arm sums over
+    /// the subtree's *actual* topology: its occupied leaves with their
+    /// true populations and `p2p_sources` near fields, and the carrier
+    /// boxes above them with their true child/interaction-list counts.
     pub fn subtree_work(&self, tree: &Quadtree, cut: &TreeCut, root: &BoxId)
         -> f64 {
+        match tree.mode {
+            TreeMode::Uniform => self.subtree_work_uniform(tree, cut, root),
+            TreeMode::Adaptive { .. } => {
+                self.subtree_work_adaptive(tree, root)
+            }
+        }
+    }
+
+    fn subtree_work_uniform(&self, tree: &Quadtree, cut: &TreeCut,
+                            root: &BoxId) -> f64 {
         let mut w = 0.0;
         // interior levels: root level .. L-1
         let mut frontier = vec![*root];
@@ -80,6 +96,46 @@ impl WorkEstimator {
             w += self.leaf_node(n_i, interaction_list(leaf).len(), near);
         }
         let _ = cut;
+        w
+    }
+
+    fn subtree_work_adaptive(&self, tree: &Quadtree, root: &BoxId) -> f64 {
+        let carrier = |b: &BoxId| !tree.leaves_under(b).is_empty();
+        let mut w = 0.0;
+        // interior carriers: the strict ancestors (within the subtree)
+        // of the occupied leaves, deduplicated and z-ordered so the
+        // floating-point summation order is deterministic
+        let mut interior: Vec<BoxId> = Vec::new();
+        for leaf in tree.leaves_under(root) {
+            let mut lvl = leaf.level;
+            while lvl > root.level {
+                lvl -= 1;
+                interior.push(leaf.ancestor(lvl));
+            }
+        }
+        interior.sort();
+        interior.dedup();
+        for b in &interior {
+            let n_c =
+                b.children().iter().filter(|c| carrier(c)).count();
+            let n_il = interaction_list(b)
+                .iter()
+                .filter(|s| carrier(s))
+                .count();
+            w += self.nonleaf_node(n_c, n_il);
+        }
+        for leaf in tree.leaves_under(root) {
+            let n_i = tree.leaf_len(leaf);
+            let n_il = interaction_list(leaf)
+                .iter()
+                .filter(|s| carrier(s))
+                .count();
+            let near: usize = p2p_sources(tree, leaf)
+                .iter()
+                .map(|src| tree.leaf_len(src))
+                .sum();
+            w += self.leaf_node(n_i, n_il, near);
+        }
         w
     }
 
@@ -228,6 +284,37 @@ mod tests {
         // a single blob concentrates work: a round-robin placement of
         // z-ordered subtrees cannot be perfectly balanced
         assert!(lb < 1.0);
+    }
+
+    #[test]
+    fn adaptive_empty_subtree_has_zero_work() {
+        // the adaptive estimator walks actual topology, so a subtree
+        // with no occupied leaves contributes nothing (the uniform
+        // estimator charges its dense interior regardless)
+        let tree = Quadtree::build_adaptive(Domain::UNIT, 5, 8, 2,
+                                            vec![[0.01, 0.01, 1.0]]);
+        let cut = TreeCut::new(5, 2);
+        let w = WorkEstimator::new(5);
+        let far = &cut.subtrees[cut.n_subtrees() - 1];
+        assert_eq!(w.subtree_work(&tree, &cut, far), 0.0);
+        let near = &cut.subtrees[0];
+        assert!(w.subtree_work(&tree, &cut, near) > 0.0);
+    }
+
+    #[test]
+    fn prop_adaptive_work_monotone_in_particles() {
+        check("adaptive work monotone", 4, |g| {
+            let cut = TreeCut::new(5, 2);
+            let w = WorkEstimator::new(8);
+            let p1 = g.clustered_particles(300, 2);
+            let mut p2 = p1.clone();
+            p2.extend(g.clustered_particles(300, 2));
+            let t1 = Quadtree::build_adaptive(Domain::UNIT, 5, 12, 2, p1);
+            let t2 = Quadtree::build_adaptive(Domain::UNIT, 5, 12, 2, p2);
+            let w1: f64 = w.all_subtree_work(&t1, &cut).iter().sum();
+            let w2: f64 = w.all_subtree_work(&t2, &cut).iter().sum();
+            assert!(w2 > w1);
+        });
     }
 
     #[test]

@@ -1,0 +1,222 @@
+//! Adaptive interaction lists (DESIGN.md §12).
+//!
+//! With the 2:1 balance invariant of [`TreeMode::Adaptive`] every
+//! near-field partner of a leaf sits within one level of it, and every
+//! far-field transfer is a *same-level* M2L between expansion carriers
+//! — so the uniform ≤40-offset operator census and the per-level
+//! `1/r` scaling cover the adaptive tree unchanged.
+//!
+//! These enumerations are the single source of truth for the adaptive
+//! pipeline: the serial [`Evaluator`] sweep, the [`ParallelPlan`] task
+//! lists, and the threaded runtime's halo/ME overlap sets all call the
+//! same two functions, so the three execution modes cannot drift.
+//!
+//! [`TreeMode::Adaptive`]: super::build::TreeMode
+//! [`Evaluator`]: crate::fmm::Evaluator
+//! [`ParallelPlan`]: crate::sched::ParallelPlan
+
+use super::build::Quadtree;
+use super::neighbors::{interaction_list, near_domain, neighbors};
+use super::node::BoxId;
+
+/// Every P2P source leaf for occupied leaf `tgt`, in deterministic
+/// order: the *descend set* (occupied leaves inside the near domain at
+/// `tgt`'s level — at most one level finer under 2:1 balance, `tgt`
+/// itself first), then the *coarse set* (occupied leaves among the
+/// parent's neighbors, one level coarser: adjacent to `tgt` but
+/// invisible at its level, and never separated from it at any coarser
+/// level either, so direct summation is the only correct treatment).
+/// The two sets are disjoint by level; together with the same-level
+/// M2L pairs of [`m2l_pairs_at`] they cover every leaf pair exactly
+/// once.
+///
+/// On a uniform tree this degenerates to the occupied members of
+/// `near_domain(tgt)` — the same set the uniform sweep visits.
+pub fn p2p_sources(tree: &Quadtree, tgt: &BoxId) -> Vec<BoxId> {
+    let mut out = Vec::new();
+    for n in near_domain(tgt) {
+        out.extend_from_slice(tree.leaves_under(&n));
+    }
+    if let Some(p) = tgt.parent() {
+        for n in neighbors(&p) {
+            if let Some(i) = tree.leaf_index(&n) {
+                out.push(tree.occupied_leaves[i]);
+            }
+        }
+    }
+    out
+}
+
+/// Same-level M2L pairs at `level`, target-major in z-order over the
+/// level's expansion carriers (`Quadtree::occupied_at_level`), sources
+/// filtered to carriers so no zero-ME transfer is ever scheduled.
+/// Every pair is an [`interaction_list`] pair, hence within the 40
+/// well-separated offsets the cached operator tables are built for.
+pub fn m2l_pairs_at(tree: &Quadtree, level: u8) -> Vec<(BoxId, BoxId)> {
+    let mut out = Vec::new();
+    for tgt in tree.occupied_at_level(level) {
+        for src in interaction_list(&tgt) {
+            if !tree.leaves_under(&src).is_empty() {
+                out.push((tgt, src));
+            }
+        }
+    }
+    out
+}
+
+/// Total pairwise P2P interaction count of the tree's near field — the
+/// quantity the adaptive refinement exists to shrink on clustered
+/// inputs (and the `adaptive_vs_uniform_clustered` CI gate measures).
+pub fn p2p_interactions(tree: &Quadtree) -> u64 {
+    tree.occupied_leaves
+        .iter()
+        .map(|tgt| {
+            let nt = tree.leaf_len(tgt) as u64;
+            p2p_sources(tree, tgt)
+                .iter()
+                .map(|src| nt * tree.leaf_len(src) as u64)
+                .sum::<u64>()
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{check, Gen};
+    use crate::quadtree::{box_offset, well_separated_offsets, Domain};
+
+    fn adaptive_tree(g: &mut Gen, n: usize, levels: u8, cap: u32)
+        -> Quadtree {
+        let parts = g.clustered_particles(n, 4);
+        Quadtree::build_adaptive(Domain::UNIT, levels, cap, 0, parts)
+    }
+
+    #[test]
+    fn prop_leaves_disjoint_and_balanced() {
+        check("adaptive leaves disjoint + 2:1", 16, |g| {
+            let t = adaptive_tree(g, g.usize_in(1, 600), 6, 20);
+            // disjoint cover of all particles: CSR is a partition
+            assert_eq!(t.leaf_offsets.len(), t.occupied_leaves.len() + 1);
+            assert_eq!(*t.leaf_offsets.last().unwrap() as usize,
+                       t.n_particles());
+            for w in t.occupied_leaves.windows(2) {
+                // strictly increasing start keys => disjoint boxes
+                let a = key_start(&t, &w[0]);
+                let b = key_start(&t, &w[1]);
+                assert!(a < b, "leaves out of order or overlapping");
+                let end = a
+                    + (1u64 << (2 * (t.levels - w[0].level) as u32));
+                assert!(b >= end, "overlapping leaves {:?} {:?}",
+                        w[0], w[1]);
+            }
+            // 2:1: no leaf sees a leaf 2+ levels finer in its near
+            // domain at its own level
+            for a in &t.occupied_leaves {
+                for n in neighbors(a) {
+                    for b in t.leaves_under(&n) {
+                        assert!(b.level <= a.level + 1,
+                                "2:1 violated: {a:?} next to {b:?}");
+                    }
+                }
+            }
+        });
+    }
+
+    fn key_start(t: &Quadtree, b: &BoxId) -> u64 {
+        b.morton() << (2 * (t.levels - b.level) as u32)
+    }
+
+    #[test]
+    fn prop_p2p_and_m2l_cover_every_pair_once() {
+        // completeness/exactly-once: every ordered leaf pair is either
+        // a P2P pair or is covered by exactly one same-level M2L
+        // between ancestors — never both, never twice
+        check("adaptive pair coverage", 8, |g| {
+            let t = adaptive_tree(g, g.usize_in(1, 300), 5, 12);
+            let mut covered =
+                std::collections::HashMap::<(BoxId, BoxId), u32>::new();
+            for a in &t.occupied_leaves {
+                for s in p2p_sources(&t, a) {
+                    for b in &t.occupied_leaves {
+                        if contains(&s, b) {
+                            *covered.entry((*a, *b)).or_insert(0) += 1;
+                        }
+                    }
+                }
+            }
+            for lvl in 2..=t.levels {
+                for (tgt, src) in m2l_pairs_at(&t, lvl) {
+                    for a in &t.occupied_leaves {
+                        if !(contains(&tgt, a) && a.level >= lvl) {
+                            continue;
+                        }
+                        for b in &t.occupied_leaves {
+                            if contains(&src, b) && b.level >= lvl {
+                                *covered
+                                    .entry((*a, *b))
+                                    .or_insert(0) += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            for a in &t.occupied_leaves {
+                for b in &t.occupied_leaves {
+                    assert_eq!(
+                        covered.get(&(*a, *b)).copied().unwrap_or(0),
+                        1,
+                        "pair {a:?} <- {b:?} covered wrong number of \
+                         times"
+                    );
+                }
+            }
+        });
+    }
+
+    fn contains(outer: &BoxId, inner: &BoxId) -> bool {
+        inner.level >= outer.level
+            && inner.ancestor(outer.level) == *outer
+    }
+
+    #[test]
+    fn prop_m2l_pairs_within_operator_census() {
+        // adaptive M2L never leaves the 40 well-separated offsets the
+        // cached per-level operator tables are built for
+        let offsets = well_separated_offsets();
+        check("adaptive M2L ⊆ census", 12, |g| {
+            let t = adaptive_tree(g, g.usize_in(1, 400), 6, 16);
+            for lvl in 2..=t.levels {
+                for (tgt, src) in m2l_pairs_at(&t, lvl) {
+                    assert_eq!(tgt.level, src.level);
+                    assert!(offsets.contains(&box_offset(&tgt, &src)));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn uniform_tree_p2p_sources_match_near_domain() {
+        let mut g = Gen::new(11);
+        let t = Quadtree::build(Domain::UNIT, 4, g.particles(250));
+        for tgt in &t.occupied_leaves {
+            let got = p2p_sources(&t, tgt);
+            let want: Vec<BoxId> = near_domain(tgt)
+                .into_iter()
+                .filter(|b| t.leaf_len(b) > 0)
+                .collect();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn clustered_adaptive_beats_uniform_on_p2p_work() {
+        let mut g = Gen::new(99);
+        let parts = g.clustered_particles(4000, 4);
+        let uni = Quadtree::build(Domain::UNIT, 5, parts.clone());
+        let ada = Quadtree::build_adaptive(Domain::UNIT, 7, 24, 0, parts);
+        assert!(p2p_interactions(&ada) < p2p_interactions(&uni),
+                "adaptive should do strictly less near-field work on \
+                 clustered inputs");
+    }
+}

@@ -18,10 +18,28 @@
 //! input order; `particles` keeps the input-order AoS copy for the seed
 //! reference path, I/O, and direct-sum verification.
 
+use super::neighbors::neighbors;
 use super::node::BoxId;
 
 /// A particle: position (x, y) and circulation strength gamma.
 pub type Particle = [f64; 3];
+
+/// How the tree chooses its leaf set (DESIGN.md §12).
+///
+/// * [`TreeMode::Uniform`] — every leaf sits at depth `levels`; the
+///   PR-5 behaviour, bitwise-pinned by the golden/determinism suites.
+/// * [`TreeMode::Adaptive`] — leaves split while they hold more than
+///   `leaf_capacity` particles (never deeper than `levels`, never
+///   shallower than `min_level` so the §4 tree cut still owns every
+///   leaf), then a 2:1 balance pass splits any leaf with an adjacent
+///   leaf more than one level finer.  The particle store contract is
+///   unchanged: one stable Morton sort at depth `levels`, and every
+///   leaf — at whatever level — owns one contiguous CSR slice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TreeMode {
+    Uniform,
+    Adaptive { leaf_capacity: u32, min_level: u8 },
+}
 
 /// Square computational domain.
 #[derive(Clone, Copy, Debug)]
@@ -76,6 +94,9 @@ impl Domain {
 pub struct Quadtree {
     pub domain: Domain,
     pub levels: u8,
+    /// Leaf-set policy: uniform depth-`levels` leaves (default) or
+    /// capacity-driven adaptive refinement with 2:1 balance.
+    pub mode: TreeMode,
     /// Input-order AoS copy (seed/reference path, I/O, direct sums).
     pub particles: Vec<Particle>,
     /// x coordinates in internal (Morton leaf) order.
@@ -111,9 +132,36 @@ impl Quadtree {
     /// sorting them once into Morton leaf order (see the struct docs).
     pub fn build(domain: Domain, levels: u8, particles: Vec<Particle>)
         -> Quadtree {
+        Quadtree::build_with_mode(domain, levels, TreeMode::Uniform,
+                                  particles)
+    }
+
+    /// Adaptive build (DESIGN.md §12): leaves split while they hold more
+    /// than `leaf_capacity` particles, bounded to `min_level..=levels`,
+    /// then 2:1-balanced.  Same domain/sort/CSR contract as [`build`],
+    /// only the leaf set differs.
+    ///
+    /// [`build`]: Quadtree::build
+    pub fn build_adaptive(domain: Domain, levels: u8, leaf_capacity: u32,
+                          min_level: u8, particles: Vec<Particle>)
+        -> Quadtree {
+        assert!(min_level <= levels,
+                "adaptive min level {min_level} > tree depth {levels}");
+        assert!(leaf_capacity >= 1, "leaf capacity must be positive");
+        Quadtree::build_with_mode(
+            domain,
+            levels,
+            TreeMode::Adaptive { leaf_capacity, min_level },
+            particles,
+        )
+    }
+
+    fn build_with_mode(domain: Domain, levels: u8, mode: TreeMode,
+                       particles: Vec<Particle>) -> Quadtree {
         let mut tree = Quadtree {
             domain,
             levels,
+            mode,
             particles: Vec::new(),
             xs: Vec::new(),
             ys: Vec::new(),
@@ -124,6 +172,52 @@ impl Quadtree {
             leaf_offsets: Vec::new(),
         };
         tree.rebuild_into(&mut RebuildScratch::default(), particles);
+        tree
+    }
+
+    /// Bin `particles` into a *prescribed* leaf set instead of deriving
+    /// one — the rank-local trees of the threaded runtime must conform
+    /// to the global tree's adaptive leaf set (a rank sees only its own
+    /// and halo particles, so re-deriving locally could refine
+    /// differently).  `leaf_set` must be disjoint, z-ordered boxes of a
+    /// depth-`levels` tree covering every particle; locally empty
+    /// leaves are dropped, so `occupied_leaves ⊆ leaf_set`.
+    pub fn build_conforming(domain: Domain, levels: u8, mode: TreeMode,
+                            leaf_set: &[BoxId],
+                            particles: Vec<Particle>) -> Quadtree {
+        let mut tree = Quadtree {
+            domain,
+            levels,
+            mode,
+            particles: Vec::new(),
+            xs: Vec::new(),
+            ys: Vec::new(),
+            gammas: Vec::new(),
+            perm: Vec::new(),
+            inv_perm: Vec::new(),
+            occupied_leaves: Vec::new(),
+            leaf_offsets: Vec::new(),
+        };
+        let n = particles.len();
+        let mut scratch = RebuildScratch::default();
+        tree.sort_particles(&mut scratch, particles);
+        let keyed = &scratch.keyed;
+        let mut pos = 0usize;
+        for b in leaf_set {
+            let (s, e) = key_range(levels, b);
+            let lo = pos;
+            while pos < n && keyed[pos].0 < e {
+                debug_assert!(keyed[pos].0 >= s,
+                              "particle outside the conforming leaf set");
+                pos += 1;
+            }
+            if pos > lo {
+                tree.occupied_leaves.push(*b);
+                tree.leaf_offsets.push(pos as u32);
+            }
+        }
+        debug_assert_eq!(pos, n,
+                         "particle beyond the conforming leaf set");
         tree
     }
 
@@ -139,15 +233,57 @@ impl Quadtree {
     pub fn rebuild_into(&mut self, scratch: &mut RebuildScratch,
                         particles: Vec<Particle>) {
         let n = particles.len();
+        self.sort_particles(scratch, particles);
+        match self.mode {
+            TreeMode::Uniform => {
+                let mut prev: Option<u64> = None;
+                for (pos, &(m, _)) in scratch.keyed.iter().enumerate() {
+                    if prev != Some(m) {
+                        if prev.is_some() {
+                            self.leaf_offsets.push(pos as u32);
+                        }
+                        self.occupied_leaves
+                            .push(BoxId::from_morton(self.levels, m));
+                        prev = Some(m);
+                    }
+                }
+                if self.occupied_leaves.is_empty() {
+                    // empty tree: leaf_offsets stays the [0] sentinel
+                    debug_assert_eq!(self.leaf_offsets, &[0]);
+                } else {
+                    self.leaf_offsets.push(n as u32);
+                }
+            }
+            TreeMode::Adaptive { leaf_capacity, min_level } => {
+                let leaves = derive_adaptive_leaves(
+                    self.levels, leaf_capacity, min_level, &scratch.keyed,
+                );
+                for (b, lo, hi) in leaves {
+                    // occupied boxes partition the sorted keys, so each
+                    // leaf's slice starts where the previous one ended
+                    debug_assert_eq!(lo, *self.leaf_offsets.last()
+                                              .unwrap());
+                    self.occupied_leaves.push(b);
+                    self.leaf_offsets.push(hi);
+                }
+            }
+        }
+    }
+
+    /// Shared first half of every build path: stable Morton sort at
+    /// depth `levels` (via the unstable `(morton, index)` sort — the
+    /// index tiebreak reproduces stability without the stable sort's
+    /// internal merge allocation), SoA mirrors, and `perm`/`inv_perm`.
+    /// Resets the leaf lists to the empty `[0]` sentinel; the caller
+    /// derives `occupied_leaves` and the CSR offsets.
+    fn sort_particles(&mut self, scratch: &mut RebuildScratch,
+                      particles: Vec<Particle>) {
+        let n = particles.len();
         scratch.keyed.clear();
         scratch.keyed.extend(particles.iter().enumerate().map(|(i, p)| {
             (self.domain.locate(self.levels, p[0], p[1]).morton(),
              i as u32)
         }));
-        // unstable sort on the (morton, input index) pair is exactly the
-        // stable morton-only sort of the one-shot build path (the index
-        // tiebreak reproduces stability), without the stable sort's
-        // internal merge allocation
         scratch.keyed.sort_unstable();
 
         self.particles = particles;
@@ -160,28 +296,13 @@ impl Quadtree {
         self.occupied_leaves.clear();
         self.leaf_offsets.clear();
         self.leaf_offsets.push(0);
-        let mut prev: Option<u64> = None;
-        for (pos, &(m, i)) in scratch.keyed.iter().enumerate() {
-            if prev != Some(m) {
-                if prev.is_some() {
-                    self.leaf_offsets.push(pos as u32);
-                }
-                self.occupied_leaves
-                    .push(BoxId::from_morton(self.levels, m));
-                prev = Some(m);
-            }
+        for (pos, &(_, i)) in scratch.keyed.iter().enumerate() {
             let p = self.particles[i as usize];
             self.xs.push(p[0]);
             self.ys.push(p[1]);
             self.gammas.push(p[2]);
             self.perm.push(i);
             self.inv_perm[i as usize] = pos as u32;
-        }
-        if self.occupied_leaves.is_empty() {
-            // empty tree: leaf_offsets stays the single [0] sentinel
-            debug_assert_eq!(self.leaf_offsets, &[0]);
-        } else {
-            self.leaf_offsets.push(n as u32);
         }
     }
 
@@ -212,35 +333,109 @@ impl Quadtree {
         b.radius(self.domain.size)
     }
 
-    /// Occupied boxes at `level` (ancestors of occupied leaves), z-ordered.
-    /// Derived from the Morton-sorted `occupied_leaves` only — hash-map
-    /// iteration order can never leak into task order.
+    /// Occupied boxes at `level`, z-ordered.  Derived from the
+    /// Morton-sorted `occupied_leaves` only — hash-map iteration order
+    /// can never leak into task order.
+    ///
+    /// In uniform mode these are the ancestors of occupied leaves.  In
+    /// adaptive mode they are the *expansion carriers*: boxes at
+    /// `level` with at least one occupied leaf at level ≥ `level`
+    /// beneath them.  A leaf coarser than `level` is excluded — its
+    /// expansions live at its own level, and no deeper box inside it
+    /// holds anything.  The carriers are exactly the boxes the M2M,
+    /// M2L and L2L sweeps must visit at that level.
     pub fn occupied_at_level(&self, level: u8) -> Vec<BoxId> {
         debug_assert!(level <= self.levels);
-        if level == self.levels {
-            return self.occupied_leaves.clone();
+        match self.mode {
+            TreeMode::Uniform => {
+                if level == self.levels {
+                    return self.occupied_leaves.clone();
+                }
+                // ancestors of a Morton-sorted leaf list are themselves
+                // Morton nondecreasing, so a dedup pass suffices
+                let mut v: Vec<BoxId> = self
+                    .occupied_leaves
+                    .iter()
+                    .map(|b| b.ancestor(level))
+                    .collect();
+                v.dedup();
+                v
+            }
+            TreeMode::Adaptive { .. } => {
+                // dropping the too-coarse leaves keeps the Morton
+                // order, so the same dedup pass applies
+                let mut v: Vec<BoxId> = self
+                    .occupied_leaves
+                    .iter()
+                    .filter(|b| b.level >= level)
+                    .map(|b| b.ancestor(level))
+                    .collect();
+                v.dedup();
+                v
+            }
         }
-        // ancestors of a Morton-sorted leaf list are themselves Morton
-        // nondecreasing, so a dedup pass suffices (no re-sort)
-        let mut v: Vec<BoxId> = self
-            .occupied_leaves
-            .iter()
-            .map(|b| b.ancestor(level))
-            .collect();
-        v.dedup();
-        v
+    }
+
+    /// Start of the depth-`levels` Morton key range a box covers — the
+    /// strictly increasing key `occupied_leaves` is sorted by in both
+    /// modes (for uniform leaves it is the plain Morton index).
+    #[inline]
+    fn start_key(&self, b: &BoxId) -> u64 {
+        b.morton() << ((2 * (self.levels - b.level)) as u32)
     }
 
     /// Position of `leaf` in `occupied_leaves` (binary search over the
-    /// Morton order), or `None` for unoccupied leaves.
+    /// Morton order), or `None` for boxes that are not occupied leaves.
     #[inline]
     pub fn leaf_index(&self, leaf: &BoxId) -> Option<usize> {
-        if leaf.level != self.levels {
-            return None;
+        match self.mode {
+            TreeMode::Uniform => {
+                if leaf.level != self.levels {
+                    return None;
+                }
+                self.occupied_leaves
+                    .binary_search_by_key(&leaf.morton(), BoxId::morton)
+                    .ok()
+            }
+            TreeMode::Adaptive { .. } => {
+                if leaf.level > self.levels {
+                    return None;
+                }
+                let key = self.start_key(leaf);
+                let i = self
+                    .occupied_leaves
+                    .binary_search_by_key(&key, |b| self.start_key(b))
+                    .ok()?;
+                // distinct leaves are disjoint, so start keys are
+                // unique — but an ancestor/descendant of a leaf shares
+                // its start corner and must not alias it
+                (self.occupied_leaves[i] == *leaf).then_some(i)
+            }
         }
-        self.occupied_leaves
-            .binary_search_by_key(&leaf.morton(), BoxId::morton)
-            .ok()
+    }
+
+    /// Occupied leaves contained in `b` (including `b` itself if it is
+    /// a leaf), as a contiguous z-ordered slice of `occupied_leaves`.
+    /// With 2:1 balance these are the descend-side P2P partners of a
+    /// leaf's near domain.  A leaf *containing* `b` is not returned.
+    pub fn leaves_under(&self, b: &BoxId) -> &[BoxId] {
+        if b.level > self.levels {
+            return &[];
+        }
+        let s = self.start_key(b);
+        let e = s + (1u64 << ((2 * (self.levels - b.level)) as u32));
+        let mut lo = self
+            .occupied_leaves
+            .partition_point(|c| self.start_key(c) < s);
+        let hi = self
+            .occupied_leaves
+            .partition_point(|c| self.start_key(c) < e);
+        // a coarser leaf sharing b's start corner lands in the key
+        // range without being contained in b — skip it
+        while lo < hi && self.occupied_leaves[lo].level < b.level {
+            lo += 1;
+        }
+        &self.occupied_leaves[lo..hi]
     }
 
     /// Internal-position range `lo..hi` of a leaf's contiguous slice
@@ -290,6 +485,132 @@ impl Quadtree {
             out[i as usize] = vals[pos];
         }
         out
+    }
+}
+
+/// Depth-`levels` Morton key range `[start, end)` a box covers.
+#[inline]
+fn key_range(levels: u8, b: &BoxId) -> (u64, u64) {
+    let d = (2 * (levels - b.level)) as u32;
+    (b.morton() << d, (b.morton() + 1) << d)
+}
+
+/// Derive the adaptive leaf set from the depth-`levels`-Morton-sorted
+/// key array (DESIGN.md §12): capacity-driven top-down refinement
+/// followed by the 2:1 balance pass.  Returns `(leaf, lo, hi)` triples
+/// in z-order whose half-open ranges partition `0..keyed.len()` — the
+/// CSR offsets fall straight out.  Empty boxes are never emitted.
+fn derive_adaptive_leaves(levels: u8, leaf_capacity: u32, min_level: u8,
+                          keyed: &[(u64, u32)])
+    -> Vec<(BoxId, u32, u32)> {
+    let mut out = Vec::new();
+    refine_by_capacity(levels, leaf_capacity.max(1), min_level, keyed,
+                       0, 0, 0, keyed.len(), &mut out);
+    balance_2to1(levels, keyed, out)
+}
+
+/// End of the range (relative to `keyed`) of depth-`levels` keys whose
+/// level-`level` ancestor Morton index is `m`, searched in `lo..hi`.
+#[inline]
+fn child_range_end(levels: u8, level: u8, m: u64,
+                   keyed: &[(u64, u32)], lo: usize, hi: usize) -> usize {
+    let shift = (2 * (levels - level)) as u32;
+    lo + keyed[lo..hi].partition_point(|&(k, _)| (k >> shift) <= m)
+}
+
+/// Top-down capacity refinement: split every occupied box holding more
+/// than `leaf_capacity` particles, from the root down, never shallower
+/// than `min_level` (the tree cut must own whole leaves) and never
+/// deeper than `levels` (an over-full depth-`levels` box stays a leaf).
+/// Recursing over the four children in z-order emits leaves z-ordered.
+#[allow(clippy::too_many_arguments)]
+fn refine_by_capacity(levels: u8, leaf_capacity: u32, min_level: u8,
+                      keyed: &[(u64, u32)], level: u8, m: u64,
+                      lo: usize, hi: usize,
+                      out: &mut Vec<(BoxId, u32, u32)>) {
+    if lo == hi {
+        return;
+    }
+    let fits = (hi - lo) as u32 <= leaf_capacity;
+    if level == levels || (level >= min_level && fits) {
+        out.push((BoxId::from_morton(level, m), lo as u32, hi as u32));
+        return;
+    }
+    let mut clo = lo;
+    for c in 0..4u64 {
+        let cm = (m << 2) | c;
+        let chi = child_range_end(levels, level + 1, cm, keyed, clo, hi);
+        refine_by_capacity(levels, leaf_capacity, min_level, keyed,
+                           level + 1, cm, clo, chi, out);
+        clo = chi;
+    }
+}
+
+/// 2:1 balance (DESIGN.md §12): iteratively split any leaf `a` that has
+/// an occupied leaf more than one level finer inside a same-level
+/// neighbor of `a`, until a fixpoint.  The invariant bounds every
+/// near-field partner of a leaf to one level finer (the descend set)
+/// or one level coarser (the parent's leaf neighbors), which is what
+/// keeps the adaptive interaction lists within the uniform ≤40-offset
+/// operator census instead of exploding.
+///
+/// Split decisions for one round are taken against a snapshot, then
+/// applied together — cascades resolve in later rounds, so the result
+/// is independent of traversal order (and deterministic).  Terminates:
+/// every round strictly deepens at least one leaf and depth is capped
+/// at `levels`.
+fn balance_2to1(levels: u8, keyed: &[(u64, u32)],
+                mut leaves: Vec<(BoxId, u32, u32)>)
+    -> Vec<(BoxId, u32, u32)> {
+    loop {
+        let starts: Vec<u64> = leaves
+            .iter()
+            .map(|(b, _, _)| key_range(levels, b).0)
+            .collect();
+        let deepest_in = |n: &BoxId| -> u8 {
+            let (s, e) = key_range(levels, n);
+            let lo = starts.partition_point(|&k| k < s);
+            let hi = starts.partition_point(|&k| k < e);
+            // a coarser leaf sharing n's start corner can land in the
+            // range; it is never deeper, so the max is unaffected
+            leaves[lo..hi]
+                .iter()
+                .map(|(c, _, _)| c.level)
+                .max()
+                .unwrap_or(0)
+        };
+        let need: Vec<bool> = leaves
+            .iter()
+            .map(|(a, _, _)| {
+                a.level < levels
+                    && neighbors(a)
+                        .iter()
+                        .any(|n| deepest_in(n) > a.level + 1)
+            })
+            .collect();
+        if !need.iter().any(|&x| x) {
+            return leaves;
+        }
+        let mut next = Vec::with_capacity(leaves.len() + 3);
+        for (i, &(a, lo, hi)) in leaves.iter().enumerate() {
+            if !need[i] {
+                next.push((a, lo, hi));
+                continue;
+            }
+            let (lo, hi) = (lo as usize, hi as usize);
+            let mut clo = lo;
+            for c in 0..4u64 {
+                let cm = (a.morton() << 2) | c;
+                let chi = child_range_end(levels, a.level + 1, cm,
+                                          keyed, clo, hi);
+                if chi > clo {
+                    next.push((BoxId::from_morton(a.level + 1, cm),
+                               clo as u32, chi as u32));
+                }
+                clo = chi;
+            }
+        }
+        leaves = next;
     }
 }
 
@@ -526,6 +847,188 @@ mod tests {
                 &Quadtree::build(Domain::UNIT, 3, parts),
             );
         }
+    }
+
+    /// CSR/store invariants shared by every build path and both modes.
+    fn assert_store_invariants(t: &Quadtree) {
+        assert_eq!(t.leaf_offsets.len(), t.occupied_leaves.len() + 1);
+        assert_eq!(t.leaf_offsets[0], 0);
+        assert_eq!(*t.leaf_offsets.last().unwrap() as usize,
+                   t.n_particles());
+        for w in t.leaf_offsets.windows(2) {
+            assert!(w[0] < w[1], "empty leaf emitted");
+        }
+        for pos in 0..t.n_particles() {
+            let i = t.perm[pos] as usize;
+            assert_eq!(t.inv_perm[i] as usize, pos);
+            assert_eq!(t.xs[pos], t.particles[i][0]);
+        }
+        // capacity honored strictly above the depth floor
+        if let TreeMode::Adaptive { leaf_capacity, .. } = t.mode {
+            for (i, b) in t.occupied_leaves.iter().enumerate() {
+                if b.level < t.levels {
+                    let len = t.leaf_offsets[i + 1] - t.leaf_offsets[i];
+                    assert!(len <= leaf_capacity,
+                            "{b:?} holds {len} > cap {leaf_capacity}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_adaptive_rebuild_matches_build_bitwise() {
+        // motion that reshapes the refinement pattern still reproduces
+        // a cold adaptive build field-for-field
+        check("adaptive rebuild == build", 16, |g| {
+            let n = g.usize_in(0, 500);
+            let parts = g.clustered_particles(n, 3);
+            let mut tree = Quadtree::build_adaptive(
+                Domain::UNIT, 6, 20, 1, g.clustered_particles(200, 2),
+            );
+            let mut scratch = RebuildScratch::default();
+            tree.rebuild_into(&mut scratch, parts.clone());
+            let fresh =
+                Quadtree::build_adaptive(Domain::UNIT, 6, 20, 1, parts);
+            assert_trees_identical(&tree, &fresh);
+            assert_store_invariants(&tree);
+        });
+    }
+
+    #[test]
+    fn adaptive_rebuild_tracks_occupancy_shape_changes() {
+        // a tight blob refines deeply around itself; translating it
+        // must move the refined region (different leaf TOPOLOGY, not
+        // just different offsets) while preserving every invariant
+        let mut g = Gen::new(13);
+        let parts: Vec<Particle> = (0..400)
+            .map(|_| {
+                [
+                    (0.12 + 0.02 * g.normal()).clamp(0.0, 0.999),
+                    (0.12 + 0.02 * g.normal()).clamp(0.0, 0.999),
+                    g.normal(),
+                ]
+            })
+            .collect();
+        let mut tree = Quadtree::build_adaptive(Domain::UNIT, 6, 16, 0,
+                                                parts);
+        assert_store_invariants(&tree);
+        assert!(tree.occupied_leaves.iter().any(|b| b.level > 2),
+                "blob should refine past level 2");
+        let before = tree.occupied_leaves.clone();
+        let mut scratch = RebuildScratch::default();
+        let mut moved = std::mem::take(&mut tree.particles);
+        for p in &mut moved {
+            p[0] = (p[0] + 0.7).min(0.999);
+            p[1] = (p[1] + 0.7).min(0.999);
+        }
+        tree.rebuild_into(&mut scratch, moved);
+        assert_ne!(tree.occupied_leaves, before,
+                   "moving the blob must reshape the leaf set");
+        assert_store_invariants(&tree);
+        let fresh = Quadtree::build_adaptive(Domain::UNIT, 6, 16, 0,
+                                             tree.particles.clone());
+        assert_trees_identical(&tree, &fresh);
+    }
+
+    #[test]
+    fn adaptive_rebuild_is_allocation_steady() {
+        // the dynamic stepper's contract holds in adaptive mode too:
+        // warm rebuilds with an unchanged particle count keep every
+        // buffer's base pointer, even as the leaf topology changes
+        let mut g = Gen::new(21);
+        let parts = g.clustered_particles(300, 2);
+        let mut tree =
+            Quadtree::build_adaptive(Domain::UNIT, 5, 12, 1, parts);
+        let mut scratch = RebuildScratch::default();
+        let moved = std::mem::take(&mut tree.particles);
+        tree.rebuild_into(&mut scratch, moved);
+        let (xs_ptr, perm_ptr, parts_ptr) = (
+            tree.xs.as_ptr(),
+            tree.perm.as_ptr(),
+            tree.particles.as_ptr(),
+        );
+        for step in 0..3 {
+            let mut moved = std::mem::take(&mut tree.particles);
+            for p in &mut moved {
+                p[0] = (p[0] + 0.02 * (step + 1) as f64).fract().abs();
+                p[1] = (p[1] + 0.013).fract().abs();
+            }
+            tree.rebuild_into(&mut scratch, moved);
+            assert_eq!(tree.xs.as_ptr(), xs_ptr);
+            assert_eq!(tree.perm.as_ptr(), perm_ptr);
+            assert_eq!(tree.particles.as_ptr(), parts_ptr);
+            assert_store_invariants(&tree);
+        }
+    }
+
+    #[test]
+    fn prop_conforming_build_over_full_set_is_identical() {
+        // binning the full particle set into the tree's own leaf set
+        // must reproduce the tree exactly — the threaded runtime's
+        // rank-local trees are the sub-set case of the same path
+        check("conforming full == build", 12, |g| {
+            let n = g.usize_in(1, 400);
+            let parts = g.clustered_particles(n, 3);
+            let t = Quadtree::build_adaptive(Domain::UNIT, 5, 14, 1,
+                                             parts.clone());
+            let c = Quadtree::build_conforming(
+                Domain::UNIT, 5, t.mode, &t.occupied_leaves, parts,
+            );
+            assert_trees_identical(&t, &c);
+        });
+    }
+
+    #[test]
+    fn conforming_build_drops_locally_empty_leaves() {
+        let mut g = Gen::new(5);
+        let parts = g.clustered_particles(300, 3);
+        let t = Quadtree::build_adaptive(Domain::UNIT, 5, 14, 1,
+                                         parts.clone());
+        // keep only the particles of the first half of the leaves —
+        // a rank-local subset with contiguous Morton support
+        let split = t.occupied_leaves.len() / 2;
+        let cut_pos = t.leaf_offsets[split] as usize;
+        let local: Vec<Particle> = (0..cut_pos)
+            .map(|p| [t.xs[p], t.ys[p], t.gammas[p]])
+            .collect();
+        let c = Quadtree::build_conforming(
+            Domain::UNIT, 5, t.mode, &t.occupied_leaves, local,
+        );
+        assert_eq!(c.occupied_leaves, t.occupied_leaves[..split]);
+        for b in &c.occupied_leaves {
+            assert_eq!(c.leaf_len(b), t.leaf_len(b));
+        }
+        assert_store_invariants(&c);
+    }
+
+    #[test]
+    fn adaptive_empty_and_single_particle_trees_are_well_formed() {
+        let t = Quadtree::build_adaptive(Domain::UNIT, 4, 8, 1,
+                                         Vec::new());
+        assert!(t.occupied_leaves.is_empty());
+        assert_eq!(t.leaf_offsets, vec![0]);
+        let t = Quadtree::build_adaptive(Domain::UNIT, 4, 8, 2,
+                                         vec![[0.9, 0.9, 1.0]]);
+        // one particle fits any capacity: a single leaf at the depth
+        // floor (min_level), holding the particle
+        assert_eq!(t.occupied_leaves.len(), 1);
+        assert_eq!(t.occupied_leaves[0].level, 2);
+        assert_eq!(t.leaf_len(&t.occupied_leaves[0]), 1);
+        assert_store_invariants(&t);
+    }
+
+    #[test]
+    fn uniform_mode_is_unchanged_by_the_adaptive_refactor() {
+        // the uniform leaf set is exactly the depth-L boxes, and
+        // occupied_at_level/leaf_index behave as before
+        let mut g = Gen::new(9);
+        let t = tree_from(&mut g, 250, 4);
+        assert_eq!(t.mode, TreeMode::Uniform);
+        for b in &t.occupied_leaves {
+            assert_eq!(b.level, 4);
+            assert!(t.leaf_index(b).is_some());
+        }
+        assert!(t.leaf_index(&t.occupied_leaves[0].ancestor(3)).is_none());
     }
 
     #[test]

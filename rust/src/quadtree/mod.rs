@@ -2,14 +2,16 @@
 //! and geometry, particle binning, neighbor/interaction lists, and the
 //! tree cut that produces the parallel subtrees (§4).
 
+pub mod adaptive;
 pub mod build;
 pub mod cut;
 pub mod morton;
 pub mod neighbors;
 pub mod node;
 
-pub use build::{Domain, Particle, Quadtree, RebuildScratch};
+pub use adaptive::{m2l_pairs_at, p2p_interactions, p2p_sources};
+pub use build::{Domain, Particle, Quadtree, RebuildScratch, TreeMode};
 pub use cut::{Adjacency, TreeCut};
-pub use neighbors::{box_offset, interaction_list, near_domain, neighbors,
-                    well_separated_offsets};
+pub use neighbors::{box_offset, interaction_list, is_interaction_pair,
+                    near_domain, neighbors, well_separated_offsets};
 pub use node::BoxId;

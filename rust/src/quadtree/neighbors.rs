@@ -61,8 +61,25 @@ pub fn well_separated_offsets() -> Vec<(i32, i32)> {
     out
 }
 
-/// The interaction list: same-level boxes that are children of the
-/// parent's near domain but not adjacent to `b` (≤ 27 in 2D).
+/// The interaction-pair relation (§2.1): `b` and `c` are same-level,
+/// not adjacent, but their parents are adjacent (or identical) — the
+/// one shared predicate both the list builder below and the test
+/// oracles derive from, so domain-boundary edge handling can never
+/// drift between them.  Levels 0 and 1 have no well-separated boxes.
+#[inline]
+pub fn is_interaction_pair(b: &BoxId, c: &BoxId) -> bool {
+    b.level == c.level
+        && b.level >= 2
+        && !b.touches(c)
+        && b.parent()
+            .expect("level >= 2 has a parent")
+            .touches(&c.parent().expect("level >= 2 has a parent"))
+}
+
+/// The interaction list: same-level boxes satisfying
+/// [`is_interaction_pair`] with `b`, enumerated as children of the
+/// parent's near domain (≤ 27 in 2D; fewer at domain boundaries, where
+/// `neighbors` clamping shrinks the candidate set).
 pub fn interaction_list(b: &BoxId) -> Vec<BoxId> {
     if b.level < 2 {
         // levels 0 and 1 have no well-separated boxes
@@ -72,7 +89,7 @@ pub fn interaction_list(b: &BoxId) -> Vec<BoxId> {
     let mut out = Vec::with_capacity(27);
     for pn in near_domain(&parent) {
         for c in pn.children() {
-            if !b.touches(&c) {
+            if is_interaction_pair(b, &c) {
                 out.push(c);
             }
         }
@@ -85,18 +102,17 @@ mod tests {
     use super::*;
     use crate::proptest::{check, Gen};
 
-    /// Brute-force oracle: all same-level boxes with Chebyshev distance
-    /// > 1 whose parents have Chebyshev distance <= 1.
+    /// Brute-force oracle: scan *every* box of the level and keep the
+    /// ones the shared [`is_interaction_pair`] predicate admits — the
+    /// builder and the oracle differ only in enumeration strategy, so
+    /// any mismatch is a boundary-clamping bug in the enumeration.
     fn interaction_list_bruteforce(b: &BoxId) -> Vec<BoxId> {
         let n = 1u32 << b.level;
         let mut out = Vec::new();
         for x in 0..n {
             for y in 0..n {
                 let c = BoxId::new(b.level, x, y);
-                if b.touches(&c) {
-                    continue;
-                }
-                if b.parent().unwrap().touches(&c.parent().unwrap()) {
+                if is_interaction_pair(b, &c) {
                     out.push(c);
                 }
             }
@@ -204,6 +220,46 @@ mod tests {
             for c in interaction_list(&b) {
                 assert!(offsets.contains(&box_offset(&b, &c)));
             }
+        });
+    }
+
+    #[test]
+    fn interaction_list_matches_oracle_at_every_level_and_corner() {
+        // exhaustive at the domain boundary: all four corners, the four
+        // edge midpoints, and a near-corner box, at every level 2..=6 —
+        // the cases where `neighbors` clamping must not lose (or
+        // invent) candidates
+        for level in 2..=6u8 {
+            let n = (1u32 << level) - 1;
+            let probes = [
+                (0, 0), (n, 0), (0, n), (n, n),        // corners
+                (n / 2, 0), (n / 2, n), (0, n / 2), (n, n / 2),
+                (1, 1), (n - 1, n - 1), (1, n), (n, 1),
+            ];
+            for &(x, y) in &probes {
+                let b = BoxId::new(level, x, y);
+                let mut got = interaction_list(&b);
+                let mut want = interaction_list_bruteforce(&b);
+                got.sort();
+                want.sort();
+                assert_eq!(got, want, "level {level} box ({x},{y})");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_predicate_is_symmetric() {
+        // the shared predicate itself is symmetric, so builder and
+        // oracle inherit symmetry rather than asserting it separately
+        check("is_interaction_pair symmetric", 64, |g: &mut Gen| {
+            let level = g.usize_in(2, 6) as u8;
+            let n = (1u32 << level) as usize;
+            let b = BoxId::new(level, g.usize_in(0, n - 1) as u32,
+                               g.usize_in(0, n - 1) as u32);
+            let c = BoxId::new(level, g.usize_in(0, n - 1) as u32,
+                               g.usize_in(0, n - 1) as u32);
+            assert_eq!(is_interaction_pair(&b, &c),
+                       is_interaction_pair(&c, &b));
         });
     }
 

@@ -19,8 +19,8 @@ use std::collections::{BTreeMap, BTreeSet, HashSet};
 use crate::comm::{interaction_overlap, neighbor_overlap, owner_of};
 use crate::fmm::{Evaluator, FmmState};
 use crate::partition::Assignment;
-use crate::quadtree::{box_offset, interaction_list, near_domain, BoxId,
-                      Quadtree, TreeCut};
+use crate::quadtree::{box_offset, interaction_list, near_domain,
+                      p2p_sources, BoxId, Quadtree, TreeCut, TreeMode};
 
 /// Expansion-block wire size: 16 p bytes (p complex f64).
 pub fn coeff_bytes(terms: usize) -> f64 {
@@ -182,12 +182,28 @@ impl ParallelPlan {
         }
 
         // ---- near field: P2P pairs per rank ----
+        // uniform: occupied members of the near domain; adaptive: the
+        // descend + coarse sets of `p2p_sources`, which degenerate to
+        // the same thing on a uniform leaf set.  Both iterate targets
+        // in Morton order so per-rank task lists match the serial sweep
         reset2(&mut self.p2p_pairs, ranks);
-        for tgt in &tree.occupied_leaves {
-            let r = owner(tgt);
-            for src in near_domain(tgt) {
-                if tree.leaf_len(&src) > 0 {
-                    self.p2p_pairs[r].push((*tgt, src));
+        match tree.mode {
+            TreeMode::Uniform => {
+                for tgt in &tree.occupied_leaves {
+                    let r = owner(tgt);
+                    for src in near_domain(tgt) {
+                        if tree.leaf_len(&src) > 0 {
+                            self.p2p_pairs[r].push((*tgt, src));
+                        }
+                    }
+                }
+            }
+            TreeMode::Adaptive { .. } => {
+                for tgt in &tree.occupied_leaves {
+                    let r = owner(tgt);
+                    for src in p2p_sources(tree, tgt) {
+                        self.p2p_pairs[r].push((*tgt, src));
+                    }
                 }
             }
         }

@@ -1,0 +1,149 @@
+//! Adaptive-tree conformance suite (DESIGN.md §12): on clustered
+//! inputs — where the adaptive refinement actually produces a
+//! mixed-level leaf set — every registered kernel must
+//!
+//! 1. match its direct-sum oracle through the `FmmSolver` facade in all
+//!    three run modes (serial / threaded / simulated), within the same
+//!    tolerance the uniform conformance suite enforces,
+//! 2. be bitwise deterministic: worker counts 1/2/8 and all three run
+//!    modes produce *identical* output vectors, and
+//! 3. do strictly less near-field work than the uniform tree on the
+//!    same particles (the point of refining adaptively).
+//!
+//! Uniform mode is pinned elsewhere (tests/kernel_conformance.rs, the
+//! golden digests); this file never touches it except to compare work.
+
+use petfmm::config::RunConfig;
+use petfmm::coordinator::{generate, FmmSolver, RunMode};
+use petfmm::fmm::KernelSpec;
+use petfmm::quadtree::{p2p_interactions, Domain, Quadtree};
+use petfmm::util::rel_l2_error;
+
+fn conf(kernel: KernelSpec) -> RunConfig {
+    RunConfig {
+        particles: 320,
+        levels: 5,
+        terms: 17,
+        sigma: 0.005,
+        kernel,
+        ranks: 4,
+        distribution: "clustered".into(),
+        tree: "adaptive".into(),
+        leaf_capacity: 10,
+        seed: 11,
+        par_threads: 1,
+        ..Default::default()
+    }
+}
+
+const MODES: [RunMode; 3] =
+    [RunMode::Serial, RunMode::Threaded, RunMode::Simulated];
+
+#[test]
+fn adaptive_trees_are_genuinely_mixed_level() {
+    let sol = FmmSolver::from_config(&conf(KernelSpec::BiotSavart))
+        .solve()
+        .unwrap();
+    let tree = &sol.problem.tree;
+    let max = tree.occupied_leaves.iter().map(|b| b.level).max().unwrap();
+    let min = tree.occupied_leaves.iter().map(|b| b.level).min().unwrap();
+    assert!(max > min,
+            "clustered input must refine non-uniformly (all at {max})");
+    assert_eq!(max, 5, "the blobs should reach full depth");
+}
+
+#[test]
+fn every_kernel_matches_its_direct_oracle_in_all_modes_adaptive() {
+    for spec in KernelSpec::ALL {
+        for mode in MODES {
+            let sol = FmmSolver::from_config(&conf(spec))
+                .mode(mode)
+                .solve()
+                .unwrap();
+            let want = sol.direct_oracle();
+            let err = rel_l2_error(&sol.vel, &want);
+            assert!(
+                err < 2e-4,
+                "adaptive {} / {}: rel l2 err {err}",
+                spec.name(),
+                mode.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn every_kernel_is_bitwise_deterministic_adaptive() {
+    for spec in KernelSpec::ALL {
+        let base = FmmSolver::from_config(&conf(spec)).solve().unwrap();
+        for threads in [2usize, 8] {
+            let t = FmmSolver::from_config(&conf(spec))
+                .threads(threads)
+                .solve()
+                .unwrap();
+            assert_eq!(base.vel, t.vel,
+                       "adaptive {}: threads={threads} changed bits",
+                       spec.name());
+        }
+        for mode in [RunMode::Threaded, RunMode::Simulated] {
+            let m = FmmSolver::from_config(&conf(spec))
+                .mode(mode)
+                .solve()
+                .unwrap();
+            assert_eq!(base.vel, m.vel,
+                       "adaptive {}: mode {} diverged from serial",
+                       spec.name(), mode.name());
+        }
+    }
+}
+
+#[test]
+fn adaptive_matches_oracle_on_the_new_clustered_workloads() {
+    // the satellite generators drive the refinement hardest: a galaxy
+    // bulge and a quasi-1D sheet, biot-savart, serial + threaded
+    for dist in ["galaxy", "vortex-sheet"] {
+        let cfg = RunConfig {
+            distribution: dist.into(),
+            levels: 6,
+            leaf_capacity: 16,
+            ..conf(KernelSpec::BiotSavart)
+        };
+        for mode in [RunMode::Serial, RunMode::Threaded] {
+            let sol = FmmSolver::from_config(&cfg)
+                .mode(mode)
+                .solve()
+                .unwrap();
+            let want = sol.direct_oracle();
+            let err = rel_l2_error(&sol.vel, &want);
+            assert!(err < 2e-4, "{dist} / {}: err {err}", mode.name());
+        }
+    }
+}
+
+#[test]
+fn adaptive_does_strictly_less_p2p_work_than_uniform_when_clustered() {
+    let parts = generate(&RunConfig {
+        particles: 4000,
+        ..conf(KernelSpec::BiotSavart)
+    })
+    .unwrap();
+    let uni = Quadtree::build(Domain::UNIT, 5, parts.clone());
+    let ada = Quadtree::build_adaptive(Domain::UNIT, 7, 24, 2, parts);
+    let (wu, wa) = (p2p_interactions(&uni), p2p_interactions(&ada));
+    assert!(
+        wa < wu,
+        "adaptive P2P work {wa} must undercut uniform {wu} on clusters"
+    );
+}
+
+#[test]
+fn uniform_stays_the_default_tree_mode() {
+    // the bitwise-pinning contract starts here: nothing adaptive runs
+    // unless explicitly requested
+    let c = RunConfig::default();
+    assert_eq!(c.tree, "uniform");
+    assert_eq!(
+        c.tree_mode().unwrap(),
+        petfmm::quadtree::TreeMode::Uniform
+    );
+}
