@@ -1,0 +1,493 @@
+//! Deterministic fault injection for the threaded runtime
+//! (DESIGN.md §13).
+//!
+//! [`FaultyTransport`] wraps any [`Transport`] and perturbs data
+//! packets on the send side: drops, duplications, delays (reordering
+//! past later traffic) and single-bit payload corruptions.  Every
+//! decision is a *pure hash* of
+//! `(seed, epoch, from, to, stage, seq, attempt)` — no RNG state, no
+//! wall clock — so a given chaos run injects exactly the same faults
+//! at exactly the same protocol positions every time, regardless of
+//! thread scheduling.  Retransmissions carry a fresh `attempt` index
+//! and therefore draw fresh decisions (a dropped packet is not doomed
+//! forever), and step-level retries bump `epoch` to re-roll the whole
+//! fault universe (an unlucky all-attempts-dropped message is not
+//! doomed across retries either).
+//!
+//! Acknowledgements are never faulted.  This loses no generality — a
+//! lost ack is observationally identical to a lost data packet
+//! (sender retransmits, receiver re-acks the duplicate) — and keeps
+//! the injected-fault counters attributable to data traffic.
+
+use std::collections::HashMap;
+
+use super::message::Message;
+use super::transport::{Body, CommError, FaultCounters, Packet,
+                       RetryPolicy, Stage, Transport};
+
+/// Per-stage fault probabilities.  The four classes are disjoint: one
+/// uniform draw per transmission lands in at most one class.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultProfile {
+    /// Probability the packet is silently dropped.
+    pub p_drop: f64,
+    /// Probability the packet is delivered twice.
+    pub p_duplicate: f64,
+    /// Probability the packet is held back past later traffic.
+    pub p_delay: f64,
+    /// Probability one payload bit is flipped.
+    pub p_corrupt: f64,
+}
+
+impl FaultProfile {
+    /// No faults.
+    pub const OFF: FaultProfile = FaultProfile {
+        p_drop: 0.0,
+        p_duplicate: 0.0,
+        p_delay: 0.0,
+        p_corrupt: 0.0,
+    };
+
+    /// Any class active?
+    pub fn is_active(&self) -> bool {
+        self.p_drop + self.p_duplicate + self.p_delay + self.p_corrupt
+            > 0.0
+    }
+}
+
+/// Named chaos profiles selectable via the `chaos` config key /
+/// `--chaos-profile` flag.
+pub const PROFILE_NAMES: [&str; 5] =
+    ["off", "lossy", "corrupt", "flaky", "blackhole"];
+
+/// A seeded, fully deterministic fault schedule: which transmissions
+/// are perturbed, and how the reliability layer should pace its
+/// recovery ([`RetryPolicy`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Chaos seed (`--chaos-seed`); distinct seeds give independent
+    /// fault universes.
+    pub seed: u64,
+    /// Retry epoch: bumped by step-level recovery so a retried step
+    /// faces fresh faults rather than replaying the fatal ones.
+    pub epoch: u64,
+    /// Per-stage probabilities, indexed by [`Stage::index`].
+    pub profiles: [FaultProfile; 5],
+    /// Retransmission schedule matched to the profile's severity.
+    pub policy: RetryPolicy,
+}
+
+impl FaultPlan {
+    /// Build a plan from a named profile (see [`PROFILE_NAMES`]).
+    /// `"off"` and unknown names return `None` — config validation
+    /// turns the latter into a typed error before this is reached.
+    pub fn from_profile(name: &str, seed: u64) -> Option<FaultPlan> {
+        let (profile, policy) = match name {
+            "lossy" => (
+                FaultProfile {
+                    p_drop: 0.2,
+                    p_duplicate: 0.1,
+                    p_delay: 0.1,
+                    p_corrupt: 0.0,
+                },
+                RetryPolicy::chaos_default(),
+            ),
+            "corrupt" => (
+                FaultProfile { p_corrupt: 0.25, ..FaultProfile::OFF },
+                RetryPolicy::chaos_default(),
+            ),
+            "flaky" => (
+                FaultProfile {
+                    p_drop: 0.15,
+                    p_duplicate: 0.1,
+                    p_delay: 0.1,
+                    p_corrupt: 0.15,
+                },
+                RetryPolicy::chaos_default(),
+            ),
+            // unrecoverable by construction: every data packet dropped;
+            // the fail-fast policy keeps declaring death cheap
+            "blackhole" => (
+                FaultProfile { p_drop: 1.0, ..FaultProfile::OFF },
+                RetryPolicy::fail_fast(),
+            ),
+            _ => return None,
+        };
+        Some(FaultPlan {
+            seed,
+            epoch: 0,
+            profiles: [profile; 5],
+            policy,
+        })
+    }
+
+    /// Build a plan that perturbs a single stage only — the fault-grid
+    /// test uses this to prove recovery class by class, stage by
+    /// stage.
+    pub fn targeted(stage: Stage, profile: FaultProfile, seed: u64)
+        -> FaultPlan {
+        let mut profiles = [FaultProfile::OFF; 5];
+        profiles[stage.index()] = profile;
+        FaultPlan {
+            seed,
+            epoch: 0,
+            profiles,
+            policy: RetryPolicy::chaos_default(),
+        }
+    }
+
+    /// Same plan, different retry epoch (fresh fault universe).
+    pub fn with_epoch(mut self, epoch: u64) -> FaultPlan {
+        self.epoch = epoch;
+        self
+    }
+
+    /// Whether any stage injects anything.
+    pub fn is_active(&self) -> bool {
+        self.profiles.iter().any(FaultProfile::is_active)
+    }
+
+    /// The fault decision for one transmission — a pure function of
+    /// the plan and the transmission's protocol coordinates.
+    pub fn decide(
+        &self,
+        from: usize,
+        to: usize,
+        stage: Stage,
+        seq: u64,
+        attempt: u32,
+    ) -> FaultDecision {
+        let p = &self.profiles[stage.index()];
+        if !p.is_active() {
+            return FaultDecision::Deliver;
+        }
+        let h = mix(&[
+            self.seed,
+            self.epoch,
+            from as u64,
+            to as u64,
+            stage.index() as u64,
+            seq,
+            u64::from(attempt),
+        ]);
+        let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let mut acc = p.p_drop;
+        if u < acc {
+            return FaultDecision::Drop;
+        }
+        acc += p.p_duplicate;
+        if u < acc {
+            return FaultDecision::Duplicate;
+        }
+        acc += p.p_delay;
+        if u < acc {
+            return FaultDecision::Delay;
+        }
+        acc += p.p_corrupt;
+        if u < acc {
+            // independent draw for the bit position
+            let h2 = mix(&[h, 0x5bd1_e995]);
+            return FaultDecision::Corrupt {
+                word_pick: h2,
+                bit: (h2 >> 57) as u8 & 63,
+            };
+        }
+        FaultDecision::Deliver
+    }
+}
+
+/// Outcome of [`FaultPlan::decide`] for one transmission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultDecision {
+    /// Pass through untouched.
+    Deliver,
+    /// Silently discard.
+    Drop,
+    /// Deliver two copies.
+    Duplicate,
+    /// Hold back until the next send to (or flush of) the same
+    /// destination.
+    Delay,
+    /// Flip payload bit `bit % 64` of word `word_pick % len`.
+    Corrupt { word_pick: u64, bit: u8 },
+}
+
+/// SplitMix64-style avalanche of a word sequence into one u64.
+fn mix(parts: &[u64]) -> u64 {
+    let mut h = 0x9e37_79b9_7f4a_7c15u64;
+    for &p in parts {
+        let mut z = h.wrapping_add(p).wrapping_add(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        h = z ^ (z >> 31);
+    }
+    h
+}
+
+/// A [`Transport`] wrapper that perturbs outgoing data packets per a
+/// [`FaultPlan`].  Sits *below* the reliability layer, so every
+/// injected fault exercises the real recovery machinery.
+pub struct FaultyTransport<T> {
+    inner: T,
+    plan: FaultPlan,
+    /// Transmission counter per (to, stage, seq) — the `attempt` axis
+    /// of the fault decision.
+    attempts: HashMap<(usize, u8, u64), u32>,
+    /// At most one held (delayed) packet per destination.
+    held: Vec<Option<Packet>>,
+    counters: FaultCounters,
+}
+
+impl<T: Transport> FaultyTransport<T> {
+    /// Wrap `inner` under `plan`.
+    pub fn new(inner: T, plan: FaultPlan) -> FaultyTransport<T> {
+        let n = inner.ranks();
+        FaultyTransport {
+            inner,
+            plan,
+            attempts: HashMap::new(),
+            held: vec![None; n],
+            counters: FaultCounters::default(),
+        }
+    }
+
+    /// Release the packet (if any) held back for `to`.
+    fn release(&mut self, to: usize) -> Result<(), CommError> {
+        if let Some(pkt) = self.held[to].take() {
+            self.inner.send(to, pkt)?;
+        }
+        Ok(())
+    }
+}
+
+impl<T: Transport> Transport for FaultyTransport<T> {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn ranks(&self) -> usize {
+        self.inner.ranks()
+    }
+
+    fn send(&mut self, to: usize, pkt: Packet) -> Result<(), CommError> {
+        if matches!(pkt.body, Body::Ack) {
+            return self.inner.send(to, pkt);
+        }
+        // a held packet is "late": it goes out just before the next
+        // traffic to the same destination (or at flush)
+        self.release(to)?;
+        let key = (to, pkt.stage.index() as u8, pkt.seq);
+        let attempt = {
+            let a = self.attempts.entry(key).or_insert(0);
+            let cur = *a;
+            *a += 1;
+            cur
+        };
+        match self.plan.decide(self.rank(), to, pkt.stage, pkt.seq,
+                               attempt) {
+            FaultDecision::Deliver => self.inner.send(to, pkt),
+            FaultDecision::Drop => {
+                self.counters.injected_drops += 1;
+                Ok(())
+            }
+            FaultDecision::Duplicate => {
+                self.counters.injected_duplicates += 1;
+                self.inner.send(to, pkt.clone())?;
+                self.inner.send(to, pkt)
+            }
+            FaultDecision::Delay => {
+                self.counters.injected_delays += 1;
+                self.held[to] = Some(pkt);
+                Ok(())
+            }
+            FaultDecision::Corrupt { word_pick, bit } => {
+                let mut pkt = pkt;
+                let flipped = match pkt.body {
+                    Body::Data(ref mut m) => {
+                        m.flip_payload_bit(word_pick, bit)
+                    }
+                    Body::Ack => false,
+                };
+                if flipped {
+                    self.counters.injected_corruptions += 1;
+                }
+                self.inner.send(to, pkt)
+            }
+        }
+    }
+
+    fn recv(&mut self, deadline: Option<std::time::Instant>)
+        -> Result<Option<(usize, Packet)>, CommError> {
+        self.inner.recv(deadline)
+    }
+
+    fn flush(&mut self, to: usize) -> Result<(), CommError> {
+        self.release(to)?;
+        self.inner.flush(to)
+    }
+
+    fn take_counters(&mut self) -> FaultCounters {
+        let mut c = std::mem::take(&mut self.counters);
+        c.merge(&self.inner.take_counters());
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::transport::{channel_mesh, ReliableEndpoint};
+    use crate::quadtree::BoxId;
+
+    fn msg(v: f64) -> Message {
+        Message::Local { boxid: BoxId::ROOT, coeffs: vec![v, v + 1.0] }
+    }
+
+    #[test]
+    fn decisions_are_pure_and_epoch_sensitive() {
+        let plan = FaultPlan::from_profile("flaky", 42).unwrap();
+        for seq in 0..50u64 {
+            let a = plan.decide(0, 1, Stage::Exchange, seq, 0);
+            let b = plan.decide(0, 1, Stage::Exchange, seq, 0);
+            assert_eq!(a, b, "decision must be pure");
+        }
+        // a different epoch re-rolls the universe: some seq decides
+        // differently
+        let bumped = plan.clone().with_epoch(1);
+        let differs = (0..200u64).any(|seq| {
+            plan.decide(0, 1, Stage::Halo, seq, 0)
+                != bumped.decide(0, 1, Stage::Halo, seq, 0)
+        });
+        assert!(differs, "epoch bump must change the fault universe");
+        // and so does the attempt index
+        let differs = (0..200u64).any(|seq| {
+            plan.decide(0, 1, Stage::Halo, seq, 0)
+                != plan.decide(0, 1, Stage::Halo, seq, 1)
+        });
+        assert!(differs, "retransmissions must draw fresh decisions");
+    }
+
+    #[test]
+    fn profile_rates_roughly_match_requested_probabilities() {
+        let plan = FaultPlan::from_profile("lossy", 7).unwrap();
+        let n = 10_000u64;
+        let drops = (0..n)
+            .filter(|&s| {
+                plan.decide(1, 0, Stage::Gather, s, 0)
+                    == FaultDecision::Drop
+            })
+            .count() as f64;
+        let rate = drops / n as f64;
+        assert!((rate - 0.2).abs() < 0.02, "drop rate {rate}");
+    }
+
+    #[test]
+    fn targeted_plan_touches_only_its_stage() {
+        let profile = FaultProfile { p_drop: 1.0, ..FaultProfile::OFF };
+        let plan = FaultPlan::targeted(Stage::Exchange, profile, 3);
+        assert!(plan.is_active());
+        for seq in 0..20u64 {
+            assert_eq!(plan.decide(0, 1, Stage::Exchange, seq, 0),
+                       FaultDecision::Drop);
+            assert_eq!(plan.decide(0, 1, Stage::Halo, seq, 0),
+                       FaultDecision::Deliver);
+        }
+    }
+
+    #[test]
+    fn unknown_and_off_profiles_build_no_plan() {
+        assert!(FaultPlan::from_profile("off", 1).is_none());
+        assert!(FaultPlan::from_profile("mystery", 1).is_none());
+        assert!(FaultPlan::from_profile("blackhole", 1)
+            .unwrap()
+            .is_active());
+    }
+
+    #[test]
+    fn dropped_packets_never_arrive_and_delays_release_on_flush() {
+        let profile = FaultProfile { p_drop: 1.0, ..FaultProfile::OFF };
+        let mut mesh = channel_mesh(2);
+        let t1 = mesh.pop().unwrap();
+        let t0 = mesh.pop().unwrap();
+        let plan = FaultPlan::targeted(Stage::Halo, profile, 5);
+        let mut f = FaultyTransport::new(t0, plan);
+        f.send(1, Packet::seal(0, Stage::Halo, msg(1.0))).unwrap();
+        let mut rx = t1;
+        let now = std::time::Instant::now();
+        assert!(rx.recv(Some(now)).unwrap().is_none(), "dropped");
+        assert_eq!(f.take_counters().injected_drops, 1);
+
+        // delay: held until flush, then delivered intact
+        let profile = FaultProfile { p_delay: 1.0, ..FaultProfile::OFF };
+        let mut mesh = channel_mesh(2);
+        let t1 = mesh.pop().unwrap();
+        let t0 = mesh.pop().unwrap();
+        let plan = FaultPlan::targeted(Stage::Halo, profile, 5);
+        let mut f = FaultyTransport::new(t0, plan);
+        f.send(1, Packet::seal(0, Stage::Halo, msg(2.0))).unwrap();
+        let mut rx = t1;
+        let now = std::time::Instant::now();
+        assert!(rx.recv(Some(now)).unwrap().is_none(), "held");
+        f.flush(1).unwrap();
+        let (_, pkt) = rx.recv(None).unwrap().unwrap();
+        assert!(pkt.verify());
+        assert_eq!(f.take_counters().injected_delays, 1);
+    }
+
+    #[test]
+    fn corrupted_packets_fail_verification() {
+        let profile = FaultProfile { p_corrupt: 1.0, ..FaultProfile::OFF };
+        let mut mesh = channel_mesh(2);
+        let t1 = mesh.pop().unwrap();
+        let t0 = mesh.pop().unwrap();
+        let plan = FaultPlan::targeted(Stage::Scatter, profile, 9);
+        let mut f = FaultyTransport::new(t0, plan);
+        f.send(1, Packet::seal(0, Stage::Scatter, msg(3.0))).unwrap();
+        let mut rx = t1;
+        let (_, pkt) = rx.recv(None).unwrap().unwrap();
+        assert!(!pkt.verify(), "bit flip must break the checksum");
+        assert_eq!(f.take_counters().injected_corruptions, 1);
+    }
+
+    #[test]
+    fn reliable_endpoints_recover_exactly_once_under_chaos() {
+        // a lossy link between two live endpoints: every message must
+        // come through exactly once with intact content
+        let profile = FaultProfile {
+            p_drop: 0.2,
+            p_duplicate: 0.2,
+            p_delay: 0.1,
+            p_corrupt: 0.1,
+        };
+        let mut plan = FaultPlan::targeted(Stage::Reduce, profile, 1234);
+        // generous schedule: effective per-attempt loss is ~0.3, so 12
+        // attempts put accidental exhaustion below 1e-6 per message
+        plan.policy.max_attempts = 12;
+        let policy = plan.policy;
+        let mut mesh = channel_mesh(2);
+        let t1 = mesh.pop().unwrap();
+        let t0 = mesh.pop().unwrap();
+        let n = 40;
+        let sender = std::thread::spawn(move || {
+            let faulty = FaultyTransport::new(t0, plan);
+            let mut a = ReliableEndpoint::new(faulty, policy);
+            for i in 0..n {
+                a.send(1, Stage::Reduce, msg(i as f64)).unwrap();
+            }
+            a.into_counters()
+        });
+        let mut b = ReliableEndpoint::new(t1, policy);
+        let mut got = Vec::new();
+        for _ in 0..n {
+            let (_, stage, m) = b.recv(None).unwrap().unwrap();
+            assert_eq!(stage, Stage::Reduce);
+            got.push(m);
+        }
+        let mut counters = sender.join().unwrap();
+        counters.merge(&b.into_counters());
+        let want: Vec<Message> = (0..n).map(|i| msg(i as f64)).collect();
+        assert_eq!(got, want, "exactly-once, in-order, intact");
+        assert!(counters.injected_total() > 0, "chaos must have fired");
+        assert!(counters.retransmits > 0);
+    }
+}

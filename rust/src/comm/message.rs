@@ -5,6 +5,7 @@
 //! Byte sizes follow the paper's constants: a particle is B = 28 bytes
 //! (x, y, γ + tag), an expansion block is 16·p bytes (p complex f64).
 
+use super::transport::fnv1a_u64;
 use crate::quadtree::BoxId;
 
 /// Payload moved between ranks.
@@ -39,6 +40,97 @@ impl Message {
             Message::Barrier(_) => 0.0,
         }
     }
+
+    /// Fold every payload bit into an FNV-1a-64 state seeded with `h`
+    /// (the packet header hash): a variant tag, structural fields
+    /// (lengths, box ids, indices) and each `f64` as its raw bit
+    /// pattern.  Every FNV step is a bijection on the state, so any
+    /// single-bit change anywhere in the payload changes the result —
+    /// the property the checksum proptest pins down.
+    pub fn payload_hash(&self, mut h: u64) -> u64 {
+        match self {
+            Message::Particles { leaf, parts } => {
+                h = fnv1a_u64(h, 1);
+                h = fnv1a_u64(h, leaf.global_id());
+                h = fnv1a_u64(h, parts.len() as u64);
+                for p in parts {
+                    for c in p {
+                        h = fnv1a_u64(h, c.to_bits());
+                    }
+                }
+            }
+            Message::Multipole { boxid, coeffs } => {
+                h = fnv1a_u64(h, 2);
+                h = fnv1a_u64(h, boxid.global_id());
+                h = fnv1a_u64(h, coeffs.len() as u64);
+                for c in coeffs {
+                    h = fnv1a_u64(h, c.to_bits());
+                }
+            }
+            Message::Local { boxid, coeffs } => {
+                h = fnv1a_u64(h, 3);
+                h = fnv1a_u64(h, boxid.global_id());
+                h = fnv1a_u64(h, coeffs.len() as u64);
+                for c in coeffs {
+                    h = fnv1a_u64(h, c.to_bits());
+                }
+            }
+            Message::Velocities { idx, vel } => {
+                h = fnv1a_u64(h, 4);
+                h = fnv1a_u64(h, idx.len() as u64);
+                for i in idx {
+                    h = fnv1a_u64(h, u64::from(*i));
+                }
+                for v in vel {
+                    h = fnv1a_u64(h, v[0].to_bits());
+                    h = fnv1a_u64(h, v[1].to_bits());
+                }
+            }
+            Message::Barrier(t) => {
+                h = fnv1a_u64(h, 5);
+                h = fnv1a_u64(h, u64::from(*t));
+            }
+        }
+        h
+    }
+
+    /// Flip one bit of the floating-point payload in place (the chaos
+    /// harness's corruption fault): `word_pick` selects an `f64` slot
+    /// modulo the payload size, `bit` a bit within it (mod 64).
+    /// Returns `false` when the message has no mutable float payload
+    /// (barriers, empty blocks) — the fault is then a no-op.
+    pub fn flip_payload_bit(&mut self, word_pick: u64, bit: u8) -> bool {
+        let mask = 1u64 << (bit % 64);
+        let flip = |slot: &mut f64| {
+            *slot = f64::from_bits(slot.to_bits() ^ mask);
+        };
+        match self {
+            Message::Particles { parts, .. } => {
+                if parts.is_empty() {
+                    return false;
+                }
+                let w = (word_pick % (3 * parts.len() as u64)) as usize;
+                flip(&mut parts[w / 3][w % 3]);
+            }
+            Message::Multipole { coeffs, .. }
+            | Message::Local { coeffs, .. } => {
+                if coeffs.is_empty() {
+                    return false;
+                }
+                let w = (word_pick % coeffs.len() as u64) as usize;
+                flip(&mut coeffs[w]);
+            }
+            Message::Velocities { vel, .. } => {
+                if vel.is_empty() {
+                    return false;
+                }
+                let w = (word_pick % (2 * vel.len() as u64)) as usize;
+                flip(&mut vel[w / 2][w % 2]);
+            }
+            Message::Barrier(_) => return false,
+        }
+        true
+    }
 }
 
 #[cfg(test)]
@@ -69,5 +161,41 @@ mod tests {
     #[test]
     fn barrier_is_free() {
         assert_eq!(Message::Barrier(3).wire_bytes(), 0.0);
+    }
+
+    #[test]
+    fn payload_hash_covers_every_field() {
+        let base = Message::Particles {
+            leaf: BoxId { level: 2, ix: 1, iy: 3 },
+            parts: vec![[0.5, 0.25, 1.0], [0.75, 0.125, -1.0]],
+        };
+        let h0 = base.payload_hash(0xdead_beef);
+        // any single-bit flip in any particle coordinate changes it
+        for w in 0..6u64 {
+            for bit in [0u8, 31, 52, 63] {
+                let mut m = base.clone();
+                assert!(m.flip_payload_bit(w, bit));
+                assert_ne!(m.payload_hash(0xdead_beef), h0,
+                           "flip word {w} bit {bit} undetected");
+            }
+        }
+        // structural changes (leaf id) change it too
+        let moved = Message::Particles {
+            leaf: BoxId { level: 2, ix: 2, iy: 3 },
+            parts: vec![[0.5, 0.25, 1.0], [0.75, 0.125, -1.0]],
+        };
+        assert_ne!(moved.payload_hash(0xdead_beef), h0);
+    }
+
+    #[test]
+    fn flip_is_a_noop_without_float_payload() {
+        assert!(!Message::Barrier(1).flip_payload_bit(0, 0));
+        let mut empty = Message::Multipole {
+            boxid: BoxId::ROOT,
+            coeffs: Vec::new(),
+        };
+        assert!(!empty.flip_payload_bit(9, 9));
+        let mut v = Message::Velocities { idx: vec![4], vel: Vec::new() };
+        assert!(!v.flip_payload_bit(0, 0));
     }
 }

@@ -3,12 +3,17 @@
 //! model, Sieve-style overlap maps, and a threaded message-passing mode
 //! that physically exercises the parallel protocol.
 
+pub mod fault;
 pub mod message;
 pub mod network;
 pub mod overlap;
 pub mod threaded;
+pub mod transport;
 
+pub use fault::{FaultPlan, FaultProfile, FaultyTransport, PROFILE_NAMES};
 pub use message::{Message, PARTICLE_WIRE_BYTES};
 pub use network::NetworkModel;
 pub use overlap::{interaction_overlap, neighbor_overlap, owner_of,
                   OverlapMap};
+pub use transport::{ChannelTransport, CommError, FaultCounters, Packet,
+                    ReliableEndpoint, RetryPolicy, Stage, Transport};

@@ -1,6 +1,5 @@
 //! Threaded message-passing execution: the parallel FMM protocol run for
-//! real, one OS thread per rank, full-mesh mpsc channels, no shared
-//! mutable state.
+//! real, one OS thread per rank, no shared mutable state.
 //!
 //! Each rank sees ONLY its own particles plus what arrives in messages —
 //! exactly the information an MPI rank would hold.  This mode validates
@@ -8,25 +7,43 @@
 //! plan but executes on shared state); its results must match the serial
 //! evaluator, which is the §6.2 verification methodology.
 //!
+//! Since PR 7 the rank loop no longer touches channels directly: all
+//! traffic flows through a [`ReliableEndpoint`] over the [`Transport`]
+//! seam (DESIGN.md §13).  With chaos off the endpoint runs the lossless
+//! fast path — bare channel pushes, blocking receives, bitwise the
+//! PR-6 message flow.  With a [`FaultPlan`] installed, sends are
+//! perturbed by a [`FaultyTransport`] and survive via checksums, acks,
+//! retransmission and per-stage timeouts; exhausted recovery surfaces
+//! as a typed [`CommError`] instead of a panic, and the coordinator's
+//! step-level ladder takes over from there.
+//!
 //! Geometry note: box centers/radii derive from `BoxId` + domain alone,
 //! so ranks need no remote geometry — the paper makes the same
 //! observation ("all relations can be dynamically generated", §5.3).
 
 use std::collections::HashMap;
-use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
 
+use super::fault::{FaultPlan, FaultyTransport};
 use super::message::Message;
 use super::overlap::{interaction_overlap, neighbor_overlap, owner_of};
+use super::transport::{channel_mesh, CommError, FaultCounters,
+                       ReliableEndpoint, RetryPolicy, Stage, Transport};
+use crate::error::FmmError;
 use crate::fmm::{Evaluator, FmmKernel, FmmState, NativeBackend, OpCounts,
                  OpDims};
 use crate::partition::Assignment;
 use crate::quadtree::{BoxId, Domain, Quadtree, TreeCut, TreeMode};
 use crate::sched::ParallelPlan;
 
-/// A (from, payload) envelope.
-type Envelope = (usize, Message);
+/// The endpoint type a rank thread drives (boxed so the faulty and
+/// faithful transports share one code path).
+type RankEndpoint = ReliableEndpoint<Box<dyn Transport>>;
+
+/// Stage-agnostic stash for messages that arrive ahead of the phase
+/// that wants them.
+type Inbox = Vec<(usize, Message)>;
 
 /// Run the distributed FMM with real threads + channels, generic over
 /// the interaction kernel (each rank builds its own
@@ -42,13 +59,13 @@ pub fn run_threaded<K>(
     cut: &TreeCut,
     assignment: &Assignment,
     dims: OpDims,
-) -> Vec<[f64; 2]>
+) -> Result<Vec<[f64; 2]>, FmmError>
 where
     K: FmmKernel + Clone + Send + 'static,
 {
-    run_threaded_counted(kernel, domain, levels, particles, cut,
-                         assignment, dims)
-        .0
+    Ok(run_threaded_counted(kernel, domain, levels, particles, cut,
+                            assignment, dims)?
+        .0)
 }
 
 /// Like [`run_threaded`], additionally returning the operator counts
@@ -62,7 +79,7 @@ pub fn run_threaded_counted<K>(
     cut: &TreeCut,
     assignment: &Assignment,
     dims: OpDims,
-) -> (Vec<[f64; 2]>, OpCounts)
+) -> Result<(Vec<[f64; 2]>, OpCounts), FmmError>
 where
     K: FmmKernel + Clone + Send + 'static,
 {
@@ -82,7 +99,31 @@ pub fn run_threaded_on<K>(
     cut: &TreeCut,
     assignment: &Assignment,
     dims: OpDims,
-) -> (Vec<[f64; 2]>, OpCounts)
+) -> Result<(Vec<[f64; 2]>, OpCounts), FmmError>
+where
+    K: FmmKernel + Clone + Send + 'static,
+{
+    let (vel, counts, _) = run_threaded_on_faulty(kernel, global_tree,
+                                                  cut, assignment, dims,
+                                                  None)?;
+    Ok((vel, counts))
+}
+
+/// Full-control entry point: run the threaded FMM with an optional
+/// chaos plan.  `fault_plan: None` (or an inactive plan) selects the
+/// lossless fast path — no acks, no timeouts, bitwise the PR-6
+/// protocol.  An active plan wraps every rank's channels in a
+/// [`FaultyTransport`] and engages the reliability layer; the returned
+/// [`FaultCounters`] aggregate injections and protocol events over all
+/// ranks.
+pub fn run_threaded_on_faulty<K>(
+    kernel: K,
+    global_tree: Arc<Quadtree>,
+    cut: &TreeCut,
+    assignment: &Assignment,
+    dims: OpDims,
+    fault_plan: Option<&FaultPlan>,
+) -> Result<(Vec<[f64; 2]>, OpCounts, FaultCounters), FmmError>
 where
     K: FmmKernel + Clone + Send + 'static,
 {
@@ -97,15 +138,7 @@ where
         Arc::new(interaction_overlap(&global_tree, cut, assignment));
     let cut = Arc::new(cut.clone());
     let assignment = Arc::new(assignment.clone());
-
-    // full mesh of channels
-    let mut senders: Vec<mpsc::Sender<Envelope>> = Vec::new();
-    let mut receivers: Vec<Option<mpsc::Receiver<Envelope>>> = Vec::new();
-    for _ in 0..ranks {
-        let (tx, rx) = mpsc::channel();
-        senders.push(tx);
-        receivers.push(Some(rx));
-    }
+    let chaos = fault_plan.filter(|p| p.is_active()).cloned();
 
     // per-rank own particles with global indices (input order)
     let mut own: Vec<Vec<([f64; 3], u32)>> = vec![Vec::new(); ranks];
@@ -116,9 +149,7 @@ where
     }
 
     let mut handles = Vec::new();
-    for r in 0..ranks {
-        let rx = receivers[r].take().unwrap();
-        let txs = senders.clone();
+    for (r, channel) in channel_mesh(ranks).into_iter().enumerate() {
         let my_parts = std::mem::take(&mut own[r]);
         let plan = plan.clone();
         let nb = nb_overlap.clone();
@@ -127,27 +158,69 @@ where
         let assignment = assignment.clone();
         let gtree = global_tree.clone();
         let kernel = kernel.clone();
+        let chaos = chaos.clone();
 
         handles.push(thread::spawn(move || {
-            rank_main(kernel, r, ranks, rx, txs, my_parts, domain, levels,
-                      &plan, &nb, &il, &cut, &assignment, &gtree, dims)
+            let policy = chaos
+                .as_ref()
+                .map(|p| p.policy)
+                .unwrap_or_else(RetryPolicy::lossless);
+            let transport: Box<dyn Transport> = match chaos {
+                Some(p) => {
+                    Box::new(FaultyTransport::new(channel, p))
+                }
+                None => Box::new(channel),
+            };
+            let mut ep = ReliableEndpoint::new(transport, policy);
+            let res = rank_main(kernel, r, ranks, &mut ep, my_parts,
+                                domain, levels, &plan, &nb, &il, &cut,
+                                &assignment, &gtree, dims);
+            (res, ep.into_counters())
         }));
     }
-    drop(senders);
 
     let mut vel = vec![[0.0; 2]; n_particles];
     let mut counts = OpCounts::default();
-    for h in handles {
-        let (partial, rank_counts) =
-            h.join().expect("rank thread panicked");
-        counts.merge(&rank_counts);
-        if let Some(partial) = partial {
-            for (i, v) in partial {
-                vel[i as usize] = v;
+    let mut faults = FaultCounters::default();
+    let mut first_err: Option<FmmError> = None;
+    // join every rank before reporting (no orphaned threads); the
+    // lowest-ranked failure wins so the reported error is deterministic
+    for (r, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok((res, rank_faults)) => {
+                faults.merge(&rank_faults);
+                match res {
+                    Ok((partial, rank_counts)) => {
+                        counts.merge(&rank_counts);
+                        if let Some(partial) = partial {
+                            for (i, v) in partial {
+                                vel[i as usize] = v;
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        if first_err.is_none() {
+                            first_err = Some(FmmError::RankFailed {
+                                rank: r,
+                                source: Box::new(FmmError::Comm(e)),
+                            });
+                        }
+                    }
+                }
+            }
+            Err(_) => {
+                if first_err.is_none() {
+                    first_err = Some(FmmError::Internal(format!(
+                        "rank {r} thread panicked"
+                    )));
+                }
             }
         }
     }
-    (vel, counts)
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok((vel, counts, faults)),
+    }
 }
 
 /// Build a rank-local tree over a subset of the global particles.  In
@@ -177,13 +250,73 @@ fn build_rank_local(
     }
 }
 
+/// Receive one message for `stage`, converting a deadline expiry into
+/// the typed per-stage timeout error.
+fn recv_stage(ep: &mut RankEndpoint, stage: Stage, missing: usize)
+    -> Result<(usize, Message), CommError> {
+    let deadline = ep.policy().stage_deadline();
+    match ep.recv(deadline)? {
+        Some((from, _stage, msg)) => Ok((from, msg)),
+        None => Err(CommError::StageTimeout {
+            rank: ep.rank(),
+            stage,
+            missing,
+        }),
+    }
+}
+
+/// Drain the stash, then the endpoint, until the wanted number of
+/// multipole/local coefficient blocks has been accumulated; messages
+/// for later phases are re-stashed.  (Each expansion box arrives from
+/// exactly one source exactly once — the endpoint dedups — so the
+/// accumulation order cannot affect the result.)
+fn collect_coeffs(
+    ep: &mut RankEndpoint,
+    state: &mut FmmState,
+    inbox: &mut Inbox,
+    want_mul: &mut usize,
+    want_loc: &mut usize,
+    stage: Stage,
+) -> Result<(), CommError> {
+    let mut rest = Vec::new();
+    for (from, msg) in inbox.drain(..) {
+        match msg {
+            Message::Multipole { boxid, coeffs } if *want_mul > 0 => {
+                state.me.accumulate(&boxid, &coeffs);
+                *want_mul -= 1;
+            }
+            Message::Local { boxid, coeffs } if *want_loc > 0 => {
+                state.le.accumulate(&boxid, &coeffs);
+                *want_loc -= 1;
+            }
+            other => rest.push((from, other)),
+        }
+    }
+    *inbox = rest;
+    while *want_mul > 0 || *want_loc > 0 {
+        let missing = *want_mul + *want_loc;
+        let (from, msg) = recv_stage(ep, stage, missing)?;
+        match msg {
+            Message::Multipole { boxid, coeffs } if *want_mul > 0 => {
+                state.me.accumulate(&boxid, &coeffs);
+                *want_mul -= 1;
+            }
+            Message::Local { boxid, coeffs } if *want_loc > 0 => {
+                state.le.accumulate(&boxid, &coeffs);
+                *want_loc -= 1;
+            }
+            other => inbox.push((from, other)),
+        }
+    }
+    Ok(())
+}
+
 #[allow(clippy::too_many_arguments)]
 fn rank_main<K: FmmKernel>(
     kernel: K,
     rank: usize,
     ranks: usize,
-    rx: mpsc::Receiver<Envelope>,
-    txs: Vec<mpsc::Sender<Envelope>>,
+    ep: &mut RankEndpoint,
     my_parts: Vec<([f64; 3], u32)>,
     domain: Domain,
     levels: u8,
@@ -194,7 +327,7 @@ fn rank_main<K: FmmKernel>(
     assignment: &Assignment,
     gtree: &Quadtree,
     dims: OpDims,
-) -> (Option<Vec<(u32, [f64; 2])>>, OpCounts) {
+) -> Result<(Option<Vec<(u32, [f64; 2])>>, OpCounts), CommError> {
     let backend = NativeBackend::new(dims, kernel);
 
     // ---- phase A: halo exchange (send own boundary leaf particles) ----
@@ -210,12 +343,10 @@ fn rank_main<K: FmmKernel>(
     for ((from, to), boxes) in &nb_overlap.sends {
         if *from == rank {
             for b in boxes {
-                txs[*to]
-                    .send((rank, Message::Particles {
-                        leaf: *b,
-                        parts: own_tree.leaf_particles_aos(b),
-                    }))
-                    .expect("send halo");
+                ep.send(*to, Stage::Halo, Message::Particles {
+                    leaf: *b,
+                    parts: own_tree.leaf_particles_aos(b),
+                })?;
             }
         }
         if *to == rank {
@@ -227,10 +358,11 @@ fn rank_main<K: FmmKernel>(
     // the global relative order).  Arrival order must not leak into the
     // local tree, or P2P summation order would vary run to run.
     let mut halo_by_leaf: HashMap<BoxId, Vec<[f64; 3]>> = HashMap::new();
-    let mut inbox: Vec<Envelope> = Vec::new();
+    let mut inbox: Inbox = Vec::new();
     let mut got = 0;
     while got < expected_halo {
-        let (from, msg) = rx.recv().expect("recv halo");
+        let (from, msg) =
+            recv_stage(ep, Stage::Halo, expected_halo - got)?;
         match msg {
             Message::Particles { leaf, parts } => {
                 halo_by_leaf.entry(leaf).or_default().extend(parts);
@@ -273,9 +405,8 @@ fn rank_main<K: FmmKernel>(
         if o == rank && rank != 0 {
             let me = state.me.get(st).map(<[f64]>::to_vec)
                 .unwrap_or_else(|| vec![0.0; dims.terms * 2]);
-            txs[0]
-                .send((rank, Message::Multipole { boxid: *st, coeffs: me }))
-                .expect("send reduce");
+            ep.send(0, Stage::Reduce,
+                    Message::Multipole { boxid: *st, coeffs: me })?;
             expected_les += 1;
         }
         if rank == 0 && o != 0 {
@@ -283,47 +414,11 @@ fn rank_main<K: FmmKernel>(
         }
     }
 
-    let recv_or_stash = |state: &mut FmmState,
-                             inbox: &mut Vec<Envelope>,
-                             want_mul: &mut usize,
-                             want_loc: &mut usize,
-                             rx: &mpsc::Receiver<Envelope>| {
-        // drain stashed first
-        let mut rest = Vec::new();
-        for (from, msg) in inbox.drain(..) {
-            match msg {
-                Message::Multipole { boxid, coeffs } if *want_mul > 0 => {
-                    state.me.accumulate(&boxid, &coeffs);
-                    *want_mul -= 1;
-                }
-                Message::Local { boxid, coeffs } if *want_loc > 0 => {
-                    state.le.accumulate(&boxid, &coeffs);
-                    *want_loc -= 1;
-                }
-                other => rest.push((from, other)),
-            }
-        }
-        *inbox = rest;
-        while *want_mul > 0 || *want_loc > 0 {
-            let (from, msg) = rx.recv().expect("recv coeffs");
-            match msg {
-                Message::Multipole { boxid, coeffs } if *want_mul > 0 => {
-                    state.me.accumulate(&boxid, &coeffs);
-                    *want_mul -= 1;
-                }
-                Message::Local { boxid, coeffs } if *want_loc > 0 => {
-                    state.le.accumulate(&boxid, &coeffs);
-                    *want_loc -= 1;
-                }
-                other => inbox.push((from, other)),
-            }
-        }
-    };
-
     if rank == 0 {
         let mut want = expected_root_mes;
         let mut zero = 0usize;
-        recv_or_stash(&mut state, &mut inbox, &mut want, &mut zero, &rx);
+        collect_coeffs(ep, &mut state, &mut inbox, &mut want, &mut zero,
+                       Stage::Reduce)?;
         plan.run_root_sweep(&ev, &mut state);
         // scatter LEs of subtree roots to owners
         for st in &occupied_roots {
@@ -331,15 +426,15 @@ fn rank_main<K: FmmKernel>(
             let le = state.le.get(st).map(<[f64]>::to_vec)
                 .unwrap_or_else(|| vec![0.0; dims.terms * 2]);
             if o != 0 {
-                txs[o]
-                    .send((0, Message::Local { boxid: *st, coeffs: le }))
-                    .expect("send scatter");
+                ep.send(o, Stage::Scatter,
+                        Message::Local { boxid: *st, coeffs: le })?;
             }
         }
     } else {
         let mut zero = 0usize;
         let mut want = expected_les;
-        recv_or_stash(&mut state, &mut inbox, &mut zero, &mut want, &rx);
+        collect_coeffs(ep, &mut state, &mut inbox, &mut zero, &mut want,
+                       Stage::Scatter)?;
     }
 
     // ---- phase D: boundary ME exchange for M2L ----
@@ -348,12 +443,10 @@ fn rank_main<K: FmmKernel>(
         if *from == rank {
             for b in boxes {
                 if let Some(me) = state.me.get(b) {
-                    txs[*to]
-                        .send((rank, Message::Multipole {
-                            boxid: *b,
-                            coeffs: me.to_vec(),
-                        }))
-                        .expect("send me exchange");
+                    ep.send(*to, Stage::Exchange, Message::Multipole {
+                        boxid: *b,
+                        coeffs: me.to_vec(),
+                    })?;
                 }
             }
         }
@@ -370,8 +463,8 @@ fn rank_main<K: FmmKernel>(
         }
     }
     let mut zero = 0usize;
-    recv_or_stash(&mut state, &mut inbox, &mut expected_mes, &mut zero,
-                  &rx);
+    collect_coeffs(ep, &mut state, &mut inbox, &mut expected_mes,
+                   &mut zero, Stage::Exchange)?;
 
     // ---- phase E: local downward sweep + evaluation ----
     let nlv = plan.m2l_pairs[rank].len();
@@ -408,22 +501,20 @@ fn rank_main<K: FmmKernel>(
             }
         }
         while expected > 0 {
-            let (_, msg) = rx.recv().expect("recv velocities");
+            let (_, msg) = recv_stage(ep, Stage::Gather, expected)?;
             if let Message::Velocities { idx, vel } = msg {
                 all.extend(idx.into_iter().zip(vel));
                 expected -= 1;
             }
         }
-        (Some(all), counts)
+        Ok((Some(all), counts))
     } else {
         if !out.is_empty() {
             let (idx, vel): (Vec<u32>, Vec<[f64; 2]>) =
                 out.into_iter().unzip();
-            txs[0]
-                .send((rank, Message::Velocities { idx, vel }))
-                .expect("send velocities");
+            ep.send(0, Stage::Gather, Message::Velocities { idx, vel })?;
         }
-        (None, counts)
+        Ok((None, counts))
     }
 }
 
@@ -448,7 +539,8 @@ mod tests {
             let dims =
                 OpDims { batch: 16, leaf: 8, terms: 12, sigma: 0.01 };
             let got = run_threaded(BiotSavart2D::new(0.01), Domain::UNIT,
-                                   levels, &parts, &cut, &a, dims);
+                                   levels, &parts, &cut, &a, dims)
+                .unwrap();
             let backend = NativeBackend::new(dims, BiotSavart2D::new(0.01));
             let want = Evaluator::new(&tree, &backend)
                 .evaluate()
@@ -471,7 +563,8 @@ mod tests {
             let dims =
                 OpDims { batch: 16, leaf: 8, terms: 17, sigma: 0.005 };
             let got = run_threaded(BiotSavart2D::new(0.005), Domain::UNIT,
-                                   levels, &parts, &cut, &a, dims);
+                                   levels, &parts, &cut, &a, dims)
+                .unwrap();
             let want = direct_all(&BiotSavart2D::new(0.005), &parts);
             let err = rel_l2_error(&got, &want);
             assert!(err < 2e-4, "threaded vs direct err {err}");
@@ -488,11 +581,59 @@ mod tests {
                                 Strategy::Optimized, 0);
         let dims = OpDims { batch: 16, leaf: 8, terms: 10, sigma: 0.01 };
         let got = run_threaded(BiotSavart2D::new(0.01), Domain::UNIT, 3,
-                               &parts, &cut, &a, dims);
+                               &parts, &cut, &a, dims)
+            .unwrap();
         let backend = NativeBackend::new(dims, BiotSavart2D::new(0.01));
         let want = Evaluator::new(&tree, &backend)
             .evaluate()
             .vel_in_input_order(&tree);
         assert!(rel_l2_error(&got, &want) < 1e-12);
+    }
+
+    #[test]
+    fn lossy_chaos_is_bitwise_transparent() {
+        // the headline contract: recoverable chaos must not change a
+        // single output bit relative to the lossless run
+        let mut g = crate::proptest::Gen::new(9);
+        let parts = g.particles(220);
+        let levels = 4u8;
+        let cut = TreeCut::new(levels, 2);
+        let tree = Arc::new(Quadtree::build(Domain::UNIT, levels,
+                                            parts.clone()));
+        let a = assign_subtrees(&tree, &cut, 8, 4,
+                                Strategy::Optimized, 0);
+        let dims = OpDims { batch: 16, leaf: 8, terms: 12, sigma: 0.01 };
+        let (baseline, _) = run_threaded_on(BiotSavart2D::new(0.01),
+                                            tree.clone(), &cut, &a, dims)
+            .unwrap();
+        let plan = FaultPlan::from_profile("lossy", 7).unwrap();
+        // deterministic exhaustion is possible (every attempt of one
+        // message may draw a drop); step recovery handles it by
+        // bumping the epoch, which is exactly what we mirror here
+        let mut outcome = None;
+        for epoch in 0..4 {
+            match run_threaded_on_faulty(
+                BiotSavart2D::new(0.01),
+                tree.clone(),
+                &cut,
+                &a,
+                dims,
+                Some(&plan.clone().with_epoch(epoch)),
+            ) {
+                Ok(x) => {
+                    outcome = Some(x);
+                    break;
+                }
+                Err(e) => {
+                    let any: anyhow::Error = e.into();
+                    let fe = any.downcast_ref::<FmmError>().unwrap();
+                    assert!(fe.is_recoverable(), "unexpected: {fe}");
+                }
+            }
+        }
+        let (got, _, faults) =
+            outcome.expect("no epoch recovered within 4 retries");
+        assert_eq!(got, baseline, "chaos recovery must be bitwise");
+        assert!(faults.injected_total() > 0, "chaos never fired");
     }
 }

@@ -1,0 +1,734 @@
+//! Transport seam + reliability protocol for the threaded runtime
+//! (DESIGN.md §13).
+//!
+//! The PR-6 threaded mode talked straight to `mpsc` channels and assumed
+//! a perfect network: nothing was ever lost, duplicated, reordered or
+//! corrupted, and every anomaly was an `expect`.  This module splits the
+//! protocol into three layers so the upcoming distributed backend (and
+//! the deterministic chaos harness in [`super::fault`]) can slot in
+//! below the FMM phases without touching them:
+//!
+//! 1. [`Transport`] — an object-safe "move one [`Packet`]" seam.
+//!    [`ChannelTransport`] is the in-process implementation; a socket
+//!    transport implements the same five methods.
+//! 2. [`Packet`] — a sealed wire unit: per-link sequence number, the
+//!    protocol [`Stage`], an FNV-1a-64 checksum over the header and
+//!    every payload bit, and a body (data or ack).
+//! 3. [`ReliableEndpoint`] — stop-and-wait acknowledgement, bounded
+//!    retransmission with deterministic exponential backoff, receiver
+//!    dedup, and checksum rejection.  With `RetryPolicy::lossless()`
+//!    the endpoint degenerates to the PR-6 fast path: no acks, no
+//!    timeouts, identical message flow byte for byte.
+//!
+//! **Why recovery is numerically transparent.**  The endpoint delivers
+//! every logical message *exactly once* (dedup by `(source, seq)`,
+//! retransmit until acked) and the FMM phases above are insensitive to
+//! arrival order (halo particles are Morton-sorted before insertion;
+//! each expansion slot has exactly one source; velocity writes hit
+//! disjoint indices).  Exactly-once delivery therefore implies bitwise
+//! identical results, faults or no faults — the contract the chaos grid
+//! test enforces.
+
+use std::collections::{HashSet, VecDeque};
+use std::fmt;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::message::Message;
+
+/// Protocol stage a message belongs to.  Fault profiles and timeouts
+/// are per-stage; the stage tag also feeds the packet checksum so a
+/// payload replayed under the wrong stage cannot verify.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Phase A: boundary-leaf particle halos for P2P/P2M.
+    Halo,
+    /// Phase C, upward: subtree-root multipole reduce onto rank 0.
+    Reduce,
+    /// Phase C, downward: local-expansion scatter from rank 0.
+    Scatter,
+    /// Phase D: boundary multipole exchange for M2L.
+    Exchange,
+    /// Phase F: velocity gather onto rank 0.
+    Gather,
+}
+
+impl Stage {
+    /// All stages, in protocol order.
+    pub const ALL: [Stage; 5] = [
+        Stage::Halo,
+        Stage::Reduce,
+        Stage::Scatter,
+        Stage::Exchange,
+        Stage::Gather,
+    ];
+
+    /// Dense index (fault-profile tables are indexed by this).
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            Stage::Halo => 0,
+            Stage::Reduce => 1,
+            Stage::Scatter => 2,
+            Stage::Exchange => 3,
+            Stage::Gather => 4,
+        }
+    }
+
+    /// Stable name (CLI `--chaos-stage`, test matrix, reports).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Stage::Halo => "p2m-halo",
+            Stage::Reduce => "me-reduce",
+            Stage::Scatter => "le-scatter",
+            Stage::Exchange => "m2l-exchange",
+            Stage::Gather => "velocity-gather",
+        }
+    }
+
+    /// Inverse of [`Stage::as_str`].
+    pub fn from_name(s: &str) -> Option<Stage> {
+        Stage::ALL.iter().copied().find(|st| st.as_str() == s)
+    }
+}
+
+impl fmt::Display for Stage {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Typed communication failures (wrapped as `FmmError::Comm` at the
+/// coordinator seam).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CommError {
+    /// A receive loop ran out its per-stage budget with messages still
+    /// outstanding — the sender is presumed dead or unreachable.
+    StageTimeout {
+        rank: usize,
+        stage: Stage,
+        missing: usize,
+    },
+    /// An mpsc endpoint vanished: the peer thread exited early.
+    Disconnected { rank: usize },
+    /// A reliable send was never acknowledged despite the full
+    /// retransmission schedule.
+    RetryExhausted {
+        rank: usize,
+        to: usize,
+        stage: Stage,
+        seq: u64,
+        attempts: u32,
+    },
+}
+
+impl fmt::Display for CommError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CommError::StageTimeout { rank, stage, missing } => {
+                write!(f,
+                       "rank {rank}: {stage} timed out with {missing} \
+                        message(s) outstanding")
+            }
+            CommError::Disconnected { rank } => {
+                write!(f, "rank {rank}: channel disconnected \
+                           (peer thread exited)")
+            }
+            CommError::RetryExhausted { rank, to, stage, seq, attempts } => {
+                write!(f,
+                       "rank {rank}: no ack from rank {to} for {stage} \
+                        seq {seq} after {attempts} attempt(s)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+/// Wire body: FMM payload or acknowledgement.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Body {
+    /// An FMM protocol message.
+    Data(Message),
+    /// Stop-and-wait acknowledgement of `(seq, stage)`.
+    Ack,
+}
+
+/// Sealed wire unit: `(seq, stage, checksum, body)`.  `seq` numbers are
+/// per *directed link* (sender → receiver), so `(source, seq)` uniquely
+/// identifies a logical message for dedup.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Packet {
+    /// Per-directed-link sequence number.
+    pub seq: u64,
+    /// Protocol stage of the payload.
+    pub stage: Stage,
+    /// FNV-1a-64 over header + payload bits (see [`Packet::seal`]).
+    pub checksum: u64,
+    /// Payload or ack.
+    pub body: Body,
+}
+
+/// FNV-1a-64 offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a-64 prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold one 64-bit word into an FNV-1a-64 state.  Each step is a
+/// bijection on the state (xor, then multiply by an odd prime), so any
+/// change confined to a single word — in particular any single-bit
+/// flip — is *guaranteed* to change the final hash.
+#[inline]
+pub fn fnv1a_u64(h: u64, word: u64) -> u64 {
+    (h ^ word).wrapping_mul(FNV_PRIME)
+}
+
+impl Packet {
+    /// Seal a data payload: compute the checksum over the sequence
+    /// number, the stage tag, a body tag, and every payload bit of the
+    /// message (lengths, box ids, indices, and coefficient bits — see
+    /// `Message::payload_hash`).
+    pub fn seal(seq: u64, stage: Stage, msg: Message) -> Packet {
+        let h = Packet::header_hash(seq, stage, 0);
+        let checksum = msg.payload_hash(h);
+        Packet { seq, stage, checksum, body: Body::Data(msg) }
+    }
+
+    /// Build an acknowledgement for `(seq, stage)`.
+    pub fn ack(seq: u64, stage: Stage) -> Packet {
+        let checksum = Packet::header_hash(seq, stage, 1);
+        Packet { seq, stage, checksum, body: Body::Ack }
+    }
+
+    fn header_hash(seq: u64, stage: Stage, body_tag: u64) -> u64 {
+        let mut h = FNV_OFFSET;
+        h = fnv1a_u64(h, seq);
+        h = fnv1a_u64(h, stage.index() as u64);
+        fnv1a_u64(h, body_tag)
+    }
+
+    /// Recompute the checksum and compare; `false` means the packet was
+    /// corrupted in flight and must be discarded (no ack — the sender
+    /// retransmits).
+    pub fn verify(&self) -> bool {
+        let want = match &self.body {
+            Body::Data(msg) => {
+                msg.payload_hash(Packet::header_hash(self.seq, self.stage,
+                                                     0))
+            }
+            Body::Ack => Packet::header_hash(self.seq, self.stage, 1),
+        };
+        want == self.checksum
+    }
+}
+
+/// Retransmission/timeout schedule of a [`ReliableEndpoint`].  All
+/// delays are deterministic functions of the attempt index — no jitter,
+/// no wall-clock dependence in any *decision* (timers only decide when
+/// to retransmit, and retransmits are idempotent under dedup).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Acks + retransmission on. Off = the PR-6 fast path: a send is a
+    /// bare channel push and receives block forever.
+    pub reliable: bool,
+    /// Max transmissions of one packet (first send included).
+    pub max_attempts: u32,
+    /// Ack wait after the first transmission; doubles per attempt.
+    pub base_backoff: Duration,
+    /// Final ack wait after the last retransmission, sized to cover a
+    /// receiver that is busy computing rather than dead.
+    pub ack_patience: Duration,
+    /// Budget for a receive loop to collect one stage's messages;
+    /// `None` = block forever (lossless mode).
+    pub stage_timeout: Option<Duration>,
+}
+
+impl RetryPolicy {
+    /// PR-6-equivalent policy: no acks, no timeouts.
+    pub fn lossless() -> RetryPolicy {
+        RetryPolicy {
+            reliable: false,
+            max_attempts: 1,
+            base_backoff: Duration::ZERO,
+            ack_patience: Duration::ZERO,
+            stage_timeout: None,
+        }
+    }
+
+    /// Default schedule for recoverable chaos: 6 transmissions at
+    /// 2/4/8/16/32 ms backoff, then a 2 s grace for a slow (not dead)
+    /// receiver; stage loops give up after 10 s.
+    pub fn chaos_default() -> RetryPolicy {
+        RetryPolicy {
+            reliable: true,
+            max_attempts: 6,
+            base_backoff: Duration::from_millis(2),
+            ack_patience: Duration::from_secs(2),
+            stage_timeout: Some(Duration::from_secs(10)),
+        }
+    }
+
+    /// Fail-fast schedule for unrecoverable profiles (blackhole): keep
+    /// the inevitable declaration of death cheap.
+    pub fn fail_fast() -> RetryPolicy {
+        RetryPolicy {
+            reliable: true,
+            max_attempts: 3,
+            base_backoff: Duration::from_millis(1),
+            ack_patience: Duration::from_millis(150),
+            stage_timeout: Some(Duration::from_millis(500)),
+        }
+    }
+
+    /// Deterministic exponential backoff: `base * 2^attempt`, capped at
+    /// 64x base.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        self.base_backoff * (1u32 << attempt.min(6))
+    }
+
+    /// Deadline for one stage receive loop (refreshed per message).
+    pub fn stage_deadline(&self) -> Option<Instant> {
+        self.stage_timeout.map(|d| Instant::now() + d)
+    }
+}
+
+/// Injection + protocol event counters, aggregated over ranks and (in
+/// `metrics::SimulationTrace`) over steps.  The `injected_*` fields are
+/// incremented by `FaultyTransport`, the protocol fields by
+/// [`ReliableEndpoint`], and the recovery fields by
+/// `coordinator::Simulation`'s degradation ladder.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Packets deliberately not delivered.
+    pub injected_drops: u64,
+    /// Packets deliberately delivered twice.
+    pub injected_duplicates: u64,
+    /// Packets deliberately held back (reordered past later traffic).
+    pub injected_delays: u64,
+    /// Packets with one payload bit deliberately flipped.
+    pub injected_corruptions: u64,
+    /// Packets discarded at receive because the checksum failed.
+    pub checksum_rejects: u64,
+    /// Valid packets discarded at receive as `(source, seq)` replays.
+    pub duplicates_discarded: u64,
+    /// Extra transmissions beyond each packet's first.
+    pub retransmits: u64,
+    /// Steps re-run from checkpoint after a recoverable failure.
+    pub step_retries: u64,
+    /// Steps completed by the serial-fallback solve.
+    pub serial_fallbacks: u64,
+    /// Survivor repartitions after a rank was declared dead.
+    pub survivor_repartitions: u64,
+    /// Ranks declared dead (retry schedule exhausted).
+    pub rank_failures: u64,
+}
+
+impl FaultCounters {
+    /// Accumulate `other` into `self` field-by-field.
+    pub fn merge(&mut self, other: &FaultCounters) {
+        self.injected_drops += other.injected_drops;
+        self.injected_duplicates += other.injected_duplicates;
+        self.injected_delays += other.injected_delays;
+        self.injected_corruptions += other.injected_corruptions;
+        self.checksum_rejects += other.checksum_rejects;
+        self.duplicates_discarded += other.duplicates_discarded;
+        self.retransmits += other.retransmits;
+        self.step_retries += other.step_retries;
+        self.serial_fallbacks += other.serial_fallbacks;
+        self.survivor_repartitions += other.survivor_repartitions;
+        self.rank_failures += other.rank_failures;
+    }
+
+    /// Total faults injected by the chaos harness.
+    pub fn injected_total(&self) -> u64 {
+        self.injected_drops
+            + self.injected_duplicates
+            + self.injected_delays
+            + self.injected_corruptions
+    }
+
+    /// True when nothing at all was injected, rejected or retried —
+    /// the chaos-off invariant.
+    pub fn is_quiet(&self) -> bool {
+        *self == FaultCounters::default()
+    }
+}
+
+/// Object-safe "move one packet" seam under the reliability protocol.
+/// `Send` is a supertrait so rank threads can own `Box<dyn Transport>`.
+pub trait Transport: Send {
+    /// This endpoint's rank.
+    fn rank(&self) -> usize;
+    /// Total number of ranks on the mesh.
+    fn ranks(&self) -> usize;
+    /// Push one packet toward `to` (must not block).
+    fn send(&mut self, to: usize, pkt: Packet) -> Result<(), CommError>;
+    /// Pull the next packet.  `deadline: None` blocks forever;
+    /// `Ok(None)` means the deadline passed with nothing available.
+    fn recv(&mut self, deadline: Option<Instant>)
+        -> Result<Option<(usize, Packet)>, CommError>;
+    /// Force out anything the transport is holding back for `to`
+    /// (a fault-injected delay); no-op on faithful transports.
+    fn flush(&mut self, to: usize) -> Result<(), CommError>;
+    /// Drain and reset this transport's fault counters.
+    fn take_counters(&mut self) -> FaultCounters;
+}
+
+impl<T: Transport + ?Sized> Transport for Box<T> {
+    fn rank(&self) -> usize {
+        (**self).rank()
+    }
+    fn ranks(&self) -> usize {
+        (**self).ranks()
+    }
+    fn send(&mut self, to: usize, pkt: Packet) -> Result<(), CommError> {
+        (**self).send(to, pkt)
+    }
+    fn recv(&mut self, deadline: Option<Instant>)
+        -> Result<Option<(usize, Packet)>, CommError> {
+        (**self).recv(deadline)
+    }
+    fn flush(&mut self, to: usize) -> Result<(), CommError> {
+        (**self).flush(to)
+    }
+    fn take_counters(&mut self) -> FaultCounters {
+        (**self).take_counters()
+    }
+}
+
+/// What moves over an mpsc link: `(source rank, packet)`.
+pub type WirePacket = (usize, Packet);
+
+/// Faithful in-process transport over a full mesh of mpsc channels —
+/// the physical layer the PR-6 runtime used directly.
+pub struct ChannelTransport {
+    rank: usize,
+    rx: mpsc::Receiver<WirePacket>,
+    txs: Vec<mpsc::Sender<WirePacket>>,
+}
+
+impl ChannelTransport {
+    /// Wrap one rank's receiver plus the full mesh of senders.
+    pub fn new(
+        rank: usize,
+        rx: mpsc::Receiver<WirePacket>,
+        txs: Vec<mpsc::Sender<WirePacket>>,
+    ) -> ChannelTransport {
+        ChannelTransport { rank, rx, txs }
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn ranks(&self) -> usize {
+        self.txs.len()
+    }
+
+    fn send(&mut self, to: usize, pkt: Packet) -> Result<(), CommError> {
+        self.txs[to]
+            .send((self.rank, pkt))
+            .map_err(|_| CommError::Disconnected { rank: to })
+    }
+
+    fn recv(&mut self, deadline: Option<Instant>)
+        -> Result<Option<(usize, Packet)>, CommError> {
+        let gone = CommError::Disconnected { rank: self.rank };
+        match deadline {
+            None => self.rx.recv().map(Some).map_err(|_| gone),
+            Some(d) => {
+                let left = d.saturating_duration_since(Instant::now());
+                match self.rx.recv_timeout(left) {
+                    Ok(p) => Ok(Some(p)),
+                    Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+                    Err(mpsc::RecvTimeoutError::Disconnected) => Err(gone),
+                }
+            }
+        }
+    }
+
+    fn flush(&mut self, _to: usize) -> Result<(), CommError> {
+        Ok(())
+    }
+
+    fn take_counters(&mut self) -> FaultCounters {
+        FaultCounters::default()
+    }
+}
+
+/// Reliability layer over any [`Transport`]: per-link sequence numbers,
+/// checksum verification, stop-and-wait acks with bounded deterministic
+/// backoff, and receiver-side dedup.  While awaiting an ack the
+/// endpoint keeps admitting (verifying, acking, delivering) incoming
+/// data packets, so two ranks blocked in simultaneous sends to each
+/// other always make progress — the mesh cannot deadlock.
+pub struct ReliableEndpoint<T> {
+    t: T,
+    policy: RetryPolicy,
+    /// Next sequence number per destination (directed link).
+    next_seq: Vec<u64>,
+    /// Seqs already delivered, per source (dedup set).
+    delivered: Vec<HashSet<u64>>,
+    /// Acks observed, per destination.
+    acked: Vec<HashSet<u64>>,
+    /// Verified, deduped messages awaiting the caller.
+    ready: VecDeque<(usize, Stage, Message)>,
+    counters: FaultCounters,
+}
+
+impl<T: Transport> ReliableEndpoint<T> {
+    /// Wrap a transport under `policy`.
+    pub fn new(t: T, policy: RetryPolicy) -> ReliableEndpoint<T> {
+        let n = t.ranks();
+        ReliableEndpoint {
+            t,
+            policy,
+            next_seq: vec![0; n],
+            delivered: vec![HashSet::new(); n],
+            acked: vec![HashSet::new(); n],
+            ready: VecDeque::new(),
+            counters: FaultCounters::default(),
+        }
+    }
+
+    /// This endpoint's rank.
+    pub fn rank(&self) -> usize {
+        self.t.rank()
+    }
+
+    /// The active retry policy (rank loops take stage deadlines from
+    /// it).
+    pub fn policy(&self) -> &RetryPolicy {
+        &self.policy
+    }
+
+    /// Send one message, reliably if the policy says so: transmit, wait
+    /// `backoff(attempt)` for the ack, retransmit up to `max_attempts`
+    /// total, flush any fault-held packet, then grant `ack_patience`
+    /// for a busy receiver before declaring the link dead.
+    pub fn send(&mut self, to: usize, stage: Stage, msg: Message)
+        -> Result<(), CommError> {
+        let seq = self.next_seq[to];
+        self.next_seq[to] += 1;
+        let pkt = Packet::seal(seq, stage, msg);
+        if !self.policy.reliable {
+            return self.t.send(to, pkt);
+        }
+        let max = self.policy.max_attempts.max(1);
+        for attempt in 0..max {
+            if attempt > 0 {
+                self.counters.retransmits += 1;
+            }
+            self.t.send(to, pkt.clone())?;
+            let deadline = Instant::now() + self.policy.backoff(attempt);
+            if self.await_ack(to, seq, deadline)? {
+                return Ok(());
+            }
+        }
+        // A delayed final transmission would otherwise sit in the
+        // transport forever; release it, then give a busy (not dead)
+        // receiver one generous last window.
+        self.t.flush(to)?;
+        let deadline = Instant::now() + self.policy.ack_patience;
+        if self.await_ack(to, seq, deadline)? {
+            return Ok(());
+        }
+        Err(CommError::RetryExhausted {
+            rank: self.t.rank(),
+            to,
+            stage,
+            seq,
+            attempts: max,
+        })
+    }
+
+    /// Receive the next verified, deduped message.  `Ok(None)` means
+    /// the deadline expired first (lossless mode passes `None` and
+    /// blocks forever, exactly like PR-6).
+    pub fn recv(&mut self, deadline: Option<Instant>)
+        -> Result<Option<(usize, Stage, Message)>, CommError> {
+        loop {
+            if let Some(m) = self.ready.pop_front() {
+                return Ok(Some(m));
+            }
+            match self.t.recv(deadline)? {
+                Some((from, pkt)) => self.admit(from, pkt)?,
+                None => return Ok(self.ready.pop_front()),
+            }
+        }
+    }
+
+    /// Wait until `seq` is acked by `to` or `deadline` passes.
+    fn await_ack(&mut self, to: usize, seq: u64, deadline: Instant)
+        -> Result<bool, CommError> {
+        loop {
+            if self.acked[to].contains(&seq) {
+                return Ok(true);
+            }
+            match self.t.recv(Some(deadline))? {
+                Some((from, pkt)) => self.admit(from, pkt)?,
+                None => return Ok(self.acked[to].contains(&seq)),
+            }
+        }
+    }
+
+    /// Verify, ack, dedup and enqueue one incoming packet.  Corrupted
+    /// packets are dropped *without* an ack (forcing a retransmission
+    /// of clean bits); duplicates are re-acked (the sender may have
+    /// missed the first ack) but not redelivered.
+    fn admit(&mut self, from: usize, pkt: Packet)
+        -> Result<(), CommError> {
+        if !pkt.verify() {
+            self.counters.checksum_rejects += 1;
+            return Ok(());
+        }
+        match pkt.body {
+            Body::Ack => {
+                self.acked[from].insert(pkt.seq);
+                Ok(())
+            }
+            Body::Data(msg) => {
+                if self.policy.reliable {
+                    self.t.send(from, Packet::ack(pkt.seq, pkt.stage))?;
+                    if !self.delivered[from].insert(pkt.seq) {
+                        self.counters.duplicates_discarded += 1;
+                        return Ok(());
+                    }
+                }
+                self.ready.push_back((from, pkt.stage, msg));
+                Ok(())
+            }
+        }
+    }
+
+    /// Tear down, returning protocol counters merged with whatever the
+    /// underlying transport injected.
+    pub fn into_counters(mut self) -> FaultCounters {
+        let mut c = self.counters;
+        c.merge(&self.t.take_counters());
+        c
+    }
+}
+
+/// Build the full mpsc mesh for `ranks` endpoints: one receiver and a
+/// complete sender vector per rank.
+pub fn channel_mesh(ranks: usize) -> Vec<ChannelTransport> {
+    let mut txs = Vec::with_capacity(ranks);
+    let mut rxs = Vec::with_capacity(ranks);
+    for _ in 0..ranks {
+        let (tx, rx) = mpsc::channel();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    rxs.into_iter()
+        .enumerate()
+        .map(|(r, rx)| ChannelTransport::new(r, rx, txs.clone()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quadtree::BoxId;
+
+    fn msg(v: f64) -> Message {
+        Message::Multipole { boxid: BoxId::ROOT, coeffs: vec![v, -v] }
+    }
+
+    #[test]
+    fn seal_verify_roundtrip_and_corruption_detection() {
+        let pkt = Packet::seal(7, Stage::Exchange, msg(1.25));
+        assert!(pkt.verify());
+        let mut bad = pkt.clone();
+        if let Body::Data(ref mut m) = bad.body {
+            assert!(m.flip_payload_bit(1, 13));
+        }
+        assert!(!bad.verify(), "single-bit flip must break the checksum");
+        // a stage mismatch (replay under the wrong phase) also fails
+        let mut wrong = pkt;
+        wrong.stage = Stage::Halo;
+        assert!(!wrong.verify());
+    }
+
+    #[test]
+    fn lossless_endpoints_preserve_order_without_acks() {
+        let mut mesh = channel_mesh(2);
+        let t1 = mesh.pop().unwrap();
+        let t0 = mesh.pop().unwrap();
+        let mut a = ReliableEndpoint::new(t0, RetryPolicy::lossless());
+        let mut b = ReliableEndpoint::new(t1, RetryPolicy::lossless());
+        for i in 0..5 {
+            a.send(1, Stage::Halo, msg(i as f64)).unwrap();
+        }
+        for i in 0..5 {
+            let (from, stage, m) = b.recv(None).unwrap().unwrap();
+            assert_eq!((from, stage), (0, Stage::Halo));
+            assert_eq!(m, msg(i as f64));
+        }
+        // no acks were generated: a's queue stays empty
+        let deadline = Instant::now();
+        assert!(a.recv(Some(deadline)).unwrap().is_none());
+        assert!(b.into_counters().is_quiet());
+    }
+
+    #[test]
+    fn reliable_endpoints_ack_and_cross_traffic_cannot_deadlock() {
+        // both endpoints send first and receive second; acks are
+        // generated inside the await loops
+        let mut mesh = channel_mesh(2);
+        let t1 = mesh.pop().unwrap();
+        let t0 = mesh.pop().unwrap();
+        let policy = RetryPolicy::chaos_default();
+        let h = std::thread::spawn(move || {
+            let mut b = ReliableEndpoint::new(t1, policy);
+            b.send(0, Stage::Reduce, msg(2.0)).unwrap();
+            let got = b.recv(None).unwrap().unwrap();
+            (got, b.into_counters())
+        });
+        let mut a = ReliableEndpoint::new(t0, policy);
+        a.send(1, Stage::Reduce, msg(1.0)).unwrap();
+        let (from, _, m) = a.recv(None).unwrap().unwrap();
+        assert_eq!((from, m), (1, msg(2.0)));
+        let ((bfrom, _, bm), bc) = h.join().unwrap();
+        assert_eq!((bfrom, bm), (0, msg(1.0)));
+        assert_eq!(bc.duplicates_discarded, 0);
+        assert!(a.into_counters().retransmits <= 1);
+    }
+
+    #[test]
+    fn expired_deadline_returns_none() {
+        let mut mesh = channel_mesh(1);
+        let mut a = ReliableEndpoint::new(mesh.pop().unwrap(),
+                                          RetryPolicy::lossless());
+        let past = Instant::now();
+        assert!(a.recv(Some(past)).unwrap().is_none());
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = RetryPolicy::chaos_default();
+        assert_eq!(p.backoff(0), Duration::from_millis(2));
+        assert_eq!(p.backoff(1), Duration::from_millis(4));
+        assert_eq!(p.backoff(4), Duration::from_millis(32));
+        assert_eq!(p.backoff(40), Duration::from_millis(128));
+    }
+
+    #[test]
+    fn counters_merge_fieldwise() {
+        let mut a = FaultCounters { injected_drops: 1, ..Default::default() };
+        let b = FaultCounters {
+            injected_drops: 2,
+            retransmits: 3,
+            serial_fallbacks: 1,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.injected_drops, 3);
+        assert_eq!(a.retransmits, 3);
+        assert_eq!(a.serial_fallbacks, 1);
+        assert_eq!(a.injected_total(), 3);
+        assert!(!a.is_quiet());
+    }
+}

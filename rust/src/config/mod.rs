@@ -7,7 +7,8 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::comm::NetworkModel;
+use crate::comm::{FaultPlan, NetworkModel, PROFILE_NAMES};
+use crate::error::FmmError;
 use crate::fmm::KernelSpec;
 use crate::partition::Strategy;
 use crate::vortex::Integrator;
@@ -19,7 +20,8 @@ const VALID_KEYS: &[&str] = &[
     "kernel", "ranks|procs", "strategy", "network", "distribution|dist",
     "backend", "seed", "artifacts", "par-threads|threads", "steps",
     "dt", "rebalance-threshold", "rebalance", "integrator",
-    "tree", "leaf-capacity|capacity",
+    "tree", "leaf-capacity|capacity", "chaos|chaos-profile",
+    "chaos-seed",
 ];
 
 /// Full run configuration for the coordinator.
@@ -75,6 +77,13 @@ pub struct RunConfig {
     /// many particles (bounded below by the cut level, above by
     /// `levels`)
     pub leaf_capacity: u32,
+    /// chaos profile for deterministic fault injection in threaded mode
+    /// (off | lossy | corrupt | flaky | blackhole, DESIGN.md §13);
+    /// "off" is the default and keeps every run bitwise-pinned to the
+    /// fault-free protocol
+    pub chaos: String,
+    /// seed of the deterministic fault schedule (`--chaos-seed`)
+    pub chaos_seed: u64,
 }
 
 impl Default for RunConfig {
@@ -101,6 +110,8 @@ impl Default for RunConfig {
             integrator: Integrator::Euler,
             tree: "uniform".into(),
             leaf_capacity: 32,
+            chaos: "off".into(),
+            chaos_seed: 0,
         }
     }
 }
@@ -143,8 +154,23 @@ impl RunConfig {
         }
     }
 
+    /// The deterministic fault plan selected by `chaos`/`chaos-seed`,
+    /// or `None` when chaos is off.  (The profile name was validated
+    /// at [`RunConfig::set`] time, so an active name always resolves.)
+    pub fn fault_plan(&self) -> Option<FaultPlan> {
+        FaultPlan::from_profile(&self.chaos, self.chaos_seed)
+    }
+
     /// Apply one `key = value` (file) or `--key value` (CLI) setting.
+    /// Every failure comes back as a typed [`FmmError::Config`] naming
+    /// the offending key (CLI callers print it and exit nonzero).
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        self.set_parsed(key, value).map_err(|e| {
+            anyhow::Error::new(FmmError::config(key, e.to_string()))
+        })
+    }
+
+    fn set_parsed(&mut self, key: &str, value: &str) -> Result<()> {
         match key {
             "particles" | "n" => self.particles = value.parse()?,
             "levels" | "l" => self.levels = value.parse()?,
@@ -207,8 +233,20 @@ impl RunConfig {
             "leaf-capacity" | "leaf_capacity" | "capacity" => {
                 self.leaf_capacity = value.parse()?
             }
+            "chaos" | "chaos-profile" | "chaos_profile" => {
+                if !PROFILE_NAMES.contains(&value) {
+                    bail!(
+                        "unknown chaos profile '{value}' (available: {})",
+                        PROFILE_NAMES.join(" | ")
+                    );
+                }
+                self.chaos = value.into();
+            }
+            "chaos-seed" | "chaos_seed" => {
+                self.chaos_seed = value.parse()?
+            }
             _ => bail!(
-                "unknown config key '{key}' (valid keys: {})",
+                "unknown key (valid keys: {})",
                 VALID_KEYS.join(", ")
             ),
         }
@@ -231,8 +269,10 @@ impl RunConfig {
                 .split_once('=')
                 .ok_or_else(|| anyhow!("line {}: expected key = value",
                                        lineno + 1))?;
+            // context (not re-wrap) so the typed FmmError::Config stays
+            // downcastable through the line-number annotation
             self.set(k.trim(), v.trim())
-                .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+                .map_err(|e| e.context(format!("line {}", lineno + 1)))?;
         }
         Ok(())
     }
@@ -248,9 +288,12 @@ impl RunConfig {
                 if let Some((k, v)) = flag.split_once('=') {
                     self.set(k, v)?;
                 } else {
-                    let v = args
-                        .get(i + 1)
-                        .ok_or_else(|| anyhow!("--{flag} needs a value"))?;
+                    let v = args.get(i + 1).ok_or_else(|| {
+                        anyhow::Error::new(FmmError::config(
+                            flag,
+                            "flag needs a value",
+                        ))
+                    })?;
                     self.set(flag, v)?;
                     i += 1;
                 }
@@ -279,11 +322,18 @@ impl RunConfig {
                 self.par_threads.to_string()
             }
         );
+        let mut out = base;
         if self.tree == "adaptive" {
-            format!("{base} tree=adaptive cap={}", self.leaf_capacity)
-        } else {
-            base
+            out = format!("{out} tree=adaptive cap={}",
+                          self.leaf_capacity);
         }
+        // like the adaptive suffix: only when active, so chaos-off log
+        // lines stay byte-identical to the historical output
+        if self.chaos != "off" {
+            out = format!("{out} chaos={} chaos-seed={}", self.chaos,
+                          self.chaos_seed);
+        }
+        out
     }
 }
 
@@ -414,6 +464,52 @@ mod tests {
         c.set("capacity", "16").unwrap();
         assert_eq!(c.leaf_capacity, 16);
         assert!(c.set("tree", "octree").is_err());
+    }
+
+    #[test]
+    fn chaos_keys_parse_validate_and_build_plans() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.chaos, "off");
+        assert!(c.fault_plan().is_none());
+        // chaos-off summary is byte-identical to the historical format
+        assert!(!c.summary().contains("chaos="));
+        c.set("chaos", "lossy").unwrap();
+        c.set("chaos-seed", "7").unwrap();
+        let plan = c.fault_plan().expect("lossy builds a plan");
+        assert_eq!(plan.seed, 7);
+        assert!(plan.is_active());
+        assert!(c.summary().contains("chaos=lossy chaos-seed=7"));
+        c.apply_ini("chaos-profile = flaky\nchaos_seed = 9\n").unwrap();
+        assert_eq!((c.chaos.as_str(), c.chaos_seed), ("flaky", 9));
+        let err = c.set("chaos", "mayhem").unwrap_err().to_string();
+        assert!(err.contains("chaos") && err.contains("available"),
+                "{err}");
+    }
+
+    #[test]
+    fn config_errors_are_typed_and_name_the_key() {
+        use crate::error::FmmError;
+        let mut c = RunConfig::default();
+        let err = c.set("particles", "banana").unwrap_err();
+        match err.downcast_ref::<FmmError>() {
+            Some(FmmError::Config { key, .. }) => {
+                assert_eq!(key, "particles")
+            }
+            other => panic!("expected Config error, got {other:?}"),
+        }
+        assert!(err.to_string().contains("particles"));
+        // the typed error survives the line-number context of the INI
+        // parser, and the line is reported
+        let err = c.apply_ini("levels = 4\nterms = zz\n").unwrap_err();
+        assert!(err.downcast_ref::<FmmError>().is_some());
+        let chain = format!("{err:#}");
+        assert!(chain.contains("line 2") && chain.contains("terms"),
+                "{chain}");
+        // a flag with a missing value names the flag
+        let err = c
+            .apply_cli(&["--chaos-seed".to_string()])
+            .unwrap_err();
+        assert!(err.to_string().contains("chaos-seed"));
     }
 
     #[test]

@@ -55,6 +55,12 @@ COMMON FLAGS (defaults in brackets)
   simulate:   --steps N [20]  --dt T [0.002]  --integrator [euler|rk2]
               --rebalance [on|off]  --rebalance-threshold R [0.8]
               --mode [serial|threaded|simulated]
+              --chaos-profile [off|lossy|corrupt|flaky|blackhole]
+              --chaos-seed N [0]
+              (chaos injects deterministic comm faults — drops,
+               duplicates, delays, bit-flips — into the threaded
+               wire; recovery is bitwise-transparent, see DESIGN.md
+               §13; requires --mode threaded)
 ";
 
 /// CLI entry point (called by main).
@@ -254,6 +260,9 @@ fn cmd_simulate(config: &RunConfig, mode: RunMode) -> Result<()> {
         config.rebalance_threshold,
         trace.final_lb()
     );
+    // fault/recovery accounting (empty outside chaos runs — quiet
+    // runs print nothing extra, keeping golden CLI output stable)
+    print!("{}", trace.fault_report());
     println!("position digest: {:016x}", sim.position_digest());
     Ok(())
 }
@@ -486,6 +495,58 @@ mod tests {
             "6", "--dist", "uniform",
         ]))
         .unwrap();
+    }
+
+    #[test]
+    fn chaos_simulate_smoke_and_mode_guard() {
+        // the CI chaos-smoke in miniature: a lossy threaded run
+        // completes (recovery ladder absorbs the faults)
+        dispatch(&args(&[
+            "simulate", "--particles", "200", "--levels", "3",
+            "--terms", "6", "--ranks", "2", "--dist", "clustered",
+            "--steps", "2", "--dt", "0.001", "--mode", "threaded",
+            "--chaos-profile", "lossy", "--chaos-seed", "7",
+        ]))
+        .unwrap();
+        // chaos without the threaded wire errors, naming the key
+        let err = dispatch(&args(&[
+            "simulate", "--particles", "200", "--levels", "3",
+            "--terms", "6", "--ranks", "2", "--dist", "clustered",
+            "--steps", "1", "--chaos-profile", "lossy",
+        ]))
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("chaos"), "{msg}");
+        assert!(msg.contains("threaded"), "{msg}");
+        // and an unknown profile errors at parse time
+        let err = dispatch(&args(&[
+            "simulate", "--chaos-profile", "cosmic-rays",
+        ]))
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("chaos"), "{msg}");
+        assert!(msg.contains("cosmic-rays"), "{msg}");
+    }
+
+    #[test]
+    fn malformed_config_file_errors_name_the_offender() {
+        let dir = std::env::temp_dir().join("petfmm-cli-badcfg");
+        std::fs::create_dir_all(&dir).unwrap();
+        let f = dir.join("bad.ini");
+        std::fs::write(&f, "particles = 100\nwarp_factor = 9\n")
+            .unwrap();
+        let err = dispatch(&args(&[
+            "run", "--config", f.to_str().unwrap(),
+        ]))
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("warp_factor"), "{msg}");
+        assert!(msg.contains("line 2"), "{msg}");
+        // a flag missing its value names the flag
+        let err = dispatch(&args(&["run", "--particles"]))
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--particles"), "{msg}");
     }
 
     #[test]

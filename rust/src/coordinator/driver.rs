@@ -10,7 +10,8 @@ use crate::fmm::{BiotSavart2D, Gravity2D, KernelSpec, LogPotential2D,
                  NativeBackend, OpDims, OpsBackend};
 use crate::metrics::{ScalingPoint, ScalingSeries};
 use crate::partition::{assign_subtrees, Assignment};
-use crate::quadtree::{Domain, Particle, Quadtree, TreeCut, TreeMode};
+use crate::quadtree::{self, Domain, Particle, Quadtree, TreeCut,
+                      TreeMode};
 use crate::runtime::PjrtBackend;
 use crate::sched::sim::OpCosts as PetfmmOpCosts;
 use crate::sched::{ParallelPlan, SimResult, Simulator};
@@ -121,6 +122,10 @@ pub fn prepare(config: &RunConfig) -> Result<Problem> {
 /// all branch on `tree.mode` internally.
 pub fn prepare_with_particles(config: &RunConfig, particles: Vec<Particle>)
     -> Result<Problem> {
+    // typed entry-boundary validation: an empty or non-finite particle
+    // set has no meaningful solve and would otherwise surface as a
+    // deep panic (or silent NaN poisoning) inside the pipeline
+    quadtree::validate_particles(&particles)?;
     let tree = match config.tree_mode()? {
         TreeMode::Uniform => {
             Quadtree::build(Domain::UNIT, config.levels, particles)

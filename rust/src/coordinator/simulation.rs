@@ -37,7 +37,9 @@ use anyhow::{Context, Result};
 
 use super::driver::{self, make_backend, Problem};
 use super::solver::{validate_backend, FmmSolver, RunMode, Solution};
+use crate::comm::FaultCounters;
 use crate::config::RunConfig;
+use crate::error::FmmError;
 use crate::metrics::{SimulationTrace, StepRecord};
 use crate::quadtree::{Particle, RebuildScratch};
 use crate::sched::{stages_makespan, ParallelPlan};
@@ -66,7 +68,17 @@ pub struct Simulation {
     /// whenever the mode changes, so a failing combination can never
     /// reach the state-consuming solver)
     validated_mode: Option<RunMode>,
+    /// monotone fault-universe counter: every chaos solve attempt —
+    /// across steps AND across retries of one step — draws from a
+    /// fresh deterministic fault sequence (DESIGN.md §13)
+    chaos_epoch: u64,
 }
+
+/// Whole-solve retries (fresh fault universe from the checkpoint)
+/// before the recovery ladder degrades to the chaos-free serial
+/// fallback.  In-protocol retransmits happen *inside* each attempt;
+/// this budget bounds the step-level rung.
+const STEP_RETRY_BUDGET: u64 = 2;
 
 impl Simulation {
     /// Simulation over the config's synthetic workload.
@@ -92,6 +104,7 @@ impl Simulation {
             scratch: RebuildScratch::default(),
             trace: SimulationTrace::default(),
             validated_mode: None,
+            chaos_epoch: 0,
         }
     }
 
@@ -125,6 +138,67 @@ impl Simulation {
         position_digest(self.particles())
     }
 
+    /// One facade solve under the recovery ladder (DESIGN.md §13).
+    /// `make(degraded)` builds a fresh solver per attempt from
+    /// checkpointed state — `degraded = true` means the chaos-free
+    /// serial fallback.  The rungs: in-protocol retransmits happen
+    /// inside each attempt; a recoverable failure (retry budget
+    /// exhausted on some link, a rank declared dead) retries the whole
+    /// solve in a fresh fault universe (epoch bump); after
+    /// [`STEP_RETRY_BUDGET`] such retries the solve degrades to a
+    /// chaos-free serial run over the same checkpoint and the
+    /// partition is refreshed for the survivors.  Every rung replays
+    /// the identical schedule, so recovery is bitwise-invisible.
+    fn solve_with_ladder<F>(&mut self, faults: &mut FaultCounters,
+                            make: &F) -> Result<Solution>
+    where
+        F: Fn(bool) -> FmmSolver,
+    {
+        let mut retries = 0u64;
+        loop {
+            let epoch = self.chaos_epoch;
+            self.chaos_epoch += 1;
+            let err = match make(false)
+                .mode(self.mode)
+                .chaos_epoch(epoch)
+                .solve()
+            {
+                Ok(sol) => {
+                    faults.merge(&sol.faults);
+                    return Ok(sol);
+                }
+                Err(e) => e,
+            };
+            let fe = err.downcast_ref::<FmmError>();
+            if !fe.is_some_and(FmmError::is_recoverable) {
+                return Err(err).context("dynamic step solve");
+            }
+            if matches!(fe, Some(FmmError::RankFailed { .. })) {
+                faults.rank_failures += 1;
+            }
+            if retries < STEP_RETRY_BUDGET {
+                retries += 1;
+                faults.step_retries += 1;
+                continue;
+            }
+            // budget spent: degrade gracefully — the serial evaluator
+            // needs no wire, and the three modes are bitwise-identical,
+            // so the trajectory is unaffected; then hand the next
+            // (threaded) step a freshly-refined survivor partition
+            faults.serial_fallbacks += 1;
+            let mut sol = make(true)
+                .mode(RunMode::Serial)
+                .solve()
+                .context("chaos-free serial fallback solve")?;
+            sol.problem
+                .assignment
+                .refine_in_place(sol.problem.config.seed);
+            faults.survivor_repartitions += 1;
+            faults.merge(&sol.faults);
+            return Ok(sol);
+        }
+    }
+
     /// Advance one step (solve → convect → rebuild → re-model →
     /// possible repartition); returns the step's record.
     pub fn step(&mut self) -> Result<&StepRecord> {
@@ -139,6 +213,22 @@ impl Simulation {
         if self.validated_mode != Some(self.mode) {
             let cfg = &self.problem().config;
             validate_backend(cfg, self.mode)?;
+            // mirror the facade's chaos/mode check here so the typed
+            // error surfaces before the problem is consumed
+            if cfg.fault_plan().is_some()
+                && self.mode != RunMode::Threaded
+            {
+                return Err(anyhow::Error::new(FmmError::config(
+                    "chaos",
+                    format!(
+                        "profile '{}' needs --mode threaded (the {} \
+                         mode has no message wire to inject faults \
+                         into)",
+                        cfg.chaos,
+                        self.mode.name()
+                    ),
+                )));
+            }
             if self.mode != RunMode::Threaded {
                 make_backend(cfg).context("dynamic step backend")?;
             }
@@ -153,14 +243,36 @@ impl Simulation {
             .expect("problem is always present between steps");
         let cfg = problem.config.clone();
         let dt = cfg.dt;
+        let chaos = cfg.fault_plan().is_some();
+        let mut faults = FaultCounters::default();
 
         // ---- 1. solve (through the facade; plan refreshed in place)
         let t_solve = Instant::now();
-        let mut solver = FmmSolver::from_problem(problem).mode(self.mode);
-        if let Some(plan) = self.plan.take() {
-            solver = solver.plan(plan);
-        }
-        let sol = solver.solve().context("dynamic step solve")?;
+        let sol = if chaos {
+            // step-level checkpoint: the solver consumes its problem,
+            // so every retry rung needs a pristine copy to restart
+            // from; chaos-off runs keep the zero-copy move below
+            let checkpoint = problem;
+            let plan_seed = self.plan.take();
+            self.solve_with_ladder(&mut faults, &|degraded| {
+                let mut p = checkpoint.clone();
+                if degraded {
+                    p.config.chaos = "off".into();
+                }
+                let mut s = FmmSolver::from_problem(p);
+                if let Some(pl) = plan_seed.clone() {
+                    s = s.plan(pl);
+                }
+                s
+            })?
+        } else {
+            let mut solver =
+                FmmSolver::from_problem(problem).mode(self.mode);
+            if let Some(plan) = self.plan.take() {
+                solver = solver.plan(plan);
+            }
+            solver.solve().context("dynamic step solve")?
+        };
         let mut solve_secs = t_solve.elapsed().as_secs_f64();
         let Solution {
             vel,
@@ -173,6 +285,10 @@ impl Simulation {
         } = sol;
         self.plan = plan;
         let mut problem = returned;
+        // a serial-fallback rung hands back the degraded checkpoint
+        // clone (chaos forced off for that one solve); restore the
+        // configured profile so degradation is per-step, not sticky
+        problem.config.chaos = cfg.chaos.clone();
         let makespan = stages_makespan(&stages);
 
         // ---- 2. convect + 3. rebuild (allocation-steady hot loop)
@@ -195,11 +311,24 @@ impl Simulation {
                 let mut mid = parts.clone();
                 convect(&mut mid, &vel, 0.5 * dt);
                 let t_half = Instant::now();
-                let half = FmmSolver::from_config(&cfg)
-                    .particles(mid)
-                    .mode(self.mode)
-                    .solve()
-                    .context("RK2 midpoint solve")?;
+                let half = if chaos {
+                    // same ladder as the main solve; each attempt
+                    // re-prepares from the midpoint particle copy
+                    self.solve_with_ladder(&mut faults, &|degraded| {
+                        let mut c = cfg.clone();
+                        if degraded {
+                            c.chaos = "off".into();
+                        }
+                        FmmSolver::from_config(&c)
+                            .particles(mid.clone())
+                    })?
+                } else {
+                    FmmSolver::from_config(&cfg)
+                        .particles(mid)
+                        .mode(self.mode)
+                        .solve()
+                        .context("RK2 midpoint solve")?
+                };
                 midpoint_secs = t_half.elapsed().as_secs_f64();
                 counts.merge(&half.counts);
                 convect(&mut parts, &half.vel, dt);
@@ -238,6 +367,7 @@ impl Simulation {
             lb_predicted_before: lb_before,
             lb_predicted_after: lb_after,
             repartitioned,
+            faults,
         });
         Ok(self.trace.steps.last().expect("just pushed"))
     }
@@ -351,6 +481,76 @@ mod tests {
             assert_eq!(sim.particles(), &before[..]);
             assert!(sim.trace().steps.is_empty());
         }
+    }
+
+    #[test]
+    fn lossy_chaos_trajectory_is_bitwise_identical_to_chaos_off() {
+        // the headline contract: the recovery ladder absorbs every
+        // injected fault (retransmit → step retry → serial fallback)
+        // without perturbing a single bit of the trajectory
+        let quiet = small_config();
+        let noisy = RunConfig {
+            chaos: "lossy".into(),
+            chaos_seed: 7,
+            ..small_config()
+        };
+        let mut base =
+            Simulation::new(&quiet).unwrap().mode(RunMode::Threaded);
+        base.run_steps(3).unwrap();
+        let mut sim =
+            Simulation::new(&noisy).unwrap().mode(RunMode::Threaded);
+        sim.run_steps(3).unwrap();
+        assert_eq!(sim.position_digest(), base.position_digest(),
+                   "recovery must be numerically invisible");
+        let f = &sim.trace().faults;
+        assert!(f.injected_total() > 0,
+                "lossy chaos must actually inject faults");
+        assert!(base.trace().faults.is_quiet());
+    }
+
+    #[test]
+    fn blackhole_chaos_degrades_to_the_serial_fallback() {
+        // p_drop = 1.0: no threaded attempt can ever finish, so every
+        // step must walk the whole ladder and land on the chaos-free
+        // serial fallback — and the trajectory still matches
+        let noisy = RunConfig {
+            chaos: "blackhole".into(),
+            chaos_seed: 3,
+            steps: 1,
+            ..small_config()
+        };
+        let mut sim =
+            Simulation::new(&noisy).unwrap().mode(RunMode::Threaded);
+        sim.run_steps(1).unwrap();
+        let f = &sim.trace().faults;
+        assert_eq!(f.serial_fallbacks, 1, "{f:?}");
+        assert_eq!(f.step_retries, STEP_RETRY_BUDGET, "{f:?}");
+        assert!(f.survivor_repartitions >= 1, "{f:?}");
+        let quiet = RunConfig { steps: 1, ..small_config() };
+        let mut base =
+            Simulation::new(&quiet).unwrap().mode(RunMode::Threaded);
+        base.run_steps(1).unwrap();
+        assert_eq!(sim.position_digest(), base.position_digest());
+    }
+
+    #[test]
+    fn chaos_on_a_wireless_mode_is_a_typed_preflight_error() {
+        let noisy = RunConfig {
+            chaos: "lossy".into(),
+            ..small_config()
+        };
+        let mut sim =
+            Simulation::new(&noisy).unwrap().mode(RunMode::Serial);
+        let before = sim.particles().to_vec();
+        let err = sim.step().unwrap_err();
+        let fe = err
+            .downcast_ref::<FmmError>()
+            .expect("typed config error");
+        assert!(matches!(fe, FmmError::Config { key, .. }
+                         if key == "chaos"), "{fe}");
+        // pre-flight fired before the problem was consumed
+        assert_eq!(sim.particles(), &before[..]);
+        assert!(sim.trace().steps.is_empty());
     }
 
     #[test]

@@ -30,8 +30,10 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use super::driver::{self, make_backend, native_dims, Problem};
-use crate::comm::threaded::run_threaded_on;
+use crate::comm::threaded::run_threaded_on_faulty;
+use crate::comm::FaultCounters;
 use crate::config::RunConfig;
+use crate::error::FmmError;
 use crate::fmm::{BiotSavart2D, Evaluator, FmmState, Gravity2D,
                  KernelSpec, LogPotential2D, OpCounts};
 use crate::quadtree::Particle;
@@ -108,6 +110,10 @@ pub struct FmmSolver {
     problem: Option<Problem>,
     mode: RunMode,
     plan: Option<ParallelPlan>,
+    /// fault-universe epoch mixed into the config's chaos plan — the
+    /// time-stepper bumps it per step (and per retry) so every solve
+    /// draws a fresh deterministic fault sequence
+    chaos_epoch: u64,
 }
 
 impl FmmSolver {
@@ -124,6 +130,7 @@ impl FmmSolver {
             problem: None,
             mode: RunMode::default(),
             plan: None,
+            chaos_epoch: 0,
         }
     }
 
@@ -141,6 +148,7 @@ impl FmmSolver {
             problem: Some(problem),
             mode: RunMode::default(),
             plan: None,
+            chaos_epoch: 0,
         }
     }
 
@@ -181,9 +189,40 @@ impl FmmSolver {
         self
     }
 
+    /// Select the chaos fault-universe epoch (default 0).  Only
+    /// meaningful when the config enables a chaos profile; distinct
+    /// epochs draw completely independent deterministic fault
+    /// sequences from the same seed, which is how the time-stepper's
+    /// step retry escapes a fault pattern that exhausted the in-protocol
+    /// retransmit budget.
+    pub fn chaos_epoch(mut self, epoch: u64) -> FmmSolver {
+        self.chaos_epoch = epoch;
+        self
+    }
+
     /// Run the configured solve.
     pub fn solve(self) -> Result<Solution> {
-        let FmmSolver { config, particles, problem, mode, plan } = self;
+        let FmmSolver {
+            config, particles, problem, mode, plan, chaos_epoch,
+        } = self;
+        // the chaos plan lives on the config; only the threaded runtime
+        // has a wire to inject faults into, so anything else is a
+        // config error (silently ignoring the profile would let a CI
+        // chaos job "pass" without ever exercising the fault path)
+        let fault_plan = config
+            .fault_plan()
+            .map(|p| p.with_epoch(chaos_epoch));
+        if fault_plan.is_some() && mode != RunMode::Threaded {
+            return Err(anyhow::Error::new(FmmError::config(
+                "chaos",
+                format!(
+                    "profile '{}' needs --mode threaded (the {} mode \
+                     has no message wire to inject faults into)",
+                    config.chaos,
+                    mode.name()
+                ),
+            )));
+        }
         let problem = match problem {
             Some(mut p) => {
                 // setters may have changed non-structural keys (kernel,
@@ -228,6 +267,7 @@ impl FmmSolver {
                     mode,
                     problem,
                     plan,
+                    faults: FaultCounters::default(),
                 })
             }
             RunMode::Threaded => {
@@ -241,19 +281,20 @@ impl FmmSolver {
                 let Problem { config: pcfg, tree, cut, assignment } =
                     problem;
                 let tree = Arc::new(tree);
-                let (vel, counts) = match config.kernel {
-                    KernelSpec::BiotSavart => run_threaded_on(
+                let fp = fault_plan.as_ref();
+                let (vel, counts, faults) = match config.kernel {
+                    KernelSpec::BiotSavart => run_threaded_on_faulty(
                         BiotSavart2D::new(config.sigma), tree.clone(),
-                        &cut, &assignment, dims,
-                    ),
-                    KernelSpec::LogPotential => run_threaded_on(
+                        &cut, &assignment, dims, fp,
+                    )?,
+                    KernelSpec::LogPotential => run_threaded_on_faulty(
                         LogPotential2D, tree.clone(), &cut, &assignment,
-                        dims,
-                    ),
-                    KernelSpec::Gravity => run_threaded_on(
+                        dims, fp,
+                    )?,
+                    KernelSpec::Gravity => run_threaded_on_faulty(
                         Gravity2D::default(), tree.clone(), &cut,
-                        &assignment, dims,
-                    ),
+                        &assignment, dims, fp,
+                    )?,
                 };
                 let tree = Arc::try_unwrap(tree)
                     .expect("rank threads joined; no Arc clones remain");
@@ -274,6 +315,7 @@ impl FmmSolver {
                         assignment,
                     },
                     plan,
+                    faults,
                 })
             }
             RunMode::Simulated => {
@@ -305,6 +347,7 @@ impl FmmSolver {
                     mode,
                     problem,
                     plan: Some(plan),
+                    faults: FaultCounters::default(),
                 })
             }
         }
@@ -351,6 +394,11 @@ pub struct Solution {
     /// step's solver so its task vectors are refreshed in place instead
     /// of reallocated.
     pub plan: Option<ParallelPlan>,
+    /// Fault-injection and recovery accounting from the comm substrate
+    /// (`Threaded` mode; all-zero when chaos is off and in the other
+    /// modes).  `faults.is_quiet()` distinguishes a run that never saw
+    /// a fault from one that recovered transparently.
+    pub faults: FaultCounters,
 }
 
 impl Solution {
@@ -520,6 +568,91 @@ mod tests {
             assert!(err.contains("unknown backend"),
                     "{}: {err}", mode.name());
         }
+    }
+
+    #[test]
+    fn empty_and_non_finite_particle_sets_are_typed_errors() {
+        let err = FmmSolver::from_config(&small_config())
+            .particles(Vec::new())
+            .solve()
+            .unwrap_err();
+        let fe = err
+            .downcast_ref::<FmmError>()
+            .expect("typed input error");
+        assert!(matches!(fe, FmmError::InvalidInput(_)), "{fe}");
+        assert!(fe.to_string().contains("empty"), "{fe}");
+        let err = FmmSolver::from_config(&small_config())
+            .particles(vec![[0.2, 0.2, 1.0], [f64::NAN, 0.5, 1.0]])
+            .solve()
+            .unwrap_err();
+        let fe = err
+            .downcast_ref::<FmmError>()
+            .expect("typed input error");
+        assert!(fe.to_string().contains("particle 1"), "{fe}");
+    }
+
+    #[test]
+    fn chaos_profiles_need_the_threaded_wire() {
+        let cfg = RunConfig {
+            chaos: "lossy".into(),
+            chaos_seed: 7,
+            ..small_config()
+        };
+        for mode in [RunMode::Serial, RunMode::Simulated] {
+            let err = FmmSolver::from_config(&cfg)
+                .mode(mode)
+                .solve()
+                .unwrap_err();
+            let fe = err
+                .downcast_ref::<FmmError>()
+                .expect("typed config error");
+            assert!(matches!(fe, FmmError::Config { key, .. }
+                             if key == "chaos"),
+                    "{}: {fe}", mode.name());
+        }
+    }
+
+    #[test]
+    fn lossy_chaos_through_the_facade_is_bitwise_transparent() {
+        let quiet = small_config();
+        let noisy = RunConfig {
+            chaos: "lossy".into(),
+            chaos_seed: 7,
+            ..small_config()
+        };
+        let baseline = FmmSolver::from_config(&quiet)
+            .mode(RunMode::Threaded)
+            .solve()
+            .unwrap();
+        assert!(baseline.faults.is_quiet());
+        // epoch retry mirrors the time-stepper's recovery ladder: a
+        // seed whose in-protocol retransmit budget runs dry in one
+        // universe succeeds in the next
+        let mut noisy_sol = None;
+        for epoch in 0..4 {
+            match FmmSolver::from_config(&noisy)
+                .mode(RunMode::Threaded)
+                .chaos_epoch(epoch)
+                .solve()
+            {
+                Ok(sol) => {
+                    noisy_sol = Some(sol);
+                    break;
+                }
+                Err(e) => {
+                    let fe = e
+                        .downcast_ref::<FmmError>()
+                        .expect("typed comm error");
+                    assert!(fe.is_recoverable(), "{fe}");
+                }
+            }
+        }
+        let noisy_sol = noisy_sol
+            .expect("some epoch recovers within the retry budget");
+        assert_eq!(baseline.vel, noisy_sol.vel,
+                   "recovery must be numerically invisible");
+        assert!(noisy_sol.faults.injected_total() > 0,
+                "the lossy profile must actually inject faults");
     }
 
     #[test]

@@ -1,0 +1,131 @@
+//! The typed error taxonomy for the public seams (DESIGN.md §13).
+//!
+//! Before this module, anomalies at the comm/coordinator boundaries were
+//! `unwrap`/`expect` panics — acceptable for an in-memory prototype,
+//! fatal for a transport that is *expected* to see dropped, delayed and
+//! corrupted messages.  [`FmmError`] classifies every failure a client
+//! can meaningfully react to; the recovery ladder in
+//! `coordinator::Simulation` (retry → serial fallback → survivor
+//! repartition) dispatches on it.
+//!
+//! The crate's coordinator-level APIs keep their `anyhow::Result`
+//! signatures — `anyhow` preserves the concrete type, so callers that
+//! need to dispatch use `err.downcast_ref::<FmmError>()` (the tests
+//! do exactly that), while CLI-style callers just print the chain.
+
+use std::fmt;
+
+use crate::comm::CommError;
+
+/// Typed failure classes at the library's public seams.
+#[derive(Debug)]
+pub enum FmmError {
+    /// The caller handed a public entry point an unusable input (empty
+    /// particle set, non-finite coordinates, …).
+    InvalidInput(String),
+    /// A config key or CLI flag failed to parse or validate; `key`
+    /// names the offending setting.
+    Config { key: String, reason: String },
+    /// A transport-level communication failure that survived the full
+    /// retry/backoff schedule.
+    Comm(CommError),
+    /// A rank of the threaded runtime died; the step-level recovery
+    /// ladder treats this as "rank declared dead".
+    RankFailed { rank: usize, source: Box<FmmError> },
+    /// Backend construction or selection failed.
+    Backend(String),
+    /// An internal invariant broke (e.g. a rank thread panicked).
+    Internal(String),
+}
+
+impl FmmError {
+    /// Convenience constructor for [`FmmError::Config`].
+    pub fn config(key: impl Into<String>, reason: impl Into<String>)
+        -> FmmError {
+        FmmError::Config { key: key.into(), reason: reason.into() }
+    }
+
+    /// Whether the error class is one the step-level recovery ladder
+    /// can mask by retrying / falling back (comm faults and rank
+    /// deaths), as opposed to caller mistakes that retrying cannot fix.
+    pub fn is_recoverable(&self) -> bool {
+        matches!(self,
+                 FmmError::Comm(_) | FmmError::RankFailed { .. }
+                 | FmmError::Internal(_))
+    }
+}
+
+impl fmt::Display for FmmError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FmmError::InvalidInput(s) => write!(f, "invalid input: {s}"),
+            FmmError::Config { key, reason } => {
+                write!(f, "config key '{key}': {reason}")
+            }
+            FmmError::Comm(e) => write!(f, "communication failed: {e}"),
+            FmmError::RankFailed { rank, source } => {
+                write!(f, "rank {rank} failed: {source}")
+            }
+            FmmError::Backend(s) => write!(f, "backend: {s}"),
+            FmmError::Internal(s) => write!(f, "internal error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for FmmError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FmmError::Comm(e) => Some(e),
+            FmmError::RankFailed { source, .. } => Some(source.as_ref()),
+            _ => None,
+        }
+    }
+}
+
+impl From<CommError> for FmmError {
+    fn from(e: CommError) -> FmmError {
+        FmmError::Comm(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Stage;
+
+    #[test]
+    fn display_names_the_offending_key() {
+        let e = FmmError::config("chaos-seed", "bad value 'x'");
+        let s = e.to_string();
+        assert!(s.contains("chaos-seed") && s.contains("bad value"),
+                "{s}");
+    }
+
+    #[test]
+    fn comm_errors_chain_as_sources() {
+        use std::error::Error;
+        let inner = CommError::StageTimeout {
+            rank: 2,
+            stage: Stage::Exchange,
+            missing: 3,
+        };
+        let e = FmmError::RankFailed {
+            rank: 2,
+            source: Box::new(FmmError::Comm(inner)),
+        };
+        assert!(e.is_recoverable());
+        assert!(e.source().is_some());
+        let s = e.to_string();
+        assert!(s.contains("rank 2") && s.contains("m2l-exchange"),
+                "{s}");
+    }
+
+    #[test]
+    fn caller_mistakes_are_not_recoverable() {
+        assert!(!FmmError::InvalidInput("empty".into()).is_recoverable());
+        assert!(!FmmError::config("tree", "bad").is_recoverable());
+        // anyhow round-trip preserves the concrete type
+        let any: anyhow::Error = FmmError::InvalidInput("x".into()).into();
+        assert!(any.downcast_ref::<FmmError>().is_some());
+    }
+}

@@ -47,6 +47,7 @@ use std::time::Instant;
 use super::arena::ExpansionArena;
 use super::backend::OpsBackend;
 use super::optable::{self, CachedOps};
+use crate::error::FmmError;
 use crate::quadtree::{interaction_list, near_domain, p2p_sources, BoxId,
                       Quadtree, TreeMode};
 
@@ -164,6 +165,18 @@ impl<'a> Evaluator<'a> {
             use_cached: true,
             inv_r_by_level,
         }
+    }
+
+    /// Validated constructor for direct (non-facade) clients: rejects a
+    /// tree over an empty or non-finite particle set with a typed
+    /// [`FmmError::InvalidInput`] instead of letting the sweep panic or
+    /// silently propagate NaN through every expansion.  The facade path
+    /// validates at `driver::prepare*`, so [`Evaluator::new`] stays the
+    /// cheap unchecked entry there.
+    pub fn try_new(tree: &'a Quadtree, backend: &'a dyn OpsBackend)
+        -> Result<Self, FmmError> {
+        crate::quadtree::validate_particles(&tree.particles)?;
+        Ok(Evaluator::new(tree, backend))
     }
 
     /// Set the batch-dispatch worker count; 0 = one worker per host core.
@@ -1277,5 +1290,21 @@ mod tests {
             .sum();
         assert_eq!(c.m2l, m2l_expected);
         assert_eq!(c.l2l, 64);           // level-3 children of level-2 LEs
+    }
+
+    #[test]
+    fn try_new_rejects_invalid_particle_stores() {
+        let dims = OpDims { batch: 8, leaf: 8, terms: 6, sigma: 0.01 };
+        let backend = NativeBackend::new(dims, BiotSavart2D::new(0.01));
+        let empty = Quadtree::build(Domain::UNIT, 3, Vec::new());
+        assert!(matches!(Evaluator::try_new(&empty, &backend),
+                         Err(FmmError::InvalidInput(_))));
+        let bad = Quadtree::build(Domain::UNIT, 3,
+                                  vec![[0.5, f64::NAN, 1.0]]);
+        assert!(matches!(Evaluator::try_new(&bad, &backend),
+                         Err(FmmError::InvalidInput(_))));
+        let ok = Quadtree::build(Domain::UNIT, 3,
+                                 vec![[0.5, 0.5, 1.0]]);
+        assert!(Evaluator::try_new(&ok, &backend).is_ok());
     }
 }

@@ -32,6 +32,7 @@ pub mod bench;
 pub mod comm;
 pub mod config;
 pub mod coordinator;
+pub mod error;
 pub mod fmm;
 pub mod metrics;
 pub mod model;

@@ -4,6 +4,7 @@
 //! figure series, and the per-step trace of the dynamic
 //! load-balancing time-stepper ([`SimulationTrace`]).
 
+use crate::comm::FaultCounters;
 use crate::fmm::OpCounts;
 use crate::sched::StageRecord;
 
@@ -170,6 +171,10 @@ pub struct StepRecord {
     pub lb_predicted_after: f64,
     /// whether the model-driven repartition fired this step
     pub repartitioned: bool,
+    /// fault-injection and recovery accounting for the step's solve(s)
+    /// (all-zero outside chaos runs; includes any step retries and
+    /// serial fallbacks the recovery ladder spent on this step)
+    pub faults: FaultCounters,
 }
 
 /// The full per-step trace of one dynamic run.
@@ -178,6 +183,8 @@ pub struct SimulationTrace {
     pub steps: Vec<StepRecord>,
     /// total model-driven repartitions across the run
     pub repartitions: usize,
+    /// run-total fault/recovery counters (sum of the per-step records)
+    pub faults: FaultCounters,
 }
 
 impl SimulationTrace {
@@ -185,6 +192,7 @@ impl SimulationTrace {
         if r.repartitioned {
             self.repartitions += 1;
         }
+        self.faults.merge(&r.faults);
         self.steps.push(r);
     }
 
@@ -225,6 +233,35 @@ impl SimulationTrace {
             .last()
             .map(|s| s.lb_predicted_after)
             .unwrap_or(1.0)
+    }
+
+    /// One-paragraph fault/recovery report for the `simulate` CLI and
+    /// the CI chaos-smoke artifact.  Empty string when the run never
+    /// saw a fault (so quiet runs print nothing extra).
+    pub fn fault_report(&self) -> String {
+        let f = &self.faults;
+        if f.is_quiet() {
+            return String::new();
+        }
+        format!(
+            "faults: injected {} (drop {} dup {} delay {} corrupt {})\n\
+             recovery: checksum-rejects {} dup-discards {} \
+             retransmits {}\n\
+             ladder: step-retries {} serial-fallbacks {} \
+             survivor-repartitions {} rank-failures {}\n",
+            f.injected_total(),
+            f.injected_drops,
+            f.injected_duplicates,
+            f.injected_delays,
+            f.injected_corruptions,
+            f.checksum_rejects,
+            f.duplicates_discarded,
+            f.retransmits,
+            f.step_retries,
+            f.serial_fallbacks,
+            f.survivor_repartitions,
+            f.rank_failures,
+        )
     }
 
     /// Per-step text table for the `simulate` CLI.
@@ -307,6 +344,11 @@ mod tests {
             lb_predicted_before: 0.5,
             lb_predicted_after: if repart { 0.95 } else { 0.5 },
             repartitioned: repart,
+            faults: FaultCounters {
+                injected_drops: step as u64,
+                retransmits: step as u64,
+                ..FaultCounters::default()
+            },
         };
         let mut t = SimulationTrace::default();
         assert_eq!(t.final_lb(), 1.0);
@@ -319,6 +361,14 @@ mod tests {
         assert!((t.steps_per_sec() - 0.5).abs() < 1e-12);
         assert_eq!(t.final_lb(), 0.5);
         assert_eq!(t.table().lines().count(), 4);
+        // per-step fault counters aggregate into the run total
+        assert_eq!(t.faults.injected_drops, 3);
+        assert_eq!(t.faults.retransmits, 3);
+        let report = t.fault_report();
+        assert!(report.contains("injected 3"), "{report}");
+        assert!(report.contains("retransmits 3"), "{report}");
+        // a quiet trace prints nothing extra
+        assert!(SimulationTrace::default().fault_report().is_empty());
     }
 
     #[test]

@@ -20,9 +20,38 @@
 
 use super::neighbors::neighbors;
 use super::node::BoxId;
+use crate::error::FmmError;
 
 /// A particle: position (x, y) and circulation strength gamma.
 pub type Particle = [f64; 3];
+
+/// Validate a particle set before it enters the solve pipeline: the
+/// set must be non-empty and every coordinate/strength finite.  The
+/// raw build paths stay total (an empty tree is well-formed — the
+/// rebuild loop relies on that), but a *solve* over no particles or a
+/// NaN/Inf coordinate has no meaningful answer; catching it here turns
+/// a deep panic (or a silently-poisoned field) into a typed
+/// [`FmmError::InvalidInput`] at the entry boundary.
+pub fn validate_particles(parts: &[Particle])
+    -> Result<(), FmmError> {
+    if parts.is_empty() {
+        return Err(FmmError::InvalidInput(
+            "particle set is empty (a solve needs at least one \
+             particle)"
+                .into(),
+        ));
+    }
+    for (i, p) in parts.iter().enumerate() {
+        if !p.iter().all(|v| v.is_finite()) {
+            return Err(FmmError::InvalidInput(format!(
+                "particle {i} is not finite: \
+                 [{}, {}, {}] (x, y, gamma must all be finite)",
+                p[0], p[1], p[2]
+            )));
+        }
+    }
+    Ok(())
+}
 
 /// How the tree chooses its leaf set (DESIGN.md §12).
 ///
@@ -134,6 +163,16 @@ impl Quadtree {
         -> Quadtree {
         Quadtree::build_with_mode(domain, levels, TreeMode::Uniform,
                                   particles)
+    }
+
+    /// Validated build: [`validate_particles`] then [`Quadtree::build`].
+    /// The solve pipeline (`driver::prepare*`) goes through the same
+    /// validation; this is the checked constructor for direct clients.
+    pub fn try_build(domain: Domain, levels: u8,
+                     particles: Vec<Particle>)
+        -> Result<Quadtree, FmmError> {
+        validate_particles(&particles)?;
+        Ok(Quadtree::build(domain, levels, particles))
     }
 
     /// Adaptive build (DESIGN.md §12): leaves split while they hold more
@@ -1029,6 +1068,30 @@ mod tests {
             assert!(t.leaf_index(b).is_some());
         }
         assert!(t.leaf_index(&t.occupied_leaves[0].ancestor(3)).is_none());
+    }
+
+    #[test]
+    fn validation_rejects_empty_and_non_finite_sets() {
+        assert!(matches!(validate_particles(&[]),
+                         Err(FmmError::InvalidInput(_))));
+        let err = Quadtree::try_build(Domain::UNIT, 3, Vec::new())
+            .unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err}");
+        for bad in [
+            [f64::NAN, 0.5, 1.0],
+            [0.5, f64::INFINITY, 1.0],
+            [0.5, 0.5, f64::NEG_INFINITY],
+        ] {
+            let parts = vec![[0.1, 0.1, 1.0], bad];
+            let err = Quadtree::try_build(Domain::UNIT, 3, parts)
+                .unwrap_err();
+            assert!(matches!(err, FmmError::InvalidInput(_)));
+            assert!(err.to_string().contains("particle 1"), "{err}");
+        }
+        // and a clean set passes
+        assert!(Quadtree::try_build(Domain::UNIT, 3,
+                                    vec![[0.2, 0.3, 1.0]])
+                .is_ok());
     }
 
     #[test]

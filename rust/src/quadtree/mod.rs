@@ -10,7 +10,8 @@ pub mod neighbors;
 pub mod node;
 
 pub use adaptive::{m2l_pairs_at, p2p_interactions, p2p_sources};
-pub use build::{Domain, Particle, Quadtree, RebuildScratch, TreeMode};
+pub use build::{validate_particles, Domain, Particle, Quadtree,
+                RebuildScratch, TreeMode};
 pub use cut::{Adjacency, TreeCut};
 pub use neighbors::{box_offset, interaction_list, is_interaction_pair,
                     near_domain, neighbors, well_separated_offsets};

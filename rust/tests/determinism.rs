@@ -71,7 +71,8 @@ fn four_rank_threaded_run_matches_serial_bitwise() {
     let a = assign_subtrees(&tree, &cut, dims.terms, 4,
                             Strategy::Optimized, 1);
     let got = run_threaded(BiotSavart2D::new(dims.sigma), Domain::UNIT,
-                           QUICKSTART_LEVELS, &particles, &cut, &a, dims);
+                           QUICKSTART_LEVELS, &particles, &cut, &a, dims)
+        .unwrap();
     let want = serial_vel_input(&tree, dims);
     assert_eq!(got, want, "threaded 4-rank run diverged from serial");
 }

@@ -1,0 +1,158 @@
+//! The fault matrix: every injected fault class, on every wire stage
+//! the chaos profiles can target, must either be recovered bitwise or
+//! surface as a typed recoverable error — never a wrong answer.
+//!
+//! Two layers:
+//!   1. a property test that the packet checksum detects *any* single
+//!      payload bit flip (the FNV-1a fold is a bijection per word, so
+//!      one flipped bit always changes the digest), and
+//!   2. a {drop, duplicate, delay, corrupt} x {p2m-halo, m2l-exchange,
+//!      velocity-gather} grid at 1, 2, and 8 ranks asserting that
+//!      every run that completes is bitwise identical to the quiet
+//!      baseline.
+
+use std::sync::Arc;
+
+use petfmm::comm::threaded::run_threaded_on_faulty;
+use petfmm::comm::transport::Body;
+use petfmm::comm::{FaultPlan, FaultProfile, Message, Packet, Stage};
+use petfmm::config::RunConfig;
+use petfmm::coordinator::{native_dims, prepare};
+use petfmm::fmm::BiotSavart2D;
+use petfmm::proptest::{check, Gen};
+use petfmm::quadtree::BoxId;
+
+/// A random message with a non-trivial float payload (Barrier carries
+/// no payload, so a bit flip there is a no-op by construction).
+fn random_message(g: &mut Gen) -> Message {
+    let boxid = BoxId::new(3,
+                           g.usize_in(0, 7) as u32,
+                           g.usize_in(0, 7) as u32);
+    match g.usize_in(0, 2) {
+        0 => {
+            let n = g.usize_in(1, 6);
+            let parts = (0..n)
+                .map(|_| {
+                    [g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0),
+                     g.f64_in(-1.0, 1.0)]
+                })
+                .collect();
+            Message::Particles { leaf: boxid, parts }
+        }
+        1 => Message::Multipole {
+            boxid,
+            coeffs: g.vec_f64(g.usize_in(1, 16), -2.0, 2.0),
+        },
+        _ => Message::Local {
+            boxid,
+            coeffs: g.vec_f64(g.usize_in(1, 16), -2.0, 2.0),
+        },
+    }
+}
+
+#[test]
+fn checksum_detects_any_single_bit_payload_flip() {
+    check("single-bit-flip-detection", 400, |g| {
+        let stage = *g.choose(&Stage::ALL);
+        let seq = g.u64();
+        let packet = Packet::seal(seq, stage, random_message(g));
+        assert!(packet.verify(), "freshly sealed packet must verify");
+        let mut bad = packet.clone();
+        let flipped = match &mut bad.body {
+            Body::Data(m) => {
+                m.flip_payload_bit(g.u64(), (g.u64() % 64) as u8)
+            }
+            Body::Ack => unreachable!("seal() always wraps Data"),
+        };
+        assert!(flipped, "random_message payloads are never empty");
+        assert!(!bad.verify(),
+                "checksum missed a single-bit flip: {bad:?}");
+    });
+}
+
+/// One fault class at rate high enough to fire on a ~6-epoch budget
+/// but low enough that the retry schedule (6 attempts per hop) almost
+/// always pushes the payload through.
+const CLASSES: [(&str, FaultProfile); 4] = [
+    ("drop", FaultProfile { p_drop: 0.3, ..FaultProfile::OFF }),
+    ("duplicate",
+     FaultProfile { p_duplicate: 0.5, ..FaultProfile::OFF }),
+    ("delay", FaultProfile { p_delay: 0.5, ..FaultProfile::OFF }),
+    ("corrupt", FaultProfile { p_corrupt: 0.3, ..FaultProfile::OFF }),
+];
+
+/// The three wire stages the ISSUE names: upward halo, the M2L
+/// exchange, and the final velocity gather.
+const STAGES: [Stage; 3] = [Stage::Halo, Stage::Exchange, Stage::Gather];
+
+#[test]
+fn fault_grid_recovers_bitwise_at_one_two_and_eight_ranks() {
+    for ranks in [1usize, 2, 8] {
+        let cfg = RunConfig {
+            particles: 250,
+            levels: 4,
+            cut_level: 2,
+            terms: 8,
+            sigma: 0.01,
+            ranks,
+            distribution: "clustered".into(),
+            ..Default::default()
+        };
+        let problem = prepare(&cfg).unwrap();
+        let dims = native_dims(&cfg);
+        let kernel = BiotSavart2D::new(cfg.sigma);
+        let tree = Arc::new(problem.tree);
+
+        let (baseline, _, quiet) = run_threaded_on_faulty(
+            kernel.clone(), tree.clone(), &problem.cut,
+            &problem.assignment, dims, None)
+            .unwrap();
+        assert!(quiet.is_quiet(),
+                "no fault plan must mean no fault activity");
+
+        for (class, profile) in CLASSES {
+            for stage in STAGES {
+                let mut recovered = false;
+                let mut injected = 0;
+                for epoch in 0..6u64 {
+                    let plan =
+                        FaultPlan::targeted(stage, profile, 0xC0FFEE)
+                            .with_epoch(epoch);
+                    match run_threaded_on_faulty(
+                        kernel.clone(), tree.clone(), &problem.cut,
+                        &problem.assignment, dims, Some(&plan))
+                    {
+                        Ok((vel, _, faults)) => {
+                            assert_eq!(
+                                vel, baseline,
+                                "{class}@{} ranks={ranks} epoch={epoch} \
+                                 completed with wrong bits",
+                                stage.as_str());
+                            injected += faults.injected_total();
+                            recovered = true;
+                            break;
+                        }
+                        Err(e) => {
+                            assert!(e.is_recoverable(),
+                                    "{class}@{} ranks={ranks}: \
+                                     non-recoverable {e}",
+                                    stage.as_str());
+                        }
+                    }
+                }
+                assert!(recovered,
+                        "{class}@{} ranks={ranks}: no epoch in the \
+                         retry budget recovered",
+                        stage.as_str());
+                // single-rank runs have no wire, so nothing can be
+                // injected (whether a multi-rank run carries traffic
+                // on a given stage depends on the partition, so the
+                // positive case is asserted per-profile elsewhere)
+                if ranks == 1 {
+                    assert_eq!(injected, 0,
+                               "rank-1 run has no wire to fault");
+                }
+            }
+        }
+    }
+}

@@ -128,7 +128,8 @@ fn threaded_and_simulated_runtimes_agree() {
         &problem.cut,
         &problem.assignment,
         dims,
-    );
+    )
+    .unwrap();
     let err = rel_l2_error(&thr_vel, &sim_vel);
     assert!(err < 1e-11, "threaded vs sim err {err}");
 }
