@@ -65,5 +65,11 @@ fn main() -> anyhow::Result<()> {
     let gexact = grav.direct_oracle();
     println!("gravity kernel: rel-L2 error {:.3e} vs its oracle",
              rel_l2_error(&grav.vel, &gexact));
+
+    // Every other execution mode is the same one-builder-call swap and
+    // returns bitwise-identical velocities: `RunMode::Threaded` (one OS
+    // thread per rank), `RunMode::Process` (one OS *process* per rank
+    // over localhost TCP — survives worker crashes, DESIGN.md §14), and
+    // `RunMode::Simulated` (the paper's modeled network).
     Ok(())
 }

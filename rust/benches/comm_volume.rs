@@ -1,0 +1,107 @@
+//! Bench: observed wire bytes vs the Eq. 10–12 communication model.
+//!
+//! Runs the threaded protocol over the channel mesh at P = 2, 4, 8 and
+//! meters the *actual* per-stage bytes the message substrate moved
+//! (`StageBytes`, the measured counterpart of the model).  The model
+//! side is the weighted-graph edge cut built from the
+//! `CommEstimator` lateral/diagonal pair volumes (Eqs. 11–12) — the
+//! quantity partitioning minimizes.
+//!
+//! The gate: ranking the P values by modeled cross-rank volume must
+//! give the same order as ranking them by observed wire volume.  The
+//! model does not predict absolute wire bytes (packets carry headers,
+//! acks, and protocol barriers the model ignores) but it must predict
+//! *which configuration talks more* — that is what Eq. 10's comm term
+//! feeds on.  The result lands in `BENCH_comm.json`; CI asserts
+//! `rank_order_match`.
+
+use std::sync::Arc;
+
+use petfmm::bench::{bench_header, jarr, jnum, jobj, jstr,
+                    write_bench_json};
+use petfmm::comm::{channel_mesh, run_on_mesh, Stage, Transport};
+use petfmm::config::RunConfig;
+use petfmm::coordinator::{native_dims, prepare_with_particles, workload};
+use petfmm::fmm::BiotSavart2D;
+
+fn main() {
+    bench_header("Eqs. 10-12: observed wire bytes vs the comm model");
+    let fast = std::env::var("PETFMM_BENCH_FAST").is_ok();
+    let base = RunConfig {
+        particles: if fast { 500 } else { 2000 },
+        levels: if fast { 4 } else { 5 },
+        cut_level: 2,
+        terms: 12,
+        distribution: "clustered".into(),
+        par_threads: 1,
+        ..Default::default()
+    };
+    let particles = workload::generate(&base).expect("workload");
+
+    println!("{:>4}{:>18}{:>18}  per-stage observed (bytes)",
+             "P", "model edge cut", "observed wire");
+    let mut points: Vec<(usize, f64, f64, [f64; 5])> = Vec::new();
+    for ranks in [2usize, 4, 8] {
+        let cfg = RunConfig { ranks, ..base.clone() };
+        let problem = prepare_with_particles(&cfg, particles.clone())
+            .expect("prepare");
+        let dims = native_dims(&cfg);
+        let modeled = problem.assignment.edge_cut();
+        let mesh: Vec<Box<dyn Transport>> = channel_mesh(ranks)
+            .into_iter()
+            .map(|c| Box::new(c) as Box<dyn Transport>)
+            .collect();
+        let tree = Arc::new(problem.tree);
+        let (_, _, faults, wire) = run_on_mesh(
+            BiotSavart2D::new(cfg.sigma), tree, &problem.cut,
+            &problem.assignment, dims, None, mesh)
+            .expect("threaded solve");
+        assert!(faults.is_quiet(), "quiet run counted faults");
+        let per_stage: Vec<String> = Stage::ALL
+            .iter()
+            .map(|s| format!("{}={:.0}", s.as_str(), wire.get(*s)))
+            .collect();
+        println!("{ranks:>4}{modeled:>18.0}{:>18.0}  {}",
+                 wire.total(), per_stage.join(" "));
+        points.push((ranks, modeled, wire.total(), wire.bytes));
+    }
+
+    // the gate: same order, model vs measurement
+    let mut by_model: Vec<usize> = (0..points.len()).collect();
+    by_model.sort_by(|&a, &b| {
+        points[a].1.partial_cmp(&points[b].1).unwrap()
+    });
+    let mut by_wire: Vec<usize> = (0..points.len()).collect();
+    by_wire.sort_by(|&a, &b| {
+        points[a].2.partial_cmp(&points[b].2).unwrap()
+    });
+    let rank_order_match = by_model == by_wire;
+    println!("\nrank-order match (model vs observed): {rank_order_match}");
+
+    let rows: Vec<String> = points
+        .iter()
+        .map(|(ranks, modeled, observed, stages)| {
+            jobj(&[
+                ("ranks", jnum(*ranks as f64)),
+                ("modeled_edge_cut_bytes", jnum(*modeled)),
+                ("observed_wire_bytes", jnum(*observed)),
+                ("stages", jobj(&Stage::ALL
+                    .iter()
+                    .map(|s| (s.as_str(), jnum(stages[s.index()])))
+                    .collect::<Vec<_>>())),
+            ])
+        })
+        .collect();
+    let body = jobj(&[
+        ("name", jstr("comm_volume")),
+        ("kernel", jstr("biot-savart")),
+        ("particles", jnum(base.particles as f64)),
+        ("levels", jnum(base.levels as f64)),
+        ("terms", jnum(base.terms as f64)),
+        ("points", jarr(&rows)),
+        ("rank_order_match",
+         if rank_order_match { "true".into() }
+         else { "false".into() }),
+    ]);
+    write_bench_json("BENCH_comm.json", &body);
+}

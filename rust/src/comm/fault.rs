@@ -56,9 +56,11 @@ impl FaultProfile {
 }
 
 /// Named chaos profiles selectable via the `chaos` config key /
-/// `--chaos-profile` flag.
-pub const PROFILE_NAMES: [&str; 5] =
-    ["off", "lossy", "corrupt", "flaky", "blackhole"];
+/// `--chaos-profile` flag.  `rank-kill` is process-level chaos: no
+/// packet is ever touched, but one worker process aborts at a
+/// hash-selected (epoch, stage) — it requires `--mode process`.
+pub const PROFILE_NAMES: [&str; 6] =
+    ["off", "lossy", "corrupt", "flaky", "blackhole", "rank-kill"];
 
 /// A seeded, fully deterministic fault schedule: which transmissions
 /// are perturbed, and how the reliability layer should pace its
@@ -75,6 +77,9 @@ pub struct FaultPlan {
     pub profiles: [FaultProfile; 5],
     /// Retransmission schedule matched to the profile's severity.
     pub policy: RetryPolicy,
+    /// Process-level chaos: abort one worker at the hash-selected
+    /// coordinates of [`FaultPlan::kill_coordinates`].
+    pub kill: bool,
 }
 
 impl FaultPlan {
@@ -82,6 +87,20 @@ impl FaultPlan {
     /// `"off"` and unknown names return `None` — config validation
     /// turns the latter into a typed error before this is reached.
     pub fn from_profile(name: &str, seed: u64) -> Option<FaultPlan> {
+        if name == "rank-kill" {
+            // no packet faults: the injected failure is one worker
+            // process aborting (see `kill_coordinates`).  The policy
+            // keeps the lossless fast path — bitwise parity with the
+            // quiet run — plus the stage deadline as the backstop
+            // failure detector for the surviving ranks.
+            return Some(FaultPlan {
+                seed,
+                epoch: 0,
+                profiles: [FaultProfile::OFF; 5],
+                policy: RetryPolicy::process_default(),
+                kill: true,
+            });
+        }
         let (profile, policy) = match name {
             "lossy" => (
                 FaultProfile {
@@ -118,6 +137,7 @@ impl FaultPlan {
             epoch: 0,
             profiles: [profile; 5],
             policy,
+            kill: false,
         })
     }
 
@@ -133,6 +153,7 @@ impl FaultPlan {
             epoch: 0,
             profiles,
             policy: RetryPolicy::chaos_default(),
+            kill: false,
         }
     }
 
@@ -142,9 +163,46 @@ impl FaultPlan {
         self
     }
 
-    /// Whether any stage injects anything.
+    /// Whether any stage injects anything (a process kill counts).
     pub fn is_active(&self) -> bool {
-        self.profiles.iter().any(FaultProfile::is_active)
+        self.kill || self.profiles.iter().any(FaultProfile::is_active)
+    }
+
+    /// The hash-selected coordinates of the rank-kill fault, a pure
+    /// function of `(seed, ranks)`: the retry epoch the kill fires in
+    /// (exactly one epoch in `0..6`, so the step ladder's epoch bump
+    /// always clears it), the victim rank (never rank 0 — that is the
+    /// coordinator itself) and the protocol stage at (and beyond)
+    /// which the victim aborts.  Determinism argument: the doomed
+    /// attempt never completes (the victim dies before its gather
+    /// contribution at the latest), the retried attempt at the bumped
+    /// epoch is fault-free, and a discarded attempt leaves no trace —
+    /// so the trajectory digest equals the quiet run's bitwise.
+    pub fn kill_coordinates(&self, ranks: usize)
+        -> Option<(u64, usize, Stage)> {
+        if !self.kill || ranks < 2 {
+            return None;
+        }
+        let h = mix(&[self.seed, 0x6b69_6c6c]); // "kill"
+        let epoch = h % 6;
+        let h2 = mix(&[h, 1]);
+        let victim = 1 + (h2 % (ranks as u64 - 1)) as usize;
+        let h3 = mix(&[h2, 2]);
+        let stage = Stage::ALL[(h3 % 5) as usize];
+        Some((epoch, victim, stage))
+    }
+
+    /// If this plan's epoch makes `rank` the kill victim, the stage
+    /// from which it must abort.
+    pub fn should_kill(&self, rank: usize, ranks: usize)
+        -> Option<Stage> {
+        match self.kill_coordinates(ranks) {
+            Some((epoch, victim, stage))
+                if epoch == self.epoch && victim == rank => {
+                Some(stage)
+            }
+            _ => None,
+        }
     }
 
     /// The fault decision for one transmission — a pure function of
@@ -401,6 +459,50 @@ mod tests {
         assert!(FaultPlan::from_profile("blackhole", 1)
             .unwrap()
             .is_active());
+    }
+
+    #[test]
+    fn rank_kill_coordinates_are_deterministic_and_spare_the_hub() {
+        let plan = FaultPlan::from_profile("rank-kill", 11).unwrap();
+        assert!(plan.kill);
+        assert!(plan.is_active());
+        // packet layer stays completely quiet: the only injected
+        // fault is the process abort
+        for seq in 0..32 {
+            assert_eq!(
+                plan.decide(0, 1, Stage::Halo, seq, 0),
+                FaultDecision::Deliver
+            );
+        }
+        let (epoch, victim, stage) = plan.kill_coordinates(4).unwrap();
+        assert_eq!(plan.kill_coordinates(4), Some((epoch, victim, stage)));
+        assert!(epoch < 6);
+        assert!((1..4).contains(&victim));
+        // exactly one (epoch, rank) pair in the kill window is fatal,
+        // so the ladder's epoch bump always clears the fault
+        let mut fatal = 0;
+        for e in 0..6u64 {
+            let p = plan.clone().with_epoch(e);
+            for r in 0..4 {
+                if let Some(s) = p.should_kill(r, 4) {
+                    fatal += 1;
+                    assert_eq!((e, r, s), (epoch, victim, stage));
+                }
+            }
+        }
+        assert_eq!(fatal, 1);
+        // rank 0 is the coordinator: never a victim, at any seed
+        for seed in 0..64 {
+            let p = FaultPlan::from_profile("rank-kill", seed).unwrap();
+            let (_, v, _) = p.kill_coordinates(3).unwrap();
+            assert!(v == 1 || v == 2, "victim {v} out of range");
+        }
+        // a single-rank world has nothing to kill
+        assert!(plan.kill_coordinates(1).is_none());
+        // ordinary packet-chaos plans never kill
+        let lossy = FaultPlan::from_profile("lossy", 11).unwrap();
+        assert!(!lossy.kill);
+        assert!(lossy.should_kill(1, 4).is_none());
     }
 
     #[test]

@@ -7,6 +7,7 @@ pub mod fault;
 pub mod message;
 pub mod network;
 pub mod overlap;
+pub mod socket;
 pub mod threaded;
 pub mod transport;
 
@@ -15,5 +16,10 @@ pub use message::{Message, PARTICLE_WIRE_BYTES};
 pub use network::NetworkModel;
 pub use overlap::{interaction_overlap, neighbor_overlap, owner_of,
                   OverlapMap};
-pub use transport::{ChannelTransport, CommError, FaultCounters, Packet,
-                    ReliableEndpoint, RetryPolicy, Stage, Transport};
+pub use socket::{tcp_mesh, Frame, FrameReader, HubTransport, KillSwitch,
+                 WorkerTransport, KILL_EXIT_CODE, MAX_FRAME,
+                 WIRE_VERSION};
+pub use threaded::run_on_mesh;
+pub use transport::{channel_mesh, ChannelTransport, Clock, CommError,
+                    FakeClock, FaultCounters, Packet, ReliableEndpoint,
+                    RetryPolicy, Stage, StageBytes, Transport, WallClock};

@@ -1,0 +1,1260 @@
+//! Localhost-TCP transport for the multi-process execution mode
+//! (DESIGN.md §14).
+//!
+//! Process mode runs each rank as a real `petfmm worker` subprocess in
+//! a star topology: the coordinator process *is* rank 0 and the message
+//! router.  Every worker holds exactly one TCP connection to the hub;
+//! worker→worker traffic is relayed by the hub's per-connection reader
+//! threads, which rewrite one route byte and forward the raw frame
+//! without re-encoding.  On top of this physical layer the ranks run
+//! the identical [`ReliableEndpoint`](super::ReliableEndpoint) +
+//! `rank_main` protocol as the threaded mode, which is the whole
+//! bitwise-equivalence argument between backends: the transport moves
+//! exact `f64` bit patterns (see the codec below), and the protocol
+//! above it is transport-agnostic.
+//!
+//! **Frame format** — length-prefixed, versioned, little-endian:
+//!
+//! ```text
+//! [len: u32]                      payload length (2 ..= MAX_FRAME)
+//! [version: u8][kind: u8]         WIRE_VERSION, frame kind
+//! kind 0 HELLO    [rank: u8]
+//! kind 1 WELCOME  [world: u8][rank: u8][epoch: u64][config digest: u64]
+//! kind 2 BOOT     [cfg len: u32][ini bytes][n: u32][n x 3 f64 bits]
+//!                 [m: u32][m x u32 partition]
+//! kind 3 PACKET   [route: u8][seq: u64][stage: u8][checksum: u64]
+//!                 [body tag: u8][message ...]
+//! kind 4 BYE      [fault counters][stage bytes][op counts]
+//! ```
+//!
+//! The `route` byte of a PACKET is the *destination* rank on the
+//! worker→hub leg and the *source* rank on the hub→worker leg (the hub
+//! rewrites it in place when relaying).  Decoding is total: every
+//! malformed input — truncation, oversized length claims, unknown tags,
+//! garbage bytes — returns [`CommError::Codec`]; nothing panics, so a
+//! byzantine peer cannot take down the coordinator.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use super::message::Message;
+use super::transport::{Body, CommError, FaultCounters, Packet, Stage,
+                       StageBytes, Transport};
+use crate::fmm::OpCounts;
+use crate::quadtree::BoxId;
+
+/// Version byte every frame leads with; bumped on any codec change.
+pub const WIRE_VERSION: u8 = 1;
+/// Hard ceiling on a frame payload — anything larger is a codec error,
+/// not an allocation attempt.
+pub const MAX_FRAME: usize = 64 << 20;
+/// Exit code a rank-kill victim dies with (distinguishes the injected
+/// abort from a genuine crash in CI logs).
+pub const KILL_EXIT_CODE: i32 = 41;
+
+const KIND_HELLO: u8 = 0;
+const KIND_WELCOME: u8 = 1;
+const KIND_BOOT: u8 = 2;
+const KIND_PACKET: u8 = 3;
+const KIND_BYE: u8 = 4;
+
+/// Offset of a PACKET frame's route byte within the payload
+/// (`[version][kind][route]...`) — the one byte the hub rewrites when
+/// relaying worker→worker traffic.
+const ROUTE_BYTE: usize = 2;
+
+/// One decoded wire frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Worker → hub: first frame after connect.
+    Hello { rank: usize },
+    /// Hub → worker: rendezvous accepted; world size, assigned rank,
+    /// chaos epoch, and the FNV digest of the config the worker must
+    /// match after BOOT.
+    Welcome { world: usize, rank: usize, epoch: u64, config_digest: u64 },
+    /// Hub → worker: everything needed to rebuild the run bit-exactly —
+    /// the config as INI text, the exact global particle bits, and the
+    /// evolved subtree→rank assignment (which `refine_in_place` may
+    /// have moved past anything re-derivable from the config).
+    Boot {
+        config: String,
+        particles: Vec<[f64; 3]>,
+        part: Vec<u32>,
+    },
+    /// A protocol packet in flight (either leg; see `route` semantics
+    /// in the module docs).
+    Packet { route: usize, pkt: Packet },
+    /// Worker → hub: clean teardown, carrying the worker's fault
+    /// counters, per-stage wire bytes and operator counts.
+    Bye {
+        faults: FaultCounters,
+        wire: StageBytes,
+        counts: OpCounts,
+    },
+}
+
+fn frame_name(f: &Frame) -> &'static str {
+    match f {
+        Frame::Hello { .. } => "HELLO",
+        Frame::Welcome { .. } => "WELCOME",
+        Frame::Boot { .. } => "BOOT",
+        Frame::Packet { .. } => "PACKET",
+        Frame::Bye { .. } => "BYE",
+    }
+}
+
+fn codec_err(detail: String) -> CommError {
+    CommError::Codec { detail }
+}
+
+// ---------------------------------------------------------------- codec
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new(kind: u8) -> Enc {
+        Enc { buf: vec![WIRE_VERSION, kind] }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+}
+
+/// Bounds-checked sequential reader over one frame payload.  Every
+/// take names what it was reading so a truncation error says which
+/// field the frame ran out under.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn left(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str)
+        -> Result<&'a [u8], CommError> {
+        if self.left() < n {
+            return Err(codec_err(format!(
+                "truncated frame: needed {n} byte(s) for {what}, \
+                 {} left", self.left())));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, CommError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, CommError> {
+        let mut b = [0u8; 4];
+        b.copy_from_slice(self.take(4, what)?);
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, CommError> {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(self.take(8, what)?);
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64, CommError> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    /// Read a `u32` element count and reject it *before* allocating if
+    /// the claimed `count * item_bytes` cannot fit in the bytes that
+    /// actually remain — a garbage length field must cost nothing.
+    fn count(&mut self, item_bytes: usize, what: &str)
+        -> Result<usize, CommError> {
+        let n = self.u32(what)? as usize;
+        if n.saturating_mul(item_bytes) > self.left() {
+            return Err(codec_err(format!(
+                "{what} claims {n} item(s) ({} B each) but only {} \
+                 byte(s) remain", item_bytes, self.left())));
+        }
+        Ok(n)
+    }
+
+    fn finish(self, what: &str) -> Result<(), CommError> {
+        if self.pos != self.buf.len() {
+            return Err(codec_err(format!(
+                "{what} has {} trailing byte(s)", self.left())));
+        }
+        Ok(())
+    }
+}
+
+fn enc_boxid(e: &mut Enc, b: &BoxId) {
+    e.u8(b.level);
+    e.u32(b.ix);
+    e.u32(b.iy);
+}
+
+fn dec_boxid(d: &mut Dec) -> Result<BoxId, CommError> {
+    let level = d.u8("box level")?;
+    let ix = d.u32("box ix")?;
+    let iy = d.u32("box iy")?;
+    // validate before constructing: BoxId::new debug-asserts these
+    // invariants, and a hostile frame must not be able to trip them
+    if level > 30 || ix >= (1u32 << level) || iy >= (1u32 << level) {
+        return Err(codec_err(format!(
+            "box id out of range: level {level} ix {ix} iy {iy}")));
+    }
+    Ok(BoxId { level, ix, iy })
+}
+
+fn enc_message(e: &mut Enc, m: &Message) {
+    match m {
+        Message::Particles { leaf, parts } => {
+            e.u8(1);
+            enc_boxid(e, leaf);
+            e.u32(parts.len() as u32);
+            for p in parts {
+                for c in p {
+                    e.f64(*c);
+                }
+            }
+        }
+        Message::Multipole { boxid, coeffs } => {
+            e.u8(2);
+            enc_boxid(e, boxid);
+            e.u32(coeffs.len() as u32);
+            for c in coeffs {
+                e.f64(*c);
+            }
+        }
+        Message::Local { boxid, coeffs } => {
+            e.u8(3);
+            enc_boxid(e, boxid);
+            e.u32(coeffs.len() as u32);
+            for c in coeffs {
+                e.f64(*c);
+            }
+        }
+        Message::Velocities { idx, vel } => {
+            e.u8(4);
+            e.u32(idx.len() as u32);
+            for i in idx {
+                e.u32(*i);
+            }
+            e.u32(vel.len() as u32);
+            for v in vel {
+                e.f64(v[0]);
+                e.f64(v[1]);
+            }
+        }
+        Message::Barrier(t) => {
+            e.u8(5);
+            e.u32(*t);
+        }
+    }
+}
+
+fn dec_message(d: &mut Dec) -> Result<Message, CommError> {
+    match d.u8("message tag")? {
+        1 => {
+            let leaf = dec_boxid(d)?;
+            let n = d.count(24, "particle count")?;
+            let mut parts = Vec::with_capacity(n);
+            for _ in 0..n {
+                parts.push([
+                    d.f64("particle x")?,
+                    d.f64("particle y")?,
+                    d.f64("particle gamma")?,
+                ]);
+            }
+            Ok(Message::Particles { leaf, parts })
+        }
+        2 => {
+            let boxid = dec_boxid(d)?;
+            let n = d.count(8, "coefficient count")?;
+            let mut coeffs = Vec::with_capacity(n);
+            for _ in 0..n {
+                coeffs.push(d.f64("coefficient")?);
+            }
+            Ok(Message::Multipole { boxid, coeffs })
+        }
+        3 => {
+            let boxid = dec_boxid(d)?;
+            let n = d.count(8, "coefficient count")?;
+            let mut coeffs = Vec::with_capacity(n);
+            for _ in 0..n {
+                coeffs.push(d.f64("coefficient")?);
+            }
+            Ok(Message::Local { boxid, coeffs })
+        }
+        4 => {
+            let n = d.count(4, "index count")?;
+            let mut idx = Vec::with_capacity(n);
+            for _ in 0..n {
+                idx.push(d.u32("particle index")?);
+            }
+            let m = d.count(16, "velocity count")?;
+            let mut vel = Vec::with_capacity(m);
+            for _ in 0..m {
+                vel.push([d.f64("velocity u")?, d.f64("velocity v")?]);
+            }
+            Ok(Message::Velocities { idx, vel })
+        }
+        5 => Ok(Message::Barrier(d.u32("barrier token")?)),
+        t => Err(codec_err(format!("unknown message tag {t}"))),
+    }
+}
+
+fn enc_packet(e: &mut Enc, pkt: &Packet) {
+    e.u64(pkt.seq);
+    e.u8(pkt.stage.index() as u8);
+    e.u64(pkt.checksum);
+    match &pkt.body {
+        Body::Data(m) => {
+            e.u8(0);
+            enc_message(e, m);
+        }
+        Body::Ack => e.u8(1),
+    }
+}
+
+fn dec_packet(d: &mut Dec) -> Result<Packet, CommError> {
+    let seq = d.u64("seq")?;
+    let si = d.u8("stage index")?;
+    let stage = *Stage::ALL
+        .get(si as usize)
+        .ok_or_else(|| codec_err(format!("unknown stage index {si}")))?;
+    let checksum = d.u64("checksum")?;
+    let body = match d.u8("body tag")? {
+        0 => Body::Data(dec_message(d)?),
+        1 => Body::Ack,
+        t => return Err(codec_err(format!("unknown body tag {t}"))),
+    };
+    Ok(Packet { seq, stage, checksum, body })
+}
+
+/// Serialize one frame into its payload bytes (without the length
+/// prefix — [`write_frame`] adds that).
+pub fn encode_frame(f: &Frame) -> Vec<u8> {
+    match f {
+        Frame::Hello { rank } => {
+            let mut e = Enc::new(KIND_HELLO);
+            e.u8(*rank as u8);
+            e.buf
+        }
+        Frame::Welcome { world, rank, epoch, config_digest } => {
+            let mut e = Enc::new(KIND_WELCOME);
+            e.u8(*world as u8);
+            e.u8(*rank as u8);
+            e.u64(*epoch);
+            e.u64(*config_digest);
+            e.buf
+        }
+        Frame::Boot { config, particles, part } => {
+            let mut e = Enc::new(KIND_BOOT);
+            e.u32(config.len() as u32);
+            e.buf.extend_from_slice(config.as_bytes());
+            e.u32(particles.len() as u32);
+            for p in particles {
+                for c in p {
+                    e.f64(*c);
+                }
+            }
+            e.u32(part.len() as u32);
+            for r in part {
+                e.u32(*r);
+            }
+            e.buf
+        }
+        Frame::Packet { route, pkt } => {
+            let mut e = Enc::new(KIND_PACKET);
+            e.u8(*route as u8);
+            enc_packet(&mut e, pkt);
+            e.buf
+        }
+        Frame::Bye { faults, wire, counts } => {
+            let mut e = Enc::new(KIND_BYE);
+            // fully destructured so a future counter field fails to
+            // compile here instead of silently not crossing the wire
+            let FaultCounters {
+                injected_drops,
+                injected_duplicates,
+                injected_delays,
+                injected_corruptions,
+                checksum_rejects,
+                duplicates_discarded,
+                retransmits,
+                step_retries,
+                serial_fallbacks,
+                survivor_repartitions,
+                rank_failures,
+            } = *faults;
+            for v in [
+                injected_drops,
+                injected_duplicates,
+                injected_delays,
+                injected_corruptions,
+                checksum_rejects,
+                duplicates_discarded,
+                retransmits,
+                step_retries,
+                serial_fallbacks,
+                survivor_repartitions,
+                rank_failures,
+            ] {
+                e.u64(v);
+            }
+            for b in wire.bytes {
+                e.f64(b);
+            }
+            let OpCounts {
+                p2m,
+                m2m,
+                m2l,
+                l2l,
+                l2p,
+                p2p,
+                p2p_pairs,
+                p2m_batches,
+                m2m_batches,
+                m2l_batches,
+                l2l_batches,
+                l2p_batches,
+                p2p_batches,
+            } = *counts;
+            for v in [
+                p2m, m2m, m2l, l2l, l2p, p2p, p2p_pairs, p2m_batches,
+                m2m_batches, m2l_batches, l2l_batches, l2p_batches,
+                p2p_batches,
+            ] {
+                e.u64(v);
+            }
+            e.buf
+        }
+    }
+}
+
+/// Parse one frame payload.  Total: every malformed input returns
+/// [`CommError::Codec`], never panics, never over-allocates.
+pub fn decode_frame(payload: &[u8]) -> Result<Frame, CommError> {
+    let mut d = Dec::new(payload);
+    let ver = d.u8("wire version")?;
+    if ver != WIRE_VERSION {
+        return Err(codec_err(format!(
+            "unsupported wire version {ver} (expected {WIRE_VERSION})")));
+    }
+    let kind = d.u8("frame kind")?;
+    let frame = match kind {
+        KIND_HELLO => Frame::Hello { rank: d.u8("hello rank")? as usize },
+        KIND_WELCOME => Frame::Welcome {
+            world: d.u8("world size")? as usize,
+            rank: d.u8("assigned rank")? as usize,
+            epoch: d.u64("chaos epoch")?,
+            config_digest: d.u64("config digest")?,
+        },
+        KIND_BOOT => {
+            let cfg_len = d.count(1, "config length")?;
+            let bytes = d.take(cfg_len, "config text")?;
+            let config = std::str::from_utf8(bytes)
+                .map_err(|_| codec_err(
+                    "config text is not utf-8".to_string()))?
+                .to_string();
+            let n = d.count(24, "particle count")?;
+            let mut particles = Vec::with_capacity(n);
+            for _ in 0..n {
+                particles.push([
+                    d.f64("particle x")?,
+                    d.f64("particle y")?,
+                    d.f64("particle gamma")?,
+                ]);
+            }
+            let m = d.count(4, "partition length")?;
+            let mut part = Vec::with_capacity(m);
+            for _ in 0..m {
+                part.push(d.u32("partition entry")?);
+            }
+            Frame::Boot { config, particles, part }
+        }
+        KIND_PACKET => {
+            let route = d.u8("route")? as usize;
+            Frame::Packet { route, pkt: dec_packet(&mut d)? }
+        }
+        KIND_BYE => {
+            let mut f = [0u64; 11];
+            for (i, v) in f.iter_mut().enumerate() {
+                *v = d.u64(&format!("fault counter {i}"))?;
+            }
+            let faults = FaultCounters {
+                injected_drops: f[0],
+                injected_duplicates: f[1],
+                injected_delays: f[2],
+                injected_corruptions: f[3],
+                checksum_rejects: f[4],
+                duplicates_discarded: f[5],
+                retransmits: f[6],
+                step_retries: f[7],
+                serial_fallbacks: f[8],
+                survivor_repartitions: f[9],
+                rank_failures: f[10],
+            };
+            let mut wire = StageBytes::default();
+            for b in wire.bytes.iter_mut() {
+                *b = d.f64("stage bytes")?;
+            }
+            let mut c = [0u64; 13];
+            for (i, v) in c.iter_mut().enumerate() {
+                *v = d.u64(&format!("op count {i}"))?;
+            }
+            let counts = OpCounts {
+                p2m: c[0],
+                m2m: c[1],
+                m2l: c[2],
+                l2l: c[3],
+                l2p: c[4],
+                p2p: c[5],
+                p2p_pairs: c[6],
+                p2m_batches: c[7],
+                m2m_batches: c[8],
+                m2l_batches: c[9],
+                l2l_batches: c[10],
+                l2p_batches: c[11],
+                p2p_batches: c[12],
+            };
+            Frame::Bye { faults, wire, counts }
+        }
+        k => return Err(codec_err(format!("unknown frame kind {k}"))),
+    };
+    d.finish("frame")?;
+    Ok(frame)
+}
+
+// ------------------------------------------------------------- framing
+
+/// Write one length-prefixed frame; any socket error means the peer is
+/// gone.
+pub fn write_frame(w: &mut TcpStream, payload: &[u8], peer: usize)
+    -> Result<(), CommError> {
+    let gone = CommError::Disconnected { rank: peer };
+    w.write_all(&(payload.len() as u32).to_le_bytes())
+        .map_err(|_| gone.clone())?;
+    w.write_all(payload).map_err(|_| gone.clone())?;
+    w.flush().map_err(|_| gone)
+}
+
+/// Incremental frame reassembler over one TCP connection.  Partial
+/// frames survive across calls: a deadline can expire mid-frame
+/// without losing the bytes already read, so deadline-bounded receive
+/// loops compose with TCP's stream semantics.  EOF surfaces as
+/// [`CommError::Disconnected`] — the socket-layer death detector.
+pub struct FrameReader {
+    stream: TcpStream,
+    peer: usize,
+    header: [u8; 4],
+    got: usize,
+    payload: Vec<u8>,
+    in_payload: bool,
+}
+
+impl FrameReader {
+    /// Wrap a connected stream; `peer` is the rank reported in
+    /// disconnect errors.
+    pub fn new(stream: TcpStream, peer: usize) -> FrameReader {
+        FrameReader {
+            stream,
+            peer,
+            header: [0; 4],
+            got: 0,
+            payload: Vec::new(),
+            in_payload: false,
+        }
+    }
+
+    /// Pull the next complete frame payload.  `deadline: None` blocks
+    /// forever; `Ok(None)` means the deadline passed first (any
+    /// partial frame is retained for the next call).
+    pub fn read_frame(&mut self, deadline: Option<Instant>)
+        -> Result<Option<Vec<u8>>, CommError> {
+        let gone = CommError::Disconnected { rank: self.peer };
+        loop {
+            match deadline {
+                None => self.stream.set_read_timeout(None),
+                Some(d) => {
+                    let left = d.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        return Ok(None);
+                    }
+                    // never Some(ZERO): set_read_timeout rejects it
+                    self.stream.set_read_timeout(Some(left))
+                }
+            }
+            .map_err(|_| gone.clone())?;
+            let read = if self.in_payload {
+                self.stream.read(&mut self.payload[self.got..])
+            } else {
+                self.stream.read(&mut self.header[self.got..])
+            };
+            match read {
+                Ok(0) => return Err(gone),
+                Ok(n) => {
+                    self.got += n;
+                    if !self.in_payload {
+                        if self.got == 4 {
+                            let len =
+                                u32::from_le_bytes(self.header) as usize;
+                            if !(2..=MAX_FRAME).contains(&len) {
+                                return Err(codec_err(format!(
+                                    "frame length {len} out of range \
+                                     (2..={MAX_FRAME})")));
+                            }
+                            self.payload = vec![0u8; len];
+                            self.got = 0;
+                            self.in_payload = true;
+                        }
+                    } else if self.got == self.payload.len() {
+                        self.got = 0;
+                        self.in_payload = false;
+                        return Ok(Some(std::mem::take(&mut self.payload)));
+                    }
+                }
+                Err(e) => match e.kind() {
+                    std::io::ErrorKind::WouldBlock
+                    | std::io::ErrorKind::TimedOut
+                    | std::io::ErrorKind::Interrupted => continue,
+                    _ => return Err(gone),
+                },
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------- transports
+
+/// A worker rank's transport: one connection to the hub.  Sends tag
+/// the destination in the route byte; received PACKET route bytes are
+/// the source rank (the hub rewrote them).
+pub struct WorkerTransport {
+    rank: usize,
+    ranks: usize,
+    reader: FrameReader,
+    writer: TcpStream,
+}
+
+impl WorkerTransport {
+    /// Build from an already-handshaken connection.  `reader` must be
+    /// the same [`FrameReader`] the handshake used, so any bytes it
+    /// buffered past the BOOT frame are not lost.
+    pub fn from_parts(
+        reader: FrameReader,
+        writer: TcpStream,
+        rank: usize,
+        ranks: usize,
+    ) -> WorkerTransport {
+        WorkerTransport { rank, ranks, reader, writer }
+    }
+}
+
+impl Transport for WorkerTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    fn send(&mut self, to: usize, pkt: Packet) -> Result<(), CommError> {
+        let payload = encode_frame(&Frame::Packet { route: to, pkt });
+        write_frame(&mut self.writer, &payload, to)
+    }
+
+    fn recv(&mut self, deadline: Option<Instant>)
+        -> Result<Option<(usize, Packet)>, CommError> {
+        match self.reader.read_frame(deadline)? {
+            None => Ok(None),
+            Some(payload) => match decode_frame(&payload)? {
+                Frame::Packet { route, pkt } => Ok(Some((route, pkt))),
+                f => Err(codec_err(format!(
+                    "unexpected {} frame in packet phase",
+                    frame_name(&f)))),
+            },
+        }
+    }
+
+    fn flush(&mut self, _to: usize) -> Result<(), CommError> {
+        Ok(())
+    }
+
+    fn take_counters(&mut self) -> FaultCounters {
+        FaultCounters::default()
+    }
+}
+
+/// What a hub reader thread surfaces to the hub's receive loop.
+enum HubItem {
+    /// A packet addressed to rank 0, already decoded: `(source, pkt)`.
+    Pkt(usize, Packet),
+    /// A worker connection died without a BYE (or spoke garbage) —
+    /// the rank is dead.
+    Gone(usize),
+}
+
+/// Per-worker teardown reports collected by the hub reader threads.
+#[derive(Clone, Debug, Default)]
+pub struct HubStats {
+    /// `byes[r]` is worker `r`'s BYE payload; `None` until it arrives
+    /// (and forever if the worker died).  Index 0 is unused — the hub
+    /// is rank 0.
+    pub byes: Vec<Option<(FaultCounters, StageBytes, OpCounts)>>,
+}
+
+/// Rank 0's transport and message router.  One reader thread per
+/// worker connection: packets routed to 0 are decoded and queued;
+/// worker→worker packets are relayed by rewriting the route byte to
+/// the source rank and forwarding the raw frame; BYE frames land in
+/// [`HubStats`]; EOF without a BYE queues a death notice that the next
+/// receive turns into [`CommError::Disconnected`].
+pub struct HubTransport {
+    ranks: usize,
+    rx: mpsc::Receiver<HubItem>,
+    /// Keeps the channel open so an idle hub parks on its deadline
+    /// (the stage-timeout failure detector) instead of erroring the
+    /// moment every reader thread has exited.
+    _tx: mpsc::Sender<HubItem>,
+    writers: Vec<Option<Arc<Mutex<TcpStream>>>>,
+    stats: Arc<Mutex<HubStats>>,
+}
+
+impl HubTransport {
+    /// Wrap the accepted worker connections; `streams[i]` must be the
+    /// connection of worker rank `i + 1`.
+    pub fn new(streams: Vec<TcpStream>) -> std::io::Result<HubTransport> {
+        let ranks = streams.len() + 1;
+        let (tx, rx) = mpsc::channel();
+        let stats = Arc::new(Mutex::new(HubStats {
+            byes: vec![None; ranks],
+        }));
+        let mut writers: Vec<Option<Arc<Mutex<TcpStream>>>> = vec![None];
+        for s in &streams {
+            writers.push(Some(Arc::new(Mutex::new(s.try_clone()?))));
+        }
+        for (i, s) in streams.into_iter().enumerate() {
+            let src = i + 1;
+            let tx = tx.clone();
+            let stats = Arc::clone(&stats);
+            let writers = writers.clone();
+            std::thread::spawn(move || {
+                hub_reader(src, s, &tx, &stats, &writers);
+            });
+        }
+        Ok(HubTransport { ranks, rx, _tx: tx, writers, stats })
+    }
+
+    /// Shared view of the per-worker teardown reports (read them after
+    /// the protocol completes).
+    pub fn stats(&self) -> Arc<Mutex<HubStats>> {
+        Arc::clone(&self.stats)
+    }
+}
+
+fn hub_reader(
+    src: usize,
+    stream: TcpStream,
+    tx: &mpsc::Sender<HubItem>,
+    stats: &Arc<Mutex<HubStats>>,
+    writers: &[Option<Arc<Mutex<TcpStream>>>],
+) {
+    let mut reader = FrameReader::new(stream, src);
+    loop {
+        match reader.read_frame(None) {
+            Ok(Some(mut payload)) => match decode_frame(&payload) {
+                Ok(Frame::Packet { route, pkt }) => {
+                    if route == 0 {
+                        if tx.send(HubItem::Pkt(src, pkt)).is_err() {
+                            return;
+                        }
+                    } else if let Some(Some(w)) = writers.get(route) {
+                        // relay: the destination must see the source
+                        // rank in the route byte; everything else is
+                        // forwarded bit-for-bit
+                        payload[ROUTE_BYTE] = src as u8;
+                        let mut s =
+                            w.lock().unwrap_or_else(|e| e.into_inner());
+                        if write_frame(&mut s, &payload, route).is_err() {
+                            let _ = tx.send(HubItem::Gone(route));
+                        }
+                    } else {
+                        let _ = tx.send(HubItem::Gone(src));
+                        return;
+                    }
+                }
+                Ok(Frame::Bye { faults, wire, counts }) => {
+                    stats
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .byes[src] = Some((faults, wire, counts));
+                    return;
+                }
+                Ok(_) | Err(_) => {
+                    let _ = tx.send(HubItem::Gone(src));
+                    return;
+                }
+            },
+            Ok(None) => continue,
+            Err(_) => {
+                let _ = tx.send(HubItem::Gone(src));
+                return;
+            }
+        }
+    }
+}
+
+impl Transport for HubTransport {
+    fn rank(&self) -> usize {
+        0
+    }
+
+    fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    fn send(&mut self, to: usize, pkt: Packet) -> Result<(), CommError> {
+        let payload = encode_frame(&Frame::Packet { route: 0, pkt });
+        match self.writers.get(to).and_then(|w| w.as_ref()) {
+            Some(w) => {
+                let mut s = w.lock().unwrap_or_else(|e| e.into_inner());
+                write_frame(&mut s, &payload, to)
+            }
+            None => Err(CommError::Disconnected { rank: to }),
+        }
+    }
+
+    fn recv(&mut self, deadline: Option<Instant>)
+        -> Result<Option<(usize, Packet)>, CommError> {
+        let gone = CommError::Disconnected { rank: 0 };
+        let item = match deadline {
+            None => self.rx.recv().map_err(|_| gone)?,
+            Some(d) => {
+                let left = d.saturating_duration_since(Instant::now());
+                match self.rx.recv_timeout(left) {
+                    Ok(i) => i,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        return Ok(None)
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        return Err(gone)
+                    }
+                }
+            }
+        };
+        match item {
+            HubItem::Pkt(src, pkt) => Ok(Some((src, pkt))),
+            HubItem::Gone(r) => Err(CommError::Disconnected { rank: r }),
+        }
+    }
+
+    fn flush(&mut self, _to: usize) -> Result<(), CommError> {
+        Ok(())
+    }
+
+    fn take_counters(&mut self) -> FaultCounters {
+        FaultCounters::default()
+    }
+}
+
+/// Transport wrapper arming the deterministic `rank-kill` chaos: the
+/// process aborts (exit code [`KILL_EXIT_CODE`]) on the first packet
+/// sent *or* delivered at or beyond the hash-selected stage — so the
+/// victim dies mid-protocol even if it has no traffic of its own in
+/// that exact stage.
+pub struct KillSwitch<T> {
+    inner: T,
+    from_stage: Stage,
+}
+
+impl<T: Transport> KillSwitch<T> {
+    /// Arm the switch at `from_stage` (see
+    /// `FaultPlan::kill_coordinates`).
+    pub fn new(inner: T, from_stage: Stage) -> KillSwitch<T> {
+        KillSwitch { inner, from_stage }
+    }
+
+    fn trip(&self, stage: Stage) {
+        if stage.index() >= self.from_stage.index() {
+            std::process::exit(KILL_EXIT_CODE);
+        }
+    }
+}
+
+impl<T: Transport> Transport for KillSwitch<T> {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn ranks(&self) -> usize {
+        self.inner.ranks()
+    }
+
+    fn send(&mut self, to: usize, pkt: Packet) -> Result<(), CommError> {
+        self.trip(pkt.stage);
+        self.inner.send(to, pkt)
+    }
+
+    fn recv(&mut self, deadline: Option<Instant>)
+        -> Result<Option<(usize, Packet)>, CommError> {
+        let got = self.inner.recv(deadline)?;
+        if let Some((_, pkt)) = &got {
+            self.trip(pkt.stage);
+        }
+        Ok(got)
+    }
+
+    fn flush(&mut self, to: usize) -> Result<(), CommError> {
+        self.inner.flush(to)
+    }
+
+    fn take_counters(&mut self) -> FaultCounters {
+        self.inner.take_counters()
+    }
+}
+
+/// In-process socket mesh for tests: rank 0 is a [`HubTransport`],
+/// ranks 1.. are [`WorkerTransport`]s, all over loopback TCP — the
+/// exact stack process mode runs, minus the subprocess boundary.
+pub fn tcp_mesh(ranks: usize)
+    -> std::io::Result<Vec<Box<dyn Transport>>> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let mut hub_streams = Vec::new();
+    let mut workers: Vec<Box<dyn Transport>> = Vec::new();
+    for r in 1..ranks {
+        // strictly sequential connect/accept keeps the pairing
+        // deterministic
+        let w = TcpStream::connect(addr)?;
+        let (h, _) = listener.accept()?;
+        w.set_nodelay(true)?;
+        h.set_nodelay(true)?;
+        let reader = FrameReader::new(w.try_clone()?, 0);
+        workers.push(Box::new(WorkerTransport::from_parts(
+            reader, w, r, ranks)));
+        hub_streams.push(h);
+    }
+    let mut mesh: Vec<Box<dyn Transport>> = Vec::with_capacity(ranks);
+    mesh.push(Box::new(HubTransport::new(hub_streams)?));
+    mesh.extend(workers);
+    Ok(mesh)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{check, Gen};
+    use std::time::Duration;
+
+    fn gen_boxid(g: &mut Gen) -> BoxId {
+        let level = g.usize_in(0, 8) as u8;
+        let side = 1u32 << level;
+        BoxId {
+            level,
+            ix: g.u64() as u32 % side,
+            iy: g.u64() as u32 % side,
+        }
+    }
+
+    fn gen_message(g: &mut Gen) -> Message {
+        match g.usize_in(0, 4) {
+            0 => Message::Particles {
+                leaf: gen_boxid(g),
+                parts: (0..g.usize_in(0, 12))
+                    .map(|_| {
+                        [g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0),
+                         g.normal()]
+                    })
+                    .collect(),
+            },
+            1 => Message::Multipole {
+                boxid: gen_boxid(g),
+                coeffs: g.vec_f64(g.usize_in(0, 16), -3.0, 3.0),
+            },
+            2 => Message::Local {
+                boxid: gen_boxid(g),
+                coeffs: g.vec_f64(g.usize_in(0, 16), -3.0, 3.0),
+            },
+            3 => {
+                let n = g.usize_in(0, 10);
+                Message::Velocities {
+                    idx: (0..n).map(|_| g.u64() as u32).collect(),
+                    vel: (0..n)
+                        .map(|_| [g.normal(), g.normal()])
+                        .collect(),
+                }
+            }
+            _ => Message::Barrier(g.u64() as u32),
+        }
+    }
+
+    fn gen_frame(g: &mut Gen) -> Frame {
+        match g.usize_in(0, 4) {
+            0 => Frame::Hello { rank: g.usize_in(0, 255) },
+            1 => Frame::Welcome {
+                world: g.usize_in(1, 255),
+                rank: g.usize_in(0, 255),
+                epoch: g.u64(),
+                config_digest: g.u64(),
+            },
+            2 => Frame::Boot {
+                config: format!("levels = {}\nterms = {}\nsigma = {}\n",
+                                g.usize_in(1, 8), g.usize_in(1, 20),
+                                g.f64_in(1e-6, 1e-2)),
+                particles: (0..g.usize_in(0, 20))
+                    .map(|_| {
+                        [g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0),
+                         g.normal()]
+                    })
+                    .collect(),
+                part: (0..g.usize_in(0, 30))
+                    .map(|_| g.u64() as u32 % 8)
+                    .collect(),
+            },
+            3 => {
+                let stage = *g.choose(&Stage::ALL);
+                let pkt = if g.bool() {
+                    Packet::seal(g.u64(), stage, gen_message(g))
+                } else {
+                    Packet::ack(g.u64(), stage)
+                };
+                Frame::Packet { route: g.usize_in(0, 255), pkt }
+            }
+            _ => {
+                let faults = FaultCounters {
+                    injected_drops: g.u64() % 100,
+                    retransmits: g.u64() % 100,
+                    rank_failures: g.u64() % 4,
+                    ..Default::default()
+                };
+                let mut wire = StageBytes::default();
+                for s in Stage::ALL {
+                    wire.add(s, g.f64_in(0.0, 1e6));
+                }
+                let counts = OpCounts {
+                    p2m: g.u64() % 1000,
+                    m2l: g.u64() % 1000,
+                    p2p_pairs: g.u64() % 100_000,
+                    ..Default::default()
+                };
+                Frame::Bye { faults, wire, counts }
+            }
+        }
+    }
+
+    #[test]
+    fn every_frame_variant_roundtrips_bitwise() {
+        check("frame codec roundtrip", 256, |g| {
+            let frame = gen_frame(g);
+            let bytes = encode_frame(&frame);
+            assert_eq!(bytes[0], WIRE_VERSION);
+            let back = decode_frame(&bytes).expect("valid frame decodes");
+            assert_eq!(back, frame);
+            // PACKET payload equality must be bitwise, not just
+            // PartialEq: the sealed checksum folds every f64 bit
+            // pattern, so a surviving checksum pins the exact bits
+            if let (Frame::Packet { pkt: a, .. },
+                    Frame::Packet { pkt: b, .. }) = (&frame, &back) {
+                assert_eq!(a.checksum, b.checksum);
+                assert!(b.verify(),
+                        "checksum must still verify after roundtrip");
+            }
+            // encoding is deterministic
+            assert_eq!(encode_frame(&back), bytes);
+        });
+    }
+
+    #[test]
+    fn truncated_frames_are_typed_errors_not_panics() {
+        check("truncation safety", 128, |g| {
+            let bytes = encode_frame(&gen_frame(g));
+            // every strict prefix must fail to decode: the sequential
+            // reader consumes the full buffer exactly, so a missing
+            // tail always strands some read (or the finish check)
+            for cut in [0, 1, bytes.len() / 2, bytes.len() - 1] {
+                if cut >= bytes.len() {
+                    continue;
+                }
+                let err = decode_frame(&bytes[..cut])
+                    .expect_err("strict prefix must not decode");
+                assert!(matches!(err, CommError::Codec { .. }),
+                        "expected Codec error, got {err:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn garbage_and_oversized_frames_never_panic() {
+        // hand-built hostile inputs
+        assert!(decode_frame(&[]).is_err());
+        assert!(decode_frame(&[9, KIND_HELLO, 1]).is_err(),
+                "wrong version must be rejected");
+        assert!(decode_frame(&[WIRE_VERSION, 99]).is_err(),
+                "unknown kind must be rejected");
+        // a Multipole claiming u32::MAX coefficients with a 4-byte
+        // body: the count guard must reject before allocating
+        let mut bad = vec![WIRE_VERSION, KIND_PACKET, 0];
+        bad.extend_from_slice(&7u64.to_le_bytes()); // seq
+        bad.push(1); // stage
+        bad.extend_from_slice(&0u64.to_le_bytes()); // checksum
+        bad.push(0); // body = data
+        bad.push(2); // multipole
+        bad.extend_from_slice(&[2, 0, 0, 0, 0, 0, 0, 0, 0]); // boxid
+        bad.extend_from_slice(&u32::MAX.to_le_bytes()); // coeff count
+        bad.extend_from_slice(&[0; 4]);
+        let err = decode_frame(&bad).expect_err("oversized claim");
+        assert!(matches!(err, CommError::Codec { .. }));
+        // an out-of-range box id must be rejected, not debug-asserted
+        let msg = Message::Multipole {
+            boxid: BoxId { level: 2, ix: 1, iy: 1 },
+            coeffs: vec![1.0],
+        };
+        let mut bytes = encode_frame(&Frame::Packet {
+            route: 0,
+            pkt: Packet::seal(0, Stage::Exchange, msg),
+        });
+        // boxid starts after [ver][kind][route][seq u64][stage]
+        // [checksum u64][body tag][msg tag] = offset 22; corrupt ix
+        bytes[23] = 0xff;
+        assert!(decode_frame(&bytes).is_err());
+        // random tails must decode or error, never panic
+        check("garbage safety", 256, |g| {
+            let n = g.usize_in(0, 64);
+            let mut buf = vec![WIRE_VERSION, g.usize_in(0, 6) as u8];
+            for _ in 0..n {
+                buf.push(g.u64() as u8);
+            }
+            let _ = decode_frame(&buf);
+        });
+    }
+
+    #[test]
+    fn frame_reader_reassembles_split_frames_and_detects_eof() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let tx = TcpStream::connect(addr).unwrap();
+        let (rx, _) = listener.accept().unwrap();
+        tx.set_nodelay(true).unwrap();
+        let mut reader = FrameReader::new(rx, 3);
+        let frame = encode_frame(&Frame::Hello { rank: 5 });
+        let mut wire = (frame.len() as u32).to_le_bytes().to_vec();
+        wire.extend_from_slice(&frame);
+        // drip-feed half the bytes: the deadline must expire with the
+        // partial frame retained, not lost
+        let mut w = tx.try_clone().unwrap();
+        w.write_all(&wire[..3]).unwrap();
+        w.flush().unwrap();
+        let d = Instant::now() + Duration::from_millis(50);
+        assert!(reader.read_frame(Some(d)).unwrap().is_none(),
+                "incomplete frame must yield Ok(None) at the deadline");
+        // complete the frame: the earlier bytes still count
+        w.write_all(&wire[3..]).unwrap();
+        w.flush().unwrap();
+        let d = Instant::now() + Duration::from_secs(5);
+        let payload = reader.read_frame(Some(d)).unwrap().unwrap();
+        assert_eq!(decode_frame(&payload).unwrap(),
+                   Frame::Hello { rank: 5 });
+        // EOF is rank death, tagged with the peer rank
+        drop(w);
+        drop(tx);
+        assert_eq!(reader.read_frame(None).unwrap_err(),
+                   CommError::Disconnected { rank: 3 });
+    }
+
+    #[test]
+    fn tcp_mesh_routes_hub_worker_and_worker_worker_traffic() {
+        let mut mesh = tcp_mesh(3).unwrap();
+        let pkt = |v: f64| {
+            Packet::seal(0, Stage::Exchange, Message::Multipole {
+                boxid: BoxId::ROOT,
+                coeffs: vec![v],
+            })
+        };
+        let deadline = || Some(Instant::now() + Duration::from_secs(5));
+        // hub -> worker 2
+        mesh[0].send(2, pkt(1.0)).unwrap();
+        let (from, p) = mesh[2].recv(deadline()).unwrap().unwrap();
+        assert_eq!(from, 0);
+        assert_eq!(p, pkt(1.0));
+        // worker 1 -> hub
+        mesh[1].send(0, pkt(2.0)).unwrap();
+        let (from, p) = mesh[0].recv(deadline()).unwrap().unwrap();
+        assert_eq!(from, 1);
+        assert_eq!(p, pkt(2.0));
+        // worker 1 -> worker 2: relayed through the hub with the route
+        // byte rewritten to the source
+        mesh[1].send(2, pkt(3.0)).unwrap();
+        let (from, p) = mesh[2].recv(deadline()).unwrap().unwrap();
+        assert_eq!(from, 1);
+        assert_eq!(p, pkt(3.0));
+        assert!(p.verify(), "relay must preserve every payload bit");
+    }
+
+    #[test]
+    fn bye_lands_in_hub_stats_and_silent_death_surfaces_on_recv() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let w1 = TcpStream::connect(addr).unwrap();
+        let (h1, _) = listener.accept().unwrap();
+        let w2 = TcpStream::connect(addr).unwrap();
+        let (h2, _) = listener.accept().unwrap();
+        let mut hub = HubTransport::new(vec![h1, h2]).unwrap();
+        let stats = hub.stats();
+        // worker 1 says goodbye properly
+        let bye = Frame::Bye {
+            faults: FaultCounters {
+                retransmits: 4,
+                ..Default::default()
+            },
+            wire: StageBytes::default(),
+            counts: OpCounts::default(),
+        };
+        let mut w1w = w1.try_clone().unwrap();
+        write_frame(&mut w1w, &encode_frame(&bye), 0).unwrap();
+        drop(w1w);
+        drop(w1);
+        // worker 2 dies without a word: the hub's next receive reports
+        // the dead rank
+        drop(w2);
+        let d = Instant::now() + Duration::from_secs(5);
+        let err = hub.recv(Some(d)).unwrap_err();
+        assert_eq!(err, CommError::Disconnected { rank: 2 });
+        // the BYE was recorded against rank 1 (poll briefly: the
+        // reader threads race the assertion)
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let got = stats.lock().unwrap().byes[1];
+            if let Some((f, _, _)) = got {
+                assert_eq!(f.retransmits, 4);
+                break;
+            }
+            assert!(Instant::now() < deadline, "BYE never recorded");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+}

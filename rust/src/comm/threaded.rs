@@ -29,7 +29,8 @@ use super::fault::{FaultPlan, FaultyTransport};
 use super::message::Message;
 use super::overlap::{interaction_overlap, neighbor_overlap, owner_of};
 use super::transport::{channel_mesh, CommError, FaultCounters,
-                       ReliableEndpoint, RetryPolicy, Stage, Transport};
+                       ReliableEndpoint, RetryPolicy, Stage, StageBytes,
+                       Transport};
 use crate::error::FmmError;
 use crate::fmm::{Evaluator, FmmKernel, FmmState, NativeBackend, OpCounts,
                  OpDims};
@@ -37,9 +38,9 @@ use crate::partition::Assignment;
 use crate::quadtree::{BoxId, Domain, Quadtree, TreeCut, TreeMode};
 use crate::sched::ParallelPlan;
 
-/// The endpoint type a rank thread drives (boxed so the faulty and
-/// faithful transports share one code path).
-type RankEndpoint = ReliableEndpoint<Box<dyn Transport>>;
+/// The endpoint type a rank loop drives (boxed so the faulty, faithful
+/// and socket transports share one code path).
+pub(crate) type RankEndpoint = ReliableEndpoint<Box<dyn Transport>>;
 
 /// Stage-agnostic stash for messages that arrive ahead of the phase
 /// that wants them.
@@ -127,10 +128,64 @@ pub fn run_threaded_on_faulty<K>(
 where
     K: FmmKernel + Clone + Send + 'static,
 {
+    let mesh = channel_mesh(assignment.ranks)
+        .into_iter()
+        .map(|c| Box::new(c) as Box<dyn Transport>)
+        .collect();
+    run_on_mesh(kernel, global_tree, cut, assignment, dims, fault_plan,
+                mesh)
+        .map(|(vel, counts, faults, _wire)| (vel, counts, faults))
+}
+
+/// Split the global particle set into per-rank `(particle, global
+/// index)` lists by leaf ownership — the input-side contract every
+/// execution mode (threaded mesh, socket mesh, worker process) must
+/// reproduce identically.
+pub(crate) fn distribute_own(
+    gtree: &Quadtree,
+    cut: &TreeCut,
+    assignment: &Assignment,
+) -> Vec<Vec<([f64; 3], u32)>> {
+    let mut own: Vec<Vec<([f64; 3], u32)>> =
+        vec![Vec::new(); assignment.ranks];
+    for (i, p) in gtree.particles.iter().enumerate() {
+        let leaf = gtree.domain.locate(gtree.levels, p[0], p[1]);
+        let r = owner_of(cut, assignment, &leaf);
+        own[r].push((*p, i as u32));
+    }
+    own
+}
+
+/// Like [`run_threaded_on_faulty`] but over a caller-supplied transport
+/// mesh (`mesh[r]` is rank `r`'s endpoint) and additionally returning
+/// the per-stage wire volume.  This is the generic engine behind the
+/// channel-backed threaded mode, the in-process socket-mesh tests, and
+/// (per rank) the process mode: every mesh speaks the identical
+/// Morton-ordered protocol, so results are bitwise mesh-independent.
+pub fn run_on_mesh<K>(
+    kernel: K,
+    global_tree: Arc<Quadtree>,
+    cut: &TreeCut,
+    assignment: &Assignment,
+    dims: OpDims,
+    fault_plan: Option<&FaultPlan>,
+    mesh: Vec<Box<dyn Transport>>,
+) -> Result<(Vec<[f64; 2]>, OpCounts, FaultCounters, StageBytes),
+            FmmError>
+where
+    K: FmmKernel + Clone + Send + 'static,
+{
     let domain = global_tree.domain;
     let levels = global_tree.levels;
     let n_particles = global_tree.particles.len();
     let ranks = assignment.ranks;
+    if mesh.len() != ranks {
+        return Err(FmmError::Internal(format!(
+            "mesh has {} transports for {} ranks",
+            mesh.len(),
+            ranks
+        )));
+    }
     let plan = Arc::new(ParallelPlan::build(&global_tree, cut, assignment));
     let nb_overlap =
         Arc::new(neighbor_overlap(&global_tree, cut, assignment));
@@ -141,15 +196,10 @@ where
     let chaos = fault_plan.filter(|p| p.is_active()).cloned();
 
     // per-rank own particles with global indices (input order)
-    let mut own: Vec<Vec<([f64; 3], u32)>> = vec![Vec::new(); ranks];
-    for (i, p) in global_tree.particles.iter().enumerate() {
-        let leaf = domain.locate(levels, p[0], p[1]);
-        let r = owner_of(&cut, &assignment, &leaf);
-        own[r].push((*p, i as u32));
-    }
+    let mut own = distribute_own(&global_tree, &cut, &assignment);
 
     let mut handles = Vec::new();
-    for (r, channel) in channel_mesh(ranks).into_iter().enumerate() {
+    for (r, channel) in mesh.into_iter().enumerate() {
         let my_parts = std::mem::take(&mut own[r]);
         let plan = plan.clone();
         let nb = nb_overlap.clone();
@@ -175,20 +225,23 @@ where
             let res = rank_main(kernel, r, ranks, &mut ep, my_parts,
                                 domain, levels, &plan, &nb, &il, &cut,
                                 &assignment, &gtree, dims);
-            (res, ep.into_counters())
+            let rank_wire = ep.wire();
+            (res, ep.into_counters(), rank_wire)
         }));
     }
 
     let mut vel = vec![[0.0; 2]; n_particles];
     let mut counts = OpCounts::default();
     let mut faults = FaultCounters::default();
+    let mut wire = StageBytes::default();
     let mut first_err: Option<FmmError> = None;
     // join every rank before reporting (no orphaned threads); the
     // lowest-ranked failure wins so the reported error is deterministic
     for (r, h) in handles.into_iter().enumerate() {
         match h.join() {
-            Ok((res, rank_faults)) => {
+            Ok((res, rank_faults, rank_wire)) => {
                 faults.merge(&rank_faults);
+                wire.merge(&rank_wire);
                 match res {
                     Ok((partial, rank_counts)) => {
                         counts.merge(&rank_counts);
@@ -219,7 +272,7 @@ where
     }
     match first_err {
         Some(e) => Err(e),
-        None => Ok((vel, counts, faults)),
+        None => Ok((vel, counts, faults, wire)),
     }
 }
 
@@ -254,7 +307,7 @@ fn build_rank_local(
 /// the typed per-stage timeout error.
 fn recv_stage(ep: &mut RankEndpoint, stage: Stage, missing: usize)
     -> Result<(usize, Message), CommError> {
-    let deadline = ep.policy().stage_deadline();
+    let deadline = ep.stage_deadline();
     match ep.recv(deadline)? {
         Some((from, _stage, msg)) => Ok((from, msg)),
         None => Err(CommError::StageTimeout {
@@ -311,8 +364,13 @@ fn collect_coeffs(
     Ok(())
 }
 
+/// One rank's complete protocol run, over whatever endpoint it was
+/// handed — a channel (threaded mode), an in-process socket, or a
+/// worker process's hub connection (process mode).  Every mode runs
+/// this identical function on identical inputs, which is the whole
+/// bitwise-equivalence argument across backends.
 #[allow(clippy::too_many_arguments)]
-fn rank_main<K: FmmKernel>(
+pub(crate) fn rank_main<K: FmmKernel>(
     kernel: K,
     rank: usize,
     ranks: usize,

@@ -31,7 +31,8 @@
 
 use std::collections::{HashSet, VecDeque};
 use std::fmt;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use super::message::Message;
@@ -120,6 +121,10 @@ pub enum CommError {
         seq: u64,
         attempts: u32,
     },
+    /// A socket frame failed to decode: truncated, oversized, bad
+    /// version or tag, or garbage bytes.  Decoding never panics — the
+    /// malformed connection surfaces as this typed error instead.
+    Codec { detail: String },
 }
 
 impl fmt::Display for CommError {
@@ -138,6 +143,9 @@ impl fmt::Display for CommError {
                 write!(f,
                        "rank {rank}: no ack from rank {to} for {stage} \
                         seq {seq} after {attempts} attempt(s)")
+            }
+            CommError::Codec { detail } => {
+                write!(f, "wire codec error: {detail}")
             }
         }
     }
@@ -280,15 +288,98 @@ impl RetryPolicy {
         }
     }
 
+    /// Process-mode default: TCP already guarantees delivery, so the
+    /// lossless fast path stays (no acks — identical message flow to
+    /// the threaded backend), but a stage deadline is kept as the
+    /// failure detector of last resort for a hung (not dead) worker.
+    pub fn process_default() -> RetryPolicy {
+        RetryPolicy {
+            stage_timeout: Some(Duration::from_secs(30)),
+            ..RetryPolicy::lossless()
+        }
+    }
+
     /// Deterministic exponential backoff: `base * 2^attempt`, capped at
     /// 64x base.
     pub fn backoff(&self, attempt: u32) -> Duration {
         self.base_backoff * (1u32 << attempt.min(6))
     }
 
-    /// Deadline for one stage receive loop (refreshed per message).
+    /// Deadline for one stage receive loop (refreshed per message),
+    /// anchored on the wall clock.  Prefer
+    /// [`ReliableEndpoint::stage_deadline`], which respects an
+    /// injected test clock.
     pub fn stage_deadline(&self) -> Option<Instant> {
         self.stage_timeout.map(|d| Instant::now() + d)
+    }
+}
+
+/// Time source of a [`ReliableEndpoint`].  Every deadline the
+/// reliability protocol computes — retransmission backoff, ack
+/// patience, the stage deadline — goes through this seam, so the whole
+/// retry schedule can be unit-tested on a [`FakeClock`] without a
+/// single wall-clock sleep.
+pub trait Clock: Send {
+    /// The current instant according to this clock.
+    fn now(&self) -> Instant;
+}
+
+/// The real time source (production default).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WallClock;
+
+impl Clock for WallClock {
+    fn now(&self) -> Instant {
+        Instant::now()
+    }
+}
+
+/// A manually advanced clock for tests.  Clones share the same virtual
+/// time, so a test double (e.g. a scripted transport) can advance time
+/// while the endpoint under test reads it.
+#[derive(Clone, Debug)]
+pub struct FakeClock {
+    base: Instant,
+    offset_nanos: Arc<AtomicU64>,
+}
+
+impl FakeClock {
+    /// A fresh clock at virtual time zero.
+    pub fn new() -> FakeClock {
+        FakeClock {
+            base: Instant::now(),
+            offset_nanos: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Advance virtual time by `d`.
+    pub fn advance(&self, d: Duration) {
+        self.offset_nanos
+            .fetch_add(d.as_nanos() as u64, Ordering::SeqCst);
+    }
+
+    /// Advance virtual time to `t` (no-op if `t` is already past).
+    pub fn advance_to(&self, t: Instant) {
+        if let Some(d) = t.checked_duration_since(self.now()) {
+            self.advance(d);
+        }
+    }
+
+    /// Total virtual time elapsed since construction.
+    pub fn elapsed_virtual(&self) -> Duration {
+        Duration::from_nanos(self.offset_nanos.load(Ordering::SeqCst))
+    }
+}
+
+impl Default for FakeClock {
+    fn default() -> Self {
+        FakeClock::new()
+    }
+}
+
+impl Clock for FakeClock {
+    fn now(&self) -> Instant {
+        self.base + self.elapsed_virtual()
     }
 }
 
@@ -351,6 +442,43 @@ impl FaultCounters {
     /// the chaos-off invariant.
     pub fn is_quiet(&self) -> bool {
         *self == FaultCounters::default()
+    }
+}
+
+/// Observed wire volume per protocol stage, in the paper's §5 byte
+/// units (28 B per halo particle, `16 p` per expansion block, 16 B per
+/// velocity — see `Message::wire_bytes`).  Counted once per logical
+/// message at first transmission, so the numbers are identical whether
+/// the bits crossed an mpsc channel or a socket and regardless of how
+/// many times chaos forced a retransmit — directly comparable to the
+/// Eq. 10–12 communication model.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StageBytes {
+    /// Bytes per stage, indexed by [`Stage::index`].
+    pub bytes: [f64; 5],
+}
+
+impl StageBytes {
+    /// Record `bytes` against `stage`.
+    pub fn add(&mut self, stage: Stage, bytes: f64) {
+        self.bytes[stage.index()] += bytes;
+    }
+
+    /// Volume recorded for one stage.
+    pub fn get(&self, stage: Stage) -> f64 {
+        self.bytes[stage.index()]
+    }
+
+    /// Accumulate another rank's (or step's) volumes.
+    pub fn merge(&mut self, other: &StageBytes) {
+        for (a, b) in self.bytes.iter_mut().zip(other.bytes.iter()) {
+            *a += b;
+        }
+    }
+
+    /// Total volume over all stages.
+    pub fn total(&self) -> f64 {
+        self.bytes.iter().sum()
     }
 }
 
@@ -476,10 +604,12 @@ pub struct ReliableEndpoint<T> {
     /// Verified, deduped messages awaiting the caller.
     ready: VecDeque<(usize, Stage, Message)>,
     counters: FaultCounters,
+    wire: StageBytes,
+    clock: Box<dyn Clock>,
 }
 
 impl<T: Transport> ReliableEndpoint<T> {
-    /// Wrap a transport under `policy`.
+    /// Wrap a transport under `policy` (on the wall clock).
     pub fn new(t: T, policy: RetryPolicy) -> ReliableEndpoint<T> {
         let n = t.ranks();
         ReliableEndpoint {
@@ -490,7 +620,16 @@ impl<T: Transport> ReliableEndpoint<T> {
             acked: vec![HashSet::new(); n],
             ready: VecDeque::new(),
             counters: FaultCounters::default(),
+            wire: StageBytes::default(),
+            clock: Box::new(WallClock),
         }
+    }
+
+    /// Replace the time source (tests inject a [`FakeClock`] here).
+    pub fn with_clock(mut self, clock: Box<dyn Clock>)
+        -> ReliableEndpoint<T> {
+        self.clock = clock;
+        self
     }
 
     /// This endpoint's rank.
@@ -504,6 +643,17 @@ impl<T: Transport> ReliableEndpoint<T> {
         &self.policy
     }
 
+    /// Deadline for one stage receive loop on this endpoint's clock
+    /// (refreshed per message).
+    pub fn stage_deadline(&self) -> Option<Instant> {
+        self.policy.stage_timeout.map(|d| self.clock.now() + d)
+    }
+
+    /// Wire volume sent so far, per stage (first transmissions only).
+    pub fn wire(&self) -> StageBytes {
+        self.wire
+    }
+
     /// Send one message, reliably if the policy says so: transmit, wait
     /// `backoff(attempt)` for the ack, retransmit up to `max_attempts`
     /// total, flush any fault-held packet, then grant `ack_patience`
@@ -512,6 +662,7 @@ impl<T: Transport> ReliableEndpoint<T> {
         -> Result<(), CommError> {
         let seq = self.next_seq[to];
         self.next_seq[to] += 1;
+        self.wire.add(stage, msg.wire_bytes());
         let pkt = Packet::seal(seq, stage, msg);
         if !self.policy.reliable {
             return self.t.send(to, pkt);
@@ -522,7 +673,7 @@ impl<T: Transport> ReliableEndpoint<T> {
                 self.counters.retransmits += 1;
             }
             self.t.send(to, pkt.clone())?;
-            let deadline = Instant::now() + self.policy.backoff(attempt);
+            let deadline = self.clock.now() + self.policy.backoff(attempt);
             if self.await_ack(to, seq, deadline)? {
                 return Ok(());
             }
@@ -531,7 +682,7 @@ impl<T: Transport> ReliableEndpoint<T> {
         // transport forever; release it, then give a busy (not dead)
         // receiver one generous last window.
         self.t.flush(to)?;
-        let deadline = Instant::now() + self.policy.ack_patience;
+        let deadline = self.clock.now() + self.policy.ack_patience;
         if self.await_ack(to, seq, deadline)? {
             return Ok(());
         }
@@ -713,6 +864,153 @@ mod tests {
         assert_eq!(p.backoff(1), Duration::from_millis(4));
         assert_eq!(p.backoff(4), Duration::from_millis(32));
         assert_eq!(p.backoff(40), Duration::from_millis(128));
+    }
+
+    /// A test-double transport that never delivers anything: each
+    /// deadline-bounded receive jumps the shared [`FakeClock`] straight
+    /// to the deadline and reports "nothing arrived", so the endpoint
+    /// under test walks its entire retry schedule in virtual time.
+    struct ScriptedTransport {
+        clock: FakeClock,
+        sent: Arc<std::sync::Mutex<Vec<(usize, Packet)>>>,
+        deadlines: Arc<std::sync::Mutex<Vec<Instant>>>,
+    }
+
+    impl Transport for ScriptedTransport {
+        fn rank(&self) -> usize {
+            0
+        }
+        fn ranks(&self) -> usize {
+            2
+        }
+        fn send(&mut self, to: usize, pkt: Packet)
+            -> Result<(), CommError> {
+            self.sent.lock().unwrap().push((to, pkt));
+            Ok(())
+        }
+        fn recv(&mut self, deadline: Option<Instant>)
+            -> Result<Option<(usize, Packet)>, CommError> {
+            match deadline {
+                Some(d) => {
+                    self.deadlines.lock().unwrap().push(d);
+                    self.clock.advance_to(d);
+                    Ok(None)
+                }
+                None => Err(CommError::Disconnected { rank: 0 }),
+            }
+        }
+        fn flush(&mut self, _to: usize) -> Result<(), CommError> {
+            Ok(())
+        }
+        fn take_counters(&mut self) -> FaultCounters {
+            FaultCounters::default()
+        }
+    }
+
+    #[test]
+    fn fake_clock_runs_the_full_backoff_schedule_without_wall_sleeps() {
+        // nominal schedule: 2+4+8+16+32+64+128+128+128 ms of backoff
+        // (the 64x cap holds attempts 7-9 at 128 ms) plus a 1 s ack
+        // patience — ~1.5 s of virtual waiting that must cost
+        // essentially zero wall time on the fake clock
+        let policy = RetryPolicy {
+            reliable: true,
+            max_attempts: 9,
+            base_backoff: Duration::from_millis(2),
+            ack_patience: Duration::from_secs(1),
+            stage_timeout: Some(Duration::from_secs(10)),
+        };
+        let clock = FakeClock::new();
+        let sent = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let deadlines = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let t = ScriptedTransport {
+            clock: clock.clone(),
+            sent: sent.clone(),
+            deadlines: deadlines.clone(),
+        };
+        let wall = Instant::now();
+        let mut ep = ReliableEndpoint::new(t, policy)
+            .with_clock(Box::new(clock.clone()));
+        let err = ep.send(1, Stage::Exchange, msg(1.0)).unwrap_err();
+        assert_eq!(
+            err,
+            CommError::RetryExhausted {
+                rank: 0,
+                to: 1,
+                stage: Stage::Exchange,
+                seq: 0,
+                attempts: 9,
+            }
+        );
+        // 9 transmissions of the same sealed packet, 8 of them retries
+        let sent = sent.lock().unwrap();
+        assert_eq!(sent.len(), 9);
+        assert!(sent.iter().all(|(to, p)| *to == 1 && p.seq == 0));
+        assert_eq!(ep.into_counters().retransmits, 8);
+        // the recorded ack deadlines are spaced exactly base*2^k with
+        // the 64x cap, then ack_patience closes the schedule
+        let ds = deadlines.lock().unwrap();
+        assert_eq!(ds.len(), 10);
+        for k in 0..8u32 {
+            assert_eq!(ds[k as usize + 1] - ds[k as usize],
+                       policy.backoff(k + 1),
+                       "backoff gap {k}");
+        }
+        assert_eq!(ds[9] - ds[8], policy.ack_patience);
+        // the whole ~1.5 s virtual schedule ran without wall sleeping
+        assert_eq!(clock.elapsed_virtual(),
+                   Duration::from_millis(2 + 4 + 8 + 16 + 32 + 64
+                                         + 3 * 128 + 1000));
+        assert!(wall.elapsed() < Duration::from_millis(500),
+                "fake-clock schedule must not wall-sleep: {:?}",
+                wall.elapsed());
+    }
+
+    #[test]
+    fn fake_clock_stage_deadline_expires_without_wall_sleeps() {
+        let clock = FakeClock::new();
+        let t = ScriptedTransport {
+            clock: clock.clone(),
+            sent: Arc::new(std::sync::Mutex::new(Vec::new())),
+            deadlines: Arc::new(std::sync::Mutex::new(Vec::new())),
+        };
+        let wall = Instant::now();
+        let mut ep = ReliableEndpoint::new(t, RetryPolicy::chaos_default())
+            .with_clock(Box::new(clock.clone()));
+        let deadline = ep.stage_deadline().unwrap();
+        assert!(ep.recv(Some(deadline)).unwrap().is_none(),
+                "deadline expiry must surface as Ok(None)");
+        // the full 10 s stage budget elapsed — virtually
+        assert_eq!(clock.elapsed_virtual(), Duration::from_secs(10));
+        assert!(wall.elapsed() < Duration::from_millis(500),
+                "stage-deadline test must not wall-sleep: {:?}",
+                wall.elapsed());
+    }
+
+    #[test]
+    fn endpoints_meter_wire_bytes_per_stage_once() {
+        let mut mesh = channel_mesh(2);
+        let t1 = mesh.pop().unwrap();
+        let t0 = mesh.pop().unwrap();
+        let mut a = ReliableEndpoint::new(t0, RetryPolicy::lossless());
+        let mut b = ReliableEndpoint::new(t1, RetryPolicy::lossless());
+        let m = msg(1.5); // Multipole, 2 coeffs = 16 bytes
+        a.send(1, Stage::Exchange, m.clone()).unwrap();
+        a.send(1, Stage::Reduce, m.clone()).unwrap();
+        a.send(1, Stage::Reduce, m.clone()).unwrap();
+        let w = a.wire();
+        assert_eq!(w.get(Stage::Exchange), m.wire_bytes());
+        assert_eq!(w.get(Stage::Reduce), 2.0 * m.wire_bytes());
+        assert_eq!(w.get(Stage::Halo), 0.0);
+        assert_eq!(w.total(), 3.0 * m.wire_bytes());
+        // receivers meter nothing; merge is fieldwise
+        for _ in 0..3 {
+            b.recv(None).unwrap().unwrap();
+        }
+        let mut sum = b.wire();
+        assert_eq!(sum.total(), 0.0);
+        sum.merge(&w);
+        assert_eq!(sum, w);
     }
 
     #[test]

@@ -305,6 +305,49 @@ impl RunConfig {
         Ok(positional)
     }
 
+    /// Serialize as INI text covering *every* field, such that
+    /// `apply_ini` on a default config rebuilds this one exactly.
+    /// This is how process mode ships the coordinator's configuration
+    /// to worker subprocesses (the BOOT frame): `f64` values print via
+    /// `Display`, which round-trips bit-exactly, and enum fields use
+    /// their canonical `name()` forms, so the worker's rebuilt config
+    /// — and therefore its tree, cut and operator dimensions — is
+    /// indistinguishable from the coordinator's.
+    pub fn to_ini(&self) -> String {
+        format!(
+            "particles = {}\nlevels = {}\ncut-level = {}\nterms = {}\n\
+             sigma = {}\nkernel = {}\nranks = {}\nstrategy = {}\n\
+             network = {}\ndistribution = {}\nbackend = {}\nseed = {}\n\
+             artifacts = {}\npar-threads = {}\nsteps = {}\ndt = {}\n\
+             rebalance-threshold = {}\nrebalance = {}\n\
+             integrator = {}\ntree = {}\nleaf-capacity = {}\n\
+             chaos = {}\nchaos-seed = {}\n",
+            self.particles,
+            self.levels,
+            self.cut_level,
+            self.terms,
+            self.sigma,
+            self.kernel.name(),
+            self.ranks,
+            self.strategy.name(),
+            self.network,
+            self.distribution,
+            self.backend,
+            self.seed,
+            self.artifacts,
+            self.par_threads,
+            self.steps,
+            self.dt,
+            self.rebalance_threshold,
+            if self.rebalance { "on" } else { "off" },
+            self.integrator.name(),
+            self.tree,
+            self.leaf_capacity,
+            self.chaos,
+            self.chaos_seed,
+        )
+    }
+
     /// Summarize for logs.  The adaptive suffix is only appended when
     /// the mode is non-default, so uniform-mode log lines stay
     /// byte-identical to the historical output.
@@ -510,6 +553,35 @@ mod tests {
             .apply_cli(&["--chaos-seed".to_string()])
             .unwrap_err();
         assert!(err.to_string().contains("chaos-seed"));
+    }
+
+    #[test]
+    fn to_ini_roundtrips_every_field_bit_exactly() {
+        // a config with every field moved off its default, including
+        // awkward f64 values (Display must round-trip the exact bits)
+        let mut c = RunConfig::default();
+        c.apply_ini(
+            "particles = 777\nlevels = 6\ncut-level = 3\nterms = 11\n\
+             kernel = gravity\nranks = 5\nstrategy = sfc-weighted\n\
+             network = ethernet\ndist = clustered\nseed = 42\n\
+             threads = 2\nsteps = 13\nrebalance = off\n\
+             integrator = rk2\ntree = adaptive\nleaf-capacity = 24\n\
+             chaos = lossy\nchaos-seed = 99\n",
+        )
+        .unwrap();
+        c.sigma = 0.1 + 0.2; // not exactly 0.3
+        c.dt = 1.0 / 3.0;
+        c.rebalance_threshold = f64::from_bits(0x3fe5_5555_5555_5555);
+        let ini = c.to_ini();
+        let mut back = RunConfig::default();
+        back.apply_ini(&ini).unwrap();
+        assert_eq!(format!("{c:?}"), format!("{back:?}"));
+        assert_eq!(c.sigma.to_bits(), back.sigma.to_bits());
+        assert_eq!(c.dt.to_bits(), back.dt.to_bits());
+        assert_eq!(c.rebalance_threshold.to_bits(),
+                   back.rebalance_threshold.to_bits());
+        // serialization is a fixed point
+        assert_eq!(back.to_ini(), ini);
     }
 
     #[test]

@@ -18,7 +18,7 @@ use crate::config::RunConfig;
 use crate::metrics::ScalingSeries;
 use crate::model::{serial_memory, CommEstimator, WorkEstimator};
 use crate::partition::Strategy;
-use crate::util::{max_abs_error, rel_l2_error};
+use crate::util::{max_abs_error, rel_l2_error, velocity_digest};
 use crate::verify::VerificationFile;
 
 const USAGE: &str = "\
@@ -50,17 +50,22 @@ COMMON FLAGS (defaults in brackets)
   --backend B       [native|pjrt|auto]   --artifacts DIR [artifacts]
   --config FILE     INI-style config file        --seed N [1]
   --threads T       evaluator worker pool, 0 = one per core [0]
+  --mode M          [serial|threaded|process|simulated]
+              run and simulate only; `process` launches one worker
+              OS process per rank over localhost TCP (DESIGN.md §14)
+              and is bitwise-identical to the other modes
   scale only: --ranks-list 1,4,8,16,32,64
   run only:   --dump FILE (write verification file)
   simulate:   --steps N [20]  --dt T [0.002]  --integrator [euler|rk2]
               --rebalance [on|off]  --rebalance-threshold R [0.8]
-              --mode [serial|threaded|simulated]
-              --chaos-profile [off|lossy|corrupt|flaky|blackhole]
+              --chaos-profile [off|lossy|corrupt|flaky|blackhole|
+                               rank-kill]
               --chaos-seed N [0]
               (chaos injects deterministic comm faults — drops,
-               duplicates, delays, bit-flips — into the threaded
-               wire; recovery is bitwise-transparent, see DESIGN.md
-               §13; requires --mode threaded)
+               duplicates, delays, bit-flips — into the threaded or
+               process wire; rank-kill aborts one worker process
+               mid-step and requires --mode process; recovery is
+               bitwise-transparent, see DESIGN.md §13–14)
 ";
 
 /// CLI entry point (called by main).
@@ -77,6 +82,13 @@ pub fn cli_main() {
 
 /// Parse args and run a subcommand (exposed for tests).
 pub fn dispatch(args: &[String]) -> Result<()> {
+    // the hidden `worker` subcommand is the re-exec target of
+    // `--mode process`: it speaks only `--connect`/`--rank` and must
+    // bypass the config parser entirely (its RunConfig arrives over
+    // the rendezvous socket, not the command line)
+    if args.first().map(String::as_str) == Some("worker") {
+        return super::process::worker_entry(&args[1..]);
+    }
     let mut config = RunConfig::default();
     // pre-scan --config before other flags
     if let Some(i) = args.iter().position(|a| a == "--config") {
@@ -102,10 +114,11 @@ pub fn dispatch(args: &[String]) -> Result<()> {
                 mode = Some(match v.as_str() {
                     "serial" => RunMode::Serial,
                     "threaded" => RunMode::Threaded,
+                    "process" => RunMode::Process,
                     "simulated" | "sim" => RunMode::Simulated,
                     other => bail!(
                         "unknown mode '{other}' (serial | threaded | \
-                         simulated)"
+                         process | simulated)"
                     ),
                 });
                 i += 1;
@@ -135,14 +148,18 @@ pub fn dispatch(args: &[String]) -> Result<()> {
     }
     let positional = config.apply_cli(&filtered)?;
     let cmd = positional.first().map(String::as_str).unwrap_or("help");
-    if mode.is_some() && cmd != "simulate" {
-        // don't silently ignore it: pre-simulate, `--mode` fell through
+    if mode.is_some() && cmd != "simulate" && cmd != "run" {
+        // don't silently ignore it: elsewhere, `--mode` fell through
         // to the config parser and errored as an unknown key
-        bail!("--mode only applies to the simulate command");
+        bail!("--mode only applies to the run and simulate commands");
     }
 
     match cmd {
-        "run" => cmd_run(&config, dump.as_deref()),
+        "run" => cmd_run(
+            &config,
+            dump.as_deref(),
+            mode.unwrap_or(RunMode::Simulated),
+        ),
         "simulate" => {
             cmd_simulate(&config, mode.unwrap_or(RunMode::Serial))
         }
@@ -166,14 +183,16 @@ pub fn dispatch(args: &[String]) -> Result<()> {
     }
 }
 
-fn cmd_run(config: &RunConfig, dump: Option<&str>) -> Result<()> {
-    println!("petfmm run: {}", config.summary());
+fn cmd_run(
+    config: &RunConfig,
+    dump: Option<&str>,
+    mode: RunMode,
+) -> Result<()> {
+    println!("petfmm run: {} mode={}", config.summary(), mode.name());
     // one entry point for the whole pipeline: the solver facade owns
     // backend selection, the schedule, and the single input-order
     // permutation of the results
-    let sol = FmmSolver::from_config(config)
-        .mode(RunMode::Simulated)
-        .solve()?;
+    let sol = FmmSolver::from_config(config).mode(mode).solve()?;
     let problem = &sol.problem;
     println!(
         "tree: {} particles, {} occupied leaves, {} subtrees (cut k={})",
@@ -195,6 +214,14 @@ fn cmd_run(config: &RunConfig, dump: Option<&str>) -> Result<()> {
     println!("  {:<20} {:>12.6}", "TOTAL", sol.makespan());
     println!("load balance LB(P) = {:.4}", sol.load_balance());
     println!("modeled comm volume = {:.3} MB", sol.comm_bytes / 1e6);
+    if sol.wire.total() > 0.0 {
+        println!("observed wire volume = {:.3} MB",
+                 sol.wire.total() / 1e6);
+    }
+    // the mode-comparison pin: two runs printing the same digest
+    // computed bitwise-identical velocities (CI diffs this line
+    // between --mode threaded and --mode process)
+    println!("velocity digest: {:016x}", velocity_digest(&sol.vel));
 
     // accuracy vs the kernel's direct oracle (capped N: stays fast)
     if problem.tree.n_particles() <= 20_000 {
@@ -432,11 +459,12 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("unknown mode"), "{err}");
-        // --mode is simulate-only; other commands must reject it
-        // loudly rather than silently running in a different mode
+        // --mode belongs to run and simulate; other commands must
+        // reject it loudly rather than silently running differently
+        // (`process` here also pins that the flag value parses)
         let err = dispatch(&args(&[
-            "run", "--particles", "100", "--levels", "3", "--mode",
-            "threaded",
+            "scale", "--particles", "100", "--levels", "3", "--mode",
+            "process",
         ]))
         .unwrap_err()
         .to_string();
@@ -445,6 +473,30 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("integrator"), "{err}");
+    }
+
+    #[test]
+    fn run_supports_the_threaded_mode_flag() {
+        dispatch(&args(&[
+            "run", "--particles", "200", "--levels", "3", "--terms",
+            "6", "--ranks", "2", "--dist", "uniform", "--mode",
+            "threaded",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn worker_subcommand_bypasses_the_config_parser() {
+        // the hidden re-exec target: bad args surface its own usage,
+        // not an "unknown key" from the INI/flag parser
+        let err = dispatch(&args(&["worker"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--connect"), "{err}");
+        let err = dispatch(&args(&["worker", "--particles", "5"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown argument"), "{err}");
     }
 
     #[test]

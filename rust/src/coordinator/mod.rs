@@ -6,11 +6,13 @@
 
 pub mod cli;
 pub mod driver;
+pub mod process;
 pub mod simulation;
 pub mod solver;
 pub mod workload;
 
 pub use cli::{cli_main, dispatch};
+pub use process::{run_process, worker_entry};
 pub use driver::{make_backend, native_dims, prepare,
                  prepare_with_particles, scaling_point, strong_scaling,
                  Problem};

@@ -1,0 +1,721 @@
+//! Process-parallel execution (DESIGN.md §14): the coordinator process
+//! itself is rank 0 **and** the message hub; worker ranks are re-exec'd
+//! copies of the current binary (`petfmm worker --connect … --rank …`)
+//! speaking the socket wire protocol over localhost TCP.
+//!
+//! The mode exists to make rank death *real*: a worker is an OS process
+//! that can be killed (`--chaos-profile rank-kill` does exactly that),
+//! and its death is observable three independent ways — connection EOF
+//! (→ [`CommError::Disconnected`]), child-exit status
+//! ([`Child::try_wait`]), and stage-deadline expiry.  All three surface
+//! as [`FmmError::RankFailed`], which the step-level recovery ladder in
+//! `coordinator::Simulation` dispatches on.
+//!
+//! Determinism contract: every rank — hub thread and worker process
+//! alike — runs the identical `rank_main` protocol on identical inputs
+//! (the BOOT frame ships the config INI, the exact particle bits, and
+//! the evolved subtree→rank assignment), so a process-mode solve is
+//! bitwise-equal to the threaded and serial modes.
+//!
+//! Orphan rule: a worker's life is scoped to its hub connection.  Every
+//! worker read carries a deadline, EOF is a hard error, and any error
+//! exits the process — so a crashed coordinator cannot leave workers
+//! behind.
+
+use std::io::ErrorKind;
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::driver::native_dims;
+use crate::comm::socket::{decode_frame, encode_frame, write_frame};
+use crate::comm::threaded::{distribute_own, rank_main};
+use crate::comm::transport::{fnv1a_u64, FNV_OFFSET};
+use crate::comm::{channel_mesh, interaction_overlap, neighbor_overlap,
+                  run_on_mesh, CommError, FaultCounters, FaultPlan,
+                  FaultyTransport, Frame, FrameReader, HubTransport,
+                  KillSwitch, ReliableEndpoint, RetryPolicy, StageBytes,
+                  Transport, WorkerTransport, KILL_EXIT_CODE};
+use crate::config::RunConfig;
+use crate::error::FmmError;
+use crate::fmm::{BiotSavart2D, FmmKernel, Gravity2D, KernelSpec,
+                 LogPotential2D, OpCounts, OpDims};
+use crate::model::{CommEstimator, WorkEstimator};
+use crate::partition::{Assignment, Graph};
+use crate::quadtree::{Domain, Quadtree, TreeCut, TreeMode};
+use crate::sched::ParallelPlan;
+
+/// How long the hub waits for all workers to connect and say HELLO.
+const RENDEZVOUS_TIMEOUT: Duration = Duration::from_secs(30);
+/// Per-frame deadline during the handshake (either side).
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+/// How long the hub waits for BYE frames after its own protocol run.
+const BYE_TIMEOUT: Duration = Duration::from_secs(30);
+/// Child / accept poll interval during rendezvous and teardown.
+const POLL: Duration = Duration::from_millis(5);
+
+/// Environment override for the worker executable (integration tests
+/// point this at `CARGO_BIN_EXE_petfmm`; production uses
+/// `current_exe`).
+pub const WORKER_BIN_ENV: &str = "PETFMM_WORKER_BIN";
+
+/// FNV-1a-64 digest of the config INI text — the hub sends it in
+/// WELCOME and the worker recomputes it over the BOOT payload, so a
+/// config mismatch is caught before any physics runs.
+pub fn config_digest(ini: &str) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in ini.as_bytes() {
+        h = fnv1a_u64(h, u64::from(b));
+    }
+    h
+}
+
+/// Run the distributed FMM with one OS process per rank.  Rank 0 runs
+/// in the calling thread over a [`HubTransport`]; ranks 1..P are
+/// spawned workers.  Returns the same tuple as
+/// [`run_on_mesh`](crate::comm::run_on_mesh), with counters and wire
+/// bytes merged across all processes (workers report theirs in BYE
+/// frames).
+pub fn run_process(
+    config: &RunConfig,
+    global_tree: Arc<Quadtree>,
+    cut: &TreeCut,
+    assignment: &Assignment,
+    dims: OpDims,
+    fault_plan: Option<&FaultPlan>,
+) -> Result<(Vec<[f64; 2]>, OpCounts, FaultCounters, StageBytes),
+            FmmError> {
+    match config.kernel {
+        KernelSpec::BiotSavart => {
+            run_process_k(BiotSavart2D::new(config.sigma), config,
+                          global_tree, cut, assignment, dims, fault_plan)
+        }
+        KernelSpec::LogPotential => {
+            run_process_k(LogPotential2D, config, global_tree, cut,
+                          assignment, dims, fault_plan)
+        }
+        KernelSpec::Gravity => {
+            run_process_k(Gravity2D::default(), config, global_tree, cut,
+                          assignment, dims, fault_plan)
+        }
+    }
+}
+
+/// Spawned worker subprocesses, killed on drop so no error path (or
+/// panic) can leak orphans.
+struct Workers {
+    children: Vec<(usize, Child)>,
+}
+
+impl Workers {
+    /// First worker that has already exited, if any.
+    fn reap_dead(&mut self) -> Option<(usize, std::process::ExitStatus)> {
+        for (r, c) in &mut self.children {
+            if let Ok(Some(st)) = c.try_wait() {
+                return Some((*r, st));
+            }
+        }
+        None
+    }
+
+    fn kill_all(&mut self) {
+        for (_, c) in &mut self.children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+        self.children.clear();
+    }
+}
+
+impl Drop for Workers {
+    fn drop(&mut self) {
+        self.kill_all();
+    }
+}
+
+fn rank_failed(rank: usize, detail: String) -> FmmError {
+    FmmError::RankFailed {
+        rank,
+        source: Box::new(FmmError::Internal(detail)),
+    }
+}
+
+/// Convert a hub-side protocol error into the most precise failure:
+/// a [`CommError::Disconnected`] names the dead rank directly; for a
+/// stage timeout, a worker corpse (already-exited child) is the
+/// culprit if one exists.
+fn diagnose(e: CommError, workers: &mut Workers) -> FmmError {
+    let culprit = match &e {
+        CommError::Disconnected { rank } => Some(*rank),
+        _ => workers.reap_dead().map(|(r, _)| r),
+    };
+    match culprit {
+        Some(rank) => FmmError::RankFailed {
+            rank,
+            source: Box::new(FmmError::Comm(e)),
+        },
+        None => FmmError::Comm(e),
+    }
+}
+
+fn run_process_k<K>(
+    kernel: K,
+    config: &RunConfig,
+    global_tree: Arc<Quadtree>,
+    cut: &TreeCut,
+    assignment: &Assignment,
+    dims: OpDims,
+    fault_plan: Option<&FaultPlan>,
+) -> Result<(Vec<[f64; 2]>, OpCounts, FaultCounters, StageBytes),
+            FmmError>
+where
+    K: FmmKernel + Clone + Send + 'static,
+{
+    let ranks = assignment.ranks;
+    // a single rank has nobody to talk to over TCP; run the identical
+    // protocol over the in-process mesh (bitwise the same result)
+    if ranks < 2 {
+        let mesh = channel_mesh(ranks)
+            .into_iter()
+            .map(|c| Box::new(c) as Box<dyn Transport>)
+            .collect();
+        return run_on_mesh(kernel, global_tree, cut, assignment, dims,
+                           fault_plan, mesh);
+    }
+    if ranks > 255 {
+        return Err(FmmError::config(
+            "ranks",
+            format!("process mode routes by a one-byte rank id \
+                     (got {ranks}, max 255)"),
+        ));
+    }
+
+    let chaos = fault_plan.filter(|p| p.is_active()).cloned();
+    let epoch = chaos.as_ref().map(|p| p.epoch).unwrap_or(0);
+    let ini = config.to_ini();
+    let digest = config_digest(&ini);
+
+    let listener = TcpListener::bind(("127.0.0.1", 0))
+        .map_err(|e| FmmError::Internal(format!("bind rendezvous: {e}")))?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| FmmError::Internal(format!("local_addr: {e}")))?;
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| FmmError::Internal(format!("nonblocking: {e}")))?;
+
+    let mut workers = Workers { children: Vec::new() };
+    for r in 1..ranks {
+        let child = worker_command(&addr.to_string(), r)
+            .spawn()
+            .map_err(|e| {
+                rank_failed(r, format!("spawning worker: {e}"))
+            })?;
+        workers.children.push((r, child));
+    }
+
+    // rendezvous: accept until every rank 1..P has said HELLO
+    let mut slots: Vec<Option<TcpStream>> = Vec::new();
+    slots.resize_with(ranks, || None);
+    let deadline = Instant::now() + RENDEZVOUS_TIMEOUT;
+    let mut pending = ranks - 1;
+    while pending > 0 {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let r = handshake(&stream, ranks, epoch, digest, &ini,
+                                  &global_tree, assignment)
+                    .map_err(|e| {
+                        diagnose(e, &mut workers)
+                    })?;
+                if r == 0 || r >= ranks || slots[r].is_some() {
+                    return Err(FmmError::Internal(format!(
+                        "rendezvous: bogus or duplicate HELLO rank {r}"
+                    )));
+                }
+                slots[r] = Some(stream);
+                pending -= 1;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if let Some((r, st)) = workers.reap_dead() {
+                    return Err(rank_failed(r, format!(
+                        "worker exited during rendezvous ({st})"
+                    )));
+                }
+                if Instant::now() > deadline {
+                    let missing = (1..ranks)
+                        .find(|&r| slots[r].is_none())
+                        .unwrap_or(0);
+                    return Err(rank_failed(missing, format!(
+                        "rendezvous timed out after {RENDEZVOUS_TIMEOUT:?}"
+                    )));
+                }
+                std::thread::sleep(POLL);
+            }
+            Err(e) => {
+                return Err(FmmError::Internal(format!("accept: {e}")));
+            }
+        }
+    }
+    let streams: Vec<TcpStream> = slots
+        .into_iter()
+        .skip(1)
+        .map(|s| s.expect("rendezvous filled every slot"))
+        .collect();
+    let hub = HubTransport::new(streams)
+        .map_err(|e| FmmError::Internal(format!("hub setup: {e}")))?;
+    let stats = hub.stats();
+
+    // rank 0 runs the ordinary protocol over the hub, mirroring one
+    // run_on_mesh rank thread (including the chaos wrap, so fault
+    // accounting is symmetric with the threaded mode)
+    let plan = ParallelPlan::build(&global_tree, cut, assignment);
+    let nb = neighbor_overlap(&global_tree, cut, assignment);
+    let il = interaction_overlap(&global_tree, cut, assignment);
+    let mut own = distribute_own(&global_tree, cut, assignment);
+    let my_parts = std::mem::take(&mut own[0]);
+    let policy = chaos
+        .as_ref()
+        .map(|p| p.policy)
+        .unwrap_or_else(RetryPolicy::process_default);
+    let transport: Box<dyn Transport> = match &chaos {
+        Some(p) => Box::new(FaultyTransport::new(hub, p.clone())),
+        None => Box::new(hub),
+    };
+    let mut ep = ReliableEndpoint::new(transport, policy);
+    let res = rank_main(kernel, 0, ranks, &mut ep, my_parts,
+                        global_tree.domain, global_tree.levels, &plan,
+                        &nb, &il, cut, assignment, &global_tree, dims);
+    let mut wire = ep.wire();
+    let mut faults = ep.into_counters();
+
+    let (partial, mut counts) = match res {
+        Ok(ok) => ok,
+        Err(e) => return Err(diagnose(e, &mut workers)),
+    };
+
+    // teardown: every worker must BYE (its counters ride along) and
+    // exit cleanly; a silent death or chaos-kill exit is a rank failure
+    let bye_deadline = Instant::now() + BYE_TIMEOUT;
+    loop {
+        let missing: Vec<usize> = {
+            let st = stats.lock().unwrap_or_else(|e| e.into_inner());
+            (1..ranks).filter(|&r| st.byes[r].is_none()).collect()
+        };
+        if missing.is_empty() {
+            break;
+        }
+        if let Some((r, st)) = workers.reap_dead() {
+            if missing.contains(&r) {
+                return Err(rank_failed(r, format!(
+                    "worker exited without BYE ({st})"
+                )));
+            }
+        }
+        if Instant::now() > bye_deadline {
+            return Err(rank_failed(missing[0], format!(
+                "no BYE within {BYE_TIMEOUT:?}"
+            )));
+        }
+        std::thread::sleep(POLL);
+    }
+    {
+        let st = stats.lock().unwrap_or_else(|e| e.into_inner());
+        for bye in st.byes.iter().skip(1) {
+            let (f, w, c) = bye.as_ref().expect("checked above");
+            faults.merge(f);
+            wire.merge(w);
+            counts.merge(c);
+        }
+    }
+    // reap: workers exit right after BYE; anything still alive after
+    // the grace window is killed by the Workers drop
+    let reap_deadline = Instant::now() + Duration::from_secs(5);
+    for (r, c) in &mut workers.children {
+        loop {
+            match c.try_wait() {
+                Ok(Some(st)) if st.success() => break,
+                Ok(Some(st)) => {
+                    return Err(rank_failed(*r, format!(
+                        "worker exit status {st} after BYE"
+                    )));
+                }
+                Ok(None) if Instant::now() > reap_deadline => {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                    break;
+                }
+                Ok(None) => std::thread::sleep(POLL),
+                Err(_) => break,
+            }
+        }
+    }
+    workers.children.clear();
+
+    let mut vel = vec![[0.0; 2]; global_tree.particles.len()];
+    if let Some(pairs) = partial {
+        for (i, v) in pairs {
+            vel[i as usize] = v;
+        }
+    }
+    Ok((vel, counts, faults, wire))
+}
+
+/// The command line that re-execs this binary as a worker.
+fn worker_command(addr: &str, rank: usize) -> Command {
+    let bin = std::env::var_os(WORKER_BIN_ENV)
+        .map(std::path::PathBuf::from)
+        .or_else(|| std::env::current_exe().ok())
+        .unwrap_or_else(|| std::path::PathBuf::from("petfmm"));
+    let mut cmd = Command::new(bin);
+    cmd.arg("worker")
+        .arg("--connect")
+        .arg(addr)
+        .arg("--rank")
+        .arg(rank.to_string())
+        .stdin(Stdio::null());
+    cmd
+}
+
+/// Hub side of one worker's handshake: HELLO in, WELCOME + BOOT out.
+/// Returns the worker's announced rank.
+fn handshake(
+    stream: &TcpStream,
+    ranks: usize,
+    epoch: u64,
+    digest: u64,
+    ini: &str,
+    tree: &Quadtree,
+    assignment: &Assignment,
+) -> Result<usize, CommError> {
+    let io_err =
+        |e: std::io::Error| CommError::Disconnected { rank: 0 }.tag(e);
+    stream.set_nonblocking(false).map_err(io_err)?;
+    stream.set_nodelay(true).map_err(io_err)?;
+    let mut writer = stream.try_clone().map_err(io_err)?;
+    let mut reader =
+        FrameReader::new(stream.try_clone().map_err(io_err)?, 0);
+    let hello = read_frame_within(&mut reader, HANDSHAKE_TIMEOUT,
+                                  "HELLO")?;
+    let rank = match hello {
+        Frame::Hello { rank } => rank,
+        f => {
+            return Err(CommError::Codec {
+                detail: format!("expected HELLO, got {f:?}"),
+            });
+        }
+    };
+    write_frame(&mut writer,
+                &encode_frame(&Frame::Welcome {
+                    world: ranks,
+                    rank,
+                    epoch,
+                    config_digest: digest,
+                }),
+                rank)?;
+    write_frame(&mut writer,
+                &encode_frame(&Frame::Boot {
+                    config: ini.to_string(),
+                    particles: tree.particles.clone(),
+                    part: assignment
+                        .part
+                        .iter()
+                        .map(|&p| p as u32)
+                        .collect(),
+                }),
+                rank)?;
+    Ok(rank)
+}
+
+impl CommError {
+    /// Attach an io error's text to a [`CommError::Disconnected`] so
+    /// handshake failures stay diagnosable (`Disconnected` carries only
+    /// the rank).
+    fn tag(self, e: std::io::Error) -> CommError {
+        match self {
+            CommError::Disconnected { rank } => CommError::Codec {
+                detail: format!("rank {rank} handshake io: {e}"),
+            },
+            other => other,
+        }
+    }
+}
+
+fn read_frame_within(
+    reader: &mut FrameReader,
+    within: Duration,
+    what: &str,
+) -> Result<Frame, CommError> {
+    match reader.read_frame(Some(Instant::now() + within))? {
+        Some(payload) => decode_frame(&payload),
+        None => Err(CommError::Codec {
+            detail: format!("timed out waiting for {what}"),
+        }),
+    }
+}
+
+// ------------------------------------------------------------- worker
+
+/// Entry point for `petfmm worker --connect HOST:PORT --rank N`: the
+/// subprocess side of the handshake, one `rank_main` run, then BYE.
+///
+/// Every failure — EOF on the hub connection first among them — exits
+/// the process (the CLI surfaces the error and returns nonzero), which
+/// is the no-orphans guarantee: a worker cannot outlive its
+/// coordinator's socket.
+pub fn worker_entry(args: &[String]) -> Result<()> {
+    let mut connect: Option<String> = None;
+    let mut rank_arg: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--connect" if i + 1 < args.len() => {
+                connect = Some(args[i + 1].clone());
+                i += 2;
+            }
+            "--rank" if i + 1 < args.len() => {
+                rank_arg = Some(args[i + 1].clone());
+                i += 2;
+            }
+            other => bail!("worker: unknown argument '{other}' \
+                            (expect --connect HOST:PORT --rank N)"),
+        }
+    }
+    let addr = connect.context("worker needs --connect HOST:PORT")?;
+    let my_rank: usize = rank_arg
+        .context("worker needs --rank N")?
+        .parse()
+        .context("worker --rank must be an integer")?;
+
+    let stream = TcpStream::connect(&addr)
+        .with_context(|| format!("worker connecting to hub {addr}"))?;
+    stream.set_nodelay(true)?;
+    let mut writer = stream.try_clone()?;
+    let mut bye_writer = stream.try_clone()?;
+    let mut reader = FrameReader::new(stream, 0);
+    write_frame(&mut writer,
+                &encode_frame(&Frame::Hello { rank: my_rank }), 0)
+        .context("worker sending HELLO")?;
+
+    let welcome = read_frame_within(&mut reader, HANDSHAKE_TIMEOUT,
+                                    "WELCOME")
+        .context("worker awaiting WELCOME")?;
+    let (world, rank, epoch, digest) = match welcome {
+        Frame::Welcome { world, rank, epoch, config_digest } => {
+            (world, rank, epoch, config_digest)
+        }
+        f => bail!("worker: expected WELCOME, got {f:?}"),
+    };
+    ensure!(rank == my_rank,
+            "hub welcomed rank {rank}, this worker is rank {my_rank}");
+    ensure!(rank < world, "rank {rank} outside world of {world}");
+
+    let boot = read_frame_within(&mut reader, HANDSHAKE_TIMEOUT, "BOOT")
+        .context("worker awaiting BOOT")?;
+    let (ini, particles, part) = match boot {
+        Frame::Boot { config, particles, part } => {
+            (config, particles, part)
+        }
+        f => bail!("worker: expected BOOT, got {f:?}"),
+    };
+    ensure!(config_digest(&ini) == digest,
+            "BOOT config does not match the WELCOME digest");
+
+    let mut config = RunConfig::default();
+    config.apply_ini(&ini).context("worker parsing BOOT config")?;
+    ensure!(config.ranks == world,
+            "BOOT config says {} ranks, WELCOME says {world}",
+            config.ranks);
+
+    // rebuild the problem exactly as driver::prepare_with_particles —
+    // same tree recipe over the shipped particle bits — and take the
+    // subtree→rank map verbatim from BOOT (refine_in_place may have
+    // evolved it past anything re-derivable from the config)
+    let tree = match config.tree_mode()? {
+        TreeMode::Uniform => {
+            Quadtree::build(Domain::UNIT, config.levels, particles)
+        }
+        TreeMode::Adaptive { leaf_capacity, min_level } => {
+            Quadtree::build_adaptive(Domain::UNIT, config.levels,
+                                     leaf_capacity,
+                                     min_level.min(config.levels),
+                                     particles)
+        }
+    };
+    let cut = TreeCut::new(config.levels, config.effective_cut());
+    let work = WorkEstimator::new(config.terms)
+        .all_subtree_work(&tree, &cut);
+    let comm = CommEstimator::for_terms(config.terms).comm_matrix(&cut);
+    let graph = Graph::from_comm_matrix(work, &comm);
+    ensure!(part.len() == graph.n(),
+            "BOOT part has {} entries for {} subtrees",
+            part.len(), graph.n());
+    let assignment = Assignment {
+        strategy: config.strategy,
+        ranks: world,
+        part: part.iter().map(|&p| p as usize).collect(),
+        graph,
+    };
+
+    let dims = native_dims(&config);
+    let chaos = config
+        .fault_plan()
+        .map(|p| p.with_epoch(epoch))
+        .filter(|p| p.is_active());
+    let kill_stage =
+        chaos.as_ref().and_then(|p| p.should_kill(rank, world));
+    let policy = chaos
+        .as_ref()
+        .map(|p| p.policy)
+        .unwrap_or_else(RetryPolicy::process_default);
+    let mut transport: Box<dyn Transport> =
+        Box::new(WorkerTransport::from_parts(reader, writer, rank,
+                                             world));
+    if let Some(stage) = kill_stage {
+        transport = Box::new(KillSwitch::new(transport, stage));
+    }
+    if let Some(p) = &chaos {
+        transport = Box::new(FaultyTransport::new(transport, p.clone()));
+    }
+    let mut ep = ReliableEndpoint::new(transport, policy);
+
+    let plan = ParallelPlan::build(&tree, &cut, &assignment);
+    let nb = neighbor_overlap(&tree, &cut, &assignment);
+    let il = interaction_overlap(&tree, &cut, &assignment);
+    let mut own = distribute_own(&tree, &cut, &assignment);
+    let my_parts = std::mem::take(&mut own[rank]);
+
+    let res = match config.kernel {
+        KernelSpec::BiotSavart => {
+            rank_main(BiotSavart2D::new(config.sigma), rank, world,
+                      &mut ep, my_parts, Domain::UNIT, config.levels,
+                      &plan, &nb, &il, &cut, &assignment, &tree, dims)
+        }
+        KernelSpec::LogPotential => {
+            rank_main(LogPotential2D, rank, world, &mut ep, my_parts,
+                      Domain::UNIT, config.levels, &plan, &nb, &il,
+                      &cut, &assignment, &tree, dims)
+        }
+        KernelSpec::Gravity => {
+            rank_main(Gravity2D::default(), rank, world, &mut ep,
+                      my_parts, Domain::UNIT, config.levels, &plan,
+                      &nb, &il, &cut, &assignment, &tree, dims)
+        }
+    };
+    match res {
+        Ok((_partial, counts)) => {
+            if kill_stage.is_some() {
+                // armed but never tripped (the chosen stage saw no
+                // traffic for this rank): honour the kill contract
+                // anyway so the run cannot silently ignore the chaos
+                std::process::exit(KILL_EXIT_CODE);
+            }
+            let wire = ep.wire();
+            let faults = ep.into_counters();
+            write_frame(&mut bye_writer,
+                        &encode_frame(&Frame::Bye {
+                            faults,
+                            wire,
+                            counts,
+                        }),
+                        0)
+                .context("worker sending BYE")?;
+            Ok(())
+        }
+        Err(e) => bail!("worker rank {rank}: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Stage;
+    use crate::coordinator::prepare;
+
+    fn small_config() -> RunConfig {
+        RunConfig {
+            particles: 200,
+            levels: 4,
+            terms: 10,
+            ranks: 1,
+            distribution: "uniform".into(),
+            par_threads: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn config_digest_is_stable_and_input_sensitive() {
+        let a = small_config().to_ini();
+        assert_eq!(config_digest(&a), config_digest(&a));
+        let b = RunConfig { terms: 11, ..small_config() }.to_ini();
+        assert_ne!(config_digest(&a), config_digest(&b));
+    }
+
+    #[test]
+    fn single_rank_process_runs_in_process_and_matches_serial() {
+        // ranks == 1 takes the channel-mesh fast path: no subprocess,
+        // no TCP, but the identical protocol — and the identical bits
+        let cfg = small_config();
+        let p = prepare(&cfg).unwrap();
+        let dims = native_dims(&cfg);
+        let tree = Arc::new(p.tree.clone());
+        let (vel, counts, faults, wire) =
+            run_process(&cfg, tree, &p.cut, &p.assignment, dims, None)
+                .unwrap();
+        assert_eq!(vel.len(), 200);
+        assert!(counts.p2p > 0);
+        assert!(faults.is_quiet());
+        // a 1-rank run exchanges no messages
+        assert_eq!(wire.total(), 0.0);
+        let backend = crate::coordinator::make_backend(&cfg).unwrap();
+        let want = crate::fmm::Evaluator::new(&p.tree, backend.as_ref())
+            .evaluate()
+            .vel_in_input_order(&p.tree);
+        assert_eq!(vel, want, "process(1) must be bitwise serial");
+    }
+
+    #[test]
+    fn too_many_ranks_is_a_typed_config_error() {
+        let cfg = RunConfig { ranks: 300, ..small_config() };
+        let p = prepare(&RunConfig { ranks: 4, ..small_config() })
+            .unwrap();
+        let mut a = p.assignment.clone();
+        a.ranks = 300;
+        let dims = native_dims(&cfg);
+        let err = run_process(&cfg, Arc::new(p.tree.clone()), &p.cut,
+                              &a, dims, None)
+            .unwrap_err();
+        assert!(matches!(err, FmmError::Config { ref key, .. }
+                         if key == "ranks"),
+                "{err}");
+    }
+
+    #[test]
+    fn worker_entry_rejects_bad_arguments() {
+        let argv = |s: &[&str]| -> Vec<String> {
+            s.iter().map(|x| x.to_string()).collect()
+        };
+        assert!(worker_entry(&argv(&["--bogus"])).is_err());
+        assert!(worker_entry(&argv(&["--connect"])).is_err());
+        assert!(worker_entry(&argv(&["--connect", "127.0.0.1:1",
+                                     "--rank", "x"]))
+            .is_err());
+    }
+
+    #[test]
+    fn diagnose_names_the_disconnected_rank() {
+        let mut w = Workers { children: Vec::new() };
+        let e = diagnose(CommError::Disconnected { rank: 3 }, &mut w);
+        assert!(matches!(e, FmmError::RankFailed { rank: 3, .. }),
+                "{e}");
+        let e = diagnose(CommError::StageTimeout {
+            rank: 0,
+            stage: Stage::Gather,
+            missing: 1,
+        }, &mut w);
+        assert!(matches!(e, FmmError::Comm(_)), "{e}");
+    }
+}

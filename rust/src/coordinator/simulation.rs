@@ -139,26 +139,32 @@ impl Simulation {
     }
 
     /// One facade solve under the recovery ladder (DESIGN.md §13).
-    /// `make(degraded)` builds a fresh solver per attempt from
+    /// `make(degraded, refine)` builds a fresh solver per attempt from
     /// checkpointed state — `degraded = true` means the chaos-free
-    /// serial fallback.  The rungs: in-protocol retransmits happen
-    /// inside each attempt; a recoverable failure (retry budget
-    /// exhausted on some link, a rank declared dead) retries the whole
-    /// solve in a fresh fault universe (epoch bump); after
-    /// [`STEP_RETRY_BUDGET`] such retries the solve degrades to a
-    /// chaos-free serial run over the same checkpoint and the
+    /// serial fallback, `refine = true` asks for a survivor-refined
+    /// partition (a rank died; warm-refine the assignment before
+    /// relaunching).  The rungs: in-protocol retransmits happen inside
+    /// each attempt; a recoverable failure (retry budget exhausted on
+    /// some link, a rank declared dead) retries the whole solve in a
+    /// fresh fault universe (epoch bump) — in `Process` mode a dead
+    /// rank additionally triggers the survivors arm: the checkpoint's
+    /// assignment is re-refined and the full rank set relaunched;
+    /// after [`STEP_RETRY_BUDGET`] such retries the solve degrades to
+    /// a chaos-free serial run over the same checkpoint and the
     /// partition is refreshed for the survivors.  Every rung replays
-    /// the identical schedule, so recovery is bitwise-invisible.
+    /// the identical schedule, and partitions only decide placement,
+    /// so recovery is bitwise-invisible.
     fn solve_with_ladder<F>(&mut self, faults: &mut FaultCounters,
                             make: &F) -> Result<Solution>
     where
-        F: Fn(bool) -> FmmSolver,
+        F: Fn(bool, bool) -> FmmSolver,
     {
         let mut retries = 0u64;
+        let mut refine = false;
         loop {
             let epoch = self.chaos_epoch;
             self.chaos_epoch += 1;
-            let err = match make(false)
+            let err = match make(false, refine)
                 .mode(self.mode)
                 .chaos_epoch(epoch)
                 .solve()
@@ -175,6 +181,13 @@ impl Simulation {
             }
             if matches!(fe, Some(FmmError::RankFailed { .. })) {
                 faults.rank_failures += 1;
+                // survivors arm (process mode): a worker process died;
+                // refine the checkpoint's partition before relaunching
+                // the step's rank set
+                if self.mode == RunMode::Process && !refine {
+                    refine = true;
+                    faults.survivor_repartitions += 1;
+                }
             }
             if retries < STEP_RETRY_BUDGET {
                 retries += 1;
@@ -186,7 +199,7 @@ impl Simulation {
             // so the trajectory is unaffected; then hand the next
             // (threaded) step a freshly-refined survivor partition
             faults.serial_fallbacks += 1;
-            let mut sol = make(true)
+            let mut sol = make(true, false)
                 .mode(RunMode::Serial)
                 .solve()
                 .context("chaos-free serial fallback solve")?;
@@ -213,23 +226,35 @@ impl Simulation {
         if self.validated_mode != Some(self.mode) {
             let cfg = &self.problem().config;
             validate_backend(cfg, self.mode)?;
-            // mirror the facade's chaos/mode check here so the typed
-            // error surfaces before the problem is consumed
-            if cfg.fault_plan().is_some()
-                && self.mode != RunMode::Threaded
-            {
-                return Err(anyhow::Error::new(FmmError::config(
-                    "chaos",
-                    format!(
-                        "profile '{}' needs --mode threaded (the {} \
-                         mode has no message wire to inject faults \
-                         into)",
-                        cfg.chaos,
-                        self.mode.name()
-                    ),
-                )));
+            // mirror the facade's chaos/mode checks here so the typed
+            // errors surface before the problem is consumed
+            let wired = matches!(self.mode,
+                                 RunMode::Threaded | RunMode::Process);
+            if let Some(p) = cfg.fault_plan() {
+                if !wired {
+                    return Err(anyhow::Error::new(FmmError::config(
+                        "chaos",
+                        format!(
+                            "profile '{}' needs --mode threaded or \
+                             process (the {} mode has no message wire \
+                             to inject faults into)",
+                            cfg.chaos,
+                            self.mode.name()
+                        ),
+                    )));
+                }
+                if p.kill && self.mode != RunMode::Process {
+                    return Err(anyhow::Error::new(FmmError::config(
+                        "chaos",
+                        format!(
+                            "profile '{}' kills worker processes; it \
+                             needs --mode process",
+                            cfg.chaos
+                        ),
+                    )));
+                }
             }
-            if self.mode != RunMode::Threaded {
+            if !wired {
                 make_backend(cfg).context("dynamic step backend")?;
             }
             if self.mode == RunMode::Simulated {
@@ -254,10 +279,15 @@ impl Simulation {
             // from; chaos-off runs keep the zero-copy move below
             let checkpoint = problem;
             let plan_seed = self.plan.take();
-            self.solve_with_ladder(&mut faults, &|degraded| {
+            self.solve_with_ladder(&mut faults, &|degraded, refine| {
                 let mut p = checkpoint.clone();
                 if degraded {
                     p.config.chaos = "off".into();
+                }
+                if refine {
+                    // survivors arm: warm-refine the checkpointed
+                    // partition before relaunching the rank set
+                    p.assignment.refine_in_place(p.config.seed);
                 }
                 let mut s = FmmSolver::from_problem(p);
                 if let Some(pl) = plan_seed.clone() {
@@ -279,6 +309,7 @@ impl Simulation {
             mut counts,
             stages,
             comm_bytes,
+            mut wire,
             problem: returned,
             plan,
             ..
@@ -314,7 +345,11 @@ impl Simulation {
                 let half = if chaos {
                     // same ladder as the main solve; each attempt
                     // re-prepares from the midpoint particle copy
-                    self.solve_with_ladder(&mut faults, &|degraded| {
+                    // a fresh prepare re-derives the partition, so the
+                    // survivors arm's `refine` request is satisfied by
+                    // the epoch bump alone here
+                    self.solve_with_ladder(&mut faults,
+                                           &|degraded, _refine| {
                         let mut c = cfg.clone();
                         if degraded {
                             c.chaos = "off".into();
@@ -331,6 +366,7 @@ impl Simulation {
                 };
                 midpoint_secs = t_half.elapsed().as_secs_f64();
                 counts.merge(&half.counts);
+                wire.merge(&half.wire);
                 convect(&mut parts, &half.vel, dt);
             }
         }
@@ -362,6 +398,7 @@ impl Simulation {
             step_secs: t_step.elapsed().as_secs_f64(),
             makespan,
             comm_bytes,
+            wire,
             counts,
             stages,
             lb_predicted_before: lb_before,
@@ -550,6 +587,40 @@ mod tests {
                          if key == "chaos"), "{fe}");
         // pre-flight fired before the problem was consumed
         assert_eq!(sim.particles(), &before[..]);
+        assert!(sim.trace().steps.is_empty());
+    }
+
+    #[test]
+    fn process_mode_single_rank_simulation_matches_serial() {
+        // ranks = 1 keeps process mode in-process (no subprocesses),
+        // pinning the mode's step loop bitwise to serial; the real
+        // multi-rank contract lives in tests/process_mode.rs
+        let cfg = RunConfig { ranks: 1, ..small_config() };
+        let run = |mode: RunMode| {
+            let mut sim = Simulation::new(&cfg).unwrap().mode(mode);
+            sim.run_steps(2).unwrap();
+            sim.position_digest()
+        };
+        assert_eq!(run(RunMode::Serial), run(RunMode::Process));
+    }
+
+    #[test]
+    fn rank_kill_chaos_needs_process_mode_at_preflight() {
+        // rank-kill aborts worker processes; only process mode has
+        // any to kill, so the preflight rejects it elsewhere
+        let noisy = RunConfig {
+            chaos: "rank-kill".into(),
+            ..small_config()
+        };
+        let mut sim =
+            Simulation::new(&noisy).unwrap().mode(RunMode::Threaded);
+        let err = sim.step().unwrap_err();
+        let fe = err
+            .downcast_ref::<FmmError>()
+            .expect("typed config error");
+        assert!(matches!(fe, FmmError::Config { key, .. }
+                         if key == "chaos"), "{fe}");
+        assert!(fe.to_string().contains("process"), "{fe}");
         assert!(sim.trace().steps.is_empty());
     }
 

@@ -7,14 +7,17 @@
 //! particles, a [`KernelSpec`], a worker count, a [`RunMode`] — and the
 //! facade wires the quadtree build, the backend selection
 //! (`driver::make_backend`, including the pjrt-or-native `auto`
-//! fallback), the partition, and the chosen runtime.  The three run
-//! modes execute the identical schedule and are bitwise-identical on
-//! every pinned configuration (tests/kernel_conformance.rs):
+//! fallback), the partition, and the chosen runtime.  The run modes
+//! execute the identical schedule and are bitwise-identical on every
+//! pinned configuration (tests/kernel_conformance.rs):
 //!
 //! * [`RunMode::Serial`] — the dense-arena [`Evaluator`] pipeline (with
 //!   per-stage wall-clock timings),
 //! * [`RunMode::Threaded`] — the real message-passing runtime
-//!   (`comm::threaded`, one OS thread per rank), and
+//!   (`comm::threaded`, one OS thread per rank),
+//! * [`RunMode::Process`] — one OS **process** per rank over localhost
+//!   TCP (`coordinator::process`, DESIGN.md §14; the only mode where a
+//!   rank can genuinely die), and
 //! * [`RunMode::Simulated`] — the virtual-time strong-scaling
 //!   [`Simulator`](crate::sched::Simulator) with α–β comm costing.
 //!
@@ -30,8 +33,9 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use super::driver::{self, make_backend, native_dims, Problem};
-use crate::comm::threaded::run_threaded_on_faulty;
-use crate::comm::FaultCounters;
+use super::process::run_process;
+use crate::comm::{channel_mesh, run_on_mesh, FaultCounters, StageBytes,
+                  Transport};
 use crate::config::RunConfig;
 use crate::error::FmmError;
 use crate::fmm::{BiotSavart2D, Evaluator, FmmState, Gravity2D,
@@ -50,6 +54,10 @@ pub enum RunMode {
     /// (`comm::threaded`; always the native backend — PJRT executable
     /// handles are thread-local by construction).
     Threaded,
+    /// Real worker **processes** over localhost TCP, rank 0 doubling as
+    /// the message hub (`coordinator::process`; per-rank native
+    /// backends, like `Threaded`).
+    Process,
     /// Virtual-time strong-scaling simulator (BSP stages, α–β network).
     Simulated,
 }
@@ -59,6 +67,7 @@ impl RunMode {
         match self {
             RunMode::Serial => "serial",
             RunMode::Threaded => "threaded",
+            RunMode::Process => "process",
             RunMode::Simulated => "simulated",
         }
     }
@@ -72,12 +81,15 @@ impl RunMode {
 pub(crate) fn validate_backend(config: &RunConfig, mode: RunMode)
     -> Result<()> {
     match (mode, config.backend.as_str()) {
-        (RunMode::Threaded, "native" | "auto") => Ok(()),
-        (RunMode::Threaded, "pjrt") => bail!(
-            "threaded mode runs per-rank native backends (PJRT \
-             handles are thread-local); use --backend native or auto"
+        (RunMode::Threaded | RunMode::Process, "native" | "auto") => {
+            Ok(())
+        }
+        (RunMode::Threaded | RunMode::Process, "pjrt") => bail!(
+            "threaded and process modes run per-rank native backends \
+             (PJRT handles are thread-local); use --backend native or \
+             auto"
         ),
-        (RunMode::Threaded, other) => {
+        (RunMode::Threaded | RunMode::Process, other) => {
             bail!("unknown backend '{other}' (native | pjrt | auto)")
         }
         _ => Ok(()),
@@ -205,21 +217,39 @@ impl FmmSolver {
         let FmmSolver {
             config, particles, problem, mode, plan, chaos_epoch,
         } = self;
-        // the chaos plan lives on the config; only the threaded runtime
-        // has a wire to inject faults into, so anything else is a
-        // config error (silently ignoring the profile would let a CI
-        // chaos job "pass" without ever exercising the fault path)
+        // the chaos plan lives on the config; only the threaded and
+        // process runtimes have a wire to inject faults into, so
+        // anything else is a config error (silently ignoring the
+        // profile would let a CI chaos job "pass" without ever
+        // exercising the fault path)
         let fault_plan = config
             .fault_plan()
             .map(|p| p.with_epoch(chaos_epoch));
-        if fault_plan.is_some() && mode != RunMode::Threaded {
+        let wired =
+            matches!(mode, RunMode::Threaded | RunMode::Process);
+        if fault_plan.is_some() && !wired {
             return Err(anyhow::Error::new(FmmError::config(
                 "chaos",
                 format!(
-                    "profile '{}' needs --mode threaded (the {} mode \
-                     has no message wire to inject faults into)",
+                    "profile '{}' needs --mode threaded or process \
+                     (the {} mode has no message wire to inject \
+                     faults into)",
                     config.chaos,
                     mode.name()
+                ),
+            )));
+        }
+        // rank-kill aborts a worker *process*; threads share their
+        // address space and cannot die individually
+        if fault_plan.as_ref().is_some_and(|p| p.kill)
+            && mode != RunMode::Process
+        {
+            return Err(anyhow::Error::new(FmmError::config(
+                "chaos",
+                format!(
+                    "profile '{}' kills worker processes; it needs \
+                     --mode process",
+                    config.chaos
                 ),
             )));
         }
@@ -261,6 +291,7 @@ impl FmmSolver {
                     counts,
                     stages,
                     comm_bytes: 0.0,
+                    wire: StageBytes::default(),
                     ranks: 1,
                     state: Some(state),
                     backend: backend.name(),
@@ -282,18 +313,24 @@ impl FmmSolver {
                     problem;
                 let tree = Arc::new(tree);
                 let fp = fault_plan.as_ref();
-                let (vel, counts, faults) = match config.kernel {
-                    KernelSpec::BiotSavart => run_threaded_on_faulty(
+                let mesh = || -> Vec<Box<dyn Transport>> {
+                    channel_mesh(assignment.ranks)
+                        .into_iter()
+                        .map(|c| Box::new(c) as Box<dyn Transport>)
+                        .collect()
+                };
+                let (vel, counts, faults, wire) = match config.kernel {
+                    KernelSpec::BiotSavart => run_on_mesh(
                         BiotSavart2D::new(config.sigma), tree.clone(),
-                        &cut, &assignment, dims, fp,
+                        &cut, &assignment, dims, fp, mesh(),
                     )?,
-                    KernelSpec::LogPotential => run_threaded_on_faulty(
+                    KernelSpec::LogPotential => run_on_mesh(
                         LogPotential2D, tree.clone(), &cut, &assignment,
-                        dims, fp,
+                        dims, fp, mesh(),
                     )?,
-                    KernelSpec::Gravity => run_threaded_on_faulty(
+                    KernelSpec::Gravity => run_on_mesh(
                         Gravity2D::default(), tree.clone(), &cut,
-                        &assignment, dims, fp,
+                        &assignment, dims, fp, mesh(),
                     )?,
                 };
                 let tree = Arc::try_unwrap(tree)
@@ -304,6 +341,45 @@ impl FmmSolver {
                     counts,
                     stages: Vec::new(),
                     comm_bytes: 0.0,
+                    wire,
+                    ranks: config.ranks,
+                    state: None,
+                    backend: "native",
+                    mode,
+                    problem: Problem {
+                        config: pcfg,
+                        tree,
+                        cut,
+                        assignment,
+                    },
+                    plan,
+                    faults,
+                })
+            }
+            RunMode::Process => {
+                // same per-rank native backend rule as Threaded
+                validate_backend(&config, mode)?;
+                let dims = native_dims(&config);
+                let Problem { config: pcfg, tree, cut, assignment } =
+                    problem;
+                let tree = Arc::new(tree);
+                let (vel, counts, faults, wire) = run_process(
+                    &config,
+                    tree.clone(),
+                    &cut,
+                    &assignment,
+                    dims,
+                    fault_plan.as_ref(),
+                )?;
+                let tree = Arc::try_unwrap(tree)
+                    .expect("process hub returned; no Arc clones remain");
+                Ok(Solution {
+                    // already global input order (rank gather boundary)
+                    vel,
+                    counts,
+                    stages: Vec::new(),
+                    comm_bytes: 0.0,
+                    wire,
                     ranks: config.ranks,
                     state: None,
                     backend: "native",
@@ -341,6 +417,7 @@ impl FmmSolver {
                     counts: res.counts,
                     stages: res.stages,
                     comm_bytes: res.comm_bytes,
+                    wire: StageBytes::default(),
                     ranks: res.ranks,
                     state: None,
                     backend: backend.name(),
@@ -376,6 +453,11 @@ pub struct Solution {
     pub stages: Vec<StageRecord>,
     /// Modeled communication volume in bytes (`Simulated` only).
     pub comm_bytes: f64,
+    /// **Observed** per-stage wire volume from the message substrate
+    /// (`Threaded`/`Process`; zero elsewhere) — the measured
+    /// counterpart of the Eq. 10–12 comm model that `comm_bytes`
+    /// reports.
+    pub wire: StageBytes,
     /// Rank count of the run (1 for `Serial`).
     pub ranks: usize,
     /// The solved expansion state (`Serial` mode only — verification
@@ -395,9 +477,9 @@ pub struct Solution {
     /// of reallocated.
     pub plan: Option<ParallelPlan>,
     /// Fault-injection and recovery accounting from the comm substrate
-    /// (`Threaded` mode; all-zero when chaos is off and in the other
-    /// modes).  `faults.is_quiet()` distinguishes a run that never saw
-    /// a fault from one that recovered transparently.
+    /// (`Threaded`/`Process` modes; all-zero when chaos is off and in
+    /// the other modes).  `faults.is_quiet()` distinguishes a run that
+    /// never saw a fault from one that recovered transparently.
     pub faults: FaultCounters,
 }
 
@@ -475,6 +557,9 @@ mod tests {
         // boundaries differ per mode: per-rank chunking)
         assert_eq!(serial.counts.p2p_pairs, sim.counts.p2p_pairs);
         assert_eq!(serial.counts.m2l, sim.counts.m2l);
+        // the real runtime meters its observed wire volume per stage
+        assert!(threaded.wire.total() > 0.0);
+        assert_eq!(serial.wire.total(), 0.0);
         assert!(sim.makespan() > 0.0);
         let lb = sim.load_balance();
         assert!((0.0..=1.0).contains(&lb), "lb {lb}");
@@ -557,8 +642,8 @@ mod tests {
             backend: "gpu".into(),
             ..small_config()
         };
-        for mode in
-            [RunMode::Serial, RunMode::Threaded, RunMode::Simulated]
+        for mode in [RunMode::Serial, RunMode::Threaded,
+                     RunMode::Process, RunMode::Simulated]
         {
             let err = FmmSolver::from_config(&cfg)
                 .mode(mode)
@@ -610,6 +695,44 @@ mod tests {
                              if key == "chaos"),
                     "{}: {fe}", mode.name());
         }
+    }
+
+    #[test]
+    fn rank_kill_chaos_needs_the_process_mode() {
+        let cfg = RunConfig {
+            chaos: "rank-kill".into(),
+            chaos_seed: 3,
+            ..small_config()
+        };
+        let err = FmmSolver::from_config(&cfg)
+            .mode(RunMode::Threaded)
+            .solve()
+            .unwrap_err();
+        let fe = err
+            .downcast_ref::<FmmError>()
+            .expect("typed config error");
+        assert!(matches!(fe, FmmError::Config { key, .. }
+                         if key == "chaos"),
+                "{fe}");
+        assert!(fe.to_string().contains("process"), "{fe}");
+    }
+
+    #[test]
+    fn process_mode_single_rank_is_bitwise_serial_via_the_facade() {
+        // ranks == 1 exercises the full Process arm without spawning
+        // subprocesses (the in-process mesh fast path); the multi-rank
+        // subprocess path is covered by tests/process_mode.rs against
+        // the real binary
+        let cfg = RunConfig { ranks: 1, ..small_config() };
+        let serial = FmmSolver::from_config(&cfg).solve().unwrap();
+        let process = FmmSolver::from_config(&cfg)
+            .mode(RunMode::Process)
+            .solve()
+            .unwrap();
+        assert_eq!(serial.vel, process.vel);
+        assert_eq!(process.mode, RunMode::Process);
+        assert!(process.faults.is_quiet());
+        assert_eq!(process.wire.total(), 0.0);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! figure series, and the per-step trace of the dynamic
 //! load-balancing time-stepper ([`SimulationTrace`]).
 
-use crate::comm::FaultCounters;
+use crate::comm::{FaultCounters, StageBytes};
 use crate::fmm::OpCounts;
 use crate::sched::StageRecord;
 
@@ -159,6 +159,10 @@ pub struct StepRecord {
     pub makespan: f64,
     /// modeled communication volume of the solve (Simulated mode)
     pub comm_bytes: f64,
+    /// **observed** per-stage wire bytes of the step's solve(s), from
+    /// the message substrate (Threaded/Process modes; zero elsewhere) —
+    /// the measured counterpart of `comm_bytes`
+    pub wire: StageBytes,
     /// operator-application counts of the solve(s)
     pub counts: OpCounts,
     /// per-stage records of the solve (see `coordinator::Solution`)
@@ -185,6 +189,9 @@ pub struct SimulationTrace {
     pub repartitions: usize,
     /// run-total fault/recovery counters (sum of the per-step records)
     pub faults: FaultCounters,
+    /// run-total observed wire bytes per stage (sum of the per-step
+    /// records; Threaded/Process modes)
+    pub wire: StageBytes,
 }
 
 impl SimulationTrace {
@@ -193,6 +200,7 @@ impl SimulationTrace {
             self.repartitions += 1;
         }
         self.faults.merge(&r.faults);
+        self.wire.merge(&r.wire);
         self.steps.push(r);
     }
 
@@ -339,6 +347,9 @@ mod tests {
             step_secs: secs,
             makespan: secs,
             comm_bytes: 0.0,
+            wire: StageBytes {
+                bytes: [step as f64, 0.0, 0.0, 0.0, 0.0],
+            },
             counts: OpCounts::default(),
             stages: Vec::new(),
             lb_predicted_before: 0.5,
@@ -364,6 +375,8 @@ mod tests {
         // per-step fault counters aggregate into the run total
         assert_eq!(t.faults.injected_drops, 3);
         assert_eq!(t.faults.retransmits, 3);
+        // so do the observed wire bytes (0 + 1 + 2 on the halo stage)
+        assert_eq!(t.wire.total(), 3.0);
         let report = t.fault_report();
         assert!(report.contains("injected 3"), "{report}");
         assert!(report.contains("retransmits 3"), "{report}");

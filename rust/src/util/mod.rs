@@ -58,6 +58,26 @@ pub fn position_digest(parts: &[[f64; 3]]) -> u64 {
     h
 }
 
+/// [`position_digest`]'s counterpart for a solve's velocity field:
+/// order-sensitive FNV-1a over the exact `f64::to_bits` little-endian
+/// bytes.  Two runs whose digests agree computed bitwise-identical
+/// velocities for every particle — the single-solve pin the CI uses to
+/// compare execution modes (threaded vs process).
+pub fn velocity_digest(vel: &[[f64; 2]]) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    for v in vel {
+        for c in v {
+            for byte in c.to_bits().to_le_bytes() {
+                h ^= byte as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        }
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -73,6 +93,23 @@ mod tests {
         let a = vec![[2.0, 0.0]];
         let b = vec![[1.0, 0.0]];
         assert!((rel_l2_error(&a, &b) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn velocity_digest_is_order_and_bit_sensitive() {
+        let a = vec![[1.0, 2.0], [3.0, 4.0]];
+        let mut b = a.clone();
+        assert_eq!(velocity_digest(&a), velocity_digest(&b));
+        b.swap(0, 1);
+        assert_ne!(velocity_digest(&a), velocity_digest(&b));
+        let mut c = a.clone();
+        c[0][0] = f64::from_bits(c[0][0].to_bits() ^ 1);
+        assert_ne!(velocity_digest(&a), velocity_digest(&c));
+        assert_ne!(
+            velocity_digest(&[[0.0, 0.0]]),
+            velocity_digest(&[[-0.0, 0.0]])
+        );
+        assert_eq!(velocity_digest(&[]), 0xcbf2_9ce4_8422_2325);
     }
 
     #[test]

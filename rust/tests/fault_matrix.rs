@@ -15,7 +15,8 @@ use std::sync::Arc;
 
 use petfmm::comm::threaded::run_threaded_on_faulty;
 use petfmm::comm::transport::Body;
-use petfmm::comm::{FaultPlan, FaultProfile, Message, Packet, Stage};
+use petfmm::comm::{run_on_mesh, tcp_mesh, FaultPlan, FaultProfile,
+                   Message, Packet, Stage};
 use petfmm::config::RunConfig;
 use petfmm::coordinator::{native_dims, prepare};
 use petfmm::fmm::BiotSavart2D;
@@ -152,6 +153,76 @@ fn fault_grid_recovers_bitwise_at_one_two_and_eight_ranks() {
                     assert_eq!(injected, 0,
                                "rank-1 run has no wire to fault");
                 }
+            }
+        }
+    }
+}
+
+#[test]
+fn fault_grid_recovers_bitwise_on_the_socket_substrate() {
+    // the same {class} x {stage} grid, but over the loopback-TCP
+    // hub/worker mesh — the wire `--mode process` runs.  Faults here
+    // traverse real socket framing (length prefix, route byte, codec)
+    // before the retry machinery sees them.
+    for ranks in [2usize, 4] {
+        let cfg = RunConfig {
+            particles: 250,
+            levels: 4,
+            cut_level: 2,
+            terms: 8,
+            sigma: 0.01,
+            ranks,
+            distribution: "clustered".into(),
+            ..Default::default()
+        };
+        let problem = prepare(&cfg).unwrap();
+        let dims = native_dims(&cfg);
+        let kernel = BiotSavart2D::new(cfg.sigma);
+        let tree = Arc::new(problem.tree);
+
+        let (baseline, _, quiet, wire) = run_on_mesh(
+            kernel.clone(), tree.clone(), &problem.cut,
+            &problem.assignment, dims, None,
+            tcp_mesh(ranks).expect("loopback mesh"))
+            .unwrap();
+        assert!(quiet.is_quiet(),
+                "no fault plan must mean no fault activity");
+        assert!(wire.total() > 0.0,
+                "a multi-rank socket run must meter wire bytes");
+
+        for (class, profile) in CLASSES {
+            for stage in STAGES {
+                let mut recovered = false;
+                for epoch in 0..6u64 {
+                    let plan =
+                        FaultPlan::targeted(stage, profile, 0xC0FFEE)
+                            .with_epoch(epoch);
+                    match run_on_mesh(
+                        kernel.clone(), tree.clone(), &problem.cut,
+                        &problem.assignment, dims, Some(&plan),
+                        tcp_mesh(ranks).expect("loopback mesh"))
+                    {
+                        Ok((vel, ..)) => {
+                            assert_eq!(
+                                vel, baseline,
+                                "{class}@{} ranks={ranks} epoch={epoch} \
+                                 completed with wrong bits on sockets",
+                                stage.as_str());
+                            recovered = true;
+                            break;
+                        }
+                        Err(e) => {
+                            assert!(e.is_recoverable(),
+                                    "{class}@{} ranks={ranks}: \
+                                     non-recoverable {e}",
+                                    stage.as_str());
+                        }
+                    }
+                }
+                assert!(recovered,
+                        "{class}@{} ranks={ranks}: no epoch in the \
+                         retry budget recovered on sockets",
+                        stage.as_str());
             }
         }
     }

@@ -1,0 +1,184 @@
+//! Process-mode integration: real `petfmm worker` subprocesses over
+//! loopback TCP.  Pins the ISSUE's acceptance bars:
+//!
+//!   * a 4-rank `--mode process` solve is bitwise-identical to
+//!     `--mode threaded` for every kernel and both tree modes,
+//!   * a multi-step simulate trajectory digest matches threaded,
+//!   * `--chaos-profile rank-kill` completes through the survivor
+//!     ladder with a trajectory digest equal to the quiet run, and
+//!   * workers cannot outlive a dead coordinator (orphan rule).
+//!
+//! The worker binary is the crate's own `petfmm` bin, resolved via
+//! `CARGO_BIN_EXE_petfmm` and handed to the launcher through
+//! `PETFMM_WORKER_BIN`.
+
+use std::io::Read;
+use std::net::TcpListener;
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
+
+use petfmm::config::RunConfig;
+use petfmm::coordinator::process::WORKER_BIN_ENV;
+use petfmm::coordinator::{FmmSolver, RunMode, Simulation, Solution};
+use petfmm::fmm::KernelSpec;
+
+/// Point the launcher at the freshly built `petfmm` binary (the test
+/// harness itself is not dispatchable as a worker).
+fn use_test_binary() {
+    std::env::set_var(WORKER_BIN_ENV, env!("CARGO_BIN_EXE_petfmm"));
+}
+
+fn base_config() -> RunConfig {
+    RunConfig {
+        particles: 250,
+        levels: 4,
+        cut_level: 2,
+        terms: 8,
+        sigma: 0.02,
+        ranks: 4,
+        distribution: "clustered".into(),
+        par_threads: 1,
+        steps: 3,
+        dt: 1e-3,
+        ..Default::default()
+    }
+}
+
+fn solve(cfg: &RunConfig, mode: RunMode) -> Solution {
+    FmmSolver::from_config(cfg)
+        .mode(mode)
+        .solve()
+        .unwrap_or_else(|e| panic!("{} solve failed: {e:#}",
+                                   mode.name()))
+}
+
+#[test]
+fn four_rank_process_solve_is_bitwise_threaded_for_every_kernel() {
+    use_test_binary();
+    for kernel in KernelSpec::ALL {
+        for tree in ["uniform", "adaptive"] {
+            let cfg = RunConfig {
+                kernel,
+                tree: tree.into(),
+                leaf_capacity: 16,
+                ..base_config()
+            };
+            let t = solve(&cfg, RunMode::Threaded);
+            let p = solve(&cfg, RunMode::Process);
+            assert_eq!(p.vel, t.vel,
+                       "{kernel:?}/{tree}: process diverged from \
+                        threaded");
+            assert!(p.faults.is_quiet(),
+                    "{kernel:?}/{tree}: quiet run counted faults");
+            // both modes meter real wire traffic, and the same
+            // protocol moves the same payload bytes over either wire
+            assert!(t.wire.total() > 0.0);
+            assert!(p.wire.total() >= t.wire.total(),
+                    "{kernel:?}/{tree}: socket framing can only add \
+                     to the payload volume, never lose it");
+        }
+    }
+}
+
+#[test]
+fn process_simulation_trajectory_matches_threaded() {
+    use_test_binary();
+    let cfg = base_config();
+    let digest = |mode: RunMode| {
+        let mut sim = Simulation::new(&cfg).unwrap().mode(mode);
+        sim.run_steps(3).unwrap();
+        (sim.position_digest(), sim.trace().wire.total())
+    };
+    let (threaded, wire_t) = digest(RunMode::Threaded);
+    let (process, wire_p) = digest(RunMode::Process);
+    assert_eq!(process, threaded,
+               "process trajectory diverged from threaded");
+    assert!(wire_t > 0.0 && wire_p > 0.0,
+            "wired simulations must meter wire bytes");
+}
+
+#[test]
+fn rank_kill_chaos_recovers_to_the_quiet_trajectory() {
+    use_test_binary();
+    let noisy = RunConfig {
+        chaos: "rank-kill".into(),
+        chaos_seed: 5,
+        ..base_config()
+    };
+    // the kill coordinates are a pure function of (seed, ranks): fire
+    // it for certain by running one step past the doomed epoch (the
+    // ladder consumes one epoch per clean step, so step `epoch` is
+    // the one the victim dies in)
+    let plan = noisy.fault_plan().expect("rank-kill parses");
+    let (epoch, victim, _stage) =
+        plan.kill_coordinates(noisy.ranks).expect("ranks >= 2");
+    assert!(victim > 0, "rank 0 is the coordinator, never the victim");
+    let steps = epoch as usize + 1;
+
+    let mut sim =
+        Simulation::new(&noisy).unwrap().mode(RunMode::Process);
+    sim.run_steps(steps).unwrap();
+    let f = sim.trace().faults;
+    assert!(f.rank_failures >= 1,
+            "the kill must surface as a typed rank failure: {f:?}");
+    assert!(f.survivor_repartitions >= 1,
+            "the survivors arm must refine the partition: {f:?}");
+    assert!(f.step_retries >= 1,
+            "the doomed step must be retried: {f:?}");
+
+    let quiet = base_config();
+    let mut base =
+        Simulation::new(&quiet).unwrap().mode(RunMode::Process);
+    base.run_steps(steps).unwrap();
+    assert!(base.trace().faults.is_quiet());
+    assert_eq!(sim.position_digest(), base.position_digest(),
+               "rank-kill recovery must be bitwise-invisible");
+}
+
+#[test]
+fn orphaned_worker_exits_when_the_coordinator_dies() {
+    // satellite 6: a worker whose rendezvous connection closes must
+    // tear itself down rather than linger.  Simulate a coordinator
+    // crash by accepting the worker's connection and dropping it.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let mut child = Command::new(env!("CARGO_BIN_EXE_petfmm"))
+        .arg("worker")
+        .arg("--connect")
+        .arg(addr.to_string())
+        .arg("--rank")
+        .arg("1")
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap();
+    // accept the HELLO side of the rendezvous, then "crash": drop the
+    // socket (and the listener) without ever sending WELCOME
+    let (stream, _) = listener.accept().unwrap();
+    drop(stream);
+    drop(listener);
+
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let status = loop {
+        if let Some(s) = child.try_wait().unwrap() {
+            break s;
+        }
+        if Instant::now() > deadline {
+            child.kill().ok();
+            panic!("worker outlived the dead coordinator");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert!(!status.success(),
+            "an orphaned worker must exit with an error status");
+    let mut err = String::new();
+    child
+        .stderr
+        .take()
+        .expect("stderr piped")
+        .read_to_string(&mut err)
+        .unwrap();
+    assert!(err.contains("worker"),
+            "the teardown should say who died: {err:?}");
+}

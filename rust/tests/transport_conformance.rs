@@ -1,0 +1,193 @@
+//! Transport conformance: one contract, two substrates.  Every test
+//! here runs identically over the in-process `ChannelTransport` mpsc
+//! mesh and the `tcp_mesh` socket stack (rank-0 hub + workers over
+//! loopback TCP — the exact stack `--mode process` runs, minus the
+//! subprocess boundary).  The final pin drives the *whole* parallel
+//! protocol (`run_on_mesh`) over both substrates at 2 and 4 ranks and
+//! demands bitwise-identical velocities.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use petfmm::comm::{channel_mesh, run_on_mesh, tcp_mesh, Message, Packet,
+                   Stage, Transport};
+use petfmm::config::RunConfig;
+use petfmm::coordinator::{native_dims, prepare};
+use petfmm::fmm::{BiotSavart2D, Gravity2D, LogPotential2D};
+use petfmm::quadtree::BoxId;
+
+fn boxed_channel_mesh(ranks: usize) -> Vec<Box<dyn Transport>> {
+    channel_mesh(ranks)
+        .into_iter()
+        .map(|c| Box::new(c) as Box<dyn Transport>)
+        .collect()
+}
+
+/// Each substrate under test, by name (the name feeds assertion
+/// messages so a failure says which wire broke the contract).
+fn meshes(ranks: usize) -> Vec<(&'static str, Vec<Box<dyn Transport>>)> {
+    vec![
+        ("channel", boxed_channel_mesh(ranks)),
+        ("socket", tcp_mesh(ranks).expect("loopback mesh")),
+    ]
+}
+
+fn msg(tag: f64) -> Message {
+    Message::Multipole {
+        boxid: BoxId::new(2, 1, 1),
+        coeffs: vec![tag, -tag, 0.5 * tag],
+    }
+}
+
+fn far() -> Option<Instant> {
+    Some(Instant::now() + Duration::from_secs(10))
+}
+
+/// The conformance contract every [`Transport`] must satisfy.
+fn check_contract(label: &str, mut mesh: Vec<Box<dyn Transport>>) {
+    let ranks = mesh.len();
+    // identity: each endpoint knows its rank and the world size
+    for (r, t) in mesh.iter().enumerate() {
+        assert_eq!(t.rank(), r, "{label}: rank()");
+        assert_eq!(t.ranks(), ranks, "{label}: ranks()");
+    }
+    // worker -> rank 0: delivered once, source-tagged, bit-exact
+    for src in 1..ranks {
+        let pkt = Packet::seal(src as u64, Stage::Halo, msg(src as f64));
+        mesh[src].send(0, pkt.clone()).unwrap();
+        let (from, got) =
+            mesh[0].recv(far()).unwrap().expect("delivery to rank 0");
+        assert_eq!(from, src, "{label}: source tag");
+        assert_eq!(got, pkt, "{label}: payload bits");
+        assert!(got.verify(), "{label}: checksum survived the wire");
+    }
+    // rank 0 -> worker, same contract
+    for dst in 1..ranks {
+        let pkt = Packet::seal(100 + dst as u64, Stage::Exchange,
+                               msg(-(dst as f64)));
+        mesh[0].send(dst, pkt.clone()).unwrap();
+        let (from, got) = mesh[dst]
+            .recv(far())
+            .unwrap()
+            .expect("delivery to worker");
+        assert_eq!(from, 0, "{label}: source tag");
+        assert_eq!(got, pkt, "{label}: payload bits");
+    }
+    // an expired deadline on an idle mesh is Ok(None), never an error
+    for r in 0..ranks.min(2) {
+        let soon = Some(Instant::now() + Duration::from_millis(30));
+        assert!(mesh[r].recv(soon).unwrap().is_none(),
+                "{label}: rank {r} deadline expiry");
+    }
+    // faithful transports inject nothing
+    for (r, t) in mesh.iter_mut().enumerate() {
+        assert!(t.take_counters().is_quiet(),
+                "{label}: rank {r} counted faults on a quiet wire");
+    }
+    // worker -> worker: rank 0 pumps concurrently (the protocol's hub
+    // rank always does); a star substrate forwards peer frames as a
+    // side effect of that wait, a full mesh ignores it
+    if ranks >= 3 {
+        let mut hub = mesh.remove(0);
+        let pump = thread::spawn(move || {
+            let got = hub
+                .recv(Some(Instant::now() + Duration::from_secs(5)))
+                .unwrap();
+            assert!(got.is_none(), "nothing was addressed to rank 0");
+            hub
+        });
+        let pkt = Packet::seal(7, Stage::Gather, msg(3.5));
+        mesh[0].send(2, pkt.clone()).unwrap(); // mesh[0] is rank 1 now
+        let (from, got) = mesh[1] // rank 2
+            .recv(far())
+            .unwrap()
+            .expect("peer routing");
+        assert_eq!(from, 1, "{label}: routed source tag");
+        assert_eq!(got, pkt, "{label}: routed payload bits");
+        pump.join().unwrap();
+    }
+}
+
+#[test]
+fn both_substrates_satisfy_the_transport_contract() {
+    for ranks in [2usize, 4] {
+        for (label, mesh) in meshes(ranks) {
+            check_contract(label, mesh);
+        }
+    }
+}
+
+fn small_config(ranks: usize, tree: &str) -> RunConfig {
+    RunConfig {
+        particles: 250,
+        levels: 4,
+        cut_level: 2,
+        terms: 8,
+        sigma: 0.01,
+        ranks,
+        distribution: "clustered".into(),
+        tree: tree.into(),
+        leaf_capacity: 16,
+        ..Default::default()
+    }
+}
+
+fn solve_on(cfg: &RunConfig, mesh: Vec<Box<dyn Transport>>)
+    -> Vec<[f64; 2]> {
+    let problem = prepare(cfg).unwrap();
+    let dims = native_dims(cfg);
+    let tree = Arc::new(problem.tree);
+    let (vel, _, faults, wire) = run_on_mesh(
+        BiotSavart2D::new(cfg.sigma), tree, &problem.cut,
+        &problem.assignment, dims, None, mesh)
+        .unwrap();
+    assert!(faults.is_quiet(), "quiet run must not count faults");
+    if cfg.ranks > 1 {
+        assert!(wire.total() > 0.0,
+                "a multi-rank run must move wire bytes");
+    }
+    vel
+}
+
+#[test]
+fn protocol_is_bitwise_identical_across_substrates() {
+    for ranks in [2usize, 4] {
+        for tree in ["uniform", "adaptive"] {
+            let cfg = small_config(ranks, tree);
+            let on_channels = solve_on(&cfg, boxed_channel_mesh(ranks));
+            let on_sockets =
+                solve_on(&cfg, tcp_mesh(ranks).expect("loopback mesh"));
+            assert_eq!(on_channels, on_sockets,
+                       "ranks={ranks} tree={tree}: socket substrate \
+                        diverged from the channel substrate");
+        }
+    }
+}
+
+#[test]
+fn every_kernel_is_bitwise_identical_across_substrates() {
+    let cfg = small_config(4, "uniform");
+    let problem = prepare(&cfg).unwrap();
+    let dims = native_dims(&cfg);
+    let tree = Arc::new(problem.tree);
+    // generic over the kernel seam: run each physics both ways
+    macro_rules! pin {
+        ($kernel:expr, $name:literal) => {{
+            let a = run_on_mesh($kernel, tree.clone(), &problem.cut,
+                                &problem.assignment, dims, None,
+                                boxed_channel_mesh(4))
+                .unwrap()
+                .0;
+            let b = run_on_mesh($kernel, tree.clone(), &problem.cut,
+                                &problem.assignment, dims, None,
+                                tcp_mesh(4).expect("loopback mesh"))
+                .unwrap()
+                .0;
+            assert_eq!(a, b, concat!($name, ": substrate divergence"));
+        }};
+    }
+    pin!(BiotSavart2D::new(cfg.sigma), "biot-savart");
+    pin!(LogPotential2D, "log-potential");
+    pin!(Gravity2D::default(), "gravity");
+}
