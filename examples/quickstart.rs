@@ -11,7 +11,7 @@
 //! the same solve runs below with the gravity kernel.
 
 use petfmm::config::RunConfig;
-use petfmm::coordinator::{FmmSolver, RunMode};
+use petfmm::coordinator::{FmmSession, FmmSolver, RunMode};
 use petfmm::fmm::KernelSpec;
 use petfmm::util::{max_abs_error, rel_l2_error};
 
@@ -65,6 +65,18 @@ fn main() -> anyhow::Result<()> {
     let gexact = grav.direct_oracle();
     println!("gravity kernel: rel-L2 error {:.3e} vs its oracle",
              rel_l2_error(&grav.vel, &gexact));
+
+    // 4. many evaluations, one build: the resident session keeps the
+    //    tree + operator tables + expansion state hot and answers at
+    //    arbitrary target points (DESIGN.md §15).  `petfmm serve` /
+    //    `petfmm query` expose the same object over loopback TCP.
+    let mut session = FmmSession::new(&config)?;
+    let probes = [[0.25, 0.25], [0.5, 0.5], [0.75, 0.25]];
+    let t0 = std::time::Instant::now();
+    let (vel, manifest) = session.query(1, &probes)?;
+    session.record(&manifest);
+    println!("session: {} probe points in {:.6}s (vs {t_fmm:.3}s cold)",
+             vel.len(), t0.elapsed().as_secs_f64());
 
     // Every other execution mode is the same one-builder-call swap and
     // returns bitwise-identical velocities: `RunMode::Threaded` (one OS

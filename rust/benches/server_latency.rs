@@ -1,0 +1,118 @@
+//! Bench: resident server — cold one-shot solve vs warm session query.
+//!
+//! The point of `petfmm serve` (DESIGN.md §15) is amortization: the
+//! tree build, graph partition, operator tables and expansion sweep
+//! are paid once, after which a query at a batch of targets costs only
+//! leaf location + cached L2P + the CSR near-field slices.  This bench
+//! measures both sides of that trade on the quickstart-sized workload:
+//!
+//! * **cold** — `FmmSession::new` + one query: what a one-shot process
+//!   pays for the same answer (median of a few runs), and
+//! * **warm** — per-query latency on the hot session (p50/p99,
+//!   queries/sec, targets/sec).
+//!
+//! Results go to `BENCH_server.json`; CI gates `cold_vs_warm >= 5`.
+//! `PETFMM_BENCH_FAST=1` shrinks the workload for smoke runs.
+
+use std::time::Instant;
+
+use petfmm::bench::{bench_header, fmt_time, jnum, jobj, jstr,
+                    write_bench_json};
+use petfmm::config::RunConfig;
+use petfmm::coordinator::FmmSession;
+use petfmm::proptest::Gen;
+
+/// Nearest-rank percentile of an ascending-sorted sample vector.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+fn main() {
+    bench_header("Resident server: cold solve vs warm query latency");
+    let fast = std::env::var("PETFMM_BENCH_FAST").is_ok();
+    let (n, levels, queries) =
+        if fast { (2_000usize, 4u8, 40usize) } else { (10_000, 5, 200) };
+    let cfg = RunConfig {
+        particles: n,
+        levels,
+        terms: 17,
+        sigma: 0.005,
+        distribution: "uniform".into(),
+        par_threads: 1,
+        ..Default::default()
+    };
+
+    let batch = 64usize;
+    let mut g = Gen::new(77);
+    let targets: Vec<[f64; 2]> = (0..batch)
+        .map(|_| [g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0)])
+        .collect();
+
+    // cold: prepare (workload → tree → cut → partition) + backend
+    // construction + full expansion sweep + the target evaluation
+    let cold_runs = if fast { 2 } else { 3 };
+    let mut cold = Vec::with_capacity(cold_runs);
+    for _ in 0..cold_runs {
+        let t0 = Instant::now();
+        let mut s = FmmSession::new(&cfg).unwrap();
+        let (v, _) = s.query(1, &targets).unwrap();
+        std::hint::black_box(v);
+        cold.push(t0.elapsed().as_secs_f64());
+    }
+    cold.sort_by(f64::total_cmp);
+    let cold_s = cold[cold.len() / 2];
+    println!("cold solve + query ({n} particles, L={levels}, p=17, \
+              {batch} targets): {}", fmt_time(cold_s));
+
+    // warm: the resident session answers the same batch over and over
+    let mut session = FmmSession::new(&cfg).unwrap();
+    let (v, m) = session.query(0, &targets).unwrap(); // warmup
+    session.record(&m);
+    std::hint::black_box(v);
+    let mut lat = Vec::with_capacity(queries);
+    let t_all = Instant::now();
+    for i in 0..queries {
+        let t0 = Instant::now();
+        let (v, m) = session.query(i as u64 + 1, &targets).unwrap();
+        lat.push(t0.elapsed().as_secs_f64());
+        session.record(&m);
+        std::hint::black_box(v);
+    }
+    let total = t_all.elapsed().as_secs_f64();
+    lat.sort_by(f64::total_cmp);
+    let p50 = percentile(&lat, 0.50);
+    let p99 = percentile(&lat, 0.99);
+    let qps = queries as f64 / total;
+    let ratio = cold_s / p50;
+    println!("warm query x{queries}: p50 {}, p99 {}, {qps:.1} \
+              queries/s ({:.0} targets/s)",
+             fmt_time(p50), fmt_time(p99), qps * batch as f64);
+    println!("cold / warm-p50 = {ratio:.1}x (CI gate: >= 5x)");
+    let stats = session.stats();
+    assert_eq!(stats.queries, queries as u64 + 1);
+    assert_eq!(stats.cache_misses, 0, "no updates were staged");
+    println!("session stats: {}", stats.to_json());
+
+    let body = jobj(&[
+        ("bench", jstr("server_latency")),
+        ("fast_mode", if fast { "true".into() } else { "false".into() }),
+        ("config", jobj(&[
+            ("particles", jnum(n as f64)),
+            ("levels", jnum(f64::from(levels))),
+            ("terms", jnum(17.0)),
+            ("targets_per_query", jnum(batch as f64)),
+            ("queries", jnum(queries as f64)),
+        ])),
+        ("cold_solve_s", jnum(cold_s)),
+        ("warm_p50_s", jnum(p50)),
+        ("warm_p99_s", jnum(p99)),
+        ("queries_per_sec", jnum(qps)),
+        ("targets_per_sec", jnum(qps * batch as f64)),
+        ("cold_vs_warm", jnum(ratio)),
+    ]);
+    write_bench_json("BENCH_server.json", &body);
+}

@@ -16,9 +16,10 @@ pub use message::{Message, PARTICLE_WIRE_BYTES};
 pub use network::NetworkModel;
 pub use overlap::{interaction_overlap, neighbor_overlap, owner_of,
                   OverlapMap};
-pub use socket::{tcp_mesh, Frame, FrameReader, HubTransport, KillSwitch,
-                 WorkerTransport, KILL_EXIT_CODE, MAX_FRAME,
-                 WIRE_VERSION};
+pub use socket::{decode_frame, encode_frame, frame_name, tcp_mesh,
+                 write_frame, Frame, FrameReader, HubTransport,
+                 KillSwitch, WorkerTransport, KILL_EXIT_CODE,
+                 MAX_FRAME, WIRE_VERSION};
 pub use threaded::run_on_mesh;
 pub use transport::{channel_mesh, ChannelTransport, Clock, CommError,
                     FakeClock, FaultCounters, Packet, ReliableEndpoint,

@@ -59,6 +59,14 @@ const KIND_WELCOME: u8 = 1;
 const KIND_BOOT: u8 = 2;
 const KIND_PACKET: u8 = 3;
 const KIND_BYE: u8 = 4;
+// resident-server request/reply kinds (DESIGN.md §15) — same framing,
+// same codec discipline, spoken between `petfmm query` and
+// `petfmm serve` instead of between hub and workers
+const KIND_QUERY: u8 = 5;
+const KIND_RESULT: u8 = 6;
+const KIND_UPDATE: u8 = 7;
+const KIND_STATS: u8 = 8;
+const KIND_SHUTDOWN: u8 = 9;
 
 /// Offset of a PACKET frame's route byte within the payload
 /// (`[version][kind][route]...`) — the one byte the hub rewrites when
@@ -93,15 +101,41 @@ pub enum Frame {
         wire: StageBytes,
         counts: OpCounts,
     },
+    /// Client → server: evaluate the session's field at arbitrary
+    /// target points.  `id` is echoed in the [`Frame::QueryResult`] so
+    /// a client can pipeline requests.
+    Query { id: u64, targets: Vec<[f64; 2]> },
+    /// Server → client: one `[u, v]` per query target, exact bits
+    /// (`f64::to_bits` on the wire, like everything else).  Also the
+    /// ack for [`Frame::Update`] and [`Frame::Shutdown`], with an
+    /// empty `vel`.
+    QueryResult { id: u64, vel: Vec<[f64; 2]> },
+    /// Client → server: replace the session's source particles
+    /// (moved / re-weighted set).  The rebuild is staged lazily and
+    /// amortized into the next query (DESIGN.md §15).
+    Update { id: u64, particles: Vec<[f64; 3]> },
+    /// Client → server: request the session's aggregate request
+    /// metrics.  Sent with an empty `json`; returned with it filled.
+    Stats { json: String },
+    /// Client → server: drain and exit cleanly (same path as
+    /// SIGINT/SIGTERM).
+    Shutdown,
 }
 
-fn frame_name(f: &Frame) -> &'static str {
+/// The frame's wire-protocol name (diagnostics: the server's
+/// unexpected-frame log line, codec error messages).
+pub fn frame_name(f: &Frame) -> &'static str {
     match f {
         Frame::Hello { .. } => "HELLO",
         Frame::Welcome { .. } => "WELCOME",
         Frame::Boot { .. } => "BOOT",
         Frame::Packet { .. } => "PACKET",
         Frame::Bye { .. } => "BYE",
+        Frame::Query { .. } => "QUERY",
+        Frame::QueryResult { .. } => "RESULT",
+        Frame::Update { .. } => "UPDATE",
+        Frame::Stats { .. } => "STATS",
+        Frame::Shutdown => "SHUTDOWN",
     }
 }
 
@@ -452,6 +486,44 @@ pub fn encode_frame(f: &Frame) -> Vec<u8> {
             }
             e.buf
         }
+        Frame::Query { id, targets } => {
+            let mut e = Enc::new(KIND_QUERY);
+            e.u64(*id);
+            e.u32(targets.len() as u32);
+            for t in targets {
+                e.f64(t[0]);
+                e.f64(t[1]);
+            }
+            e.buf
+        }
+        Frame::QueryResult { id, vel } => {
+            let mut e = Enc::new(KIND_RESULT);
+            e.u64(*id);
+            e.u32(vel.len() as u32);
+            for v in vel {
+                e.f64(v[0]);
+                e.f64(v[1]);
+            }
+            e.buf
+        }
+        Frame::Update { id, particles } => {
+            let mut e = Enc::new(KIND_UPDATE);
+            e.u64(*id);
+            e.u32(particles.len() as u32);
+            for p in particles {
+                for c in p {
+                    e.f64(*c);
+                }
+            }
+            e.buf
+        }
+        Frame::Stats { json } => {
+            let mut e = Enc::new(KIND_STATS);
+            e.u32(json.len() as u32);
+            e.buf.extend_from_slice(json.as_bytes());
+            e.buf
+        }
+        Frame::Shutdown => Enc::new(KIND_SHUTDOWN).buf,
     }
 }
 
@@ -543,6 +615,48 @@ pub fn decode_frame(payload: &[u8]) -> Result<Frame, CommError> {
             };
             Frame::Bye { faults, wire, counts }
         }
+        KIND_QUERY => {
+            let id = d.u64("query id")?;
+            let n = d.count(16, "target count")?;
+            let mut targets = Vec::with_capacity(n);
+            for _ in 0..n {
+                targets.push([d.f64("target x")?, d.f64("target y")?]);
+            }
+            Frame::Query { id, targets }
+        }
+        KIND_RESULT => {
+            let id = d.u64("result id")?;
+            let n = d.count(16, "velocity count")?;
+            let mut vel = Vec::with_capacity(n);
+            for _ in 0..n {
+                vel.push([d.f64("velocity u")?, d.f64("velocity v")?]);
+            }
+            Frame::QueryResult { id, vel }
+        }
+        KIND_UPDATE => {
+            let id = d.u64("update id")?;
+            let n = d.count(24, "update particle count")?;
+            let mut particles = Vec::with_capacity(n);
+            for _ in 0..n {
+                particles.push([
+                    d.f64("update x")?,
+                    d.f64("update y")?,
+                    d.f64("update gamma")?,
+                ]);
+            }
+            Frame::Update { id, particles }
+        }
+        KIND_STATS => {
+            let len = d.count(1, "stats length")?;
+            let bytes = d.take(len, "stats json")?;
+            let json = std::str::from_utf8(bytes)
+                .map_err(|_| {
+                    codec_err("stats json is not utf-8".to_string())
+                })?
+                .to_string();
+            Frame::Stats { json }
+        }
+        KIND_SHUTDOWN => Frame::Shutdown,
         k => return Err(codec_err(format!("unknown frame kind {k}"))),
     };
     d.finish("frame")?;
@@ -1014,7 +1128,7 @@ mod tests {
     }
 
     fn gen_frame(g: &mut Gen) -> Frame {
-        match g.usize_in(0, 4) {
+        match g.usize_in(0, 9) {
             0 => Frame::Hello { rank: g.usize_in(0, 255) },
             1 => Frame::Welcome {
                 world: g.usize_in(1, 255),
@@ -1045,7 +1159,7 @@ mod tests {
                 };
                 Frame::Packet { route: g.usize_in(0, 255), pkt }
             }
-            _ => {
+            4 => {
                 let faults = FaultCounters {
                     injected_drops: g.u64() % 100,
                     retransmits: g.u64() % 100,
@@ -1064,6 +1178,35 @@ mod tests {
                 };
                 Frame::Bye { faults, wire, counts }
             }
+            5 => Frame::Query {
+                id: g.u64(),
+                targets: (0..g.usize_in(0, 25))
+                    .map(|_| [g.f64_in(-2.0, 2.0), g.f64_in(-2.0, 2.0)])
+                    .collect(),
+            },
+            6 => Frame::QueryResult {
+                id: g.u64(),
+                vel: (0..g.usize_in(0, 25))
+                    .map(|_| [g.normal(), g.normal()])
+                    .collect(),
+            },
+            7 => Frame::Update {
+                id: g.u64(),
+                particles: (0..g.usize_in(0, 20))
+                    .map(|_| {
+                        [g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0),
+                         g.normal()]
+                    })
+                    .collect(),
+            },
+            8 => Frame::Stats {
+                json: if g.bool() {
+                    String::new()
+                } else {
+                    format!("{{\"queries\": {}}}", g.u64() % 1000)
+                },
+            },
+            _ => Frame::Shutdown,
         }
     }
 
@@ -1142,10 +1285,12 @@ mod tests {
         // [checksum u64][body tag][msg tag] = offset 22; corrupt ix
         bytes[23] = 0xff;
         assert!(decode_frame(&bytes).is_err());
-        // random tails must decode or error, never panic
+        // random tails must decode or error, never panic — the kind
+        // range deliberately overshoots the valid 0..=9 so unknown
+        // kinds stay fuzzed too
         check("garbage safety", 256, |g| {
             let n = g.usize_in(0, 64);
-            let mut buf = vec![WIRE_VERSION, g.usize_in(0, 6) as u8];
+            let mut buf = vec![WIRE_VERSION, g.usize_in(0, 11) as u8];
             for _ in 0..n {
                 buf.push(g.u64() as u8);
             }

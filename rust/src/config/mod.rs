@@ -21,7 +21,7 @@ const VALID_KEYS: &[&str] = &[
     "backend", "seed", "artifacts", "par-threads|threads", "steps",
     "dt", "rebalance-threshold", "rebalance", "integrator",
     "tree", "leaf-capacity|capacity", "chaos|chaos-profile",
-    "chaos-seed",
+    "chaos-seed", "serve-port|port",
 ];
 
 /// Full run configuration for the coordinator.
@@ -84,6 +84,10 @@ pub struct RunConfig {
     pub chaos: String,
     /// seed of the deterministic fault schedule (`--chaos-seed`)
     pub chaos_seed: u64,
+    /// TCP port for `petfmm serve` / the `query` client (loopback
+    /// only); 0 asks the OS for an ephemeral port, which `serve`
+    /// prints on stdout
+    pub serve_port: u16,
 }
 
 impl Default for RunConfig {
@@ -112,6 +116,7 @@ impl Default for RunConfig {
             leaf_capacity: 32,
             chaos: "off".into(),
             chaos_seed: 0,
+            serve_port: 0,
         }
     }
 }
@@ -245,6 +250,9 @@ impl RunConfig {
             "chaos-seed" | "chaos_seed" => {
                 self.chaos_seed = value.parse()?
             }
+            "serve-port" | "serve_port" | "port" => {
+                self.serve_port = value.parse()?
+            }
             _ => bail!(
                 "unknown key (valid keys: {})",
                 VALID_KEYS.join(", ")
@@ -321,7 +329,7 @@ impl RunConfig {
              artifacts = {}\npar-threads = {}\nsteps = {}\ndt = {}\n\
              rebalance-threshold = {}\nrebalance = {}\n\
              integrator = {}\ntree = {}\nleaf-capacity = {}\n\
-             chaos = {}\nchaos-seed = {}\n",
+             chaos = {}\nchaos-seed = {}\nserve-port = {}\n",
             self.particles,
             self.levels,
             self.cut_level,
@@ -345,6 +353,7 @@ impl RunConfig {
             self.leaf_capacity,
             self.chaos,
             self.chaos_seed,
+            self.serve_port,
         )
     }
 
@@ -566,7 +575,7 @@ mod tests {
              network = ethernet\ndist = clustered\nseed = 42\n\
              threads = 2\nsteps = 13\nrebalance = off\n\
              integrator = rk2\ntree = adaptive\nleaf-capacity = 24\n\
-             chaos = lossy\nchaos-seed = 99\n",
+             chaos = lossy\nchaos-seed = 99\nserve-port = 4810\n",
         )
         .unwrap();
         c.sigma = 0.1 + 0.2; // not exactly 0.3

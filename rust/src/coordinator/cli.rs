@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   run        one FMM solve, serial + parallel-sim, accuracy + timings
 //!   simulate   multi-step vortex run with model-driven rebalancing
+//!   serve      resident solver service over loopback TCP (§15)
+//!   query      client for a running serve (field eval / stats / stop)
 //!   scale      the §7 strong-scaling experiment (Figs. 6–9 tables)
 //!   partition  partition quality + Fig. 5-style map per strategy
 //!   model      §5 model tables (work, comm, memory, Eq. 10 fit)
@@ -12,9 +14,11 @@
 use anyhow::{anyhow, bail, Result};
 
 use super::driver::{self, make_backend};
+use super::server::{self, ServeClient};
 use super::simulation::Simulation;
 use super::solver::{FmmSolver, RunMode};
 use crate::config::RunConfig;
+use crate::error::FmmError;
 use crate::metrics::ScalingSeries;
 use crate::model::{serial_memory, CommEstimator, WorkEstimator};
 use crate::partition::Strategy;
@@ -33,6 +37,13 @@ COMMANDS
              convect, rebuild the tree in place, re-run the work model,
              and repartition (warm-start) when the predicted LB(P)
              min/max ratio drops below --rebalance-threshold
+  serve      resident solver service: build the tree and expansion
+             state once, then answer batched field-evaluation requests
+             over loopback TCP until SIGINT/SIGTERM or a query
+             --shutdown (DESIGN.md §15)
+  query      client for a running serve: evaluate the config workload's
+             positions (digest-comparable with a cold `run`), or fetch
+             --stats / request --shutdown
   scale      strong scaling over --ranks-list (default 1,4,8,16,32,64)
   partition  compare partitioning strategies on the current workload
   model      print the §5 analytical model tables
@@ -54,8 +65,15 @@ COMMON FLAGS (defaults in brackets)
               run and simulate only; `process` launches one worker
               OS process per rank over localhost TCP (DESIGN.md §14)
               and is bitwise-identical to the other modes
+  --format F        [text|json] machine-readable output
+              (run, simulate, query)
   scale only: --ranks-list 1,4,8,16,32,64
   run only:   --dump FILE (write verification file)
+  serve/query: --port N [0]  loopback TCP port (serve: 0 = ephemeral,
+              printed as `listening on 127.0.0.1:PORT`; query: must
+              name the served port)
+  query only: --stats (print the server's request-metrics JSON)
+              --shutdown (stop the server cleanly)
   simulate:   --steps N [20]  --dt T [0.002]  --integrator [euler|rk2]
               --rebalance [on|off]  --rebalance-threshold R [0.8]
               --chaos-profile [off|lossy|corrupt|flaky|blackhole|
@@ -74,10 +92,26 @@ pub fn cli_main() {
     match dispatch(&args) {
         Ok(()) => {}
         Err(e) => {
+            // a latched SIGINT/SIGTERM is a *requested* stop: report
+            // it calmly and exit 0 so service managers (and the CI
+            // server smoke) see a clean shutdown, not a crash
+            if matches!(e.downcast_ref::<FmmError>(),
+                        Some(FmmError::Interrupted))
+            {
+                eprintln!("petfmm: interrupted; shut down cleanly");
+                return;
+            }
             eprintln!("error: {e:#}");
             std::process::exit(1);
         }
     }
+}
+
+/// Output shape for the commands that support `--format`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum OutputFormat {
+    Text,
+    Json,
 }
 
 /// Parse args and run a subcommand (exposed for tests).
@@ -103,10 +137,29 @@ pub fn dispatch(args: &[String]) -> Result<()> {
     let mut ranks_list: Vec<usize> = vec![1, 4, 8, 16, 32, 64];
     let mut dump: Option<String> = None;
     let mut mode: Option<RunMode> = None;
+    let mut format: Option<OutputFormat> = None;
+    let mut stats = false;
+    let mut shutdown = false;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
             "--config" => i += 1, // value consumed above
+            // boolean flags: no value to consume
+            "--stats" => stats = true,
+            "--shutdown" => shutdown = true,
+            "--format" => {
+                let v = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("--format needs a value"))?;
+                format = Some(match v.as_str() {
+                    "text" => OutputFormat::Text,
+                    "json" => OutputFormat::Json,
+                    other => {
+                        bail!("unknown format '{other}' (text | json)")
+                    }
+                });
+                i += 1;
+            }
             "--mode" => {
                 let v = args
                     .get(i + 1)
@@ -153,16 +206,26 @@ pub fn dispatch(args: &[String]) -> Result<()> {
         // to the config parser and errored as an unknown key
         bail!("--mode only applies to the run and simulate commands");
     }
+    if format.is_some() && !matches!(cmd, "run" | "simulate" | "query") {
+        bail!("--format only applies to run, simulate and query");
+    }
+    if (stats || shutdown) && cmd != "query" {
+        bail!("--stats/--shutdown only apply to the query command");
+    }
+    let format = format.unwrap_or(OutputFormat::Text);
 
     match cmd {
         "run" => cmd_run(
             &config,
             dump.as_deref(),
             mode.unwrap_or(RunMode::Simulated),
+            format,
         ),
         "simulate" => {
-            cmd_simulate(&config, mode.unwrap_or(RunMode::Serial))
+            cmd_simulate(&config, mode.unwrap_or(RunMode::Serial), format)
         }
+        "serve" => server::serve(&config),
+        "query" => cmd_query(&config, stats, shutdown, format),
         "scale" => cmd_scale(&config, &ranks_list),
         "partition" => cmd_partition(&config),
         "model" => cmd_model(&config),
@@ -187,7 +250,39 @@ fn cmd_run(
     config: &RunConfig,
     dump: Option<&str>,
     mode: RunMode,
+    format: OutputFormat,
 ) -> Result<()> {
+    if format == OutputFormat::Json {
+        // one machine-readable line; the human report (and --dump,
+        // which narrates where the file went) stays on --format text
+        if dump.is_some() {
+            bail!("--dump needs --format text");
+        }
+        let sol = FmmSolver::from_config(config).mode(mode).solve()?;
+        let mut accuracy = String::new();
+        if sol.problem.tree.n_particles() <= 20_000 {
+            let want = sol.direct_oracle();
+            accuracy = format!(
+                ", \"rel_l2\": {:e}, \"max_abs\": {:e}",
+                rel_l2_error(&sol.vel, &want),
+                max_abs_error(&sol.vel, &want)
+            );
+        }
+        println!(
+            "{{\"command\": \"run\", \"mode\": \"{}\", \
+             \"particles\": {}, \"ranks\": {}, \
+             \"velocity_digest\": \"{:016x}\", \"makespan\": {:e}, \
+             \"load_balance\": {:e}{}}}",
+            mode.name(),
+            sol.problem.tree.n_particles(),
+            config.ranks,
+            velocity_digest(&sol.vel),
+            sol.makespan(),
+            sol.load_balance(),
+            accuracy
+        );
+        return Ok(());
+    }
     println!("petfmm run: {} mode={}", config.summary(), mode.name());
     // one entry point for the whole pipeline: the solver facade owns
     // backend selection, the schedule, and the single input-order
@@ -257,7 +352,29 @@ fn cmd_run(
     Ok(())
 }
 
-fn cmd_simulate(config: &RunConfig, mode: RunMode) -> Result<()> {
+fn cmd_simulate(
+    config: &RunConfig,
+    mode: RunMode,
+    format: OutputFormat,
+) -> Result<()> {
+    if format == OutputFormat::Json {
+        let mut sim = Simulation::new(config)?.mode(mode);
+        sim.run()?;
+        let trace = sim.trace();
+        println!(
+            "{{\"command\": \"simulate\", \"mode\": \"{}\", \
+             \"steps\": {}, \"repartitions\": {}, \
+             \"position_digest\": \"{:016x}\", \"wall_secs\": {:e}, \
+             \"final_lb\": {:e}}}",
+            mode.name(),
+            trace.steps.len(),
+            trace.repartitions,
+            sim.position_digest(),
+            trace.wall_secs(),
+            trace.final_lb()
+        );
+        return Ok(());
+    }
     println!("petfmm simulate: {}", config.summary());
     println!(
         "steps={} dt={} integrator={} rebalance={} threshold={} mode={}",
@@ -291,6 +408,57 @@ fn cmd_simulate(config: &RunConfig, mode: RunMode) -> Result<()> {
     // runs print nothing extra, keeping golden CLI output stable)
     print!("{}", trace.fault_report());
     println!("position digest: {:016x}", sim.position_digest());
+    Ok(())
+}
+
+fn cmd_query(
+    config: &RunConfig,
+    stats: bool,
+    shutdown: bool,
+    format: OutputFormat,
+) -> Result<()> {
+    if config.serve_port == 0 {
+        bail!(
+            "query needs --port N (the port `petfmm serve` printed \
+             in its `listening on` line)"
+        );
+    }
+    let mut client = ServeClient::connect(config.serve_port)?;
+    if stats {
+        // the server's stats payload is already JSON — both formats
+        // print it verbatim
+        println!("{}", client.stats()?);
+        return Ok(());
+    }
+    if shutdown {
+        client.shutdown()?;
+        match format {
+            OutputFormat::Text => println!("server shut down"),
+            OutputFormat::Json => println!(
+                "{{\"command\": \"shutdown\", \"ok\": true}}"
+            ),
+        }
+        return Ok(());
+    }
+    // evaluate at the config workload's own positions: the digest is
+    // then comparable with a cold `petfmm run` over the same config
+    // (CI diffs the two `velocity digest:` lines)
+    let particles = super::workload::generate(config)?;
+    let targets: Vec<[f64; 2]> =
+        particles.iter().map(|p| [p[0], p[1]]).collect();
+    let vel = client.query(1, targets)?;
+    match format {
+        OutputFormat::Text => {
+            println!("petfmm query: {} targets evaluated", vel.len());
+            println!("velocity digest: {:016x}", velocity_digest(&vel));
+        }
+        OutputFormat::Json => println!(
+            "{{\"command\": \"query\", \"targets\": {}, \
+             \"velocity_digest\": \"{:016x}\"}}",
+            vel.len(),
+            velocity_digest(&vel)
+        ),
+    }
     Ok(())
 }
 
@@ -615,5 +783,69 @@ mod tests {
             "verify", f.to_str().unwrap(), f.to_str().unwrap(),
         ]))
         .unwrap();
+    }
+
+    #[test]
+    fn format_json_on_run_and_simulate() {
+        dispatch(&args(&[
+            "run", "--particles", "200", "--levels", "3", "--terms",
+            "6", "--ranks", "2", "--dist", "uniform", "--format",
+            "json",
+        ]))
+        .unwrap();
+        dispatch(&args(&[
+            "simulate", "--particles", "200", "--levels", "3",
+            "--terms", "6", "--ranks", "2", "--dist", "clustered",
+            "--steps", "2", "--dt", "0.001", "--format", "json",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn format_and_query_flags_are_guarded() {
+        let err = dispatch(&args(&["run", "--format", "yaml"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("text | json"), "{err}");
+        // --format belongs to run/simulate/query only
+        let err = dispatch(&args(&[
+            "scale", "--particles", "100", "--levels", "3", "--format",
+            "json",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("query"), "{err}");
+        // --stats / --shutdown belong to query only
+        let err = dispatch(&args(&["run", "--stats"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("query"), "{err}");
+        let err = dispatch(&args(&["simulate", "--shutdown"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("query"), "{err}");
+        // the --dump narration is text-only
+        let err = dispatch(&args(&[
+            "run", "--particles", "150", "--levels", "3", "--terms",
+            "6", "--dist", "uniform", "--format", "json", "--dump",
+            "/tmp/x.txt",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--format text"), "{err}");
+    }
+
+    #[test]
+    fn query_without_a_server_errors_cleanly() {
+        // no port: actionable message, not a connection attempt
+        let err = dispatch(&args(&["query"])).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--port"), "{msg}");
+        // a port nobody serves: the connect error surfaces (reserved
+        // port 1 refuses immediately on loopback)
+        let err = dispatch(&args(&["query", "--port", "1"]))
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("connect"), "{msg}");
     }
 }

@@ -2,11 +2,13 @@
 //! preparation (tree build → cut → weighted-graph partition), schedule
 //! execution over a compute backend, the kernel-generic solver facade
 //! ([`FmmSolver`]), the dynamic load-balancing time-stepper
-//! ([`Simulation`]), and the CLI.
+//! ([`Simulation`]), the resident solver service ([`FmmSession`] /
+//! `petfmm serve`), and the CLI.
 
 pub mod cli;
 pub mod driver;
 pub mod process;
+pub mod server;
 pub mod simulation;
 pub mod solver;
 pub mod workload;
@@ -16,6 +18,7 @@ pub use process::{run_process, worker_entry};
 pub use driver::{make_backend, native_dims, prepare,
                  prepare_with_particles, scaling_point, strong_scaling,
                  Problem};
+pub use server::{serve, serve_loop, FmmSession, ServeClient};
 pub use simulation::Simulation;
 pub use solver::{FmmSolver, RunMode, Solution};
 pub use workload::generate;

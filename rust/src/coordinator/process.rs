@@ -193,6 +193,12 @@ where
         ));
     }
 
+    // a SIGINT/SIGTERM during the multi-process run must tear the
+    // worker fleet down instead of leaving orphans: the hub polls the
+    // latch wherever it already spin-waits (rendezvous, BYE wait) and
+    // abandons the run with `FmmError::Interrupted`; the `Workers`
+    // drop guard kills the spawned ranks on that path
+    crate::util::signal::install_shutdown_latch();
     let chaos = fault_plan.filter(|p| p.is_active()).cloned();
     let epoch = chaos.as_ref().map(|p| p.epoch).unwrap_or(0);
     let ini = config.to_ini();
@@ -239,6 +245,9 @@ where
                 pending -= 1;
             }
             Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if crate::util::signal::shutdown_requested() {
+                    return Err(FmmError::Interrupted);
+                }
                 if let Some((r, st)) = workers.reap_dead() {
                     return Err(rank_failed(r, format!(
                         "worker exited during rendezvous ({st})"
@@ -306,6 +315,9 @@ where
         };
         if missing.is_empty() {
             break;
+        }
+        if crate::util::signal::shutdown_requested() {
+            return Err(FmmError::Interrupted);
         }
         if let Some((r, st)) = workers.reap_dead() {
             if missing.contains(&r) {

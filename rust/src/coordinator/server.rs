@@ -1,0 +1,566 @@
+//! The resident solver service (DESIGN.md §15): a long-running
+//! `petfmm serve` process that builds the tree, cut, partition and
+//! expansion state **once**, keeps them hot in memory, and answers
+//! batched field-evaluation requests over the same length-prefixed
+//! loopback framing the process-parallel runtime speaks
+//! (`comm::socket`).
+//!
+//! The split is:
+//!
+//! * [`FmmSession`] — the transport-free core.  It owns a prepared
+//!   [`Problem`], the constructed operator backend, and the solved
+//!   [`FmmState`], and answers arbitrary-target queries through
+//!   [`Evaluator::eval_targets`] (leaf location + cached-L2P far field
+//!   + CSR-sliced P2P near field).  Incremental source changes are
+//!   *staged* ([`FmmSession::update`]) and applied lazily on the next
+//!   query — one rebuild (`Quadtree::rebuild_into`, allocation-steady)
+//!   plus one expansion re-sweep, amortized across however many
+//!   queries follow.
+//! * [`serve`] / [`serve_loop`] — the wire harness: a sequential
+//!   single-connection TCP accept loop dispatching the QUERY / UPDATE
+//!   / STATS / SHUTDOWN frames, polling the process-wide shutdown
+//!   latch (`util::signal`) between reads so SIGINT/SIGTERM drain the
+//!   in-flight request and exit cleanly.
+//! * [`ServeClient`] — the blocking client the `petfmm query`
+//!   subcommand (and the tests) use.
+//!
+//! **Determinism.**  A warm query is bitwise-identical to a cold
+//! one-shot serial solve at the same target points: the session's
+//! sweep is exactly the facade's `Serial` arm (same backend
+//! construction, same evaluator, same thread-invariant batching), and
+//! the per-target path is pinned bitwise to the solve's per-target sum
+//! (see `eval_targets`).  An UPDATE followed by a query matches a cold
+//! solve over the updated particles for the same reason:
+//! `rebuild_into` reproduces `Quadtree::build` exactly.
+//!
+//! **Metrics.**  Every answered query emits a
+//! [`QueryManifest`](crate::metrics::QueryManifest) (queue time, eval
+//! time, cache hit/miss, targets/sec, wire bytes) folded into the
+//! session's [`ServerStats`] — the JSON body of the STATS reply and of
+//! the final line `serve` prints on shutdown.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::driver::{self, make_backend, Problem};
+use crate::comm::{decode_frame, encode_frame, frame_name, write_frame,
+                  CommError, Frame, FrameReader};
+use crate::config::RunConfig;
+use crate::fmm::{Evaluator, FmmState, OpsBackend};
+use crate::metrics::{QueryManifest, ServerStats};
+use crate::quadtree::{validate_particles, Particle, RebuildScratch};
+use crate::util::signal;
+
+/// How often the accept/read loops wake to poll the shutdown latch.
+const POLL: Duration = Duration::from_millis(25);
+
+/// Client-side reply deadline: a server that says nothing for this
+/// long is treated as gone (big cold builds on the server side happen
+/// before it starts listening, so replies are never this slow).
+const CLIENT_DEADLINE: Duration = Duration::from_secs(120);
+
+/// A resident solve session: tree + operator tables + expansion state
+/// built once, then queried at arbitrary target points.
+///
+/// Transport-free — the TCP harness ([`serve_loop`]) and direct
+/// library callers use the same object.  Queries go through
+/// [`FmmSession::query`]; the caller folds the returned manifest into
+/// the session aggregate with [`FmmSession::record`] once it has
+/// filled in whatever wire-level fields it knows (the serve loop adds
+/// queue time and frame bytes; library callers usually record as-is).
+pub struct FmmSession {
+    problem: Problem,
+    backend: Arc<dyn OpsBackend>,
+    state: FmmState,
+    scratch: RebuildScratch,
+    /// staged UPDATE, applied lazily by the next query
+    pending: Option<Vec<Particle>>,
+    stats: ServerStats,
+    seq: u64,
+}
+
+impl FmmSession {
+    /// Build a session from a config: prepare the problem (workload →
+    /// tree → cut → partition), construct the operator backend, and
+    /// run the full expansion sweep — the expensive cold start every
+    /// later query amortizes.
+    pub fn new(config: &RunConfig) -> Result<FmmSession> {
+        FmmSession::from_problem(driver::prepare(config)?)
+    }
+
+    /// Session over an already-prepared problem (no workload
+    /// regeneration, no second Morton sort or partition).
+    pub fn from_problem(problem: Problem) -> Result<FmmSession> {
+        let backend: Arc<dyn OpsBackend> =
+            Arc::from(make_backend(&problem.config)?);
+        let state = sweep(&problem, backend.as_ref());
+        // fail the cold start, not the first request: the
+        // arbitrary-target path needs the cached-operator fast path,
+        // which e.g. the PJRT backend does not offer
+        Evaluator::new(&problem.tree, backend.as_ref())
+            .eval_targets(&state, &[], &[])?;
+        Ok(FmmSession {
+            problem,
+            backend,
+            state,
+            scratch: RebuildScratch::default(),
+            pending: None,
+            stats: ServerStats::default(),
+            seq: 0,
+        })
+    }
+
+    /// Evaluate the field at arbitrary target points.
+    ///
+    /// Applies any staged [`FmmSession::update`] first (rebuild +
+    /// re-sweep — the manifest reports `cache_hit: false` for exactly
+    /// those queries).  `id` is the client-chosen request id echoed in
+    /// the manifest.  The returned velocities are bitwise-identical to
+    /// a cold one-shot serial solve at the same points.
+    ///
+    /// The manifest is **not** yet folded into the session stats —
+    /// call [`FmmSession::record`] after filling in any wire-level
+    /// fields.
+    pub fn query(&mut self, id: u64, targets: &[[f64; 2]])
+        -> Result<(Vec<[f64; 2]>, QueryManifest)> {
+        let t0 = Instant::now();
+        let cache_hit = self.pending.is_none();
+        if let Some(parts) = self.pending.take() {
+            self.problem.tree.rebuild_into(&mut self.scratch, parts);
+            self.state = sweep(&self.problem, self.backend.as_ref());
+        }
+        let txs: Vec<f64> = targets.iter().map(|t| t[0]).collect();
+        let tys: Vec<f64> = targets.iter().map(|t| t[1]).collect();
+        let vel = Evaluator::new(&self.problem.tree,
+                                 self.backend.as_ref())
+            .with_threads(self.problem.config.par_threads)
+            .eval_targets(&self.state, &txs, &tys)?;
+        self.seq += 1;
+        let manifest = QueryManifest {
+            seq: self.seq,
+            id,
+            queue_secs: 0.0,
+            eval_secs: t0.elapsed().as_secs_f64(),
+            cache_hit,
+            targets: targets.len(),
+            bytes_in: 0,
+            bytes_out: 0,
+        };
+        Ok((vel, manifest))
+    }
+
+    /// Stage a replacement particle set.  Validated eagerly (a bad set
+    /// must fail the UPDATE, not some later query) but *applied*
+    /// lazily: the next query pays one tree rebuild plus one expansion
+    /// re-sweep, and every query after that is a cache hit again.
+    pub fn update(&mut self, particles: Vec<Particle>) -> Result<()> {
+        validate_particles(&particles)?;
+        self.pending = Some(particles);
+        self.stats.updates += 1;
+        Ok(())
+    }
+
+    /// Fold an answered query's manifest into the session aggregate.
+    pub fn record(&mut self, manifest: &QueryManifest) {
+        self.stats.record(manifest);
+    }
+
+    /// The session's aggregate request metrics.
+    pub fn stats(&self) -> &ServerStats {
+        &self.stats
+    }
+
+    /// The prepared problem the session answers from (the tree
+    /// reflects the last *applied* update, not a staged one).
+    pub fn problem(&self) -> &Problem {
+        &self.problem
+    }
+}
+
+/// The facade `Serial` arm's exact sweep — same backend object, same
+/// evaluator, same thread setting — so session answers stay bitwise
+/// on the solve.
+fn sweep(problem: &Problem, backend: &dyn OpsBackend) -> FmmState {
+    Evaluator::new(&problem.tree, backend)
+        .with_threads(problem.config.par_threads)
+        .evaluate()
+}
+
+/// Run the resident service: cold-build an [`FmmSession`] for the
+/// config, bind the loopback port (`serve-port`; 0 = OS-assigned,
+/// printed on stdout), and serve until a SHUTDOWN frame or
+/// SIGINT/SIGTERM.  Prints the final stats JSON on the way out.
+pub fn serve(config: &RunConfig) -> Result<()> {
+    signal::install_shutdown_latch();
+    println!("petfmm serve: {}", config.summary());
+    let session = FmmSession::new(config)?;
+    let listener = TcpListener::bind(("127.0.0.1", config.serve_port))
+        .context("binding the serve port")?;
+    serve_loop(listener, session)
+}
+
+/// The accept/dispatch loop behind [`serve`], split out so tests can
+/// bind their own ephemeral listener and drive the server from a
+/// thread.  Prints `listening on <addr>` once ready (the `query`
+/// client's machine-readable handshake) and the stats JSON on exit.
+///
+/// Connections are served **sequentially** — one client at a time,
+/// requests answered in arrival order (that is what makes the
+/// queue-time metric and the staged-update semantics well defined).
+pub fn serve_loop(listener: TcpListener, mut session: FmmSession)
+    -> Result<()> {
+    let addr = listener.local_addr()
+        .context("reading the bound serve address")?;
+    println!("listening on {addr}");
+    listener.set_nonblocking(true)
+        .context("setting the serve socket non-blocking")?;
+    let mut stop = false;
+    while !stop && !signal::shutdown_requested() {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false)
+                    .context("restoring blocking client I/O")?;
+                stop = serve_connection(&mut session, stream)?;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(POLL);
+            }
+            Err(e) => {
+                return Err(e).context("accepting a query client");
+            }
+        }
+    }
+    println!("petfmm serve: stats {}", session.stats().to_json());
+    Ok(())
+}
+
+/// Serve one connection until the client disconnects (`Ok(false)`),
+/// sends SHUTDOWN (`Ok(true)` — stop the whole server), or the signal
+/// latch trips mid-connection.  A malformed or unexpected frame drops
+/// the connection (logged to stderr) without taking the server down.
+fn serve_connection(session: &mut FmmSession, stream: TcpStream)
+    -> Result<bool> {
+    let mut writer = stream.try_clone()
+        .context("cloning the connection for replies")?;
+    let mut reader = FrameReader::new(stream, 0);
+    loop {
+        if signal::shutdown_requested() {
+            return Ok(true);
+        }
+        let payload = match reader.read_frame(Some(Instant::now() + POLL))
+        {
+            Ok(Some(p)) => p,
+            // deadline: no bytes yet — poll the latch and keep waiting
+            Ok(None) => continue,
+            // client hung up: back to accept
+            Err(CommError::Disconnected { .. }) => return Ok(false),
+            Err(e) => {
+                eprintln!("petfmm serve: dropping client ({e})");
+                return Ok(false);
+            }
+        };
+        let arrived = Instant::now();
+        let bytes_in = payload.len() as u64 + 4;
+        let frame = match decode_frame(&payload) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("petfmm serve: dropping client ({e})");
+                return Ok(false);
+            }
+        };
+        match frame {
+            Frame::Query { id, targets } => {
+                let queued = arrived.elapsed().as_secs_f64();
+                match session.query(id, &targets) {
+                    Ok((vel, mut manifest)) => {
+                        let reply = encode_frame(
+                            &Frame::QueryResult { id, vel });
+                        manifest.queue_secs = queued;
+                        manifest.bytes_in = bytes_in;
+                        manifest.bytes_out = reply.len() as u64 + 4;
+                        write_frame(&mut writer, &reply, 0)?;
+                        session.record(&manifest);
+                    }
+                    Err(e) => {
+                        // a bad request (e.g. non-finite target) must
+                        // not poison the resident state: log, drop the
+                        // client, keep serving
+                        eprintln!(
+                            "petfmm serve: query {id} rejected ({e:#})");
+                        return Ok(false);
+                    }
+                }
+            }
+            Frame::Update { id, particles } => {
+                match session.update(particles) {
+                    Ok(()) => {
+                        let ack = encode_frame(&Frame::QueryResult {
+                            id,
+                            vel: Vec::new(),
+                        });
+                        write_frame(&mut writer, &ack, 0)?;
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "petfmm serve: update {id} rejected ({e:#})");
+                        return Ok(false);
+                    }
+                }
+            }
+            Frame::Stats { .. } => {
+                let reply = encode_frame(&Frame::Stats {
+                    json: session.stats().to_json(),
+                });
+                write_frame(&mut writer, &reply, 0)?;
+            }
+            Frame::Shutdown => {
+                // ack so the client can distinguish a served shutdown
+                // from a crash, then stop the accept loop
+                let ack = encode_frame(&Frame::QueryResult {
+                    id: 0,
+                    vel: Vec::new(),
+                });
+                write_frame(&mut writer, &ack, 0)?;
+                return Ok(true);
+            }
+            other => {
+                eprintln!(
+                    "petfmm serve: unexpected {} frame; dropping client",
+                    frame_name(&other)
+                );
+                return Ok(false);
+            }
+        }
+    }
+}
+
+/// Blocking client for a running `petfmm serve` — the `petfmm query`
+/// subcommand and the conformance tests speak through this.
+pub struct ServeClient {
+    writer: TcpStream,
+    reader: FrameReader,
+}
+
+impl ServeClient {
+    /// Connect to a server on the loopback `port`.
+    pub fn connect(port: u16) -> Result<ServeClient> {
+        let stream = TcpStream::connect(("127.0.0.1", port))
+            .context("connecting to petfmm serve")?;
+        let reader = FrameReader::new(
+            stream.try_clone().context("cloning the client socket")?,
+            0,
+        );
+        Ok(ServeClient { writer: stream, reader })
+    }
+
+    fn next_frame(&mut self) -> Result<Frame> {
+        match self.reader
+            .read_frame(Some(Instant::now() + CLIENT_DEADLINE))
+        {
+            Ok(Some(p)) => Ok(decode_frame(&p)?),
+            Ok(None) => anyhow::bail!(
+                "server said nothing for {}s",
+                CLIENT_DEADLINE.as_secs()
+            ),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// Evaluate the field at `targets`; `id` tags the request and must
+    /// come back in the reply.
+    pub fn query(&mut self, id: u64, targets: Vec<[f64; 2]>)
+        -> Result<Vec<[f64; 2]>> {
+        let req = encode_frame(&Frame::Query { id, targets });
+        write_frame(&mut self.writer, &req, 0)?;
+        match self.next_frame()? {
+            Frame::QueryResult { id: got, vel } if got == id => Ok(vel),
+            other => anyhow::bail!(
+                "expected RESULT for query {id}, got {other:?}"
+            ),
+        }
+    }
+
+    /// Stage a replacement particle set on the server (applied lazily
+    /// by its next query).
+    pub fn update(&mut self, id: u64, particles: Vec<Particle>)
+        -> Result<()> {
+        let req = encode_frame(&Frame::Update { id, particles });
+        write_frame(&mut self.writer, &req, 0)?;
+        match self.next_frame()? {
+            Frame::QueryResult { id: got, vel }
+                if got == id && vel.is_empty() => Ok(()),
+            other => anyhow::bail!(
+                "expected UPDATE ack {id}, got {other:?}"
+            ),
+        }
+    }
+
+    /// Fetch the server's aggregate request metrics as JSON.
+    pub fn stats(&mut self) -> Result<String> {
+        let req = encode_frame(&Frame::Stats { json: String::new() });
+        write_frame(&mut self.writer, &req, 0)?;
+        match self.next_frame()? {
+            Frame::Stats { json } if !json.is_empty() => Ok(json),
+            other => anyhow::bail!(
+                "expected a STATS reply, got {other:?}"
+            ),
+        }
+    }
+
+    /// Ask the server to exit its accept loop (acknowledged before it
+    /// does).
+    pub fn shutdown(mut self) -> Result<()> {
+        let req = encode_frame(&Frame::Shutdown);
+        write_frame(&mut self.writer, &req, 0)?;
+        match self.next_frame()? {
+            Frame::QueryResult { vel, .. } if vel.is_empty() => Ok(()),
+            other => anyhow::bail!(
+                "expected a SHUTDOWN ack, got {other:?}"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{workload, FmmSolver};
+    use crate::proptest::Gen;
+
+    fn small_config() -> RunConfig {
+        RunConfig {
+            particles: 220,
+            levels: 4,
+            terms: 12,
+            sigma: 0.01,
+            ranks: 2,
+            distribution: "uniform".into(),
+            par_threads: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn session_queries_at_sources_are_bitwise_the_cold_solve() {
+        let cfg = small_config();
+        let parts = workload::generate(&cfg).unwrap();
+        let targets: Vec<[f64; 2]> =
+            parts.iter().map(|p| [p[0], p[1]]).collect();
+        let cold = FmmSolver::from_config(&cfg).solve().unwrap();
+        let mut session = FmmSession::new(&cfg).unwrap();
+        let (vel, m) = session.query(7, &targets).unwrap();
+        assert_eq!(vel, cold.vel, "warm query must be bitwise the \
+                                   cold one-shot solve");
+        assert!(m.cache_hit, "no update was staged");
+        assert_eq!((m.seq, m.id, m.targets), (1, 7, targets.len()));
+        session.record(&m);
+        assert_eq!(session.stats().queries, 1);
+        assert_eq!(session.stats().cache_hits, 1);
+    }
+
+    #[test]
+    fn staged_update_applies_lazily_and_matches_a_cold_solve() {
+        let cfg = small_config();
+        let mut session = FmmSession::new(&cfg).unwrap();
+        let mut g = Gen::new(41);
+        let moved = g.particles(180);
+        session.update(moved.clone()).unwrap();
+        let targets: Vec<[f64; 2]> =
+            moved.iter().map(|p| [p[0], p[1]]).collect();
+        let (vel, m) = session.query(1, &targets).unwrap();
+        assert!(!m.cache_hit, "the staged update is this query's miss");
+        let cold = FmmSolver::from_config(&cfg)
+            .particles(moved)
+            .solve()
+            .unwrap();
+        assert_eq!(vel, cold.vel, "post-update query must be bitwise \
+                                   the cold solve over the new set");
+        // the rebuild happened exactly once: the next query hits
+        let (vel2, m2) = session.query(2, &targets).unwrap();
+        assert!(m2.cache_hit);
+        assert_eq!(vel, vel2);
+        session.record(&m);
+        session.record(&m2);
+        let s = session.stats();
+        assert_eq!((s.queries, s.updates), (2, 1));
+        assert_eq!((s.cache_hits, s.cache_misses), (1, 1));
+    }
+
+    #[test]
+    fn bad_updates_and_targets_fail_without_poisoning_the_session() {
+        let cfg = small_config();
+        let mut session = FmmSession::new(&cfg).unwrap();
+        assert!(session.update(Vec::new()).is_err(), "empty set");
+        assert!(
+            session.update(vec![[0.1, f64::NAN, 1.0]]).is_err(),
+            "non-finite particle"
+        );
+        assert!(
+            session.query(1, &[[f64::INFINITY, 0.5]]).is_err(),
+            "non-finite target"
+        );
+        // the resident state still answers
+        let (vel, _) = session.query(2, &[[0.25, 0.75]]).unwrap();
+        assert_eq!(vel.len(), 1);
+        assert!(vel[0][0].is_finite() && vel[0][1].is_finite());
+    }
+
+    #[test]
+    fn serve_loop_speaks_the_wire_protocol_end_to_end() {
+        // loopback smoke of the whole harness: QUERY, UPDATE, STATS,
+        // SHUTDOWN, clean exit — no subprocesses, ephemeral port
+        let cfg = small_config();
+        let parts = workload::generate(&cfg).unwrap();
+        let targets: Vec<[f64; 2]> =
+            parts.iter().map(|p| [p[0], p[1]]).collect();
+        let cold = FmmSolver::from_config(&cfg).solve().unwrap();
+        let session = FmmSession::new(&cfg).unwrap();
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let port = listener.local_addr().unwrap().port();
+        let server = std::thread::spawn(move || {
+            serve_loop(listener, session)
+        });
+        let mut client = ServeClient::connect(port).unwrap();
+        let vel = client.query(3, targets.clone()).unwrap();
+        assert_eq!(vel, cold.vel);
+        let mut g = Gen::new(5);
+        let moved = g.particles(150);
+        client.update(4, moved.clone()).unwrap();
+        let new_targets: Vec<[f64; 2]> =
+            moved.iter().map(|p| [p[0], p[1]]).collect();
+        let vel = client.query(5, new_targets).unwrap();
+        let cold2 = FmmSolver::from_config(&cfg)
+            .particles(moved)
+            .solve()
+            .unwrap();
+        assert_eq!(vel, cold2.vel);
+        let stats = client.stats().unwrap();
+        assert!(stats.contains("\"queries\": 2"), "{stats}");
+        assert!(stats.contains("\"updates\": 1"), "{stats}");
+        assert!(stats.contains("\"cache_misses\": 1"), "{stats}");
+        client.shutdown().unwrap();
+        server.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn a_dropped_client_does_not_stop_the_server() {
+        let cfg = RunConfig { particles: 60, ..small_config() };
+        let session = FmmSession::new(&cfg).unwrap();
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let port = listener.local_addr().unwrap().port();
+        let server = std::thread::spawn(move || {
+            serve_loop(listener, session)
+        });
+        // first client disconnects mid-session without a SHUTDOWN
+        drop(ServeClient::connect(port).unwrap());
+        // second client is served normally afterwards
+        let mut client = ServeClient::connect(port).unwrap();
+        let vel = client.query(1, vec![[0.5, 0.5]]).unwrap();
+        assert_eq!(vel.len(), 1);
+        client.shutdown().unwrap();
+        server.join().unwrap().unwrap();
+    }
+}

@@ -36,6 +36,12 @@ pub enum FmmError {
     Backend(String),
     /// An internal invariant broke (e.g. a rank thread panicked).
     Internal(String),
+    /// The process-wide shutdown latch (SIGINT/SIGTERM,
+    /// `util::signal`) tripped mid-run; the run was abandoned at a
+    /// clean protocol boundary.  The CLI maps this to a friendly
+    /// message and exit status 0 — it is a *requested* stop, not a
+    /// failure, and retrying would fight the user.
+    Interrupted,
 }
 
 impl FmmError {
@@ -68,6 +74,9 @@ impl fmt::Display for FmmError {
             }
             FmmError::Backend(s) => write!(f, "backend: {s}"),
             FmmError::Internal(s) => write!(f, "internal error: {s}"),
+            FmmError::Interrupted => {
+                write!(f, "interrupted (SIGINT/SIGTERM)")
+            }
         }
     }
 }
@@ -124,6 +133,8 @@ mod tests {
     fn caller_mistakes_are_not_recoverable() {
         assert!(!FmmError::InvalidInput("empty".into()).is_recoverable());
         assert!(!FmmError::config("tree", "bad").is_recoverable());
+        // a requested stop must not trip the retry ladder either
+        assert!(!FmmError::Interrupted.is_recoverable());
         // anyhow round-trip preserves the concrete type
         let any: anyhow::Error = FmmError::InvalidInput("x".into()).into();
         assert!(any.downcast_ref::<FmmError>().is_some());

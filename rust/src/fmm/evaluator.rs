@@ -998,6 +998,104 @@ impl<'a> Evaluator<'a> {
         ];
         (state, times)
     }
+
+    // ------------------------------------------------------------------
+    // arbitrary-target evaluation (targets ≠ sources, DESIGN.md §15)
+    // ------------------------------------------------------------------
+
+    /// Evaluate the field of an already-swept [`FmmState`] at arbitrary
+    /// target points, without re-running any sweep.
+    ///
+    /// Per target: locate the occupied leaf under the point
+    /// ([`Quadtree::locate_leaf`], adaptive-aware), apply L2P from the
+    /// cached local expansion at the point, then direct-sum the near
+    /// field from the leaf's P2P source ranges — the same CSR slices
+    /// and the same `dims().leaf`-aligned chunking the solve used.  A
+    /// target whose cell holds no particles has no local expansion
+    /// there; it falls back to one exact direct sum over all sources.
+    ///
+    /// **Bitwise contract** (pinned in `tests/server_session.rs`): a
+    /// target placed exactly at a source particle's position returns
+    /// that particle's solve velocity bit-for-bit.  The slice kernels
+    /// are per-target-row independent (`fmm::native` property tests),
+    /// and the per-target accumulation order here — zero, L2P, then
+    /// per-source-leaf chunk sums with source leaves in solver order
+    /// and chunks ascending from each leaf's CSR start — is exactly
+    /// the order the cached L2P/P2P scatters added the same terms in
+    /// the solve.
+    ///
+    /// Requires the cached-operator path; a backend without
+    /// [`CachedOps`] gets a typed [`FmmError::Backend`].  Targets are
+    /// independent, so the work fans across the worker pool with
+    /// disjoint writes — bit-identical for every thread count.
+    /// [`OpCounts`] are *not* bumped here (the counter cell is not
+    /// `Sync`); request-level metering lives in
+    /// `metrics::QueryManifest` instead.
+    pub fn eval_targets(&self, state: &FmmState, txs: &[f64],
+                        tys: &[f64])
+        -> Result<Vec<[f64; 2]>, FmmError> {
+        assert_eq!(txs.len(), tys.len());
+        let ops = self.cached().ok_or_else(|| {
+            FmmError::Backend(
+                "target evaluation needs the cached-operator path \
+                 (CachedOps); this backend offers none"
+                    .into(),
+            )
+        })?;
+        for (i, (x, y)) in txs.iter().zip(tys).enumerate() {
+            if !x.is_finite() || !y.is_finite() {
+                return Err(FmmError::InvalidInput(format!(
+                    "target {i} is not finite: ({x}, {y})"
+                )));
+            }
+        }
+        let s = self.backend.dims().leaf.max(1);
+        let tree = self.tree;
+        let n = txs.len();
+        let mut out = vec![0.0; n * 2];
+        self.par_fill(n, 2, &mut out, |i, dst| {
+            let (x, y) = (txs[i], tys[i]);
+            let Some(leaf) = tree.locate_leaf(x, y) else {
+                // unoccupied cell: no LE was formed there — fall
+                // back to the exact direct sum over every source
+                let mut buf = [0.0; 2];
+                ops.p2p_slice(&[x], &[y], &tree.xs, &tree.ys,
+                              &tree.gammas, &mut buf);
+                dst[0] = buf[0];
+                dst[1] = buf[1];
+                return;
+            };
+            let mut acc = [0.0; 2];
+            if let Some(le) = state.le.get(&leaf) {
+                let mut buf = [0.0; 2];
+                ops.l2p_slice(le, &[x], &[y], tree.center(&leaf),
+                              tree.radius(&leaf), &mut buf);
+                acc[0] += buf[0];
+                acc[1] += buf[1];
+            }
+            let sources = match tree.mode {
+                TreeMode::Uniform => near_domain(&leaf),
+                TreeMode::Adaptive { .. } => p2p_sources(tree, &leaf),
+            };
+            for src in &sources {
+                let (slo, shi) = tree.leaf_range(src);
+                let mut s0 = slo;
+                while s0 < shi {
+                    let s1 = (s0 + s).min(shi);
+                    let mut buf = [0.0; 2];
+                    ops.p2p_slice(&[x], &[y], &tree.xs[s0..s1],
+                                  &tree.ys[s0..s1],
+                                  &tree.gammas[s0..s1], &mut buf);
+                    acc[0] += buf[0];
+                    acc[1] += buf[1];
+                    s0 = s1;
+                }
+            }
+            dst[0] = acc[0];
+            dst[1] = acc[1];
+        });
+        Ok(out.chunks(2).map(|c| [c[0], c[1]]).collect())
+    }
 }
 
 /// Resolve a `par_threads` knob: 0 = one worker per host core.
@@ -1014,13 +1112,13 @@ pub fn resolve_threads(n: usize) -> usize {
 #[cfg(test)]
 mod tests {
     use super::super::backend::OpDims;
-    use super::super::direct::direct_all;
+    use super::super::direct::{direct_all, direct_at};
     use super::super::kernel::{BiotSavart2D, Gravity2D, LogPotential2D};
     use super::super::native::NativeBackend;
     use super::*;
     use crate::proptest::check;
     use crate::quadtree::Domain;
-    use crate::util::rel_l2_error;
+    use crate::util::{rel_l2_error, velocity_digest};
 
     fn eval_with(
         parts: Vec<[f64; 3]>,
@@ -1134,6 +1232,90 @@ mod tests {
             let err = rel_l2_error(&got, &want);
             assert!(err < 1e-4, "rel l2 err {err}");
         });
+    }
+
+    #[test]
+    fn eval_targets_at_source_positions_is_bitwise_the_solve() {
+        // the targets≠sources seam collapses to the solve when the
+        // targets are the sources themselves (see the method docs for
+        // the accumulation-order argument); also thread-invariant
+        check("eval_targets == solve at sources", 4, |g| {
+            let parts = g.clustered_particles(150, 2);
+            let txs: Vec<f64> = parts.iter().map(|p| p[0]).collect();
+            let tys: Vec<f64> = parts.iter().map(|p| p[1]).collect();
+            for tree in [
+                Quadtree::build(Domain::UNIT, 4, parts.clone()),
+                Quadtree::build_adaptive(Domain::UNIT, 5, 12, 1,
+                                         parts.clone()),
+            ] {
+                let dims =
+                    OpDims { batch: 16, leaf: 8, terms: 17, sigma: 0.005 };
+                let backend =
+                    NativeBackend::new(dims, BiotSavart2D::new(0.005));
+                let ev = Evaluator::new(&tree, &backend);
+                let state = ev.evaluate();
+                let want = state.vel_in_input_order(&tree);
+                let got = ev.eval_targets(&state, &txs, &tys).unwrap();
+                assert_eq!(got, want, "targets-at-sources mismatch");
+                assert_eq!(velocity_digest(&got), velocity_digest(&want),
+                           "equal values but different bits");
+                let par = Evaluator::new(&tree, &backend).with_threads(4);
+                let got4 = par.eval_targets(&state, &txs, &tys).unwrap();
+                assert_eq!(velocity_digest(&got4), velocity_digest(&got),
+                           "thread count changed the bits");
+            }
+        });
+    }
+
+    #[test]
+    fn eval_targets_off_grid_matches_direct() {
+        // arbitrary targets (including points in unoccupied cells,
+        // which take the exact-direct fallback) agree with the O(N·M)
+        // direct sum to FMM accuracy
+        check("eval_targets vs direct", 3, |g| {
+            let parts = g.clustered_particles(200, 2);
+            let targets: Vec<[f64; 2]> = (0..40)
+                .map(|_| [g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0)])
+                .collect();
+            let txs: Vec<f64> = targets.iter().map(|t| t[0]).collect();
+            let tys: Vec<f64> = targets.iter().map(|t| t[1]).collect();
+            let kernel = BiotSavart2D::new(0.005);
+            let want = direct_at(&kernel, &targets, &parts);
+            for tree in [
+                Quadtree::build(Domain::UNIT, 4, parts.clone()),
+                Quadtree::build_adaptive(Domain::UNIT, 5, 12, 1,
+                                         parts.clone()),
+            ] {
+                let dims =
+                    OpDims { batch: 16, leaf: 8, terms: 17, sigma: 0.005 };
+                let backend = NativeBackend::new(dims, kernel);
+                let ev = Evaluator::new(&tree, &backend);
+                let state = ev.evaluate();
+                let got = ev.eval_targets(&state, &txs, &tys).unwrap();
+                let err = rel_l2_error(&got, &want);
+                assert!(err < 2e-4, "rel l2 err {err}");
+            }
+        });
+    }
+
+    #[test]
+    fn eval_targets_needs_cached_ops_and_finite_points() {
+        let parts = vec![[0.2, 0.3, 1.0], [0.7, 0.6, -1.0]];
+        let tree = Quadtree::build(Domain::UNIT, 3, parts);
+        let dims = OpDims { batch: 16, leaf: 8, terms: 10, sigma: 0.005 };
+        let backend = NativeBackend::new(dims, BiotSavart2D::new(0.005));
+        let ev = Evaluator::new(&tree, &backend);
+        let state = ev.evaluate();
+        // generic-ABI-only evaluator: typed Backend error, no panic
+        let plain = Evaluator::new(&tree, &backend).with_cached_ops(false);
+        let err = plain.eval_targets(&state, &[0.5], &[0.5]).unwrap_err();
+        assert!(matches!(err, FmmError::Backend(_)), "{err}");
+        // non-finite targets: typed InvalidInput naming the offender
+        let err = ev
+            .eval_targets(&state, &[0.5, f64::NAN], &[0.5, 0.5])
+            .unwrap_err();
+        assert!(matches!(err, FmmError::InvalidInput(_)), "{err}");
+        assert!(err.to_string().contains("target 1"), "{err}");
     }
 
     #[test]

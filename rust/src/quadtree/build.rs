@@ -453,6 +453,39 @@ impl Quadtree {
         }
     }
 
+    /// Occupied leaf whose cell contains the point `(x, y)`, or `None`
+    /// when that cell holds no particles.  Out-of-domain points clamp
+    /// into the boundary cells (same [`Domain::locate`] rule the build
+    /// uses to bin particles), so a query target never errors — it
+    /// falls to the nearest cell.
+    ///
+    /// This is the adaptive-aware descend of the arbitrary-target
+    /// evaluation path (DESIGN.md §15): uniform mode is one grid
+    /// lookup; adaptive mode exploits the disjoint depth-`levels`
+    /// Morton key intervals of the leaf set — the only leaf that can
+    /// contain the point's deepest-level key is the last one whose
+    /// interval starts at or before it.
+    pub fn locate_leaf(&self, x: f64, y: f64) -> Option<BoxId> {
+        let deepest = self.domain.locate(self.levels, x, y);
+        match self.mode {
+            TreeMode::Uniform => {
+                self.leaf_index(&deepest).map(|_| deepest)
+            }
+            TreeMode::Adaptive { .. } => {
+                let key = self.start_key(&deepest);
+                let i = self
+                    .occupied_leaves
+                    .partition_point(|b| self.start_key(b) <= key);
+                if i == 0 {
+                    return None;
+                }
+                let cand = self.occupied_leaves[i - 1];
+                let (_, end) = key_range(self.levels, &cand);
+                (key < end).then_some(cand)
+            }
+        }
+    }
+
     /// Occupied leaves contained in `b` (including `b` itself if it is
     /// a leaf), as a contiguous z-ordered slice of `occupied_leaves`.
     /// With 2:1 balance these are the descend-side P2P partners of a
@@ -1068,6 +1101,52 @@ mod tests {
             assert!(t.leaf_index(b).is_some());
         }
         assert!(t.leaf_index(&t.occupied_leaves[0].ancestor(3)).is_none());
+    }
+
+    #[test]
+    fn locate_leaf_agrees_with_binning_in_both_modes() {
+        // every stored particle must locate to the leaf whose CSR
+        // slice holds it — the geometric lookup and the build-time
+        // binning are the same function
+        check("locate_leaf vs binning", 24, |g| {
+            let n = g.usize_in(1, 300);
+            let parts = g.clustered_particles(n, 2);
+            for t in [
+                Quadtree::build(Domain::UNIT, 5, parts.clone()),
+                Quadtree::build_adaptive(Domain::UNIT, 6, 12, 1,
+                                         parts.clone()),
+            ] {
+                for (i, p) in t.particles.iter().enumerate() {
+                    let leaf = t.locate_leaf(p[0], p[1])
+                        .expect("occupied point must locate");
+                    assert!(t.particles_in(&leaf)
+                                .contains(&(i as u32)),
+                            "particle {i} not in located leaf");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn locate_leaf_misses_empty_cells_and_clamps_outside_points() {
+        // one particle near the origin: its own cell hits, the far
+        // corner's cell is unoccupied, and a point outside the unit
+        // domain clamps onto the boundary cell (here: the occupied one)
+        let t = Quadtree::build(Domain::UNIT, 3, vec![[0.01, 0.01, 1.0]]);
+        assert_eq!(t.locate_leaf(0.01, 0.01), Some(BoxId::new(3, 0, 0)));
+        assert_eq!(t.locate_leaf(0.99, 0.99), None);
+        assert_eq!(t.locate_leaf(-5.0, -5.0), Some(BoxId::new(3, 0, 0)));
+        // adaptive: a coarse leaf answers for every point under it,
+        // and a descendant cell of an unoccupied region misses
+        let t = Quadtree::build_adaptive(Domain::UNIT, 4, 8, 2,
+                                         vec![[0.9, 0.9, 1.0]]);
+        let leaf = t.occupied_leaves[0];
+        assert_eq!(leaf.level, 2);
+        assert_eq!(t.locate_leaf(0.9, 0.9), Some(leaf));
+        // another point in the same coarse quadrant maps to the same
+        // leaf even though its depth-4 cell differs
+        assert_eq!(t.locate_leaf(0.8, 0.99), Some(leaf));
+        assert_eq!(t.locate_leaf(0.1, 0.1), None);
     }
 
     #[test]

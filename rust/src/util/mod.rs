@@ -1,10 +1,12 @@
-//! Shared numeric substrates: complex arithmetic, PRNG, binomial tables.
+//! Shared numeric substrates — complex arithmetic, PRNG, binomial
+//! tables — plus the process-wide shutdown [`signal`] latch.
 //!
 //! The offline registry carries no `num-complex` or `rand`, so both are
 //! implemented here (DESIGN.md §6).
 
 pub mod complex;
 pub mod rng;
+pub mod signal;
 pub mod tables;
 
 pub use complex::Complex;

@@ -1,0 +1,114 @@
+//! Resident-session conformance matrix (DESIGN.md §15): for every
+//! registered kernel × uniform/adaptive tree × evaluator thread count,
+//!
+//! 1. a warm session query at the source positions is **bitwise** the
+//!    cold one-shot solve over the same config,
+//! 2. an UPDATE followed by a query is **bitwise** a cold solve over
+//!    the updated particle set (the staged rebuild + re-sweep loses
+//!    nothing), and
+//! 3. off-grid target queries match the O(N·M) direct sum to FMM
+//!    accuracy.
+//!
+//! (1) and (2) are the PR's acceptance pins; (3) is the
+//! targets≠sources seam checked end to end through [`FmmSession`]
+//! rather than the bare evaluator.
+
+use petfmm::config::RunConfig;
+use petfmm::coordinator::{generate, FmmSession, FmmSolver};
+use petfmm::fmm::{direct_at, BiotSavart2D, Gravity2D, KernelSpec,
+                  LogPotential2D};
+use petfmm::proptest::Gen;
+use petfmm::quadtree::Particle;
+use petfmm::util::rel_l2_error;
+
+fn conf(kernel: KernelSpec, tree: &str, threads: usize) -> RunConfig {
+    RunConfig {
+        particles: 200,
+        levels: if tree == "adaptive" { 5 } else { 4 },
+        terms: 12,
+        sigma: 0.01,
+        kernel,
+        ranks: 2,
+        distribution: "clustered".into(),
+        seed: 23,
+        par_threads: threads,
+        tree: tree.into(),
+        leaf_capacity: 16,
+        ..Default::default()
+    }
+}
+
+fn targets_of(parts: &[Particle]) -> Vec<[f64; 2]> {
+    parts.iter().map(|p| [p[0], p[1]]).collect()
+}
+
+#[test]
+fn warm_and_updated_queries_are_bitwise_cold_solves() {
+    for kernel in KernelSpec::ALL {
+        for tree in ["uniform", "adaptive"] {
+            for threads in [1usize, 4] {
+                let cfg = conf(kernel, tree, threads);
+                let tag = format!("{} / {} / threads={}",
+                                  kernel.name(), tree, threads);
+                let parts = generate(&cfg).unwrap();
+                let mut solver = FmmSolver::from_config(&cfg);
+                let cold = solver.solve().unwrap();
+                let mut session = FmmSession::new(&cfg).unwrap();
+                let (vel, m) =
+                    session.query(1, &targets_of(&parts)).unwrap();
+                assert!(m.cache_hit, "{tag}: no update was staged");
+                assert_eq!(vel, cold.vel,
+                           "{tag}: warm query diverged from the cold \
+                            solve");
+                // stage a replacement set; the next query pays the
+                // rebuild and must land bitwise on a cold solve over
+                // the new particles (the facade side reuses its cached
+                // operator tables — also covered by this pin)
+                let moved = Gen::new(97).particles(160);
+                session.update(moved.clone()).unwrap();
+                let (vel2, m2) =
+                    session.query(2, &targets_of(&moved)).unwrap();
+                assert!(!m2.cache_hit,
+                        "{tag}: the staged update is this query's miss");
+                let cold2 =
+                    solver.particles(moved).solve().unwrap();
+                assert_eq!(vel2, cold2.vel,
+                           "{tag}: post-update query diverged from the \
+                            cold solve over the updated set");
+            }
+        }
+    }
+}
+
+#[test]
+fn off_grid_queries_match_the_direct_sum() {
+    for kernel in KernelSpec::ALL {
+        for tree in ["uniform", "adaptive"] {
+            let cfg = RunConfig {
+                terms: 17,
+                sigma: 0.005,
+                ..conf(kernel, tree, 1)
+            };
+            let parts = generate(&cfg).unwrap();
+            let mut g = Gen::new(5);
+            let targets: Vec<[f64; 2]> = (0..40)
+                .map(|_| [g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0)])
+                .collect();
+            let want = match kernel {
+                KernelSpec::BiotSavart => direct_at(
+                    &BiotSavart2D::new(cfg.sigma), &targets, &parts),
+                KernelSpec::LogPotential => {
+                    direct_at(&LogPotential2D, &targets, &parts)
+                }
+                KernelSpec::Gravity => {
+                    direct_at(&Gravity2D::default(), &targets, &parts)
+                }
+            };
+            let mut session = FmmSession::new(&cfg).unwrap();
+            let (got, _) = session.query(1, &targets).unwrap();
+            let err = rel_l2_error(&got, &want);
+            assert!(err < 2e-4, "{} / {tree}: rel l2 err {err}",
+                    kernel.name());
+        }
+    }
+}
