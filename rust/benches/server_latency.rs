@@ -11,16 +11,46 @@
 //! * **warm** — per-query latency on the hot session (p50/p99,
 //!   queries/sec, targets/sec).
 //!
-//! Results go to `BENCH_server.json`; CI gates `cold_vs_warm >= 5`.
-//! `PETFMM_BENCH_FAST=1` shrinks the workload for smoke runs.
+//! A third section measures the **concurrent** serve loop over the
+//! wire: aggregate queries/sec with one client vs eight clients
+//! hammering the same server.  Since queries answer from a shared
+//! read-only snapshot (per-eval threads pinned to 1 here), the
+//! aggregate should scale with cores.
+//!
+//! Results go to `BENCH_server.json`; CI gates `cold_vs_warm >= 5`
+//! and `contended_vs_single >= 2`.  `PETFMM_BENCH_FAST=1` shrinks the
+//! workload for smoke runs.
 
+use std::net::TcpListener;
 use std::time::Instant;
 
 use petfmm::bench::{bench_header, fmt_time, jnum, jobj, jstr,
                     write_bench_json};
 use petfmm::config::RunConfig;
-use petfmm::coordinator::FmmSession;
+use petfmm::coordinator::{serve_loop, FmmSession, ServeClient};
 use petfmm::proptest::Gen;
+
+/// Aggregate queries/sec of `threads` wire clients, each running
+/// `per_client` queries of the same target batch against the server
+/// on `port`.
+fn wire_qps(port: u16, threads: usize, per_client: usize,
+            targets: &[[f64; 2]]) -> f64 {
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let targets = targets.to_vec();
+            scope.spawn(move || {
+                let mut client = ServeClient::connect(port).unwrap();
+                for i in 0..per_client {
+                    let id = (t * per_client + i) as u64 + 1;
+                    let v = client.query(id, targets.clone()).unwrap();
+                    std::hint::black_box(v);
+                }
+            });
+        }
+    });
+    (threads * per_client) as f64 / t0.elapsed().as_secs_f64()
+}
 
 /// Nearest-rank percentile of an ascending-sorted sample vector.
 fn percentile(sorted: &[f64], p: f64) -> f64 {
@@ -97,6 +127,28 @@ fn main() {
     assert_eq!(stats.cache_misses, 0, "no updates were staged");
     println!("session stats: {}", stats.to_json());
 
+    // contended: hand the warm session to the concurrent serve loop
+    // and hammer it over the wire, 1 client vs `clients` clients
+    let clients = 8usize;
+    let per_client = if fast { 20 } else { 60 };
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let port = listener.local_addr().unwrap().port();
+    let server =
+        std::thread::spawn(move || serve_loop(listener, session));
+    // warmup: first wire roundtrip pays connection setup
+    {
+        let mut c = ServeClient::connect(port).unwrap();
+        std::hint::black_box(c.query(0, targets.clone()).unwrap());
+    }
+    let single_qps = wire_qps(port, 1, per_client, &targets);
+    let contended_qps = wire_qps(port, clients, per_client, &targets);
+    let scaling = contended_qps / single_qps;
+    println!("wire x{per_client}: single client {single_qps:.1} q/s, \
+              {clients} clients {contended_qps:.1} q/s aggregate \
+              ({scaling:.2}x, CI gate: >= 2x)");
+    ServeClient::connect(port).unwrap().shutdown().unwrap();
+    server.join().unwrap().unwrap();
+
     let body = jobj(&[
         ("bench", jstr("server_latency")),
         ("fast_mode", if fast { "true".into() } else { "false".into() }),
@@ -113,6 +165,10 @@ fn main() {
         ("queries_per_sec", jnum(qps)),
         ("targets_per_sec", jnum(qps * batch as f64)),
         ("cold_vs_warm", jnum(ratio)),
+        ("single_client_qps", jnum(single_qps)),
+        ("contended_clients", jnum(clients as f64)),
+        ("contended_qps", jnum(contended_qps)),
+        ("contended_vs_single", jnum(scaling)),
     ]);
     write_bench_json("BENCH_server.json", &body);
 }

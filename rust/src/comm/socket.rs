@@ -46,7 +46,10 @@ use crate::fmm::OpCounts;
 use crate::quadtree::BoxId;
 
 /// Version byte every frame leads with; bumped on any codec change.
-pub const WIRE_VERSION: u8 = 1;
+/// v2: RESULT gained `epoch`/`total`/`offset` (chunked streaming),
+/// SHUTDOWN gained an `id`, and the dedicated ACK frame replaced the
+/// empty-RESULT ack hack (DESIGN.md §15).
+pub const WIRE_VERSION: u8 = 2;
 /// Hard ceiling on a frame payload — anything larger is a codec error,
 /// not an allocation attempt.
 pub const MAX_FRAME: usize = 64 << 20;
@@ -67,6 +70,7 @@ const KIND_RESULT: u8 = 6;
 const KIND_UPDATE: u8 = 7;
 const KIND_STATS: u8 = 8;
 const KIND_SHUTDOWN: u8 = 9;
+const KIND_ACK: u8 = 10;
 
 /// Offset of a PACKET frame's route byte within the payload
 /// (`[version][kind][route]...`) — the one byte the hub rewrites when
@@ -105,21 +109,39 @@ pub enum Frame {
     /// target points.  `id` is echoed in the [`Frame::QueryResult`] so
     /// a client can pipeline requests.
     Query { id: u64, targets: Vec<[f64; 2]> },
-    /// Server → client: one `[u, v]` per query target, exact bits
-    /// (`f64::to_bits` on the wire, like everything else).  Also the
-    /// ack for [`Frame::Update`] and [`Frame::Shutdown`], with an
-    /// empty `vel`.
-    QueryResult { id: u64, vel: Vec<[f64; 2]> },
+    /// Server → client: one chunk of the answer — `[u, v]` per target,
+    /// exact bits (`f64::to_bits` on the wire, like everything else).
+    /// `epoch` names the snapshot that answered (bumped by every
+    /// applied UPDATE), `total` is the full answer length, and
+    /// `offset` is this chunk's starting target index; a client
+    /// reassembles chunks until `offset + vel.len() == total`.  Small
+    /// answers arrive as a single chunk (`offset == 0`,
+    /// `vel.len() == total`).
+    QueryResult {
+        id: u64,
+        epoch: u64,
+        total: u32,
+        offset: u32,
+        vel: Vec<[f64; 2]>,
+    },
     /// Client → server: replace the session's source particles
-    /// (moved / re-weighted set).  The rebuild is staged lazily and
-    /// amortized into the next query (DESIGN.md §15).
+    /// (moved / re-weighted set).  The server applies it eagerly
+    /// behind the writer lock and swaps in a freshly swept snapshot
+    /// with a bumped epoch (DESIGN.md §15); the [`Frame::Ack`] echoes
+    /// the new epoch.
     Update { id: u64, particles: Vec<[f64; 3]> },
     /// Client → server: request the session's aggregate request
     /// metrics.  Sent with an empty `json`; returned with it filled.
     Stats { json: String },
     /// Client → server: drain and exit cleanly (same path as
-    /// SIGINT/SIGTERM).
-    Shutdown,
+    /// SIGINT/SIGTERM).  `id` is echoed in the [`Frame::Ack`].
+    Shutdown { id: u64 },
+    /// Server → client: dedicated acknowledgement for
+    /// [`Frame::Update`] and [`Frame::Shutdown`] — unambiguous by
+    /// construction (wire v2; an empty RESULT used to double as the
+    /// ack, indistinguishable from a zero-target query's answer).
+    /// `epoch` is the session epoch after the acked request applied.
+    Ack { id: u64, epoch: u64 },
 }
 
 /// The frame's wire-protocol name (diagnostics: the server's
@@ -135,7 +157,8 @@ pub fn frame_name(f: &Frame) -> &'static str {
         Frame::QueryResult { .. } => "RESULT",
         Frame::Update { .. } => "UPDATE",
         Frame::Stats { .. } => "STATS",
-        Frame::Shutdown => "SHUTDOWN",
+        Frame::Shutdown { .. } => "SHUTDOWN",
+        Frame::Ack { .. } => "ACK",
     }
 }
 
@@ -496,9 +519,12 @@ pub fn encode_frame(f: &Frame) -> Vec<u8> {
             }
             e.buf
         }
-        Frame::QueryResult { id, vel } => {
+        Frame::QueryResult { id, epoch, total, offset, vel } => {
             let mut e = Enc::new(KIND_RESULT);
             e.u64(*id);
+            e.u64(*epoch);
+            e.u32(*total);
+            e.u32(*offset);
             e.u32(vel.len() as u32);
             for v in vel {
                 e.f64(v[0]);
@@ -523,7 +549,17 @@ pub fn encode_frame(f: &Frame) -> Vec<u8> {
             e.buf.extend_from_slice(json.as_bytes());
             e.buf
         }
-        Frame::Shutdown => Enc::new(KIND_SHUTDOWN).buf,
+        Frame::Shutdown { id } => {
+            let mut e = Enc::new(KIND_SHUTDOWN);
+            e.u64(*id);
+            e.buf
+        }
+        Frame::Ack { id, epoch } => {
+            let mut e = Enc::new(KIND_ACK);
+            e.u64(*id);
+            e.u64(*epoch);
+            e.buf
+        }
     }
 }
 
@@ -626,12 +662,20 @@ pub fn decode_frame(payload: &[u8]) -> Result<Frame, CommError> {
         }
         KIND_RESULT => {
             let id = d.u64("result id")?;
+            let epoch = d.u64("result epoch")?;
+            let total = d.u32("result total")?;
+            let offset = d.u32("result offset")?;
             let n = d.count(16, "velocity count")?;
+            if (offset as u64) + (n as u64) > u64::from(total) {
+                return Err(codec_err(format!(
+                    "result chunk overruns answer: offset {offset} + \
+                     {n} velocities > total {total}")));
+            }
             let mut vel = Vec::with_capacity(n);
             for _ in 0..n {
                 vel.push([d.f64("velocity u")?, d.f64("velocity v")?]);
             }
-            Frame::QueryResult { id, vel }
+            Frame::QueryResult { id, epoch, total, offset, vel }
         }
         KIND_UPDATE => {
             let id = d.u64("update id")?;
@@ -656,7 +700,11 @@ pub fn decode_frame(payload: &[u8]) -> Result<Frame, CommError> {
                 .to_string();
             Frame::Stats { json }
         }
-        KIND_SHUTDOWN => Frame::Shutdown,
+        KIND_SHUTDOWN => Frame::Shutdown { id: d.u64("shutdown id")? },
+        KIND_ACK => Frame::Ack {
+            id: d.u64("ack id")?,
+            epoch: d.u64("ack epoch")?,
+        },
         k => return Err(codec_err(format!("unknown frame kind {k}"))),
     };
     d.finish("frame")?;
@@ -1128,7 +1176,7 @@ mod tests {
     }
 
     fn gen_frame(g: &mut Gen) -> Frame {
-        match g.usize_in(0, 9) {
+        match g.usize_in(0, 10) {
             0 => Frame::Hello { rank: g.usize_in(0, 255) },
             1 => Frame::Welcome {
                 world: g.usize_in(1, 255),
@@ -1184,12 +1232,23 @@ mod tests {
                     .map(|_| [g.f64_in(-2.0, 2.0), g.f64_in(-2.0, 2.0)])
                     .collect(),
             },
-            6 => Frame::QueryResult {
-                id: g.u64(),
-                vel: (0..g.usize_in(0, 25))
-                    .map(|_| [g.normal(), g.normal()])
-                    .collect(),
-            },
+            6 => {
+                // a self-consistent chunk: offset + len <= total, as
+                // the server always produces (the decoder rejects the
+                // rest)
+                let n = g.usize_in(0, 25);
+                let offset = g.usize_in(0, 10) as u32;
+                let total = offset + n as u32 + g.usize_in(0, 5) as u32;
+                Frame::QueryResult {
+                    id: g.u64(),
+                    epoch: g.u64(),
+                    total,
+                    offset,
+                    vel: (0..n)
+                        .map(|_| [g.normal(), g.normal()])
+                        .collect(),
+                }
+            }
             7 => Frame::Update {
                 id: g.u64(),
                 particles: (0..g.usize_in(0, 20))
@@ -1206,7 +1265,8 @@ mod tests {
                     format!("{{\"queries\": {}}}", g.u64() % 1000)
                 },
             },
-            _ => Frame::Shutdown,
+            9 => Frame::Shutdown { id: g.u64() },
+            _ => Frame::Ack { id: g.u64(), epoch: g.u64() },
         }
     }
 
@@ -1285,12 +1345,23 @@ mod tests {
         // [checksum u64][body tag][msg tag] = offset 22; corrupt ix
         bytes[23] = 0xff;
         assert!(decode_frame(&bytes).is_err());
+        // a RESULT chunk whose offset + count overruns its declared
+        // total must be a codec error, not a client-side surprise
+        let mut chunk = vec![WIRE_VERSION, KIND_RESULT];
+        chunk.extend_from_slice(&1u64.to_le_bytes()); // id
+        chunk.extend_from_slice(&0u64.to_le_bytes()); // epoch
+        chunk.extend_from_slice(&2u32.to_le_bytes()); // total
+        chunk.extend_from_slice(&2u32.to_le_bytes()); // offset
+        chunk.extend_from_slice(&1u32.to_le_bytes()); // count
+        chunk.extend_from_slice(&[0; 16]); // one velocity
+        let err = decode_frame(&chunk).expect_err("overrunning chunk");
+        assert!(matches!(err, CommError::Codec { .. }));
         // random tails must decode or error, never panic — the kind
-        // range deliberately overshoots the valid 0..=9 so unknown
+        // range deliberately overshoots the valid 0..=10 so unknown
         // kinds stay fuzzed too
         check("garbage safety", 256, |g| {
             let n = g.usize_in(0, 64);
-            let mut buf = vec![WIRE_VERSION, g.usize_in(0, 11) as u8];
+            let mut buf = vec![WIRE_VERSION, g.usize_in(0, 12) as u8];
             for _ in 0..n {
                 buf.push(g.u64() as u8);
             }

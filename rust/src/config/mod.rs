@@ -21,7 +21,7 @@ const VALID_KEYS: &[&str] = &[
     "backend", "seed", "artifacts", "par-threads|threads", "steps",
     "dt", "rebalance-threshold", "rebalance", "integrator",
     "tree", "leaf-capacity|capacity", "chaos|chaos-profile",
-    "chaos-seed", "serve-port|port",
+    "chaos-seed", "serve-port|port", "serve-clients|clients",
 ];
 
 /// Full run configuration for the coordinator.
@@ -88,6 +88,10 @@ pub struct RunConfig {
     /// only); 0 asks the OS for an ephemeral port, which `serve`
     /// prints on stdout
     pub serve_port: u16,
+    /// maximum concurrent client connections (and executor threads)
+    /// the resident server accepts; further connects queue in the OS
+    /// accept backlog (DESIGN.md §15)
+    pub serve_clients: usize,
 }
 
 impl Default for RunConfig {
@@ -117,6 +121,7 @@ impl Default for RunConfig {
             chaos: "off".into(),
             chaos_seed: 0,
             serve_port: 0,
+            serve_clients: 8,
         }
     }
 }
@@ -253,6 +258,13 @@ impl RunConfig {
             "serve-port" | "serve_port" | "port" => {
                 self.serve_port = value.parse()?
             }
+            "serve-clients" | "serve_clients" | "clients" => {
+                let n: usize = value.parse()?;
+                if n == 0 {
+                    bail!("serve-clients must be >= 1");
+                }
+                self.serve_clients = n;
+            }
             _ => bail!(
                 "unknown key (valid keys: {})",
                 VALID_KEYS.join(", ")
@@ -329,7 +341,8 @@ impl RunConfig {
              artifacts = {}\npar-threads = {}\nsteps = {}\ndt = {}\n\
              rebalance-threshold = {}\nrebalance = {}\n\
              integrator = {}\ntree = {}\nleaf-capacity = {}\n\
-             chaos = {}\nchaos-seed = {}\nserve-port = {}\n",
+             chaos = {}\nchaos-seed = {}\nserve-port = {}\n\
+             serve-clients = {}\n",
             self.particles,
             self.levels,
             self.cut_level,
@@ -354,6 +367,7 @@ impl RunConfig {
             self.chaos,
             self.chaos_seed,
             self.serve_port,
+            self.serve_clients,
         )
     }
 
@@ -456,6 +470,19 @@ mod tests {
         assert!(err.contains("kernel") && err.contains("particles|n"),
                 "{err}");
         assert!(c.apply_ini("bogus = 1\n").is_err());
+    }
+
+    #[test]
+    fn serve_clients_parses_aliases_and_rejects_zero() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.serve_clients, 8, "default concurrency");
+        c.set("serve-clients", "4").unwrap();
+        assert_eq!(c.serve_clients, 4);
+        c.set("clients", "16").unwrap();
+        assert_eq!(c.serve_clients, 16);
+        let err = c.set("serve-clients", "0").unwrap_err().to_string();
+        assert!(err.contains(">= 1"), "{err}");
+        assert_eq!(c.serve_clients, 16, "rejected value must not apply");
     }
 
     #[test]
@@ -575,9 +602,11 @@ mod tests {
              network = ethernet\ndist = clustered\nseed = 42\n\
              threads = 2\nsteps = 13\nrebalance = off\n\
              integrator = rk2\ntree = adaptive\nleaf-capacity = 24\n\
-             chaos = lossy\nchaos-seed = 99\nserve-port = 4810\n",
+             chaos = lossy\nchaos-seed = 99\nserve-port = 4810\n\
+             serve-clients = 3\n",
         )
         .unwrap();
+        assert_eq!(c.serve_clients, 3);
         c.sigma = 0.1 + 0.2; // not exactly 0.3
         c.dt = 1.0 / 3.0;
         c.rebalance_threshold = f64::from_bits(0x3fe5_5555_5555_5555);

@@ -72,6 +72,10 @@ COMMON FLAGS (defaults in brackets)
   serve/query: --port N [0]  loopback TCP port (serve: 0 = ephemeral,
               printed as `listening on 127.0.0.1:PORT`; query: must
               name the served port)
+  serve only: --clients N [8]  max concurrent client connections =
+              executor threads answering from the shared read-only
+              session snapshot (further connects wait in the accept
+              backlog)
   query only: --stats (print the server's request-metrics JSON)
               --shutdown (stop the server cleanly)
   simulate:   --steps N [20]  --dt T [0.002]  --integrator [euler|rk2]

@@ -2,6 +2,8 @@
 //! metrics.  Library-level entry points used by the CLI, the examples
 //! and the benches.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Context, Result};
 
 use super::workload;
@@ -88,6 +90,50 @@ fn pjrt_backend(config: &RunConfig) -> Result<Box<dyn OpsBackend>> {
         );
     }
     Ok(Box::new(be))
+}
+
+/// A thread-shareable operator backend: what the concurrent resident
+/// server holds in its epoch-tagged snapshots, where one backend is
+/// read by `serve-clients` executor threads at once (DESIGN.md §15).
+pub type SharedBackend = Arc<dyn OpsBackend + Send + Sync>;
+
+/// [`native_backend`], but `Send + Sync` by type: the native backend
+/// is plain data (dims + kernel constants + translation tables), so it
+/// shares across threads as-is; only the type-erasure has to say so.
+fn native_backend_shared(config: &RunConfig) -> SharedBackend {
+    let dims = native_dims(config);
+    match config.kernel {
+        KernelSpec::BiotSavart => Arc::new(NativeBackend::new(
+            dims,
+            BiotSavart2D::new(config.sigma),
+        )),
+        KernelSpec::LogPotential => {
+            Arc::new(NativeBackend::new(dims, LogPotential2D))
+        }
+        KernelSpec::Gravity => {
+            Arc::new(NativeBackend::new(dims, Gravity2D::default()))
+        }
+    }
+}
+
+/// Build a [`SharedBackend`] per the config.  `pjrt` is an error here
+/// rather than at the first request: its executable handles are
+/// thread-local by construction, so it cannot back a snapshot that
+/// concurrent executor threads read (`auto` degrades to native for the
+/// same reason the PJRT path would fail the resident server's
+/// cold-start probe anyway — no cached-operator fast path).
+pub fn make_shared_backend(config: &RunConfig) -> Result<SharedBackend> {
+    match config.backend.as_str() {
+        "native" | "auto" => Ok(native_backend_shared(config)),
+        "pjrt" => bail!(
+            "the resident server shares one snapshot across \
+             serve-clients threads; the PJRT backend is thread-local \
+             (use --backend native)"
+        ),
+        other => {
+            bail!("unknown backend '{other}' (native | pjrt | auto)")
+        }
+    }
 }
 
 /// Build a backend per the config: `native`, `pjrt`, or `auto` (the

@@ -15,10 +15,11 @@ pub mod workload;
 
 pub use cli::{cli_main, dispatch};
 pub use process::{run_process, worker_entry};
-pub use driver::{make_backend, native_dims, prepare,
-                 prepare_with_particles, scaling_point, strong_scaling,
-                 Problem};
-pub use server::{serve, serve_loop, FmmSession, ServeClient};
+pub use driver::{make_backend, make_shared_backend, native_dims,
+                 prepare, prepare_with_particles, scaling_point,
+                 strong_scaling, Problem, SharedBackend};
+pub use server::{serve, serve_loop, FmmSession, ServeClient,
+                 SessionSnapshot, RESULT_CHUNK};
 pub use simulation::Simulation;
 pub use solver::{FmmSolver, RunMode, Solution};
 pub use workload::generate;

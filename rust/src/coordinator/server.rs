@@ -7,54 +7,78 @@
 //!
 //! The split is:
 //!
-//! * [`FmmSession`] — the transport-free core.  It owns a prepared
-//!   [`Problem`], the constructed operator backend, and the solved
-//!   [`FmmState`], and answers arbitrary-target queries through
-//!   [`Evaluator::eval_targets`] (leaf location + cached-L2P far field
-//!   + CSR-sliced P2P near field).  Incremental source changes are
-//!   *staged* ([`FmmSession::update`]) and applied lazily on the next
-//!   query — one rebuild (`Quadtree::rebuild_into`, allocation-steady)
-//!   plus one expansion re-sweep, amortized across however many
-//!   queries follow.
-//! * [`serve`] / [`serve_loop`] — the wire harness: a sequential
-//!   single-connection TCP accept loop dispatching the QUERY / UPDATE
-//!   / STATS / SHUTDOWN frames, polling the process-wide shutdown
-//!   latch (`util::signal`) between reads so SIGINT/SIGTERM drain the
-//!   in-flight request and exit cleanly.
+//! * [`SessionSnapshot`] — the immutable read half: a prepared
+//!   [`Problem`], the thread-shareable operator backend, the solved
+//!   `FmmState`, and an **epoch** tag (0 cold, +1 per applied UPDATE).
+//!   Queries need only `&self` ([`SessionSnapshot::eval`] →
+//!   [`Evaluator::eval_targets`]: leaf location + cached-L2P far field
+//!   + CSR-sliced P2P near field), so any number of executor threads
+//!   answer from one snapshot concurrently.
+//! * [`FmmSession`] — the transport-free staging half library callers
+//!   use: it owns the current snapshot plus the rebuild scratch, and
+//!   keeps the PR-9 semantics — [`FmmSession::update`] *stages* a
+//!   particle swap that the next [`FmmSession::query`] applies lazily
+//!   (one `Quadtree::rebuild_into` + one re-sweep, amortized).
+//! * [`serve`] / [`serve_loop`] — the concurrent wire harness: up to
+//!   `serve-clients` connections (default 8), one reader thread per
+//!   connection feeding a bounded dispatch queue, `serve-clients`
+//!   executor threads answering QUERYs from the current snapshot.
+//!   UPDATE application is serialized behind a writer lock that swaps
+//!   in a freshly swept snapshot with a bumped epoch — in-flight
+//!   queries finish against the old one (the sweep state is immutable
+//!   between updates, so concurrent reads are free).  Big answers
+//!   stream in [`RESULT_CHUNK`]-sized RESULT frames.  The loop polls
+//!   the process-wide shutdown latch (`util::signal`) so
+//!   SIGINT/SIGTERM drain in-flight requests and exit cleanly.
 //! * [`ServeClient`] — the blocking client the `petfmm query`
-//!   subcommand (and the tests) use.
+//!   subcommand (and the tests) use.  Wire v2: acks are dedicated
+//!   `ACK {id, epoch}` frames matched strictly by id.
 //!
 //! **Determinism.**  A warm query is bitwise-identical to a cold
-//! one-shot serial solve at the same target points: the session's
+//! one-shot serial solve at the same target points: the snapshot's
 //! sweep is exactly the facade's `Serial` arm (same backend
 //! construction, same evaluator, same thread-invariant batching), and
 //! the per-target path is pinned bitwise to the solve's per-target sum
-//! (see `eval_targets`).  An UPDATE followed by a query matches a cold
-//! solve over the updated particles for the same reason:
-//! `rebuild_into` reproduces `Quadtree::build` exactly.
+//! (see `eval_targets`).  Concurrency does not weaken this: a snapshot
+//! is immutable, every RESULT echoes the epoch of the snapshot that
+//! answered it, and any interleaving of queries between two UPDATEs is
+//! bitwise the cold solve at that epoch's particle set
+//! (`rebuild_into` reproduces `Quadtree::build` exactly).
 //!
-//! **Metrics.**  Every answered query emits a
-//! [`QueryManifest`](crate::metrics::QueryManifest) (queue time, eval
-//! time, cache hit/miss, targets/sec, wire bytes) folded into the
-//! session's [`ServerStats`] — the JSON body of the STATS reply and of
-//! the final line `serve` prints on shutdown.
+//! **Fault tolerance.**  A client that disconnects — before, during,
+//! or *mid-reply* — costs exactly its own connection: read failures
+//! end the reader thread, write failures are logged and shut the one
+//! socket down, and the server keeps serving (the PR-9 loop instead
+//! propagated reply-write errors out of `serve_loop`, so a broken
+//! pipe took the whole service down).
+//!
+//! **Metrics.**  Every request emits a
+//! [`QueryManifest`](crate::metrics::QueryManifest) — `queue_secs` is
+//! stamped at **enqueue** into the dispatch queue (the PR-9 loop
+//! stamped it after the frame was already read, so it measured decode
+//! time and reported ~0), `epoch` names the answering snapshot, and
+//! rejected requests are recorded too.  The aggregate [`ServerStats`]
+//! (STATS reply, final `serve` log line) adds rejection counters,
+//! per-connection queue depth, and p50/p99 queue/eval latency.
 
-use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::driver::{self, make_backend, Problem};
+use super::driver::{self, Problem, SharedBackend};
 use crate::comm::{decode_frame, encode_frame, frame_name, write_frame,
                   CommError, Frame, FrameReader};
 use crate::config::RunConfig;
-use crate::fmm::{Evaluator, FmmState, OpsBackend};
+use crate::fmm::{Evaluator, FmmState};
 use crate::metrics::{QueryManifest, ServerStats};
 use crate::quadtree::{validate_particles, Particle, RebuildScratch};
 use crate::util::signal;
 
-/// How often the accept/read loops wake to poll the shutdown latch.
+/// How often the accept/read/executor loops wake to poll the shutdown
+/// latch and the wire-level stop flag.
 const POLL: Duration = Duration::from_millis(25);
 
 /// Client-side reply deadline: a server that says nothing for this
@@ -62,19 +86,115 @@ const POLL: Duration = Duration::from_millis(25);
 /// before it starts listening, so replies are never this slow).
 const CLIENT_DEADLINE: Duration = Duration::from_secs(120);
 
-/// A resident solve session: tree + operator tables + expansion state
-/// built once, then queried at arbitrary target points.
+/// Targets per RESULT frame: answers larger than this stream in
+/// chunks (64 KiB of velocity payload each) instead of one frame that
+/// could brush `MAX_FRAME`; the client reassembles by offset.
+pub const RESULT_CHUNK: usize = 4096;
+
+/// Dispatch-queue capacity per executor thread: readers enqueue up to
+/// this many requests ahead of the executors before the bounded
+/// channel applies backpressure to the sockets.
+const QUEUE_SLACK: usize = 8;
+
+/// The id a [`ServeClient::shutdown`] tags its SHUTDOWN frame with
+/// (echoed in the ACK; out of the way of application request ids).
+const SHUTDOWN_ID: u64 = u64::MAX;
+
+/// The immutable read half of a resident session: one prepared
+/// problem, one thread-shareable operator backend, one solved
+/// expansion state, tagged with the **epoch** that produced it.
 ///
-/// Transport-free — the TCP harness ([`serve_loop`]) and direct
-/// library callers use the same object.  Queries go through
-/// [`FmmSession::query`]; the caller folds the returned manifest into
-/// the session aggregate with [`FmmSession::record`] once it has
-/// filled in whatever wire-level fields it knows (the serve loop adds
-/// queue time and frame bytes; library callers usually record as-is).
-pub struct FmmSession {
+/// Everything a QUERY needs is `&self`, which is the whole concurrency
+/// argument of the serve loop: executor threads clone the
+/// `Arc<SessionSnapshot>` out of the server's `RwLock` and evaluate
+/// without further coordination, while an UPDATE builds a *new*
+/// snapshot on the side and swaps the `Arc` — in-flight queries keep
+/// the old one alive until they finish.
+pub struct SessionSnapshot {
     problem: Problem,
-    backend: Arc<dyn OpsBackend>,
+    backend: SharedBackend,
     state: FmmState,
+    epoch: u64,
+}
+
+impl SessionSnapshot {
+    /// Sweep a prepared problem into an epoch-0 snapshot over an
+    /// already-constructed backend (warm-cache sharing: a solver's
+    /// [`cached_ops`](crate::coordinator::FmmSolver::cached_ops) can
+    /// seed this, and [`SessionSnapshot::backend`] hands tables back
+    /// the other way).
+    pub fn build(problem: Problem, backend: SharedBackend)
+        -> Result<SessionSnapshot> {
+        let state = sweep(&problem, backend.as_ref());
+        // fail the cold start, not the first request: the
+        // arbitrary-target path needs the cached-operator fast path
+        Evaluator::new(&problem.tree, backend.as_ref())
+            .eval_targets(&state, &[], &[])?;
+        Ok(SessionSnapshot { problem, backend, state, epoch: 0 })
+    }
+
+    /// Evaluate the field at arbitrary target points — `&self` only,
+    /// bitwise-identical to a cold one-shot serial solve at the same
+    /// points over this snapshot's particle set.
+    pub fn eval(&self, targets: &[[f64; 2]])
+        -> Result<Vec<[f64; 2]>> {
+        let txs: Vec<f64> = targets.iter().map(|t| t[0]).collect();
+        let tys: Vec<f64> = targets.iter().map(|t| t[1]).collect();
+        let vel = Evaluator::new(&self.problem.tree,
+                                 self.backend.as_ref())
+            .with_threads(self.problem.config.par_threads)
+            .eval_targets(&self.state, &txs, &tys)?;
+        Ok(vel)
+    }
+
+    /// The successor snapshot over a replacement particle set:
+    /// rebuild the tree (allocation-steady via the caller's scratch),
+    /// re-sweep, bump the epoch.  `&self` — the current snapshot
+    /// stays untouched for queries still in flight.  The particles
+    /// must already be validated ([`validate_particles`]).
+    pub fn advance(&self, scratch: &mut RebuildScratch,
+                   particles: Vec<Particle>) -> SessionSnapshot {
+        let mut problem = self.problem.clone();
+        problem.tree.rebuild_into(scratch, particles);
+        let state = sweep(&problem, self.backend.as_ref());
+        SessionSnapshot {
+            problem,
+            backend: Arc::clone(&self.backend),
+            state,
+            epoch: self.epoch + 1,
+        }
+    }
+
+    /// The epoch this snapshot answers at (0 cold, +1 per UPDATE).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The prepared problem behind this snapshot.
+    pub fn problem(&self) -> &Problem {
+        &self.problem
+    }
+
+    /// The operator backend — shareable with a solver
+    /// ([`FmmSolver::with_backend`](crate::coordinator::FmmSolver::with_backend))
+    /// so a cold solve next to a resident session skips table
+    /// construction.
+    pub fn backend(&self) -> SharedBackend {
+        Arc::clone(&self.backend)
+    }
+}
+
+/// A resident solve session: the current [`SessionSnapshot`] plus the
+/// mutable staging half (rebuild scratch, staged update, metrics).
+///
+/// Transport-free — the TCP harness ([`serve_loop`]) dismantles it
+/// into its shared server state; direct library callers use it as-is.
+/// Queries go through [`FmmSession::query`]; the caller folds the
+/// returned manifest into the session aggregate with
+/// [`FmmSession::record`] once it has filled in whatever wire-level
+/// fields it knows.
+pub struct FmmSession {
+    snapshot: Arc<SessionSnapshot>,
     scratch: RebuildScratch,
     /// staged UPDATE, applied lazily by the next query
     pending: Option<Vec<Particle>>,
@@ -94,23 +214,36 @@ impl FmmSession {
     /// Session over an already-prepared problem (no workload
     /// regeneration, no second Morton sort or partition).
     pub fn from_problem(problem: Problem) -> Result<FmmSession> {
-        let backend: Arc<dyn OpsBackend> =
-            Arc::from(make_backend(&problem.config)?);
-        let state = sweep(&problem, backend.as_ref());
-        // fail the cold start, not the first request: the
-        // arbitrary-target path needs the cached-operator fast path,
-        // which e.g. the PJRT backend does not offer
-        Evaluator::new(&problem.tree, backend.as_ref())
-            .eval_targets(&state, &[], &[])?;
-        Ok(FmmSession {
-            problem,
-            backend,
-            state,
+        let backend = driver::make_shared_backend(&problem.config)?;
+        Ok(FmmSession::from_snapshot(
+            SessionSnapshot::build(problem, backend)?,
+        ))
+    }
+
+    /// Session over an existing snapshot (shared operator tables,
+    /// already-swept state — nothing left to pay).
+    pub fn from_snapshot(snapshot: SessionSnapshot) -> FmmSession {
+        FmmSession {
+            snapshot: Arc::new(snapshot),
             scratch: RebuildScratch::default(),
             pending: None,
             stats: ServerStats::default(),
             seq: 0,
-        })
+        }
+    }
+
+    /// The current snapshot (staged updates are **not** applied —
+    /// call [`FmmSession::query`] or let the serve loop flush them).
+    pub fn snapshot(&self) -> Arc<SessionSnapshot> {
+        Arc::clone(&self.snapshot)
+    }
+
+    /// Apply a staged update now, if any.
+    fn flush_pending(&mut self) {
+        if let Some(parts) = self.pending.take() {
+            self.snapshot =
+                Arc::new(self.snapshot.advance(&mut self.scratch, parts));
+        }
     }
 
     /// Evaluate the field at arbitrary target points.
@@ -128,20 +261,14 @@ impl FmmSession {
         -> Result<(Vec<[f64; 2]>, QueryManifest)> {
         let t0 = Instant::now();
         let cache_hit = self.pending.is_none();
-        if let Some(parts) = self.pending.take() {
-            self.problem.tree.rebuild_into(&mut self.scratch, parts);
-            self.state = sweep(&self.problem, self.backend.as_ref());
-        }
-        let txs: Vec<f64> = targets.iter().map(|t| t[0]).collect();
-        let tys: Vec<f64> = targets.iter().map(|t| t[1]).collect();
-        let vel = Evaluator::new(&self.problem.tree,
-                                 self.backend.as_ref())
-            .with_threads(self.problem.config.par_threads)
-            .eval_targets(&self.state, &txs, &tys)?;
+        self.flush_pending();
+        let vel = self.snapshot.eval(targets)?;
         self.seq += 1;
         let manifest = QueryManifest {
             seq: self.seq,
             id,
+            epoch: self.snapshot.epoch(),
+            rejected: false,
             queue_secs: 0.0,
             eval_secs: t0.elapsed().as_secs_f64(),
             cache_hit,
@@ -156,6 +283,8 @@ impl FmmSession {
     /// must fail the UPDATE, not some later query) but *applied*
     /// lazily: the next query pays one tree rebuild plus one expansion
     /// re-sweep, and every query after that is a cache hit again.
+    /// (The wire server instead applies updates eagerly behind its
+    /// writer lock, so its queries are always cache hits.)
     pub fn update(&mut self, particles: Vec<Particle>) -> Result<()> {
         validate_particles(&particles)?;
         self.pending = Some(particles);
@@ -176,14 +305,15 @@ impl FmmSession {
     /// The prepared problem the session answers from (the tree
     /// reflects the last *applied* update, not a staged one).
     pub fn problem(&self) -> &Problem {
-        &self.problem
+        self.snapshot.problem()
     }
 }
 
 /// The facade `Serial` arm's exact sweep — same backend object, same
 /// evaluator, same thread setting — so session answers stay bitwise
 /// on the solve.
-fn sweep(problem: &Problem, backend: &dyn OpsBackend) -> FmmState {
+fn sweep(problem: &Problem, backend: &dyn crate::fmm::OpsBackend)
+    -> FmmState {
     Evaluator::new(&problem.tree, backend)
         .with_threads(problem.config.par_threads)
         .evaluate()
@@ -202,143 +332,432 @@ pub fn serve(config: &RunConfig) -> Result<()> {
     serve_loop(listener, session)
 }
 
-/// The accept/dispatch loop behind [`serve`], split out so tests can
-/// bind their own ephemeral listener and drive the server from a
-/// thread.  Prints `listening on <addr>` once ready (the `query`
-/// client's machine-readable handshake) and the stats JSON on exit.
+/// State shared by the accept loop, the per-connection reader threads
+/// and the executor pool.
+struct ServerShared {
+    /// the current snapshot; queries clone the `Arc` out under the
+    /// read lock, an UPDATE swaps a successor in under the write lock
+    snapshot: RwLock<Arc<SessionSnapshot>>,
+    /// serializes UPDATE application (and owns the rebuild scratch,
+    /// which is exactly the mutable state an update needs)
+    update_scratch: Mutex<RebuildScratch>,
+    stats: Mutex<ServerStats>,
+    /// monotone request sequence across all connections
+    seq: AtomicU64,
+    /// wire-level stop flag (SHUTDOWN frame; the OS signal latch is
+    /// polled separately)
+    stop: AtomicBool,
+    /// one registered depth counter per live connection (requests
+    /// read off the socket but not yet answered) — the STATS
+    /// `queue_depth` array
+    conns: Mutex<Vec<ConnSlot>>,
+    conn_ids: AtomicU64,
+}
+
+struct ConnSlot {
+    id: u64,
+    depth: Arc<AtomicU64>,
+}
+
+/// One decoded request in the dispatch queue, stamped at enqueue so
+/// `queue_secs` measures real time spent queued.
+struct Request {
+    frame: Frame,
+    arrived: Instant,
+    bytes_in: u64,
+    writer: Arc<Mutex<TcpStream>>,
+    depth: Arc<AtomicU64>,
+}
+
+impl ServerShared {
+    fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst) || signal::shutdown_requested()
+    }
+
+    fn current(&self) -> Arc<SessionSnapshot> {
+        Arc::clone(&self.snapshot.read().unwrap())
+    }
+
+    fn next_seq(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    fn register_conn(&self, depth: Arc<AtomicU64>) -> u64 {
+        let id = self.conn_ids.fetch_add(1, Ordering::Relaxed);
+        self.conns.lock().unwrap().push(ConnSlot { id, depth });
+        id
+    }
+
+    fn deregister_conn(&self, id: u64) {
+        self.conns.lock().unwrap().retain(|c| c.id != id);
+    }
+
+    fn conn_count(&self) -> usize {
+        self.conns.lock().unwrap().len()
+    }
+
+    /// The STATS reply body: the aggregate plus point-in-time epoch,
+    /// connection count and per-connection queue depths.
+    fn render_stats(&self) -> String {
+        let mut s = self.stats.lock().unwrap().clone();
+        s.epoch = self.current().epoch();
+        let conns = self.conns.lock().unwrap();
+        s.connections = conns.len() as u64;
+        s.queue_depth = conns
+            .iter()
+            .map(|c| c.depth.load(Ordering::Relaxed))
+            .collect();
+        s.to_json()
+    }
+}
+
+/// Drop one client: shut the socket down both ways so its reader
+/// thread unblocks and deregisters.  Never an error — the connection
+/// may already be gone, which is the usual reason we are here.
+fn drop_connection(writer: &Mutex<TcpStream>) {
+    let _ = writer.lock().unwrap().shutdown(Shutdown::Both);
+}
+
+/// Write one frame to a shared connection.
+fn write_one(writer: &Mutex<TcpStream>, payload: &[u8])
+    -> Result<(), CommError> {
+    let mut w = writer.lock().unwrap();
+    write_frame(&mut w, payload, 0)
+}
+
+/// Encode one answer as [`RESULT_CHUNK`]-sized RESULT frames (a
+/// single frame when it fits, which is the common case).  Encoding is
+/// separate from writing so the reply's wire bytes can go into the
+/// manifest — and the manifest into the stats — *before* the first
+/// byte reaches the client.
+fn encode_result_frames(id: u64, epoch: u64, vel: &[[f64; 2]])
+    -> Vec<Vec<u8>> {
+    let total = vel.len() as u32;
+    let mut frames = Vec::with_capacity(vel.len() / RESULT_CHUNK + 1);
+    let mut offset = 0usize;
+    loop {
+        let end = (offset + RESULT_CHUNK).min(vel.len());
+        frames.push(encode_frame(&Frame::QueryResult {
+            id,
+            epoch,
+            total,
+            offset: offset as u32,
+            vel: vel[offset..end].to_vec(),
+        }));
+        offset = end;
+        if offset >= vel.len() {
+            return frames;
+        }
+    }
+}
+
+/// Write a multi-frame reply to a shared connection.  The writer lock
+/// is held across all frames so one reply stays contiguous on the
+/// socket; distinct replies are disambiguated by id.
+fn write_all(writer: &Mutex<TcpStream>, frames: &[Vec<u8>])
+    -> Result<(), CommError> {
+    let mut w = writer.lock().unwrap();
+    for frame in frames {
+        write_frame(&mut w, frame, 0)?;
+    }
+    Ok(())
+}
+
+/// Answer one dequeued request.  Every arm treats a reply-write
+/// failure like a read disconnect: log, drop that one connection,
+/// keep the server up.
+fn handle_request(shared: &ServerShared, req: Request) {
+    let Request { frame, arrived, bytes_in, writer, depth } = req;
+    match frame {
+        Frame::Query { id, targets } => {
+            // queue time ends where evaluation begins
+            let queue_secs = arrived.elapsed().as_secs_f64();
+            let snap = shared.current();
+            let t0 = Instant::now();
+            let outcome = snap.eval(&targets);
+            let mut manifest = QueryManifest {
+                seq: shared.next_seq(),
+                id,
+                epoch: snap.epoch(),
+                rejected: outcome.is_err(),
+                queue_secs,
+                eval_secs: t0.elapsed().as_secs_f64(),
+                cache_hit: outcome.is_ok(),
+                targets: targets.len(),
+                bytes_in,
+                bytes_out: 0,
+            };
+            match outcome {
+                Ok(vel) => {
+                    let frames =
+                        encode_result_frames(id, snap.epoch(), &vel);
+                    manifest.bytes_out = frames
+                        .iter()
+                        .map(|f| f.len() as u64 + 4)
+                        .sum();
+                    // recorded before the first reply byte leaves, so
+                    // a client that got its answer always finds it in
+                    // STATS already
+                    shared.stats.lock().unwrap().record(&manifest);
+                    if let Err(e) = write_all(&writer, &frames) {
+                        eprintln!(
+                            "petfmm serve: reply write failed ({e}); \
+                             dropping that client"
+                        );
+                        drop_connection(&writer);
+                    }
+                }
+                Err(e) => {
+                    // a bad request (e.g. non-finite target) must not
+                    // poison the resident state: log, record the
+                    // rejection, drop the client, keep serving
+                    eprintln!(
+                        "petfmm serve: query {id} rejected ({e:#})");
+                    shared.stats.lock().unwrap().record(&manifest);
+                    drop_connection(&writer);
+                }
+            }
+        }
+        Frame::Update { id, particles } => {
+            match validate_particles(&particles) {
+                Ok(()) => {
+                    let epoch = {
+                        // the writer lock: one update at a time
+                        // builds its successor on the side...
+                        let mut scratch =
+                            shared.update_scratch.lock().unwrap();
+                        let next = Arc::new(
+                            shared.current()
+                                .advance(&mut scratch, particles),
+                        );
+                        let epoch = next.epoch();
+                        // ...and the swap is the only write-locked
+                        // moment; in-flight queries finish on the Arc
+                        // they already cloned
+                        *shared.snapshot.write().unwrap() = next;
+                        epoch
+                    };
+                    let ack = encode_frame(&Frame::Ack { id, epoch });
+                    {
+                        let mut s = shared.stats.lock().unwrap();
+                        s.updates += 1;
+                        s.epoch = epoch;
+                        s.bytes_in += bytes_in;
+                        s.bytes_out += ack.len() as u64 + 4;
+                    }
+                    if let Err(e) = write_one(&writer, &ack) {
+                        eprintln!(
+                            "petfmm serve: ack write failed ({e}); \
+                             dropping that client"
+                        );
+                        drop_connection(&writer);
+                    }
+                }
+                Err(e) => {
+                    eprintln!(
+                        "petfmm serve: update {id} rejected ({e:#})");
+                    shared.stats.lock().unwrap()
+                        .record_rejected_update(bytes_in, 0);
+                    drop_connection(&writer);
+                }
+            }
+        }
+        Frame::Stats { .. } => {
+            let reply = encode_frame(&Frame::Stats {
+                json: shared.render_stats(),
+            });
+            if let Err(e) = write_one(&writer, &reply) {
+                eprintln!(
+                    "petfmm serve: stats write failed ({e}); \
+                     dropping that client"
+                );
+                drop_connection(&writer);
+            }
+        }
+        Frame::Shutdown { id } => {
+            // ack so the client can distinguish a served shutdown
+            // from a crash, then stop the whole server
+            let epoch = shared.current().epoch();
+            let ack = encode_frame(&Frame::Ack { id, epoch });
+            if let Err(e) = write_one(&writer, &ack) {
+                eprintln!("petfmm serve: shutdown ack failed ({e})");
+            }
+            shared.stop.store(true, Ordering::SeqCst);
+        }
+        other => {
+            eprintln!(
+                "petfmm serve: unexpected {} frame; dropping client",
+                frame_name(&other)
+            );
+            drop_connection(&writer);
+        }
+    }
+    depth.fetch_sub(1, Ordering::Relaxed);
+}
+
+/// One executor thread: dequeue, answer, repeat; drain what is queued
+/// when the stop flag trips, then exit.
+fn executor_loop(shared: &ServerShared,
+                 rx: &Mutex<mpsc::Receiver<Request>>) {
+    loop {
+        let next = rx.lock().unwrap().recv_timeout(POLL);
+        match next {
+            Ok(req) => handle_request(shared, req),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if shared.stopping() {
+                    return;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+/// One reader thread: frame the socket, stamp arrival, enqueue into
+/// the bounded dispatch queue (blocking when it is full — that is the
+/// backpressure).  Exits on disconnect, malformed input, or stop.
+fn reader_loop(shared: &ServerShared, stream: TcpStream,
+               tx: mpsc::SyncSender<Request>) {
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(e) => {
+            eprintln!("petfmm serve: dropping client ({e})");
+            return;
+        }
+    };
+    let depth = Arc::new(AtomicU64::new(0));
+    let conn_id = shared.register_conn(Arc::clone(&depth));
+    let mut reader = FrameReader::new(stream, 0);
+    loop {
+        if shared.stopping() {
+            break;
+        }
+        match reader.read_frame(Some(Instant::now() + POLL)) {
+            // deadline: no complete frame yet — poll the flags, retry
+            Ok(None) => continue,
+            Ok(Some(payload)) => {
+                // queue time starts here, with the frame fully read
+                // and about to enter the dispatch queue
+                let arrived = Instant::now();
+                let bytes_in = payload.len() as u64 + 4;
+                let frame = match decode_frame(&payload) {
+                    Ok(f) => f,
+                    Err(e) => {
+                        eprintln!(
+                            "petfmm serve: dropping client ({e})");
+                        break;
+                    }
+                };
+                depth.fetch_add(1, Ordering::Relaxed);
+                let req = Request {
+                    frame,
+                    arrived,
+                    bytes_in,
+                    writer: Arc::clone(&writer),
+                    depth: Arc::clone(&depth),
+                };
+                if tx.send(req).is_err() {
+                    // the executors are gone: server is shutting down
+                    depth.fetch_sub(1, Ordering::Relaxed);
+                    break;
+                }
+            }
+            // client hung up: this connection is done
+            Err(CommError::Disconnected { .. }) => break,
+            Err(e) => {
+                eprintln!("petfmm serve: dropping client ({e})");
+                break;
+            }
+        }
+    }
+    shared.deregister_conn(conn_id);
+}
+
+/// The concurrent accept/dispatch harness behind [`serve`], split out
+/// so tests can bind their own ephemeral listener and drive the
+/// server from a thread.  Prints `listening on <addr>` once ready
+/// (the `query` client's machine-readable handshake) and the stats
+/// JSON on exit.
 ///
-/// Connections are served **sequentially** — one client at a time,
-/// requests answered in arrival order (that is what makes the
-/// queue-time metric and the staged-update semantics well defined).
+/// Up to `serve-clients` connections are read concurrently (further
+/// connects wait in the OS accept backlog); requests flow through one
+/// bounded dispatch queue into `serve-clients` executor threads.
+/// QUERYs run concurrently against the current epoch's snapshot;
+/// UPDATEs serialize behind the writer lock and swap in the successor
+/// snapshot.  Requests on a single connection may be answered out of
+/// order by different executors — ids (and the epoch echo)
+/// disambiguate, and with `serve-clients = 1` the loop degenerates to
+/// strict arrival order.
 pub fn serve_loop(listener: TcpListener, mut session: FmmSession)
     -> Result<()> {
+    // anything staged before serving starts is part of the cold state
+    session.flush_pending();
     let addr = listener.local_addr()
         .context("reading the bound serve address")?;
     println!("listening on {addr}");
     listener.set_nonblocking(true)
         .context("setting the serve socket non-blocking")?;
-    let mut stop = false;
-    while !stop && !signal::shutdown_requested() {
-        match listener.accept() {
-            Ok((stream, _)) => {
-                stream.set_nonblocking(false)
-                    .context("restoring blocking client I/O")?;
-                stop = serve_connection(&mut session, stream)?;
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+    let clients = session.problem().config.serve_clients.max(1);
+    let shared = ServerShared {
+        snapshot: RwLock::new(session.snapshot()),
+        update_scratch: Mutex::new(session.scratch),
+        stats: Mutex::new(session.stats),
+        seq: AtomicU64::new(session.seq),
+        stop: AtomicBool::new(false),
+        conns: Mutex::new(Vec::new()),
+        conn_ids: AtomicU64::new(0),
+    };
+    let (tx, rx) = mpsc::sync_channel::<Request>(clients * QUEUE_SLACK);
+    let rx = Mutex::new(rx);
+    std::thread::scope(|scope| -> Result<()> {
+        for _ in 0..clients {
+            scope.spawn(|| executor_loop(&shared, &rx));
+        }
+        while !shared.stopping() {
+            if shared.conn_count() >= clients {
+                // at capacity: let the backlog hold new connects
+                // until a reader slot frees up
                 std::thread::sleep(POLL);
+                continue;
             }
-            Err(e) => {
-                return Err(e).context("accepting a query client");
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    // inherited non-blocking mode must come off the
+                    // accepted socket; a failure costs that client
+                    if let Err(e) = stream.set_nonblocking(false) {
+                        eprintln!(
+                            "petfmm serve: dropping client ({e})");
+                        continue;
+                    }
+                    let tx = tx.clone();
+                    scope.spawn(|| reader_loop(&shared, stream, tx));
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(POLL);
+                }
+                Err(e) => {
+                    // release the pool before propagating, or the
+                    // scope would join threads that never stop
+                    shared.stop.store(true, Ordering::SeqCst);
+                    return Err(e).context("accepting a query client");
+                }
             }
         }
-    }
-    println!("petfmm serve: stats {}", session.stats().to_json());
+        drop(tx);
+        Ok(())
+    })?;
+    let epoch = shared.current().epoch();
+    let mut stats = shared.stats.into_inner().unwrap();
+    stats.epoch = epoch;
+    println!("petfmm serve: stats {}", stats.to_json());
     Ok(())
 }
 
-/// Serve one connection until the client disconnects (`Ok(false)`),
-/// sends SHUTDOWN (`Ok(true)` — stop the whole server), or the signal
-/// latch trips mid-connection.  A malformed or unexpected frame drops
-/// the connection (logged to stderr) without taking the server down.
-fn serve_connection(session: &mut FmmSession, stream: TcpStream)
-    -> Result<bool> {
-    let mut writer = stream.try_clone()
-        .context("cloning the connection for replies")?;
-    let mut reader = FrameReader::new(stream, 0);
-    loop {
-        if signal::shutdown_requested() {
-            return Ok(true);
-        }
-        let payload = match reader.read_frame(Some(Instant::now() + POLL))
-        {
-            Ok(Some(p)) => p,
-            // deadline: no bytes yet — poll the latch and keep waiting
-            Ok(None) => continue,
-            // client hung up: back to accept
-            Err(CommError::Disconnected { .. }) => return Ok(false),
-            Err(e) => {
-                eprintln!("petfmm serve: dropping client ({e})");
-                return Ok(false);
-            }
-        };
-        let arrived = Instant::now();
-        let bytes_in = payload.len() as u64 + 4;
-        let frame = match decode_frame(&payload) {
-            Ok(f) => f,
-            Err(e) => {
-                eprintln!("petfmm serve: dropping client ({e})");
-                return Ok(false);
-            }
-        };
-        match frame {
-            Frame::Query { id, targets } => {
-                let queued = arrived.elapsed().as_secs_f64();
-                match session.query(id, &targets) {
-                    Ok((vel, mut manifest)) => {
-                        let reply = encode_frame(
-                            &Frame::QueryResult { id, vel });
-                        manifest.queue_secs = queued;
-                        manifest.bytes_in = bytes_in;
-                        manifest.bytes_out = reply.len() as u64 + 4;
-                        write_frame(&mut writer, &reply, 0)?;
-                        session.record(&manifest);
-                    }
-                    Err(e) => {
-                        // a bad request (e.g. non-finite target) must
-                        // not poison the resident state: log, drop the
-                        // client, keep serving
-                        eprintln!(
-                            "petfmm serve: query {id} rejected ({e:#})");
-                        return Ok(false);
-                    }
-                }
-            }
-            Frame::Update { id, particles } => {
-                match session.update(particles) {
-                    Ok(()) => {
-                        let ack = encode_frame(&Frame::QueryResult {
-                            id,
-                            vel: Vec::new(),
-                        });
-                        write_frame(&mut writer, &ack, 0)?;
-                    }
-                    Err(e) => {
-                        eprintln!(
-                            "petfmm serve: update {id} rejected ({e:#})");
-                        return Ok(false);
-                    }
-                }
-            }
-            Frame::Stats { .. } => {
-                let reply = encode_frame(&Frame::Stats {
-                    json: session.stats().to_json(),
-                });
-                write_frame(&mut writer, &reply, 0)?;
-            }
-            Frame::Shutdown => {
-                // ack so the client can distinguish a served shutdown
-                // from a crash, then stop the accept loop
-                let ack = encode_frame(&Frame::QueryResult {
-                    id: 0,
-                    vel: Vec::new(),
-                });
-                write_frame(&mut writer, &ack, 0)?;
-                return Ok(true);
-            }
-            other => {
-                eprintln!(
-                    "petfmm serve: unexpected {} frame; dropping client",
-                    frame_name(&other)
-                );
-                return Ok(false);
-            }
-        }
-    }
-}
-
 /// Blocking client for a running `petfmm serve` — the `petfmm query`
-/// subcommand and the conformance tests speak through this.
+/// subcommand and the conformance tests speak through this.  Wire v2:
+/// RESULT chunks are reassembled by offset, UPDATE/SHUTDOWN acks are
+/// dedicated ACK frames matched strictly by id.
 pub struct ServeClient {
     writer: TcpStream,
     reader: FrameReader,
@@ -373,25 +792,49 @@ impl ServeClient {
     /// come back in the reply.
     pub fn query(&mut self, id: u64, targets: Vec<[f64; 2]>)
         -> Result<Vec<[f64; 2]>> {
+        self.query_tagged(id, targets).map(|(vel, _)| vel)
+    }
+
+    /// Like [`ServeClient::query`], but also returns the **epoch** of
+    /// the snapshot that answered — how a client racing UPDATEs tells
+    /// exactly which particle set it observed.
+    pub fn query_tagged(&mut self, id: u64, targets: Vec<[f64; 2]>)
+        -> Result<(Vec<[f64; 2]>, u64)> {
         let req = encode_frame(&Frame::Query { id, targets });
         write_frame(&mut self.writer, &req, 0)?;
-        match self.next_frame()? {
-            Frame::QueryResult { id: got, vel } if got == id => Ok(vel),
-            other => anyhow::bail!(
-                "expected RESULT for query {id}, got {other:?}"
-            ),
+        let mut vel: Vec<[f64; 2]> = Vec::new();
+        loop {
+            match self.next_frame()? {
+                Frame::QueryResult {
+                    id: got, epoch, total, offset, vel: chunk,
+                } if got == id => {
+                    if offset as usize != vel.len() {
+                        anyhow::bail!(
+                            "RESULT chunk out of order for query {id}: \
+                             offset {offset}, have {}",
+                            vel.len()
+                        );
+                    }
+                    vel.extend_from_slice(&chunk);
+                    if vel.len() >= total as usize {
+                        return Ok((vel, epoch));
+                    }
+                }
+                other => anyhow::bail!(
+                    "expected RESULT for query {id}, got {other:?}"
+                ),
+            }
         }
     }
 
-    /// Stage a replacement particle set on the server (applied lazily
-    /// by its next query).
+    /// Replace the server's particle set (applied eagerly behind the
+    /// writer lock); returns the new session epoch from the ACK.
     pub fn update(&mut self, id: u64, particles: Vec<Particle>)
-        -> Result<()> {
+        -> Result<u64> {
         let req = encode_frame(&Frame::Update { id, particles });
         write_frame(&mut self.writer, &req, 0)?;
         match self.next_frame()? {
-            Frame::QueryResult { id: got, vel }
-                if got == id && vel.is_empty() => Ok(()),
+            Frame::Ack { id: got, epoch } if got == id => Ok(epoch),
             other => anyhow::bail!(
                 "expected UPDATE ack {id}, got {other:?}"
             ),
@@ -411,12 +854,12 @@ impl ServeClient {
     }
 
     /// Ask the server to exit its accept loop (acknowledged before it
-    /// does).
+    /// does); the ACK is matched strictly against the request id.
     pub fn shutdown(mut self) -> Result<()> {
-        let req = encode_frame(&Frame::Shutdown);
+        let req = encode_frame(&Frame::Shutdown { id: SHUTDOWN_ID });
         write_frame(&mut self.writer, &req, 0)?;
         match self.next_frame()? {
-            Frame::QueryResult { vel, .. } if vel.is_empty() => Ok(()),
+            Frame::Ack { id, .. } if id == SHUTDOWN_ID => Ok(()),
             other => anyhow::bail!(
                 "expected a SHUTDOWN ack, got {other:?}"
             ),
@@ -456,6 +899,7 @@ mod tests {
                                    cold one-shot solve");
         assert!(m.cache_hit, "no update was staged");
         assert_eq!((m.seq, m.id, m.targets), (1, 7, targets.len()));
+        assert_eq!(m.epoch, 0, "cold session answers at epoch 0");
         session.record(&m);
         assert_eq!(session.stats().queries, 1);
         assert_eq!(session.stats().cache_hits, 1);
@@ -472,6 +916,7 @@ mod tests {
             moved.iter().map(|p| [p[0], p[1]]).collect();
         let (vel, m) = session.query(1, &targets).unwrap();
         assert!(!m.cache_hit, "the staged update is this query's miss");
+        assert_eq!(m.epoch, 1, "the applied update bumped the epoch");
         let cold = FmmSolver::from_config(&cfg)
             .particles(moved)
             .solve()
@@ -481,6 +926,7 @@ mod tests {
         // the rebuild happened exactly once: the next query hits
         let (vel2, m2) = session.query(2, &targets).unwrap();
         assert!(m2.cache_hit);
+        assert_eq!(m2.epoch, 1);
         assert_eq!(vel, vel2);
         session.record(&m);
         session.record(&m2);
@@ -509,6 +955,57 @@ mod tests {
     }
 
     #[test]
+    fn snapshot_shares_its_backend_with_a_solver_bitwise() {
+        // warm-cache sharing: the snapshot's operator tables seed a
+        // solver, whose "tables" stage then reports exactly 0.0 while
+        // the velocities stay bitwise the independent cold solve
+        let cfg = small_config();
+        let session = FmmSession::new(&cfg).unwrap();
+        let snap = session.snapshot();
+        let mut seeded =
+            FmmSolver::from_config(&cfg).with_backend(snap.backend());
+        let warm = seeded.solve().unwrap();
+        assert_eq!(warm.stages[1].duration(), 0.0,
+                   "shared tables must be a cache hit");
+        let cold = FmmSolver::from_config(&cfg).solve().unwrap();
+        assert_eq!(warm.vel, cold.vel);
+        // and the snapshot answers queries at the solve's bits too
+        let parts = workload::generate(&cfg).unwrap();
+        let targets: Vec<[f64; 2]> =
+            parts.iter().map(|p| [p[0], p[1]]).collect();
+        assert_eq!(snap.eval(&targets).unwrap(), cold.vel);
+    }
+
+    #[test]
+    fn advance_leaves_the_old_snapshot_answering_its_old_epoch() {
+        // the epoch-swap contract the concurrent server leans on: an
+        // advanced snapshot answers the new particle set while the
+        // original keeps answering the old one, bit for bit
+        let cfg = small_config();
+        let session = FmmSession::new(&cfg).unwrap();
+        let old = session.snapshot();
+        let parts = workload::generate(&cfg).unwrap();
+        let targets: Vec<[f64; 2]> =
+            parts.iter().map(|p| [p[0], p[1]]).collect();
+        let before = old.eval(&targets).unwrap();
+        let mut g = Gen::new(17);
+        let moved = g.particles(150);
+        let mut scratch = RebuildScratch::default();
+        let new = old.advance(&mut scratch, moved.clone());
+        assert_eq!((old.epoch(), new.epoch()), (0, 1));
+        // old snapshot: unchanged answers
+        assert_eq!(old.eval(&targets).unwrap(), before);
+        // new snapshot: bitwise the cold solve over the moved set
+        let new_targets: Vec<[f64; 2]> =
+            moved.iter().map(|p| [p[0], p[1]]).collect();
+        let cold = FmmSolver::from_config(&cfg)
+            .particles(moved)
+            .solve()
+            .unwrap();
+        assert_eq!(new.eval(&new_targets).unwrap(), cold.vel);
+    }
+
+    #[test]
     fn serve_loop_speaks_the_wire_protocol_end_to_end() {
         // loopback smoke of the whole harness: QUERY, UPDATE, STATS,
         // SHUTDOWN, clean exit — no subprocesses, ephemeral port
@@ -524,14 +1021,18 @@ mod tests {
             serve_loop(listener, session)
         });
         let mut client = ServeClient::connect(port).unwrap();
-        let vel = client.query(3, targets.clone()).unwrap();
+        let (vel, epoch) =
+            client.query_tagged(3, targets.clone()).unwrap();
         assert_eq!(vel, cold.vel);
+        assert_eq!(epoch, 0, "cold server answers at epoch 0");
         let mut g = Gen::new(5);
         let moved = g.particles(150);
-        client.update(4, moved.clone()).unwrap();
+        let new_epoch = client.update(4, moved.clone()).unwrap();
+        assert_eq!(new_epoch, 1, "the applied update bumped the epoch");
         let new_targets: Vec<[f64; 2]> =
             moved.iter().map(|p| [p[0], p[1]]).collect();
-        let vel = client.query(5, new_targets).unwrap();
+        let (vel, epoch) = client.query_tagged(5, new_targets).unwrap();
+        assert_eq!(epoch, 1);
         let cold2 = FmmSolver::from_config(&cfg)
             .particles(moved)
             .solve()
@@ -540,7 +1041,10 @@ mod tests {
         let stats = client.stats().unwrap();
         assert!(stats.contains("\"queries\": 2"), "{stats}");
         assert!(stats.contains("\"updates\": 1"), "{stats}");
-        assert!(stats.contains("\"cache_misses\": 1"), "{stats}");
+        assert!(stats.contains("\"epoch\": 1"), "{stats}");
+        assert!(stats.contains("\"connections\": 1"), "{stats}");
+        // the wire server applies updates eagerly: no cache misses
+        assert!(stats.contains("\"cache_misses\": 0"), "{stats}");
         client.shutdown().unwrap();
         server.join().unwrap().unwrap();
     }
@@ -560,6 +1064,31 @@ mod tests {
         let mut client = ServeClient::connect(port).unwrap();
         let vel = client.query(1, vec![[0.5, 0.5]]).unwrap();
         assert_eq!(vel.len(), 1);
+        client.shutdown().unwrap();
+        server.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn rejected_requests_drop_the_client_but_stay_observable() {
+        let cfg = RunConfig { particles: 60, ..small_config() };
+        let session = FmmSession::new(&cfg).unwrap();
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let port = listener.local_addr().unwrap().port();
+        let server = std::thread::spawn(move || {
+            serve_loop(listener, session)
+        });
+        // a non-finite target is rejected; the client is dropped
+        let mut bad = ServeClient::connect(port).unwrap();
+        assert!(bad.query(1, vec![[f64::NAN, 0.5]]).is_err());
+        // a bad update likewise
+        let mut bad2 = ServeClient::connect(port).unwrap();
+        assert!(bad2.update(2, vec![[0.1, f64::NAN, 1.0]]).is_err());
+        // the server is still up, and the rejections are in STATS
+        let mut client = ServeClient::connect(port).unwrap();
+        let stats = client.stats().unwrap();
+        assert!(stats.contains("\"rejected_queries\": 1"), "{stats}");
+        assert!(stats.contains("\"rejected_updates\": 1"), "{stats}");
+        assert!(stats.contains("\"queries\": 0"), "{stats}");
         client.shutdown().unwrap();
         server.join().unwrap().unwrap();
     }

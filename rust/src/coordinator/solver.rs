@@ -251,6 +251,28 @@ impl FmmSolver {
         self
     }
 
+    /// Seed the warm backend cache with an **already-constructed**
+    /// operator backend — e.g. a resident-server snapshot
+    /// (`coordinator::server::SessionSnapshot::backend`) sharing its
+    /// translation tables with a cold solver over the same kernel and
+    /// term count.  The next solve's `"tables"` stage then reports
+    /// exactly `0.0` seconds, same as a second solve on a reused
+    /// solver.  The caller owns the compatibility contract (kernel +
+    /// terms must match the config), exactly as the internal cache
+    /// does; [`FmmSolver::kernel`] still invalidates it.
+    pub fn with_backend(mut self, backend: Arc<dyn OpsBackend>)
+        -> FmmSolver {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// The warm-cached operator backend, if a solve has constructed
+    /// one (or [`FmmSolver::with_backend`] seeded it) — the sharing
+    /// handle a resident-server snapshot is built from.
+    pub fn cached_ops(&self) -> Option<Arc<dyn OpsBackend>> {
+        self.backend.clone()
+    }
+
     /// The warm-solve backend cache: construct (and retain) the
     /// operator backend on the first call, hand the retained one back
     /// afterwards.  Returns the construction wall-clock seconds —
@@ -669,6 +691,29 @@ mod tests {
         let want = sol.direct_oracle();
         let err = rel_l2_error(&sol.vel, &want);
         assert!(err < 1e-3, "post-invalidation solve err {err}");
+    }
+
+    #[test]
+    fn a_seeded_backend_skips_table_construction_bitwise() {
+        // warm-cache sharing: a backend lifted out of one solver (or a
+        // resident-server snapshot) seeds another, which then skips
+        // table construction without perturbing a single bit
+        let cfg = small_config();
+        let mut donor = FmmSolver::from_config(&cfg);
+        let cold = donor.solve().unwrap();
+        let shared = donor.cached_ops().expect("solve retains the backend");
+        let mut seeded = FmmSolver::from_config(&cfg)
+            .with_backend(Arc::clone(&shared));
+        let warm = seeded.solve().unwrap();
+        assert_eq!(warm.stages[1].duration(), 0.0,
+                   "seeded tables must be a cache hit");
+        assert!(warm.stages[0].duration() > 0.0,
+                "the tree still builds cold");
+        assert_eq!(cold.vel, warm.vel);
+        // kernel() invalidates a seeded backend like a constructed one
+        let rekerneled = seeded.kernel(KernelSpec::Gravity);
+        assert!(rekerneled.cached_ops().is_none(),
+                "kernel swap must drop the seeded tables");
     }
 
     #[test]

@@ -305,9 +305,16 @@ pub struct QueryManifest {
     pub seq: u64,
     /// client-chosen request id, echoed in the RESULT frame
     pub id: u64,
-    /// seconds between the request frame completing on the socket and
-    /// its evaluation starting (time spent queued behind earlier
-    /// requests on the connection)
+    /// session epoch of the snapshot that answered (bumped by every
+    /// applied UPDATE; 0 until the first one)
+    pub epoch: u64,
+    /// `true` when the request failed validation (bad target/particle
+    /// coordinates) and was answered with an error instead of a
+    /// RESULT — recorded so abusive traffic stays observable
+    pub rejected: bool,
+    /// seconds between the request frame completing on the socket
+    /// (stamped at enqueue into the dispatch queue) and its evaluation
+    /// starting — real time spent queued behind earlier requests
     pub queue_secs: f64,
     /// seconds spent answering, *including* any staged-UPDATE rebuild
     /// and expansion re-sweep amortized into this request
@@ -337,12 +344,15 @@ impl QueryManifest {
     /// One-line JSON object (hand-rolled — no serde offline).
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"seq\": {}, \"id\": {}, \"queue_secs\": {}, \
+            "{{\"seq\": {}, \"id\": {}, \"epoch\": {}, \
+             \"rejected\": {}, \"queue_secs\": {}, \
              \"eval_secs\": {}, \"cache_hit\": {}, \"targets\": {}, \
              \"targets_per_sec\": {}, \"bytes_in\": {}, \
              \"bytes_out\": {}}}",
             self.seq,
             self.id,
+            self.epoch,
+            self.rejected,
             self.queue_secs,
             self.eval_secs,
             self.cache_hit,
@@ -354,15 +364,43 @@ impl QueryManifest {
     }
 }
 
+/// Ring-buffer cap on the latency samples backing the p50/p99
+/// percentiles: the most recent observations win, memory stays
+/// bounded no matter how long the server runs.
+const LATENCY_SAMPLE_CAP: usize = 4096;
+
+/// Nearest-rank percentile over an unsorted sample set (0 when empty).
+fn percentile_of(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(f64::total_cmp);
+    let idx = ((s.len() - 1) as f64 * p).round() as usize;
+    s[idx]
+}
+
 /// Aggregate request metrics of one `petfmm serve` session — the STATS
 /// frame's reply body.  Sums of the per-request [`QueryManifest`]s
-/// plus update accounting.
+/// plus update, rejection, and per-connection queue accounting.
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
     /// QUERY requests answered
     pub queries: u64,
-    /// UPDATE requests accepted (staged or applied)
+    /// UPDATE requests accepted and applied
     pub updates: u64,
+    /// QUERY requests rejected (validation failure) — an abusive
+    /// client must not look like an idle server
+    pub rejected_queries: u64,
+    /// UPDATE requests rejected (validation failure)
+    pub rejected_updates: u64,
+    /// current session epoch (bumped by every applied UPDATE)
+    pub epoch: u64,
+    /// client connections currently open (set at STATS render time)
+    pub connections: u64,
+    /// per-connection dispatch-queue depth at STATS render time —
+    /// requests read off each socket but not yet answered
+    pub queue_depth: Vec<u64>,
     /// total target points evaluated
     pub targets: u64,
     /// queries answered straight from the cached expansion state
@@ -377,11 +415,23 @@ pub struct ServerStats {
     pub bytes_in: u64,
     /// summed reply wire bytes
     pub bytes_out: u64,
+    /// ring buffer of recent per-query queue times (percentile basis)
+    queue_samples: Vec<f64>,
+    /// ring buffer of recent per-query eval times (percentile basis)
+    eval_samples: Vec<f64>,
+    /// total samples ever pushed (ring-buffer write cursor)
+    sample_count: u64,
 }
 
 impl ServerStats {
     /// Fold one answered query into the session aggregate.
     pub fn record(&mut self, m: &QueryManifest) {
+        if m.rejected {
+            self.rejected_queries += 1;
+            self.bytes_in += m.bytes_in;
+            self.bytes_out += m.bytes_out;
+            return;
+        }
         self.queries += 1;
         self.targets += m.targets as u64;
         if m.cache_hit {
@@ -393,6 +443,44 @@ impl ServerStats {
         self.eval_secs += m.eval_secs;
         self.bytes_in += m.bytes_in;
         self.bytes_out += m.bytes_out;
+        let slot = (self.sample_count as usize) % LATENCY_SAMPLE_CAP;
+        if self.queue_samples.len() < LATENCY_SAMPLE_CAP {
+            self.queue_samples.push(m.queue_secs);
+            self.eval_samples.push(m.eval_secs);
+        } else {
+            self.queue_samples[slot] = m.queue_secs;
+            self.eval_samples[slot] = m.eval_secs;
+        }
+        self.sample_count += 1;
+    }
+
+    /// Fold one rejected UPDATE into the aggregate (queries go through
+    /// [`ServerStats::record`] with `rejected: true`).
+    pub fn record_rejected_update(&mut self, bytes_in: u64,
+                                  bytes_out: u64) {
+        self.rejected_updates += 1;
+        self.bytes_in += bytes_in;
+        self.bytes_out += bytes_out;
+    }
+
+    /// p50 of recent per-query queue times (seconds).
+    pub fn queue_p50(&self) -> f64 {
+        percentile_of(&self.queue_samples, 0.50)
+    }
+
+    /// p99 of recent per-query queue times (seconds).
+    pub fn queue_p99(&self) -> f64 {
+        percentile_of(&self.queue_samples, 0.99)
+    }
+
+    /// p50 of recent per-query eval times (seconds).
+    pub fn eval_p50(&self) -> f64 {
+        percentile_of(&self.eval_samples, 0.50)
+    }
+
+    /// p99 of recent per-query eval times (seconds).
+    pub fn eval_p99(&self) -> f64 {
+        percentile_of(&self.eval_samples, 0.99)
     }
 
     /// Session-wide target points per evaluation second (0 when the
@@ -408,19 +496,35 @@ impl ServerStats {
     /// One-line JSON object (hand-rolled — no serde offline); the
     /// shape the CI server smoke and `petfmm query --stats` parse.
     pub fn to_json(&self) -> String {
+        let depth: Vec<String> =
+            self.queue_depth.iter().map(u64::to_string).collect();
         format!(
-            "{{\"queries\": {}, \"updates\": {}, \"targets\": {}, \
+            "{{\"queries\": {}, \"updates\": {}, \
+             \"rejected_queries\": {}, \"rejected_updates\": {}, \
+             \"epoch\": {}, \"connections\": {}, \
+             \"queue_depth\": [{}], \"targets\": {}, \
              \"cache_hits\": {}, \"cache_misses\": {}, \
              \"queue_secs\": {}, \"eval_secs\": {}, \
+             \"queue_p50_s\": {}, \"queue_p99_s\": {}, \
+             \"eval_p50_s\": {}, \"eval_p99_s\": {}, \
              \"targets_per_sec\": {}, \"bytes_in\": {}, \
              \"bytes_out\": {}}}",
             self.queries,
             self.updates,
+            self.rejected_queries,
+            self.rejected_updates,
+            self.epoch,
+            self.connections,
+            depth.join(", "),
             self.targets,
             self.cache_hits,
             self.cache_misses,
             self.queue_secs,
             self.eval_secs,
+            self.queue_p50(),
+            self.queue_p99(),
+            self.eval_p50(),
+            self.eval_p99(),
             self.targets_per_sec(),
             self.bytes_in,
             self.bytes_out,
@@ -523,6 +627,8 @@ mod tests {
         let hit = QueryManifest {
             seq: 0,
             id: 7,
+            epoch: 2,
+            rejected: false,
             queue_secs: 0.001,
             eval_secs: 0.01,
             cache_hit: true,
@@ -552,15 +658,61 @@ mod tests {
         assert_eq!(s.bytes_in, 2428);
         assert!((s.eval_secs - 0.1).abs() < 1e-12);
         assert_eq!(s.targets_per_sec(), 1500.0);
-        for json in [hit.to_json(), s.to_json()] {
+        // a rejected query bumps the rejection counter and the byte
+        // meters, nothing else — and still renders into the JSON
+        let bad = QueryManifest {
+            seq: 2,
+            rejected: true,
+            bytes_in: 42,
+            ..QueryManifest::default()
+        };
+        s.record(&bad);
+        s.record_rejected_update(99, 10);
+        assert_eq!(s.queries, 2, "rejections are not answered queries");
+        assert_eq!(s.rejected_queries, 1);
+        assert_eq!(s.rejected_updates, 1);
+        assert_eq!(s.bytes_in, 2428 + 42 + 99);
+        // percentiles come from the answered-query sample buffers
+        assert!((s.eval_p99() - 0.09).abs() < 1e-12);
+        assert!((s.queue_p50() - 0.0005).abs() < 0.0006);
+        s.epoch = 3;
+        s.connections = 2;
+        s.queue_depth = vec![1, 0];
+        for json in [hit.to_json(), bad.to_json(), s.to_json()] {
             // hand-rolled JSON: balanced braces, no inf/nan, and the
             // keys the CI gate greps for are present
             assert!(json.starts_with('{') && json.ends_with('}'), "{json}");
             assert!(!json.contains("inf") && !json.contains("NaN"),
                     "{json}");
         }
-        assert!(s.to_json().contains("\"cache_hits\": 1"));
+        let js = s.to_json();
+        assert!(js.contains("\"cache_hits\": 1"), "{js}");
+        assert!(js.contains("\"rejected_queries\": 1"), "{js}");
+        assert!(js.contains("\"rejected_updates\": 1"), "{js}");
+        assert!(js.contains("\"epoch\": 3"), "{js}");
+        assert!(js.contains("\"queue_depth\": [1, 0]"), "{js}");
         assert!(hit.to_json().contains("\"targets_per_sec\": 10000"));
+        assert!(bad.to_json().contains("\"rejected\": true"));
+    }
+
+    #[test]
+    fn latency_percentiles_ring_buffer_stays_bounded() {
+        let mut s = ServerStats::default();
+        for i in 0..(LATENCY_SAMPLE_CAP + 100) {
+            s.record(&QueryManifest {
+                seq: i as u64,
+                queue_secs: 0.001,
+                eval_secs: 0.002,
+                cache_hit: true,
+                targets: 1,
+                ..QueryManifest::default()
+            });
+        }
+        assert_eq!(s.queue_samples.len(), LATENCY_SAMPLE_CAP);
+        assert_eq!(s.eval_samples.len(), LATENCY_SAMPLE_CAP);
+        assert!((s.queue_p50() - 0.001).abs() < 1e-12);
+        assert!((s.eval_p50() - 0.002).abs() < 1e-12);
+        assert_eq!(percentile_of(&[], 0.99), 0.0);
     }
 
     #[test]

@@ -1,0 +1,286 @@
+//! Concurrency conformance for the resident solver service
+//! (DESIGN.md §15): the serve loop answers many connections from one
+//! epoch-tagged read-only snapshot, so
+//!
+//! 1. N clients × M queries each are **bitwise** the cold one-shot
+//!    solve — concurrency must not perturb a single bit,
+//! 2. queries racing an UPDATE land on exactly the pre- or the
+//!    post-update answer, and the epoch echoed in the RESULT says
+//!    which (no torn reads, no third answer),
+//! 3. a client that dies mid-reply costs only its own connection
+//!    (the PR-9 loop propagated the broken-pipe write error and took
+//!    the whole server down),
+//! 4. `queue_secs` measures real time spent queued behind earlier
+//!    requests (the PR-9 loop stamped arrival after the frame was
+//!    already read, so it always reported ~0), and
+//! 5. answers larger than one RESULT chunk stream in frames and
+//!    reassemble bitwise.
+
+use std::net::{TcpListener, TcpStream};
+use std::time::Instant;
+
+use petfmm::comm::{decode_frame, encode_frame, write_frame, Frame,
+                   FrameReader};
+use petfmm::config::RunConfig;
+use petfmm::coordinator::{generate, serve_loop, FmmSession, FmmSolver,
+                          ServeClient, RESULT_CHUNK};
+use petfmm::proptest::Gen;
+
+fn small_config(clients: usize) -> RunConfig {
+    RunConfig {
+        particles: 220,
+        levels: 4,
+        terms: 12,
+        sigma: 0.01,
+        ranks: 2,
+        distribution: "uniform".into(),
+        par_threads: 1,
+        serve_clients: clients,
+        ..Default::default()
+    }
+}
+
+/// Bind an ephemeral loopback port and run the serve loop on a thread.
+fn spawn_server(cfg: &RunConfig)
+    -> (u16, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let session = FmmSession::new(cfg).unwrap();
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let port = listener.local_addr().unwrap().port();
+    let handle =
+        std::thread::spawn(move || serve_loop(listener, session));
+    (port, handle)
+}
+
+/// Pull one numeric value out of the hand-rolled stats JSON.
+fn json_number(json: &str, key: &str) -> f64 {
+    let pat = format!("\"{key}\": ");
+    let start = json.find(&pat).unwrap_or_else(|| {
+        panic!("key {key} missing from {json}")
+    }) + pat.len();
+    let rest = &json[start..];
+    let end = rest
+        .find(|c: char| c == ',' || c == '}' || c == '\n')
+        .unwrap_or(rest.len());
+    rest[..end].trim().parse::<f64>().unwrap_or_else(|_| {
+        panic!("unparseable {key} in {json}")
+    })
+}
+
+#[test]
+fn eight_clients_querying_concurrently_stay_bitwise_the_cold_solve() {
+    const CLIENTS: usize = 8;
+    const QUERIES: usize = 3;
+    let cfg = small_config(CLIENTS);
+    let parts = generate(&cfg).unwrap();
+    let targets: Vec<[f64; 2]> =
+        parts.iter().map(|p| [p[0], p[1]]).collect();
+    let cold = FmmSolver::from_config(&cfg).solve().unwrap();
+    let (port, server) = spawn_server(&cfg);
+    std::thread::scope(|scope| {
+        for t in 0..CLIENTS {
+            let targets = targets.clone();
+            let cold_vel = cold.vel.clone();
+            scope.spawn(move || {
+                let mut client = ServeClient::connect(port).unwrap();
+                for q in 0..QUERIES {
+                    let id = (t * QUERIES + q) as u64 + 1;
+                    let (vel, epoch) = client
+                        .query_tagged(id, targets.clone())
+                        .unwrap();
+                    assert_eq!(epoch, 0, "no update was ever applied");
+                    assert_eq!(vel, cold_vel,
+                               "client {t} query {q} diverged from \
+                                the cold solve");
+                }
+            });
+        }
+    });
+    let mut client = ServeClient::connect(port).unwrap();
+    let stats = client.stats().unwrap();
+    let queries = json_number(&stats, "queries") as usize;
+    assert_eq!(queries, CLIENTS * QUERIES, "{stats}");
+    assert_eq!(json_number(&stats, "rejected_queries"), 0.0, "{stats}");
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn queries_racing_an_update_land_on_exactly_one_epoch() {
+    const CLIENTS: usize = 4;
+    const QUERIES: usize = 8;
+    let cfg = small_config(8);
+    let mut g = Gen::new(71);
+    let targets: Vec<[f64; 2]> = (0..64)
+        .map(|_| [g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0)])
+        .collect();
+    let moved = g.particles(180);
+    // the two legal answers, via the same session machinery the
+    // server runs: epoch 0 is the config workload, epoch 1 the moved
+    // set — any query must land bitwise on one of them
+    let mut reference = FmmSession::new(&cfg).unwrap();
+    let (pre, _) = reference.query(1, &targets).unwrap();
+    reference.update(moved.clone()).unwrap();
+    let (post, m) = reference.query(2, &targets).unwrap();
+    assert_eq!(m.epoch, 1);
+    let (port, server) = spawn_server(&cfg);
+    std::thread::scope(|scope| {
+        for t in 0..CLIENTS {
+            let targets = targets.clone();
+            let pre = pre.clone();
+            let post = post.clone();
+            scope.spawn(move || {
+                let mut client = ServeClient::connect(port).unwrap();
+                for q in 0..QUERIES {
+                    let id = (t * QUERIES + q) as u64 + 1;
+                    let (vel, epoch) = client
+                        .query_tagged(id, targets.clone())
+                        .unwrap();
+                    let want = match epoch {
+                        0 => &pre,
+                        1 => &post,
+                        other => panic!(
+                            "impossible epoch {other} from one UPDATE"
+                        ),
+                    };
+                    assert_eq!(&vel, want,
+                               "client {t} query {q}: answer does not \
+                                match the epoch {epoch} it claims");
+                }
+            });
+        }
+        // fire the update while the queriers are mid-flight
+        let moved = moved.clone();
+        scope.spawn(move || {
+            let mut client = ServeClient::connect(port).unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            let epoch = client.update(1000, moved).unwrap();
+            assert_eq!(epoch, 1);
+        });
+    });
+    let mut client = ServeClient::connect(port).unwrap();
+    let (vel, epoch) = client.query_tagged(2000, targets).unwrap();
+    assert_eq!(epoch, 1, "the update must be visible once applied");
+    assert_eq!(vel, post);
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn a_client_killed_mid_reply_does_not_stop_the_server() {
+    let cfg = small_config(4);
+    let (port, server) = spawn_server(&cfg);
+    // ask for a many-chunk answer, then vanish without reading a
+    // byte: the server's reply writes hit a dead socket and must cost
+    // only that connection
+    let mut g = Gen::new(13);
+    let big: Vec<[f64; 2]> = (0..3 * RESULT_CHUNK)
+        .map(|_| [g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0)])
+        .collect();
+    for id in 0..3u64 {
+        let mut stream =
+            TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let q = encode_frame(&Frame::Query {
+            id,
+            targets: big.clone(),
+        });
+        write_frame(&mut stream, &q, 0).unwrap();
+        drop(stream);
+    }
+    // the server is still answering new clients afterwards
+    let mut client = ServeClient::connect(port).unwrap();
+    let vel = client.query(10, vec![[0.5, 0.5]]).unwrap();
+    assert_eq!(vel.len(), 1);
+    assert!(vel[0][0].is_finite() && vel[0][1].is_finite());
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn a_query_queued_behind_a_slow_one_reports_real_queue_time() {
+    // one executor thread: the second pipelined query *must* wait for
+    // the first (slow) one, and its queue_secs measures that wait
+    let cfg = small_config(1);
+    let (port, server) = spawn_server(&cfg);
+    let mut g = Gen::new(29);
+    let slow: Vec<[f64; 2]> = (0..40_000)
+        .map(|_| [g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0)])
+        .collect();
+    let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    let q1 = encode_frame(&Frame::Query { id: 1, targets: slow });
+    let q2 = encode_frame(&Frame::Query {
+        id: 2,
+        targets: vec![[0.5, 0.5]],
+    });
+    write_frame(&mut stream, &q1, 0).unwrap();
+    write_frame(&mut stream, &q2, 0).unwrap();
+    // drain both replies (the slow answer streams in chunks)
+    let mut reader =
+        FrameReader::new(stream.try_clone().unwrap(), 0);
+    let mut seen = [0usize; 2];
+    let mut eval1 = 0.0f64;
+    let t0 = Instant::now();
+    while seen[0] < 40_000 || seen[1] < 1 {
+        let payload = reader
+            .read_frame(Some(Instant::now()
+                + std::time::Duration::from_secs(120)))
+            .unwrap()
+            .expect("server reply timed out");
+        match decode_frame(&payload).unwrap() {
+            Frame::QueryResult { id, vel, .. } => {
+                let slot = (id - 1) as usize;
+                if seen[slot] == 0 && slot == 0 {
+                    eval1 = t0.elapsed().as_secs_f64();
+                }
+                seen[slot] += vel.len().max(1);
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    // the second query waited roughly as long as the first took to
+    // evaluate; the old stamp-after-read bug reported microseconds
+    let stats_req = encode_frame(&Frame::Stats { json: String::new() });
+    write_frame(&mut stream, &stats_req, 0).unwrap();
+    let payload = reader
+        .read_frame(Some(Instant::now()
+            + std::time::Duration::from_secs(120)))
+        .unwrap()
+        .unwrap();
+    let json = match decode_frame(&payload).unwrap() {
+        Frame::Stats { json } => json,
+        other => panic!("expected STATS, got {other:?}"),
+    };
+    let queue_p99 = json_number(&json, "queue_p99_s");
+    assert!(
+        queue_p99 > 0.25 * eval1 && eval1 > 0.0,
+        "queued query reported {queue_p99}s queued behind a \
+         {eval1}s evaluation — queue time is not being measured \
+         ({json})"
+    );
+    // free the single reader slot before the shutdown client connects
+    drop(reader);
+    drop(stream);
+    let client = ServeClient::connect(port).unwrap();
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn large_answers_stream_in_chunks_and_reassemble_bitwise() {
+    let cfg = small_config(2);
+    let mut g = Gen::new(3);
+    let targets: Vec<[f64; 2]> = (0..2 * RESULT_CHUNK + 37)
+        .map(|_| [g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0)])
+        .collect();
+    // reference through the transport-free session: the wire must
+    // not perturb a bit, chunked or not
+    let mut reference = FmmSession::new(&cfg).unwrap();
+    let (want, _) = reference.query(1, &targets).unwrap();
+    let (port, server) = spawn_server(&cfg);
+    let mut client = ServeClient::connect(port).unwrap();
+    let (got, epoch) = client.query_tagged(1, targets).unwrap();
+    assert_eq!(epoch, 0);
+    assert_eq!(got.len(), 2 * RESULT_CHUNK + 37);
+    assert_eq!(got, want, "chunked reassembly diverged");
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
